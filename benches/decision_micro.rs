@@ -1,0 +1,144 @@
+//! `cargo bench --bench decision_micro` — microbenchmarks of the decision
+//! plane's hot-path kernels, with items/s reporting. These are the £3
+//! targets the §Perf pass iterates on.
+//!
+//! Filter by substring: `cargo bench --bench decision_micro -- shvs`.
+
+use simple_serve::bench::{black_box, render_table, run_case, BenchConfig, BenchResult};
+use simple_serve::config::DecisionVariant;
+use simple_serve::decision::penalties::{BatchHistory, SeqHistory};
+use simple_serve::decision::{filter, DecisionPipeline, Precompute, SamplingParams};
+use simple_serve::harness::measure::LogitsGen;
+use simple_serve::ringbuf::spsc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let filter_str: Option<&str> = args.iter().find(|a| !a.starts_with('-')).map(|s| s.as_str());
+    let quick = args.iter().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let want = |name: &str| filter_str.map_or(true, |f| name.contains(f));
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    const V: usize = 152_064; // QwQ-32B vocabulary
+    const H: usize = 30_208;
+    let gen = LogitsGen::new(V, 1.08, 42);
+    let hot = gen.hot_vocab(H).into_arc();
+    let params = SamplingParams::production_default();
+    let unfiltered = SamplingParams { temperature: 0.9, ..Default::default() };
+
+    // Pre-generate a few views so generation isn't in the timed region.
+    let views: Vec<_> = (0..4).map(|i| gen.view(1, i, 1)).collect();
+    let pres: Vec<_> = views
+        .iter()
+        .map(|v| Precompute::reference(v, 0, &hot, 0.9))
+        .collect();
+    let hist = BatchHistory::new(&[vec![1, 2, 3]], 64);
+
+    // --- per-variant decision kernels ---
+    for variant in [
+        DecisionVariant::NaiveCpu,
+        DecisionVariant::Parallel,
+        DecisionVariant::Offloading,
+        DecisionVariant::Shvs,
+    ] {
+        let name = format!("decide/{}", variant.name());
+        if !want(&name) {
+            continue;
+        }
+        let hot_arg = matches!(variant, DecisionVariant::Shvs).then(|| hot.clone());
+        let mut pipe = DecisionPipeline::new(variant, hot_arg, 1);
+        let mut it = 0u64;
+        results.push(run_case(&name, &cfg, Some(1.0), || {
+            let i = (it % 4) as usize;
+            let d = pipe.decide(
+                &views[i],
+                0,
+                &hist,
+                0,
+                &params,
+                Some(&pres[i]),
+                0,
+                it,
+            );
+            black_box(d.token);
+            it += 1;
+        }));
+    }
+
+    // --- shvs fast path (unfiltered rejection sampling) ---
+    if want("shvs_fast_path") {
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Shvs, Some(hot.clone()), 2);
+        let mut it = 0u64;
+        results.push(run_case("shvs_fast_path", &cfg, Some(1.0), || {
+            let i = (it % 4) as usize;
+            black_box(
+                pipe.decide(&views[i], 0, &hist, 0, &unfiltered, Some(&pres[i]), 0, it)
+                    .token,
+            );
+            it += 1;
+        }));
+    }
+
+    // --- truncation-first vs sort-based filtering ---
+    if want("filter") {
+        let pairs: Vec<(u32, f32)> = {
+            let mut p = Vec::with_capacity(V);
+            views[0].for_each_logit(0, |v, z| p.push((v as u32, z)));
+            p
+        };
+        let p2 = pairs.clone();
+        results.push(run_case("filter/truncation_first", &cfg, Some(V as f64), || {
+            black_box(filter::truncate(pairs.clone(), &params).len());
+        }));
+        results.push(run_case("filter/sort_based", &cfg, Some(V as f64), || {
+            black_box(filter::truncate_sort_based(p2.clone(), &params).len());
+        }));
+    }
+
+    // --- penalty state updates: incremental vs rebuild ---
+    if want("penalties") {
+        let mut bh = BatchHistory::new(&[vec![1, 2, 3]], 4096);
+        for i in 0..1000u32 {
+            bh.append_row(&[i % 997]);
+        }
+        results.push(run_case("penalties/incremental_append", &cfg, Some(1.0), || {
+            let mut h = SeqHistory::new(&[1, 2, 3]);
+            for i in 0..64u32 {
+                h.append(i % 17);
+            }
+            black_box(h.num_penalized());
+        }));
+        results.push(run_case("penalties/naive_rebuild_1k", &cfg, Some(1.0), || {
+            black_box(bh.rebuild(0).len());
+        }));
+    }
+
+    // --- ring buffer transfer ---
+    if want("ringbuf") {
+        results.push(run_case("ringbuf/spsc_push_pop_1k", &cfg, Some(1000.0), || {
+            let (p, c) = spsc::ring::<u64>(256);
+            for i in 0..1000u64 {
+                p.try_push(i).ok();
+                black_box(c.try_pop().ok());
+            }
+        }));
+    }
+
+    // --- zero-copy sharded reads ---
+    if want("tensor") {
+        let view4 = gen.view(4, 0, 4);
+        results.push(run_case("tensor/for_each_logit_152k", &cfg, Some(V as f64), || {
+            let mut acc = 0.0f32;
+            view4.for_each_logit(1, |_, z| acc += z);
+            black_box(acc);
+        }));
+        let ids: Vec<u32> = hot.ids().to_vec();
+        let mut out = Vec::new();
+        results.push(run_case("tensor/gather_hot_30k", &cfg, Some(H as f64), || {
+            view4.gather(2, &ids, &mut out);
+            black_box(out.len());
+        }));
+    }
+
+    println!("{}", render_table("decision-plane microbenchmarks", &results));
+}

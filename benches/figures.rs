@@ -1,0 +1,44 @@
+//! `cargo bench --bench figures` — regenerate every paper table and figure
+//! (DESIGN.md §4's per-experiment index) into `results/`.
+//!
+//! Pass figure ids to restrict: `cargo bench --bench figures -- fig3 fig10`.
+//! Pass `--full` for paper-scale sweeps (default is the quick profile so CI
+//! stays fast).
+
+use simple_serve::harness::{self, Effort};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    // cargo bench passes `--bench`; ignore flags.
+    let ids: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with('-'))
+        .map(|s| s.as_str())
+        .collect();
+    let ids: Vec<&str> = if ids.is_empty() {
+        harness::ALL_EXPERIMENTS.to_vec()
+    } else {
+        ids
+    };
+    let effort = if full { Effort::Full } else { Effort::Quick };
+    let dir = harness::default_results_dir();
+    let mut failures = 0;
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match harness::run_experiment(id, effort) {
+            Ok(report) => {
+                report.write(&dir).expect("write results");
+                println!("[{:>8.2?}] {id:<7} {}", t0.elapsed(), report.title);
+            }
+            Err(e) => {
+                eprintln!("{id}: ERROR {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+    println!("\nresults written to {}", dir.display());
+}

@@ -1,0 +1,17 @@
+//! §7.4 ablation (Figure 10): per-sampler decision throughput of the
+//! four designs — naive CPU port → sequence-parallel → offloading
+//! (column-wise + truncation-first) → SHVS — measured on this host.
+//!
+//! Run: `cargo run --release --example ablation [-- --quick]`
+
+use simple_serve::harness::{micro, Effort};
+use simple_serve::util::argparse::{Args, OptSpec};
+
+fn main() -> simple_serve::Result<()> {
+    let args = Args::parse_env(&[OptSpec::flag("quick", "fast run")], false)?;
+    let effort = if args.flag("quick") { Effort::Quick } else { Effort::Full };
+    let report = micro::fig10(effort);
+    println!("{}", report.markdown);
+    report.write(&simple_serve::harness::default_results_dir())?;
+    Ok(())
+}

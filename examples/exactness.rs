@@ -1,0 +1,17 @@
+//! §7.6 exactness (Figure 13): cumulative mean TVD between the
+//! SHVS-induced next-token distribution and the baseline sampler's —
+//! theory says zero (Eq. 9); finite precision leaves a sub-1% residue.
+//!
+//! Run: `cargo run --release --example exactness [-- --quick]`
+
+use simple_serve::harness::{exactness, Effort};
+use simple_serve::util::argparse::{Args, OptSpec};
+
+fn main() -> simple_serve::Result<()> {
+    let args = Args::parse_env(&[OptSpec::flag("quick", "fast run")], false)?;
+    let effort = if args.flag("quick") { Effort::Quick } else { Effort::Full };
+    let report = exactness::fig13(effort);
+    println!("{}", report.markdown);
+    report.write(&simple_serve::harness::default_results_dir())?;
+    Ok(())
+}

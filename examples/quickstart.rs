@@ -1,0 +1,70 @@
+//! Quickstart: load the AOT micro model, serve a handful of text prompts
+//! through the full stack (PJRT forward → shared logits view →
+//! sequence-parallel SHVS samplers → commit), and print the generations.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use simple_serve::config::{DecisionVariant, EngineConfig};
+use simple_serve::decision::{HotVocab, SamplingParams};
+use simple_serve::engine::{tokenizer, PjrtEngine, Request};
+use simple_serve::runtime::{default_artifacts_dir, Manifest, ModelRuntime};
+
+fn main() -> simple_serve::Result<()> {
+    let manifest = Manifest::load(&default_artifacts_dir())
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let rt = ModelRuntime::load(&manifest, "micro-test")?;
+    let vocab = rt.vocab();
+
+    // Decision plane: SHVS with a trace-built hot set, 2 samplers.
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Shvs;
+    cfg.sampler.num_samplers = 2;
+    // The AOT model's next-token distribution is Zipf over ascending ids
+    // (lm_bias construction), so the offline-profiled hot set is the low-id
+    // head — exactly what trace profiling would find.
+    let hot = HotVocab::new((0..(vocab / 8) as u32).collect(), vocab).into_arc();
+    let mut engine = PjrtEngine::new(rt, &cfg, Some(hot));
+
+    let prompts = [
+        "The decision plane",
+        "Sampling is",
+        "Disaggregate",
+        "Hot vocab",
+    ];
+    for (i, text) in prompts.iter().enumerate() {
+        let mut req = Request::new(i as u64, tokenizer::encode(text), 12);
+        req.params = SamplingParams {
+            seed: i as u64,
+            ..SamplingParams::production_default()
+        };
+        engine.submit(req);
+    }
+
+    let summary = engine.run_until_idle()?;
+    let mut finished = engine.take_finished();
+    finished.sort_by_key(|s| s.request.id);
+    println!("— generations (tiny random-weight model, ids shown as ⟨id⟩) —");
+    for seq in &finished {
+        println!(
+            "  {:?} -> {:?}",
+            tokenizer::decode(&seq.request.prompt),
+            tokenizer::decode(&seq.output)
+        );
+    }
+    println!(
+        "\n{} tokens in {:.2}s ({:.0} tok/s), TPOT p50 {:.2} ms",
+        summary.tokens,
+        summary.duration,
+        summary.throughput,
+        summary.tpot.p50 * 1e3
+    );
+    let (_, stats) = engine.shutdown();
+    let decisions: u64 = stats.iter().map(|s| s.decisions).sum();
+    let fast: u64 = stats.iter().map(|s| s.fast_path_hits).sum();
+    println!(
+        "decision plane: {decisions} decisions across {} samplers, {:.0}% fast path",
+        stats.len(),
+        fast as f64 / decisions.max(1) as f64 * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! END-TO-END VALIDATION (DESIGN.md §5): serve a batched ShareGPT-like
+//! workload on the real AOT-compiled ~20M-parameter transformer through the
+//! full three-layer stack, comparing the baseline serial epilogue against
+//! SIMPLE's disaggregated decision plane, and report throughput + latency.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+//! (`--quick` serves fewer requests; `--model micro-test` for CI speed)
+
+use simple_serve::config::{DecisionVariant, EngineConfig};
+use simple_serve::decision::HotVocab;
+use simple_serve::engine::PjrtEngine;
+use simple_serve::runtime::{default_artifacts_dir, Manifest, ModelRuntime};
+use simple_serve::util::argparse::{Args, OptSpec};
+use simple_serve::util::json::Json;
+use simple_serve::workload;
+
+const SPECS: &[OptSpec] = &[
+    OptSpec::value("model", "AOT model (tiny-30m | micro-test)"),
+    OptSpec::value("requests", "number of requests"),
+    OptSpec::value("samplers", "sampler count m"),
+    OptSpec::flag("quick", "small run"),
+];
+
+fn main() -> simple_serve::Result<()> {
+    let args = Args::parse_env(SPECS, false)?;
+    let quick = args.flag("quick");
+    let model = args
+        .get("model")
+        .unwrap_or(if quick { "micro-test" } else { "tiny-30m" })
+        .to_string();
+    let n: usize = args.get_or("requests", if quick { 10 } else { 32 })?;
+    let samplers: usize = args.get_or("samplers", 2)?;
+
+    let manifest = Manifest::load(&default_artifacts_dir())
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+
+    println!("=== end-to-end serving: {model}, {n} requests ===\n");
+    let mut results = Vec::new();
+    for variant in [DecisionVariant::GpuEpilogue, DecisionVariant::Shvs] {
+        let rt = ModelRuntime::load(&manifest, &model)?;
+        let vocab = rt.vocab();
+        let max_seq = rt.max_seq();
+        let mut cfg = EngineConfig::default();
+        cfg.sampler.variant = variant;
+        cfg.sampler.num_samplers = samplers;
+        // Offline-profiled hot set: the AOT model's Zipf head lives on
+        // low ids by construction (see python/compile/model.py lm_bias).
+        let h = (vocab / 5).min(32_768) as u32;
+        let hot = (variant == DecisionVariant::Shvs)
+            .then(|| HotVocab::new((0..h).collect(), vocab).into_arc());
+        let mut engine = PjrtEngine::new(rt, &cfg, hot);
+        let trace =
+            workload::generate(&workload::TraceConfig::sharegpt_like(n, vocab, max_seq));
+        let expected: usize = trace.output_lens.iter().sum();
+        for r in trace.requests {
+            engine.submit(r);
+        }
+        let summary = engine.run_until_idle()?;
+        assert_eq!(summary.tokens, expected, "all tokens produced");
+        println!(
+            "[{}] {:>7.0} tok/s | TPOT p50 {:>6.2} ms  p95 {:>6.2} ms | \
+             TTFT p50 {:>6.1} ms | gpu util {:.0}% cpu util {:.0}%",
+            variant.name(),
+            summary.throughput,
+            summary.tpot.p50 * 1e3,
+            summary.tpot.p95 * 1e3,
+            summary.ttft.p50 * 1e3,
+            engine.recorder.utilization("gpu") * 100.0,
+            engine.recorder.utilization("cpu") * 100.0,
+        );
+        results.push((variant.name(), summary));
+        engine.shutdown();
+    }
+
+    let base = &results[0].1;
+    let simple = &results[1].1;
+    println!(
+        "\nSIMPLE vs baseline epilogue: throughput ×{:.2}, TPOT p95 {:+.0}%",
+        simple.throughput / base.throughput,
+        (simple.tpot.p95 / base.tpot.p95 - 1.0) * 100.0
+    );
+    // Record machine-readable results for EXPERIMENTS.md.
+    let out = Json::obj(vec![
+        ("model", Json::Str(model)),
+        ("requests", Json::Num(n as f64)),
+        ("baseline", base.to_json()),
+        ("simple", simple.to_json()),
+    ]);
+    let path = simple_serve::harness::default_results_dir().join("serve_e2e.json");
+    simple_serve::util::json::write_json_file(&path, &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! §5.4/§7.5 hot-vocab sizing (Figures 11 & 12): fit the affine hot-path
+//! cost, measure the hit-ratio curve, compose F(H), and compare the
+//! predicted H* with the measured throughput peak.
+//!
+//! Run: `cargo run --release --example sizing [-- --quick]`
+
+use simple_serve::harness::{micro, Effort};
+use simple_serve::util::argparse::{Args, OptSpec};
+
+fn main() -> simple_serve::Result<()> {
+    let args = Args::parse_env(&[OptSpec::flag("quick", "fast run")], false)?;
+    let effort = if args.flag("quick") { Effort::Quick } else { Effort::Full };
+    let dir = simple_serve::harness::default_results_dir();
+    for report in [micro::fig11(effort), micro::fig12(effort)] {
+        println!("{}", report.markdown);
+        report.write(&dir)?;
+    }
+    Ok(())
+}

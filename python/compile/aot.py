@@ -1,0 +1,140 @@
+"""AOT compile path: JAX model -> HLO text + weights + manifest.
+
+Run once by `make artifacts` (incremental: skips models whose inputs are
+unchanged). Python never runs on the request path — the Rust runtime loads
+`artifacts/<model>/decode.hlo.txt` through PJRT and uploads the .npy
+weights as device buffers.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources — the incremental-build key."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def build_model(cfg: model_lib.ModelConfig, out_dir: str) -> dict:
+    """Lower one model config; write HLO + weights; return its manifest."""
+    mdir = os.path.join(out_dir, cfg.name)
+    wdir = os.path.join(mdir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    # --- weights ---
+    weights = model_lib.init_weights(cfg)
+    names = model_lib.weight_names(cfg)
+    for name in names:
+        np.save(os.path.join(wdir, f"{name}.npy"), weights[name])
+
+    # --- HLO ---
+    f = model_lib.decode_step_flat(cfg)
+    lowered = jax.jit(f).lower(*model_lib.example_args(cfg))
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(mdir, "decode.hlo.txt")
+    with open(hlo_path, "w") as fh:
+        fh.write(hlo)
+
+    shapes = model_lib.weight_shapes(cfg)
+    kv_shape = [cfg.layers, cfg.batch, cfg.max_seq, cfg.kv_heads, cfg.head_dim]
+    return {
+        "name": cfg.name,
+        "hlo": f"{cfg.name}/decode.hlo.txt",
+        "batch": cfg.batch,
+        "vocab": cfg.vocab,
+        "layers": cfg.layers,
+        "hidden": cfg.hidden,
+        "heads": cfg.heads,
+        "kv_heads": cfg.kv_heads,
+        "head_dim": cfg.head_dim,
+        "ffn_hidden": cfg.ffn_hidden,
+        "max_seq": cfg.max_seq,
+        "kv_shape": kv_shape,
+        "weights": [
+            {
+                "name": n,
+                "file": f"{cfg.name}/weights/{n}.npy",
+                "shape": list(shapes[n]),
+            }
+            for n in names
+        ],
+        # Flat argument order after the weights:
+        "extra_args": ["ids", "positions", "kv_k", "kv_v", "tau", "hot_mask"],
+        # Tuple output order:
+        "outputs": ["logits", "stats", "kv_k", "kv_v"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="micro-test,tiny-30m",
+        help="comma-separated model names (see model.CONFIGS)",
+    )
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fingerprint = source_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                existing = json.load(f)
+            if existing.get("fingerprint") == fingerprint and all(
+                os.path.exists(os.path.join(out_dir, m["hlo"]))
+                for m in existing.get("models", [])
+            ):
+                print(f"artifacts up to date (fingerprint {fingerprint})")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    models = []
+    for name in args.models.split(","):
+        cfg = model_lib.CONFIGS[name.strip()]
+        print(f"lowering {cfg.name} (V={cfg.vocab}, B={cfg.batch}) ...")
+        models.append(build_model(cfg, out_dir))
+
+    manifest = {"fingerprint": fingerprint, "models": models}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: decode-step attention with GQA.
+
+One query token per sequence against the KV cache. The grid iterates over
+the batch; each step keeps one sequence's [T, KVH, Dh] cache panel in VMEM
+and computes a masked softmax-attention for its H query heads. T is blocked
+implicitly by the cache length (small for the e2e model); on a real TPU the
+T axis would be further tiled with a second grid dimension and the same
+online-softmax rescaling used in `lm_head.py`.
+
+interpret=True for CPU execution (see lm_head.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    # Blocks: q [1, H, Dh], k/v [1, T, KVH, Dh], len [1], o [1, H, Dh].
+    q = q_ref[0]  # [H, Dh]
+    k = k_ref[0]  # [T, KVH, Dh]
+    v = v_ref[0]
+    n = len_ref[0]
+
+    h, dh = q.shape
+    t, kvh, _ = k.shape
+    group = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    qg = q.reshape(kvh, group, dh)
+    # [KVH, group, T]
+    scores = jnp.einsum("kgd,tkd->kgt", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    mask = jnp.arange(t)[None, None, :] < n
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("kgt,tkd->kgd", p, v, preferred_element_type=jnp.float32)
+    o_ref[0] = out.reshape(h, dh)
+
+
+@jax.jit
+def decode_attention(q, k, v, lengths):
+    """Decode attention: q [B, H, Dh], cache k/v [B, T, KVH, Dh],
+    lengths [B] (valid prefix incl. the current token). Returns [B, H, Dh]."""
+    b, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, "H must be a multiple of KVH (GQA)"
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, kvh, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, kvh, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, lengths)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes(t, kvh, dh, h):
+    """Per-grid-step VMEM estimate (f32) for DESIGN.md §Perf."""
+    return 4 * (h * dh + 2 * t * kvh * dh + h * dh + h // max(kvh, 1) * t * kvh)

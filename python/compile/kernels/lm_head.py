@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: fused LM-head projection + SHVS precompute.
+
+This is the paper's "w_{b,v} can be pre-computed on GPUs when writing
+logits" (§5.3) re-thought for TPU:
+
+- The hidden→vocab GEMM is tiled along the vocabulary axis with a
+  `BlockSpec` grid, streaming [D, BV] weight panels through VMEM while the
+  [B, D] activations stay resident — MXU-shaped blocks instead of CUDA
+  threadblocks.
+- The SHVS statistics (running max `z_max`, hot/tail weight sums, tail max
+  weight; Eq. 6-7) are fused into the same grid pass with an *online
+  softmax* rescaling (flash-attention style), so logits never make a second
+  HBM round trip.
+
+Run with interpret=True on CPU (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute); the BlockSpec structure is
+what carries over to real hardware. See DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _lm_head_kernel(x_ref, w_ref, bias_ref, tau_ref, hot_ref, logits_ref, stats_ref):
+    """One vocab-block step: GEMM + online stats update.
+
+    Grid: (V // block_v,). Revisited output `stats_ref` accumulates across
+    steps (sequential TPU grid semantics; interpret mode matches).
+    """
+    j = pl.program_id(0)
+
+    # MXU block: [B, D] @ [D, BV] -> [B, BV], f32 accumulate, fused bias.
+    logits = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    logits = logits + bias_ref[...][None, :]
+    logits_ref[...] = logits
+
+    tau = tau_ref[...]  # [B]
+    hot = hot_ref[...][None, :]  # [1, BV]
+
+    # First-block init by *select*, not a predicated write: the accumulator
+    # is written exactly once per grid step and never read before being
+    # masked, so correctness is independent of the output buffer's initial
+    # contents (XLA is free to leave revisited buffers uninitialized).
+    is_first = j == 0
+    m_old = jnp.where(is_first, NEG_INF, stats_ref[:, 0])
+    s_hot = jnp.where(is_first, 0.0, stats_ref[:, 1])
+    s_tail = jnp.where(is_first, 0.0, stats_ref[:, 2])
+    t_max = jnp.where(is_first, 0.0, stats_ref[:, 3])
+
+    blk_max = jnp.max(logits, axis=1)
+    m_new = jnp.maximum(m_old, blk_max)
+    # Rescale previous sums to the new max (online softmax).
+    scale = jnp.exp((m_old - m_new) / tau)
+    w = jnp.exp((logits - m_new[:, None]) / tau[:, None])  # [B, BV]
+    s_hot = s_hot * scale + jnp.sum(w * hot, axis=1)
+    s_tail = s_tail * scale + jnp.sum(w * (1.0 - hot), axis=1)
+    t_max = jnp.maximum(t_max * scale, jnp.max(jnp.where(hot > 0, 0.0, w), axis=1))
+
+    stats_ref[...] = jnp.stack([m_new, s_hot, s_tail, t_max], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v",))
+def lm_head(x, w, bias, tau, hot_mask, *, block_v=2048):
+    """Fused LM head: logits [B, V] + SHVS stats [B, 4].
+
+    stats[:, 0] = z_max, stats[:, 1] = S_hot, stats[:, 2] = S_tail,
+    stats[:, 3] = max tail weight — exactly `decision::shvs::Precompute`.
+    """
+    b, d = x.shape
+    d2, v = w.shape
+    assert d == d2, f"hidden mismatch {d} vs {d2}"
+    assert v % block_v == 0 or block_v >= v, "block_v must tile V"
+    bv = min(block_v, v)
+    grid = (v // bv,)
+    return pl.pallas_call(
+        _lm_head_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),  # activations: VMEM-resident
+            pl.BlockSpec((d, bv), lambda j: (0, j)),  # weight panel streams
+            pl.BlockSpec((bv,), lambda j: (j,)),  # per-token bias
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((bv,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bv), lambda j: (0, j)),
+            pl.BlockSpec((b, 4), lambda j: (0, 0)),  # revisited accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, v), jnp.float32),
+            jax.ShapeDtypeStruct((b, 4), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, bias, tau, hot_mask)
+
+
+def vmem_bytes(b, d, block_v):
+    """Estimated VMEM working set of one grid step (f32): activations +
+    weight panel + logits block + stats. Used by the DESIGN.md §Perf roofline
+    notes, not at runtime."""
+    return 4 * (b * d + d * block_v + b * block_v + b * 4)
+
+
+def mxu_utilization_estimate(b, d, block_v, mxu=128):
+    """Fraction of MXU lanes fed by the [B, D]x[D, BV] block shape: the MXU
+    is a 128x128 systolic array; blocks smaller than 128 in each GEMM dim
+    leave lanes idle."""
+    eff_m = min(b, mxu) / mxu
+    eff_k = min(d, mxu) / mxu
+    eff_n = min(block_v, mxu) / mxu
+    return eff_m * eff_k * eff_n

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest/hypothesis sweep shapes and
+compare the Pallas kernels (run in interpret mode) against these with
+assert_allclose. They are also small enough to read as the spec.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_lm_head(x, w, bias, tau, hot_mask):
+    """Fused LM head + SHVS precompute (paper Eq. 6-7), reference.
+
+    Args:
+      x: [B, D] final hidden states.
+      w: [D, V] output projection.
+      bias: [V] additive per-token bias.
+      tau: [B] per-sequence temperature (>0; engine sends 1.0 for greedy).
+      hot_mask: [V] float 0/1, 1 = hot-set member.
+
+    Returns:
+      logits: [B, V]
+      stats:  [B, 4] = (z_max, s_hot, s_tail, tail_max_w) where
+        w_v = exp((z_v - z_max)/tau), s_hot = sum_{hot} w_v,
+        s_tail = sum_{tail} w_v, tail_max_w = max_{tail} w_v.
+    """
+    logits = x @ w + bias[None, :]  # [B, V]
+    z_max = jnp.max(logits, axis=1)  # [B]
+    wgt = jnp.exp((logits - z_max[:, None]) / tau[:, None])  # [B, V]
+    hot = hot_mask[None, :]
+    s_hot = jnp.sum(wgt * hot, axis=1)
+    s_tail = jnp.sum(wgt * (1.0 - hot), axis=1)
+    tail_max = jnp.max(jnp.where(hot > 0, 0.0, wgt), axis=1)
+    stats = jnp.stack([z_max, s_hot, s_tail, tail_max], axis=1)
+    return logits, stats
+
+
+def ref_decode_attention(q, k, v, lengths):
+    """Single-step (decode) attention with GQA, reference.
+
+    Args:
+      q: [B, H, Dh] this step's queries.
+      k: [B, T, KVH, Dh] key cache (only the first lengths[b] rows valid).
+      v: [B, T, KVH, Dh] value cache.
+      lengths: [B] int32, number of valid cache positions (incl. this step).
+
+    Returns:
+      out: [B, H, Dh]
+    """
+    b, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    qg = q.reshape(b, kvh, group, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k) * scale
+    mask = jnp.arange(t)[None, :] < lengths[:, None]  # [B, T]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return out.reshape(b, h, dh)

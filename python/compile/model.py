@@ -1,0 +1,251 @@
+"""L2: decode-step transformer producing logits + SHVS precompute.
+
+A small Llama-style decoder (RMSNorm, RoPE, GQA attention, SiLU-gated MLP)
+whose single-token decode step is AOT-lowered to HLO text and executed from
+the Rust runtime via PJRT. The attention and LM-head hot spots call the L1
+Pallas kernels, so they lower into the same HLO module.
+
+Weights are generated deterministically (seeded) at AOT time and shipped as
+.npy files the Rust side uploads once as device buffers; the HLO takes them
+as leading arguments so nothing heavyweight is baked into the module text.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import decode_attention
+from .kernels.lm_head import lm_head
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Mirrors `rust/src/config/model.rs` for the AOT-compiled models."""
+
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    kv_heads: int
+    ffn_hidden: int
+    vocab: int
+    max_seq: int  # KV-cache capacity T (static in the HLO)
+    batch: int  # microbatch size B (static in the HLO)
+    seed: int = 0x51113
+    zipf_s: float = 1.05  # Zipf exponent of the LM-head rank bias (§5.3)
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+
+TINY_E2E = ModelConfig(
+    name="tiny-30m",
+    layers=4,
+    hidden=256,
+    heads=8,
+    kv_heads=8,
+    ffn_hidden=1024,
+    vocab=32_000,
+    max_seq=256,
+    batch=8,
+)
+
+MICRO_TEST = ModelConfig(
+    name="micro-test",
+    layers=2,
+    hidden=64,
+    heads=4,
+    kv_heads=4,
+    ffn_hidden=128,
+    vocab=1_000,
+    max_seq=64,
+    batch=4,
+)
+
+CONFIGS = {c.name: c for c in (TINY_E2E, MICRO_TEST)}
+
+
+def weight_names(cfg: ModelConfig):
+    """Fixed argument order of the weight tensors (manifest + HLO args)."""
+    names = ["embedding"]
+    for l in range(cfg.layers):
+        names += [
+            f"layer{l}.ln1",
+            f"layer{l}.wqkv",
+            f"layer{l}.wo",
+            f"layer{l}.ln2",
+            f"layer{l}.w_gate",
+            f"layer{l}.w_up",
+            f"layer{l}.w_down",
+        ]
+    names += ["ln_final", "lm_head", "lm_bias"]
+    return names
+
+
+def weight_shapes(cfg: ModelConfig):
+    d, h, kvh, dh, f, v = (
+        cfg.hidden,
+        cfg.heads,
+        cfg.kv_heads,
+        cfg.head_dim,
+        cfg.ffn_hidden,
+        cfg.vocab,
+    )
+    qkv_out = (h + 2 * kvh) * dh
+    shapes = {"embedding": (v, d)}
+    for l in range(cfg.layers):
+        shapes[f"layer{l}.ln1"] = (d,)
+        shapes[f"layer{l}.wqkv"] = (d, qkv_out)
+        shapes[f"layer{l}.wo"] = (h * dh, d)
+        shapes[f"layer{l}.ln2"] = (d,)
+        shapes[f"layer{l}.w_gate"] = (d, f)
+        shapes[f"layer{l}.w_up"] = (d, f)
+        shapes[f"layer{l}.w_down"] = (f, d)
+    shapes["ln_final"] = (d,)
+    shapes["lm_head"] = (d, v)
+    shapes["lm_bias"] = (v,)
+    return shapes
+
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic synthetic weights (truncated-normal-ish scaling).
+
+    The decision plane's behaviour depends on the logits *distribution*,
+    not on trained weight values (DESIGN.md §2); scaled Gaussian weights
+    give well-conditioned, Zipf-ish-after-softmax logits.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    shapes = weight_shapes(cfg)
+    out = {}
+    for name in weight_names(cfg):
+        shape = shapes[name]
+        if name.endswith(("ln1", "ln2", "ln_final")):
+            out[name] = np.ones(shape, np.float32)
+        elif name == "lm_bias":
+            # Zipf-shaped rank bias: softmax(-s ln(rank)) IS a Zipf(s)
+            # distribution — gives the Zipf-like next-token mass the paper
+            # observes in real traces (SHVS premise, §5.3). Per-step hidden
+            # states then modulate it with ~N(0,1) logit noise.
+            v = cfg.vocab
+            out[name] = (-cfg.zipf_s * np.log(np.arange(v) + 2.0)).astype(np.float32)
+        else:
+            fan_in = shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            out[name] = rng.normal(0.0, std, shape).astype(np.float32)
+    return out
+
+
+def pick_block_v(vocab, target=2048):
+    """Largest divisor of `vocab` not exceeding `target` (grid must tile V)."""
+    best = 1
+    d = 1
+    while d * d <= vocab:
+        if vocab % d == 0:
+            for cand in (d, vocab // d):
+                if cand <= target and cand > best:
+                    best = cand
+        d += 1
+    return best
+
+
+def rms_norm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions):
+    """Rotary embedding: x [B, n, Dh], positions [B]."""
+    b, n, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [B, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def decode_step(weights, ids, positions, kv_k, kv_v, tau, hot_mask, cfg: ModelConfig):
+    """One decode iteration.
+
+    Args:
+      weights: dict name -> array (see weight_names).
+      ids: [B] int32 current tokens.
+      positions: [B] int32 positions of `ids` in their sequences.
+      kv_k, kv_v: [L, B, T, KVH, Dh] caches.
+      tau: [B] temperatures for the SHVS precompute.
+      hot_mask: [V] 0/1 hot-set membership.
+
+    Returns:
+      (logits [B, V], stats [B, 4], new_kv_k, new_kv_v)
+    """
+    d, h, kvh, dh = cfg.hidden, cfg.heads, cfg.kv_heads, cfg.head_dim
+    t = cfg.max_seq
+
+    x = weights["embedding"][ids]  # [B, D]
+    onehot_t = (jnp.arange(t)[None, :] == positions[:, None]).astype(jnp.float32)
+
+    new_k_layers = []
+    new_v_layers = []
+    for l in range(cfg.layers):
+        hln = rms_norm(x, weights[f"layer{l}.ln1"])
+        qkv = hln @ weights[f"layer{l}.wqkv"]  # [B, (H+2KVH)*Dh]
+        q, k_new, v_new = jnp.split(qkv, [h * dh, (h + kvh) * dh], axis=1)
+        q = rope(q.reshape(-1, h, dh), positions)
+        k_new = rope(k_new.reshape(-1, kvh, dh), positions)
+        v_new = v_new.reshape(-1, kvh, dh)
+
+        # Write this step's K/V at each sequence's position (one-hot blend).
+        oh = onehot_t[:, :, None, None]  # [B, T, 1, 1]
+        k_cache = kv_k[l] * (1.0 - oh) + k_new[:, None, :, :] * oh
+        v_cache = kv_v[l] * (1.0 - oh) + v_new[:, None, :, :] * oh
+        new_k_layers.append(k_cache)
+        new_v_layers.append(v_cache)
+
+        attn = decode_attention(q, k_cache, v_cache, positions + 1)  # [B, H, Dh]
+        x = x + attn.reshape(-1, h * dh) @ weights[f"layer{l}.wo"]
+
+        hln2 = rms_norm(x, weights[f"layer{l}.ln2"])
+        gate = jax.nn.silu(hln2 @ weights[f"layer{l}.w_gate"])
+        up = hln2 @ weights[f"layer{l}.w_up"]
+        x = x + (gate * up) @ weights[f"layer{l}.w_down"]
+
+    x = rms_norm(x, weights["ln_final"])
+    logits, stats = lm_head(x, weights["lm_head"], weights["lm_bias"], tau,
+                            hot_mask, block_v=pick_block_v(cfg.vocab))
+    return logits, stats, jnp.stack(new_k_layers), jnp.stack(new_v_layers)
+
+
+def decode_step_flat(cfg: ModelConfig):
+    """Return a flat-arg function suitable for jax.jit().lower():
+    f(w_0..w_n, ids, positions, kv_k, kv_v, tau, hot_mask) -> tuple."""
+    names = weight_names(cfg)
+
+    def f(*args):
+        nw = len(names)
+        weights = dict(zip(names, args[:nw]))
+        ids, positions, kv_k, kv_v, tau, hot_mask = args[nw:]
+        return decode_step(weights, ids, positions, kv_k, kv_v, tau, hot_mask, cfg)
+
+    return f
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs for lowering, in flat-arg order."""
+    shapes = weight_shapes(cfg)
+    args = [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in weight_names(cfg)
+    ]
+    b, t = cfg.batch, cfg.max_seq
+    kv = (cfg.layers, b, t, cfg.kv_heads, cfg.head_dim)
+    args += [
+        jax.ShapeDtypeStruct((b,), jnp.int32),  # ids
+        jax.ShapeDtypeStruct((b,), jnp.int32),  # positions
+        jax.ShapeDtypeStruct(kv, jnp.float32),  # kv_k
+        jax.ShapeDtypeStruct(kv, jnp.float32),  # kv_v
+        jax.ShapeDtypeStruct((b,), jnp.float32),  # tau
+        jax.ShapeDtypeStruct((cfg.vocab,), jnp.float32),  # hot_mask
+    ]
+    return args

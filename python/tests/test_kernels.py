@@ -1,0 +1,170 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every case asserts allclose against ref.py —
+the CORE correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.lm_head import lm_head, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.ref import ref_decode_attention, ref_lm_head
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return rng.normal(0.0, 1.0, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- lm_head
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    d=st.sampled_from([16, 64, 128]),
+    v_blocks=st.integers(1, 4),
+    block_v=st.sampled_from([64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lm_head_matches_ref(b, d, v_blocks, block_v, seed):
+    rng = np.random.default_rng(seed)
+    v = v_blocks * block_v
+    x = rand(rng, b, d)
+    w = rand(rng, d, v) * (1.0 / d**0.5)
+    tau = rng.uniform(0.3, 2.0, b).astype(np.float32)
+    hot = (rng.uniform(size=v) < 0.3).astype(np.float32)
+
+    bias = rand(rng, v) * 0.5
+    logits, stats = lm_head(x, w, bias, tau, hot, block_v=block_v)
+    ref_logits, ref_stats = ref_lm_head(x, w, bias, tau, hot)
+
+    np.testing.assert_allclose(logits, ref_logits, rtol=1e-5, atol=1e-5)
+    # z_max exact-ish, sums to fp32 accumulation tolerance
+    np.testing.assert_allclose(stats[:, 0], ref_stats[:, 0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(stats[:, 1], ref_stats[:, 1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(stats[:, 2], ref_stats[:, 2], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(stats[:, 3], ref_stats[:, 3], rtol=1e-4, atol=1e-6)
+
+
+def test_lm_head_single_block():
+    # block_v >= V: one grid step, init + accumulate in the same call.
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 2, 8), rand(rng, 8, 32)
+    tau = np.ones(2, np.float32)
+    hot = np.zeros(32, np.float32)
+    hot[:4] = 1.0
+    bias = rand(rng, 32)
+    logits, stats = lm_head(x, w, bias, tau, hot, block_v=64)
+    ref_logits, ref_stats = ref_lm_head(x, w, bias, tau, hot)
+    np.testing.assert_allclose(logits, ref_logits, rtol=1e-5)
+    np.testing.assert_allclose(stats, ref_stats, rtol=1e-4, atol=1e-6)
+
+
+def test_lm_head_stats_semantics():
+    # Hand-checkable: uniform logits, half-hot mask.
+    x = np.ones((1, 4), np.float32)
+    w = np.zeros((4, 8), np.float32)  # all logits 0
+    tau = np.ones(1, np.float32)
+    hot = np.array([1, 1, 1, 1, 0, 0, 0, 0], np.float32)
+    bias = np.zeros(8, np.float32)
+    logits, stats = lm_head(x, w, bias, tau, hot, block_v=4)
+    assert np.allclose(logits, 0.0)
+    z_max, s_hot, s_tail, t_max = stats[0]
+    assert z_max == 0.0
+    assert np.isclose(s_hot, 4.0)  # four hot tokens, each w = exp(0) = 1
+    assert np.isclose(s_tail, 4.0)
+    assert np.isclose(t_max, 1.0)
+
+
+def test_lm_head_extreme_logits_stable():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 2, 16) * 100.0  # huge activations -> huge logits
+    w = rand(rng, 16, 64)
+    tau = np.full(2, 0.5, np.float32)
+    hot = (np.arange(64) < 16).astype(np.float32)
+    bias = rand(rng, 64)
+    logits, stats = lm_head(x, w, bias, tau, hot, block_v=16)
+    assert np.all(np.isfinite(stats)), stats
+    ref_logits, ref_stats = ref_lm_head(x, w, bias, tau, hot)
+    np.testing.assert_allclose(stats[:, 0], ref_stats[:, 0], rtol=1e-6)
+    # weights are exp-normalized; sums stay finite and close
+    np.testing.assert_allclose(stats[:, 1:], ref_stats[:, 1:], rtol=1e-3, atol=1e-6)
+
+
+def test_perf_estimators_sane():
+    assert vmem_bytes(8, 256, 2048) < 16 * 1024 * 1024  # fits VMEM
+    assert 0.0 < mxu_utilization_estimate(8, 256, 2048) <= 1.0
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+
+
+# ------------------------------------------------------------- attention
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    kvh=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+    dh=st.sampled_from([8, 16]),
+    t=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, kvh, group, dh, t, seed):
+    rng = np.random.default_rng(seed)
+    h = kvh * group
+    q = rand(rng, b, h, dh)
+    k = rand(rng, b, t, kvh, dh)
+    v = rand(rng, b, t, kvh, dh)
+    lengths = rng.integers(1, t + 1, b).astype(np.int32)
+
+    out = decode_attention(q, k, v, lengths)
+    ref = ref_decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_masks_invalid_cache():
+    # Garbage beyond `lengths` must not affect the output.
+    rng = np.random.default_rng(1)
+    q = rand(rng, 1, 2, 8)
+    k1 = rand(rng, 1, 16, 2, 8)
+    v1 = rand(rng, 1, 16, 2, 8)
+    k2, v2 = k1.copy(), v1.copy()
+    k2[:, 4:] = 999.0
+    v2[:, 4:] = -999.0
+    lengths = np.array([4], np.int32)
+    out1 = decode_attention(q, k1, v1, lengths)
+    out2 = decode_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_attention_length_one_attends_only_first():
+    rng = np.random.default_rng(2)
+    q = rand(rng, 1, 2, 4)
+    k = rand(rng, 1, 8, 2, 4)
+    v = rand(rng, 1, 8, 2, 4)
+    out = decode_attention(q, k, v, np.array([1], np.int32))
+    # with one valid position, attention output == v[:, 0] per head
+    expect = v[:, 0]  # [1, KVH, Dh] == [1, H, Dh] here (group=1)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_gqa_groups_share_kv():
+    # H=4, KVH=2: heads (0,1) use kv head 0, (2,3) use kv head 1.
+    rng = np.random.default_rng(4)
+    b, t, kvh, dh = 1, 4, 2, 8
+    k = rand(rng, b, t, kvh, dh)
+    v = rand(rng, b, t, kvh, dh)
+    q = rand(rng, b, 4, dh)
+    q[0, 1] = q[0, 0]  # identical queries in the same group
+    out = decode_attention(q, k, v, np.array([t], np.int32))
+    np.testing.assert_allclose(out[0, 0], out[0, 1], rtol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,127 @@
+"""L2 model tests: shapes, KV-cache semantics, determinism, Zipf-ish logits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.kernels.ref import ref_lm_head
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model_lib.MICRO_TEST
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return {k: jnp.asarray(v) for k, v in model_lib.init_weights(CFG).items()}
+
+
+def step_inputs(positions):
+    b, t = CFG.batch, CFG.max_seq
+    kv = (CFG.layers, b, t, CFG.kv_heads, CFG.head_dim)
+    return {
+        "ids": jnp.arange(b, dtype=jnp.int32) % CFG.vocab,
+        "positions": jnp.asarray(positions, jnp.int32),
+        "kv_k": jnp.zeros(kv, jnp.float32),
+        "kv_v": jnp.zeros(kv, jnp.float32),
+        "tau": jnp.ones(b, jnp.float32),
+        "hot_mask": (jnp.arange(CFG.vocab) < 100).astype(jnp.float32),
+    }
+
+
+def test_decode_step_shapes(weights):
+    inp = step_inputs([0] * CFG.batch)
+    logits, stats, kv_k, kv_v = model_lib.decode_step(weights, **inp, cfg=CFG)
+    assert logits.shape == (CFG.batch, CFG.vocab)
+    assert stats.shape == (CFG.batch, 4)
+    assert kv_k.shape == (CFG.layers, CFG.batch, CFG.max_seq, CFG.kv_heads, CFG.head_dim)
+    assert kv_v.shape == kv_k.shape
+    assert np.all(np.isfinite(logits))
+    assert np.all(np.isfinite(stats))
+
+
+def test_kv_write_is_positional(weights):
+    # Step at position p must write K/V rows only at index p.
+    positions = [3, 0, 5, 1]
+    inp = step_inputs(positions)
+    _, _, kv_k, _ = model_lib.decode_step(weights, **inp, cfg=CFG)
+    kv_k = np.asarray(kv_k)
+    for b, p in enumerate(positions):
+        written = np.abs(kv_k[:, b]).sum(axis=(1, 2))  # [T] per layer summed later
+        for l in range(CFG.layers):
+            row_norms = np.abs(kv_k[l, b]).sum(axis=(1, 2))
+            assert row_norms[p] > 0, f"layer {l} seq {b} row {p} not written"
+            mask = np.ones(CFG.max_seq, bool)
+            mask[p] = False
+            assert np.allclose(row_norms[mask], 0.0), f"extra rows written b={b}"
+        del written
+
+
+def test_stats_match_ref_lm_head(weights):
+    # The in-graph stats must equal recomputing ref_lm_head on the final
+    # hidden state — verified indirectly: recompute from the returned logits.
+    inp = step_inputs([0] * CFG.batch)
+    logits, stats, _, _ = model_lib.decode_step(weights, **inp, cfg=CFG)
+    logits = np.asarray(logits)
+    tau = np.asarray(inp["tau"])
+    hot = np.asarray(inp["hot_mask"])
+    z_max = logits.max(axis=1)
+    w = np.exp((logits - z_max[:, None]) / tau[:, None])
+    s_hot = (w * hot[None, :]).sum(axis=1)
+    s_tail = (w * (1 - hot[None, :])).sum(axis=1)
+    np.testing.assert_allclose(stats[:, 0], z_max, rtol=1e-5)
+    np.testing.assert_allclose(stats[:, 1], s_hot, rtol=1e-3)
+    np.testing.assert_allclose(stats[:, 2], s_tail, rtol=1e-3)
+
+
+def test_determinism(weights):
+    inp = step_inputs([2] * CFG.batch)
+    a = model_lib.decode_step(weights, **inp, cfg=CFG)[0]
+    b = model_lib.decode_step(weights, **inp, cfg=CFG)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_logits_are_zipf_ish(weights):
+    """§5.3 premise: softmax of the logits concentrates mass in a head.
+
+    With the rank-tilted lm_head, a small top fraction of the vocab should
+    carry most of the probability mass."""
+    inp = step_inputs([0] * CFG.batch)
+    logits, _, _, _ = model_lib.decode_step(weights, **inp, cfg=CFG)
+    logits = np.asarray(logits, np.float64)
+    p = np.exp(logits - logits.max(axis=1, keepdims=True))
+    p /= p.sum(axis=1, keepdims=True)
+    top_frac = int(CFG.vocab * 0.2)
+    head_mass = np.sort(p, axis=1)[:, ::-1][:, :top_frac].sum(axis=1).mean()
+    assert head_mass > 0.5, f"head mass {head_mass}"
+
+
+def test_flat_wrapper_matches_dict_call(weights):
+    inp = step_inputs([1] * CFG.batch)
+    f = model_lib.decode_step_flat(CFG)
+    flat_args = [weights[n] for n in model_lib.weight_names(CFG)] + [
+        inp["ids"], inp["positions"], inp["kv_k"], inp["kv_v"], inp["tau"],
+        inp["hot_mask"],
+    ]
+    out_flat = f(*flat_args)
+    out_dict = model_lib.decode_step(weights, **inp, cfg=CFG)
+    for a, b in zip(out_flat, out_dict):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_example_args_align_with_flat():
+    args = model_lib.example_args(CFG)
+    names = model_lib.weight_names(CFG)
+    shapes = model_lib.weight_shapes(CFG)
+    assert len(args) == len(names) + 6
+    for n, a in zip(names, args):
+        assert tuple(shapes[n]) == a.shape
+
+
+def test_weight_init_deterministic():
+    w1 = model_lib.init_weights(CFG)
+    w2 = model_lib.init_weights(CFG)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])

@@ -1,0 +1,189 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Measures a closure with warmup + timed iterations, reports mean/p50/p95,
+//! and renders markdown tables. `cargo bench` binaries (`benches/*.rs` with
+//! `harness = false`) drive this directly.
+
+use crate::metrics::stats::Summary;
+use crate::util::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// Configuration for one measurement.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop after this much measured time even if < max_iters.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast config for CI/quick mode.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            max_time: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration seconds.
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+    /// Optional caller-supplied throughput denominator (items/iter).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Items per second at the mean iteration time.
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.items_per_iter.map(|ipi| {
+            if self.summary.mean > 0.0 {
+                ipi / self.summary.mean
+            } else {
+                0.0
+            }
+        })
+    }
+}
+
+/// Run one benchmark case. The closure should do one full iteration of work;
+/// return values are black-boxed by the caller keeping them observable.
+pub fn run_case(
+    name: &str,
+    cfg: &BenchConfig,
+    items_per_iter: Option<f64>,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters);
+    let started = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || started.elapsed() < cfg.max_time)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        samples,
+        items_per_iter,
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box exists
+/// on this toolchain; thin wrapper for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render results as a markdown table.
+pub fn render_table(title: &str, results: &[BenchResult]) -> String {
+    let mut out = format!("### {title}\n\n");
+    out.push_str("| case | iters | mean | p50 | p95 | items/s |\n");
+    out.push_str("|---|---:|---:|---:|---:|---:|\n");
+    for r in results {
+        let ips = r
+            .items_per_sec()
+            .map(|v| format_rate(v))
+            .unwrap_or_else(|| "—".into());
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            r.name,
+            r.summary.n,
+            fmt_duration(Duration::from_secs_f64(r.summary.mean)),
+            fmt_duration(Duration::from_secs_f64(r.summary.p50)),
+            fmt_duration(Duration::from_secs_f64(r.summary.p95)),
+            ips,
+        ));
+    }
+    out
+}
+
+/// Human-formatted rate (tokens/s etc).
+pub fn format_rate(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_case_collects_samples() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            max_time: Duration::from_secs(10),
+        };
+        let mut count = 0;
+        let r = run_case("noop", &cfg, Some(100.0), || {
+            count += 1;
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert_eq!(count, 6); // 1 warmup + 5 measured
+        assert!(r.items_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn max_time_bounds_iterations() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 10_000,
+            max_time: Duration::from_millis(30),
+        };
+        let r = run_case("sleepy", &cfg, None, || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(r.samples.len() >= 2);
+        assert!(r.samples.len() < 100);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let cfg = BenchConfig::quick();
+        let a = run_case("a", &cfg, None, || {});
+        let b = run_case("b", &cfg, Some(10.0), || {});
+        let md = render_table("t", &[a, b]);
+        assert!(md.contains("| a |"));
+        assert!(md.contains("| b |"));
+    }
+
+    #[test]
+    fn format_rate_units() {
+        assert_eq!(format_rate(5.0), "5.0");
+        assert_eq!(format_rate(5_300.0), "5.30k");
+        assert_eq!(format_rate(2_500_000.0), "2.50M");
+    }
+}

@@ -1,0 +1,239 @@
+//! Configuration: model specs, platform specs (Table 1), parallelism
+//! degrees (Table 2), sampler-service settings, and JSON config loading
+//! with CLI overrides.
+
+pub mod model;
+pub mod parallel;
+pub mod platform;
+
+pub use model::ModelSpec;
+pub use parallel::ParallelConfig;
+pub use platform::PlatformSpec;
+
+use crate::util::argparse::Args;
+use crate::util::json::Json;
+
+/// Which decision-plane implementation the engine uses — the ablation ladder
+/// of Figure 10 plus the simulated GPU-epilogue baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionVariant {
+    /// Baseline: sampling as a GPU epilogue on the last PP stage (vLLM-like);
+    /// cost modelled by the simulator, logits path identical.
+    GpuEpilogue,
+    /// Naive CPU port: full-V row-major scans, rebuilt tensors (§7.4 "vLLM CPU").
+    NaiveCpu,
+    /// Sequence-parallel, but full-V per-sequence work ("Parallel Sampling").
+    Parallel,
+    /// + column-wise penalties and truncation-first filtering ("Offloading").
+    Offloading,
+    /// + speculative hot-vocab sampling (full SIMPLE).
+    Shvs,
+}
+
+impl DecisionVariant {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "gpu" | "gpu-epilogue" | "baseline" => Self::GpuEpilogue,
+            "naive" | "naive-cpu" | "vllm-cpu" => Self::NaiveCpu,
+            "parallel" => Self::Parallel,
+            "offloading" | "offload" => Self::Offloading,
+            "shvs" | "simple" => Self::Shvs,
+            _ => return None,
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::GpuEpilogue => "gpu-epilogue",
+            Self::NaiveCpu => "naive-cpu",
+            Self::Parallel => "parallel",
+            Self::Offloading => "offloading",
+            Self::Shvs => "shvs",
+        }
+    }
+    pub const ALL: [DecisionVariant; 5] = [
+        Self::GpuEpilogue,
+        Self::NaiveCpu,
+        Self::Parallel,
+        Self::Offloading,
+        Self::Shvs,
+    ];
+}
+
+/// Decision-plane service settings (§7.1: 16 samplers × 4 threads default).
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// Number of sampler workers `m`.
+    pub num_samplers: usize,
+    /// Hot-vocab size H (0 = auto via the sizing model).
+    pub hot_vocab: usize,
+    /// Ring capacity (iterations in flight).
+    pub ring_depth: usize,
+    /// Fixed RNG seed for deterministic decisions.
+    pub seed: u64,
+    pub variant: DecisionVariant,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            num_samplers: 4,
+            hot_vocab: 0,
+            ring_depth: 4,
+            seed: 0x5111_7713,
+            variant: DecisionVariant::Shvs,
+        }
+    }
+}
+
+/// Top-level engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: ModelSpec,
+    pub platform: PlatformSpec,
+    pub parallel: ParallelConfig,
+    pub sampler: SamplerConfig,
+    /// Per-GPU microbatch size (paper default B=32 per GPU).
+    pub batch_per_gpu: usize,
+    /// Max model length for the row-append output buffer (L_max).
+    pub max_seq_len: usize,
+    /// KV block size in tokens (paged KV cache).
+    pub kv_block_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: ModelSpec::tiny_e2e(),
+            platform: PlatformSpec::h100(),
+            parallel: ParallelConfig::new(1, 1),
+            sampler: SamplerConfig::default(),
+            batch_per_gpu: 32,
+            max_seq_len: 2048,
+            kv_block_tokens: 16,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Total microbatch size B = batch_per_gpu × (t·p).
+    pub fn total_batch(&self) -> usize {
+        self.batch_per_gpu * self.parallel.world_size()
+    }
+
+    /// Load overrides from a JSON object (config file), then CLI args.
+    pub fn apply_json(&mut self, j: &Json) -> crate::Result<()> {
+        if let Some(name) = j.get("model").as_str() {
+            self.model = ModelSpec::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+        }
+        if let Some(name) = j.get("platform").as_str() {
+            self.platform = PlatformSpec::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown platform {name}"))?;
+        }
+        if let Some(t) = j.get("tp").as_usize() {
+            self.parallel.tp = t;
+        }
+        if let Some(p) = j.get("pp").as_usize() {
+            self.parallel.pp = p;
+        }
+        if let Some(b) = j.get("batch_per_gpu").as_usize() {
+            self.batch_per_gpu = b;
+        }
+        if let Some(m) = j.get("samplers").as_usize() {
+            self.sampler.num_samplers = m;
+        }
+        if let Some(h) = j.get("hot_vocab").as_usize() {
+            self.sampler.hot_vocab = h;
+        }
+        if let Some(s) = j.get("seed").as_f64() {
+            self.sampler.seed = s as u64;
+        }
+        if let Some(v) = j.get("variant").as_str() {
+            self.sampler.variant = DecisionVariant::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown variant {v}"))?;
+        }
+        if let Some(l) = j.get("max_seq_len").as_usize() {
+            self.max_seq_len = l;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (same keys as JSON).
+    pub fn apply_args(&mut self, args: &Args) -> crate::Result<()> {
+        let mut obj = std::collections::BTreeMap::new();
+        for key in ["model", "platform", "variant"] {
+            if let Some(v) = args.get(key) {
+                obj.insert(key.to_string(), Json::Str(v.to_string()));
+            }
+        }
+        for key in [
+            "tp",
+            "pp",
+            "batch_per_gpu",
+            "samplers",
+            "hot_vocab",
+            "seed",
+            "max_seq_len",
+        ] {
+            if let Some(v) = args.get(key) {
+                let n: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v}"))?;
+                obj.insert(key.to_string(), Json::Num(n));
+            }
+        }
+        self.apply_json(&Json::Obj(obj))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::argparse::{Args, OptSpec};
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in DecisionVariant::ALL {
+            assert_eq!(DecisionVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(DecisionVariant::parse("simple"), Some(DecisionVariant::Shvs));
+        assert_eq!(DecisionVariant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut cfg = EngineConfig::default();
+        let j = Json::parse(
+            r#"{"model": "qwen2.5-72b", "platform": "l40", "tp": 4, "pp": 2,
+                "batch_per_gpu": 16, "samplers": 8, "variant": "offloading"}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.model.name, "qwen2.5-72b");
+        assert_eq!(cfg.platform.name, "l40");
+        assert_eq!(cfg.parallel.tp, 4);
+        assert_eq!(cfg.parallel.pp, 2);
+        assert_eq!(cfg.total_batch(), 16 * 8);
+        assert_eq!(cfg.sampler.variant, DecisionVariant::Offloading);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let mut cfg = EngineConfig::default();
+        let j = Json::parse(r#"{"model": "nope"}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn args_override() {
+        let mut cfg = EngineConfig::default();
+        let argv: Vec<String> = ["p", "--tp", "8", "--variant", "shvs"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let specs = [OptSpec::value("tp", ""), OptSpec::value("variant", "")];
+        let args = Args::parse(&argv, &specs, false).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.parallel.tp, 8);
+    }
+}

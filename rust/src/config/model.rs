@@ -1,0 +1,244 @@
+//! Model specifications.
+//!
+//! Two kinds:
+//! - The paper's evaluation models (Table 2) — used by the distributed
+//!   timing simulator with their real architecture numbers (layers, hidden,
+//!   vocab, MoE activation) to produce per-stage compute times.
+//! - `tiny_e2e` — the real ~30M-parameter transformer we AOT-compile and
+//!   actually execute through PJRT for the end-to-end example.
+
+/// Architecture description sufficient for FLOPs/bytes accounting and for
+/// the AOT-compiled tiny model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub ffn_hidden: usize,
+    /// Vocabulary size V — the axis the paper's analysis revolves around.
+    pub vocab: usize,
+    /// For MoE models: active parameter fraction per token (1.0 = dense).
+    pub active_frac: f64,
+    /// Total parameter count (billions) for memory/GEMM accounting.
+    pub params_b: f64,
+    /// Zipf exponent shaping this model's next-token distribution (traces);
+    /// drives the synthetic-logits substrate and ᾱ(H) curves.
+    pub zipf_s: f64,
+}
+
+impl ModelSpec {
+    /// The small model actually served end-to-end via PJRT on this host.
+    pub fn tiny_e2e() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-30m",
+            layers: 4,
+            hidden: 256,
+            heads: 8,
+            kv_heads: 8,
+            ffn_hidden: 1024,
+            vocab: 32_000,
+            active_frac: 1.0,
+            params_b: 0.030,
+            zipf_s: 1.05,
+        }
+    }
+
+    /// An even smaller model for unit/integration tests (fast AOT + run).
+    pub fn micro_test() -> ModelSpec {
+        ModelSpec {
+            name: "micro-test",
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            kv_heads: 4,
+            ffn_hidden: 128,
+            vocab: 1_000,
+            active_frac: 1.0,
+            params_b: 0.001,
+            zipf_s: 1.1,
+        }
+    }
+
+    // ---- Paper evaluation models (Table 2) ----
+
+    pub fn qwq_32b() -> ModelSpec {
+        ModelSpec {
+            name: "qwq-32b",
+            layers: 64,
+            hidden: 5120,
+            heads: 40,
+            kv_heads: 8,
+            ffn_hidden: 27648,
+            vocab: 152_064,
+            active_frac: 1.0,
+            params_b: 32.5,
+            zipf_s: 1.08,
+        }
+    }
+
+    pub fn llama31_70b() -> ModelSpec {
+        ModelSpec {
+            name: "llama-3.1-70b",
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            ffn_hidden: 28672,
+            vocab: 128_256,
+            active_frac: 1.0,
+            params_b: 70.6,
+            zipf_s: 1.10,
+        }
+    }
+
+    pub fn qwen25_72b() -> ModelSpec {
+        ModelSpec {
+            name: "qwen2.5-72b",
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            ffn_hidden: 29568,
+            vocab: 152_064,
+            active_frac: 1.0,
+            params_b: 72.7,
+            zipf_s: 1.07,
+        }
+    }
+
+    pub fn qwen3_235b_a22b() -> ModelSpec {
+        ModelSpec {
+            name: "qwen3-235b-a22b",
+            layers: 94,
+            hidden: 4096,
+            heads: 64,
+            kv_heads: 4,
+            ffn_hidden: 12288,
+            vocab: 151_936,
+            active_frac: 22.0 / 235.0,
+            params_b: 235.0,
+            zipf_s: 1.05,
+        }
+    }
+
+    pub fn deepseek_v3() -> ModelSpec {
+        ModelSpec {
+            name: "deepseek-v3",
+            layers: 61,
+            hidden: 7168,
+            heads: 128,
+            kv_heads: 128,
+            ffn_hidden: 18432,
+            vocab: 129_280,
+            active_frac: 37.0 / 671.0,
+            params_b: 671.0,
+            zipf_s: 1.06,
+        }
+    }
+
+    pub fn qwen3_coder_480b() -> ModelSpec {
+        ModelSpec {
+            name: "qwen3-coder-480b-a35b",
+            layers: 62,
+            hidden: 6144,
+            heads: 96,
+            kv_heads: 8,
+            ffn_hidden: 25600,
+            vocab: 151_936,
+            active_frac: 35.0 / 480.0,
+            params_b: 480.0,
+            zipf_s: 1.04,
+        }
+    }
+
+    /// All paper evaluation models.
+    pub fn paper_models() -> Vec<ModelSpec> {
+        vec![
+            Self::qwq_32b(),
+            Self::llama31_70b(),
+            Self::qwen25_72b(),
+            Self::qwen3_235b_a22b(),
+            Self::deepseek_v3(),
+            Self::qwen3_coder_480b(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        let all = [
+            Self::tiny_e2e(),
+            Self::micro_test(),
+            Self::qwq_32b(),
+            Self::llama31_70b(),
+            Self::qwen25_72b(),
+            Self::qwen3_235b_a22b(),
+            Self::deepseek_v3(),
+            Self::qwen3_coder_480b(),
+        ];
+        all.into_iter()
+            .find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Active parameters per token (for decode GEMM flops), in units of
+    /// parameters.
+    pub fn active_params(&self) -> f64 {
+        self.params_b * 1e9 * self.active_frac
+    }
+
+    /// Per-token decode FLOPs ≈ 2 × active params (multiply+add per weight).
+    pub fn decode_flops_per_token(&self) -> f64 {
+        2.0 * self.active_params()
+    }
+
+    /// Head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// KV bytes per token (bf16): 2 bytes × 2 (K and V) × layers × kv_heads × head_dim.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * 2 * self.layers * self.kv_heads * self.head_dim()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name_case_insensitive() {
+        assert_eq!(ModelSpec::by_name("QwQ-32B").unwrap().name, "qwq-32b");
+        assert!(ModelSpec::by_name("missing").is_none());
+    }
+
+    #[test]
+    fn paper_models_have_large_vocabs() {
+        // §2.3: the trend SIMPLE targets — every evaluated model has V ≥ 128k.
+        for m in ModelSpec::paper_models() {
+            assert!(m.vocab >= 128_000, "{} vocab {}", m.name, m.vocab);
+        }
+    }
+
+    #[test]
+    fn moe_activation_reduces_decode_flops() {
+        let dense = ModelSpec::qwen25_72b();
+        let moe = ModelSpec::qwen3_235b_a22b();
+        // 235B MoE activates ~22B — fewer decode FLOPs than dense 72B.
+        assert!(moe.decode_flops_per_token() < dense.decode_flops_per_token());
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in ModelSpec::paper_models() {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_positive_and_sane() {
+        let m = ModelSpec::llama31_70b();
+        // GQA: 8 kv heads × 128 head_dim × 80 layers × 4 bytes = 327,680 B/token
+        assert_eq!(m.kv_bytes_per_token(), 327_680.0);
+    }
+}

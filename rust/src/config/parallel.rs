@@ -1,0 +1,101 @@
+//! Tensor/pipeline parallelism configuration (paper Table 2 presets).
+
+use super::{ModelSpec, PlatformSpec};
+
+/// TP degree t × PP depth p.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(tp: usize, pp: usize) -> Self {
+        assert!(tp >= 1 && pp >= 1);
+        ParallelConfig { tp, pp }
+    }
+
+    /// Total GPUs t·p.
+    pub fn world_size(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// Whether this deployment spans hosts on the given platform.
+    pub fn is_multi_host(&self, platform: &PlatformSpec) -> bool {
+        self.world_size() > platform.gpus_per_node
+    }
+
+    /// Paper Table 2: the TP/PP degrees per (model, platform); `None` where
+    /// the table shows "—" (too large, or fits a single GPU).
+    pub fn paper_preset(model: &ModelSpec, platform: &PlatformSpec) -> Option<ParallelConfig> {
+        let cfg = match (model.name, platform.name) {
+            ("qwq-32b", "l40") => (4, 1),
+            ("llama-3.1-70b", "l40") | ("llama-3.1-70b", "h100") => (4, 2),
+            ("qwen2.5-72b", "l40") | ("qwen2.5-72b", "h100") => (4, 2),
+            ("qwen3-235b-a22b", "l40") | ("qwen3-235b-a22b", "h100") => (4, 4),
+            ("qwen3-235b-a22b", "b200") => (4, 2),
+            ("deepseek-v3", "h100") => (4, 4),
+            ("deepseek-v3", "b200") => (4, 2),
+            ("qwen3-coder-480b-a35b", "b200") => (4, 2),
+            _ => return None,
+        };
+        Some(ParallelConfig::new(cfg.0, cfg.1))
+    }
+
+    /// All (model, preset) pairs evaluated on a platform — the x-axis of
+    /// Figure 3's per-platform panels.
+    pub fn paper_matrix(platform: &PlatformSpec) -> Vec<(ModelSpec, ParallelConfig)> {
+        ModelSpec::paper_models()
+            .into_iter()
+            .filter_map(|m| Self::paper_preset(&m, platform).map(|p| (m, p)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_size() {
+        assert_eq!(ParallelConfig::new(4, 2).world_size(), 8);
+    }
+
+    #[test]
+    fn paper_presets_match_table2() {
+        let l40 = PlatformSpec::l40();
+        let h100 = PlatformSpec::h100();
+        let b200 = PlatformSpec::b200();
+        assert_eq!(
+            ParallelConfig::paper_preset(&ModelSpec::qwq_32b(), &l40),
+            Some(ParallelConfig::new(4, 1))
+        );
+        // QwQ-32B not evaluated on H100/B200 (single-GPU there).
+        assert_eq!(ParallelConfig::paper_preset(&ModelSpec::qwq_32b(), &h100), None);
+        assert_eq!(
+            ParallelConfig::paper_preset(&ModelSpec::qwen3_235b_a22b(), &l40),
+            Some(ParallelConfig::new(4, 4))
+        );
+        assert_eq!(
+            ParallelConfig::paper_preset(&ModelSpec::deepseek_v3(), &b200),
+            Some(ParallelConfig::new(4, 2))
+        );
+        // DeepSeek V3 too large for L40 (>16 GPUs)
+        assert_eq!(ParallelConfig::paper_preset(&ModelSpec::deepseek_v3(), &l40), None);
+    }
+
+    #[test]
+    fn matrix_per_platform_counts() {
+        // Table 2: L40 evaluates 4 models, H100 4 models, B200 3 models.
+        assert_eq!(ParallelConfig::paper_matrix(&PlatformSpec::l40()).len(), 4);
+        assert_eq!(ParallelConfig::paper_matrix(&PlatformSpec::h100()).len(), 4);
+        assert_eq!(ParallelConfig::paper_matrix(&PlatformSpec::b200()).len(), 3);
+    }
+
+    #[test]
+    fn multi_host_detection() {
+        let h100 = PlatformSpec::h100();
+        assert!(!ParallelConfig::new(4, 2).is_multi_host(&h100)); // 8 = one node
+        assert!(ParallelConfig::new(4, 4).is_multi_host(&h100)); // 16 = two nodes
+    }
+}

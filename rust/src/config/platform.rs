@@ -1,0 +1,138 @@
+//! Platform specifications (paper Table 1) used by the distributed timing
+//! simulator. Numbers are public datasheet values; the simulator cares about
+//! *ratios* (compute vs bandwidth vs interconnect), which is what shapes the
+//! paper's figures.
+
+/// One GPU-node platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    pub gpus_per_node: usize,
+    /// Dense bf16 TFLOPs per GPU (no sparsity).
+    pub tflops_bf16: f64,
+    /// HBM bandwidth per GPU, GB/s.
+    pub hbm_gbps: f64,
+    /// GPU memory per device, GB.
+    pub gpu_mem_gb: f64,
+    /// Intra-node interconnect bandwidth per GPU, GB/s (NVLink or PCIe).
+    pub intra_gbps: f64,
+    /// Intra-node per-message latency, µs.
+    pub intra_lat_us: f64,
+    /// Inter-node network bandwidth per host, GB/s.
+    pub inter_gbps: f64,
+    /// Inter-node per-message latency, µs.
+    pub inter_lat_us: f64,
+    /// Host CPU cores (Table 1).
+    pub cpu_cores: usize,
+    /// Host memory, GB.
+    pub host_mem_gb: f64,
+    /// Host memory bandwidth, GB/s (per socket aggregate) — bounds the
+    /// CPU decision plane's O(V) scans.
+    pub host_bw_gbps: f64,
+}
+
+impl PlatformSpec {
+    /// L40 node: PCIe 4.0 intra-node, 200 Gbps network, 128 Xeon 8358 cores.
+    pub fn l40() -> PlatformSpec {
+        PlatformSpec {
+            name: "l40",
+            gpus_per_node: 8,
+            tflops_bf16: 90.5,
+            hbm_gbps: 864.0,
+            gpu_mem_gb: 48.0,
+            intra_gbps: 32.0, // PCIe 4.0 x16
+            intra_lat_us: 10.0,
+            inter_gbps: 25.0, // 200 Gbps
+            inter_lat_us: 15.0,
+            cpu_cores: 128,
+            host_mem_gb: 2048.0,
+            host_bw_gbps: 400.0,
+        }
+    }
+
+    /// H100 node: NVLink, 8×400 Gbps, 192 Xeon 8468 cores.
+    pub fn h100() -> PlatformSpec {
+        PlatformSpec {
+            name: "h100",
+            gpus_per_node: 8,
+            tflops_bf16: 989.0,
+            hbm_gbps: 3350.0,
+            gpu_mem_gb: 80.0,
+            intra_gbps: 450.0, // NVLink 4
+            intra_lat_us: 3.0,
+            inter_gbps: 400.0, // 8×400 Gbps aggregate
+            inter_lat_us: 8.0,
+            cpu_cores: 192,
+            host_mem_gb: 2048.0,
+            host_bw_gbps: 600.0,
+        }
+    }
+
+    /// B200 node: NVLink 5, 8×400 Gbps, 256 Xeon 6767P cores.
+    pub fn b200() -> PlatformSpec {
+        PlatformSpec {
+            name: "b200",
+            gpus_per_node: 8,
+            tflops_bf16: 2250.0,
+            hbm_gbps: 8000.0,
+            gpu_mem_gb: 180.0,
+            intra_gbps: 900.0, // NVLink 5
+            intra_lat_us: 2.0,
+            inter_gbps: 400.0,
+            inter_lat_us: 8.0,
+            cpu_cores: 256,
+            host_mem_gb: 2048.0,
+            host_bw_gbps: 800.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<PlatformSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "l40" => Some(Self::l40()),
+            "h100" => Some(Self::h100()),
+            "b200" => Some(Self::b200()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<PlatformSpec> {
+        vec![Self::l40(), Self::h100(), Self::b200()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(PlatformSpec::by_name("H100").unwrap().name, "h100");
+        assert!(PlatformSpec::by_name("a100").is_none());
+    }
+
+    #[test]
+    fn generations_get_faster() {
+        // The Amdahl-drift premise: each generation accelerates the data
+        // plane (FLOPs and HBM), which *grows* the sampling fraction.
+        let (l40, h100, b200) = (PlatformSpec::l40(), PlatformSpec::h100(), PlatformSpec::b200());
+        assert!(l40.tflops_bf16 < h100.tflops_bf16);
+        assert!(h100.tflops_bf16 < b200.tflops_bf16);
+        assert!(l40.hbm_gbps < h100.hbm_gbps);
+        assert!(h100.hbm_gbps < b200.hbm_gbps);
+    }
+
+    #[test]
+    fn l40_is_pcie_era() {
+        // §7.3 attributes L40's easier overlap to its slower data plane.
+        let l40 = PlatformSpec::l40();
+        let h100 = PlatformSpec::h100();
+        assert!(l40.intra_gbps < h100.intra_gbps / 5.0);
+    }
+
+    #[test]
+    fn table1_memory_sizes() {
+        assert_eq!(PlatformSpec::l40().gpu_mem_gb, 48.0);
+        assert_eq!(PlatformSpec::h100().gpu_mem_gb, 80.0);
+        assert_eq!(PlatformSpec::b200().gpu_mem_gb, 180.0);
+    }
+}

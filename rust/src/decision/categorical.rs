@@ -1,0 +1,135 @@
+//! Categorical token draws from pre-generated uniform variates.
+//!
+//! Determinism (§5.1): the engine pre-generates uniforms with the
+//! counter-based [`crate::rng::Philox`] keyed on (engine seed, sequence id,
+//! iteration), so the drawn token is independent of which sampler handles
+//! the sequence and of batch composition — sequence-parallel outcomes match
+//! the single-worker stream exactly.
+
+use super::filter::Truncated;
+
+/// Inverse-CDF draw over a truncated subset: returns the *subset index*.
+/// `u ∈ [0,1)`. Single O(|K|) pass, no cumulative table materialized.
+#[inline]
+pub fn draw_index(weights: &[f64], sum: f64, u: f64) -> usize {
+    debug_assert!(!weights.is_empty());
+    let target = u * sum;
+    let mut acc = 0.0f64;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        if target < acc {
+            return i;
+        }
+    }
+    weights.len() - 1 // guard for u ~ 1 under fp rounding
+}
+
+/// Draw a token id from a truncated distribution, remapping the subset index
+/// through the index map π_b back to the full vocabulary.
+#[inline]
+pub fn draw_token(t: &Truncated, u: f64) -> u32 {
+    t.ids[draw_index(&t.weights, t.sum, u)]
+}
+
+/// The per-(sequence, iteration) uniform variate used for the final draw
+/// plus the SHVS accept/reject test. Uses a dedicated Philox substream per
+/// sequence; the iteration indexes within the stream.
+pub struct VariateSource {
+    engine_seed: u64,
+}
+
+impl VariateSource {
+    pub fn new(engine_seed: u64) -> Self {
+        VariateSource { engine_seed }
+    }
+
+    /// Uniforms for (sequence, iteration): (u_select, u_accept, u_fallback).
+    /// All three are pinned so the fast/slow path choice never perturbs the
+    /// stream of later iterations.
+    pub fn uniforms(&self, request_seed: u64, seq_id: u64, iteration: u64) -> (f64, f64, f64) {
+        let key = self
+            .engine_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(request_seed);
+        let mut rng = crate::rng::Philox::at(
+            key,
+            ((seq_id as u128) << 64) | ((iteration as u128) << 2),
+        );
+        (rng.next_f64(), rng.next_f64(), rng.next_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decision::filter::truncate;
+    use crate::decision::params::SamplingParams;
+
+    #[test]
+    fn draw_index_respects_cdf() {
+        let w = [0.25f64, 0.5, 0.25];
+        let sum = 1.0;
+        assert_eq!(draw_index(&w, sum, 0.0), 0);
+        assert_eq!(draw_index(&w, sum, 0.24), 0);
+        assert_eq!(draw_index(&w, sum, 0.25), 1);
+        assert_eq!(draw_index(&w, sum, 0.74), 1);
+        assert_eq!(draw_index(&w, sum, 0.75), 2);
+        assert_eq!(draw_index(&w, sum, 0.999999), 2);
+    }
+
+    #[test]
+    fn draw_index_handles_unnormalized() {
+        let w = [2.0f64, 6.0];
+        assert_eq!(draw_index(&w, 8.0, 0.2), 0);
+        assert_eq!(draw_index(&w, 8.0, 0.3), 1);
+    }
+
+    #[test]
+    fn empirical_frequencies_match_probs() {
+        let logits = [0.0f32, 1.0, 2.0];
+        let t = truncate(
+            logits.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect(),
+            &SamplingParams::default(),
+        );
+        let mut rng = crate::rng::Philox::new(77);
+        let n = 200_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[draw_token(&t, rng.next_f64()) as usize] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - t.prob(i)).abs() < 0.005, "i={i} emp={emp} p={}", t.prob(i));
+        }
+    }
+
+    #[test]
+    fn variates_are_deterministic_and_distinct() {
+        let vs = VariateSource::new(42);
+        let a = vs.uniforms(0, 3, 10);
+        let b = vs.uniforms(0, 3, 10);
+        assert_eq!(a, b);
+        let c = vs.uniforms(0, 3, 11);
+        assert_ne!(a, c);
+        let d = vs.uniforms(0, 4, 10);
+        assert_ne!(a, d);
+        let e = vs.uniforms(1, 3, 10);
+        assert_ne!(a, e);
+        for u in [a.0, a.1, a.2] {
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn variates_independent_of_worker_order() {
+        // The whole point of §5.1 determinism: any sampler computing the
+        // variates for (seq, iter) gets the same values.
+        let vs1 = VariateSource::new(7);
+        let vs2 = VariateSource::new(7);
+        for seq in 0..8u64 {
+            for it in 0..8u64 {
+                assert_eq!(vs1.uniforms(5, seq, it), vs2.uniforms(5, seq, it));
+            }
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Online, QoS-aware hot-vocab controller — the paper's future-work item
+//! (i) in §9: "online, QoS-aware controllers that adapt H using the sizing
+//! model".
+//!
+//! The static `H*` of §5.4 is optimal for the *offline* trace; under domain
+//! shift the realized acceptance ᾱ drops and SHVS degrades toward full-V
+//! scans (§9 limitations). This controller closes the loop:
+//!
+//! 1. Observe the realized acceptance rate over a sliding window.
+//! 2. Re-anchor the sizing model's ᾱ(H) curve by a multiplicative shift
+//!    that matches the observation at the current H.
+//! 3. Re-solve for H* and step toward it, rate-limited to avoid
+//!    oscillation, bounded so the decision plane stays under the cycle
+//!    budget F(H) ≤ T_cycle (the §5.4 deployment rule).
+
+use super::sizing::SizingModel;
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Decisions per control period.
+    pub window: u64,
+    /// Max relative H change per period (rate limiting).
+    pub max_step_frac: f64,
+    /// Acceptance deadband: |observed − predicted| below this is noise.
+    pub deadband: f64,
+    /// Keep F(H) at or below this budget (seconds); 0 disables the check.
+    pub cycle_budget_s: f64,
+    /// Hard bounds on H.
+    pub h_min: usize,
+    pub h_max: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            window: 2048,
+            max_step_frac: 0.25,
+            deadband: 0.02,
+            cycle_budget_s: 0.0,
+            h_min: 64,
+            h_max: usize::MAX,
+        }
+    }
+}
+
+/// Observed decision outcomes within a window.
+#[derive(Debug, Clone, Copy, Default)]
+struct WindowStats {
+    decisions: u64,
+    accepted: u64,
+    alpha_sum: f64,
+}
+
+/// The adaptive controller.
+#[derive(Debug)]
+pub struct HotVocabController {
+    cfg: ControllerConfig,
+    sizing: SizingModel,
+    current_h: usize,
+    window: WindowStats,
+    /// Multiplicative correction applied to ᾱ(H) (1.0 = offline model).
+    alpha_scale: f64,
+    /// Number of completed control periods.
+    pub periods: u64,
+    /// History of (period, H, observed ᾱ) for observability.
+    pub history: Vec<(u64, usize, f64)>,
+}
+
+impl HotVocabController {
+    pub fn new(cfg: ControllerConfig, sizing: SizingModel, initial_h: usize) -> Self {
+        let h = initial_h.clamp(cfg.h_min, cfg.h_max.min(sizing.vocab - 1));
+        HotVocabController {
+            cfg,
+            sizing,
+            current_h: h,
+            window: WindowStats::default(),
+            alpha_scale: 1.0,
+            periods: 0,
+            history: Vec::new(),
+        }
+    }
+
+    /// Current hot-vocab size.
+    pub fn h(&self) -> usize {
+        self.current_h
+    }
+
+    /// The effective (re-anchored) hit-ratio estimate at a given H.
+    pub fn alpha_estimate(&self, h: f64) -> f64 {
+        (self.sizing.alpha.eval(h) * self.alpha_scale).clamp(0.0, 1.0)
+    }
+
+    /// Expected decision cost with the re-anchored ᾱ.
+    pub fn f_adapted(&self, h: f64) -> f64 {
+        let a = self.alpha_estimate(h);
+        let v = self.sizing.vocab as f64;
+        self.sizing.c0 + self.sizing.c * (a * h + (1.0 - a) * (v - h))
+    }
+
+    /// Record one decision outcome (α from [`super::shvs::Decision`]).
+    /// Returns `Some(new_h)` when a control period elapses and H changes.
+    pub fn observe(&mut self, alpha: f64, accepted: bool) -> Option<usize> {
+        self.window.decisions += 1;
+        self.window.alpha_sum += alpha;
+        if accepted {
+            self.window.accepted += 1;
+        }
+        if self.window.decisions < self.cfg.window {
+            return None;
+        }
+        let observed = self.window.alpha_sum / self.window.decisions as f64;
+        self.window = WindowStats::default();
+        self.periods += 1;
+        self.history.push((self.periods, self.current_h, observed));
+
+        // Re-anchor ᾱ at the current H.
+        let predicted = self.sizing.alpha.eval(self.current_h as f64);
+        if predicted > 1e-9 && (observed - self.alpha_estimate(self.current_h as f64)).abs()
+            > self.cfg.deadband
+        {
+            self.alpha_scale = (observed / predicted).clamp(0.25, 2.0);
+        }
+
+        // Re-solve argmin F under the adapted curve (coarse grid — the
+        // valley is broad, §7.5).
+        let (lo, hi) = self.sizing.alpha.domain();
+        let lo = lo.max(self.cfg.h_min as f64);
+        let hi = hi.min(self.cfg.h_max as f64).min((self.sizing.vocab - 1) as f64);
+        let steps = 128;
+        let mut best_h = self.current_h as f64;
+        let mut best_f = f64::INFINITY;
+        let mut best_feasible: Option<(f64, f64)> = None;
+        for i in 0..=steps {
+            let h = lo + (hi - lo) * i as f64 / steps as f64;
+            let f = self.f_adapted(h);
+            if f < best_f {
+                best_f = f;
+                best_h = h;
+            }
+            if self.cfg.cycle_budget_s > 0.0 && f <= self.cfg.cycle_budget_s {
+                if best_feasible.map_or(true, |(bf, _)| f < bf) {
+                    best_feasible = Some((f, h));
+                }
+            }
+        }
+        // Prefer the cheapest H inside the overlap budget F(H) ≤ T_cycle;
+        // if nothing is feasible, degrade gracefully to the global argmin.
+        if self.cfg.cycle_budget_s > 0.0 {
+            if let Some((_, h)) = best_feasible {
+                best_h = h;
+            }
+        }
+
+        // Rate-limited step toward the target.
+        let max_step = (self.current_h as f64 * self.cfg.max_step_frac).max(1.0);
+        let delta = (best_h - self.current_h as f64).clamp(-max_step, max_step);
+        let new_h = ((self.current_h as f64 + delta).round() as usize)
+            .clamp(self.cfg.h_min, self.cfg.h_max.min(self.sizing.vocab - 1));
+        if new_h != self.current_h {
+            self.current_h = new_h;
+            Some(new_h)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decision::sizing::zipf_alpha_knots;
+
+    fn sizing(vocab: usize) -> SizingModel {
+        let knots = zipf_alpha_knots(vocab, 1.1, 20);
+        let cost: Vec<(f64, f64)> = knots
+            .iter()
+            .map(|&(h, _)| (h, 1.0e-8 * h + 8.0e-6))
+            .collect();
+        SizingModel::fit(&cost, &knots, vocab)
+    }
+
+    fn run_periods(
+        ctl: &mut HotVocabController,
+        periods: usize,
+        observed_alpha: impl Fn(usize) -> f64,
+    ) {
+        for _ in 0..periods {
+            for _ in 0..ctl.cfg.window {
+                let a = observed_alpha(ctl.h());
+                ctl.observe(a, a > 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn converges_near_h_star_when_model_is_right() {
+        let s = sizing(100_000);
+        let h_star = s.h_star();
+        let alpha = s.alpha.clone();
+        let mut ctl = HotVocabController::new(
+            ControllerConfig { window: 64, ..Default::default() },
+            s,
+            512,
+        );
+        run_periods(&mut ctl, 40, |h| alpha.eval(h as f64));
+        let h = ctl.h() as f64;
+        // broad valley: F at converged H within 10% of F at H*
+        let f_conv = ctl.f_adapted(h);
+        let f_star = ctl.f_adapted(h_star as f64);
+        assert!(
+            f_conv < f_star * 1.1,
+            "converged H={h} F={f_conv:.3e} vs H*={h_star} F={f_star:.3e}"
+        );
+    }
+
+    #[test]
+    fn domain_shift_grows_h() {
+        // Observed acceptance is consistently LOWER than the offline model
+        // (domain shift): the controller should re-anchor and increase H.
+        let s = sizing(100_000);
+        let h0 = s.h_star();
+        let alpha = s.alpha.clone();
+        let mut ctl = HotVocabController::new(
+            ControllerConfig { window: 64, ..Default::default() },
+            s,
+            h0,
+        );
+        run_periods(&mut ctl, 30, |h| 0.6 * alpha.eval(h as f64));
+        assert!(
+            ctl.h() > h0,
+            "H should grow under shift: {} -> {}",
+            h0,
+            ctl.h()
+        );
+        assert!(ctl.alpha_scale < 0.9, "scale {}", ctl.alpha_scale);
+    }
+
+    #[test]
+    fn hot_distribution_shrinks_h() {
+        // Observed acceptance HIGHER than modeled: smaller H suffices.
+        let s = sizing(100_000);
+        let alpha = s.alpha.clone();
+        let h0 = (s.h_star() * 2).min(40_000);
+        let mut ctl = HotVocabController::new(
+            ControllerConfig { window: 64, ..Default::default() },
+            s,
+            h0,
+        );
+        run_periods(&mut ctl, 30, |h| (1.3 * alpha.eval(h as f64)).min(1.0));
+        assert!(ctl.h() < h0, "H should shrink: {} -> {}", h0, ctl.h());
+    }
+
+    #[test]
+    fn rate_limit_bounds_per_period_change() {
+        let s = sizing(50_000);
+        let mut ctl = HotVocabController::new(
+            ControllerConfig { window: 8, max_step_frac: 0.1, ..Default::default() },
+            s,
+            1000,
+        );
+        let before = ctl.h();
+        for _ in 0..8 {
+            ctl.observe(0.05, false); // terrible acceptance
+        }
+        let after = ctl.h();
+        assert!(after as f64 <= before as f64 * 1.1 + 1.0, "{before} -> {after}");
+    }
+
+    #[test]
+    fn cycle_budget_caps_h() {
+        let s = sizing(100_000);
+        // budget slightly above the achievable minimum: a feasible band
+        // exists around H*, and the controller must move into it.
+        let min_f = (0..200)
+            .map(|i| s.f(64.0 + i as f64 * 400.0))
+            .fold(f64::INFINITY, f64::min);
+        let budget = min_f * 1.2;
+        let alpha = s.alpha.clone();
+        let mut ctl = HotVocabController::new(
+            ControllerConfig {
+                window: 16,
+                cycle_budget_s: budget,
+                ..Default::default()
+            },
+            s,
+            256, // far below the feasible band
+        );
+        run_periods(&mut ctl, 40, |h| alpha.eval(h as f64));
+        assert!(
+            ctl.f_adapted(ctl.h() as f64) <= budget * 1.05,
+            "H={} F={:.3e} violates budget {budget:.3e}",
+            ctl.h(),
+            ctl.f_adapted(ctl.h() as f64)
+        );
+    }
+
+    #[test]
+    fn history_records_periods() {
+        let s = sizing(10_000);
+        let mut ctl =
+            HotVocabController::new(ControllerConfig { window: 4, ..Default::default() }, s, 128);
+        for _ in 0..12 {
+            ctl.observe(0.8, true);
+        }
+        assert_eq!(ctl.periods, 3);
+        assert_eq!(ctl.history.len(), 3);
+    }
+}

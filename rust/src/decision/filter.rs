@@ -1,0 +1,387 @@
+//! Truncation-first filtering (§5.2).
+//!
+//! Composes the enabled constraints (allow-list, top-k, nucleus top-p,
+//! min-p) into the per-sequence subset `K_b` with its index map
+//! `π_b : {1..|K_b|} → {1..V}`, *then* normalizes only on the subset:
+//! `softmax(z|_{K_b}/τ)` equals the masked softmax over V restricted to K_b
+//! (shift-invariance), but costs O(|K_b|) instead of O(V) downstream.
+//!
+//! Filter chain semantics follow vLLM/HF logits processors: top-k keeps the
+//! k largest logits; top-p keeps the smallest prefix of the *renormalized*
+//! remaining distribution with cumulative mass ≥ p; min-p drops tokens with
+//! p < min_p · p_max. Selection uses quickselect (average O(n)), not a full
+//! sort — the "single-pass, linear-time" claim of §5.2; the naive baseline's
+//! full-sort variant is kept for the Figure 10 ablation.
+
+use super::params::SamplingParams;
+
+/// The truncated candidate set: ids are the index map π_b back to the full
+/// vocabulary, `weights[i] = exp((z_i − z_max)/τ)` are unnormalized softmax
+/// weights over the subset, `sum` their total. Sampling draws from
+/// `weights/sum`; this *is* the truncated stable softmax.
+#[derive(Debug, Clone)]
+pub struct Truncated {
+    pub ids: Vec<u32>,
+    pub weights: Vec<f64>,
+    pub sum: f64,
+    /// Max (temperature-scaled) logit used as the stable-softmax shift.
+    pub z_max: f32,
+}
+
+impl Truncated {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+    /// Normalized probability of subset index i.
+    pub fn prob(&self, i: usize) -> f64 {
+        self.weights[i] / self.sum
+    }
+}
+
+/// Quickselect: partition `items` so the `k` largest-by-logit items occupy
+/// `items[..k]` (order within unspecified). Average O(n) via std's
+/// introselect (`select_nth_unstable_by`).
+pub fn select_top_k(items: &mut [(u32, f32)], k: usize) {
+    if k == 0 || k >= items.len() {
+        return;
+    }
+    items.select_nth_unstable_by(k - 1, |a, b| b.1.partial_cmp(&a.1).unwrap());
+}
+
+/// Apply the truncation-first chain to penalized candidates `(id, logit)`.
+/// `candidates` is consumed and reused as scratch.
+///
+/// For greedy requests (τ = 0) the result is the singleton argmax.
+pub fn truncate(mut candidates: Vec<(u32, f32)>, p: &SamplingParams) -> Truncated {
+    assert!(!candidates.is_empty(), "no candidates to sample from");
+
+    if p.is_greedy() {
+        let &(id, z) = candidates
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap();
+        return Truncated { ids: vec![id], weights: vec![1.0], sum: 1.0, z_max: z };
+    }
+
+    // 1. top-k (quickselect, O(n))
+    if p.top_k > 0 && p.top_k < candidates.len() {
+        select_top_k(&mut candidates, p.top_k);
+        candidates.truncate(p.top_k);
+    }
+
+    // 2. temperature + stable weights over the survivors
+    let inv_tau = 1.0 / p.temperature;
+    let z_max = candidates
+        .iter()
+        .map(|&(_, z)| z)
+        .fold(f32::NEG_INFINITY, f32::max);
+    let mut ids: Vec<u32> = Vec::with_capacity(candidates.len());
+    let mut weights: Vec<f64> = Vec::with_capacity(candidates.len());
+    let mut sum = 0.0f64;
+    for &(id, z) in &candidates {
+        let w = (((z - z_max) * inv_tau) as f64).exp();
+        ids.push(id);
+        weights.push(w);
+        sum += w;
+    }
+
+    // 3. nucleus top-p on the renormalized survivors
+    if p.top_p < 1.0 {
+        // sort subset desc by weight (O(k log k), k already small)
+        let mut order: Vec<usize> = (0..ids.len()).collect();
+        order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+        let threshold = p.top_p as f64 * sum;
+        let mut cum = 0.0;
+        let mut keep = Vec::with_capacity(order.len());
+        for &i in &order {
+            keep.push(i);
+            cum += weights[i];
+            if cum >= threshold {
+                break;
+            }
+        }
+        keep.sort_unstable(); // restore vocab order for determinism
+        let new_ids: Vec<u32> = keep.iter().map(|&i| ids[i]).collect();
+        let new_w: Vec<f64> = keep.iter().map(|&i| weights[i]).collect();
+        sum = new_w.iter().sum();
+        ids = new_ids;
+        weights = new_w;
+    }
+
+    // 4. min-p relative to the max weight: p_i ≥ min_p · p_max ⟺ w_i ≥ min_p · w_max
+    if p.min_p > 0.0 {
+        let w_max = weights.iter().cloned().fold(0.0f64, f64::max);
+        let cut = p.min_p as f64 * w_max;
+        let mut new_ids = Vec::with_capacity(ids.len());
+        let mut new_w = Vec::with_capacity(ids.len());
+        sum = 0.0;
+        for (i, &w) in weights.iter().enumerate() {
+            if w >= cut {
+                new_ids.push(ids[i]);
+                new_w.push(w);
+                sum += w;
+            }
+        }
+        ids = new_ids;
+        weights = new_w;
+    }
+
+    debug_assert!(!ids.is_empty());
+    Truncated { ids, weights, sum, z_max }
+}
+
+/// Naive full-sort variant (the "vLLM CPU" baseline of §7.4): sorts the
+/// whole candidate list O(V log V) before truncation. Identical output
+/// distribution to [`truncate`]; exists for the ablation ladder.
+pub fn truncate_sort_based(mut candidates: Vec<(u32, f32)>, p: &SamplingParams) -> Truncated {
+    if p.is_greedy() {
+        return truncate(candidates, p);
+    }
+    candidates.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if p.top_k > 0 && p.top_k < candidates.len() {
+        candidates.truncate(p.top_k);
+    }
+    // Delegate to the same weight/top-p/min-p logic (already truncated by k).
+    let rest = SamplingParams { top_k: 0, ..p.clone() };
+    truncate(candidates, &rest)
+}
+
+/// Restrict candidates to an allow-list before truncation (constrained
+/// decoding). Returns the filtered (id, logit) list.
+pub fn apply_allow_list(
+    candidates: Vec<(u32, f32)>,
+    allowed: &[u32],
+) -> Vec<(u32, f32)> {
+    // Allow-lists are small; a sorted probe keeps this O(n log a).
+    let mut sorted = allowed.to_vec();
+    sorted.sort_unstable();
+    candidates
+        .into_iter()
+        .filter(|(id, _)| sorted.binary_search(id).is_ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands(logits: &[f32]) -> Vec<(u32, f32)> {
+        logits.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect()
+    }
+
+    /// Oracle: full masked softmax over V with sort-based filtering.
+    fn oracle_probs(logits: &[f32], p: &SamplingParams) -> Vec<f64> {
+        let n = logits.len();
+        let mut keep: Vec<bool> = vec![true; n];
+        // top-k
+        if p.top_k > 0 && p.top_k < n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            for &i in &idx[p.top_k..] {
+                keep[i] = false;
+            }
+        }
+        let probs_of = |keep: &[bool]| -> Vec<f64> {
+            let z_max = logits
+                .iter()
+                .zip(keep)
+                .filter(|(_, &k)| k)
+                .map(|(&z, _)| z)
+                .fold(f32::NEG_INFINITY, f32::max);
+            let mut w: Vec<f64> = logits
+                .iter()
+                .zip(keep)
+                .map(|(&z, &k)| {
+                    if k {
+                        (((z - z_max) / p.temperature) as f64).exp()
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let s: f64 = w.iter().sum();
+            for x in &mut w {
+                *x /= s;
+            }
+            w
+        };
+        // top-p on renormalized
+        if p.top_p < 1.0 {
+            let probs = probs_of(&keep);
+            let mut idx: Vec<usize> = (0..n).filter(|&i| keep[i]).collect();
+            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let mut cum = 0.0;
+            let mut nucleus = vec![false; n];
+            for &i in &idx {
+                nucleus[i] = true;
+                cum += probs[i];
+                if cum >= p.top_p as f64 {
+                    break;
+                }
+            }
+            keep = nucleus;
+        }
+        // min-p
+        if p.min_p > 0.0 {
+            let probs = probs_of(&keep);
+            let pmax = probs.iter().cloned().fold(0.0f64, f64::max);
+            for i in 0..n {
+                if keep[i] && probs[i] < p.min_p as f64 * pmax {
+                    keep[i] = false;
+                }
+            }
+        }
+        probs_of(&keep)
+    }
+
+    fn assert_matches_oracle(logits: &[f32], p: &SamplingParams) {
+        let t = truncate(cands(logits), p);
+        let oracle = oracle_probs(logits, p);
+        // subset probs must equal oracle at kept ids, zero elsewhere
+        let mut got = vec![0.0f64; logits.len()];
+        for (i, &id) in t.ids.iter().enumerate() {
+            got[id as usize] = t.prob(i);
+        }
+        for (i, (&g, &o)) in got.iter().zip(&oracle).enumerate() {
+            assert!(
+                (g - o).abs() < 1e-9,
+                "id {i}: got {g} oracle {o} (params {p:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn no_filter_equals_full_softmax() {
+        let logits = [1.0, 2.0, 3.0, -1.0, 0.5];
+        assert_matches_oracle(&logits, &SamplingParams::default());
+    }
+
+    #[test]
+    fn top_k_matches_oracle() {
+        let logits = [1.0, 5.0, 3.0, 2.0, 4.0, -2.0];
+        let p = SamplingParams { top_k: 3, ..Default::default() };
+        assert_matches_oracle(&logits, &p);
+    }
+
+    #[test]
+    fn top_p_matches_oracle() {
+        let logits = [0.0, 1.0, 2.0, 3.0, 4.0];
+        for top_p in [0.5, 0.9, 0.99] {
+            let p = SamplingParams { top_p, ..Default::default() };
+            assert_matches_oracle(&logits, &p);
+        }
+    }
+
+    #[test]
+    fn min_p_matches_oracle() {
+        let logits = [0.0, 1.0, 2.0, 5.0];
+        let p = SamplingParams { min_p: 0.1, ..Default::default() };
+        assert_matches_oracle(&logits, &p);
+    }
+
+    #[test]
+    fn full_chain_matches_oracle() {
+        let logits: Vec<f32> =
+            (0..64).map(|i| ((i * 37 % 64) as f32) / 7.0 - 3.0).collect();
+        let p = SamplingParams {
+            temperature: 0.7,
+            top_k: 20,
+            top_p: 0.9,
+            min_p: 0.05,
+            ..Default::default()
+        };
+        assert_matches_oracle(&logits, &p);
+    }
+
+    #[test]
+    fn sort_based_equals_quickselect_path() {
+        let logits: Vec<f32> = (0..100).map(|i| ((i * 17 % 100) as f32) * 0.1).collect();
+        let p = SamplingParams {
+            temperature: 0.8,
+            top_k: 13,
+            top_p: 0.92,
+            min_p: 0.01,
+            ..Default::default()
+        };
+        let a = truncate(cands(&logits), &p);
+        let b = truncate_sort_based(cands(&logits), &p);
+        let to_map = |t: &Truncated| -> std::collections::BTreeMap<u32, u64> {
+            t.ids
+                .iter()
+                .zip(&t.weights)
+                .map(|(&id, &w)| (id, ((w / t.sum) * 1e12) as u64))
+                .collect()
+        };
+        assert_eq!(to_map(&a), to_map(&b));
+    }
+
+    #[test]
+    fn greedy_returns_argmax_singleton() {
+        let logits = [0.1, 7.0, 3.0];
+        let t = truncate(cands(&logits), &SamplingParams::greedy());
+        assert_eq!(t.ids, vec![1]);
+        assert_eq!(t.len(), 1);
+        assert!((t.prob(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_top_k_partitions_correctly() {
+        let mut rng = crate::rng::Philox::new(31);
+        for n in [5usize, 64, 1000] {
+            for k in [1usize, 3, n / 2, n - 1] {
+                let mut items: Vec<(u32, f32)> = (0..n)
+                    .map(|i| (i as u32, rng.next_f32() * 100.0))
+                    .collect();
+                let mut sorted: Vec<f32> = items.iter().map(|&(_, z)| z).collect();
+                sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let kth = sorted[k - 1];
+                select_top_k(&mut items, k);
+                for &(_, z) in &items[..k] {
+                    assert!(z >= kth, "top-{k} of {n}: {z} < kth {kth}");
+                }
+                for &(_, z) in &items[k..] {
+                    assert!(z <= kth, "rest of top-{k} of {n}: {z} > kth {kth}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn select_top_k_with_duplicates() {
+        let mut items: Vec<(u32, f32)> =
+            vec![(0, 1.0), (1, 2.0), (2, 2.0), (3, 2.0), (4, 0.5), (5, 3.0)];
+        select_top_k(&mut items, 3);
+        let mut top: Vec<f32> = items[..3].iter().map(|&(_, z)| z).collect();
+        top.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(top, vec![3.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn allow_list_restricts() {
+        let c = cands(&[1.0, 2.0, 3.0, 4.0]);
+        let filtered = apply_allow_list(c, &[1, 3]);
+        let ids: Vec<u32> = filtered.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn truncation_preserves_relative_probs() {
+        // softmax on K equals masked softmax over V: ratios preserved.
+        let logits = [3.0f32, 1.0, 2.0, 0.0];
+        let p = SamplingParams { top_k: 2, ..Default::default() };
+        let t = truncate(cands(&logits), &p);
+        assert_eq!(t.ids, vec![0, 2]);
+        let ratio = t.prob(0) / t.prob(1);
+        let expect = ((3.0f64 - 2.0).exp()) / 1.0;
+        assert!((ratio - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_candidates_panic() {
+        truncate(Vec::new(), &SamplingParams::default());
+    }
+}

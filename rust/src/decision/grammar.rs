@@ -1,0 +1,262 @@
+//! Grammar-constrained decoding — the paper's future-work item (iii) in
+//! §9: "extending SHVS to structured/grammar-constrained decoding".
+//!
+//! A constraint is a byte-level DFA compiled from a regex (the same
+//! mechanism outlines/llguidance-style libraries use). At each decode step
+//! the constraint yields the set of token ids whose byte expansions keep
+//! the DFA alive; that set plugs into [`super::params::SamplingParams::allowed_tokens`]
+//! and flows through the exact allow-list path of the decision pipeline —
+//! composing with SHVS as §9 anticipates: with a constrained (often small)
+//! candidate set the sampler skips speculation and stays exact.
+
+use regex_automata::dfa::{dense, Automaton, StartKind};
+use regex_automata::util::primitives::StateID;
+use regex_automata::util::start::Config as StartConfig;
+use regex_automata::Anchored;
+
+/// A compiled token-level grammar constraint for a fixed vocabulary.
+pub struct GrammarConstraint {
+    /// Original pattern (for Debug/observability).
+    pattern: String,
+    dfa: dense::DFA<Vec<u32>>,
+    /// Byte expansion of each token id (empty = never allowed, e.g. specials
+    /// excluded from constrained output).
+    token_bytes: Vec<Vec<u8>>,
+    start: StateID,
+}
+
+/// Per-sequence constraint state (DFA state after the emitted bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConstraintState(StateID);
+
+impl GrammarConstraint {
+    /// Compile a regex pattern over a token vocabulary. The pattern is
+    /// anchored: the whole generated text (so far) must stay a viable
+    /// prefix of a match.
+    pub fn new(pattern: &str, token_bytes: Vec<Vec<u8>>) -> crate::Result<GrammarConstraint> {
+        // End-anchor with \z so that DFA dead states mean "no completion of
+        // the grammar is reachable" (viable-prefix semantics); an un-anchored
+        // search DFA instead saturates in a match sink after the longest
+        // match and never dies.
+        let anchored = format!(r"(?:{pattern})\z");
+        let dfa = dense::Builder::new()
+            .configure(dense::Config::new().start_kind(StartKind::Anchored))
+            .build(&anchored)
+            .map_err(|e| anyhow::anyhow!("compiling grammar {pattern:?}: {e}"))?;
+        let start = dfa
+            .start_state(&StartConfig::new().anchored(Anchored::Yes))
+            .map_err(|e| anyhow::anyhow!("start state: {e}"))?;
+        Ok(GrammarConstraint { pattern: pattern.to_string(), dfa, token_bytes, start })
+    }
+
+    /// Initial state.
+    pub fn start(&self) -> ConstraintState {
+        ConstraintState(self.start)
+    }
+
+    /// Advance a state by one byte; `None` = dead (byte not viable).
+    fn step_byte(&self, state: StateID, byte: u8) -> Option<StateID> {
+        let next = self.dfa.next_state(state, byte);
+        if self.dfa.is_dead_state(next) {
+            None
+        } else {
+            Some(next)
+        }
+    }
+
+    /// Advance a state by a token; `None` if the token leaves the grammar.
+    pub fn advance(&self, state: ConstraintState, token: u32) -> Option<ConstraintState> {
+        let bytes = self.token_bytes.get(token as usize)?;
+        if bytes.is_empty() {
+            return None;
+        }
+        let mut s = state.0;
+        for &b in bytes {
+            s = self.step_byte(s, b)?;
+        }
+        Some(ConstraintState(s))
+    }
+
+    /// Whether the text accepted so far is a complete match (EOS legal).
+    pub fn is_match(&self, state: ConstraintState) -> bool {
+        // dense DFAs report matches from the *next* state on EOI.
+        let eoi = self.dfa.next_eoi_state(state.0);
+        self.dfa.is_match_state(eoi)
+    }
+
+    /// All token ids that keep the DFA alive from `state` — the allow-list
+    /// for this decode step. O(Σ |token bytes|) worst case; practical
+    /// grammars kill most tokens on their first byte, which short-circuits.
+    pub fn allowed_tokens(&self, state: ConstraintState) -> Vec<u32> {
+        // Precompute the 256 one-byte successors once per step.
+        let mut first: [Option<StateID>; 256] = [None; 256];
+        for b in 0..=255u8 {
+            first[b as usize] = self.step_byte(state.0, b);
+        }
+        let mut out = Vec::new();
+        'tok: for (id, bytes) in self.token_bytes.iter().enumerate() {
+            let Some((&b0, rest)) = bytes.split_first() else {
+                continue;
+            };
+            let Some(mut s) = first[b0 as usize] else {
+                continue;
+            };
+            for &b in rest {
+                match self.step_byte(s, b) {
+                    Some(n) => s = n,
+                    None => continue 'tok,
+                }
+            }
+            out.push(id as u32);
+        }
+        out
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.token_bytes.len()
+    }
+
+    pub fn pattern(&self) -> &str {
+        &self.pattern
+    }
+}
+
+impl std::fmt::Debug for GrammarConstraint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GrammarConstraint")
+            .field("pattern", &self.pattern)
+            .field("vocab", &self.token_bytes.len())
+            .finish()
+    }
+}
+
+/// Token byte table for the toy byte-level tokenizer
+/// ([`crate::engine::tokenizer`]): ids 3..259 are raw bytes, specials and
+/// out-of-range ids are unconstrained-illegal (empty expansion).
+pub fn byte_tokenizer_table(vocab: usize) -> Vec<Vec<u8>> {
+    (0..vocab)
+        .map(|id| {
+            if (3..259).contains(&id) {
+                vec![(id - 3) as u8]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(c: char) -> u32 {
+        3 + c as u32
+    }
+
+    fn digits_grammar() -> GrammarConstraint {
+        GrammarConstraint::new(r"[0-9]{1,3}(\.[0-9]{1,2})?", byte_tokenizer_table(300))
+            .unwrap()
+    }
+
+    #[test]
+    fn allowed_tokens_start_with_digits_only() {
+        let g = digits_grammar();
+        let allowed = g.allowed_tokens(g.start());
+        let chars: Vec<char> = allowed
+            .iter()
+            .map(|&t| ((t - 3) as u8) as char)
+            .collect();
+        assert_eq!(chars.len(), 10);
+        assert!(chars.iter().all(|c| c.is_ascii_digit()), "{chars:?}");
+    }
+
+    #[test]
+    fn advance_follows_the_grammar() {
+        let g = digits_grammar();
+        let s0 = g.start();
+        let s1 = g.advance(s0, tok('4')).expect("digit ok");
+        assert!(g.is_match(s1), "'4' is a complete match");
+        // after one digit: digits or '.' allowed
+        let allowed: Vec<char> = g
+            .allowed_tokens(s1)
+            .iter()
+            .map(|&t| ((t - 3) as u8) as char)
+            .collect();
+        assert!(allowed.contains(&'.'));
+        assert!(allowed.contains(&'7'));
+        assert!(!allowed.contains(&'x'));
+        // letters die immediately
+        assert!(g.advance(s0, tok('x')).is_none());
+    }
+
+    #[test]
+    fn bounded_repetition_enforced() {
+        let g = digits_grammar();
+        let mut s = g.start();
+        for c in ['1', '2', '3'] {
+            s = g.advance(s, tok(c)).unwrap();
+        }
+        // a 4th integer digit is illegal; only '.' continues
+        assert!(g.advance(s, tok('4')).is_none());
+        let s = g.advance(s, tok('.')).unwrap();
+        assert!(!g.is_match(s), "trailing dot incomplete");
+        let s = g.advance(s, tok('0')).unwrap();
+        assert!(g.is_match(s));
+    }
+
+    #[test]
+    fn specials_never_allowed() {
+        let g = digits_grammar();
+        let allowed = g.allowed_tokens(g.start());
+        assert!(allowed.iter().all(|&t| t >= 3));
+        assert!(g.advance(g.start(), 0).is_none()); // PAD
+        assert!(g.advance(g.start(), 299).is_none()); // beyond byte range
+    }
+
+    #[test]
+    fn json_ish_grammar_walks() {
+        let table = byte_tokenizer_table(300);
+        let g = GrammarConstraint::new(r#"\{"a": [0-9]+\}"#, table).unwrap();
+        let mut s = g.start();
+        for c in ['{', '"', 'a', '"', ':', ' ', '1', '2'] {
+            s = g.advance(s, tok(c)).unwrap_or_else(|| panic!("died at {c:?}"));
+        }
+        assert!(!g.is_match(s));
+        let s2 = g.advance(s, tok('}')).unwrap();
+        assert!(g.is_match(s2));
+        // and the allow-list at the brace point is exactly digits or '}'
+        let allowed: Vec<char> = g
+            .allowed_tokens(s)
+            .iter()
+            .map(|&t| ((t - 3) as u8) as char)
+            .collect();
+        assert!(allowed.contains(&'}') && allowed.contains(&'5'));
+        assert!(!allowed.contains(&'"'));
+    }
+
+    #[test]
+    fn composes_with_decision_pipeline_allow_list() {
+        use crate::decision::penalties::BatchHistory;
+        use crate::decision::{DecisionPipeline, SamplingParams};
+        use crate::tensor::{shard_row_major, Tensor2};
+
+        let vocab = 300;
+        let g = digits_grammar();
+        let allowed = g.allowed_tokens(g.start());
+        let logits: Vec<f32> = (0..vocab).map(|i| ((i * 31) % 97) as f32 * 0.05).collect();
+        let view = shard_row_major(&Tensor2::from_vec(1, vocab, logits), 2);
+        let params = SamplingParams {
+            allowed_tokens: Some(allowed.clone()),
+            temperature: 0.8,
+            ..Default::default()
+        };
+        let hist = BatchHistory::new(&[vec![]], 8);
+        let mut pipe =
+            DecisionPipeline::new(crate::config::DecisionVariant::Offloading, None, 1);
+        for it in 0..32 {
+            let d = pipe.decide(&view, 0, &hist, 0, &params, None, 0, it);
+            assert!(allowed.contains(&d.token), "token {} outside grammar", d.token);
+            assert!(g.advance(g.start(), d.token).is_some());
+        }
+    }
+}

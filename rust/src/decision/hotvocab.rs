@@ -1,0 +1,176 @@
+//! Hot-vocabulary construction (§5.3).
+//!
+//! The hot set `H ⊂ V` is model-dependent and built offline from traces:
+//! rank tokens by observed frequency and keep the top H. Membership tests
+//! are O(1) via a bitset; the sorted id list drives the O(H) hot-path scan.
+
+use crate::rng::zipf::ZipfMandelbrot;
+use crate::rng::Philox;
+use std::sync::Arc;
+
+/// An immutable hot set, shared across samplers.
+#[derive(Debug, Clone)]
+pub struct HotVocab {
+    /// Hot token ids, ascending.
+    ids: Vec<u32>,
+    /// Bitset over the vocabulary: bit v set ⇔ v ∈ H.
+    mask: Vec<u64>,
+    vocab: usize,
+}
+
+impl HotVocab {
+    /// Build from an explicit id list.
+    pub fn new(mut ids: Vec<u32>, vocab: usize) -> Self {
+        ids.sort_unstable();
+        ids.dedup();
+        assert!(
+            ids.last().map_or(true, |&v| (v as usize) < vocab),
+            "hot id out of vocab"
+        );
+        assert!(ids.len() < vocab, "hot set must be a strict subset");
+        let mut mask = vec![0u64; vocab.div_ceil(64)];
+        for &v in &ids {
+            mask[(v / 64) as usize] |= 1u64 << (v % 64);
+        }
+        HotVocab { ids, mask, vocab }
+    }
+
+    /// Build from trace token counts: the `h` most frequent ids (ties by id).
+    pub fn from_counts(counts: &[u64], h: usize) -> Self {
+        let vocab = counts.len();
+        let h = h.min(vocab.saturating_sub(1)).max(1);
+        let mut idx: Vec<u32> = (0..vocab as u32).collect();
+        idx.select_nth_unstable_by(h - 1, |&a, &b| {
+            counts[b as usize]
+                .cmp(&counts[a as usize])
+                .then(a.cmp(&b))
+        });
+        idx.truncate(h);
+        Self::new(idx, vocab)
+    }
+
+    /// Synthetic trace: draw `samples` tokens from a Zipf-shaped unigram
+    /// distribution over `vocab` (rank == id under `perm_seed`-driven
+    /// shuffling of ranks), then keep the top `h`. Models the paper's
+    /// offline trace profiling.
+    pub fn from_synthetic_trace(
+        vocab: usize,
+        h: usize,
+        zipf_s: f64,
+        samples: usize,
+        seed: u64,
+    ) -> Self {
+        let zipf = ZipfMandelbrot::zipf(vocab, zipf_s);
+        let mut rng = Philox::new(seed);
+        // rank -> id permutation (so hot ids are NOT simply 0..h)
+        let mut rank_to_id: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut rank_to_id);
+        let mut counts = vec![0u64; vocab];
+        for _ in 0..samples {
+            let r = zipf.sample(&mut rng);
+            counts[rank_to_id[r] as usize] += 1;
+        }
+        Self::from_counts(&counts, h)
+    }
+
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        let v = v as usize;
+        debug_assert!(v < self.vocab);
+        (self.mask[v / 64] >> (v % 64)) & 1 == 1
+    }
+
+    /// Sorted hot ids.
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+    pub fn tail_len(&self) -> usize {
+        self.vocab - self.ids.len()
+    }
+
+    pub fn into_arc(self) -> Arc<HotVocab> {
+        Arc::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership_and_sizes() {
+        let h = HotVocab::new(vec![5, 1, 3, 3], 10);
+        assert_eq!(h.ids(), &[1, 3, 5]);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.tail_len(), 7);
+        for v in 0..10u32 {
+            assert_eq!(h.contains(v), [1, 3, 5].contains(&v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn from_counts_takes_most_frequent() {
+        let counts = vec![5u64, 100, 2, 50, 50, 0];
+        let h = HotVocab::from_counts(&counts, 3);
+        // top-3 by count: 1(100), 3(50), 4(50)
+        assert_eq!(h.ids(), &[1, 3, 4]);
+    }
+
+    #[test]
+    fn from_counts_tie_break_by_id() {
+        let counts = vec![7u64, 7, 7, 7];
+        let h = HotVocab::from_counts(&counts, 2);
+        assert_eq!(h.ids(), &[0, 1]);
+    }
+
+    #[test]
+    fn synthetic_trace_hot_set_covers_zipf_head() {
+        let vocab = 2000;
+        let h = HotVocab::from_synthetic_trace(vocab, 200, 1.2, 50_000, 42);
+        assert_eq!(h.len(), 200);
+        // The hot set should capture most of the distribution's mass:
+        // re-draw from the same distribution and measure the hit rate.
+        let zipf = ZipfMandelbrot::zipf(vocab, 1.2);
+        let mut rng = Philox::new(42);
+        let mut rank_to_id: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut rank_to_id);
+        let mut hits = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            let id = rank_to_id[zipf.sample(&mut rng)];
+            if h.contains(id) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!(rate > 0.75, "hot hit rate {rate}");
+    }
+
+    #[test]
+    fn bitset_spans_word_boundaries() {
+        let h = HotVocab::new(vec![63, 64, 127, 128], 200);
+        assert!(h.contains(63) && h.contains(64) && h.contains(127) && h.contains(128));
+        assert!(!h.contains(62) && !h.contains(65) && !h.contains(199));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_vocab_ids() {
+        HotVocab::new(vec![10], 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_full_vocab_hot_set() {
+        HotVocab::new((0..10).collect(), 10);
+    }
+}

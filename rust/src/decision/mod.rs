@@ -1,0 +1,37 @@
+//! The decision plane — SIMPLE's core contribution.
+//!
+//! Modules map one-to-one onto the paper's §5:
+//! - [`service`] — sequence-parallel sampler service over shared-memory
+//!   rings (§5.1, §4.2).
+//! - [`penalties`] — column-wise, incrementally updated penalty state (§5.2).
+//! - [`filter`] — truncation-first top-k/top-p/min-p with index maps (§5.2).
+//! - [`shvs`] — speculative hot-vocab sampling with rejection-correctness
+//!   (§5.3); [`hotvocab`] builds the hot set, [`sizing`] chooses H* (§5.4).
+//! - [`pipeline`] — the per-sequence decision pipeline with the §7.4
+//!   ablation ladder (naive CPU → parallel → offloading → SHVS).
+//! - [`controller`] — online QoS-aware H adaptation (§9 future work i).
+//! - [`grammar`] — grammar-constrained decoding masks (§9 future work iii).
+//! - [`params`], [`softmax`], [`categorical`] — sampling controls, stable
+//!   softmax, and deterministic pre-generated variates (§5.1).
+
+pub mod categorical;
+pub mod controller;
+pub mod filter;
+pub mod grammar;
+pub mod hotvocab;
+pub mod params;
+pub mod penalties;
+pub mod pipeline;
+pub mod service;
+pub mod shvs;
+pub mod sizing;
+pub mod softmax;
+
+pub use controller::{ControllerConfig, HotVocabController};
+pub use grammar::GrammarConstraint;
+pub use hotvocab::HotVocab;
+pub use params::SamplingParams;
+pub use pipeline::DecisionPipeline;
+pub use service::{ColumnMeta, DecisionBatch, IterationTask, SamplerService};
+pub use shvs::{Decision, Precompute, ShvsSampler};
+pub use sizing::SizingModel;

@@ -1,0 +1,170 @@
+//! Sampling parameters — the full production control set the paper assumes
+//! enabled (§7.1): temperature, top-k, nucleus top-p, min-p, and the
+//! repetition/presence/frequency penalties, plus optional logit bias.
+
+use std::collections::BTreeMap;
+
+/// Per-request sampling controls (OpenAI-API-compatible semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature τ > 0 (0 is treated as greedy argmax).
+    pub temperature: f32,
+    /// Keep the k most likely tokens (0 = disabled).
+    pub top_k: usize,
+    /// Nucleus: keep the smallest prefix with cumulative mass ≥ p (1.0 = off).
+    pub top_p: f32,
+    /// Drop tokens with p < min_p · p_max (0.0 = off).
+    pub min_p: f32,
+    /// Multiplicative repetition penalty λ_rep ≥ 1 (1.0 = off); divides the
+    /// logit of seen tokens when positive, multiplies when negative (HF/vLLM
+    /// convention).
+    pub repetition_penalty: f32,
+    /// Additive presence penalty (subtracted once if the token appeared).
+    pub presence_penalty: f32,
+    /// Additive frequency penalty (subtracted × occurrence count).
+    pub frequency_penalty: f32,
+    /// Explicit per-token logit bias.
+    pub logit_bias: BTreeMap<u32, f32>,
+    /// Restrict sampling to this allow-list (constrained decoding), if set.
+    pub allowed_tokens: Option<Vec<u32>>,
+    /// Request RNG seed (combined with the engine seed + sequence id).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            min_p: 0.0,
+            repetition_penalty: 1.0,
+            presence_penalty: 0.0,
+            frequency_penalty: 0.0,
+            logit_bias: BTreeMap::new(),
+            allowed_tokens: None,
+            seed: 0,
+        }
+    }
+}
+
+impl SamplingParams {
+    /// The paper's evaluation setting (§7.1): all production knobs on.
+    pub fn production_default() -> Self {
+        SamplingParams {
+            temperature: 0.8,
+            top_k: 50,
+            top_p: 0.95,
+            min_p: 0.02,
+            repetition_penalty: 1.1,
+            presence_penalty: 0.1,
+            frequency_penalty: 0.1,
+            ..Default::default()
+        }
+    }
+
+    /// Greedy decoding (argmax).
+    pub fn greedy() -> Self {
+        SamplingParams { temperature: 0.0, ..Default::default() }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Whether any history-dependent penalty is enabled.
+    pub fn has_penalties(&self) -> bool {
+        self.repetition_penalty != 1.0
+            || self.presence_penalty != 0.0
+            || self.frequency_penalty != 0.0
+    }
+
+    /// Whether any candidate filtering is enabled.
+    pub fn has_filter(&self) -> bool {
+        self.top_k > 0 || self.top_p < 1.0 || self.min_p > 0.0 || self.allowed_tokens.is_some()
+    }
+
+    /// Validate ranges; returns a description of the first problem.
+    pub fn validate(&self, vocab: usize) -> Result<(), String> {
+        if self.temperature < 0.0 || !self.temperature.is_finite() {
+            return Err(format!("temperature {} out of range", self.temperature));
+        }
+        if !(0.0..=1.0).contains(&self.top_p) {
+            return Err(format!("top_p {} out of range", self.top_p));
+        }
+        if !(0.0..=1.0).contains(&self.min_p) {
+            return Err(format!("min_p {} out of range", self.min_p));
+        }
+        if self.repetition_penalty <= 0.0 {
+            return Err(format!(
+                "repetition_penalty {} must be positive",
+                self.repetition_penalty
+            ));
+        }
+        if self.top_k > vocab {
+            return Err(format!("top_k {} exceeds vocab {vocab}", self.top_k));
+        }
+        if let Some(allow) = &self.allowed_tokens {
+            if allow.is_empty() {
+                return Err("allowed_tokens is empty".into());
+            }
+            if let Some(&bad) = allow.iter().find(|&&t| t as usize >= vocab) {
+                return Err(format!("allowed token {bad} exceeds vocab {vocab}"));
+            }
+        }
+        for (&t, _) in &self.logit_bias {
+            if t as usize >= vocab {
+                return Err(format!("logit_bias token {t} exceeds vocab {vocab}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_neutral() {
+        let p = SamplingParams::default();
+        assert!(!p.has_penalties());
+        assert!(!p.has_filter());
+        assert!(!p.is_greedy());
+        assert!(p.validate(100).is_ok());
+    }
+
+    #[test]
+    fn production_default_enables_everything() {
+        let p = SamplingParams::production_default();
+        assert!(p.has_penalties());
+        assert!(p.has_filter());
+        assert!(p.validate(152_064).is_ok());
+    }
+
+    #[test]
+    fn greedy_detected() {
+        assert!(SamplingParams::greedy().is_greedy());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let vocab = 100;
+        let mut p = SamplingParams { temperature: -1.0, ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+        p = SamplingParams { top_p: 1.5, ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+        p = SamplingParams { top_k: 101, ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+        p = SamplingParams { repetition_penalty: 0.0, ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+        p = SamplingParams { allowed_tokens: Some(vec![]), ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+        p = SamplingParams { allowed_tokens: Some(vec![100]), ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+        let mut bias = BTreeMap::new();
+        bias.insert(200u32, 1.0f32);
+        p = SamplingParams { logit_bias: bias, ..Default::default() };
+        assert!(p.validate(vocab).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! Column-wise, incremental penalty state (§5.2).
+//!
+//! The paper stores generated tokens in a preallocated row-append buffer
+//! `Y ∈ N^{Lmax×B}` (step-s output written as row s, contiguous) and updates
+//! the per-sequence output histogram incrementally:
+//! `C_o^{s+1} = C_o^s + Hist(Y_s)` — only the newest row is touched, so the
+//! update is O(B) per iteration instead of the naive O(B·s) rebuild.
+//!
+//! Penalty *application* is sparse: only tokens present in the history have
+//! their logits adjusted, so the cost is O(#distinct seen) per sequence, not
+//! O(V). Dense `C ∈ N^{B×V}` histograms (the paper's formulation) are
+//! represented sparsely per sequence — identical semantics, and the
+//! histogram-vs-rebuild ablation is preserved via [`BatchHistory::rebuild`].
+
+use super::params::SamplingParams;
+use std::collections::HashMap;
+
+/// Sparse per-sequence history counts.
+#[derive(Debug, Clone, Default)]
+pub struct SeqHistory {
+    /// C_p row: token -> count within the prompt (step-invariant).
+    prompt_counts: HashMap<u32, u32>,
+    /// C_o row: token -> count within generated output (incremental).
+    out_counts: HashMap<u32, u32>,
+    /// Number of generated tokens (s−1).
+    out_len: usize,
+}
+
+impl SeqHistory {
+    pub fn new(prompt: &[u32]) -> Self {
+        let mut prompt_counts = HashMap::with_capacity(prompt.len());
+        for &t in prompt {
+            *prompt_counts.entry(t).or_insert(0) += 1;
+        }
+        SeqHistory { prompt_counts, out_counts: HashMap::new(), out_len: 0 }
+    }
+
+    /// Incremental update with the step-s output token (Eq. 5).
+    pub fn append(&mut self, token: u32) {
+        *self.out_counts.entry(token).or_insert(0) += 1;
+        self.out_len += 1;
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    pub fn prompt_count(&self, token: u32) -> u32 {
+        self.prompt_counts.get(&token).copied().unwrap_or(0)
+    }
+
+    pub fn out_count(&self, token: u32) -> u32 {
+        self.out_counts.get(&token).copied().unwrap_or(0)
+    }
+
+    /// Presence masks M_p ∨ M_o for a token.
+    pub fn seen(&self, token: u32) -> bool {
+        self.out_counts.contains_key(&token) || self.prompt_counts.contains_key(&token)
+    }
+
+    /// Iterate over every token id that any penalty could touch
+    /// (M_p ∨ M_o support), with its output count.
+    pub fn penalized_ids(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.out_counts
+            .iter()
+            .map(|(&t, &c)| (t, c))
+            .chain(
+                self.prompt_counts
+                    .iter()
+                    .filter(move |(t, _)| !self.out_counts.contains_key(t))
+                    .map(|(&t, _)| (t, 0)),
+            )
+    }
+
+    /// Clone with the output histogram replaced by an externally rebuilt
+    /// one (the naive baseline recomputes Hist(Y_{<s}) every step; this
+    /// lets the ablation exercise that path against identical state).
+    pub fn with_rebuilt_output(&self, out_counts: HashMap<u32, u32>) -> SeqHistory {
+        let out_len = out_counts.values().map(|&c| c as usize).sum();
+        SeqHistory { prompt_counts: self.prompt_counts.clone(), out_counts, out_len }
+    }
+
+    /// Number of distinct penalizable ids (the sparse work bound).
+    pub fn num_penalized(&self) -> usize {
+        let overlap = self
+            .prompt_counts
+            .keys()
+            .filter(|t| self.out_counts.contains_key(t))
+            .count();
+        self.prompt_counts.len() + self.out_counts.len() - overlap
+    }
+}
+
+/// Adjust one logit according to the penalties (vLLM/OpenAI semantics):
+/// sign-aware multiplicative repetition penalty on M_p ∨ M_o, then additive
+/// presence/frequency penalties on the *output* counts.
+#[inline]
+pub fn penalize_logit(z: f32, seen_any: bool, out_count: u32, p: &SamplingParams) -> f32 {
+    let mut z = z;
+    if seen_any && p.repetition_penalty != 1.0 {
+        // Paper Eq. §2.2 (Z' = Z / f) refined sign-aware as in HF/vLLM:
+        // dividing a negative logit by λ>1 would *raise* its probability.
+        if z > 0.0 {
+            z /= p.repetition_penalty;
+        } else {
+            z *= p.repetition_penalty;
+        }
+    }
+    if out_count > 0 {
+        z -= p.presence_penalty;
+        z -= p.frequency_penalty * out_count as f32;
+    }
+    z
+}
+
+/// Apply all penalties + logit bias to a dense logits row, in place.
+/// Sparse: touches only penalized/biased ids.
+pub fn apply_penalties_dense(logits: &mut [f32], hist: &SeqHistory, p: &SamplingParams) {
+    if p.has_penalties() {
+        for (t, out_count) in hist.penalized_ids() {
+            let idx = t as usize;
+            if idx < logits.len() {
+                logits[idx] = penalize_logit(logits[idx], true, out_count, p);
+            }
+        }
+    }
+    for (&t, &b) in &p.logit_bias {
+        let idx = t as usize;
+        if idx < logits.len() {
+            logits[idx] += b;
+        }
+    }
+}
+
+/// Compute the penalized logit for one id without materializing the row
+/// (zero-copy path over [`crate::tensor::ShardedLogits`]).
+#[inline]
+pub fn penalized_logit_at(
+    raw: f32,
+    id: u32,
+    hist: &SeqHistory,
+    p: &SamplingParams,
+) -> f32 {
+    let mut z = penalize_logit(raw, hist.seen(id), hist.out_count(id), p);
+    if let Some(&b) = p.logit_bias.get(&id) {
+        z += b;
+    }
+    z
+}
+
+/// Column-wise batch history: the preallocated row-append buffer
+/// `Y ∈ N^{Lmax×B}` plus per-sequence sparse histograms.
+#[derive(Debug)]
+pub struct BatchHistory {
+    /// Row-append storage: rows[s][b] = token generated for sequence b at
+    /// step s. Rows are contiguous B-wide appends (cache-friendly, no
+    /// reallocation of prior rows) — the paper's `Y^T` layout.
+    rows: Vec<Vec<u32>>,
+    /// Per-sequence incremental histograms.
+    seqs: Vec<SeqHistory>,
+    capacity_rows: usize,
+}
+
+impl BatchHistory {
+    pub fn new(prompts: &[Vec<u32>], max_len: usize) -> Self {
+        BatchHistory {
+            rows: Vec::with_capacity(max_len),
+            seqs: prompts.iter().map(|p| SeqHistory::new(p)).collect(),
+            capacity_rows: max_len,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.seqs.len()
+    }
+    pub fn steps(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Append the step-s output row and update histograms incrementally
+    /// (only the new row is touched — Eq. 5).
+    pub fn append_row(&mut self, tokens: &[u32]) {
+        assert_eq!(tokens.len(), self.seqs.len(), "row width mismatch");
+        assert!(self.rows.len() < self.capacity_rows, "exceeded L_max");
+        for (b, &t) in tokens.iter().enumerate() {
+            self.seqs[b].append(t);
+        }
+        self.rows.push(tokens.to_vec());
+    }
+
+    pub fn seq(&self, b: usize) -> &SeqHistory {
+        &self.seqs[b]
+    }
+
+    pub fn seq_mut(&mut self, b: usize) -> &mut SeqHistory {
+        &mut self.seqs[b]
+    }
+
+    /// Naive full rebuild of sequence b's output histogram from the rows —
+    /// what the baseline "vLLM CPU" port does every step (O(s) per seq), and
+    /// the oracle the incremental path is property-tested against.
+    pub fn rebuild(&self, b: usize) -> HashMap<u32, u32> {
+        let mut counts = HashMap::new();
+        for row in &self.rows {
+            *counts.entry(row[b]).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Generated tokens of sequence b, oldest first (column read of Y^T).
+    pub fn column(&self, b: usize) -> Vec<u32> {
+        self.rows.iter().map(|r| r[b]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params_all() -> SamplingParams {
+        SamplingParams {
+            repetition_penalty: 2.0,
+            presence_penalty: 0.5,
+            frequency_penalty: 0.25,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn seq_history_counts() {
+        let mut h = SeqHistory::new(&[1, 2, 2, 3]);
+        assert_eq!(h.prompt_count(2), 2);
+        assert_eq!(h.out_count(2), 0);
+        assert!(h.seen(1));
+        assert!(!h.seen(9));
+        h.append(9);
+        h.append(9);
+        h.append(2);
+        assert_eq!(h.out_count(9), 2);
+        assert_eq!(h.out_count(2), 1);
+        assert_eq!(h.out_len(), 3);
+        assert_eq!(h.num_penalized(), 4); // {1,2,3,9}
+    }
+
+    #[test]
+    fn penalized_ids_cover_prompt_and_output_once() {
+        let mut h = SeqHistory::new(&[5, 6]);
+        h.append(6);
+        h.append(7);
+        let mut ids: Vec<u32> = h.penalized_ids().map(|(t, _)| t).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![5, 6, 7]);
+        // counts: 5 -> 0 out, 6 -> 1 out, 7 -> 1 out
+        let counts: HashMap<u32, u32> = h.penalized_ids().collect();
+        assert_eq!(counts[&5], 0);
+        assert_eq!(counts[&6], 1);
+        assert_eq!(counts[&7], 1);
+    }
+
+    #[test]
+    fn repetition_penalty_is_sign_aware() {
+        let p = SamplingParams { repetition_penalty: 2.0, ..Default::default() };
+        assert_eq!(penalize_logit(4.0, true, 0, &p), 2.0);
+        assert_eq!(penalize_logit(-4.0, true, 0, &p), -8.0);
+        // unseen tokens untouched
+        assert_eq!(penalize_logit(4.0, false, 0, &p), 4.0);
+    }
+
+    #[test]
+    fn presence_and_frequency_penalties_scale_with_count() {
+        let p = SamplingParams {
+            presence_penalty: 0.5,
+            frequency_penalty: 0.25,
+            ..Default::default()
+        };
+        // out_count 3: z - 0.5 - 3*0.25
+        assert_eq!(penalize_logit(1.0, true, 3, &p), 1.0 - 0.5 - 0.75);
+        // prompt-only (out_count 0): additive penalties don't apply
+        assert_eq!(penalize_logit(1.0, true, 0, &p), 1.0);
+    }
+
+    #[test]
+    fn dense_apply_touches_only_history() {
+        let mut h = SeqHistory::new(&[0]);
+        h.append(2);
+        let mut logits = vec![1.0f32; 5];
+        apply_penalties_dense(&mut logits, &h, &params_all());
+        assert!(logits[0] < 1.0); // prompt token: repetition only
+        assert_eq!(logits[1], 1.0);
+        assert!(logits[2] < logits[0]); // output token: rep + presence + freq
+        assert_eq!(logits[3], 1.0);
+    }
+
+    #[test]
+    fn logit_bias_applied() {
+        let mut p = SamplingParams::default();
+        p.logit_bias.insert(3, 5.0);
+        let h = SeqHistory::new(&[]);
+        let mut logits = vec![0.0f32; 5];
+        apply_penalties_dense(&mut logits, &h, &p);
+        assert_eq!(logits[3], 5.0);
+        assert_eq!(penalized_logit_at(0.0, 3, &h, &p), 5.0);
+    }
+
+    #[test]
+    fn sparse_view_matches_dense() {
+        let mut h = SeqHistory::new(&[1, 4]);
+        h.append(4);
+        h.append(2);
+        let p = params_all();
+        let raw: Vec<f32> = (0..8).map(|i| (i as f32) - 4.0).collect();
+        let mut dense = raw.clone();
+        apply_penalties_dense(&mut dense, &h, &p);
+        for (i, &r) in raw.iter().enumerate() {
+            assert_eq!(
+                penalized_logit_at(r, i as u32, &h, &p),
+                dense[i],
+                "id {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_history_incremental_equals_rebuild() {
+        let prompts = vec![vec![1, 2], vec![3], vec![]];
+        let mut bh = BatchHistory::new(&prompts, 16);
+        let rows = [[1u32, 1, 1], [2, 1, 7], [1, 3, 7]];
+        for row in &rows {
+            bh.append_row(row);
+        }
+        for b in 0..3 {
+            let rebuilt = bh.rebuild(b);
+            // incremental histogram must equal the naive rebuild
+            for (&t, &c) in &rebuilt {
+                assert_eq!(bh.seq(b).out_count(t), c, "b={b} t={t}");
+            }
+            let total: u32 = rebuilt.values().sum();
+            assert_eq!(total as usize, bh.seq(b).out_len());
+        }
+        assert_eq!(bh.column(0), vec![1, 2, 1]);
+        assert_eq!(bh.column(2), vec![1, 7, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn append_beyond_lmax_panics() {
+        let mut bh = BatchHistory::new(&[vec![]], 1);
+        bh.append_row(&[0]);
+        bh.append_row(&[1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut bh = BatchHistory::new(&[vec![], vec![]], 4);
+        bh.append_row(&[0]);
+    }
+}

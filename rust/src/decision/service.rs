@@ -1,0 +1,435 @@
+//! The disaggregated decision-plane service (§4.2, §5.1).
+//!
+//! `m` sampler workers run on dedicated threads. Each iteration, the engine
+//! publishes one [`IterationTask`] per sampler over that sampler's SPSC ring
+//! (the shared-memory ring analog); the task carries a zero-copy
+//! [`ShardedLogits`] view plus per-column metadata. Samplers decide their
+//! columns independently — **sequence-parallel**, no vocabulary-axis
+//! reconciliation — and push [`DecisionBatch`]es to the shared return
+//! channel (the paper's lightweight ZMQ path back to the scheduler).
+//!
+//! **Ownership.** A sequence is owned by sampler `seq_id % m` for its whole
+//! life, so its history metadata is created, updated, and retired *locally*
+//! (the paper's "per-sequence metadata follow the same batch partition and
+//! are updated locally"), independent of batch composition. Ownership-by-id
+//! replaces the paper's per-iteration contiguous ranges — the balance is the
+//! same in expectation and history never migrates.
+//!
+//! **Determinism.** Decisions use pre-generated Philox uniforms keyed by
+//! (engine seed, request seed, sequence, iteration), so the token stream is
+//! identical for any `m` (asserted in tests).
+
+use super::grammar::{ConstraintState, GrammarConstraint};
+use super::hotvocab::HotVocab;
+use super::params::SamplingParams;
+use super::penalties::BatchHistory;
+use super::pipeline::DecisionPipeline;
+use super::shvs::{Decision, Precompute};
+use crate::config::SamplerConfig;
+#[cfg(test)]
+use crate::config::DecisionVariant;
+use crate::ringbuf::{mpmc, spsc};
+use crate::tensor::ShardedLogits;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Per-column metadata within an iteration's microbatch.
+#[derive(Debug, Clone)]
+pub struct ColumnMeta {
+    pub col: usize,
+    pub seq_id: u64,
+    pub iteration: u64,
+}
+
+/// One iteration's work for the decision plane. Shared (Arc'd) pieces are
+/// written once by the engine and read zero-copy by every sampler.
+pub struct IterationTask {
+    pub iter: u64,
+    pub view: ShardedLogits,
+    pub columns: Arc<Vec<ColumnMeta>>,
+    /// Per-column SHVS precompute, aligned with `columns` (empty when the
+    /// variant doesn't use it).
+    pub pre: Arc<Vec<Precompute>>,
+}
+
+/// Control + data messages flowing engine → sampler.
+pub enum SamplerMsg {
+    /// A sequence enters the system: register its prompt + params with its
+    /// owner sampler.
+    Register {
+        seq_id: u64,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        grammar: Option<Arc<GrammarConstraint>>,
+    },
+    /// Decide this iteration's owned columns.
+    Iterate(Arc<IterationTask>),
+    /// A sequence finished: drop its metadata.
+    Retire { seq_id: u64 },
+}
+
+/// One sampler's decisions for one iteration.
+#[derive(Debug)]
+pub struct DecisionBatch {
+    pub iter: u64,
+    pub sampler_id: usize,
+    /// (column, seq_id, decision)
+    pub decisions: Vec<(usize, u64, Decision)>,
+    /// Wall seconds this sampler spent deciding (busy time).
+    pub busy_s: f64,
+}
+
+/// Running service handle.
+pub struct SamplerService {
+    senders: Vec<spsc::Producer<SamplerMsg>>,
+    results: mpmc::Receiver<DecisionBatch>,
+    workers: Vec<JoinHandle<SamplerStats>>,
+    m: usize,
+}
+
+/// Per-sampler lifetime statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SamplerStats {
+    pub decisions: u64,
+    pub fast_path_hits: u64,
+    pub alpha_sum: f64,
+    pub busy_s: f64,
+}
+
+/// A sampler's worker loop state.
+struct SamplerWorker {
+    id: usize,
+    m: usize,
+    pipeline: DecisionPipeline,
+    /// Histories of owned sequences, keyed by seq_id. Each history is a
+    /// single-column BatchHistory (the column-wise machinery per sequence).
+    owned: HashMap<u64, OwnedSeq>,
+}
+
+/// Per-sequence sampler-local state.
+struct OwnedSeq {
+    hist: BatchHistory,
+    params: SamplingParams,
+    grammar: Option<(Arc<GrammarConstraint>, ConstraintState)>,
+}
+
+impl SamplerWorker {
+    fn owns(&self, seq_id: u64) -> bool {
+        (seq_id as usize) % self.m == self.id
+    }
+
+    fn run(
+        mut self,
+        rx: spsc::Consumer<SamplerMsg>,
+        tx: mpmc::Sender<DecisionBatch>,
+        max_seq_len: usize,
+    ) -> SamplerStats {
+        let mut stats = SamplerStats::default();
+        while let Some(msg) = rx.pop() {
+            match msg {
+                SamplerMsg::Register { seq_id, prompt, params, grammar } => {
+                    if self.owns(seq_id) {
+                        let hist = BatchHistory::new(&[prompt], max_seq_len);
+                        let grammar = grammar.map(|g| {
+                            let s = g.start();
+                            (g, s)
+                        });
+                        self.owned.insert(seq_id, OwnedSeq { hist, params, grammar });
+                    }
+                }
+                SamplerMsg::Retire { seq_id } => {
+                    if self.owns(seq_id) {
+                        self.owned.remove(&seq_id);
+                    }
+                }
+                SamplerMsg::Iterate(task) => {
+                    let t0 = Instant::now();
+                    let mut decisions = Vec::new();
+                    for meta in task.columns.iter() {
+                        if !self.owns(meta.seq_id) {
+                            continue;
+                        }
+                        let Some(seq) = self.owned.get(&meta.seq_id) else {
+                            continue; // retired concurrently; engine resends
+                        };
+                        let mut params = seq.params.clone();
+                        // Structured decoding: restrict to grammar-viable
+                        // tokens (exact allow-list path; §9 extension iii).
+                        if let Some((g, state)) = &seq.grammar {
+                            let allowed = g.allowed_tokens(*state);
+                            if !allowed.is_empty() {
+                                params.allowed_tokens = Some(allowed);
+                            }
+                        }
+                        let pre = task.pre.get(meta.col);
+                        // SAFETY of the borrow dance: decide() needs &hist
+                        // and &mut pipeline; we re-borrow mutably after.
+                        let d = self.pipeline.decide(
+                            &task.view,
+                            meta.col,
+                            hist_view(&self.owned, meta.seq_id),
+                            0, // one single-column BatchHistory per sequence
+                            &params,
+                            pre,
+                            meta.seq_id,
+                            meta.iteration,
+                        );
+                        // local metadata update (§5.1): append own decision
+                        if let Some(seq) = self.owned.get_mut(&meta.seq_id) {
+                            seq.hist.append_row(&[d.token]);
+                            if let Some((g, state)) = &mut seq.grammar {
+                                if let Some(next) = g.advance(*state, d.token) {
+                                    *state = next;
+                                }
+                            }
+                        }
+                        decisions.push((meta.col, meta.seq_id, d));
+                    }
+                    let busy = t0.elapsed().as_secs_f64();
+                    stats.busy_s += busy;
+                    let batch = DecisionBatch {
+                        iter: task.iter,
+                        sampler_id: self.id,
+                        decisions,
+                        busy_s: busy,
+                    };
+                    if tx.send(batch).is_err() {
+                        break; // engine gone
+                    }
+                }
+            }
+        }
+        stats.decisions = self.pipeline.decisions;
+        stats.fast_path_hits = self.pipeline.fast_path_hits;
+        stats.alpha_sum = self.pipeline.alpha_sum;
+        stats
+    }
+}
+
+/// Work around simultaneous &mut pipeline / & history borrows of `self`:
+/// histories live in the map; this fetches a shared borrow by key.
+fn hist_view(owned: &HashMap<u64, OwnedSeq>, seq_id: u64) -> &BatchHistory {
+    &owned.get(&seq_id).unwrap().hist
+}
+
+impl SamplerService {
+    /// Spawn `cfg.num_samplers` workers. `hot` is required for the SHVS
+    /// variant; `vocab` sizes the default hot set if none is given.
+    pub fn start(cfg: &SamplerConfig, hot: Option<Arc<HotVocab>>, max_seq_len: usize) -> Self {
+        let m = cfg.num_samplers.max(1);
+        let (result_tx, results) = mpmc::channel::<DecisionBatch>(m * cfg.ring_depth.max(1) * 2);
+        let mut senders = Vec::with_capacity(m);
+        let mut workers = Vec::with_capacity(m);
+        for id in 0..m {
+            let (tx, rx) = spsc::ring::<SamplerMsg>(cfg.ring_depth.max(1) * 64);
+            let worker = SamplerWorker {
+                id,
+                m,
+                pipeline: DecisionPipeline::new(cfg.variant, hot.clone(), cfg.seed),
+                owned: HashMap::new(),
+            };
+            let result_tx = result_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sampler-{id}"))
+                .spawn(move || worker.run(rx, result_tx, max_seq_len))
+                .expect("spawn sampler");
+            senders.push(tx);
+            workers.push(handle);
+        }
+        drop(result_tx);
+        SamplerService { senders, results, workers, m }
+    }
+
+    pub fn num_samplers(&self) -> usize {
+        self.m
+    }
+
+    /// Register a new sequence (broadcast; only the owner keeps it).
+    pub fn register(&self, seq_id: u64, prompt: &[u32], params: &SamplingParams) {
+        self.register_with_grammar(seq_id, prompt, params, None);
+    }
+
+    /// Register with an optional structured-decoding constraint.
+    pub fn register_with_grammar(
+        &self,
+        seq_id: u64,
+        prompt: &[u32],
+        params: &SamplingParams,
+        grammar: Option<Arc<GrammarConstraint>>,
+    ) {
+        let owner = (seq_id as usize) % self.m;
+        self.senders[owner].push(SamplerMsg::Register {
+            seq_id,
+            prompt: prompt.to_vec(),
+            params: params.clone(),
+            grammar,
+        });
+    }
+
+    /// Retire a finished sequence.
+    pub fn retire(&self, seq_id: u64) {
+        let owner = (seq_id as usize) % self.m;
+        self.senders[owner].push(SamplerMsg::Retire { seq_id });
+    }
+
+    /// Publish one iteration's logits + metadata to all samplers.
+    pub fn submit(&self, task: IterationTask) {
+        let task = Arc::new(task);
+        for tx in &self.senders {
+            tx.push(SamplerMsg::Iterate(task.clone()));
+        }
+    }
+
+    /// Collect decisions for iteration `iter` (blocks until all `m` sampler
+    /// batches for that iteration arrived). Returns (col → (seq, decision))
+    /// plus the max per-sampler busy time (the decision-plane latency that
+    /// must hide under GPU compute).
+    pub fn collect(&self, iter: u64, expected_cols: usize) -> (Vec<(usize, u64, Decision)>, f64) {
+        let mut got = Vec::with_capacity(expected_cols);
+        let mut batches = 0usize;
+        let mut max_busy = 0.0f64;
+        while batches < self.m {
+            match self.results.recv() {
+                Some(batch) => {
+                    debug_assert_eq!(batch.iter, iter, "iteration interleave");
+                    max_busy = max_busy.max(batch.busy_s);
+                    got.extend(batch.decisions);
+                    batches += 1;
+                }
+                None => break,
+            }
+        }
+        got.sort_unstable_by_key(|&(col, _, _)| col);
+        (got, max_busy)
+    }
+
+    /// Shut down and return per-sampler stats.
+    pub fn shutdown(self) -> Vec<SamplerStats> {
+        for tx in &self.senders {
+            tx.close();
+        }
+        drop(self.senders);
+        drop(self.results);
+        self.workers
+            .into_iter()
+            .map(|w| w.join().expect("sampler panicked"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{shard_row_major, Tensor2};
+
+    fn logits_view(b: usize, v: usize, iter: u64, shards: usize) -> ShardedLogits {
+        let data: Vec<f32> = (0..b * v)
+            .map(|i| {
+                let x = (i as u64).wrapping_mul(2654435761).wrapping_add(iter * 97);
+                ((x % 1000) as f32) / 150.0 - 3.0
+            })
+            .collect();
+        shard_row_major(&Tensor2::from_vec(b, v, data), shards)
+    }
+
+    fn run_service(m: usize, variant: DecisionVariant, iters: u64) -> Vec<Vec<u32>> {
+        let v = 64;
+        let b = 6;
+        let cfg = SamplerConfig {
+            num_samplers: m,
+            variant,
+            seed: 42,
+            ..Default::default()
+        };
+        let hot = HotVocab::new((0..16).collect(), v).into_arc();
+        let svc = SamplerService::start(&cfg, Some(hot), 128);
+        let params = SamplingParams::production_default();
+        for s in 0..b as u64 {
+            svc.register(s, &[1, 2, 3], &params);
+        }
+        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for iter in 0..iters {
+            let view = logits_view(b, v, iter, 2);
+            let columns: Vec<ColumnMeta> = (0..b)
+                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                .collect();
+            svc.submit(IterationTask {
+                iter,
+                view,
+                columns: Arc::new(columns),
+                pre: Arc::new(Vec::new()),
+            });
+            let (decisions, _busy) = svc.collect(iter, b);
+            assert_eq!(decisions.len(), b, "every column decided");
+            for (col, seq, d) in decisions {
+                assert_eq!(col as u64, seq);
+                streams[col].push(d.token);
+            }
+        }
+        for s in 0..b as u64 {
+            svc.retire(s);
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.len(), m);
+        let total: u64 = stats.iter().map(|s| s.decisions).sum();
+        assert_eq!(total, iters * b as u64);
+        streams
+    }
+
+    #[test]
+    fn service_decides_all_columns() {
+        let streams = run_service(3, DecisionVariant::Offloading, 8);
+        assert!(streams.iter().all(|s| s.len() == 8));
+    }
+
+    #[test]
+    fn token_streams_invariant_to_sampler_count() {
+        // §5.1 determinism: m=1 and m=4 must produce identical tokens.
+        let a = run_service(1, DecisionVariant::Offloading, 10);
+        let b = run_service(4, DecisionVariant::Offloading, 10);
+        assert_eq!(a, b);
+        let c = run_service(2, DecisionVariant::Shvs, 10);
+        let d = run_service(5, DecisionVariant::Shvs, 10);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn shvs_service_matches_offloading_distributionally() {
+        // Not token-exact (different uniform usage) but same distribution —
+        // light smoke here; the heavy TVD check lives in shvs::tests.
+        let a = run_service(2, DecisionVariant::Shvs, 30);
+        let b = run_service(2, DecisionVariant::Offloading, 30);
+        // same length streams, tokens within vocab
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.len(), y.len());
+            assert!(x.iter().all(|&t| (t as usize) < 64));
+            assert!(y.iter().all(|&t| (t as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn retire_frees_ownership() {
+        let cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 64);
+        let params = SamplingParams::default();
+        svc.register(7, &[1], &params);
+        svc.retire(7);
+        // Iterating a retired sequence: no decision is produced for it.
+        let view = logits_view(1, 32, 0, 1);
+        svc.submit(IterationTask {
+            iter: 0,
+            view,
+            columns: Arc::new(vec![ColumnMeta { col: 0, seq_id: 7, iteration: 0 }]),
+            pre: Arc::new(Vec::new()),
+        });
+        let (decisions, _) = svc.collect(0, 0);
+        assert!(decisions.is_empty());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,655 @@
+//! Speculative hot-vocab sampling with rejection-correctness (§5.3).
+//!
+//! Split the support into the hot set `H` and tail `V\H`. Compute stable
+//! weights `w_v = exp((z'_v − z_max)/τ)` (Eq. 6); the hot mass is
+//! `α = S_H / (S_H + S_tail)` (Eq. 7). Draw a hot candidate `ŷ ∼ q ∝ w|_H`
+//! and accept it iff `u ≤ α`; on rejection draw from the tail proposal
+//! `r ∝ w|_{V\H}` (Eq. 8). Since `p̃_v/q_v = α` on `H`, the composite is
+//! exact rejection sampling with envelope M = 1 (Eq. 9) — distributionally
+//! identical to full-vocabulary sampling, at O(H) common-case cost.
+//!
+//! **GPU precompute.** `z_max`, `S_tail`, and the tail max weight are
+//! produced where the logits are written (the L1 Pallas kernel outputs
+//! them; [`Precompute::reference`] is the CPU oracle). The CPU sampler
+//! adjusts them *incrementally* for the few penalty-touched ids, so no
+//! O(V) pass happens on the fast path.
+//!
+//! **Filters.** When top-k/top-p/min-p are enabled, the fast path runs the
+//! truncation-first chain on the hot candidates and proves, via a
+//! *containment certificate* against the (adjusted) tail max weight, that
+//! the globally filtered set lies entirely inside `H`; if the certificate
+//! fails (rare: a tail token could enter the filtered set), it falls back
+//! to the exact full-vocabulary slow path. Either way the output
+//! distribution equals the full-vocabulary sampler's.
+
+use super::categorical::{draw_index, draw_token};
+use super::filter::{apply_allow_list, truncate, Truncated};
+use super::hotvocab::HotVocab;
+use super::params::SamplingParams;
+use super::penalties::{penalized_logit_at, SeqHistory};
+use crate::tensor::ShardedLogits;
+use std::sync::Arc;
+
+/// Per-sequence GPU-side precompute at temperature τ (pre-penalty).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precompute {
+    /// max_v z_v over the full vocabulary (stable-softmax shift).
+    pub z_max: f32,
+    /// Σ_{v∉H} exp((z_v − z_max)/τ).
+    pub tail_sum: f64,
+    /// max_{v∉H} exp((z_v − z_max)/τ) — the certificate bound.
+    pub tail_max_w: f64,
+}
+
+impl Precompute {
+    /// CPU reference implementation of the GPU precompute — one O(V) pass.
+    /// The real system gets these numbers from the L1 kernel's outputs.
+    pub fn reference(view: &ShardedLogits, b: usize, hot: &HotVocab, tau: f32) -> Precompute {
+        let mut z_max = f32::NEG_INFINITY;
+        view.for_each_logit(b, |_, z| z_max = z_max.max(z));
+        let inv = 1.0 / tau.max(1e-6) as f64;
+        let mut tail_sum = 0.0f64;
+        let mut tail_max_w = 0.0f64;
+        view.for_each_logit(b, |v, z| {
+            if !hot.contains(v as u32) {
+                let w = (((z - z_max) as f64) * inv).exp();
+                tail_sum += w;
+                if w > tail_max_w {
+                    tail_max_w = w;
+                }
+            }
+        });
+        Precompute { z_max, tail_sum, tail_max_w }
+    }
+}
+
+/// Outcome of one SHVS decision, with the observability the paper exposes
+/// (acceptance α, fast/slow path) for tuning H.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub token: u32,
+    /// Hot-vocab mass α_b (or filtered-certificate pseudo-α = 1.0).
+    pub alpha: f64,
+    /// True if the decision completed without an O(V) pass.
+    pub fast_path: bool,
+    /// True if the rejection test accepted the hot candidate (unfiltered
+    /// path) or the containment certificate held (filtered path).
+    pub accepted: bool,
+}
+
+/// Reusable SHVS sampler (per sampler thread; owns scratch buffers).
+pub struct ShvsSampler {
+    hot: Arc<HotVocab>,
+    // scratch, reused across sequences to avoid hot-loop allocation
+    hot_logits: Vec<f32>,
+    hot_pairs: Vec<(u32, f32)>,
+}
+
+impl ShvsSampler {
+    pub fn new(hot: Arc<HotVocab>) -> Self {
+        let h = hot.len();
+        ShvsSampler {
+            hot,
+            hot_logits: Vec::with_capacity(h),
+            hot_pairs: Vec::with_capacity(h),
+        }
+    }
+
+    pub fn hot_vocab(&self) -> &Arc<HotVocab> {
+        &self.hot
+    }
+
+    /// Decide the next token for sequence `b`.
+    ///
+    /// `uniforms = (u_select, u_accept, u_fallback)` — pre-generated per
+    /// (sequence, iteration) so the outcome is sampler-assignment-invariant.
+    pub fn decide(
+        &mut self,
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+        pre: &Precompute,
+        uniforms: (f64, f64, f64),
+    ) -> Decision {
+        let (u_select, u_accept, u_fallback) = uniforms;
+
+        // Greedy and allow-list requests skip speculation: greedy argmax
+        // needs the global max (certificate rarely provable cheaply), and
+        // allow-lists are usually tiny — both go straight to the exact path.
+        if params.is_greedy() || params.allowed_tokens.is_some() {
+            let token = slow_path_token(view, b, hist, params, u_fallback);
+            return Decision { token, alpha: 1.0, fast_path: false, accepted: false };
+        }
+
+        let tau = params.temperature;
+        let inv_tau = 1.0 / tau as f64;
+
+        // ---- O(H) hot scan: gather raw hot logits (zero-copy view reads).
+        view.gather(b, self.hot.ids(), &mut self.hot_logits);
+
+        // Penalty-adjusted tail statistics, updated incrementally: only the
+        // penalty-touched tail ids change (the column-wise trick of §5.2
+        // applied to the SHVS sums).
+        let mut tail_sum = pre.tail_sum;
+        let mut tail_max_w = pre.tail_max_w;
+        let penalties_active = params.has_penalties() || !params.logit_bias.is_empty();
+        if penalties_active {
+            for (id, _) in hist.penalized_ids() {
+                if (id as usize) < view.vocab() && !self.hot.contains(id) {
+                    let raw = view.get(id as usize, b);
+                    let w_old = (((raw - pre.z_max) as f64) * inv_tau).exp();
+                    let adj = penalized_logit_at(raw, id, hist, params);
+                    let w_new = (((adj - pre.z_max) as f64) * inv_tau).exp();
+                    tail_sum += w_new - w_old;
+                    if w_new > tail_max_w {
+                        tail_max_w = w_new; // may only grow stale-conservative
+                    }
+                }
+            }
+            // logit-bias-only ids (not in history) also shift tail weights
+            for (&id, _) in &params.logit_bias {
+                if !hist.seen(id) && (id as usize) < view.vocab() && !self.hot.contains(id) {
+                    let raw = view.get(id as usize, b);
+                    let w_old = (((raw - pre.z_max) as f64) * inv_tau).exp();
+                    let adj = penalized_logit_at(raw, id, hist, params);
+                    let w_new = (((adj - pre.z_max) as f64) * inv_tau).exp();
+                    tail_sum += w_new - w_old;
+                    if w_new > tail_max_w {
+                        tail_max_w = w_new;
+                    }
+                }
+            }
+            tail_sum = tail_sum.max(0.0);
+        }
+
+        // Penalize hot candidates in place: patch only the touched ids by
+        // binary search into the sorted hot id list — O(H + P·log H)
+        // instead of O(H) hash probes. `hot_logits` is the working copy.
+        let hot_ids = self.hot.ids();
+        if penalties_active {
+            for (id, _) in hist.penalized_ids() {
+                if let Ok(i) = hot_ids.binary_search(&id) {
+                    let raw = self.hot_logits[i];
+                    self.hot_logits[i] = penalized_logit_at(raw, id, hist, params);
+                }
+            }
+            for (&id, _) in &params.logit_bias {
+                if !hist.seen(id) {
+                    if let Ok(i) = hot_ids.binary_search(&id) {
+                        let raw = self.hot_logits[i];
+                        self.hot_logits[i] = penalized_logit_at(raw, id, hist, params);
+                    }
+                }
+            }
+        }
+
+        if params.has_filter() {
+            // Materialize (id, logit) pairs only for the filtered machinery.
+            self.hot_pairs.clear();
+            for (&id, &z) in hot_ids.iter().zip(self.hot_logits.iter()) {
+                self.hot_pairs.push((id, z));
+            }
+            // ---- Filtered fast path with containment certificate.
+            //
+            // Case 1 — top-k enabled: if the k-th largest *hot* logit
+            // outranks every tail token (bounded by tail_max_w), the global
+            // top-k is exactly the hot top-k; the rest of the chain (top-p,
+            // min-p) then operates on identical survivor sets globally and
+            // hot-locally, so the hot-filtered draw is exact.
+            if params.top_k > 0 && params.top_k < self.hot_pairs.len() {
+                super::filter::select_top_k(&mut self.hot_pairs, params.top_k);
+                let kth_logit = self.hot_pairs[..params.top_k]
+                    .iter()
+                    .map(|&(_, z)| z)
+                    .fold(f32::INFINITY, f32::min);
+                let kth_w = (((kth_logit - pre.z_max) as f64) * inv_tau).exp();
+                if kth_w >= tail_max_w {
+                    // select_top_k already partitioned the global top-k into
+                    // the prefix; truncate just that (top-k disabled) instead
+                    // of re-selecting over the whole hot set.
+                    let survivors = self.hot_pairs[..params.top_k].to_vec();
+                    let rest = SamplingParams { top_k: 0, ..params.clone() };
+                    let truncated = truncate(survivors, &rest);
+                    let token = draw_token(&truncated, u_select);
+                    self.hot_pairs.clear();
+                    return Decision { token, alpha: 1.0, fast_path: true, accepted: true };
+                }
+            } else {
+                // Case 2 — no top-k: prove the nucleus/min-p set lies in H
+                // against the global masses.
+                let truncated = truncate(self.hot_pairs.clone(), params);
+                let certificate = filtered_set_certificate(
+                    &truncated,
+                    pre.z_max,
+                    inv_tau,
+                    tail_max_w,
+                    tail_sum,
+                    params,
+                );
+                if certificate {
+                    let token = draw_token(&truncated, u_select);
+                    self.hot_pairs.clear();
+                    return Decision { token, alpha: 1.0, fast_path: true, accepted: true };
+                }
+            }
+            // Certificate failed: exact O(V) slow path.
+            self.hot_pairs.clear();
+            let token = slow_path_token(view, b, hist, params, u_fallback);
+            return Decision { token, alpha: 0.0, fast_path: false, accepted: false };
+        }
+
+        // ---- Unfiltered path: classic SHVS rejection sampling (Eq. 8–9).
+        // Hot weights + hot sum in one fused pass straight over the gathered
+        // logits (no (id, logit) tuple materialization).
+        let z_max = pre.z_max;
+        let mut hot_w: Vec<f64> = Vec::with_capacity(self.hot_logits.len());
+        let mut hot_sum = 0.0f64;
+        for &z in &self.hot_logits {
+            let w = (((z - z_max) as f64) * inv_tau).exp();
+            hot_w.push(w);
+            hot_sum += w;
+        }
+        let total = hot_sum + tail_sum;
+        let alpha = if total > 0.0 { hot_sum / total } else { 0.0 };
+
+        if u_accept <= alpha {
+            // Accept: draw ŷ ∼ q over the hot set.
+            let i = draw_index(&hot_w, hot_sum, u_select);
+            let token = hot_ids[i];
+            return Decision { token, alpha, fast_path: true, accepted: true };
+        }
+
+        // Reject: draw y′ ∼ r over the tail — one O(V−H) streaming pass.
+        let token = tail_draw(
+            view,
+            b,
+            &self.hot,
+            hist,
+            params,
+            pre.z_max,
+            inv_tau,
+            tail_sum,
+            u_fallback,
+            penalties_active,
+        );
+        Decision { token, alpha, fast_path: false, accepted: false }
+    }
+}
+
+/// Certificate that the filtered-on-hot set equals the filtered-on-V set.
+///
+/// Every member of the truncated hot set has weight ≥ the max tail weight
+/// ⇒ in the global weight order, all members precede every tail token.
+/// - top-k: the global top-k is then exactly these k members.
+/// - top-p: the nucleus threshold must additionally be met against the
+///   *global* sum (hot members' mass ≥ p·(S_kept + S_tail)); since all kept
+///   members outrank all tail tokens, the global nucleus is the same prefix.
+/// - min-p: no tail token may pass the min-p cut: tail_max_w < min_p·w_max.
+fn filtered_set_certificate(
+    truncated: &Truncated,
+    _z_max: f32,
+    _inv_tau: f64,
+    tail_max_w: f64,
+    tail_sum: f64,
+    params: &SamplingParams,
+) -> bool {
+    if truncated.is_empty() {
+        return false;
+    }
+    let min_kept_w = truncated.weights.iter().cloned().fold(f64::INFINITY, f64::min);
+    // All kept hot tokens must dominate every tail token.
+    if min_kept_w < tail_max_w {
+        return false;
+    }
+    // top-p: the kept mass must satisfy the nucleus condition globally.
+    if params.top_p < 1.0 {
+        // Global candidate mass (pre-top-p, post-top-k) ≥ kept + tail; the
+        // kept prefix must reach p of the *global* total to be the true
+        // nucleus. (Conservative: uses kept+tail as the global total.)
+        let global_total = truncated.sum + tail_sum;
+        if truncated.sum < params.top_p as f64 * global_total {
+            return false;
+        }
+    }
+    // min-p: no tail token may survive the cut.
+    if params.min_p > 0.0 {
+        let w_max = truncated.weights.iter().cloned().fold(0.0f64, f64::max);
+        if tail_max_w >= params.min_p as f64 * w_max {
+            return false;
+        }
+    }
+    true
+}
+
+/// Exact full-vocabulary decision: stream the row, patch the (few)
+/// penalty-touched ids by direct index (no per-element history probes),
+/// truncate, draw. Used for greedy/allow-list requests and certificate
+/// failures — and as the TVD oracle (`pipeline::oracle_decide`).
+pub fn slow_path_token(
+    view: &ShardedLogits,
+    b: usize,
+    hist: &SeqHistory,
+    params: &SamplingParams,
+    u: f64,
+) -> u32 {
+    let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(view.vocab());
+    view.for_each_logit(b, |v, z| pairs.push((v as u32, z)));
+    // Sparse penalty patch: pairs[id] holds id (vocab order), so the touch
+    // set is patched in O(|penalized| + |bias|).
+    if params.has_penalties() {
+        for (id, out_count) in hist.penalized_ids() {
+            if let Some(p) = pairs.get_mut(id as usize) {
+                p.1 = super::penalties::penalize_logit(p.1, true, out_count, params);
+            }
+        }
+    }
+    for (&id, &bias) in &params.logit_bias {
+        if let Some(p) = pairs.get_mut(id as usize) {
+            p.1 += bias;
+        }
+    }
+    if let Some(allow) = &params.allowed_tokens {
+        pairs = apply_allow_list(pairs, allow);
+    }
+    let truncated = truncate(pairs, params);
+    draw_token(&truncated, u)
+}
+
+/// One streaming pass over the tail: inverse-CDF draw from r ∝ w|_{V\H}.
+/// Penalty-touched ids are merged in via a small sorted patch list, keeping
+/// the scan a pure stream (no per-element hash probes).
+#[allow(clippy::too_many_arguments)]
+fn tail_draw(
+    view: &ShardedLogits,
+    b: usize,
+    hot: &HotVocab,
+    hist: &SeqHistory,
+    params: &SamplingParams,
+    z_max: f32,
+    inv_tau: f64,
+    tail_sum: f64,
+    u: f64,
+    penalties_active: bool,
+) -> u32 {
+    // Small sorted (id, adjusted logit) patch list.
+    let mut patches: Vec<(u32, f32)> = Vec::new();
+    if penalties_active {
+        for (id, _) in hist.penalized_ids() {
+            if (id as usize) < view.vocab() && !hot.contains(id) {
+                let raw = view.get(id as usize, b);
+                patches.push((id, penalized_logit_at(raw, id, hist, params)));
+            }
+        }
+        for (&id, _) in &params.logit_bias {
+            if !hist.seen(id) && (id as usize) < view.vocab() && !hot.contains(id) {
+                let raw = view.get(id as usize, b);
+                patches.push((id, penalized_logit_at(raw, id, hist, params)));
+            }
+        }
+        patches.sort_unstable_by_key(|p| p.0);
+        patches.dedup_by_key(|p| p.0);
+    }
+    let target = u * tail_sum;
+    let mut acc = 0.0f64;
+    let mut chosen: Option<u32> = None;
+    let mut last_tail: u32 = 0;
+    let mut patch_i = 0usize;
+    view.for_each_logit(b, |v, z| {
+        if chosen.is_some() {
+            return;
+        }
+        let id = v as u32;
+        if hot.contains(id) {
+            return;
+        }
+        last_tail = id;
+        // merge-join against the ascending patch list
+        let mut z = z;
+        while patch_i < patches.len() && patches[patch_i].0 < id {
+            patch_i += 1;
+        }
+        if patch_i < patches.len() && patches[patch_i].0 == id {
+            z = patches[patch_i].1;
+        }
+        let w = (((z - z_max) as f64) * inv_tau).exp();
+        acc += w;
+        if target < acc {
+            chosen = Some(id);
+        }
+    });
+    // fp-rounding guard: if the adjusted tail_sum slightly exceeds the
+    // freshly accumulated sum, land on the last tail token.
+    chosen.unwrap_or(last_tail)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decision::softmax::softmax_dense;
+    use crate::metrics::stats::total_variation_distance;
+    use crate::rng::Philox;
+    use crate::tensor::{shard_row_major, Tensor2};
+
+    fn make_view(logits: Vec<f32>, b: usize, v: usize, shards: usize) -> ShardedLogits {
+        shard_row_major(&Tensor2::from_vec(b, v, logits), shards)
+    }
+
+    /// Full-vocabulary oracle distribution (penalties + filter + softmax).
+    fn oracle_dist(
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+    ) -> Vec<f64> {
+        let mut row = view.materialize_row(b);
+        super::super::penalties::apply_penalties_dense(&mut row, hist, params);
+        let pairs: Vec<(u32, f32)> =
+            row.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect();
+        let t = truncate(pairs, params);
+        let mut dist = vec![0.0f64; view.vocab()];
+        for (i, &id) in t.ids.iter().enumerate() {
+            dist[id as usize] = t.prob(i);
+        }
+        dist
+    }
+
+    /// Empirical SHVS distribution over `n` independent uniform triples.
+    fn shvs_empirical(
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+        hot: Arc<HotVocab>,
+        n: usize,
+        seed: u64,
+    ) -> (Vec<f64>, f64) {
+        let pre = Precompute::reference(view, b, &hot, params.temperature);
+        let mut sampler = ShvsSampler::new(hot);
+        let mut rng = Philox::new(seed);
+        let mut counts = vec![0.0f64; view.vocab()];
+        let mut accepts = 0usize;
+        for _ in 0..n {
+            let u = (rng.next_f64(), rng.next_f64(), rng.next_f64());
+            let d = sampler.decide(view, b, hist, params, &pre, u);
+            counts[d.token as usize] += 1.0;
+            if d.accepted {
+                accepts += 1;
+            }
+        }
+        (counts, accepts as f64 / n as f64)
+    }
+
+    #[test]
+    fn precompute_reference_sums_tail() {
+        let v = 16;
+        let logits: Vec<f32> = (0..v).map(|i| i as f32 * 0.1).collect();
+        let view = make_view(logits.clone(), 1, v, 2);
+        let hot = HotVocab::new(vec![14, 15], v);
+        let pre = Precompute::reference(&view, 0, &hot, 1.0);
+        let z_max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(pre.z_max, z_max);
+        // recompute with the same f32-rounded logits the view holds
+        let expect: f64 = (0..14).map(|i| ((logits[i] - z_max) as f64).exp()).sum();
+        assert!((pre.tail_sum - expect).abs() < 1e-9, "tail_sum {} expect {expect}", pre.tail_sum);
+        let expect_max = ((logits[13] - z_max) as f64).exp();
+        assert!((pre.tail_max_w - expect_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shvs_unfiltered_matches_full_softmax() {
+        // Zipf-ish logits: hot set covers most mass.
+        let v = 64;
+        let logits: Vec<f32> = (0..v).map(|i| 3.0 - (i as f32) * 0.2).collect();
+        let view = make_view(logits.clone(), 1, v, 2);
+        let hot = HotVocab::new((0..16).collect(), v).into_arc();
+        let params = SamplingParams::default();
+        let hist = SeqHistory::new(&[]);
+
+        let (counts, accept_rate) =
+            shvs_empirical(&view, 0, &hist, &params, hot, 150_000, 5);
+        let mut oracle = Vec::new();
+        softmax_dense(&logits, 1.0, &mut oracle);
+        let tvd = total_variation_distance(&counts, &oracle);
+        assert!(tvd < 0.01, "TVD {tvd}");
+        // hot set covers the head -> high acceptance (paper: 80–95%)
+        assert!(accept_rate > 0.8, "accept {accept_rate}");
+    }
+
+    #[test]
+    fn shvs_with_penalties_matches_oracle() {
+        let v = 48;
+        let logits: Vec<f32> = (0..v).map(|i| ((i * 13 % 48) as f32) * 0.15).collect();
+        let view = make_view(logits, 1, v, 3);
+        let hot = HotVocab::new((0..12).collect(), v).into_arc();
+        let params = SamplingParams {
+            repetition_penalty: 1.4,
+            presence_penalty: 0.3,
+            frequency_penalty: 0.2,
+            temperature: 0.9,
+            ..Default::default()
+        };
+        let mut hist = SeqHistory::new(&[2, 30, 31]);
+        hist.append(2);
+        hist.append(45); // tail token penalized — exercises incremental sums
+
+        let (counts, _) =
+            shvs_empirical(&view, 0, &hist, &params, hot, 200_000, 6);
+        let oracle = oracle_dist(&view, 0, &hist, &params);
+        let tvd = total_variation_distance(&counts, &oracle);
+        assert!(tvd < 0.012, "TVD {tvd}");
+    }
+
+    #[test]
+    fn shvs_filtered_matches_oracle_certificate_holds() {
+        // Steep head inside the hot set: top-k filtered set ⊆ H certainly.
+        let v = 40;
+        let mut logits: Vec<f32> = vec![0.0; v];
+        for (i, l) in logits.iter_mut().enumerate().take(8) {
+            *l = 10.0 - i as f32;
+        }
+        let view = make_view(logits, 1, v, 2);
+        let hot = HotVocab::new((0..10).collect(), v).into_arc();
+        let params = SamplingParams {
+            top_k: 5,
+            top_p: 0.99,
+            min_p: 0.01,
+            temperature: 0.8,
+            ..Default::default()
+        };
+        let hist = SeqHistory::new(&[]);
+        let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+        let mut sampler = ShvsSampler::new(hot.clone());
+        // fast path must engage
+        let d = sampler.decide(&view, 0, &hist, &params, &pre, (0.3, 0.5, 0.7));
+        assert!(d.fast_path, "certificate should hold");
+
+        let (counts, _) = shvs_empirical(&view, 0, &hist, &params, hot, 150_000, 7);
+        let oracle = oracle_dist(&view, 0, &hist, &params);
+        let tvd = total_variation_distance(&counts, &oracle);
+        assert!(tvd < 0.01, "TVD {tvd}");
+    }
+
+    #[test]
+    fn shvs_filtered_falls_back_when_tail_dominates() {
+        // The strongest token lives in the TAIL: certificate must fail and
+        // the slow path must still be exact.
+        let v = 32;
+        let mut logits: Vec<f32> = vec![0.0; v];
+        logits[30] = 9.0; // tail spike
+        logits[1] = 5.0;
+        let view = make_view(logits, 1, v, 2);
+        let hot = HotVocab::new((0..8).collect(), v).into_arc();
+        let params = SamplingParams { top_k: 3, ..Default::default() };
+        let hist = SeqHistory::new(&[]);
+        let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+        let mut sampler = ShvsSampler::new(hot.clone());
+        let d = sampler.decide(&view, 0, &hist, &params, &pre, (0.3, 0.5, 0.7));
+        assert!(!d.fast_path, "certificate must fail — top token is in the tail");
+
+        let (counts, _) = shvs_empirical(&view, 0, &hist, &params, hot, 100_000, 8);
+        let oracle = oracle_dist(&view, 0, &hist, &params);
+        let tvd = total_variation_distance(&counts, &oracle);
+        assert!(tvd < 0.01, "TVD {tvd}");
+        // the tail spike must dominate empirically
+        assert!(counts[30] > counts[1]);
+    }
+
+    #[test]
+    fn alpha_equals_hot_mass() {
+        let v = 20;
+        let logits: Vec<f32> = (0..v).map(|i| -(i as f32) * 0.5).collect();
+        let view = make_view(logits.clone(), 1, v, 1);
+        let hot = HotVocab::new((0..5).collect(), v).into_arc();
+        let params = SamplingParams::default();
+        let hist = SeqHistory::new(&[]);
+        let pre = Precompute::reference(&view, 0, &hot, 1.0);
+        let mut sampler = ShvsSampler::new(hot);
+        let d = sampler.decide(&view, 0, &hist, &params, &pre, (0.1, 0.0, 0.1));
+        // α must equal Σ_{v<5} p(v) of the full softmax
+        let mut probs = Vec::new();
+        softmax_dense(&logits, 1.0, &mut probs);
+        let expect: f64 = probs[..5].iter().sum();
+        assert!((d.alpha - expect).abs() < 1e-9, "alpha {} expect {expect}", d.alpha);
+    }
+
+    #[test]
+    fn greedy_bypasses_speculation() {
+        let v = 16;
+        let mut logits = vec![0.0f32; v];
+        logits[13] = 4.0; // argmax in tail
+        let view = make_view(logits, 1, v, 2);
+        let hot = HotVocab::new((0..4).collect(), v).into_arc();
+        let params = SamplingParams::greedy();
+        let hist = SeqHistory::new(&[]);
+        let pre = Precompute::reference(&view, 0, &hot, 1.0);
+        let mut sampler = ShvsSampler::new(hot);
+        let d = sampler.decide(&view, 0, &hist, &params, &pre, (0.9, 0.9, 0.9));
+        assert_eq!(d.token, 13);
+        assert!(!d.fast_path);
+    }
+
+    #[test]
+    fn decisions_deterministic_given_uniforms() {
+        let v = 24;
+        let logits: Vec<f32> = (0..v).map(|i| (i as f32 * 0.37).sin()).collect();
+        let view = make_view(logits, 1, v, 2);
+        let hot = HotVocab::new((0..6).collect(), v).into_arc();
+        let params = SamplingParams::default();
+        let hist = SeqHistory::new(&[]);
+        let pre = Precompute::reference(&view, 0, &hot, 1.0);
+        let mut s1 = ShvsSampler::new(hot.clone());
+        let mut s2 = ShvsSampler::new(hot);
+        for i in 0..50 {
+            let u = (
+                (i as f64 * 0.019) % 1.0,
+                (i as f64 * 0.037) % 1.0,
+                (i as f64 * 0.053) % 1.0,
+            );
+            assert_eq!(
+                s1.decide(&view, 0, &hist, &params, &pre, u),
+                s2.decide(&view, 0, &hist, &params, &pre, u)
+            );
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Hot-vocab sizing model (§5.4).
+//!
+//! Composes an affine CPU-cost model `T_cpu(H) = c·H + c0` (fit by least
+//! squares from a few measured points — Figure 11a) with an empirical,
+//! monotone-saturating hit-ratio curve `ᾱ(H)` (interpolated from traces —
+//! Figure 11b) into the expected decision cost
+//!
+//! `F(H) = c0 + c·(ᾱ(H)·H + (1 − ᾱ(H))·(V − H))`   (Eq. 10)
+//!
+//! whose interior minimizer `H*` satisfies the first-order condition
+//! `2ᾱ(H) + (2H − V)·ᾱ'(H) = 1` (Eq. 12). Because H is discrete, deployment
+//! enumerates around the continuous stationary point and takes the argmin —
+//! exactly the procedure the paper prescribes.
+
+use crate::metrics::stats::{affine_fit, Interp1};
+
+/// Fitted sizing model for one (model, platform) pair.
+#[derive(Debug, Clone)]
+pub struct SizingModel {
+    /// Per-visited-token scan cost (seconds).
+    pub c: f64,
+    /// Fixed per-sequence overhead (seconds).
+    pub c0: f64,
+    /// Fit quality of the affine cost model.
+    pub r2: f64,
+    /// Hit-ratio curve ᾱ(H).
+    pub alpha: Interp1,
+    /// Full vocabulary size V.
+    pub vocab: usize,
+}
+
+impl SizingModel {
+    /// Fit from measurements: `(H, hot-path seconds)` pairs for the cost
+    /// model and `(H, ᾱ)` knots for the hit-ratio curve.
+    pub fn fit(
+        cost_points: &[(f64, f64)],
+        alpha_knots: &[(f64, f64)],
+        vocab: usize,
+    ) -> SizingModel {
+        let xs: Vec<f64> = cost_points.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = cost_points.iter().map(|p| p.1).collect();
+        let (c, c0, r2) = affine_fit(&xs, &ys);
+        let ax: Vec<f64> = alpha_knots.iter().map(|p| p.0).collect();
+        let ay: Vec<f64> = alpha_knots.iter().map(|p| p.1).collect();
+        SizingModel { c, c0, r2, alpha: Interp1::new(ax, ay), vocab }
+    }
+
+    /// Construct directly from known constants (tests, what-if analyses).
+    pub fn from_parts(c: f64, c0: f64, alpha: Interp1, vocab: usize) -> SizingModel {
+        SizingModel { c, c0, r2: 1.0, alpha, vocab }
+    }
+
+    /// Expected decision cost F(H) (Eq. 10), seconds per sequence.
+    pub fn f(&self, h: f64) -> f64 {
+        let a = self.alpha.eval(h).clamp(0.0, 1.0);
+        let v = self.vocab as f64;
+        self.c0 + self.c * (a * h + (1.0 - a) * (v - h))
+    }
+
+    /// Predicted per-sampler throughput 1/F(H) (Figure 12b's overlay).
+    pub fn predicted_throughput(&self, h: f64) -> f64 {
+        let f = self.f(h);
+        if f > 0.0 {
+            1.0 / f
+        } else {
+            0.0
+        }
+    }
+
+    /// First-order-condition residual: `2ᾱ(H) + (2H − V)ᾱ'(H) − 1`
+    /// (Eq. 12 LHS − RHS). Zero at the stationary point.
+    pub fn foc_residual(&self, h: f64) -> f64 {
+        let a = self.alpha.eval(h);
+        let da = self.alpha.derivative(h);
+        2.0 * a + (2.0 * h - self.vocab as f64) * da - 1.0
+    }
+
+    /// Continuous stationary point H* via dF/dH sign scan + bisection over
+    /// the ᾱ knot domain. Falls back to the best scanned point if no sign
+    /// change exists (boundary optimum).
+    pub fn h_star_continuous(&self) -> f64 {
+        let (lo, hi) = self.alpha.domain();
+        let n = 512;
+        let step = (hi - lo) / n as f64;
+        let df = |h: f64| (self.f(h + step * 0.5) - self.f(h - step * 0.5)) / step;
+        let mut best_h = lo;
+        let mut best_f = f64::INFINITY;
+        let mut bracket: Option<(f64, f64)> = None;
+        let mut prev_h = lo + step;
+        let mut prev_df = df(prev_h);
+        for i in 2..n {
+            let h = lo + step * i as f64;
+            let d = df(h);
+            if prev_df < 0.0 && d >= 0.0 && bracket.is_none() {
+                bracket = Some((prev_h, h));
+            }
+            let fv = self.f(h);
+            if fv < best_f {
+                best_f = fv;
+                best_h = h;
+            }
+            prev_h = h;
+            prev_df = d;
+        }
+        if let Some((mut a, mut b)) = bracket {
+            for _ in 0..60 {
+                let m = 0.5 * (a + b);
+                if df(m) < 0.0 {
+                    a = m;
+                } else {
+                    b = m;
+                }
+            }
+            0.5 * (a + b)
+        } else {
+            best_h
+        }
+    }
+
+    /// Deployment choice: enumerate a candidate grid around the continuous
+    /// optimum (±50%, plus the knots) and return `argmin_H F(H)` as an
+    /// integer hot-vocab size.
+    pub fn h_star(&self) -> usize {
+        let hc = self.h_star_continuous();
+        let (lo, hi) = self.alpha.domain();
+        let mut candidates: Vec<f64> = Vec::new();
+        let from = (hc * 0.5).max(lo);
+        let to = (hc * 1.5).min(hi);
+        let steps = 256;
+        for i in 0..=steps {
+            candidates.push(from + (to - from) * i as f64 / steps as f64);
+        }
+        candidates.push(lo);
+        candidates.push(hi);
+        let best = candidates
+            .into_iter()
+            .min_by(|&a, &b| self.f(a).partial_cmp(&self.f(b)).unwrap())
+            .unwrap();
+        (best.round() as usize).clamp(1, self.vocab - 1)
+    }
+}
+
+/// Build the ᾱ(H) knots analytically from a Zipf-shaped token distribution
+/// (the offline-trace profiling substrate; model/policy-driven per §5.4).
+pub fn zipf_alpha_knots(vocab: usize, zipf_s: f64, num_knots: usize) -> Vec<(f64, f64)> {
+    let zipf = crate::rng::zipf::ZipfMandelbrot::zipf(vocab, zipf_s);
+    let mut knots = Vec::with_capacity(num_knots);
+    for i in 0..num_knots {
+        // geometric spacing: hit-ratio curves saturate, so resolve the head
+        let frac = (i + 1) as f64 / num_knots as f64;
+        let h = ((vocab as f64).powf(frac)).round().max(1.0) as usize;
+        knots.push((h as f64, zipf.head_mass(h)));
+    }
+    knots.dedup_by(|a, b| a.0 == b.0);
+    knots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(vocab: usize, s: f64) -> SizingModel {
+        let knots = zipf_alpha_knots(vocab, s, 24);
+        // paper's measured constants (Fig. 11a): c0 = 8.55e-6, c = 1.06e-8
+        let cost: Vec<(f64, f64)> = (1..=8)
+            .map(|i| {
+                let h = i as f64 * vocab as f64 / 8.0;
+                (h, 1.06e-8 * h + 8.55e-6)
+            })
+            .collect();
+        SizingModel::fit(&cost, &knots, vocab)
+    }
+
+    #[test]
+    fn fit_recovers_paper_constants() {
+        let m = model(152_064, 1.1);
+        assert!((m.c - 1.06e-8).abs() < 1e-12);
+        assert!((m.c0 - 8.55e-6).abs() < 1e-9);
+        assert!(m.r2 > 0.999999);
+    }
+
+    #[test]
+    fn f_has_interior_minimum() {
+        let m = model(152_064, 1.1);
+        let f_small = m.f(16.0);
+        let f_star = m.f(m.h_star() as f64);
+        let f_full = m.f(150_000.0);
+        assert!(f_star < f_small, "F(H*)={f_star} F(16)={f_small}");
+        assert!(f_star < f_full, "F(H*)={f_star} F(V)={f_full}");
+    }
+
+    #[test]
+    fn h_star_matches_brute_force() {
+        let m = model(32_768, 1.2);
+        let h_star = m.h_star();
+        // brute force over the full domain
+        let (lo, hi) = m.alpha.domain();
+        let mut best = lo;
+        let mut best_f = f64::INFINITY;
+        let mut h = lo;
+        while h <= hi {
+            let fv = m.f(h);
+            if fv < best_f {
+                best_f = fv;
+                best = h;
+            }
+            h += 1.0;
+        }
+        let rel = (m.f(h_star as f64) - best_f).abs() / best_f;
+        assert!(rel < 0.01, "F(h*)={} brute={best_f} at {best}", m.f(h_star as f64));
+    }
+
+    #[test]
+    fn foc_residual_changes_sign_around_h_star() {
+        let m = model(100_000, 1.1);
+        let hc = m.h_star_continuous();
+        // dF/dH = c * foc_residual ⇒ residual < 0 left of H*, > 0 right.
+        assert!(m.foc_residual(hc * 0.2) < 0.0);
+        assert!(m.foc_residual((hc * 4.0).min(m.alpha.domain().1 * 0.9)) > 0.0);
+    }
+
+    #[test]
+    fn steeper_zipf_gives_smaller_h_star() {
+        // More concentrated distributions need smaller hot sets.
+        let flat = model(100_000, 0.9).h_star();
+        let steep = model(100_000, 1.4).h_star();
+        assert!(
+            steep < flat,
+            "steep zipf H*={steep} should be < flat H*={flat}"
+        );
+    }
+
+    #[test]
+    fn throughput_is_inverse_cost() {
+        let m = model(50_000, 1.1);
+        let h = 1000.0;
+        assert!((m.predicted_throughput(h) * m.f(h) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_knots_monotone_saturating() {
+        let knots = zipf_alpha_knots(152_064, 1.1, 20);
+        for w in knots.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].1 >= w[0].1, "ᾱ must be monotone");
+        }
+        assert!(knots.last().unwrap().1 > 0.99);
+        // diminishing marginal gains (concavity, coarse check)
+        let first_gain = knots[1].1 - knots[0].1;
+        let last_gain = knots[knots.len() - 1].1 - knots[knots.len() - 2].1;
+        assert!(last_gain < first_gain);
+    }
+}

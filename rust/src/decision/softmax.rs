@@ -1,0 +1,152 @@
+//! Stable softmax helpers.
+//!
+//! The truncation-first path normalizes only on the filtered subset (done in
+//! [`super::filter`]); these dense helpers serve the baseline full-V
+//! samplers, the SHVS weight computation (Eq. 6), and test oracles.
+
+/// Stable softmax over a dense logits row at temperature τ, in place into
+/// `out` (f64 for accumulation accuracy). Returns the max logit used as the
+/// shift.
+pub fn softmax_dense(logits: &[f32], tau: f32, out: &mut Vec<f64>) -> f32 {
+    assert!(!logits.is_empty());
+    assert!(tau > 0.0, "softmax needs τ > 0 (use argmax for greedy)");
+    let z_max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    out.clear();
+    out.reserve(logits.len());
+    let inv = 1.0 / tau as f64;
+    let mut sum = 0.0f64;
+    for &z in logits {
+        let w = (((z - z_max) as f64) * inv).exp();
+        out.push(w);
+        sum += w;
+    }
+    let norm = 1.0 / sum;
+    for w in out.iter_mut() {
+        *w *= norm;
+    }
+    z_max
+}
+
+/// Stable unnormalized weights w_v = exp((z_v − z_max)/τ) (Eq. 6) plus their
+/// sum. The GPU-side SHVS precompute produces exactly these; the CPU reuses
+/// the same function for oracle checks.
+pub fn stable_weights(logits: &[f32], tau: f32, out: &mut Vec<f64>) -> (f32, f64) {
+    assert!(!logits.is_empty());
+    let z_max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    out.clear();
+    out.reserve(logits.len());
+    let inv = 1.0 / tau as f64;
+    let mut sum = 0.0f64;
+    for &z in logits {
+        let w = (((z - z_max) as f64) * inv).exp();
+        out.push(w);
+        sum += w;
+    }
+    (z_max, sum)
+}
+
+/// Argmax with lowest-id tie-break (greedy decoding).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_z = f32::NEG_INFINITY;
+    for (i, &z) in logits.iter().enumerate() {
+        if z > best_z {
+            best = i;
+            best_z = z;
+        }
+    }
+    best
+}
+
+/// Log-sum-exp of a logits row (for log-prob output).
+pub fn log_sum_exp(logits: &[f32], tau: f32) -> f64 {
+    let z_max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let inv = 1.0 / tau as f64;
+    let s: f64 = logits
+        .iter()
+        .map(|&z| (((z - z_max) as f64) * inv).exp())
+        .sum();
+    (z_max as f64) * inv + s.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let logits = [1.0f32, 2.0, 3.0, -5.0];
+        let mut probs = Vec::new();
+        softmax_dense(&logits, 1.0, &mut probs);
+        let s: f64 = probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        // monotone in logits
+        assert!(probs[2] > probs[1] && probs[1] > probs[0] && probs[0] > probs[3]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1001.0f32, 1002.0, 1003.0];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        softmax_dense(&a, 1.0, &mut pa);
+        softmax_dense(&b, 1.0, &mut pb);
+        for (x, y) in pa.iter().zip(&pb) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_extreme_logits() {
+        let logits = [-1e30f32, 0.0, 1e4];
+        let mut probs = Vec::new();
+        softmax_dense(&logits, 1.0, &mut probs);
+        assert!(probs.iter().all(|p| p.is_finite()));
+        assert!((probs[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn temperature_sharpens_and_flattens() {
+        let logits = [0.0f32, 1.0];
+        let mut cold = Vec::new();
+        let mut hot = Vec::new();
+        softmax_dense(&logits, 0.5, &mut cold);
+        softmax_dense(&logits, 2.0, &mut hot);
+        assert!(cold[1] > hot[1]); // low τ concentrates on the max
+    }
+
+    #[test]
+    fn stable_weights_match_softmax() {
+        let logits = [0.3f32, -1.2, 2.2, 0.0];
+        let tau = 0.8;
+        let mut w = Vec::new();
+        let (_, sum) = stable_weights(&logits, tau, &mut w);
+        let mut probs = Vec::new();
+        softmax_dense(&logits, tau, &mut probs);
+        for (wi, pi) in w.iter().zip(&probs) {
+            assert!((wi / sum - pi).abs() < 1e-12);
+        }
+        // max weight is exactly 1
+        let wmax = w.iter().cloned().fold(0.0f64, f64::max);
+        assert!((wmax - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_ties_break_low() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 0.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn lse_consistent_with_softmax() {
+        let logits = [0.5f32, 1.5, -0.5];
+        let tau = 1.0;
+        let lse = log_sum_exp(&logits, tau);
+        let mut probs = Vec::new();
+        softmax_dense(&logits, tau, &mut probs);
+        for (i, &z) in logits.iter().enumerate() {
+            let logp = (z as f64) / tau as f64 - lse;
+            assert!((logp.exp() - probs[i]).abs() < 1e-12);
+        }
+    }
+}

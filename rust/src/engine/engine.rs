@@ -1,0 +1,284 @@
+//! The serving engine: PJRT data plane + disaggregated decision plane.
+//!
+//! Per iteration (paper §4.2 ⓪–⑥):
+//! ⓪ the scheduler emits a scheduling output (admissions + slot plan);
+//! ① the PJRT runtime executes the decode step (GPU compute);
+//! ② ③ logits are transposed to vocabulary-major and "written" as
+//!   TP-sharded slices into the shared view ([`crate::tensor::shard_row_major`]);
+//! ④ ⑤ the sampler service reads its sequence partitions zero-copy and runs
+//!   SHVS with the kernel-produced precompute;
+//! ⑥ decisions are committed, finished sequences retired.
+//!
+//! The `GpuEpilogue` variant instead samples inline on the engine thread
+//! right after the forward — the serial last-stage epilogue the paper's
+//! baselines exhibit — so both architectures are measurable end to end on
+//! the same host.
+
+use crate::config::{DecisionVariant, EngineConfig};
+use crate::decision::penalties::BatchHistory;
+use crate::decision::service::{ColumnMeta, IterationTask, SamplerService};
+use crate::decision::{DecisionPipeline, HotVocab, Precompute};
+use crate::engine::kvcache::KvAllocator;
+use crate::engine::request::Request;
+use crate::engine::scheduler::Scheduler;
+use crate::metrics::Recorder;
+use crate::runtime::ModelRuntime;
+use crate::tensor::{shard_row_major, Tensor2};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// End-to-end engine over a loaded PJRT model.
+pub struct PjrtEngine {
+    runtime: ModelRuntime,
+    scheduler: Scheduler,
+    service: Option<SamplerService>,
+    inline_pipe: Option<DecisionPipeline>,
+    inline_hist: HashMap<u64, BatchHistory>,
+    tp_shards: usize,
+    pub recorder: Recorder,
+    t0: Instant,
+    variant: DecisionVariant,
+    max_seq_len: usize,
+    /// (fast_path_hits, decisions) tallies from the service at shutdown.
+    pub sampler_stats: Vec<crate::decision::service::SamplerStats>,
+}
+
+impl PjrtEngine {
+    /// Build from a loaded runtime. `cfg.sampler.variant` picks the decision
+    /// plane; `cfg.parallel.tp` controls the simulated logits sharding.
+    pub fn new(mut runtime: ModelRuntime, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
+        let b = runtime.batch();
+        let max_seq_len = runtime.max_seq();
+        // KV accounting: enough blocks for every slot to run to max_seq.
+        let kv = KvAllocator::new(
+            b * max_seq_len.div_ceil(cfg.kv_block_tokens),
+            cfg.kv_block_tokens,
+        );
+        let scheduler = Scheduler::new(b, kv, max_seq_len);
+        if let Some(h) = &hot {
+            runtime.set_hot_vocab(h);
+        }
+        let variant = cfg.sampler.variant;
+        let inline_epilogue = matches!(variant, DecisionVariant::GpuEpilogue);
+        let (service, inline_pipe) = if inline_epilogue {
+            (
+                None,
+                Some(DecisionPipeline::new(
+                    DecisionVariant::NaiveCpu,
+                    None,
+                    cfg.sampler.seed,
+                )),
+            )
+        } else {
+            (
+                Some(SamplerService::start(&cfg.sampler, hot, max_seq_len)),
+                None,
+            )
+        };
+        PjrtEngine {
+            runtime,
+            scheduler,
+            service,
+            inline_pipe,
+            inline_hist: HashMap::new(),
+            tp_shards: cfg.parallel.tp.max(1),
+            recorder: Recorder::new(),
+            t0: Instant::now(),
+            variant,
+            max_seq_len,
+            sampler_stats: Vec::new(),
+        }
+    }
+
+    pub fn variant(&self) -> DecisionVariant {
+        self.variant
+    }
+
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Submit a request (its `arrival` field gates open-loop admission).
+    pub fn submit(&mut self, req: Request) {
+        assert!(
+            req.prompt.len() + 2 < self.max_seq_len,
+            "prompt ({} tokens) too long for model (max_seq {})",
+            req.prompt.len(),
+            self.max_seq_len
+        );
+        self.recorder.on_arrival(req.id, req.arrival.max(0.0));
+        self.scheduler.submit(req);
+    }
+
+    /// Run one iteration. Returns false when idle.
+    pub fn step_once(&mut self) -> crate::Result<bool> {
+        if self.scheduler.is_idle() {
+            return Ok(false);
+        }
+        let now = self.now();
+        let plan = self.scheduler.plan(now);
+        if plan.slots.is_empty() {
+            // nothing runnable yet (future arrivals)
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            return Ok(true);
+        }
+
+        // Register admissions with the decision plane.
+        for &seq_id in &plan.admitted {
+            let slot_plan = plan.slots.iter().find(|s| s.seq_id == seq_id).unwrap();
+            let seq = self
+                .scheduler_seq(slot_plan.slot)
+                .expect("admitted sequence in slot");
+            let prompt = seq.request.prompt.clone();
+            let params = seq.request.params.clone();
+            let grammar = seq.request.grammar.clone();
+            if let Some(svc) = &self.service {
+                svc.register_with_grammar(seq_id, &prompt, &params, grammar);
+            } else {
+                self.inline_hist
+                    .insert(seq_id, BatchHistory::new(&[prompt], self.max_seq_len));
+            }
+        }
+
+        // ① GPU compute (PJRT decode step).
+        let b = self.runtime.batch();
+        let mut ids = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut tau = vec![1.0f32; b];
+        for sp in &plan.slots {
+            ids[sp.slot] = sp.input_token as i32;
+            positions[sp.slot] = sp.position as i32;
+            let seq = self.scheduler_seq(sp.slot).unwrap();
+            let t = seq.request.params.temperature;
+            tau[sp.slot] = if t > 0.0 { t } else { 1.0 };
+        }
+        let fwd_start = self.now();
+        let out = self.runtime.step(&ids, &positions, &tau)?;
+        let fwd_end = self.now();
+        self.recorder.on_busy("gpu", fwd_start, fwd_end);
+
+        // ②③ vocabulary-major TP-sharded view (the "logits write").
+        let vocab = self.runtime.vocab();
+        let logits = Tensor2::from_vec(b, vocab, out.logits);
+        let view = shard_row_major(&logits, self.tp_shards);
+        let pre: Vec<Precompute> = out
+            .stats
+            .iter()
+            .map(|s| Precompute {
+                z_max: s[0],
+                tail_sum: s[2] as f64,
+                tail_max_w: s[3] as f64,
+            })
+            .collect();
+
+        // ④⑤ decision plane.
+        let decision_cols: Vec<ColumnMeta> = plan
+            .slots
+            .iter()
+            .filter(|sp| sp.needs_decision)
+            .map(|sp| ColumnMeta {
+                col: sp.slot,
+                seq_id: sp.seq_id,
+                iteration: sp.decode_iter,
+            })
+            .collect();
+        let mut decided: Vec<(usize, u64, u32)> = Vec::new();
+        if !decision_cols.is_empty() {
+            if self.service.is_some() {
+                {
+                    let svc = self.service.as_ref().unwrap();
+                    let iter = plan.iter;
+                    let n = decision_cols.len();
+                    svc.submit(IterationTask {
+                        iter,
+                        view,
+                        columns: Arc::new(decision_cols),
+                        pre: Arc::new(pre),
+                    });
+                    let (decisions, busy) = svc.collect(iter, n);
+                    let t = self.now();
+                    self.recorder.on_busy("cpu", t - busy, t);
+                    for (col, seq, d) in decisions {
+                        decided.push((col, seq, d.token));
+                    }
+                }
+            } else {
+                {
+                    // Serial GPU-epilogue baseline: decide inline, single
+                    // thread, naive full-V kernels.
+                    let ep_start = self.t0.elapsed().as_secs_f64();
+                    for meta in &decision_cols {
+                        let params = self
+                            .scheduler
+                            .slot(meta.col)
+                            .unwrap()
+                            .request
+                            .params
+                            .clone();
+                        let hist = self.inline_hist.get(&meta.seq_id).expect("registered");
+                        let pipe = self.inline_pipe.as_mut().unwrap();
+                        let d = pipe.decide(
+                            &view,
+                            meta.col,
+                            hist,
+                            0, // single-column history per sequence
+                            &params,
+                            None,
+                            meta.seq_id,
+                            meta.iteration,
+                        );
+                        decided.push((meta.col, meta.seq_id, d.token));
+                    }
+                    let ep_end = self.t0.elapsed().as_secs_f64();
+                    // the epilogue extends the GPU stage (the holdout!)
+                    self.recorder.on_busy("gpu", ep_start, ep_end);
+                    for &(_, seq, token) in &decided {
+                        if let Some(h) = self.inline_hist.get_mut(&seq) {
+                            h.append_row(&[token]);
+                        }
+                    }
+                }
+            }
+        }
+
+        // ⑥ commit + retire.
+        let t_commit = self.now();
+        for (slot, seq_id, token) in decided {
+            self.recorder.on_token(seq_id, t_commit);
+            if let Some(finished) = self.scheduler.commit(slot, token) {
+                self.recorder.on_finish(finished, t_commit);
+                if let Some(svc) = &self.service {
+                    svc.retire(finished);
+                }
+                self.inline_hist.remove(&finished);
+                self.runtime.reset_kv_slot(slot);
+            }
+        }
+        self.scheduler.advance();
+        Ok(true)
+    }
+
+    fn scheduler_seq(&self, slot: usize) -> Option<&crate::engine::request::Sequence> {
+        self.scheduler.slot(slot)
+    }
+
+    /// Run to completion (closed loop or fully-submitted open loop).
+    pub fn run_until_idle(&mut self) -> crate::Result<crate::metrics::ServingSummary> {
+        while self.step_once()? {}
+        Ok(self.recorder.summary())
+    }
+
+    /// Drain finished sequences (outputs).
+    pub fn take_finished(&mut self) -> Vec<crate::engine::request::Sequence> {
+        self.scheduler.take_finished()
+    }
+
+    /// Shut the decision plane down, collecting sampler stats.
+    pub fn shutdown(mut self) -> (Recorder, Vec<crate::decision::service::SamplerStats>) {
+        if let Some(svc) = self.service.take() {
+            self.sampler_stats = svc.shutdown();
+        }
+        (self.recorder, self.sampler_stats)
+    }
+}

@@ -1,0 +1,195 @@
+//! Paged KV-cache block allocator (vLLM-style substrate).
+//!
+//! The engine admits sequences only when blocks are available, extends a
+//! sequence's block list as it grows, and frees on retirement. This governs
+//! admission/preemption exactly as in PagedAttention-based engines; the
+//! tiny PJRT model uses dense per-slot caches underneath, so here the pages
+//! are an *accounting* structure (host-memory figures in Table 3 come from
+//! it), with the same invariants as a real allocator.
+
+/// Allocator over `num_blocks` fixed-size blocks of `block_tokens` tokens.
+#[derive(Debug)]
+pub struct KvAllocator {
+    block_tokens: usize,
+    free: Vec<u32>,
+    num_blocks: usize,
+    /// blocks[seq] = allocated block ids, in append order.
+    tables: std::collections::HashMap<u64, Vec<u32>>,
+}
+
+impl KvAllocator {
+    pub fn new(num_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        KvAllocator {
+            block_tokens,
+            free: (0..num_blocks as u32).rev().collect(),
+            num_blocks,
+            tables: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a new sequence of `tokens` tokens be admitted?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Reserve blocks for a new sequence covering `tokens` tokens.
+    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::AlreadyAdmitted(seq));
+        }
+        let need = self.blocks_for(tokens).max(1);
+        if need > self.free.len() {
+            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(seq, blocks);
+        Ok(())
+    }
+
+    /// Grow a sequence to cover `tokens` tokens (allocates on block-boundary
+    /// crossings only).
+    pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        let need = self.blocks_for(tokens).max(1);
+        let table = self.tables.get_mut(&seq).ok_or(KvError::Unknown(seq))?;
+        while table.len() < need {
+            match self.free.pop() {
+                Some(b) => table.push(b),
+                None => {
+                    return Err(KvError::OutOfBlocks { need, free: 0 });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Release all blocks of a retired sequence.
+    pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
+        let blocks = self.tables.remove(&seq).ok_or(KvError::Unknown(seq))?;
+        self.free.extend(blocks);
+        Ok(())
+    }
+
+    /// Block table of a sequence (physical block ids).
+    pub fn table(&self, seq: u64) -> Option<&[u32]> {
+        self.tables.get(&seq).map(|v| v.as_slice())
+    }
+
+    /// Invariant check: every block is either free or owned by exactly one
+    /// sequence. Used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.num_blocks];
+        for &b in &self.free {
+            let i = b as usize;
+            if seen[i] {
+                return Err(format!("block {b} double-counted (free)"));
+            }
+            seen[i] = true;
+        }
+        for (seq, table) in &self.tables {
+            for &b in table {
+                let i = b as usize;
+                if seen[i] {
+                    return Err(format!("block {b} double-counted (seq {seq})"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked blocks".into());
+        }
+        Ok(())
+    }
+}
+
+/// Allocator error.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("sequence {0} already admitted")]
+    AlreadyAdmitted(u64),
+    #[error("sequence {0} unknown")]
+    Unknown(u64),
+    #[error("out of KV blocks: need {need}, free {free}")]
+    OutOfBlocks { need: usize, free: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_grow_release_roundtrip() {
+        let mut a = KvAllocator::new(10, 16);
+        a.admit(1, 20).unwrap(); // 2 blocks
+        assert_eq!(a.used_blocks(), 2);
+        a.grow(1, 33).unwrap(); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        a.grow(1, 33).unwrap(); // no-op
+        assert_eq!(a.used_blocks(), 3);
+        a.release(1).unwrap();
+        assert_eq!(a.used_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut a = KvAllocator::new(4, 16);
+        assert!(a.can_admit(64));
+        assert!(!a.can_admit(65));
+        a.admit(1, 48).unwrap(); // 3 blocks
+        assert!(a.can_admit(16));
+        assert!(!a.can_admit(17));
+        assert_eq!(
+            a.admit(2, 32).unwrap_err(),
+            KvError::OutOfBlocks { need: 2, free: 1 }
+        );
+    }
+
+    #[test]
+    fn double_admit_and_unknown_release_error() {
+        let mut a = KvAllocator::new(4, 16);
+        a.admit(1, 1).unwrap();
+        assert_eq!(a.admit(1, 1).unwrap_err(), KvError::AlreadyAdmitted(1));
+        assert_eq!(a.release(9).unwrap_err(), KvError::Unknown(9));
+    }
+
+    #[test]
+    fn grow_failure_keeps_partial_consistent() {
+        let mut a = KvAllocator::new(2, 4);
+        a.admit(1, 4).unwrap();
+        // needs 3 blocks total, only 1 free -> error, but invariants hold
+        assert!(matches!(a.grow(1, 12), Err(KvError::OutOfBlocks { .. })));
+        a.check_invariants().unwrap();
+        a.release(1).unwrap();
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    fn block_tables_are_disjoint() {
+        let mut a = KvAllocator::new(8, 4);
+        a.admit(1, 8).unwrap();
+        a.admit(2, 8).unwrap();
+        let t1: Vec<u32> = a.table(1).unwrap().to_vec();
+        let t2: Vec<u32> = a.table(2).unwrap().to_vec();
+        assert!(t1.iter().all(|b| !t2.contains(b)));
+        a.check_invariants().unwrap();
+    }
+}

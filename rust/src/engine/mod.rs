@@ -1,0 +1,13 @@
+//! Serving engine: requests, continuous-batching scheduler, paged KV
+//! accounting, tokenizer, and the PJRT-backed end-to-end engine.
+
+pub mod engine;
+pub mod kvcache;
+pub mod request;
+pub mod scheduler;
+pub mod tokenizer;
+
+pub use engine::PjrtEngine;
+pub use kvcache::KvAllocator;
+pub use request::{Phase, Request, Sequence};
+pub use scheduler::{Scheduler, SchedulingOutput, SlotPlan};

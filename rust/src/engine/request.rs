@@ -1,0 +1,170 @@
+//! Request and sequence state.
+
+use crate::decision::grammar::GrammarConstraint;
+use crate::decision::SamplingParams;
+use std::sync::Arc;
+
+/// An inference request as admitted by the engine.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    pub max_new_tokens: usize,
+    /// Stop token (engine-level EOS detection). None = run to max_new_tokens.
+    pub eos_token: Option<u32>,
+    /// Arrival time, seconds from engine start (0 for closed-loop).
+    pub arrival: f64,
+    /// Structured-decoding constraint (§9 extension iii): samplers restrict
+    /// every decision to tokens that keep this grammar alive.
+    pub grammar: Option<Arc<GrammarConstraint>>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            params: SamplingParams::production_default(),
+            max_new_tokens,
+            eos_token: None,
+            arrival: 0.0,
+            grammar: None,
+        }
+    }
+}
+
+/// Lifecycle phase of a running sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Feeding prompt tokens (no sampling needed yet).
+    Prefill,
+    /// Generating output tokens (each iteration samples one).
+    Decode,
+    Finished,
+}
+
+/// A scheduled sequence occupying a batch slot.
+#[derive(Debug)]
+pub struct Sequence {
+    pub request: Request,
+    /// Tokens generated so far.
+    pub output: Vec<u32>,
+    /// Next position to feed (number of tokens already in the KV cache).
+    pub position: usize,
+    pub phase: Phase,
+    /// Batch slot currently occupied.
+    pub slot: usize,
+}
+
+impl Sequence {
+    pub fn new(request: Request, slot: usize) -> Sequence {
+        assert!(!request.prompt.is_empty(), "empty prompt");
+        Sequence { request, output: Vec::new(), position: 0, phase: Phase::Prefill, slot }
+    }
+
+    /// The token to feed at the current position.
+    pub fn input_token(&self) -> u32 {
+        let p = &self.request.prompt;
+        if self.position < p.len() {
+            p[self.position]
+        } else {
+            self.output[self.position - p.len()]
+        }
+    }
+
+    /// Whether this iteration's forward output needs a sampling decision
+    /// (true once the whole prompt is in: the logits at the last prompt
+    /// token predict the first output token).
+    pub fn needs_decision(&self) -> bool {
+        self.phase != Phase::Finished && self.position + 1 >= self.request.prompt.len()
+    }
+
+    /// Total tokens resident in the KV cache after feeding `position`.
+    pub fn kv_len(&self) -> usize {
+        self.position + 1
+    }
+
+    /// Record a sampled token; returns true if the sequence finished.
+    pub fn commit_token(&mut self, token: u32) -> bool {
+        debug_assert!(self.needs_decision());
+        self.output.push(token);
+        self.phase = Phase::Decode;
+        let eos = self.request.eos_token == Some(token);
+        if eos || self.output.len() >= self.request.max_new_tokens {
+            self.phase = Phase::Finished;
+            return true;
+        }
+        false
+    }
+
+    /// Advance to the next position (after the forward step).
+    pub fn advance(&mut self) {
+        self.position += 1;
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.request.prompt.len() + self.output.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: usize, max_new: usize) -> Request {
+        Request::new(1, (0..prompt as u32).collect(), max_new)
+    }
+
+    #[test]
+    fn prefill_feeds_prompt_tokens() {
+        let mut s = Sequence::new(req(3, 4), 0);
+        assert_eq!(s.input_token(), 0);
+        assert!(!s.needs_decision()); // position 0 of 3-token prompt
+        s.advance();
+        assert_eq!(s.input_token(), 1);
+        assert!(!s.needs_decision());
+        s.advance();
+        assert_eq!(s.input_token(), 2);
+        assert!(s.needs_decision()); // last prompt token -> sample now
+    }
+
+    #[test]
+    fn decode_feeds_generated_tokens() {
+        let mut s = Sequence::new(req(2, 4), 0);
+        s.advance(); // fed token 0; now at last prompt token
+        assert!(s.needs_decision());
+        assert!(!s.commit_token(77));
+        s.advance();
+        assert_eq!(s.input_token(), 77);
+        assert_eq!(s.phase, Phase::Decode);
+        assert_eq!(s.kv_len(), 3);
+    }
+
+    #[test]
+    fn finishes_on_max_tokens() {
+        let mut s = Sequence::new(req(1, 2), 0);
+        assert!(!s.commit_token(5));
+        s.advance();
+        assert!(s.commit_token(6));
+        assert_eq!(s.phase, Phase::Finished);
+        assert_eq!(s.output, vec![5, 6]);
+    }
+
+    #[test]
+    fn finishes_on_eos() {
+        let mut r = req(1, 100);
+        r.eos_token = Some(9);
+        let mut s = Sequence::new(r, 0);
+        assert!(!s.commit_token(5));
+        s.advance();
+        assert!(s.commit_token(9));
+        assert_eq!(s.phase, Phase::Finished);
+    }
+
+    #[test]
+    fn single_token_prompt_samples_immediately() {
+        let s = Sequence::new(req(1, 4), 0);
+        assert!(s.needs_decision());
+    }
+}

@@ -1,0 +1,70 @@
+//! Toy byte-level tokenizer for the runnable examples.
+//!
+//! Token ids: 0 = PAD, 1 = BOS, 2 = EOS, 3..258 = raw bytes. Any vocab
+//! ≥ 259 can round-trip arbitrary UTF-8; the AOT models' vocabularies are
+//! far larger, so ids above 258 only ever appear as *generated* tokens and
+//! are rendered as `⟨id⟩` placeholders.
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+const BYTE_BASE: u32 = 3;
+
+/// Encode text as BOS + bytes.
+pub fn encode(text: &str) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| BYTE_BASE + b as u32));
+    out
+}
+
+/// Decode ids back to text (non-byte ids become `⟨id⟩`).
+pub fn decode(ids: &[u32]) -> String {
+    let mut bytes = Vec::new();
+    let mut out = String::new();
+    let flush = |bytes: &mut Vec<u8>, out: &mut String| {
+        if !bytes.is_empty() {
+            out.push_str(&String::from_utf8_lossy(bytes));
+            bytes.clear();
+        }
+    };
+    for &id in ids {
+        match id {
+            PAD | BOS | EOS => flush(&mut bytes, &mut out),
+            _ if id >= BYTE_BASE && id < BYTE_BASE + 256 => {
+                bytes.push((id - BYTE_BASE) as u8)
+            }
+            other => {
+                flush(&mut bytes, &mut out);
+                out.push_str(&format!("⟨{other}⟩"));
+            }
+        }
+    }
+    flush(&mut bytes, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii_and_utf8() {
+        for text in ["hello world", "héllo → 世界", ""] {
+            let ids = encode(text);
+            assert_eq!(ids[0], BOS);
+            assert_eq!(decode(&ids), text);
+        }
+    }
+
+    #[test]
+    fn non_byte_ids_render_as_placeholders() {
+        let out = decode(&[BOS, 3 + b'h' as u32, 999]);
+        assert_eq!(out, "h⟨999⟩");
+    }
+
+    #[test]
+    fn specials_are_silent() {
+        assert_eq!(decode(&[PAD, EOS, BOS]), "");
+    }
+}

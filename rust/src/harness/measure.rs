@@ -1,0 +1,307 @@
+//! Measured decision-plane calibration.
+//!
+//! Everything the simulator needs about the decision plane is *measured*
+//! here on this host, never modelled: per-sequence decision cost for each
+//! ablation variant, the SHVS hit-ratio curve ᾱ(H), and the fitted sizing
+//! model of §5.4.
+
+use crate::config::DecisionVariant;
+use crate::decision::penalties::BatchHistory;
+use crate::decision::sizing::SizingModel;
+use crate::decision::{DecisionPipeline, HotVocab, Precompute, SamplingParams};
+use crate::rng::Philox;
+use crate::tensor::{shard_row_major, ShardedLogits, Tensor2};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Synthetic Zipf-shaped logits generator: rank-based head + Gaussian noise,
+/// under a seed-stable id permutation (so hot ids aren't trivially 0..H).
+pub struct LogitsGen {
+    pub vocab: usize,
+    zipf_s: f64,
+    rank_of_id: Vec<u32>,
+    seed: u64,
+}
+
+impl LogitsGen {
+    pub fn new(vocab: usize, zipf_s: f64, seed: u64) -> LogitsGen {
+        let mut rng = Philox::new(seed ^ 0xFEED);
+        let mut id_of_rank: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut id_of_rank);
+        let mut rank_of_id = vec![0u32; vocab];
+        for (rank, &id) in id_of_rank.iter().enumerate() {
+            rank_of_id[id as usize] = rank as u32;
+        }
+        LogitsGen { vocab, zipf_s, rank_of_id, seed }
+    }
+
+    /// The top-`h` ids by rank — the matching hot vocabulary.
+    pub fn hot_vocab(&self, h: usize) -> HotVocab {
+        let ids: Vec<u32> = (0..self.vocab as u32)
+            .filter(|&id| (self.rank_of_id[id as usize] as usize) < h)
+            .collect();
+        HotVocab::new(ids, self.vocab)
+    }
+
+    /// Row-major [batch, V] logits for one iteration.
+    pub fn batch_logits(&self, batch: usize, iter: u64) -> Tensor2 {
+        let mut data = vec![0.0f32; batch * self.vocab];
+        for b in 0..batch {
+            let mut rng =
+                Philox::at(self.seed, ((b as u128) << 64) | ((iter as u128) << 32));
+            let row = &mut data[b * self.vocab..(b + 1) * self.vocab];
+            for (id, z) in row.iter_mut().enumerate() {
+                let rank = self.rank_of_id[id] as f64;
+                *z = (-self.zipf_s * (rank + 2.0).ln()) as f32
+                    + rng.next_normal() as f32 * 0.7;
+            }
+        }
+        Tensor2::from_vec(batch, self.vocab, data)
+    }
+
+    /// Sharded view for one iteration.
+    pub fn view(&self, batch: usize, iter: u64, shards: usize) -> ShardedLogits {
+        shard_row_major(&self.batch_logits(batch, iter), shards)
+    }
+}
+
+/// Measured per-variant decision costs (seconds per sequence).
+#[derive(Debug, Clone)]
+pub struct DecisionCalibration {
+    pub vocab: usize,
+    pub hot_size: usize,
+    pub per_seq: Vec<(DecisionVariant, f64)>,
+    /// Mean SHVS acceptance at the calibrated hot size.
+    pub shvs_alpha: f64,
+}
+
+impl DecisionCalibration {
+    pub fn per_seq_s(&self, v: DecisionVariant) -> f64 {
+        self.per_seq
+            .iter()
+            .find(|(var, _)| *var == v)
+            .map(|&(_, s)| s)
+            .expect("variant measured")
+    }
+}
+
+/// Measure per-sequence decision time for one variant.
+///
+/// GPU-side work (the SHVS precompute) is excluded from the timed region —
+/// it ships with the logits in the real system.
+pub fn measure_variant(
+    gen: &LogitsGen,
+    variant: DecisionVariant,
+    hot: Option<Arc<HotVocab>>,
+    params: &SamplingParams,
+    iters: u64,
+) -> (f64, f64) {
+    let mut pipe = DecisionPipeline::new(variant, hot.clone(), 0xBEEF);
+    let mut hist = BatchHistory::new(&[vec![1, 2, 3]], (iters + 8) as usize);
+    let tau = params.temperature.max(1e-6);
+    // Pre-generate views + precomputes outside the timed loop.
+    let warm = 2u64.min(iters);
+    let mut total = 0.0f64;
+    let mut measured = 0u64;
+    for it in 0..iters + warm {
+        let view = gen.view(1, it, 1);
+        let pre = hot
+            .as_ref()
+            .map(|h| Precompute::reference(&view, 0, h, tau));
+        let t0 = Instant::now();
+        let d = pipe.decide(&view, 0, &hist, 0, params, pre.as_ref(), 0, it);
+        let dt = t0.elapsed().as_secs_f64();
+        hist.append_row(&[d.token]);
+        if it >= warm {
+            total += dt;
+            measured += 1;
+        }
+    }
+    (total / measured as f64, pipe.mean_alpha())
+}
+
+/// Calibrate all CPU variants at a given vocabulary size.
+pub fn calibrate(vocab: usize, hot_size: usize, iters: u64) -> DecisionCalibration {
+    let gen = LogitsGen::new(vocab, 1.1, 42);
+    let hot = gen.hot_vocab(hot_size).into_arc();
+    let params = SamplingParams::production_default();
+    let mut per_seq = Vec::new();
+    let mut shvs_alpha = 0.0;
+    for variant in [
+        DecisionVariant::NaiveCpu,
+        DecisionVariant::Parallel,
+        DecisionVariant::Offloading,
+        DecisionVariant::Shvs,
+    ] {
+        let h = matches!(variant, DecisionVariant::Shvs).then(|| hot.clone());
+        let (t, alpha) = measure_variant(&gen, variant, h, &params, iters);
+        if variant == DecisionVariant::Shvs {
+            shvs_alpha = alpha;
+        }
+        per_seq.push((variant, t));
+    }
+    DecisionCalibration { vocab, hot_size, per_seq, shvs_alpha }
+}
+
+/// Measure the hit-ratio curve ᾱ(H): hot-set probability mass, averaged
+/// over synthetic iterations (model/policy property, §5.4).
+pub fn measure_alpha_curve(
+    gen: &LogitsGen,
+    h_points: &[usize],
+    iters: u64,
+) -> Vec<(f64, f64)> {
+    let mut knots = Vec::with_capacity(h_points.len());
+    for &h in h_points {
+        let hot = gen.hot_vocab(h);
+        let mut alpha_sum = 0.0;
+        for it in 0..iters {
+            let view = gen.view(1, it, 1);
+            let pre = Precompute::reference(&view, 0, &hot, 1.0);
+            // hot mass from the tail sum + total
+            let mut total = 0.0f64;
+            view.for_each_logit(0, |_, z| {
+                total += ((z - pre.z_max) as f64).exp();
+            });
+            alpha_sum += (total - pre.tail_sum) / total;
+        }
+        knots.push((h as f64, alpha_sum / iters as f64));
+    }
+    knots
+}
+
+/// Measure SHVS *hot-path* time at several H values and fit the affine
+/// cost model T_cpu(H) = cH + c0 (Figure 11a). Uses unfiltered sampling so
+/// the fast path dominates, and reports only fast-path times.
+pub fn measure_hot_path_costs(
+    gen: &LogitsGen,
+    h_points: &[usize],
+    iters: u64,
+) -> Vec<(f64, f64)> {
+    let params = SamplingParams {
+        temperature: 0.9,
+        ..Default::default() // no filters: pure hot/tail rejection path
+    };
+    let n_views = iters.min(8) as usize;
+    let views: Vec<_> = (0..n_views).map(|i| gen.view(1, i as u64, 1)).collect();
+    let mut points = Vec::with_capacity(h_points.len());
+    for &h in h_points {
+        let hot = gen.hot_vocab(h).into_arc();
+        let pres: Vec<_> = views
+            .iter()
+            .map(|v| Precompute::reference(v, 0, &hot, params.temperature))
+            .collect();
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Shvs, Some(hot.clone()), 7);
+        let hist = BatchHistory::new(&[vec![]], 4);
+        let mut total = 0.0;
+        let mut count = 0u64;
+        for it in 0..iters {
+            let i = it as usize % n_views;
+            let t0 = Instant::now();
+            let d = pipe.decide(&views[i], 0, &hist, 0, &params, Some(&pres[i]), 0, it);
+            let dt = t0.elapsed().as_secs_f64();
+            if d.fast_path {
+                total += dt;
+                count += 1;
+            }
+        }
+        if count > 0 {
+            points.push((h as f64, total / count as f64));
+        }
+    }
+    points
+}
+
+/// Fit the full §5.4 sizing model from measurements.
+pub fn fit_sizing_model(vocab: usize, zipf_s: f64, iters: u64) -> SizingModel {
+    let gen = LogitsGen::new(vocab, zipf_s, 42);
+    let h_points: Vec<usize> = geometric_points(vocab, 10);
+    let costs = measure_hot_path_costs(&gen, &h_points, iters);
+    let alphas = measure_alpha_curve(&gen, &h_points, iters.min(16));
+    SizingModel::fit(&costs, &alphas, vocab)
+}
+
+/// Geometric grid of H values up to ~V/2.
+pub fn geometric_points(vocab: usize, n: usize) -> Vec<usize> {
+    let lo = 64.0f64.min(vocab as f64 / 4.0).max(2.0);
+    let hi = vocab as f64 / 2.0;
+    let mut pts: Vec<usize> = (0..n)
+        .map(|i| {
+            let f = i as f64 / (n - 1) as f64;
+            (lo * (hi / lo).powf(f)).round() as usize
+        })
+        .collect();
+    pts.dedup();
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_gen_is_zipf_headed() {
+        let gen = LogitsGen::new(2000, 1.1, 1);
+        let hot = gen.hot_vocab(200);
+        assert_eq!(hot.len(), 200);
+        let view = gen.view(1, 0, 1);
+        let pre = Precompute::reference(&view, 0, &hot, 1.0);
+        let mut total = 0.0f64;
+        view.for_each_logit(0, |_, z| total += ((z - pre.z_max) as f64).exp());
+        let alpha = (total - pre.tail_sum) / total;
+        assert!(alpha > 0.5, "head mass {alpha}");
+    }
+
+    #[test]
+    fn logits_vary_across_iterations_and_sequences() {
+        let gen = LogitsGen::new(500, 1.1, 2);
+        let a = gen.batch_logits(2, 0);
+        let b = gen.batch_logits(2, 1);
+        assert_ne!(a.row(0), b.row(0), "iterations differ");
+        assert_ne!(a.row(0), a.row(1), "sequences differ");
+        // deterministic
+        let a2 = gen.batch_logits(2, 0);
+        assert_eq!(a.row(0), a2.row(0));
+    }
+
+    #[test]
+    fn calibration_orders_the_ablation_ladder() {
+        // Figure 10's qualitative claim at micro scale: each step of the
+        // ladder is at least as fast as the previous.
+        let cal = calibrate(32_000, 6_400, 20);
+        let naive = cal.per_seq_s(DecisionVariant::NaiveCpu);
+        let offload = cal.per_seq_s(DecisionVariant::Offloading);
+        let shvs = cal.per_seq_s(DecisionVariant::Shvs);
+        assert!(offload < naive, "offload {offload} vs naive {naive}");
+        assert!(shvs < offload, "shvs {shvs} vs offload {offload}");
+        assert!(cal.shvs_alpha > 0.0);
+    }
+
+    #[test]
+    fn alpha_curve_monotone() {
+        let gen = LogitsGen::new(4_000, 1.1, 3);
+        let knots = measure_alpha_curve(&gen, &[64, 256, 1024, 2000], 6);
+        for w in knots.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "ᾱ must grow with H: {knots:?}");
+        }
+    }
+
+    #[test]
+    fn hot_path_cost_grows_with_h() {
+        let gen = LogitsGen::new(16_000, 1.1, 4);
+        let pts = measure_hot_path_costs(&gen, &[256, 8_000], 40);
+        assert_eq!(pts.len(), 2);
+        assert!(
+            pts[1].1 > pts[0].1,
+            "H=8000 must cost more than H=256: {pts:?}"
+        );
+    }
+
+    #[test]
+    fn geometric_points_span() {
+        let pts = geometric_points(152_064, 10);
+        assert!(pts.len() >= 8);
+        assert!(pts[0] <= 100);
+        assert!(*pts.last().unwrap() >= 70_000);
+        assert!(pts.windows(2).all(|w| w[1] > w[0]));
+    }
+}

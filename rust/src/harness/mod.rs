@@ -1,0 +1,88 @@
+//! Figure/table regeneration harnesses — one driver per paper experiment
+//! (DESIGN.md §4 maps each to its modules). Every driver returns a
+//! [`Report`] (markdown + JSON series) and can write it under `results/`.
+
+pub mod e2e;
+pub mod exactness;
+pub mod holdout;
+pub mod measure;
+pub mod micro;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One regenerated experiment.
+pub struct Report {
+    /// Paper id, e.g. "fig3", "table3".
+    pub id: &'static str,
+    pub title: String,
+    /// Markdown rendering (tables/series) for humans.
+    pub markdown: String,
+    /// Machine-readable series.
+    pub json: Json,
+}
+
+impl Report {
+    /// Write `results/<id>.md` and `results/<id>.json`.
+    pub fn write(&self, results_dir: &Path) -> crate::Result<()> {
+        std::fs::create_dir_all(results_dir)?;
+        std::fs::write(results_dir.join(format!("{}.md", self.id)), &self.markdown)?;
+        crate::util::json::write_json_file(
+            &results_dir.join(format!("{}.json", self.id)),
+            &self.json,
+        )?;
+        Ok(())
+    }
+}
+
+/// Effort level: quick (CI) vs full (paper-scale sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Full,
+}
+
+impl Effort {
+    pub fn scale(self, quick: u64, full: u64) -> u64 {
+        match self {
+            Effort::Quick => quick,
+            Effort::Full => full,
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+    "fig9", "table3", "fig10", "fig11", "fig12", "fig13",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
+    Ok(match id {
+        "fig1a" => holdout::fig1a(effort),
+        "fig1b" => holdout::fig1b(effort),
+        "amdahl" => holdout::amdahl(),
+        "fig3" => e2e::fig3(effort),
+        "fig4" => e2e::tpot_ecdf("fig4", "l40", effort),
+        "fig5" => e2e::tpot_ecdf("fig5", "h100", effort),
+        "fig7" => e2e::tpot_ecdf("fig7", "b200", effort),
+        "fig6" => e2e::fig6(effort),
+        "fig8" => e2e::utilization("fig8", "gpu", effort),
+        "fig9" => e2e::utilization("fig9", "cpu", effort),
+        "table3" => e2e::table3(effort),
+        "fig10" => micro::fig10(effort),
+        "fig11" => micro::fig11(effort),
+        "fig12" => micro::fig12(effort),
+        "fig13" => exactness::fig13(effort),
+        other => anyhow::bail!("unknown experiment {other}"),
+    })
+}
+
+/// Default results dir: `$SIMPLE_RESULTS` or `<repo>/results`.
+pub fn default_results_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SIMPLE_RESULTS") {
+        return std::path::PathBuf::from(p);
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}

@@ -1,0 +1,54 @@
+//! # simple-serve
+//!
+//! Reproduction of **SIMPLE: Disaggregating Sampling from GPU Inference into a
+//! Decision Plane for Faster Distributed LLM Serving** (CS.DC 2025).
+//!
+//! SIMPLE observes that in TP×PP-distributed LLM serving the *sampling* step —
+//! the "decision plane" that turns logits into tokens — is a structural
+//! holdout: it does not shard along tensor-parallel axes, it runs only on the
+//! last pipeline stage, and its memory-bound `O(V)` scans do not shrink as
+//! GEMMs get faster. SIMPLE disaggregates sampling into a CPU-side service
+//! that is *parallelizable* (sequence-parallel across the batch axis),
+//! *stage-agnostic* (off the PP critical path), and *overlappable* (hidden
+//! under GPU compute), using three mechanisms:
+//!
+//! 1. **Sequence-parallel sampling** ([`decision::service`]) — shard the batch
+//!    across `m` samplers reading TP-sharded, vocabulary-major logits blocks
+//!    from shared-memory rings with zero copies.
+//! 2. **Column-wise penalties + truncation-first filtering**
+//!    ([`decision::penalties`], [`decision::filter`]) — single-pass,
+//!    linear-time CPU kernels.
+//! 3. **Speculative hot-vocab sampling** ([`decision::shvs`]) — sample on a
+//!    small Zipf-head hot set, correct with rejection sampling (distribution-
+//!    ally exact), and size the hot set with an analytic throughput model
+//!    ([`decision::sizing`]).
+//!
+//! ## Architecture (three layers)
+//!
+//! - **L3 (this crate)** — the serving coordinator and the paper's decision
+//!   plane, on the request path.
+//! - **L2 (JAX, build time)** — a decode-step transformer producing logits,
+//!   lowered once to HLO text (`python/compile/`).
+//! - **L1 (Pallas, build time)** — the fused LM-head + SHVS-weight kernel
+//!   inside the L2 graph.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT; the
+//! [`simulator`] module provides the distributed-GPU timing substrate used to
+//! regenerate the paper's figures on a CPU-only host (see `DESIGN.md` §2).
+
+pub mod bench;
+pub mod config;
+pub mod decision;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod ringbuf;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

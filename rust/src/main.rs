@@ -1,0 +1,213 @@
+//! `simple-serve` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! - `serve`      — serve a synthetic workload end-to-end on an AOT model
+//!                  through PJRT with the chosen decision-plane variant.
+//! - `figures`    — regenerate paper figures/tables into `results/`.
+//! - `calibrate`  — measure decision-plane costs + fit the sizing model.
+//! - `sim`        — run one distributed serving simulation and print it.
+
+use simple_serve::config::{DecisionVariant, EngineConfig};
+use simple_serve::decision::HotVocab;
+use simple_serve::engine::PjrtEngine;
+use simple_serve::harness::{self, Effort};
+use simple_serve::runtime::{default_artifacts_dir, Manifest, ModelRuntime};
+use simple_serve::simulator::{simulate, DecisionMode, GpuModel, SimConfig};
+use simple_serve::util::argparse::{render_help, Args, OptSpec};
+use simple_serve::{config, workload};
+
+const SPECS: &[OptSpec] = &[
+    OptSpec::value("model", "model name (AOT: micro-test|tiny-30m; sim: paper models)"),
+    OptSpec::value("platform", "platform for sim: l40|h100|b200"),
+    OptSpec::value("variant", "decision plane: gpu-epilogue|naive-cpu|parallel|offloading|shvs"),
+    OptSpec::value("tp", "tensor parallel degree"),
+    OptSpec::value("pp", "pipeline parallel depth"),
+    OptSpec::value("samplers", "number of CPU samplers m"),
+    OptSpec::value("hot_vocab", "hot-vocab size H (0 = sizing model)"),
+    OptSpec::value("vocab", "vocabulary size (calibrate)"),
+    OptSpec::value("requests", "number of requests"),
+    OptSpec::value("seed", "engine seed"),
+    OptSpec::value("batch_per_gpu", "microbatch per GPU (sim)"),
+    OptSpec::value("max_seq_len", "max sequence length"),
+    OptSpec::value("experiments", "comma-separated figure ids (figures)"),
+    OptSpec::flag("full", "full effort (paper-scale sweeps)"),
+    OptSpec::flag("help", "show help"),
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> simple_serve::Result<()> {
+    let args = Args::parse_env(SPECS, true)?;
+    if args.flag("help") || args.subcommand.is_none() {
+        print!(
+            "{}",
+            render_help(
+                "simple-serve",
+                "SIMPLE decision-plane serving (paper reproduction)\n\
+                 subcommands: serve | figures | calibrate | sim",
+                SPECS
+            )
+        );
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "serve" => cmd_serve(&args),
+        "figures" => cmd_figures(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "sim" => cmd_sim(&args),
+        other => anyhow::bail!("unknown subcommand {other} (try --help)"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
+    let model = args.get("model").unwrap_or("micro-test").to_string();
+    let n: usize = args.get_or("requests", 16)?;
+    let mut cfg = EngineConfig::default();
+    cfg.apply_args(args)?;
+
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let rt = ModelRuntime::load(&manifest, &model)?;
+    let vocab = rt.vocab();
+    let hot = if cfg.sampler.variant == DecisionVariant::Shvs {
+        let h = if cfg.sampler.hot_vocab > 0 {
+            cfg.sampler.hot_vocab
+        } else {
+            (vocab / 5).clamp(64, 32_768)
+        };
+        // AOT models put their Zipf head on low ids (lm_bias); the hot set
+        // trace profiling would find is the id prefix.
+        Some(HotVocab::new((0..h as u32).collect(), vocab).into_arc())
+    } else {
+        None
+    };
+    println!(
+        "serving {n} requests on {model} (V={vocab}) via {} with {} samplers ...",
+        cfg.sampler.variant.name(),
+        cfg.sampler.num_samplers
+    );
+    let mut engine = PjrtEngine::new(rt, &cfg, hot);
+    let trace = workload::generate(&workload::TraceConfig::sharegpt_like(
+        n,
+        vocab,
+        cfg.max_seq_len.min(256),
+    ));
+    for r in trace.requests {
+        engine.submit(r);
+    }
+    let summary = engine.run_until_idle()?;
+    println!("{}", summary.to_json().to_string_pretty());
+    let (_, stats) = engine.shutdown();
+    let decisions: u64 = stats.iter().map(|s| s.decisions).sum();
+    let fast: u64 = stats.iter().map(|s| s.fast_path_hits).sum();
+    if decisions > 0 {
+        println!(
+            "decision plane: {decisions} decisions, {:.1}% fast path",
+            fast as f64 / decisions as f64 * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> simple_serve::Result<()> {
+    let effort = if args.flag("full") { Effort::Full } else { Effort::Quick };
+    let ids: Vec<String> = match args.get("experiments") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => harness::ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect(),
+    };
+    let dir = harness::default_results_dir();
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let report = harness::run_experiment(&id, effort)?;
+        report.write(&dir)?;
+        println!(
+            "[{:>7.2?}] {} — {} -> results/{}.md",
+            t0.elapsed(),
+            report.id,
+            report.title,
+            report.id
+        );
+        println!("{}", report.markdown);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> simple_serve::Result<()> {
+    let vocab: usize = args.get_or("vocab", 152_064)?;
+    let effort = if args.flag("full") { Effort::Full } else { Effort::Quick };
+    let iters = effort.scale(10, 50);
+    println!("calibrating decision plane at V={vocab} ({iters} iters/variant) ...");
+    let cal = harness::measure::calibrate(vocab, (vocab / 5).min(32_768), iters);
+    for (variant, per_seq) in &cal.per_seq {
+        println!(
+            "  {:>12}: {:>10} per decision ({:.0} tok/s/sampler)",
+            variant.name(),
+            simple_serve::util::fmt_duration(std::time::Duration::from_secs_f64(*per_seq)),
+            1.0 / per_seq
+        );
+    }
+    let model = harness::measure::fit_sizing_model(vocab, 1.08, iters);
+    println!(
+        "sizing model: c={:.3e} c0={:.3e} (R²={:.4}) → H* = {}",
+        model.c,
+        model.c0,
+        model.r2,
+        model.h_star()
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> simple_serve::Result<()> {
+    let model = config::ModelSpec::by_name(args.get("model").unwrap_or("qwen3-235b-a22b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let platform = config::PlatformSpec::by_name(args.get("platform").unwrap_or("h100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown platform"))?;
+    let tp: usize = args.get_or("tp", 4)?;
+    let pp: usize = args.get_or("pp", 2)?;
+    let n: usize = args.get_or("requests", 200)?;
+    let samplers: usize = args.get_or("samplers", 64)?;
+    let parallel = config::ParallelConfig::new(tp, pp);
+    let variant = args.get("variant").unwrap_or("shvs");
+
+    let gpu = GpuModel::new(model.clone(), platform.clone(), parallel);
+    let mode = match variant {
+        "gpu-epilogue" | "baseline" => DecisionMode::GpuEpilogue,
+        "naive-cpu" => DecisionMode::CpuSerial {
+            per_seq_s: harness::e2e::measured_shvs_per_seq(model.vocab, Effort::Quick) * 20.0,
+            samplers,
+        },
+        _ => DecisionMode::SimpleOverlapped {
+            per_seq_s: harness::e2e::measured_shvs_per_seq(model.vocab, Effort::Quick),
+            samplers,
+        },
+    };
+    let cfg = SimConfig {
+        gpu,
+        mode,
+        slots: 32 * parallel.world_size(),
+        cpu_cores: platform.cpu_cores,
+        samplers,
+    };
+    let trace_w = workload::generate(&workload::TraceConfig::sharegpt_like(
+        n,
+        model.vocab,
+        4096,
+    ));
+    let trace = simple_serve::simulator::serving::to_sim_requests(&trace_w);
+    let res = simulate(&cfg, &trace);
+    println!(
+        "{} on {} {tp}x{pp} [{variant}]: {:.0} tok/s, P95 TPOT {:.1} ms, \
+         bubbles {:.1}%, sampling share {:.1}%",
+        model.name,
+        platform.name,
+        res.throughput(),
+        res.recorder.tpot_summary().p95 * 1e3,
+        res.mean_bubble_fraction * 100.0,
+        res.mean_sampling_fraction * 100.0
+    );
+    Ok(())
+}

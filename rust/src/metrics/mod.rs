@@ -1,0 +1,9 @@
+//! Measurement: percentiles/ECDF/TVD and the serving-metrics recorder.
+
+pub mod histogram;
+pub mod recorder;
+pub mod stats;
+
+pub use histogram::LatencyHistogram;
+pub use recorder::{Recorder, ServingSummary};
+pub use stats::{ecdf, mean, percentile, total_variation_distance, Summary};

@@ -1,0 +1,311 @@
+//! Serving-metrics recorder: per-request TTFT/TPOT, token throughput, and
+//! utilization windows — the quantities behind Figures 3–9.
+//!
+//! Time is a plain `f64` seconds value so the recorder works identically for
+//! wall-clock runs (the PJRT-backed engine) and simulated-clock runs (the
+//! distributed timing simulator).
+
+use super::stats::{percentile, Summary};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Per-request lifecycle record.
+#[derive(Debug, Clone)]
+struct RequestRecord {
+    arrival: f64,
+    first_token: Option<f64>,
+    /// Completion time of every output token (including the first).
+    token_times: Vec<f64>,
+    finished: Option<f64>,
+}
+
+/// Records request lifecycles and resource-busy intervals.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    requests: HashMap<u64, RequestRecord>,
+    /// (start, end) busy intervals per resource name (e.g. "gpu0", "cpu").
+    busy: HashMap<String, Vec<(f64, f64)>>,
+    /// Observation horizon for throughput/utilization.
+    t_start: f64,
+    t_end: f64,
+    horizon_init: bool,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, req: u64, t: f64) {
+        self.requests.insert(
+            req,
+            RequestRecord { arrival: t, first_token: None, token_times: Vec::new(), finished: None },
+        );
+        self.extend_horizon(t);
+    }
+
+    pub fn on_token(&mut self, req: u64, t: f64) {
+        if let Some(r) = self.requests.get_mut(&req) {
+            if r.first_token.is_none() {
+                r.first_token = Some(t);
+            }
+            r.token_times.push(t);
+        }
+        self.extend_horizon(t);
+    }
+
+    pub fn on_finish(&mut self, req: u64, t: f64) {
+        if let Some(r) = self.requests.get_mut(&req) {
+            r.finished = Some(t);
+        }
+        self.extend_horizon(t);
+    }
+
+    /// Record a busy interval for a named resource.
+    pub fn on_busy(&mut self, resource: &str, start: f64, end: f64) {
+        if end > start {
+            self.busy.entry(resource.to_string()).or_default().push((start, end));
+            self.extend_horizon(end);
+        }
+    }
+
+    fn extend_horizon(&mut self, t: f64) {
+        if !self.horizon_init {
+            self.t_start = t;
+            self.t_end = t;
+            self.horizon_init = true;
+        } else {
+            self.t_start = self.t_start.min(t);
+            self.t_end = self.t_end.max(t);
+        }
+    }
+
+    /// Total completed output tokens.
+    pub fn total_tokens(&self) -> usize {
+        self.requests.values().map(|r| r.token_times.len()).sum()
+    }
+
+    pub fn finished_requests(&self) -> usize {
+        self.requests.values().filter(|r| r.finished.is_some()).count()
+    }
+
+    /// Output tokens per second over the observation horizon.
+    pub fn throughput(&self) -> f64 {
+        let span = self.t_end - self.t_start;
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens() as f64 / span
+        }
+    }
+
+    /// All TTFT samples (first token − arrival), seconds.
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.requests
+            .values()
+            .filter_map(|r| r.first_token.map(|f| f - r.arrival))
+            .collect()
+    }
+
+    /// All TPOT samples: per-request inter-token gaps, seconds. This matches
+    /// the paper's Time-per-Output-Token tail metrics (P95/P99 over gaps).
+    pub fn tpots(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for r in self.requests.values() {
+            for w in r.token_times.windows(2) {
+                out.push(w[1] - w[0]);
+            }
+        }
+        out
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.tpots())
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttfts())
+    }
+
+    /// Utilization of a resource over the horizon: busy-time / span, with
+    /// overlapping intervals merged (a resource can't be >100% busy).
+    pub fn utilization(&self, resource: &str) -> f64 {
+        let span = self.t_end - self.t_start;
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let Some(intervals) = self.busy.get(resource) else {
+            return 0.0;
+        };
+        let mut iv = intervals.clone();
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut busy = 0.0;
+        let mut cur: Option<(f64, f64)> = None;
+        for (s, e) in iv {
+            match cur {
+                None => cur = Some((s, e)),
+                Some((cs, ce)) => {
+                    if s <= ce {
+                        cur = Some((cs, ce.max(e)));
+                    } else {
+                        busy += ce - cs;
+                        cur = Some((s, e));
+                    }
+                }
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            busy += ce - cs;
+        }
+        (busy / span).min(1.0)
+    }
+
+    /// Mid-50% utilization samples (the paper's Figures 8/9 plot the
+    /// interquartile band): utilization over fixed windows, then P25..P75.
+    pub fn utilization_mid50(&self, resource: &str, window: f64) -> (f64, f64, f64) {
+        let span = self.t_end - self.t_start;
+        if span <= 0.0 || window <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let Some(intervals) = self.busy.get(resource) else {
+            return (0.0, 0.0, 0.0);
+        };
+        let nwin = (span / window).ceil() as usize;
+        let mut busy_per_win = vec![0.0f64; nwin.max(1)];
+        for &(s, e) in intervals {
+            let mut s = s;
+            while s < e {
+                let w = (((s - self.t_start) / window).floor() as usize).min(nwin - 1);
+                let wend = self.t_start + (w + 1) as f64 * window;
+                let chunk = e.min(wend) - s;
+                busy_per_win[w] += chunk;
+                s += chunk.max(1e-12);
+            }
+        }
+        let mut utils: Vec<f64> =
+            busy_per_win.iter().map(|b| (b / window).min(1.0)).collect();
+        utils.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            percentile(&utils, 25.0),
+            percentile(&utils, 50.0),
+            percentile(&utils, 75.0),
+        )
+    }
+
+    /// Export a serving summary.
+    pub fn summary(&self) -> ServingSummary {
+        ServingSummary {
+            requests: self.requests.len(),
+            finished: self.finished_requests(),
+            tokens: self.total_tokens(),
+            duration: self.t_end - self.t_start,
+            throughput: self.throughput(),
+            ttft: self.ttft_summary(),
+            tpot: self.tpot_summary(),
+        }
+    }
+}
+
+/// Flattened end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct ServingSummary {
+    pub requests: usize,
+    pub finished: usize,
+    pub tokens: usize,
+    pub duration: f64,
+    pub throughput: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+}
+
+impl ServingSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("finished", Json::Num(self.finished as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("duration_s", Json::Num(self.duration)),
+            ("throughput_tok_s", Json::Num(self.throughput)),
+            ("ttft", self.ttft.to_json()),
+            ("tpot", self.tpot.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_and_tpot_computed_per_request() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        r.on_token(1, 0.5); // TTFT 0.5
+        r.on_token(1, 0.7); // gap 0.2
+        r.on_token(1, 1.0); // gap 0.3
+        r.on_finish(1, 1.0);
+        let ttfts = r.ttfts();
+        assert_eq!(ttfts, vec![0.5]);
+        let mut tpots = r.tpots();
+        tpots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((tpots[0] - 0.2).abs() < 1e-12);
+        assert!((tpots[1] - 0.3).abs() < 1e-12);
+        assert_eq!(r.total_tokens(), 3);
+        assert_eq!(r.finished_requests(), 1);
+    }
+
+    #[test]
+    fn throughput_over_horizon() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        for i in 1..=10 {
+            r.on_token(1, i as f64 * 0.1);
+        }
+        r.on_finish(1, 1.0);
+        assert!((r.throughput() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_merges_overlaps() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        r.on_finish(1, 10.0);
+        r.on_busy("gpu", 0.0, 4.0);
+        r.on_busy("gpu", 3.0, 6.0); // overlap with previous
+        r.on_busy("gpu", 8.0, 9.0);
+        assert!((r.utilization("gpu") - 0.7).abs() < 1e-9);
+        assert_eq!(r.utilization("cpu"), 0.0);
+    }
+
+    #[test]
+    fn mid50_utilization_windows() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        r.on_finish(1, 4.0);
+        // windows of 1s: busy fractions 1.0, 0.5, 0.0, 1.0
+        r.on_busy("gpu", 0.0, 1.5);
+        r.on_busy("gpu", 3.0, 4.0);
+        let (p25, p50, p75) = r.utilization_mid50("gpu", 1.0);
+        assert!(p25 <= p50 && p50 <= p75);
+        assert!(p75 <= 1.0);
+    }
+
+    #[test]
+    fn summary_roundtrips_to_json() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        r.on_token(1, 0.1);
+        r.on_finish(1, 0.1);
+        let s = r.summary();
+        let j = s.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(1));
+        assert_eq!(j.get("tokens").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn tokens_for_unknown_request_ignored() {
+        let mut r = Recorder::new();
+        r.on_token(42, 1.0); // never arrived — ignored, no panic
+        assert_eq!(r.total_tokens(), 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Statistics primitives used by the harnesses: percentiles (the paper
+//! reports P50/P95/P99 TPOT), ECDFs (Figures 4/5/7), total variation
+//! distance (Figure 13's exactness metric), and least-squares affine fitting
+//! (Figure 11's T_cpu(H) = cH + c0).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile `q ∈ [0,100]` by linear interpolation on the sorted copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Percentile on an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Empirical CDF evaluated at `points.len()` evenly spaced quantiles;
+/// returns (value, cumulative_fraction) pairs — the series for the TPOT
+/// ECDF figures.
+pub fn ecdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || points == 0 {
+        return Vec::new();
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let frac = (i + 1) as f64 / points as f64;
+            let idx = ((frac * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            (sorted[idx - 1], frac)
+        })
+        .collect()
+}
+
+/// Total variation distance between two distributions on the same support:
+/// `TVD(p, q) = 0.5 * Σ |p_i − q_i|`. Inputs need not be normalized; they
+/// are normalized first (empirical histograms are the common caller).
+pub fn total_variation_distance(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len(), "support mismatch");
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    if sp <= 0.0 || sq <= 0.0 {
+        return if sp == sq { 0.0 } else { 1.0 };
+    }
+    0.5 * p
+        .iter()
+        .zip(q)
+        .map(|(a, b)| (a / sp - b / sq).abs())
+        .sum::<f64>()
+}
+
+/// Least-squares affine fit `y ≈ c*x + c0`; returns (c, c0, r²).
+/// This is exactly the fit used in Figure 11(a) for T_cpu(H).
+pub fn affine_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let c = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let c0 = my - c * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (c * x + c0)).powi(2))
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    (c, c0, r2)
+}
+
+/// Monotone piecewise-linear interpolator (used for the ᾱ(H) hit-ratio
+/// curve of §5.4, profiled at a few H points offline).
+#[derive(Debug, Clone)]
+pub struct Interp1 {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl Interp1 {
+    /// Points must be strictly increasing in x.
+    pub fn new(xs: Vec<f64>, ys: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(xs.len() >= 2, "need at least two knots");
+        assert!(xs.windows(2).all(|w| w[1] > w[0]), "x must be increasing");
+        Interp1 { xs, ys }
+    }
+
+    /// Evaluate with flat extrapolation outside the knot range.
+    pub fn eval(&self, x: f64) -> f64 {
+        if x <= self.xs[0] {
+            return self.ys[0];
+        }
+        if x >= *self.xs.last().unwrap() {
+            return *self.ys.last().unwrap();
+        }
+        let i = match self.xs.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+            Ok(i) => return self.ys[i],
+            Err(i) => i,
+        };
+        let (x0, x1) = (self.xs[i - 1], self.xs[i]);
+        let (y0, y1) = (self.ys[i - 1], self.ys[i]);
+        y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+    }
+
+    /// Finite-difference derivative at x (central where possible).
+    pub fn derivative(&self, x: f64) -> f64 {
+        let span = self.xs.last().unwrap() - self.xs[0];
+        let h = (span * 1e-6).max(1e-9);
+        (self.eval(x + h) - self.eval(x - h)) / (2.0 * h)
+    }
+
+    pub fn domain(&self) -> (f64, f64) {
+        (self.xs[0], *self.xs.last().unwrap())
+    }
+}
+
+/// Summary statistics for a set of samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                stddev: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            stddev: stddev(xs),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: *sorted.last().unwrap(),
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("stddev", Json::Num(self.stddev)),
+            ("min", Json::Num(self.min)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+            ("max", Json::Num(self.max)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 95.0) - 95.05).abs() < 1e-9);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn ecdf_is_monotone_and_ends_at_max() {
+        let xs = vec![3.0, 1.0, 2.0, 5.0, 4.0];
+        let e = ecdf(&xs, 10);
+        assert_eq!(e.len(), 10);
+        for w in e.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        assert_eq!(e.last().unwrap(), &(5.0, 1.0));
+    }
+
+    #[test]
+    fn tvd_properties() {
+        let p = [0.5, 0.5, 0.0];
+        let q = [0.0, 0.5, 0.5];
+        assert!((total_variation_distance(&p, &p) - 0.0).abs() < 1e-12);
+        assert!((total_variation_distance(&p, &q) - 0.5).abs() < 1e-12);
+        // symmetric
+        assert_eq!(
+            total_variation_distance(&p, &q),
+            total_variation_distance(&q, &p)
+        );
+        // disjoint supports => 1
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((total_variation_distance(&a, &b) - 1.0).abs() < 1e-12);
+        // unnormalized inputs are normalized
+        let a2 = [2.0, 0.0];
+        assert!((total_variation_distance(&a2, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn affine_fit_recovers_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.06e-8 * x + 8.55e-6).collect();
+        let (c, c0, r2) = affine_fit(&xs, &ys);
+        assert!((c - 1.06e-8).abs() < 1e-12);
+        assert!((c0 - 8.55e-6).abs() < 1e-10);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn affine_fit_noisy_r2_reasonable() {
+        let mut rng = crate::rng::Philox::new(1);
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 * x + 1.0 + (rng.next_f64() - 0.5) * 0.5)
+            .collect();
+        let (c, c0, r2) = affine_fit(&xs, &ys);
+        assert!((c - 2.0).abs() < 0.02);
+        assert!((c0 - 1.0).abs() < 0.5);
+        assert!(r2 > 0.99);
+    }
+
+    #[test]
+    fn interp_matches_knots_and_midpoints() {
+        let it = Interp1::new(vec![0.0, 1.0, 3.0], vec![0.0, 10.0, 30.0]);
+        assert_eq!(it.eval(0.0), 0.0);
+        assert_eq!(it.eval(1.0), 10.0);
+        assert_eq!(it.eval(0.5), 5.0);
+        assert_eq!(it.eval(2.0), 20.0);
+        // flat extrapolation
+        assert_eq!(it.eval(-5.0), 0.0);
+        assert_eq!(it.eval(99.0), 30.0);
+        // derivative of the second segment is 10
+        assert!((it.derivative(2.0) - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 1000);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1000.0);
+        assert!((s.mean - 500.5).abs() < 1e-9);
+        assert!(s.p50 < s.p95 && s.p95 < s.p99);
+        let empty = Summary::of(&[]);
+        assert_eq!(empty.n, 0);
+    }
+}

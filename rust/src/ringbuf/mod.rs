@@ -1,0 +1,138 @@
+//! Shared-memory ring buffers — the transport of SIMPLE's data flow (§4.2).
+//!
+//! The paper carries three streams over shared-memory rings: scheduling
+//! outputs, TP-sharded logits blocks, and auxiliary sampler inputs
+//! (pre-generated randoms); decisions return over a lightweight channel.
+//! Producers and consumers advance independently so the decision plane
+//! overlaps with GPU compute.
+//!
+//! This module provides the in-process analog:
+//! - [`spsc::Ring`] — bounded lock-free single-producer/single-consumer ring
+//!   with cache-padded indices (one ring per worker↔sampler edge).
+//! - [`mpmc::Queue`] — Mutex+Condvar bounded MPMC queue for the return path
+//!   (decisions → scheduler), where contention is low and blocking is fine.
+//! - [`LogitsPool`] — a pool of reusable, reference-counted logits slabs: the
+//!   "shared memory region" GPU workers write vocabulary-major slices into
+//!   and samplers read zero-copy.
+
+pub mod mpmc;
+pub mod spsc;
+
+use std::sync::{Arc, Mutex};
+
+/// A reusable slab of f32s representing one iteration's vocabulary-major
+/// logits block (`[V_shard x B]`) in the shared region.
+///
+/// Slabs are handed out by [`LogitsPool`]; dropping the last reader returns
+/// the slab to the pool, modelling ring-slot reuse without allocation on the
+/// hot path.
+pub struct LogitsSlab {
+    data: Box<[f32]>,
+    pool: Option<Arc<PoolInner>>,
+}
+
+impl LogitsSlab {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl Drop for LogitsSlab {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            let data = std::mem::take(&mut self.data);
+            let mut free = pool.free.lock().unwrap();
+            if free.len() < pool.max_retained {
+                free.push(data);
+            }
+        }
+    }
+}
+
+struct PoolInner {
+    free: Mutex<Vec<Box<[f32]>>>,
+    max_retained: usize,
+    slab_len: usize,
+}
+
+/// Allocation-free (steady-state) pool of logits slabs.
+#[derive(Clone)]
+pub struct LogitsPool {
+    inner: Arc<PoolInner>,
+}
+
+impl LogitsPool {
+    /// Pool of slabs of `slab_len` f32s, retaining at most `max_retained`
+    /// free slabs (ring depth).
+    pub fn new(slab_len: usize, max_retained: usize) -> Self {
+        LogitsPool {
+            inner: Arc::new(PoolInner {
+                free: Mutex::new(Vec::new()),
+                max_retained,
+                slab_len,
+            }),
+        }
+    }
+
+    /// Grab a slab (recycled if available). Contents are NOT zeroed — the
+    /// producer overwrites every cell, like a ring slot.
+    pub fn acquire(&self) -> LogitsSlab {
+        let recycled = self.inner.free.lock().unwrap().pop();
+        let data = recycled
+            .unwrap_or_else(|| vec![0.0f32; self.inner.slab_len].into_boxed_slice());
+        LogitsSlab { data, pool: Some(self.inner.clone()) }
+    }
+
+    pub fn slab_len(&self) -> usize {
+        self.inner.slab_len
+    }
+
+    /// Number of currently retained free slabs (observability).
+    pub fn free_count(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_slabs() {
+        let pool = LogitsPool::new(16, 4);
+        assert_eq!(pool.free_count(), 0);
+        let s = pool.acquire();
+        assert_eq!(s.len(), 16);
+        drop(s);
+        assert_eq!(pool.free_count(), 1);
+        let _s2 = pool.acquire();
+        assert_eq!(pool.free_count(), 0); // reused, not newly stashed
+    }
+
+    #[test]
+    fn pool_caps_retained() {
+        let pool = LogitsPool::new(4, 2);
+        let slabs: Vec<_> = (0..5).map(|_| pool.acquire()).collect();
+        drop(slabs);
+        assert_eq!(pool.free_count(), 2);
+    }
+
+    #[test]
+    fn slab_write_read() {
+        let pool = LogitsPool::new(8, 1);
+        let mut s = pool.acquire();
+        for (i, v) in s.as_mut_slice().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(s.as_slice()[7], 7.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Bounded blocking MPMC queue (Mutex + Condvar).
+//!
+//! Used for the low-rate control paths: decisions returning from m samplers
+//! to the scheduler (the paper's ZMQ channel) and request admission. The
+//! data-plane logits stream uses the lock-free [`super::spsc`] rings instead.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Shared<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half (cloneable).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half (cloneable).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Error: all receivers dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Create a bounded MPMC channel.
+pub fn channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        q: Mutex::new(State { items: VecDeque::with_capacity(cap), senders: 1, receivers: 1 }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        cap: cap.max(1),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.q.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            drop(st);
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.q.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.q.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            drop(st);
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; fails only if all receivers are gone.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError(item));
+            }
+            if st.items.len() < self.shared.cap {
+                st.items.push_back(item);
+                drop(st);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the item if full or disconnected.
+    pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.q.lock().unwrap();
+        if st.receivers == 0 || st.items.len() >= self.shared.cap {
+            return Err(SendError(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.q.lock().unwrap().items.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` when all senders dropped and queue drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with timeout. `Ok(None)` = disconnected+drained; `Err(())` =
+    /// timed out.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.senders == 0 {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, res) =
+                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() && st.senders > 0 {
+                return Err(());
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.shared.q.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.shared.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.q.lock().unwrap().items.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_fifo() {
+        let (tx, rx) = channel::<u32>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn disconnect_on_all_senders_dropped() {
+        let (tx, rx) = channel::<u32>(2);
+        let tx2 = tx.clone();
+        tx.send(5).unwrap();
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(5));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_when_receivers_gone() {
+        let (tx, rx) = channel::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError(1)));
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, _rx) = channel::<u32>(1);
+        tx.try_send(1).unwrap();
+        assert_eq!(tx.try_send(2), Err(SendError(2)));
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (_tx, rx) = channel::<u32>(1);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Err(()));
+    }
+
+    #[test]
+    fn multi_producer_multi_consumer_conserves_items() {
+        let (tx, rx) = channel::<u64>(16);
+        const PER: u64 = 10_000;
+        const P: usize = 3;
+        let producers: Vec<_> = (0..P)
+            .map(|pid| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..PER {
+                        tx.send(pid as u64 * PER + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), P * PER as usize);
+        all.dedup();
+        assert_eq!(all.len(), P * PER as usize, "duplicates detected");
+    }
+
+    #[test]
+    fn blocking_send_unblocks_on_recv() {
+        let (tx, rx) = channel::<u32>(1);
+        tx.send(0).unwrap();
+        let h = thread::spawn(move || tx.send(1).unwrap());
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        h.join().unwrap();
+    }
+}

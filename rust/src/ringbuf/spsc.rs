@@ -1,0 +1,280 @@
+//! Bounded lock-free SPSC ring buffer with cache-padded head/tail indices —
+//! the in-process analog of the paper's shared-memory rings (§4.2): one
+//! producer (a final-stage GPU worker) and one consumer (a CPU sampler)
+//! advance independently, giving the overlap SIMPLE relies on.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Pad to a cache line to avoid false sharing between producer and consumer
+/// indices (crossbeam's CachePadded, hand-rolled).
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+struct Inner<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    cap: usize,
+    /// Next slot the producer will write (monotonic, mod cap on access).
+    head: CachePadded<AtomicUsize>,
+    /// Next slot the consumer will read.
+    tail: CachePadded<AtomicUsize>,
+    closed: AtomicBool,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+/// Producer handle.
+pub struct Producer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Consumer handle.
+pub struct Consumer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Error returned by `try_push` when the ring is full (item handed back).
+#[derive(Debug)]
+pub struct Full<T>(pub T);
+
+/// Error returned by pop on an empty+closed ring.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopError {
+    Empty,
+    Closed,
+}
+
+/// Create a bounded SPSC ring of capacity `cap` (rounded up to a power of
+/// two for cheap masking).
+pub fn ring<T>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = cap.max(2).next_power_of_two();
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let inner = Arc::new(Inner {
+        buf,
+        cap,
+        head: CachePadded(AtomicUsize::new(0)),
+        tail: CachePadded(AtomicUsize::new(0)),
+        closed: AtomicBool::new(false),
+    });
+    (Producer { inner: inner.clone() }, Consumer { inner })
+}
+
+impl<T> Producer<T> {
+    /// Non-blocking push; returns the item if the ring is full.
+    pub fn try_push(&self, item: T) -> Result<(), Full<T>> {
+        let inner = &self.inner;
+        let head = inner.head.0.load(Ordering::Relaxed);
+        let tail = inner.tail.0.load(Ordering::Acquire);
+        if head - tail == inner.cap {
+            return Err(Full(item));
+        }
+        let slot = &inner.buf[head & (inner.cap - 1)];
+        unsafe { (*slot.get()).write(item) };
+        inner.head.0.store(head + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Spin-then-yield blocking push. Returns `false` if the consumer is
+    /// gone (item dropped).
+    pub fn push(&self, mut item: T) -> bool {
+        let mut spins = 0u32;
+        loop {
+            match self.try_push(item) {
+                Ok(()) => return true,
+                Err(Full(back)) => {
+                    if Arc::strong_count(&self.inner) == 1 {
+                        return false; // consumer dropped
+                    }
+                    item = back;
+                    spins += 1;
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mark the stream finished; consumers see `PopError::Closed` once
+    /// drained.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+    }
+
+    /// Number of items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.head.0.load(Ordering::Relaxed) - self.inner.tail.0.load(Ordering::Relaxed)
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn capacity(&self) -> usize {
+        self.inner.cap
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Result<T, PopError> {
+        let inner = &self.inner;
+        let tail = inner.tail.0.load(Ordering::Relaxed);
+        let head = inner.head.0.load(Ordering::Acquire);
+        if tail == head {
+            return if inner.closed.load(Ordering::Acquire) {
+                // Re-check: producer may have pushed between head load and
+                // closed load.
+                if inner.head.0.load(Ordering::Acquire) != tail {
+                    self.try_pop()
+                } else {
+                    Err(PopError::Closed)
+                }
+            } else {
+                Err(PopError::Empty)
+            };
+        }
+        let slot = &inner.buf[tail & (inner.cap - 1)];
+        let item = unsafe { (*slot.get()).assume_init_read() };
+        inner.tail.0.store(tail + 1, Ordering::Release);
+        Ok(item)
+    }
+
+    /// Spin-then-yield blocking pop; `None` when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut spins = 0u32;
+        loop {
+            match self.try_pop() {
+                Ok(item) => return Some(item),
+                Err(PopError::Closed) => return None,
+                Err(PopError::Empty) => {
+                    spins += 1;
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.head.0.load(Ordering::Relaxed) - self.inner.tail.0.load(Ordering::Relaxed)
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        // Drain remaining initialized items so T's Drop runs.
+        while let Ok(item) = self.try_pop() {
+            drop(item);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (p, c) = ring::<u32>(8);
+        for i in 0..8 {
+            p.try_push(i).unwrap();
+        }
+        assert!(p.try_push(99).is_err(), "ring should be full");
+        for i in 0..8 {
+            assert_eq!(c.try_pop().unwrap(), i);
+        }
+        assert_eq!(c.try_pop(), Err(PopError::Empty));
+    }
+
+    #[test]
+    fn close_signals_consumer() {
+        let (p, c) = ring::<u32>(4);
+        p.try_push(1).unwrap();
+        p.close();
+        assert_eq!(c.try_pop().unwrap(), 1); // drains before Closed
+        assert_eq!(c.try_pop(), Err(PopError::Closed));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn producer_drop_closes() {
+        let (p, c) = ring::<u32>(4);
+        p.try_push(7).unwrap();
+        drop(p);
+        assert_eq!(c.pop(), Some(7));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn wraps_around_many_times() {
+        let (p, c) = ring::<usize>(4);
+        for i in 0..1000 {
+            p.try_push(i).unwrap();
+            assert_eq!(c.try_pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_no_loss_no_dup() {
+        let (p, c) = ring::<u64>(64);
+        const N: u64 = 200_000;
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                assert!(p.push(i));
+            }
+        });
+        let mut expected = 0u64;
+        let mut sum = 0u64;
+        while let Some(v) = c.pop() {
+            assert_eq!(v, expected, "out of order");
+            expected += 1;
+            sum += v;
+        }
+        producer.join().unwrap();
+        assert_eq!(expected, N);
+        assert_eq!(sum, N * (N - 1) / 2);
+    }
+
+    #[test]
+    fn drops_run_for_undrained_items() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        #[derive(Debug)]
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (p, c) = ring::<D>(8);
+        for _ in 0..5 {
+            p.try_push(D).unwrap();
+        }
+        drop(c);
+        drop(p);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let (p, _c) = ring::<u8>(5);
+        assert_eq!(p.capacity(), 8);
+    }
+}

@@ -1,0 +1,335 @@
+//! Deterministic random-number generation.
+//!
+//! The paper (§5.1 "Deterministic random number generation") pre-generates
+//! random variates on the GPUs under a fixed seed and lets each CPU sampler
+//! consume its slice, so that sequence-parallel sampling reproduces the
+//! single-worker token stream exactly. A *counter-based* RNG is the natural
+//! realization: any (seed, counter) cell can be evaluated independently by
+//! any worker with no shared state. We implement **Philox 4x32-10**
+//! (Salmon et al., SC'11) — the same family JAX's `threefry`/`rbg` and
+//! cuRAND use — plus SplitMix64 for cheap non-reproducible utility streams.
+
+pub mod zipf;
+
+/// Philox 4x32-10 counter-based RNG.
+///
+/// `key` is the 64-bit seed; the 128-bit counter advances by one block per
+/// four 32-bit outputs. Workers can `at(counter)` directly to consume
+/// disjoint slices deterministically (the paper's pre-generated randoms).
+#[derive(Debug, Clone)]
+pub struct Philox {
+    key: [u32; 2],
+    counter: u128,
+    buf: [u32; 4],
+    buf_pos: usize,
+}
+
+const PHILOX_M0: u64 = 0xD251_1F53;
+const PHILOX_M1: u64 = 0xCD9E_8D57;
+const PHILOX_W0: u32 = 0x9E37_79B9;
+const PHILOX_W1: u32 = 0xBB67_AE85;
+
+impl Philox {
+    /// New stream for `seed`, starting at counter 0.
+    pub fn new(seed: u64) -> Self {
+        Self::at(seed, 0)
+    }
+
+    /// New stream for `seed` positioned at block `counter` — random access,
+    /// used by samplers to jump to their slice of the pre-generated stream.
+    pub fn at(seed: u64, counter: u128) -> Self {
+        Philox {
+            key: [seed as u32, (seed >> 32) as u32],
+            counter,
+            buf: [0; 4],
+            buf_pos: 4, // force refill on first draw
+        }
+    }
+
+    /// Derive an independent stream for (seed, stream_id) — e.g. one stream
+    /// per sequence id, so decisions are independent of batch composition.
+    pub fn substream(seed: u64, stream_id: u64) -> Self {
+        // Mix the stream id into the upper counter half: blocks never collide
+        // with other substreams of the same seed.
+        Self::at(seed, (stream_id as u128) << 64)
+    }
+
+    /// The 10-round Philox block function.
+    fn block(key: [u32; 2], ctr: u128) -> [u32; 4] {
+        let mut c = [
+            ctr as u32,
+            (ctr >> 32) as u32,
+            (ctr >> 64) as u32,
+            (ctr >> 96) as u32,
+        ];
+        let mut k = key;
+        for _ in 0..10 {
+            let p0 = PHILOX_M0 * c[0] as u64;
+            let p1 = PHILOX_M1 * c[2] as u64;
+            c = [
+                ((p1 >> 32) as u32) ^ c[1] ^ k[0],
+                p1 as u32,
+                ((p0 >> 32) as u32) ^ c[3] ^ k[1],
+                p0 as u32,
+            ];
+            k[0] = k[0].wrapping_add(PHILOX_W0);
+            k[1] = k[1].wrapping_add(PHILOX_W1);
+        }
+        c
+    }
+
+    /// Next raw 32-bit word.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.buf_pos == 4 {
+            self.buf = Self::block(self.key, self.counter);
+            self.counter = self.counter.wrapping_add(1);
+            self.buf_pos = 0;
+        }
+        let v = self.buf[self.buf_pos];
+        self.buf_pos += 1;
+        v
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (self.next_u32() as u64) << 32 | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 24 bits of mantissa (f32-grade, like cuRAND).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of mantissa.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo < n {
+                let t = n.wrapping_neg() % n;
+                if lo < t {
+                    continue;
+                }
+            }
+            return (m >> 64) as u64;
+        }
+    }
+
+    /// Standard exponential variate (inverse CDF).
+    pub fn next_exp(&mut self) -> f64 {
+        -(1.0 - self.next_f64()).ln()
+    }
+
+    /// Standard normal via Box–Muller (one of the pair, cheap enough here).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Log-normal with the given mu/sigma of the underlying normal.
+    pub fn next_lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.next_normal()).exp()
+    }
+
+    /// Poisson variate (Knuth for small lambda, normal approx for large).
+    pub fn next_poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lambda + lambda.sqrt() * self.next_normal();
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Current block counter (for slicing bookkeeping).
+    pub fn counter(&self) -> u128 {
+        self.counter
+    }
+}
+
+/// SplitMix64 — tiny fast PRNG for *non-reproducibility-critical* utility
+/// randomness (e.g. jitter in load generators when determinism is off).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn philox_is_deterministic() {
+        let mut a = Philox::new(42);
+        let mut b = Philox::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn philox_seeds_differ() {
+        let mut a = Philox::new(1);
+        let mut b = Philox::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be (almost surely) different");
+    }
+
+    #[test]
+    fn philox_random_access_matches_sequential() {
+        // Consuming blocks 0..8 sequentially == jumping to block 4 directly.
+        let mut seq = Philox::new(7);
+        let seq_vals: Vec<u32> = (0..32).map(|_| seq.next_u32()).collect();
+        let mut jumped = Philox::at(7, 4);
+        let jump_vals: Vec<u32> = (0..16).map(|_| jumped.next_u32()).collect();
+        assert_eq!(&seq_vals[16..], &jump_vals[..]);
+    }
+
+    #[test]
+    fn substreams_are_disjoint() {
+        let mut s0 = Philox::substream(9, 0);
+        let mut s1 = Philox::substream(9, 1);
+        let v0: Vec<u32> = (0..32).map(|_| s0.next_u32()).collect();
+        let v1: Vec<u32> = (0..32).map(|_| s1.next_u32()).collect();
+        assert_ne!(v0, v1);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Philox::new(123);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_roughly_uniform() {
+        let mut rng = Philox::new(5);
+        let n = 30_000;
+        let k = 7u64;
+        let mut counts = [0usize; 7];
+        for _ in 0..n {
+            let v = rng.next_below(k);
+            assert!(v < k);
+            counts[v as usize] += 1;
+        }
+        let expected = n as f64 / k as f64;
+        for c in counts {
+            assert!((c as f64 - expected).abs() < expected * 0.1, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda() {
+        let mut rng = Philox::new(11);
+        for lambda in [0.5, 4.0, 80.0] {
+            let n = 5_000;
+            let mean: f64 =
+                (0..n).map(|_| rng.next_poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.12,
+                "lambda {lambda} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Philox::new(17);
+        let n = 40_000;
+        let vals: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mean = vals.iter().sum::<f64>() / n as f64;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Philox::new(3);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn splitmix_advances() {
+        let mut s = SplitMix64::new(0);
+        let a = s.next_u64();
+        let b = s.next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn philox_known_vector_nonzero_diffusion() {
+        // Zero key + zero counter must still produce well-diffused output.
+        let out = Philox::block([0, 0], 0);
+        assert!(out.iter().all(|&w| w != 0));
+        // And flipping one counter bit changes all words.
+        let out2 = Philox::block([0, 0], 1);
+        assert!(out.iter().zip(&out2).all(|(a, b)| a != b));
+    }
+}

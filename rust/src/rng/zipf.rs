@@ -1,0 +1,177 @@
+//! Zipf / Zipf–Mandelbrot distributions.
+//!
+//! Two roles in this reproduction:
+//! 1. **Token-distribution substrate** — §5.3's premise is that next-token
+//!    probabilities are Zipf-like ("top 32k often covers > 95%"); the
+//!    synthetic logits generator shapes heads with [`ZipfMandelbrot`] so the
+//!    SHVS hit-ratio curve ᾱ(H) reproduces the paper's saturating shape.
+//! 2. **Workload substrate** — prompt popularity in the ShareGPT-like trace.
+
+/// Zipf–Mandelbrot over ranks `0..n`: p(r) ∝ 1 / (r + 1 + q)^s.
+///
+/// `q = 0` gives classic Zipf. Sampling is inverse-CDF over the precomputed
+/// cumulative table (O(log n) per draw); mass queries are O(1) from the same
+/// table.
+#[derive(Debug, Clone)]
+pub struct ZipfMandelbrot {
+    /// Cumulative probabilities, cdf[r] = P(rank <= r); cdf[n-1] == 1.
+    cdf: Vec<f64>,
+    s: f64,
+    q: f64,
+}
+
+impl ZipfMandelbrot {
+    pub fn new(n: usize, s: f64, q: f64) -> Self {
+        assert!(n > 0, "zipf over empty support");
+        assert!(s > 0.0, "zipf exponent must be positive");
+        assert!(q >= 0.0, "zipf shift must be non-negative");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / (r as f64 + 1.0 + q).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfMandelbrot { cdf, s, q }
+    }
+
+    /// Classic Zipf (q = 0).
+    pub fn zipf(n: usize, s: f64) -> Self {
+        Self::new(n, s, 0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+    pub fn exponent(&self) -> f64 {
+        self.s
+    }
+    pub fn shift(&self) -> f64 {
+        self.q
+    }
+
+    /// Probability of rank `r`.
+    pub fn pmf(&self, r: usize) -> f64 {
+        if r == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[r] - self.cdf[r - 1]
+        }
+    }
+
+    /// P(rank < h): the mass covered by the top-`h` ranks — the paper's
+    /// hot-vocab mass ᾱ(H) for a Zipf-shaped head.
+    pub fn head_mass(&self, h: usize) -> f64 {
+        if h == 0 {
+            0.0
+        } else {
+            self.cdf[(h - 1).min(self.cdf.len() - 1)]
+        }
+    }
+
+    /// Draw a rank by inverse CDF.
+    pub fn sample(&self, rng: &mut super::Philox) -> usize {
+        let u = rng.next_f64();
+        // first index with cdf[i] >= u
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Smallest `h` such that head_mass(h) >= target (e.g. 0.95).
+    pub fn rank_covering(&self, target: f64) -> usize {
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&target).unwrap())
+        {
+            Ok(i) => i + 1,
+            Err(i) => (i + 1).min(self.cdf.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    #[test]
+    fn cdf_is_monotone_and_normalized() {
+        let z = ZipfMandelbrot::zipf(1000, 1.1);
+        for w in z.cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!((z.cdf.last().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pmf_sums_to_one_and_is_decreasing() {
+        let z = ZipfMandelbrot::new(500, 1.2, 2.0);
+        let total: f64 = (0..z.len()).map(|r| z.pmf(r)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        for r in 1..z.len() {
+            assert!(z.pmf(r) <= z.pmf(r - 1) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn head_mass_matches_pmf_sum() {
+        let z = ZipfMandelbrot::zipf(200, 1.0);
+        let direct: f64 = (0..50).map(|r| z.pmf(r)).sum();
+        assert!((z.head_mass(50) - direct).abs() < 1e-12);
+        assert_eq!(z.head_mass(0), 0.0);
+        assert!((z.head_mass(200) - 1.0).abs() < 1e-12);
+        assert!((z.head_mass(10_000) - 1.0).abs() < 1e-12); // clamps
+    }
+
+    #[test]
+    fn zipf_heads_concentrate_like_the_paper_claims() {
+        // §5.3: "top 32k often covers > 95%" of a ~152k vocab. With s≈1.1
+        // (typical for token frequencies) the head mass is indeed that large.
+        let z = ZipfMandelbrot::zipf(152_000, 1.1);
+        assert!(z.head_mass(32_000) > 0.90, "mass {}", z.head_mass(32_000));
+        let needed = z.rank_covering(0.95);
+        assert!(needed < 152_000 / 2, "needed {needed}");
+    }
+
+    #[test]
+    fn sampling_matches_pmf() {
+        let z = ZipfMandelbrot::zipf(50, 1.3);
+        let mut rng = Philox::new(99);
+        let n = 100_000;
+        let mut counts = vec![0usize; 50];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Check the head ranks' empirical frequency against the pmf.
+        for r in 0..5 {
+            let emp = counts[r] as f64 / n as f64;
+            let p = z.pmf(r);
+            assert!((emp - p).abs() < 0.01, "rank {r}: emp {emp} pmf {p}");
+        }
+    }
+
+    #[test]
+    fn rank_covering_is_minimal() {
+        let z = ZipfMandelbrot::zipf(1000, 1.1);
+        let h = z.rank_covering(0.5);
+        assert!(z.head_mass(h) >= 0.5);
+        assert!(h == 1 || z.head_mass(h - 1) < 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_support() {
+        ZipfMandelbrot::zipf(0, 1.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::util::json::{read_json_file, Json};
+use std::path::{Path, PathBuf};
+
+/// One weight tensor entry.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled model.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub batch: usize,
+    pub vocab: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub kv_shape: Vec<usize>,
+    pub weights: Vec<WeightEntry>,
+}
+
+impl ModelArtifact {
+    /// Total KV elements (one of K or V).
+    pub fn kv_elems(&self) -> usize {
+        self.kv_shape.iter().product()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub models: Vec<ModelArtifact>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let j = read_json_file(&dir.join("manifest.json"))?;
+        let models = j
+            .get("models")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing models"))?
+            .iter()
+            .map(|m| parse_model(m, dir))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            fingerprint: j
+                .get("fingerprint")
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            models,
+            root: dir.to_path_buf(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelArtifact> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model {name} not in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> crate::Result<usize> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing/invalid {key}"))
+}
+
+fn parse_model(j: &Json, root: &Path) -> crate::Result<ModelArtifact> {
+    let name = j
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest: model missing name"))?
+        .to_string();
+    let weights = j
+        .get("weights")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing weights"))?
+        .iter()
+        .map(|w| {
+            Ok(WeightEntry {
+                name: w
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("weight missing name"))?
+                    .to_string(),
+                file: root.join(
+                    w.get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("weight missing file"))?,
+                ),
+                shape: w
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    let kv_shape: Vec<usize> = j
+        .get("kv_shape")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|d| d.as_usize())
+        .collect();
+    Ok(ModelArtifact {
+        hlo_path: root.join(
+            j.get("hlo")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest: missing hlo"))?,
+        ),
+        batch: get_usize(j, "batch")?,
+        vocab: get_usize(j, "vocab")?,
+        layers: get_usize(j, "layers")?,
+        hidden: get_usize(j, "hidden")?,
+        heads: get_usize(j, "heads")?,
+        kv_heads: get_usize(j, "kv_heads")?,
+        head_dim: get_usize(j, "head_dim")?,
+        max_seq: get_usize(j, "max_seq")?,
+        kv_shape,
+        weights,
+        name,
+    })
+}
+
+/// Default artifacts dir: `$SIMPLE_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SIMPLE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // CARGO_MANIFEST_DIR at build time points at the repo root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_if_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        assert!(!m.models.is_empty());
+        let micro = m.model("micro-test").unwrap();
+        assert_eq!(micro.vocab, 1000);
+        assert_eq!(micro.kv_shape.len(), 5);
+        assert!(micro.hlo_path.exists());
+        for w in &micro.weights {
+            assert!(w.file.exists(), "missing {}", w.file.display());
+        }
+        assert!(m.model("nope").is_err());
+    }
+}

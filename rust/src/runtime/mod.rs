@@ -1,0 +1,213 @@
+//! PJRT runtime: load AOT artifacts and run the data plane from Rust.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → compile →
+//! `execute_b`. Weights are uploaded **once** as device buffers
+//! (`PjRtBuffer::read_npy`); per-step inputs (ids, positions, KV state,
+//! temperatures, hot mask) are small. HLO *text* is the interchange format
+//! (see `python/compile/aot.py` and /opt/xla-example/README.md).
+//!
+//! Python never runs here — this module plus `artifacts/` is the entire
+//! data-plane dependency of the serving binary.
+
+pub mod artifact;
+
+pub use artifact::{default_artifacts_dir, Manifest, ModelArtifact};
+
+use crate::decision::HotVocab;
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Minimal .npy reader for little-endian f32 arrays (what `aot.py` writes).
+///
+/// We bypass the xla crate's `PjRtBuffer::read_npy`: its raw-bytes upload
+/// passes `ElementType as i32` where the C API expects `PrimitiveType`
+/// codes, silently uploading f32 data as F16 (off-by-one enum family). The
+/// typed `buffer_from_host_buffer::<f32>` path converts correctly.
+pub fn read_npy_f32(path: &std::path::Path) -> crate::Result<(Vec<f32>, Vec<usize>)> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    anyhow::ensure!(bytes.len() > 10 && &bytes[..6] == b"\x93NUMPY", "not an npy file");
+    let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    let header = std::str::from_utf8(&bytes[10..10 + header_len])
+        .map_err(|_| anyhow::anyhow!("bad npy header"))?;
+    anyhow::ensure!(
+        header.contains("'descr': '<f4'"),
+        "expected '<f4' npy, got header {header}"
+    );
+    anyhow::ensure!(
+        header.contains("'fortran_order': False"),
+        "fortran order unsupported"
+    );
+    let shape_part = header
+        .split("'shape': (")
+        .nth(1)
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| anyhow::anyhow!("no shape in npy header"))?;
+    let dims: Vec<usize> = shape_part
+        .split(',')
+        .filter_map(|t| t.trim().parse::<usize>().ok())
+        .collect();
+    let data = &bytes[10 + header_len..];
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == n * 4, "npy size mismatch: {} vs {}", data.len(), n * 4);
+    let mut out = Vec::with_capacity(n);
+    for chunk in data.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok((out, dims))
+}
+
+/// One decode step's outputs, host-side.
+pub struct StepOutput {
+    /// Row-major [B, V] logits.
+    pub logits: Vec<f32>,
+    /// Per-sequence SHVS stats [B][4]: z_max, s_hot, s_tail, tail_max_w.
+    pub stats: Vec<[f32; 4]>,
+}
+
+/// A loaded model: compiled executable + resident weight buffers + KV state.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    exe: PjRtLoadedExecutable,
+    weight_bufs: Vec<PjRtBuffer>,
+    /// KV caches kept host-side between steps (CPU PJRT: device == host
+    /// memory, so the per-step upload is a memcpy).
+    kv_k: Vec<f32>,
+    kv_v: Vec<f32>,
+    hot_mask: Vec<f32>,
+    pub spec: ModelArtifact,
+}
+
+impl ModelRuntime {
+    /// Load a model by name from the artifacts directory.
+    pub fn load(manifest: &Manifest, name: &str) -> crate::Result<ModelRuntime> {
+        let spec = manifest.model(name)?.clone();
+        let client = PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.hlo_path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+
+        let mut weight_bufs = Vec::with_capacity(spec.weights.len());
+        for w in &spec.weights {
+            let (data, dims) = read_npy_f32(&w.file)?;
+            anyhow::ensure!(
+                dims == w.shape,
+                "{}: npy shape {dims:?} != manifest {:?}",
+                w.name,
+                w.shape
+            );
+            let buf = client
+                .buffer_from_host_buffer(&data, &dims, None)
+                .map_err(|e| anyhow::anyhow!("uploading {}: {e:?}", w.name))?;
+            weight_bufs.push(buf);
+        }
+
+        let kv_elems = spec.kv_elems();
+        Ok(ModelRuntime {
+            client,
+            exe,
+            weight_bufs,
+            kv_k: vec![0.0; kv_elems],
+            kv_v: vec![0.0; kv_elems],
+            hot_mask: vec![0.0; spec.vocab],
+            spec,
+        })
+    }
+
+    /// Convenience: load from the default artifacts dir.
+    pub fn load_default(name: &str) -> crate::Result<ModelRuntime> {
+        let manifest = Manifest::load(&default_artifacts_dir())?;
+        Self::load(&manifest, name)
+    }
+
+    /// Install the hot-vocab mask fed to the L1 kernel's SHVS precompute.
+    pub fn set_hot_vocab(&mut self, hot: &HotVocab) {
+        assert_eq!(hot.vocab(), self.spec.vocab);
+        self.hot_mask.iter_mut().for_each(|m| *m = 0.0);
+        for &id in hot.ids() {
+            self.hot_mask[id as usize] = 1.0;
+        }
+    }
+
+    /// Zero the KV caches (fresh batch).
+    pub fn reset_kv(&mut self) {
+        self.kv_k.iter_mut().for_each(|x| *x = 0.0);
+        self.kv_v.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Zero one batch slot's KV rows (sequence retired, slot reused).
+    /// KV layout: [L, B, T, KVH, Dh].
+    pub fn reset_kv_slot(&mut self, slot: usize) {
+        let spec = &self.spec;
+        let (l, b, t, kvh, dh) = (
+            spec.kv_shape[0],
+            spec.kv_shape[1],
+            spec.kv_shape[2],
+            spec.kv_shape[3],
+            spec.kv_shape[4],
+        );
+        assert!(slot < b);
+        let row = t * kvh * dh;
+        for li in 0..l {
+            let base = (li * b + slot) * row;
+            self.kv_k[base..base + row].iter_mut().for_each(|x| *x = 0.0);
+            self.kv_v[base..base + row].iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Execute one decode step for the whole microbatch.
+    ///
+    /// `ids[b]` is the token to feed for slot b, `positions[b]` its position
+    /// (0-based) in the sequence, `tau[b]` the temperature for the SHVS
+    /// precompute (send 1.0 for greedy slots).
+    pub fn step(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        tau: &[f32],
+    ) -> crate::Result<StepOutput> {
+        let b = self.spec.batch;
+        assert_eq!(ids.len(), b);
+        assert_eq!(positions.len(), b);
+        assert_eq!(tau.len(), b);
+        debug_assert!(positions.iter().all(|&p| (p as usize) < self.spec.max_seq));
+
+        let kv_dims = self.spec.kv_shape.clone();
+        let ids_buf = self.client.buffer_from_host_buffer(ids, &[b], None)?;
+        let pos_buf = self.client.buffer_from_host_buffer(positions, &[b], None)?;
+        let kvk_buf = self.client.buffer_from_host_buffer(&self.kv_k, &kv_dims, None)?;
+        let kvv_buf = self.client.buffer_from_host_buffer(&self.kv_v, &kv_dims, None)?;
+        let tau_buf = self.client.buffer_from_host_buffer(tau, &[b], None)?;
+        let hot_buf =
+            self.client
+                .buffer_from_host_buffer(&self.hot_mask, &[self.spec.vocab], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend([&ids_buf, &pos_buf, &kvk_buf, &kvv_buf, &tau_buf, &hot_buf]);
+
+        let result = self.exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+
+        let logits: Vec<f32> = parts[0].to_vec()?;
+        let stats_flat: Vec<f32> = parts[1].to_vec()?;
+        parts[2].copy_raw_to(&mut self.kv_k)?;
+        parts[3].copy_raw_to(&mut self.kv_v)?;
+
+        let stats = stats_flat
+            .chunks_exact(4)
+            .map(|c| [c[0], c[1], c[2], c[3]])
+            .collect();
+        Ok(StepOutput { logits, stats })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.spec.batch
+    }
+    pub fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+    pub fn max_seq(&self) -> usize {
+        self.spec.max_seq
+    }
+}

@@ -1,0 +1,16 @@
+//! Distributed-GPU timing substrate (see DESIGN.md §2).
+//!
+//! We have no L40/H100/B200 testbed in this environment, so the *data
+//! plane* is an analytic roofline model ([`gpu`]) composed into pipeline
+//! cycles ([`pipeline`]) and driven by a discrete-event serving simulation
+//! ([`serving`]). The *decision plane* — the paper's contribution — is
+//! never simulated: its per-sequence costs are measured on this host by the
+//! figure harnesses and injected as [`pipeline::DecisionMode`] parameters.
+
+pub mod gpu;
+pub mod pipeline;
+pub mod serving;
+
+pub use gpu::{DataPlaneModel, GpuModel, SamplingCostModel};
+pub use pipeline::{amdahl_drift, decode_iteration, DecisionMode, IterationTiming};
+pub use serving::{simulate, SimConfig, SimRequest, SimResult};

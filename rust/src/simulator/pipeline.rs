@@ -1,0 +1,244 @@
+//! Pipeline-cycle composition: assemble per-iteration timings for the
+//! baseline (sampling as a last-stage epilogue, Eq. 4) and for SIMPLE
+//! (decision plane off-path and overlapped), with bubble accounting.
+
+use super::gpu::GpuModel;
+
+/// How the decision plane is realized, for timing purposes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DecisionMode {
+    /// Baseline: on-GPU sampling appended to the last PP stage (Eq. 4).
+    GpuEpilogue,
+    /// Naive CPU offload without overlap-aware design: the (measured)
+    /// CPU time is serial after the forward (§5.2's "naïve port").
+    CpuSerial {
+        /// Measured per-sequence decision seconds on this host.
+        per_seq_s: f64,
+        samplers: usize,
+    },
+    /// SIMPLE: sequence-parallel CPU sampling overlapped with the forward;
+    /// it binds only when slower than the pipeline cycle.
+    SimpleOverlapped { per_seq_s: f64, samplers: usize },
+}
+
+impl DecisionMode {
+    /// Wall time the decision plane needs for `batch` sequences.
+    pub fn decision_wall_s(&self, batch: usize) -> f64 {
+        match *self {
+            DecisionMode::GpuEpilogue => 0.0, // folded into the GPU cycle
+            DecisionMode::CpuSerial { per_seq_s, samplers }
+            | DecisionMode::SimpleOverlapped { per_seq_s, samplers } => {
+                let m = samplers.max(1) as f64;
+                (batch as f64 / m).ceil() * per_seq_s
+            }
+        }
+    }
+}
+
+/// Per-iteration timing decomposition.
+#[derive(Debug, Clone)]
+pub struct IterationTiming {
+    /// Pipeline cycle time (inter-token time at steady state).
+    pub cycle_s: f64,
+    /// Max per-stage compute (without sampling).
+    pub stage_max_s: f64,
+    /// GPU-side sampling epilogue (baseline only).
+    pub gpu_sampling_s: f64,
+    /// CPU decision wall time (offloaded modes).
+    pub cpu_decision_s: f64,
+    /// Fraction of iteration spent sampling (Fig. 1's `f`).
+    pub sampling_fraction: f64,
+    /// Pipeline bubble fraction: idle stage-time / total stage-time.
+    pub bubble_fraction: f64,
+    /// GPU busy fraction within the cycle.
+    pub gpu_busy_fraction: f64,
+}
+
+/// Compose one decode iteration's timing.
+///
+/// `batch` = total sequences in flight; `ctx` = mean context length.
+pub fn decode_iteration(
+    gpu: &GpuModel,
+    mode: DecisionMode,
+    batch: usize,
+    ctx: f64,
+) -> IterationTiming {
+    let p = gpu.parallel.pp;
+    let stage = gpu.stage_compute_s(batch, ctx);
+    let comm = gpu.pp_comm_s(batch);
+    let simple = matches!(mode, DecisionMode::SimpleOverlapped { .. });
+    let fanout = gpu.fanout_s(simple);
+
+    let (cycle, gpu_sampling, cpu_decision) = match mode {
+        DecisionMode::GpuEpilogue => {
+            let samp = gpu.gpu_sampling_s(batch);
+            // Eq. 4: the last stage carries compute + sampling; the cycle is
+            // pinned at the stage maximum, plus the synchronous host gap.
+            let last = stage + samp;
+            (last + comm + fanout + gpu.data.baseline_sync_s, samp, 0.0)
+        }
+        DecisionMode::CpuSerial { .. } => {
+            // Offloaded but NOT overlapped: decision wall time serializes
+            // after the forward each iteration (still a synchronous stack).
+            let d = mode.decision_wall_s(batch);
+            (stage + comm + fanout + gpu.data.baseline_sync_s + d, 0.0, d)
+        }
+        DecisionMode::SimpleOverlapped { .. } => {
+            // Overlapped: the decision plane runs under the next forward;
+            // it binds only if slower than the GPU cycle. Async rings shrink
+            // the host gap.
+            let d = mode.decision_wall_s(batch);
+            let gpu_cycle = stage + comm + fanout + gpu.data.simple_sync_s;
+            (gpu_cycle.max(d), 0.0, d)
+        }
+    };
+
+    let total_sampling = gpu_sampling + cpu_decision;
+    let sampling_fraction = match mode {
+        DecisionMode::GpuEpilogue => gpu_sampling / cycle,
+        DecisionMode::CpuSerial { .. } => cpu_decision / cycle,
+        DecisionMode::SimpleOverlapped { .. } => {
+            // visible share: only the non-hidden part
+            ((cpu_decision - (stage + comm)).max(0.0)) / cycle
+        }
+    };
+
+    // Bubbles: every stage is busy `stage` per cycle (the baseline's last
+    // stage additionally runs the sampling epilogue while the others idle).
+    let total_busy = match mode {
+        DecisionMode::GpuEpilogue => (p - 1) as f64 * stage + (stage + gpu_sampling),
+        _ => p as f64 * stage,
+    };
+    let bubble_fraction = 1.0 - total_busy / (cycle * p as f64);
+    // Mean GPU utilization across stages (what nvidia-smi style Figures 8
+    // report) is the complement of the bubble fraction.
+    let gpu_busy_fraction = (1.0 - bubble_fraction).min(1.0);
+
+    let _ = total_sampling;
+    IterationTiming {
+        cycle_s: cycle,
+        stage_max_s: stage,
+        gpu_sampling_s: gpu_sampling,
+        cpu_decision_s: cpu_decision,
+        sampling_fraction,
+        bubble_fraction: bubble_fraction.clamp(0.0, 1.0),
+        gpu_busy_fraction,
+    }
+}
+
+/// Amdahl drift (Eq. 3): the sampling fraction after accelerating the
+/// non-sampling work by ρ.
+pub fn amdahl_drift(f: f64, rho: f64) -> f64 {
+    f / (f + (1.0 - f) / rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, ParallelConfig, PlatformSpec};
+
+    fn gpu(tp: usize, pp: usize) -> GpuModel {
+        GpuModel::new(
+            ModelSpec::qwen25_72b(),
+            PlatformSpec::h100(),
+            ParallelConfig::new(tp, pp),
+        )
+    }
+
+    #[test]
+    fn baseline_bubbles_in_paper_band() {
+        // Fig 1b: bubbles of 22–40% for Qwen-2.5-72B (t=4, p=2).
+        let g = gpu(4, 2);
+        let t = decode_iteration(&g, DecisionMode::GpuEpilogue, 256, 512.0);
+        assert!(
+            (0.10..=0.45).contains(&t.bubble_fraction),
+            "bubble {:.3}",
+            t.bubble_fraction
+        );
+        assert!(t.sampling_fraction > 0.1);
+    }
+
+    #[test]
+    fn simple_removes_bubbles_when_hidden() {
+        let g = gpu(4, 2);
+        let base = decode_iteration(&g, DecisionMode::GpuEpilogue, 256, 512.0);
+        // decision plane fast enough to hide
+        let simple = decode_iteration(
+            &g,
+            DecisionMode::SimpleOverlapped { per_seq_s: 10e-6, samplers: 16 },
+            256,
+            512.0,
+        );
+        assert!(simple.cycle_s < base.cycle_s);
+        assert!(simple.bubble_fraction < base.bubble_fraction);
+        assert_eq!(simple.sampling_fraction, 0.0, "fully hidden");
+        assert!(simple.gpu_busy_fraction > base.gpu_busy_fraction - 1e-9);
+    }
+
+    #[test]
+    fn slow_decision_plane_binds_the_cycle() {
+        let g = gpu(4, 2);
+        let slow = decode_iteration(
+            &g,
+            DecisionMode::SimpleOverlapped { per_seq_s: 5e-3, samplers: 1 },
+            256,
+            512.0,
+        );
+        assert!(slow.cycle_s >= slow.cpu_decision_s);
+        assert!(slow.sampling_fraction > 0.0, "visible share when binding");
+    }
+
+    #[test]
+    fn naive_cpu_offload_is_worse_than_overlap() {
+        let g = gpu(4, 2);
+        let per_seq = 100e-6;
+        let serial = decode_iteration(
+            &g,
+            DecisionMode::CpuSerial { per_seq_s: per_seq, samplers: 16 },
+            256,
+            512.0,
+        );
+        let overlapped = decode_iteration(
+            &g,
+            DecisionMode::SimpleOverlapped { per_seq_s: per_seq, samplers: 16 },
+            256,
+            512.0,
+        );
+        assert!(serial.cycle_s > overlapped.cycle_s);
+    }
+
+    #[test]
+    fn amdahl_drift_monotone_to_one() {
+        let f = 0.2;
+        assert!((amdahl_drift(f, 1.0) - f).abs() < 1e-12);
+        assert!(amdahl_drift(f, 2.0) > f);
+        assert!(amdahl_drift(f, 1e9) > 0.999);
+    }
+
+    #[test]
+    fn throughput_gain_band_matches_fig3_shape() {
+        // SIMPLE vs baseline throughput gain should be material (tens of %)
+        // for a large-vocab model on H100 and larger with deeper pipelines.
+        let gain = |pp: usize| {
+            let g = GpuModel::new(
+                ModelSpec::qwen3_235b_a22b(),
+                PlatformSpec::h100(),
+                ParallelConfig::new(4, pp),
+            );
+            let batch = 32 * g.parallel.world_size();
+            let base = decode_iteration(&g, DecisionMode::GpuEpilogue, batch, 512.0);
+            let simple = decode_iteration(
+                &g,
+                DecisionMode::SimpleOverlapped { per_seq_s: 20e-6, samplers: 16 },
+                batch,
+                512.0,
+            );
+            base.cycle_s / simple.cycle_s
+        };
+        let g2 = gain(2);
+        let g4 = gain(4);
+        assert!(g2 > 1.1, "gain {g2}");
+        assert!(g4 > g2, "deeper pipeline gains more: {g4} vs {g2}");
+        assert!(g4 < 2.5, "gain {g4} implausibly large");
+    }
+}

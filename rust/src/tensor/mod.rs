@@ -1,0 +1,361 @@
+//! Minimal 2-D tensor types for the decision plane.
+//!
+//! Layouts matter here more than generality: the paper's workflow transposes
+//! logits to **vocabulary-major** `[V/t × B]` before writing them to shared
+//! memory (step ②–③) so CPU samplers scan columns contiguously, and samplers
+//! reconstruct full-vocabulary views per sequence by concatenating the
+//! rank-local slices **without copies** (step ④). [`ShardedLogits`] is that
+//! zero-copy view.
+
+use std::sync::Arc;
+
+/// Owned row-major 2-D f32 tensor (`rows × cols`, index = r*cols + c).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor2 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+    /// Contiguous row slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Out-of-place transpose (used by workers when producing the
+    /// vocabulary-major layout; blocked for cache friendliness).
+    pub fn transposed(&self) -> Tensor2 {
+        const BLK: usize = 32;
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for rb in (0..self.rows).step_by(BLK) {
+            for cb in (0..self.cols).step_by(BLK) {
+                for r in rb..(rb + BLK).min(self.rows) {
+                    for c in cb..(cb + BLK).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One TP rank's vocabulary-major logits slice `[v_shard × B]`, stored in a
+/// shared, reference-counted buffer (the "shared-memory region"). Element
+/// `(v_local, b)` lives at `offset + v_local*batch + b`.
+#[derive(Clone)]
+pub struct RankSlice {
+    buf: Arc<Vec<f32>>,
+    offset: usize,
+    pub v_shard: usize,
+    pub batch: usize,
+}
+
+impl RankSlice {
+    pub fn new(buf: Arc<Vec<f32>>, offset: usize, v_shard: usize, batch: usize) -> Self {
+        assert!(offset + v_shard * batch <= buf.len(), "slice out of bounds");
+        RankSlice { buf, offset, v_shard, batch }
+    }
+
+    /// Build from an owned vocab-major vec (tests, single-rank paths).
+    pub fn from_vec(data: Vec<f32>, v_shard: usize, batch: usize) -> Self {
+        assert_eq!(data.len(), v_shard * batch);
+        RankSlice { buf: Arc::new(data), offset: 0, v_shard, batch }
+    }
+
+    #[inline]
+    pub fn get(&self, v_local: usize, b: usize) -> f32 {
+        debug_assert!(v_local < self.v_shard && b < self.batch);
+        self.buf[self.offset + v_local * self.batch + b]
+    }
+
+    /// The contiguous row for one local vocab id (all sequences).
+    pub fn vocab_row(&self, v_local: usize) -> &[f32] {
+        let start = self.offset + v_local * self.batch;
+        &self.buf[start..start + self.batch]
+    }
+}
+
+/// Zero-copy full-vocabulary view over `t` rank-local slices (workflow step
+/// ④): logically a `V × B` matrix made of vertical `V/t` slices. Samplers
+/// iterate a sequence's logits across the full vocabulary without ever
+/// materializing the concatenation.
+#[derive(Clone)]
+pub struct ShardedLogits {
+    slices: Vec<RankSlice>,
+    /// Cumulative vocab offsets; starts[r] = global vocab id of slice r's row 0.
+    starts: Vec<usize>,
+    vocab: usize,
+    batch: usize,
+}
+
+impl ShardedLogits {
+    pub fn new(slices: Vec<RankSlice>) -> Self {
+        assert!(!slices.is_empty(), "need at least one rank slice");
+        let batch = slices[0].batch;
+        assert!(slices.iter().all(|s| s.batch == batch), "batch mismatch across ranks");
+        let mut starts = Vec::with_capacity(slices.len());
+        let mut vocab = 0;
+        for s in &slices {
+            starts.push(vocab);
+            vocab += s.v_shard;
+        }
+        ShardedLogits { slices, starts, vocab, batch }
+    }
+
+    /// Single-rank (unsharded) logits from a row-major `[B × V]` tensor —
+    /// transposes once, as the GPU worker does in workflow step ②.
+    pub fn from_row_major(logits: &Tensor2) -> Self {
+        let t = logits.transposed(); // [V × B]
+        let (v, b) = (t.rows(), t.cols());
+        Self::new(vec![RankSlice::from_vec(t.into_vec(), v, b)])
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+    pub fn num_shards(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Logit for (global vocab id, sequence).
+    #[inline]
+    pub fn get(&self, v: usize, b: usize) -> f32 {
+        let r = match self.starts.binary_search(&v) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        self.slices[r].get(v - self.starts[r], b)
+    }
+
+    /// Visit all logits of sequence `b` in vocab order: `f(global_v, logit)`.
+    /// This is the sampler's O(V) streaming scan; it touches each rank slice
+    /// contiguously along its vocab rows (stride = batch).
+    #[inline]
+    pub fn for_each_logit(&self, b: usize, mut f: impl FnMut(usize, f32)) {
+        debug_assert!(b < self.batch);
+        for (r, s) in self.slices.iter().enumerate() {
+            let base = self.starts[r];
+            let start = s.offset + b;
+            let buf = &s.buf[..];
+            for v_local in 0..s.v_shard {
+                // element (v_local, b) at offset + v_local*batch + b
+                f(base + v_local, buf[start + v_local * s.batch]);
+            }
+        }
+    }
+
+    /// Gather sequence `b`'s logits for an explicit id list (hot-set reads).
+    #[inline]
+    pub fn gather(&self, b: usize, ids: &[u32], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(ids.len());
+        if self.slices.len() == 1 {
+            let s = &self.slices[0];
+            let base = s.offset + b;
+            for &v in ids {
+                out.push(s.buf[base + (v as usize) * s.batch]);
+            }
+        } else {
+            for &v in ids {
+                out.push(self.get(v as usize, b));
+            }
+        }
+    }
+
+    /// Materialize one sequence's full logits row (used by reference/oracle
+    /// paths and the baseline full-V sampler; the SIMPLE fast path avoids it).
+    pub fn materialize_row(&self, b: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.vocab);
+        self.for_each_logit(b, |_, z| out.push(z));
+        out
+    }
+}
+
+/// Split a row-major `[B × V]` logits tensor into `t` vocabulary-major rank
+/// slices `[V/t × B]` — what the final-stage TP workers produce in steps
+/// ②–③. The last rank takes the remainder when `t ∤ V`.
+pub fn shard_row_major(logits: &Tensor2, t: usize) -> ShardedLogits {
+    assert!(t >= 1);
+    let (b, v) = (logits.rows(), logits.cols());
+    let per = v / t;
+    assert!(per > 0, "more shards than vocab");
+    let mut slices = Vec::with_capacity(t);
+    for r in 0..t {
+        let v0 = r * per;
+        let v1 = if r == t - 1 { v } else { v0 + per };
+        let vs = v1 - v0;
+        // transpose the [B × vs] panel into vocab-major [vs × B]
+        let mut data = vec![0.0f32; vs * b];
+        for bi in 0..b {
+            let row = logits.row(bi);
+            for (vl, &z) in row[v0..v1].iter().enumerate() {
+                data[vl * b + bi] = z;
+            }
+        }
+        slices.push(RankSlice::from_vec(data, vs, b));
+    }
+    ShardedLogits::new(slices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(rows: usize, cols: usize) -> Tensor2 {
+        Tensor2::from_vec(rows, cols, (0..rows * cols).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn tensor_indexing_and_rows() {
+        let t = seq_tensor(3, 4);
+        assert_eq!(t.get(0, 0), 0.0);
+        assert_eq!(t.get(2, 3), 11.0);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = seq_tensor(5, 7);
+        let tt = t.transposed();
+        assert_eq!(tt.rows(), 7);
+        assert_eq!(tt.cols(), 5);
+        for r in 0..5 {
+            for c in 0..7 {
+                assert_eq!(t.get(r, c), tt.get(c, r));
+            }
+        }
+        assert_eq!(tt.transposed(), t);
+    }
+
+    #[test]
+    fn sharded_view_matches_dense_all_shardings() {
+        let b = 6;
+        let v = 20;
+        let t = seq_tensor(b, v);
+        for shards in [1, 2, 3, 4, 5] {
+            let sl = shard_row_major(&t, shards);
+            assert_eq!(sl.vocab(), v);
+            assert_eq!(sl.batch(), b);
+            assert_eq!(sl.num_shards(), shards);
+            for bi in 0..b {
+                for vi in 0..v {
+                    assert_eq!(
+                        sl.get(vi, bi),
+                        t.get(bi, vi),
+                        "shards={shards} v={vi} b={bi}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_logit_streams_in_vocab_order() {
+        let t = seq_tensor(3, 10);
+        let sl = shard_row_major(&t, 3); // 3,3,4 split
+        for b in 0..3 {
+            let mut ids = Vec::new();
+            let mut vals = Vec::new();
+            sl.for_each_logit(b, |v, z| {
+                ids.push(v);
+                vals.push(z);
+            });
+            assert_eq!(ids, (0..10).collect::<Vec<_>>());
+            assert_eq!(vals, t.row(b));
+        }
+    }
+
+    #[test]
+    fn materialize_equals_row() {
+        let t = seq_tensor(4, 9);
+        let sl = shard_row_major(&t, 2);
+        for b in 0..4 {
+            assert_eq!(sl.materialize_row(b), t.row(b));
+        }
+    }
+
+    #[test]
+    fn gather_reads_requested_ids() {
+        let t = seq_tensor(2, 12);
+        for shards in [1, 3] {
+            let sl = shard_row_major(&t, shards);
+            let ids = [11u32, 0, 5, 5, 7];
+            let mut out = Vec::new();
+            sl.gather(1, &ids, &mut out);
+            let expect: Vec<f32> = ids.iter().map(|&v| t.get(1, v as usize)).collect();
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn from_row_major_single_shard() {
+        let t = seq_tensor(3, 5);
+        let sl = ShardedLogits::from_row_major(&t);
+        assert_eq!(sl.num_shards(), 1);
+        for b in 0..3 {
+            assert_eq!(sl.materialize_row(b), t.row(b));
+        }
+    }
+
+    #[test]
+    fn rank_slice_shared_buffer_zero_copy() {
+        // Two slices sharing one backing buffer — the shared-memory region.
+        let buf = Arc::new((0..24).map(|i| i as f32).collect::<Vec<f32>>());
+        let a = RankSlice::new(buf.clone(), 0, 3, 4); // [3x4] at offset 0
+        let c = RankSlice::new(buf.clone(), 12, 3, 4); // [3x4] at offset 12
+        assert_eq!(a.get(0, 0), 0.0);
+        assert_eq!(c.get(0, 0), 12.0);
+        assert_eq!(Arc::strong_count(&buf), 3);
+        let sl = ShardedLogits::new(vec![a, c]);
+        assert_eq!(sl.vocab(), 6);
+        assert_eq!(sl.get(3, 0), 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor2::from_vec(2, 3, vec![0.0; 5]);
+    }
+}

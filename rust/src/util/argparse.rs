@@ -1,0 +1,244 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Typed getters parse on access and report errors with the
+//! offending flag name.
+
+use std::collections::BTreeMap;
+use std::fmt::Display;
+use std::str::FromStr;
+
+/// Parsed command line: subcommand (optional), key/value options, flags,
+/// and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Program name (argv[0]).
+    pub program: String,
+    /// First non-flag token, if the caller requested subcommand parsing.
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, Vec<String>>,
+    positionals: Vec<String>,
+}
+
+/// Declarative spec for one option, used for `--help` output and to know
+/// which options consume a value.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl OptSpec {
+    pub const fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, takes_value: false, help }
+    }
+    pub const fn value(name: &'static str, help: &'static str) -> Self {
+        Self { name, takes_value: true, help }
+    }
+}
+
+/// Argument parsing error.
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value {value:?} for --{name}: {msg}")]
+    Invalid { name: String, value: String, msg: String },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    /// Parse `std::env::args()` against a spec. If `with_subcommand`, the
+    /// first bare token becomes [`Args::subcommand`].
+    pub fn parse_env(specs: &[OptSpec], with_subcommand: bool) -> Result<Self, ArgError> {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv, specs, with_subcommand)
+    }
+
+    /// Parse an explicit argv (index 0 is the program name).
+    pub fn parse(
+        argv: &[String],
+        specs: &[OptSpec],
+        with_subcommand: bool,
+    ) -> Result<Self, ArgError> {
+        let mut args = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let spec_for = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = spec_for(&name).ok_or_else(|| ArgError::Unknown(name.clone()))?;
+                let value = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::MissingValue(name.clone()))?
+                        }
+                    }
+                } else {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                };
+                args.options.entry(name).or_default().push(value);
+            } else if with_subcommand && args.subcommand.is_none() && args.positionals.is_empty()
+            {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// True if `--name` was given (as a flag or with any value).
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.contains_key(name)
+    }
+
+    /// Last occurrence of `--name`'s raw value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of `--name`.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Typed getter with default.
+    pub fn get_or<T: FromStr>(&self, name: &str, default: T) -> Result<T, ArgError>
+    where
+        T::Err: Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|e: T::Err| ArgError::Invalid {
+                name: name.to_string(),
+                value: raw.to_string(),
+                msg: e.to_string(),
+            }),
+        }
+    }
+
+    /// Typed getter, required.
+    pub fn require<T: FromStr>(&self, name: &str) -> Result<T, ArgError>
+    where
+        T::Err: Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| ArgError::MissingRequired(name.to_string()))?;
+        raw.parse().map_err(|e: T::Err| ArgError::Invalid {
+            name: name.to_string(),
+            value: raw.to_string(),
+            msg: e.to_string(),
+        })
+    }
+
+    /// Positional arguments (excluding the subcommand).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+/// Render a `--help` block from specs.
+pub fn render_help(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{program} — {about}\n\nOptions:\n");
+    for s in specs {
+        let arg = if s.takes_value {
+            format!("--{} <v>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        out.push_str(&format!("  {arg:<24} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[OptSpec] = &[
+        OptSpec::value("batch", "batch size"),
+        OptSpec::value("model", "model name"),
+        OptSpec::flag("quick", "quick mode"),
+    ];
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = Args::parse(&sv(&["p", "--batch", "32", "--quick"]), SPECS, false).unwrap();
+        assert_eq!(a.get_or("batch", 0usize).unwrap(), 32);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("model"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&sv(&["p", "--batch=64"]), SPECS, false).unwrap();
+        assert_eq!(a.get_or("batch", 0usize).unwrap(), 64);
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = Args::parse(&sv(&["p", "serve", "file.json", "--quick"]), SPECS, true).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positionals(), &["file.json".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let err = Args::parse(&sv(&["p", "--nope"]), SPECS, false).unwrap_err();
+        assert!(matches!(err, ArgError::Unknown(_)));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let err = Args::parse(&sv(&["p", "--batch"]), SPECS, false).unwrap_err();
+        assert!(matches!(err, ArgError::MissingValue(_)));
+    }
+
+    #[test]
+    fn invalid_typed_value_errors() {
+        let a = Args::parse(&sv(&["p", "--batch", "abc"]), SPECS, false).unwrap();
+        assert!(a.get_or("batch", 0usize).is_err());
+    }
+
+    #[test]
+    fn last_occurrence_wins_and_all_are_kept() {
+        let a =
+            Args::parse(&sv(&["p", "--model", "a", "--model", "b"]), SPECS, false).unwrap();
+        assert_eq!(a.get("model"), Some("b"));
+        assert_eq!(a.get_all("model"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let a = Args::parse(&sv(&["p"]), SPECS, false).unwrap();
+        assert!(matches!(
+            a.require::<usize>("batch").unwrap_err(),
+            ArgError::MissingRequired(_)
+        ));
+    }
+}

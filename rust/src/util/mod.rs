@@ -1,0 +1,123 @@
+//! Small self-contained utilities (the offline image has no clap/serde/log,
+//! so these substrates are hand-built and tested here).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+
+use std::time::{Duration, Instant};
+
+/// Measure wall time of a closure, returning `(result, elapsed)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Format a duration as a human-readable string with µs/ms/s units.
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1_000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Partition `n` items into `m` contiguous, near-equal index ranges
+/// (the sequence-parallel batch partition `B_1..B_m` of paper §5.1).
+/// Earlier ranges get the remainder; empty ranges are omitted.
+pub fn partition_ranges(n: usize, m: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 || m == 0 {
+        return Vec::new();
+    }
+    let m = m.min(n);
+    let base = n / m;
+    let rem = n % m;
+    let mut out = Vec::with_capacity(m);
+    let mut start = 0;
+    for j in 0..m {
+        let len = base + usize::from(j < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Ensure a directory exists (mkdir -p).
+pub fn ensure_dir(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::create_dir_all(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn partition_covers_all_indices_without_overlap() {
+        for n in [0usize, 1, 7, 32, 256, 1000] {
+            for m in [1usize, 2, 3, 16, 64] {
+                let ranges = partition_ranges(n, m);
+                let mut covered = vec![false; n];
+                for r in &ranges {
+                    for i in r.clone() {
+                        assert!(!covered[i], "index {i} covered twice (n={n}, m={m})");
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "not all covered (n={n}, m={m})");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_balanced() {
+        let ranges = partition_ranges(10, 3);
+        let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        // sizes differ by at most one
+        for n in [5usize, 17, 100] {
+            for m in [2usize, 4, 7] {
+                let lens: Vec<usize> =
+                    partition_ranges(n, m).iter().map(|r| r.len()).collect();
+                let mx = *lens.iter().max().unwrap();
+                let mn = *lens.iter().min().unwrap();
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_degenerate_cases() {
+        assert!(partition_ranges(0, 4).is_empty());
+        assert!(partition_ranges(4, 0).is_empty());
+        // more workers than items: one range per item
+        let ranges = partition_ranges(3, 8);
+        assert_eq!(ranges.len(), 3);
+        assert!(ranges.iter().all(|r| r.len() == 1));
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_micros(12)), "12.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(3)), "3.00ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+    }
+}

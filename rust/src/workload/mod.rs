@@ -1,0 +1,190 @@
+//! Workload synthesis: ShareGPT-like request traces and arrival processes.
+//!
+//! The paper replays a fixed prompt set sampled from ShareGPT with early
+//! stopping disabled (§7.1). ShareGPT is unavailable offline, so we
+//! synthesize traces with the published shape of that dataset: log-normal
+//! prompt lengths (median ≈ tens of tokens, long tail) and log-normal
+//! output lengths (median ≈ 200), plus Poisson arrivals for the open-loop
+//! load–latency sweep (Figure 6).
+
+use crate::decision::SamplingParams;
+use crate::engine::Request;
+use crate::rng::Philox;
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub num_requests: usize,
+    /// ln-space mean/σ of prompt length.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    /// ln-space mean/σ of output length.
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub min_output: usize,
+    pub max_output: usize,
+    pub vocab: usize,
+    /// Zipf exponent of prompt-token frequencies.
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    /// ShareGPT-shaped defaults scaled to a maximum sequence length.
+    pub fn sharegpt_like(num_requests: usize, vocab: usize, max_seq: usize) -> TraceConfig {
+        let cap = max_seq.saturating_sub(2);
+        TraceConfig {
+            num_requests,
+            prompt_mu: 3.6, // median ~ 36 tokens
+            prompt_sigma: 0.9,
+            output_mu: 4.6, // median ~ 100 tokens
+            output_sigma: 0.7,
+            min_prompt: 4,
+            max_prompt: (cap / 2).max(5),
+            min_output: 8,
+            max_output: (cap / 2).max(9),
+            vocab,
+            zipf_s: 1.05,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Tiny trace for tests.
+    pub fn tiny(num_requests: usize, vocab: usize) -> TraceConfig {
+        TraceConfig {
+            num_requests,
+            prompt_mu: 2.0,
+            prompt_sigma: 0.4,
+            output_mu: 2.0,
+            output_sigma: 0.3,
+            min_prompt: 2,
+            max_prompt: 12,
+            min_output: 2,
+            max_output: 10,
+            vocab,
+            zipf_s: 1.1,
+            seed: 7,
+        }
+    }
+}
+
+/// A synthesized trace: requests plus their nominal output lengths.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+    /// Target output length per request (max_new_tokens mirrors it; kept
+    /// separately for the simulator which doesn't run the engine).
+    pub output_lens: Vec<usize>,
+}
+
+/// Generate a closed-loop trace (all arrivals at t = 0).
+pub fn generate(cfg: &TraceConfig) -> Trace {
+    let mut rng = Philox::new(cfg.seed);
+    let zipf = crate::rng::zipf::ZipfMandelbrot::zipf(cfg.vocab, cfg.zipf_s);
+    let mut requests = Vec::with_capacity(cfg.num_requests);
+    let mut output_lens = Vec::with_capacity(cfg.num_requests);
+    for id in 0..cfg.num_requests {
+        let plen = (rng.next_lognormal(cfg.prompt_mu, cfg.prompt_sigma) as usize)
+            .clamp(cfg.min_prompt, cfg.max_prompt);
+        let olen = (rng.next_lognormal(cfg.output_mu, cfg.output_sigma) as usize)
+            .clamp(cfg.min_output, cfg.max_output);
+        let prompt: Vec<u32> = (0..plen)
+            .map(|_| zipf.sample(&mut rng) as u32)
+            .collect();
+        let mut req = Request::new(id as u64, prompt, olen);
+        req.params = SamplingParams {
+            seed: id as u64,
+            ..SamplingParams::production_default()
+        };
+        requests.push(req);
+        output_lens.push(olen);
+    }
+    Trace { requests, output_lens }
+}
+
+/// Stamp Poisson arrivals at `rate` req/s onto a trace (open loop).
+/// `rate = f64::INFINITY` leaves everything at t = 0 (saturation).
+pub fn poisson_arrivals(trace: &mut Trace, rate: f64, seed: u64) {
+    if !rate.is_finite() {
+        for r in &mut trace.requests {
+            r.arrival = 0.0;
+        }
+        return;
+    }
+    assert!(rate > 0.0);
+    let mut rng = Philox::new(seed);
+    let mut t = 0.0;
+    for r in &mut trace.requests {
+        t += rng.next_exp() / rate;
+        r.arrival = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_respects_bounds() {
+        let cfg = TraceConfig::sharegpt_like(200, 32_000, 256);
+        let trace = generate(&cfg);
+        assert_eq!(trace.requests.len(), 200);
+        for (r, &olen) in trace.requests.iter().zip(&trace.output_lens) {
+            assert!(r.prompt.len() >= cfg.min_prompt && r.prompt.len() <= cfg.max_prompt);
+            assert!(olen >= cfg.min_output && olen <= cfg.max_output);
+            assert_eq!(r.max_new_tokens, olen);
+            assert!(r.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let cfg = TraceConfig::tiny(50, 1000);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn prompt_tokens_are_zipf_skewed() {
+        let cfg = TraceConfig::sharegpt_like(500, 10_000, 256);
+        let trace = generate(&cfg);
+        let mut low = 0usize;
+        let mut total = 0usize;
+        for r in &trace.requests {
+            for &t in &r.prompt {
+                total += 1;
+                if (t as usize) < 1000 {
+                    low += 1;
+                }
+            }
+        }
+        // top 10% of ids should carry well over half the tokens
+        assert!(low as f64 / total as f64 > 0.5, "{low}/{total}");
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_with_mean_rate() {
+        let cfg = TraceConfig::tiny(2000, 1000);
+        let mut trace = generate(&cfg);
+        poisson_arrivals(&mut trace, 50.0, 3);
+        let times: Vec<f64> = trace.requests.iter().map(|r| r.arrival).collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        let span = times.last().unwrap();
+        let rate = times.len() as f64 / span;
+        assert!((rate - 50.0).abs() < 5.0, "rate {rate}");
+    }
+
+    #[test]
+    fn infinite_rate_means_saturation() {
+        let cfg = TraceConfig::tiny(10, 1000);
+        let mut trace = generate(&cfg);
+        poisson_arrivals(&mut trace, f64::INFINITY, 3);
+        assert!(trace.requests.iter().all(|r| r.arrival == 0.0));
+    }
+}

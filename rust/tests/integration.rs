@@ -1,0 +1,172 @@
+//! Cross-module integration tests that don't need the AOT artifacts
+//! (those live in `runtime_artifacts.rs`): decision service under load,
+//! simulator ↔ workload ↔ metrics composition, harness report plumbing.
+
+use simple_serve::config::{DecisionVariant, SamplerConfig};
+use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
+use simple_serve::decision::SamplingParams;
+use simple_serve::harness::measure::LogitsGen;
+use simple_serve::harness::{run_experiment, Effort, ALL_EXPERIMENTS};
+use simple_serve::simulator::{simulate, DecisionMode, GpuModel, SimConfig};
+use simple_serve::workload;
+use std::sync::Arc;
+
+#[test]
+fn service_sustains_many_iterations_with_churn() {
+    // Sequences register/retire continuously while iterations stream —
+    // the scheduler-facing contract under continuous batching.
+    let vocab = 2_000;
+    let gen = LogitsGen::new(vocab, 1.1, 9);
+    let hot = gen.hot_vocab(200).into_arc();
+    let cfg = SamplerConfig {
+        num_samplers: 3,
+        variant: DecisionVariant::Shvs,
+        seed: 5,
+        ..Default::default()
+    };
+    let svc = SamplerService::start(&cfg, Some(hot.clone()), 512);
+    let params = SamplingParams::production_default();
+
+    let batch = 6usize;
+    let mut live: Vec<u64> = (0..batch as u64).collect();
+    for &s in &live {
+        svc.register(s, &[1, 2], &params);
+    }
+    let mut next_id = batch as u64;
+    let mut decided_total = 0usize;
+    for iter in 0..60u64 {
+        let view = gen.view(batch, iter, 2);
+        let pre: Vec<_> = (0..batch)
+            .map(|b| {
+                simple_serve::decision::Precompute::reference(
+                    &view,
+                    b,
+                    &hot,
+                    params.temperature,
+                )
+            })
+            .collect();
+        let columns: Vec<ColumnMeta> = live
+            .iter()
+            .enumerate()
+            .map(|(col, &seq_id)| ColumnMeta { col, seq_id, iteration: iter })
+            .collect();
+        svc.submit(IterationTask {
+            iter,
+            view,
+            columns: Arc::new(columns),
+            pre: Arc::new(pre),
+        });
+        let (decisions, busy) = svc.collect(iter, live.len());
+        assert_eq!(decisions.len(), live.len(), "iter {iter}");
+        assert!(busy >= 0.0);
+        decided_total += decisions.len();
+        // churn: retire one sequence every 3 iters, admit a replacement
+        if iter % 3 == 2 {
+            let gone = live.remove((iter as usize) % live.len());
+            svc.retire(gone);
+            svc.register(next_id, &[4, 5, 6], &params);
+            live.push(next_id);
+            next_id += 1;
+        }
+    }
+    for &s in &live {
+        svc.retire(s);
+    }
+    let stats = svc.shutdown();
+    let sum: u64 = stats.iter().map(|s| s.decisions).sum();
+    assert_eq!(sum as usize, decided_total);
+    assert_eq!(decided_total, 60 * batch);
+}
+
+#[test]
+fn simulator_composes_with_workload_end_to_end() {
+    let model = simple_serve::config::ModelSpec::llama31_70b();
+    let platform = simple_serve::config::PlatformSpec::h100();
+    let parallel = simple_serve::config::ParallelConfig::new(4, 2);
+    let mut trace_w = workload::generate(&workload::TraceConfig::sharegpt_like(
+        150,
+        model.vocab,
+        4096,
+    ));
+    workload::poisson_arrivals(&mut trace_w, 20.0, 3);
+    let trace = simple_serve::simulator::serving::to_sim_requests(&trace_w);
+    let expected: usize = trace.iter().map(|r| r.output_len).sum();
+
+    let gpu = GpuModel::new(model, platform.clone(), parallel);
+    let cfg = SimConfig {
+        gpu,
+        mode: DecisionMode::SimpleOverlapped { per_seq_s: 50e-6, samplers: 16 },
+        slots: 256,
+        cpu_cores: platform.cpu_cores,
+        samplers: 16,
+    };
+    let res = simulate(&cfg, &trace);
+    assert_eq!(res.recorder.total_tokens(), expected);
+    assert_eq!(res.recorder.finished_requests(), 150);
+    assert!(res.throughput() > 100.0);
+    // TTFT reflects queueing + prefill, TPOT is bounded by the cycle model
+    assert!(res.recorder.ttft_summary().p50 > 0.0);
+    assert!(res.recorder.tpot_summary().p99 < 1.0);
+}
+
+#[test]
+fn every_experiment_runs_quick_and_writes_reports() {
+    let dir = std::env::temp_dir().join(format!("simple_results_{}", std::process::id()));
+    for id in ALL_EXPERIMENTS {
+        let report = run_experiment(id, Effort::Quick)
+            .unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert_eq!(&report.id, id);
+        assert!(!report.markdown.is_empty());
+        report.write(&dir).unwrap();
+        assert!(dir.join(format!("{id}.md")).exists());
+        assert!(dir.join(format!("{id}.json")).exists());
+        // JSON parses back
+        let parsed =
+            simple_serve::util::json::read_json_file(&dir.join(format!("{id}.json")));
+        assert!(parsed.is_ok(), "{id} json roundtrip");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn deterministic_service_streams_with_tp_sharded_views() {
+    // Decisions must not depend on the TP shard count of the logits view.
+    let vocab = 1_000;
+    let gen = LogitsGen::new(vocab, 1.1, 11);
+    let hot = gen.hot_vocab(128).into_arc();
+    let params = SamplingParams::production_default();
+    let mut streams: Vec<Vec<u32>> = Vec::new();
+    for shards in [1usize, 4] {
+        let cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Shvs,
+            seed: 21,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, Some(hot.clone()), 128);
+        svc.register(0, &[7], &params);
+        let mut out = Vec::new();
+        for iter in 0..25u64 {
+            let view = gen.view(1, iter, shards);
+            let pre = vec![simple_serve::decision::Precompute::reference(
+                &view,
+                0,
+                &hot,
+                params.temperature,
+            )];
+            svc.submit(IterationTask {
+                iter,
+                view,
+                columns: Arc::new(vec![ColumnMeta { col: 0, seq_id: 0, iteration: iter }]),
+                pre: Arc::new(pre),
+            });
+            let (d, _) = svc.collect(iter, 1);
+            out.push(d[0].2.token);
+        }
+        svc.retire(0);
+        svc.shutdown();
+        streams.push(out);
+    }
+    assert_eq!(streams[0], streams[1], "token stream must be shard-invariant");
+}

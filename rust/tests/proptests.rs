@@ -1,0 +1,320 @@
+//! Property-based tests over the decision plane's invariants.
+//!
+//! proptest is unavailable offline, so a minimal driver (`props!`) sweeps
+//! deterministic Philox-generated random cases; failures print the case
+//! seed for reproduction. Each property runs dozens-to-hundreds of cases.
+
+use simple_serve::decision::filter::{self, Truncated};
+use simple_serve::decision::penalties::{apply_penalties_dense, BatchHistory, SeqHistory};
+use simple_serve::decision::shvs::{Precompute, ShvsSampler};
+use simple_serve::decision::{HotVocab, SamplingParams};
+use simple_serve::engine::KvAllocator;
+use simple_serve::metrics::stats::total_variation_distance;
+use simple_serve::rng::Philox;
+use simple_serve::tensor::{shard_row_major, Tensor2};
+
+/// Run `n` cases of a property, feeding each a per-case RNG.
+fn props(name: &str, n: u64, mut prop: impl FnMut(&mut Philox)) {
+    for case in 0..n {
+        let mut rng = Philox::substream(0x5EED ^ case, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name} failed at case {case}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_params(rng: &mut Philox, vocab: usize) -> SamplingParams {
+    SamplingParams {
+        temperature: 0.3 + rng.next_f64() as f32 * 1.5,
+        top_k: if rng.next_f64() < 0.5 {
+            1 + rng.next_below(vocab as u64 / 2) as usize
+        } else {
+            0
+        },
+        top_p: if rng.next_f64() < 0.5 {
+            0.5 + rng.next_f64() as f32 * 0.5
+        } else {
+            1.0
+        },
+        min_p: if rng.next_f64() < 0.3 {
+            rng.next_f64() as f32 * 0.1
+        } else {
+            0.0
+        },
+        repetition_penalty: 1.0 + rng.next_f64() as f32 * 0.5,
+        presence_penalty: rng.next_f64() as f32 * 0.5,
+        frequency_penalty: rng.next_f64() as f32 * 0.3,
+        ..Default::default()
+    }
+}
+
+fn random_logits(rng: &mut Philox, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() as f32 * 2.0).collect()
+}
+
+/// Masked softmax oracle over the truncated set.
+fn dist_of(t: &Truncated, vocab: usize) -> Vec<f64> {
+    let mut d = vec![0.0; vocab];
+    for (i, &id) in t.ids.iter().enumerate() {
+        d[id as usize] = t.prob(i);
+    }
+    d
+}
+
+#[test]
+fn prop_truncation_first_equals_sort_based() {
+    props("truncate==sort", 150, |rng| {
+        let vocab = 16 + rng.next_below(200) as usize;
+        let logits = random_logits(rng, vocab);
+        let params = random_params(rng, vocab);
+        let pairs: Vec<(u32, f32)> =
+            logits.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect();
+        let a = filter::truncate(pairs.clone(), &params);
+        let b = filter::truncate_sort_based(pairs, &params);
+        let da = dist_of(&a, vocab);
+        let db = dist_of(&b, vocab);
+        let tvd = total_variation_distance(&da, &db);
+        assert!(tvd < 1e-9, "tvd {tvd} params {params:?}");
+    });
+}
+
+#[test]
+fn prop_truncated_probs_normalized_and_supported() {
+    props("truncate normalized", 150, |rng| {
+        let vocab = 8 + rng.next_below(500) as usize;
+        let logits = random_logits(rng, vocab);
+        let params = random_params(rng, vocab);
+        let pairs: Vec<(u32, f32)> =
+            logits.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect();
+        let t = filter::truncate(pairs, &params);
+        assert!(!t.is_empty());
+        let total: f64 = (0..t.len()).map(|i| t.prob(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+        if params.top_k > 0 {
+            assert!(t.len() <= params.top_k);
+        }
+        // every kept id is within vocab and unique
+        let mut ids = t.ids.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), t.ids.len());
+        assert!(ids.iter().all(|&i| (i as usize) < vocab));
+    });
+}
+
+#[test]
+fn prop_incremental_histogram_equals_rebuild() {
+    props("hist incremental==rebuild", 100, |rng| {
+        let batch = 1 + rng.next_below(4) as usize;
+        let vocab = 64u64;
+        let prompts: Vec<Vec<u32>> = (0..batch)
+            .map(|_| {
+                (0..rng.next_below(10))
+                    .map(|_| rng.next_below(vocab) as u32)
+                    .collect()
+            })
+            .collect();
+        let mut bh = BatchHistory::new(&prompts, 128);
+        let steps = rng.next_below(40) as usize;
+        for _ in 0..steps {
+            let row: Vec<u32> =
+                (0..batch).map(|_| rng.next_below(vocab) as u32).collect();
+            bh.append_row(&row);
+        }
+        for b in 0..batch {
+            let rebuilt = bh.rebuild(b);
+            let total: u32 = rebuilt.values().sum();
+            assert_eq!(total as usize, steps);
+            for (&t, &c) in &rebuilt {
+                assert_eq!(bh.seq(b).out_count(t), c);
+            }
+            // and the incremental one has no extra entries
+            assert_eq!(bh.seq(b).out_len(), steps);
+        }
+    });
+}
+
+#[test]
+fn prop_penalties_only_lower_seen_token_probability() {
+    props("penalties lower seen", 100, |rng| {
+        let vocab = 32 + rng.next_below(100) as usize;
+        let logits = random_logits(rng, vocab);
+        let params = SamplingParams {
+            repetition_penalty: 1.0 + rng.next_f64() as f32,
+            presence_penalty: rng.next_f64() as f32,
+            frequency_penalty: rng.next_f64() as f32,
+            ..Default::default()
+        };
+        let mut hist = SeqHistory::new(&[]);
+        let seen = rng.next_below(vocab as u64) as u32;
+        hist.append(seen);
+        let mut penalized = logits.clone();
+        apply_penalties_dense(&mut penalized, &hist, &params);
+        // softmax prob of the seen token must not increase
+        let p = |zs: &[f32], id: usize| {
+            let m = zs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let s: f64 = zs.iter().map(|&z| ((z - m) as f64).exp()).sum();
+            ((zs[id] - m) as f64).exp() / s
+        };
+        let before = p(&logits, seen as usize);
+        let after = p(&penalized, seen as usize);
+        assert!(after <= before + 1e-12, "seen {seen}: {before} -> {after}");
+        // unseen tokens' logits unchanged
+        for (i, (&a, &b)) in logits.iter().zip(&penalized).enumerate() {
+            if i != seen as usize {
+                assert_eq!(a, b);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_shvs_matches_oracle_distribution() {
+    // The heavyweight exactness property: SHVS empirical distribution over
+    // many uniforms matches the full-V oracle within Monte-Carlo noise.
+    props("shvs exact", 6, |rng| {
+        let vocab = 40 + rng.next_below(80) as usize;
+        let h = 8 + rng.next_below(vocab as u64 / 3) as usize;
+        let logits = random_logits(rng, vocab);
+        let view = shard_row_major(
+            &Tensor2::from_vec(1, vocab, logits.clone()),
+            1 + rng.next_below(3) as usize,
+        );
+        let mut ids: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(h);
+        let hot = HotVocab::new(ids, vocab).into_arc();
+        let params = random_params(rng, vocab);
+        let mut hist = SeqHistory::new(&[3]);
+        hist.append(5 % vocab as u32);
+
+        let pre = Precompute::reference(&view, 0, &hot, params.temperature.max(1e-6));
+        let mut sampler = ShvsSampler::new(hot);
+        let n = 60_000;
+        let mut counts = vec![0.0f64; vocab];
+        for _ in 0..n {
+            let u = (rng.next_f64(), rng.next_f64(), rng.next_f64());
+            let d = sampler.decide(&view, 0, &hist, &params, &pre, u);
+            counts[d.token as usize] += 1.0;
+        }
+        // oracle
+        let mut row = logits;
+        apply_penalties_dense(&mut row, &hist, &params);
+        let pairs: Vec<(u32, f32)> =
+            row.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect();
+        let t = filter::truncate(pairs, &params);
+        let oracle = dist_of(&t, vocab);
+        let tvd = total_variation_distance(&counts, &oracle);
+        assert!(tvd < 0.02, "tvd {tvd} (params {params:?})");
+    });
+}
+
+#[test]
+fn prop_kv_allocator_conserves_blocks() {
+    props("kv conservation", 80, |rng| {
+        let blocks = 4 + rng.next_below(60) as usize;
+        let mut alloc = KvAllocator::new(blocks, 1 + rng.next_below(32) as usize);
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..200u64 {
+            match rng.next_below(3) {
+                0 => {
+                    let tokens = 1 + rng.next_below(64) as usize;
+                    if alloc.can_admit(tokens) {
+                        let id = op * 1000;
+                        alloc.admit(id, tokens).unwrap();
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let id = live.swap_remove(i);
+                        alloc.release(id).unwrap();
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let _ = alloc.grow(live[i], 1 + rng.next_below(96) as usize);
+                    }
+                }
+            }
+            alloc.check_invariants().unwrap();
+        }
+        for id in live {
+            alloc.release(id).unwrap();
+        }
+        assert_eq!(alloc.free_blocks(), blocks);
+    });
+}
+
+#[test]
+fn prop_sizing_h_star_is_argmin() {
+    props("sizing argmin", 25, |rng| {
+        let vocab = 2_000 + rng.next_below(50_000) as usize;
+        let s = 0.9 + rng.next_f64() * 0.5;
+        let knots = simple_serve::decision::sizing::zipf_alpha_knots(vocab, s, 16);
+        let c = 1e-9 + rng.next_f64() * 1e-7;
+        let c0 = 1e-6 + rng.next_f64() * 1e-5;
+        let cost: Vec<(f64, f64)> = knots
+            .iter()
+            .map(|&(h, _)| (h, c * h + c0))
+            .collect();
+        let model = simple_serve::decision::sizing::SizingModel::fit(&cost, &knots, vocab);
+        let h_star = model.h_star();
+        // brute force over a coarse grid
+        let (lo, hi) = model.alpha.domain();
+        let mut best = f64::INFINITY;
+        let mut h = lo;
+        while h <= hi {
+            best = best.min(model.f(h));
+            h += (hi - lo) / 2000.0;
+        }
+        let rel = (model.f(h_star as f64) - best) / best;
+        assert!(rel < 0.02, "F(H*) {:.3e} vs brute {best:.3e}", model.f(h_star as f64));
+    });
+}
+
+#[test]
+fn prop_spsc_ring_fifo_under_random_interleaving() {
+    props("spsc fifo", 40, |rng| {
+        let cap = 2usize.pow(1 + rng.next_below(6) as u32);
+        let (p, c) = simple_serve::ringbuf::spsc::ring::<u64>(cap);
+        let mut next_push = 0u64;
+        let mut next_pop = 0u64;
+        for _ in 0..2000 {
+            if rng.next_f64() < 0.55 {
+                if p.try_push(next_push).is_ok() {
+                    next_push += 1;
+                }
+            } else if let Ok(v) = c.try_pop() {
+                assert_eq!(v, next_pop);
+                next_pop += 1;
+            }
+        }
+        while let Ok(v) = c.try_pop() {
+            assert_eq!(v, next_pop);
+            next_pop += 1;
+        }
+        assert_eq!(next_pop, next_push);
+    });
+}
+
+#[test]
+fn prop_zero_copy_view_equals_dense() {
+    props("sharded view == dense", 60, |rng| {
+        let b = 1 + rng.next_below(6) as usize;
+        let v = 8 + rng.next_below(300) as usize;
+        let shards = 1 + rng.next_below(5.min(v as u64)) as usize;
+        let data = random_logits(rng, b * v);
+        let t = Tensor2::from_vec(b, v, data);
+        let view = shard_row_major(&t, shards);
+        for bi in 0..b {
+            assert_eq!(view.materialize_row(bi), t.row(bi));
+        }
+    });
+}
