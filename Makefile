@@ -1,0 +1,20 @@
+# simple-serve build entrypoints. `make artifacts` is the one the code
+# cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
+# HLO text + npy weights + manifest under artifacts/, incrementally.
+
+.PHONY: artifacts artifacts-force build test figures
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+artifacts-force:
+	cd python && python -m compile.aot --out-dir ../artifacts --force
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+figures: build
+	cargo run --release -- figures

@@ -5,6 +5,11 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 //! (`--quick` serves fewer requests; `--model micro-test` for CI speed)
+//!
+//! Open-loop traffic: `--traffic {steady,burst,zipf} --rate <req/s>` stamps
+//! arrivals onto the trace (default: closed loop, everything at t = 0) and
+//! reports P95 TTFT/TPOT plus KV-pressure preemption counts — the
+//! bursty-arrival scenario that stresses admit/preempt/resume churn.
 
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
@@ -12,12 +17,16 @@ use simple_serve::engine::PjrtEngine;
 use simple_serve::runtime::{default_artifacts_dir, Manifest, ModelRuntime};
 use simple_serve::util::argparse::{Args, OptSpec};
 use simple_serve::util::json::Json;
-use simple_serve::workload;
+use simple_serve::workload::{self, TrafficPattern};
 
 const SPECS: &[OptSpec] = &[
     OptSpec::value("model", "AOT model (tiny-30m | micro-test)"),
     OptSpec::value("requests", "number of requests"),
     OptSpec::value("samplers", "sampler count m"),
+    OptSpec::value("traffic", "arrival pattern: steady|burst|zipf (default: closed loop)"),
+    OptSpec::value("rate", "mean arrival rate in req/s (open loop; default 20)"),
+    OptSpec::value("prefill_budget", "chunked-prefill token budget per iteration"),
+    OptSpec::value("kv_blocks", "KV blocks (0 = never-preempt sizing; small = churn)"),
     OptSpec::flag("quick", "small run"),
 ];
 
@@ -30,11 +39,27 @@ fn main() -> simple_serve::Result<()> {
         .to_string();
     let n: usize = args.get_or("requests", if quick { 10 } else { 32 })?;
     let samplers: usize = args.get_or("samplers", 2)?;
+    let traffic = match args.get("traffic") {
+        Some(name) => Some(
+            TrafficPattern::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown traffic pattern {name}"))?,
+        ),
+        None => None,
+    };
+    let rate: f64 = args.get_or("rate", 20.0)?;
+    let prefill_budget: usize = args.get_or("prefill_budget", 0)?;
+    let kv_blocks: usize = args.get_or("kv_blocks", 0)?;
 
     let manifest = Manifest::load(&default_artifacts_dir())
         .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
 
-    println!("=== end-to-end serving: {model}, {n} requests ===\n");
+    match traffic {
+        Some(p) => println!(
+            "=== end-to-end serving: {model}, {n} requests, {} arrivals at {rate} req/s ===\n",
+            p.name()
+        ),
+        None => println!("=== end-to-end serving: {model}, {n} requests (closed loop) ===\n"),
+    }
     let mut results = Vec::new();
     for variant in [DecisionVariant::GpuEpilogue, DecisionVariant::Shvs] {
         let rt = ModelRuntime::load(&manifest, &model)?;
@@ -43,14 +68,19 @@ fn main() -> simple_serve::Result<()> {
         let mut cfg = EngineConfig::default();
         cfg.sampler.variant = variant;
         cfg.sampler.num_samplers = samplers;
+        cfg.prefill_token_budget = prefill_budget;
+        cfg.kv_blocks = kv_blocks;
         // Offline-profiled hot set: the AOT model's Zipf head lives on
         // low ids by construction (see python/compile/model.py lm_bias).
         let h = (vocab / 5).min(32_768) as u32;
         let hot = (variant == DecisionVariant::Shvs)
             .then(|| HotVocab::new((0..h).collect(), vocab).into_arc());
         let mut engine = PjrtEngine::new(rt, &cfg, hot);
-        let trace =
+        let mut trace =
             workload::generate(&workload::TraceConfig::sharegpt_like(n, vocab, max_seq));
+        if let Some(pattern) = traffic {
+            pattern.stamp(&mut trace, rate, 11);
+        }
         let expected: usize = trace.output_lens.iter().sum();
         for r in trace.requests {
             engine.submit(r);
@@ -59,14 +89,17 @@ fn main() -> simple_serve::Result<()> {
         assert_eq!(summary.tokens, expected, "all tokens produced");
         println!(
             "[{}] {:>7.0} tok/s | TPOT p50 {:>6.2} ms  p95 {:>6.2} ms | \
-             TTFT p50 {:>6.1} ms | gpu util {:.0}% cpu util {:.0}%",
+             TTFT p50 {:>6.1} ms  p95 {:>6.1} ms | gpu util {:.0}% cpu util {:.0}% | \
+             {} preemptions",
             variant.name(),
             summary.throughput,
             summary.tpot.p50 * 1e3,
             summary.tpot.p95 * 1e3,
             summary.ttft.p50 * 1e3,
+            summary.ttft.p95 * 1e3,
             engine.recorder.utilization("gpu") * 100.0,
             engine.recorder.utilization("cpu") * 100.0,
+            engine.preemption_count(),
         );
         results.push((variant.name(), summary));
         engine.shutdown();
@@ -83,6 +116,10 @@ fn main() -> simple_serve::Result<()> {
     let out = Json::obj(vec![
         ("model", Json::Str(model)),
         ("requests", Json::Num(n as f64)),
+        (
+            "traffic",
+            Json::Str(traffic.map(|p| p.name()).unwrap_or("closed-loop").to_string()),
+        ),
         ("baseline", base.to_json()),
         ("simple", simple.to_json()),
     ]);

@@ -100,23 +100,25 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
-/// Render results as a markdown table.
+/// Render results as a markdown table (p99 included: this repo's headline
+/// claims are tail-latency claims, so benches surface the tail too).
 pub fn render_table(title: &str, results: &[BenchResult]) -> String {
     let mut out = format!("### {title}\n\n");
-    out.push_str("| case | iters | mean | p50 | p95 | items/s |\n");
-    out.push_str("|---|---:|---:|---:|---:|---:|\n");
+    out.push_str("| case | iters | mean | p50 | p95 | p99 | items/s |\n");
+    out.push_str("|---|---:|---:|---:|---:|---:|---:|\n");
     for r in results {
         let ips = r
             .items_per_sec()
             .map(|v| format_rate(v))
             .unwrap_or_else(|| "—".into());
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} |\n",
             r.name,
             r.summary.n,
             fmt_duration(Duration::from_secs_f64(r.summary.mean)),
             fmt_duration(Duration::from_secs_f64(r.summary.p50)),
             fmt_duration(Duration::from_secs_f64(r.summary.p95)),
+            fmt_duration(Duration::from_secs_f64(r.summary.p99)),
             ips,
         ));
     }

@@ -98,6 +98,15 @@ pub struct EngineConfig {
     pub max_seq_len: usize,
     /// KV block size in tokens (paged KV cache).
     pub kv_block_tokens: usize,
+    /// Chunked-prefill token budget per scheduler iteration (0 = unlimited).
+    /// Bounds how much prompt work runs alongside decode so admission
+    /// bursts cannot inflate inter-token latency.
+    pub prefill_token_budget: usize,
+    /// KV-cache blocks available to the engine (0 = auto: enough for every
+    /// slot to run to max_seq_len, which can never preempt). Setting a
+    /// smaller pool over-commits the cache — production-style — and
+    /// engages KV-pressure preemption with recompute-on-resume.
+    pub kv_blocks: usize,
 }
 
 impl Default for EngineConfig {
@@ -110,6 +119,8 @@ impl Default for EngineConfig {
             batch_per_gpu: 32,
             max_seq_len: 2048,
             kv_block_tokens: 16,
+            prefill_token_budget: 0,
+            kv_blocks: 0,
         }
     }
 }
@@ -155,6 +166,12 @@ impl EngineConfig {
         if let Some(l) = j.get("max_seq_len").as_usize() {
             self.max_seq_len = l;
         }
+        if let Some(p) = j.get("prefill_budget").as_usize() {
+            self.prefill_token_budget = p;
+        }
+        if let Some(k) = j.get("kv_blocks").as_usize() {
+            self.kv_blocks = k;
+        }
         Ok(())
     }
 
@@ -174,6 +191,8 @@ impl EngineConfig {
             "hot_vocab",
             "seed",
             "max_seq_len",
+            "prefill_budget",
+            "kv_blocks",
         ] {
             if let Some(v) = args.get(key) {
                 let n: f64 = v

@@ -170,6 +170,20 @@ impl BatchHistory {
         }
     }
 
+    /// Single-sequence history with a replayed output prefix — the
+    /// recompute-on-resume path after a preemption: the prompt seeds the
+    /// prompt histogram, then each pre-preemption token is appended exactly
+    /// as if it had just been decided. Both the engine's inline path and
+    /// the sampler service rebuild resumed state through this one helper
+    /// so the two can never diverge.
+    pub fn with_replay(prompt: Vec<u32>, output: &[u32], max_len: usize) -> Self {
+        let mut h = BatchHistory::new(&[prompt], max_len);
+        for &t in output {
+            h.append_row(&[t]);
+        }
+        h
+    }
+
     pub fn batch(&self) -> usize {
         self.seqs.len()
     }

@@ -57,10 +57,14 @@ pub struct IterationTask {
 /// Control + data messages flowing engine → sampler.
 pub enum SamplerMsg {
     /// A sequence enters the system: register its prompt + params with its
-    /// owner sampler.
+    /// owner sampler. `output` is non-empty when a preempted sequence
+    /// resumes (recompute-on-resume): the owner replays those tokens into
+    /// its local history/grammar state so penalties and constraints are
+    /// byte-identical to an uninterrupted run.
     Register {
         seq_id: u64,
         prompt: Vec<u32>,
+        output: Vec<u32>,
         params: SamplingParams,
         grammar: Option<Arc<GrammarConstraint>>,
     },
@@ -129,13 +133,22 @@ impl SamplerWorker {
         let mut stats = SamplerStats::default();
         while let Some(msg) = rx.pop() {
             match msg {
-                SamplerMsg::Register { seq_id, prompt, params, grammar } => {
+                SamplerMsg::Register { seq_id, prompt, output, params, grammar } => {
                     if self.owns(seq_id) {
-                        let hist = BatchHistory::new(&[prompt], max_seq_len);
-                        let grammar = grammar.map(|g| {
+                        // resumed sequence: replay pre-preemption decisions
+                        // into the history and the grammar state
+                        let hist = BatchHistory::with_replay(prompt, &output, max_seq_len);
+                        let mut grammar = grammar.map(|g| {
                             let s = g.start();
                             (g, s)
                         });
+                        for &t in &output {
+                            if let Some((g, state)) = &mut grammar {
+                                if let Some(next) = g.advance(*state, t) {
+                                    *state = next;
+                                }
+                            }
+                        }
                         self.owned.insert(seq_id, OwnedSeq { hist, params, grammar });
                     }
                 }
@@ -248,7 +261,7 @@ impl SamplerService {
 
     /// Register a new sequence (broadcast; only the owner keeps it).
     pub fn register(&self, seq_id: u64, prompt: &[u32], params: &SamplingParams) {
-        self.register_with_grammar(seq_id, prompt, params, None);
+        self.register_full(seq_id, prompt, &[], params, None);
     }
 
     /// Register with an optional structured-decoding constraint.
@@ -259,10 +272,24 @@ impl SamplerService {
         params: &SamplingParams,
         grammar: Option<Arc<GrammarConstraint>>,
     ) {
+        self.register_full(seq_id, prompt, &[], params, grammar);
+    }
+
+    /// Register a (possibly resumed) sequence: `output` carries tokens
+    /// generated before a preemption, replayed into the owner's local state.
+    pub fn register_full(
+        &self,
+        seq_id: u64,
+        prompt: &[u32],
+        output: &[u32],
+        params: &SamplingParams,
+        grammar: Option<Arc<GrammarConstraint>>,
+    ) {
         let owner = (seq_id as usize) % self.m;
         self.senders[owner].push(SamplerMsg::Register {
             seq_id,
             prompt: prompt.to_vec(),
+            output: output.to_vec(),
             params: params.clone(),
             grammar,
         });

@@ -20,7 +20,7 @@ use crate::decision::service::{ColumnMeta, IterationTask, SamplerService};
 use crate::decision::{DecisionPipeline, HotVocab, Precompute};
 use crate::engine::kvcache::KvAllocator;
 use crate::engine::request::Request;
-use crate::engine::scheduler::Scheduler;
+use crate::engine::scheduler::{Scheduler, SchedulerConfig};
 use crate::metrics::Recorder;
 use crate::runtime::ModelRuntime;
 use crate::tensor::{shard_row_major, Tensor2};
@@ -50,12 +50,29 @@ impl PjrtEngine {
     pub fn new(mut runtime: ModelRuntime, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
         let b = runtime.batch();
         let max_seq_len = runtime.max_seq();
-        // KV accounting: enough blocks for every slot to run to max_seq.
-        let kv = KvAllocator::new(
-            b * max_seq_len.div_ceil(cfg.kv_block_tokens),
-            cfg.kv_block_tokens,
+        // KV accounting: by default enough blocks for every slot to run to
+        // max_seq (never preempts); `cfg.kv_blocks` over-commits the cache
+        // production-style, engaging KV-pressure preemption. Floor at one
+        // max-length sequence so a lone sequence can always run.
+        let full = b * max_seq_len.div_ceil(cfg.kv_block_tokens);
+        let blocks = if cfg.kv_blocks == 0 {
+            full
+        } else {
+            cfg.kv_blocks.max(max_seq_len.div_ceil(cfg.kv_block_tokens) + 1)
+        };
+        let kv = KvAllocator::new(blocks, cfg.kv_block_tokens);
+        let scheduler = Scheduler::with_config(
+            b,
+            kv,
+            max_seq_len,
+            SchedulerConfig {
+                prefill_token_budget: cfg.prefill_token_budget,
+                // the AOT decode-step data plane feeds one token per slot
+                // per step, so chunks realize as budgeted prefill concurrency
+                max_prefill_chunk: 1,
+                ..SchedulerConfig::default()
+            },
         );
-        let scheduler = Scheduler::new(b, kv, max_seq_len);
         if let Some(h) = &hot {
             runtime.set_hot_vocab(h);
         }
@@ -124,20 +141,28 @@ impl PjrtEngine {
             return Ok(true);
         }
 
-        // Register admissions with the decision plane.
+        // Register admissions with the decision plane. A resumed sequence
+        // (recompute-on-resume after preemption) re-registers with its
+        // pre-preemption output so sampler-local history stays exact. Look
+        // the sequence up in the scheduler's slots, not the plan — a newly
+        // admitted sequence may already be prefill-paused by the budget.
         for &seq_id in &plan.admitted {
-            let slot_plan = plan.slots.iter().find(|s| s.seq_id == seq_id).unwrap();
-            let seq = self
-                .scheduler_seq(slot_plan.slot)
-                .expect("admitted sequence in slot");
+            let seq = (0..self.scheduler.num_slots())
+                .find_map(|s| {
+                    self.scheduler_seq(s).filter(|q| q.request.id == seq_id)
+                })
+                .expect("admitted sequence in a slot");
             let prompt = seq.request.prompt.clone();
+            let output = seq.output.clone();
             let params = seq.request.params.clone();
             let grammar = seq.request.grammar.clone();
             if let Some(svc) = &self.service {
-                svc.register_with_grammar(seq_id, &prompt, &params, grammar);
+                svc.register_full(seq_id, &prompt, &output, &params, grammar);
             } else {
-                self.inline_hist
-                    .insert(seq_id, BatchHistory::new(&[prompt], self.max_seq_len));
+                self.inline_hist.insert(
+                    seq_id,
+                    BatchHistory::with_replay(prompt, &output, self.max_seq_len),
+                );
             }
         }
 
@@ -146,12 +171,29 @@ impl PjrtEngine {
         let mut ids = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut tau = vec![1.0f32; b];
+        let mut planned = vec![false; b];
         for sp in &plan.slots {
+            debug_assert_eq!(sp.chunk_len, 1, "data plane feeds one token/slot/step");
             ids[sp.slot] = sp.input_token as i32;
             positions[sp.slot] = sp.position as i32;
+            planned[sp.slot] = true;
             let seq = self.scheduler_seq(sp.slot).unwrap();
             let t = seq.request.params.temperature;
             tau[sp.slot] = if t > 0.0 { t } else { 1.0 };
+        }
+        // Occupied slots paused by the prefill budget still step through the
+        // forward (the static-B graph runs every slot); feeding the *current*
+        // (token, position) again is idempotent on the KV cache — the same
+        // deterministic write lands there when the slot resumes — and its
+        // logits are simply ignored this iteration.
+        for slot in 0..b {
+            if planned[slot] {
+                continue;
+            }
+            if let Some(seq) = self.scheduler_seq(slot) {
+                ids[slot] = seq.input_token() as i32;
+                positions[slot] = seq.position as i32;
+            }
         }
         let fwd_start = self.now();
         let out = self.runtime.step(&ids, &positions, &tau)?;
@@ -242,11 +284,30 @@ impl PjrtEngine {
             }
         }
 
-        // ⑥ commit + retire.
+        // ⑥ commit + retire (+ preempt under KV pressure).
         let t_commit = self.now();
         for (slot, seq_id, token) in decided {
+            // a commit earlier in this loop may have preempted this slot's
+            // sequence; its token is discarded and re-sampled (identically,
+            // by the deterministic RNG keying) after resume
+            if self.scheduler.slot(slot).map(|s| s.request.id) != Some(seq_id) {
+                continue;
+            }
+            let outcome = self.scheduler.commit(slot, token);
+            // the committed token survives even a self-preemption (it is
+            // carried into the waiting queue for replay), so record it
             self.recorder.on_token(seq_id, t_commit);
-            if let Some(finished) = self.scheduler.commit(slot, token) {
+            for (vslot, vid) in outcome.preempted {
+                // evicted under KV pressure: drop decision-plane state and
+                // clear the data-plane KV slot; the sequence re-enters via
+                // `admitted` with recompute-on-resume
+                if let Some(svc) = &self.service {
+                    svc.retire(vid);
+                }
+                self.inline_hist.remove(&vid);
+                self.runtime.reset_kv_slot(vslot);
+            }
+            if let Some(finished) = outcome.finished {
                 self.recorder.on_finish(finished, t_commit);
                 if let Some(svc) = &self.service {
                     svc.retire(finished);
@@ -257,6 +318,11 @@ impl PjrtEngine {
         }
         self.scheduler.advance();
         Ok(true)
+    }
+
+    /// KV-pressure evictions so far (recompute-on-resume preemptions).
+    pub fn preemption_count(&self) -> u64 {
+        self.scheduler.preemption_count()
     }
 
     fn scheduler_seq(&self, slot: usize) -> Option<&crate::engine::request::Sequence> {

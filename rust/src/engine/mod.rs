@@ -1,4 +1,5 @@
-//! Serving engine: requests, continuous-batching scheduler, paged KV
+//! Serving engine: requests, preemptive continuous-batching scheduler
+//! (chunked prefill, recompute-on-resume, SLO-aware admission), paged KV
 //! accounting, tokenizer, and the PJRT-backed end-to-end engine.
 
 pub mod engine;
@@ -10,4 +11,4 @@ pub mod tokenizer;
 pub use engine::PjrtEngine;
 pub use kvcache::KvAllocator;
 pub use request::{Phase, Request, Sequence};
-pub use scheduler::{Scheduler, SchedulingOutput, SlotPlan};
+pub use scheduler::{CommitOutcome, Scheduler, SchedulerConfig, SchedulingOutput, SlotPlan};

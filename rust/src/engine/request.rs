@@ -37,7 +37,9 @@ impl Request {
 /// Lifecycle phase of a running sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
-    /// Feeding prompt tokens (no sampling needed yet).
+    /// Feeding prompt tokens (no sampling needed yet). A preempted sequence
+    /// re-enters this phase on resume: recompute-on-resume replays the
+    /// prompt *and* the already-generated tokens through the forward pass.
     Prefill,
     /// Generating output tokens (each iteration samples one).
     Decode,
@@ -48,19 +50,31 @@ pub enum Phase {
 #[derive(Debug)]
 pub struct Sequence {
     pub request: Request,
-    /// Tokens generated so far.
+    /// Tokens generated so far. For a resumed sequence this starts non-empty
+    /// (the tokens generated before preemption, replayed during recompute).
     pub output: Vec<u32>,
     /// Next position to feed (number of tokens already in the KV cache).
     pub position: usize,
     pub phase: Phase,
     /// Batch slot currently occupied.
     pub slot: usize,
+    /// Times this sequence has been preempted (KV-pressure evictions).
+    pub preemptions: u32,
 }
 
 impl Sequence {
     pub fn new(request: Request, slot: usize) -> Sequence {
+        Self::resumed(request, Vec::new(), slot, 0)
+    }
+
+    /// Rebuild a preempted sequence for recompute-on-resume: the KV cache was
+    /// released, so it restarts at position 0 and replays `prompt ⧺ output`
+    /// before sampling its next (new) token. Token-stream determinism holds
+    /// because decisions are keyed by (seed, seq, decode iteration), and the
+    /// decode iteration continues from `output.len()`.
+    pub fn resumed(request: Request, output: Vec<u32>, slot: usize, preemptions: u32) -> Sequence {
         assert!(!request.prompt.is_empty(), "empty prompt");
-        Sequence { request, output: Vec::new(), position: 0, phase: Phase::Prefill, slot }
+        Sequence { request, output, position: 0, phase: Phase::Prefill, slot, preemptions }
     }
 
     /// The token to feed at the current position.
@@ -73,11 +87,22 @@ impl Sequence {
         }
     }
 
-    /// Whether this iteration's forward output needs a sampling decision
-    /// (true once the whole prompt is in: the logits at the last prompt
-    /// token predict the first output token).
+    /// Whether this iteration's forward output needs a sampling decision:
+    /// true once every *known* token is in (the logits at the last known
+    /// token predict the next, unknown one). For a fresh sequence the known
+    /// tokens are the prompt; for a resumed sequence they also include the
+    /// replayed pre-preemption output, so recompute never re-samples tokens
+    /// it already holds.
     pub fn needs_decision(&self) -> bool {
-        self.phase != Phase::Finished && self.position + 1 >= self.request.prompt.len()
+        self.phase != Phase::Finished && self.position + 1 >= self.total_len()
+    }
+
+    /// Tokens not yet fed to the forward pass, counting the one at the
+    /// current position: `1` for a decoding sequence, up to the whole
+    /// remaining prompt (plus replayed output) during prefill. The chunked-
+    /// prefill scheduler spends its per-iteration token budget on this.
+    pub fn remaining_known(&self) -> usize {
+        self.total_len().saturating_sub(self.position).max(1)
     }
 
     /// Total tokens resident in the KV cache after feeding `position`.
@@ -101,6 +126,12 @@ impl Sequence {
     /// Advance to the next position (after the forward step).
     pub fn advance(&mut self) {
         self.position += 1;
+    }
+
+    /// Advance past a prefill chunk of `n` tokens fed in one iteration.
+    pub fn advance_by(&mut self, n: usize) {
+        debug_assert!(self.position + n <= self.total_len(), "advance past known tokens");
+        self.position += n;
     }
 
     pub fn total_len(&self) -> usize {
@@ -166,5 +197,50 @@ mod tests {
     fn single_token_prompt_samples_immediately() {
         let s = Sequence::new(req(1, 4), 0);
         assert!(s.needs_decision());
+    }
+
+    #[test]
+    fn resumed_sequence_replays_output_without_sampling() {
+        // 3-token prompt, 2 tokens generated before preemption. Recompute
+        // feeds positions 0..4 (prompt + both outputs) with a decision only
+        // at the last known token.
+        let mut s = Sequence::resumed(req(3, 5), vec![40, 41], 0, 1);
+        assert_eq!(s.preemptions, 1);
+        let expected = [0u32, 1, 2, 40, 41];
+        for (p, &tok) in expected.iter().enumerate() {
+            assert_eq!(s.input_token(), tok, "position {p}");
+            let last = p + 1 == expected.len();
+            assert_eq!(s.needs_decision(), last, "position {p}");
+            if !last {
+                s.advance();
+            }
+        }
+        // the decision at the last replayed token is a *new* third output
+        assert!(!s.commit_token(42));
+        assert_eq!(s.output, vec![40, 41, 42]);
+        assert_eq!(s.phase, Phase::Decode);
+    }
+
+    #[test]
+    fn resumed_sequence_finish_counts_pre_preemption_tokens() {
+        let mut s = Sequence::resumed(req(2, 3), vec![7, 8], 0, 2);
+        s.advance(); // pos 1 (last prompt token)
+        s.advance(); // pos 2 (output[0])
+        s.advance(); // pos 3 (output[1] = last known)
+        assert!(s.needs_decision());
+        assert!(s.commit_token(9), "3rd token reaches max_new_tokens");
+        assert_eq!(s.phase, Phase::Finished);
+    }
+
+    #[test]
+    fn chunked_advance_matches_remaining() {
+        let mut s = Sequence::new(req(8, 4), 0);
+        assert_eq!(s.remaining_known(), 8);
+        s.advance_by(5);
+        assert_eq!(s.remaining_known(), 3);
+        assert!(!s.needs_decision());
+        s.advance_by(2);
+        assert!(s.needs_decision(), "last prompt token reached");
+        assert_eq!(s.remaining_known(), 1);
     }
 }

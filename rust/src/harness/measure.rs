@@ -63,6 +63,34 @@ impl LogitsGen {
     pub fn view(&self, batch: usize, iter: u64, shards: usize) -> ShardedLogits {
         shard_row_major(&self.batch_logits(batch, iter), shards)
     }
+
+    /// Row-major [batch, V] logits where row `b` is keyed by that column's
+    /// `(seq_id, decode_iter)` instead of its batch position. In a real
+    /// model the logits are a function of the sequence's tokens, not of the
+    /// slot it happens to occupy; tests of scheduler churn (preemption,
+    /// slot migration) need the same invariance, else a resumed sequence
+    /// would see different logits purely because it moved slots.
+    pub fn seq_batch_logits(&self, cols: &[(u64, u64)]) -> Tensor2 {
+        let mut data = vec![0.0f32; cols.len() * self.vocab];
+        for (b, &(seq_id, decode_iter)) in cols.iter().enumerate() {
+            let mut rng = Philox::at(
+                self.seed ^ 0xD15C,
+                ((seq_id as u128) << 64) | ((decode_iter as u128) << 32),
+            );
+            let row = &mut data[b * self.vocab..(b + 1) * self.vocab];
+            for (id, z) in row.iter_mut().enumerate() {
+                let rank = self.rank_of_id[id] as f64;
+                *z = (-self.zipf_s * (rank + 2.0).ln()) as f32
+                    + rng.next_normal() as f32 * 0.7;
+            }
+        }
+        Tensor2::from_vec(cols.len(), self.vocab, data)
+    }
+
+    /// Sharded view of [`Self::seq_batch_logits`].
+    pub fn seq_view(&self, cols: &[(u64, u64)], shards: usize) -> ShardedLogits {
+        shard_row_major(&self.seq_batch_logits(cols), shards)
+    }
 }
 
 /// Measured per-variant decision costs (seconds per sequence).

@@ -51,10 +51,11 @@ impl Effort {
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order, plus repo-native scenarios beyond
+/// the paper (currently `burst`: tail latency under bursty arrivals).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-    "fig9", "table3", "fig10", "fig11", "fig12", "fig13",
+    "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst",
 ];
 
 /// Run one experiment by id.
@@ -71,6 +72,7 @@ pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
         "fig8" => e2e::utilization("fig8", "gpu", effort),
         "fig9" => e2e::utilization("fig9", "cpu", effort),
         "table3" => e2e::table3(effort),
+        "burst" => e2e::burst(effort),
         "fig10" => micro::fig10(effort),
         "fig11" => micro::fig11(effort),
         "fig12" => micro::fig12(effort),

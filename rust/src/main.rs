@@ -185,13 +185,13 @@ fn cmd_sim(args: &Args) -> simple_serve::Result<()> {
             samplers,
         },
     };
-    let cfg = SimConfig {
+    let cfg = SimConfig::new(
         gpu,
         mode,
-        slots: 32 * parallel.world_size(),
-        cpu_cores: platform.cpu_cores,
+        32 * parallel.world_size(),
+        platform.cpu_cores,
         samplers,
-    };
+    );
     let trace_w = workload::generate(&workload::TraceConfig::sharegpt_like(
         n,
         model.vocab,

@@ -1,4 +1,21 @@
-//! Measurement: percentiles/ECDF/TVD and the serving-metrics recorder.
+//! Measurement: percentiles/ECDF/TVD and the serving-metrics recorder —
+//! every number behind Figures 3–9 and Table 3 flows through here.
+//!
+//! - [`stats`] — order statistics ([`percentile`], [`ecdf`], [`Summary`]),
+//!   [`total_variation_distance`] for the SHVS exactness claims (Fig. 13),
+//!   and an affine fitter for the §5.4 sizing model.
+//! - [`recorder`] — per-request lifecycles (arrival → first token → finish)
+//!   yielding TTFT/TPOT samples and token throughput, plus named
+//!   resource-busy intervals (`"gpu"`, `"cpu"`) merged into utilization
+//!   and interquartile utilization bands (Figs. 8/9). Time is a plain
+//!   `f64` seconds value so the same recorder serves wall-clock engine
+//!   runs and simulated-clock runs unchanged.
+//! - [`histogram`] — fixed-bin latency histogram for streaming summaries
+//!   where keeping every sample would be wasteful.
+//!
+//! Tail metrics are the product here: the paper's headline claims are P95
+//! claims, and the preemption/chunked-prefill scheduler work is judged by
+//! what it does to `tpot_summary().p95` under burst load.
 
 pub mod histogram;
 pub mod recorder;

@@ -30,12 +30,47 @@ pub struct SimConfig {
     pub cpu_cores: usize,
     /// Samplers deployed (CPU utilization accounting).
     pub samplers: usize,
+    /// Chunked-prefill token budget per iteration (0 = legacy behavior:
+    /// whole prompts prefill at admission, bounded by the one-cycle
+    /// heuristic). With a budget, prompts are fed in chunks interleaved
+    /// with decode iterations, oldest arrival first.
+    pub prefill_chunk_tokens: usize,
+    /// KV-cache capacity in tokens across all slots (0 = unlimited). Under
+    /// pressure the latest-arrived running sequence is preempted and later
+    /// resumed with recompute (its context re-prefills), mirroring the
+    /// engine scheduler's eviction policy.
+    pub kv_capacity_tokens: usize,
+}
+
+impl SimConfig {
+    /// Legacy-shaped config: unlimited KV, admission-time prefill.
+    pub fn new(
+        gpu: GpuModel,
+        mode: DecisionMode,
+        slots: usize,
+        cpu_cores: usize,
+        samplers: usize,
+    ) -> SimConfig {
+        SimConfig {
+            gpu,
+            mode,
+            slots,
+            cpu_cores,
+            samplers,
+            prefill_chunk_tokens: 0,
+            kv_capacity_tokens: 0,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
 struct RunningSeq {
     id: u64,
+    arrival: f64,
+    /// Tokens resident in the (modeled) KV cache.
     ctx: usize,
+    /// Prompt tokens not yet prefetched through the forward (chunked mode).
+    prefill_left: usize,
     remaining: usize,
 }
 
@@ -49,6 +84,8 @@ pub struct SimResult {
     pub mean_bubble_fraction: f64,
     /// Host memory estimate in bytes for the decision plane + rings.
     pub host_mem_bytes: f64,
+    /// KV-pressure evictions (recompute-on-resume).
+    pub preemptions: u64,
 }
 
 impl SimResult {
@@ -59,6 +96,7 @@ impl SimResult {
 
 /// Run the simulation until all requests complete.
 pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
+    let chunked = cfg.prefill_chunk_tokens > 0;
     let mut queue: VecDeque<SimRequest> = {
         let mut rs = requests.to_vec();
         rs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
@@ -71,11 +109,16 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     }
     let mut clock = 0.0f64;
     let mut iterations = 0u64;
+    // sampling/bubble fractions are decode-iteration means: pure-prefill
+    // iterations (chunked mode, batch == 0) must not dilute them
+    let mut decode_iters = 0u64;
+    let mut preemptions = 0u64;
     let mut f_sum = 0.0f64;
     let mut bubble_sum = 0.0f64;
-    // Chunked-prefill budget: admissions in one iteration may add at most
+    // Legacy admission bound: admissions in one iteration may add at most
     // about one decode cycle of prefill work, so admission bursts don't
-    // create giant outlier iterations (vLLM-style chunked prefill).
+    // create giant outlier iterations. With `prefill_chunk_tokens` set, the
+    // explicit token budget replaces this heuristic.
     let mut last_cycle = 5e-3f64;
 
     while !queue.is_empty() || !running.is_empty() {
@@ -83,13 +126,40 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
         while running.len() < cfg.slots
             && queue.front().is_some_and(|r| r.arrival <= clock)
         {
-            let next_cost = cfg.gpu.prefill_s(queue.front().unwrap().prompt_len);
-            if prefill > 0.0 && prefill + next_cost > last_cycle {
-                break; // defer further admissions to the next iteration
+            let head = queue.front().unwrap();
+            // KV admission control (a sequence over capacity still runs
+            // alone rather than deadlocking the queue)
+            if cfg.kv_capacity_tokens > 0 && !running.is_empty() {
+                let used: usize =
+                    running.iter().map(|s| s.ctx + s.prefill_left + 1).sum();
+                if used + head.prompt_len + 1 > cfg.kv_capacity_tokens {
+                    break;
+                }
             }
-            let r = queue.pop_front().unwrap();
-            prefill += next_cost;
-            running.push(RunningSeq { id: r.id, ctx: r.prompt_len, remaining: r.output_len });
+            if chunked {
+                let r = queue.pop_front().unwrap();
+                running.push(RunningSeq {
+                    id: r.id,
+                    arrival: r.arrival,
+                    ctx: 0,
+                    prefill_left: r.prompt_len,
+                    remaining: r.output_len,
+                });
+            } else {
+                let next_cost = cfg.gpu.prefill_s(head.prompt_len);
+                if prefill > 0.0 && prefill + next_cost > last_cycle {
+                    break; // defer further admissions to the next iteration
+                }
+                let r = queue.pop_front().unwrap();
+                prefill += next_cost;
+                running.push(RunningSeq {
+                    id: r.id,
+                    arrival: r.arrival,
+                    ctx: r.prompt_len,
+                    prefill_left: 0,
+                    remaining: r.output_len,
+                });
+            }
         }
         if running.is_empty() {
             // idle until the next arrival
@@ -97,30 +167,77 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
             continue;
         }
 
-        let batch = running.len();
-        let ctx = running.iter().map(|s| s.ctx as f64).sum::<f64>() / batch as f64;
-        let t = decode_iteration(&cfg.gpu, cfg.mode, batch, ctx);
-        let cycle = t.cycle_s + prefill;
-        last_cycle = t.cycle_s;
+        // Chunked prefill: spend the token budget on prefilling sequences,
+        // oldest arrival first, interleaved with this decode iteration.
+        if chunked {
+            let mut budget = cfg.prefill_chunk_tokens;
+            let mut idx: Vec<usize> =
+                (0..running.len()).filter(|&i| running[i].prefill_left > 0).collect();
+            idx.sort_by(|&a, &b| {
+                (running[a].arrival, running[a].id)
+                    .partial_cmp(&(running[b].arrival, running[b].id))
+                    .unwrap()
+            });
+            let mut chunk_total = 0usize;
+            for i in idx {
+                if budget == 0 {
+                    break;
+                }
+                let c = running[i].prefill_left.min(budget);
+                running[i].prefill_left -= c;
+                running[i].ctx += c;
+                budget -= c;
+                chunk_total += c;
+            }
+            if chunk_total > 0 {
+                prefill = cfg.gpu.prefill_s(chunk_total);
+            }
+        }
+
+        let batch = running.iter().filter(|s| s.prefill_left == 0).count();
+        let (cycle, timing) = if batch > 0 {
+            let ctx = running
+                .iter()
+                .filter(|s| s.prefill_left == 0)
+                .map(|s| s.ctx as f64)
+                .sum::<f64>()
+                / batch as f64;
+            let t = decode_iteration(&cfg.gpu, cfg.mode, batch, ctx);
+            last_cycle = t.cycle_s;
+            (t.cycle_s + prefill, Some(t))
+        } else {
+            // a pure-prefill iteration (everyone mid-chunk): the cycle is
+            // the chunk's prefill time alone
+            (prefill.max(1e-9), None)
+        };
         let start = clock;
         clock += cycle;
         iterations += 1;
-        f_sum += t.sampling_fraction;
-        bubble_sum += t.bubble_fraction;
 
         // Busy accounting for Figures 8/9.
-        recorder.on_busy("gpu", start, start + cycle * t.gpu_busy_fraction);
-        if t.cpu_decision_s > 0.0 {
-            // decision-plane CPU busy: samplers × wall share of the cycle
-            let cpu_busy = (t.cpu_decision_s * cfg.samplers.min(batch) as f64
-                / cfg.cpu_cores as f64)
-                .min(cycle);
-            recorder.on_busy("cpu", start, start + cpu_busy);
+        if let Some(t) = &timing {
+            decode_iters += 1;
+            f_sum += t.sampling_fraction;
+            bubble_sum += t.bubble_fraction;
+            recorder.on_busy("gpu", start, start + cycle * t.gpu_busy_fraction);
+            if t.cpu_decision_s > 0.0 {
+                // decision-plane CPU busy: samplers × wall share of the cycle
+                let cpu_busy = (t.cpu_decision_s * cfg.samplers.min(batch) as f64
+                    / cfg.cpu_cores as f64)
+                    .min(cycle);
+                recorder.on_busy("cpu", start, start + cpu_busy);
+            }
+        } else {
+            recorder.on_busy("gpu", start, start + cycle);
         }
 
-        // Every running sequence emits one token this iteration.
+        // Every fully-prefilled sequence emits one token this iteration.
         let mut still_running = Vec::with_capacity(running.len());
         for mut s in running.drain(..) {
+            if s.prefill_left > 0 {
+                still_running.push(s);
+                continue;
+            }
             recorder.on_token(s.id, clock);
             s.ctx += 1;
             s.remaining -= 1;
@@ -131,6 +248,34 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
             }
         }
         running = still_running;
+
+        // KV pressure: evict latest arrivals (recompute-on-resume) until
+        // the cache fits, always keeping at least one sequence running.
+        if cfg.kv_capacity_tokens > 0 {
+            loop {
+                let used: usize =
+                    running.iter().map(|s| s.ctx + s.prefill_left + 1).sum();
+                if used <= cfg.kv_capacity_tokens || running.len() <= 1 {
+                    break;
+                }
+                let vi = (0..running.len())
+                    .max_by(|&a, &b| {
+                        (running[a].arrival, running[a].id)
+                            .partial_cmp(&(running[b].arrival, running[b].id))
+                            .unwrap()
+                    })
+                    .unwrap();
+                let v = running.swap_remove(vi);
+                preemptions += 1;
+                // resume replays everything fed so far (recompute)
+                queue.push_front(SimRequest {
+                    id: v.id,
+                    arrival: v.arrival,
+                    prompt_len: v.ctx + v.prefill_left,
+                    output_len: v.remaining,
+                });
+            }
+        }
     }
 
     // Host-memory model (Table 3): per-TP-rank ring buffers of
@@ -151,9 +296,18 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     SimResult {
         recorder,
         iterations,
-        mean_sampling_fraction: if iterations > 0 { f_sum / iterations as f64 } else { 0.0 },
-        mean_bubble_fraction: if iterations > 0 { bubble_sum / iterations as f64 } else { 0.0 },
+        mean_sampling_fraction: if decode_iters > 0 {
+            f_sum / decode_iters as f64
+        } else {
+            0.0
+        },
+        mean_bubble_fraction: if decode_iters > 0 {
+            bubble_sum / decode_iters as f64
+        } else {
+            0.0
+        },
         host_mem_bytes,
+        preemptions,
     }
 }
 
@@ -205,7 +359,7 @@ mod tests {
     }
 
     fn cfg(mode: DecisionMode) -> SimConfig {
-        SimConfig { gpu: gpu(), mode, slots: 256, cpu_cores: 192, samplers: 16 }
+        SimConfig::new(gpu(), mode, 256, 192, 16)
     }
 
     #[test]
@@ -286,5 +440,91 @@ mod tests {
         let b = simulate(&cfg(DecisionMode::GpuEpilogue), &reqs);
         assert_eq!(a.iterations, b.iterations);
         assert!((a.throughput() - b.throughput()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_prefill_completes_exactly_and_caps_admission_work() {
+        let reqs = requests(120, Some(200.0));
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        let mut c = cfg(DecisionMode::GpuEpilogue);
+        c.prefill_chunk_tokens = 256;
+        let res = simulate(&c, &reqs);
+        assert_eq!(res.recorder.total_tokens(), expected);
+        assert_eq!(res.recorder.finished_requests(), 120);
+        assert_eq!(res.preemptions, 0);
+    }
+
+    #[test]
+    fn chunked_prefill_tames_tail_latency_under_bursts() {
+        // A flood of simultaneous arrivals: unbounded admission prefills
+        // whole prompts alongside decode, inflating inter-token gaps for
+        // running sequences; a chunk budget bounds the per-iteration
+        // prefill work, so the decode-tail P95 improves.
+        let mut rng = Philox::new(4);
+        let reqs: Vec<SimRequest> = (0..200)
+            .map(|i| SimRequest {
+                id: i as u64,
+                // bursts of 50 arriving together every 2s
+                arrival: (i / 50) as f64 * 2.0,
+                prompt_len: 400 + rng.next_below(400) as usize,
+                output_len: 40 + rng.next_below(60) as usize,
+            })
+            .collect();
+        let legacy = simulate(&cfg(DecisionMode::GpuEpilogue), &reqs);
+        let mut c = cfg(DecisionMode::GpuEpilogue);
+        c.prefill_chunk_tokens = 256;
+        let chunked = simulate(&c, &reqs);
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        assert_eq!(chunked.recorder.total_tokens(), expected);
+        let (p95_legacy, p95_chunked) = (
+            legacy.recorder.tpot_summary().p95,
+            chunked.recorder.tpot_summary().p95,
+        );
+        assert!(
+            p95_chunked <= p95_legacy,
+            "chunked P95 {p95_chunked} vs legacy {p95_legacy}"
+        );
+    }
+
+    #[test]
+    fn kv_pressure_preempts_and_still_completes() {
+        let reqs = requests(60, None);
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        let max_need: usize =
+            reqs.iter().map(|r| r.prompt_len + r.output_len + 1).max().unwrap();
+        let mut c = cfg(DecisionMode::GpuEpilogue);
+        c.slots = 16;
+        // capacity fits a handful of sequences but not 16 full ones
+        c.kv_capacity_tokens = max_need * 4;
+        let res = simulate(&c, &reqs);
+        assert_eq!(res.recorder.total_tokens(), expected, "recompute loses no tokens");
+        assert_eq!(res.recorder.finished_requests(), 60);
+        assert!(res.preemptions > 0, "tight cache must preempt");
+        // unlimited-capacity run of the same trace never preempts
+        let free = simulate(&cfg(DecisionMode::GpuEpilogue), &reqs);
+        assert_eq!(free.preemptions, 0);
+    }
+
+    #[test]
+    fn preemption_recompute_costs_iterations() {
+        let reqs = requests(80, None);
+        let max_need: usize =
+            reqs.iter().map(|r| r.prompt_len + r.output_len + 1).max().unwrap();
+        let mut base = cfg(DecisionMode::GpuEpilogue);
+        base.slots = 16;
+        let unconstrained = simulate(&base, &reqs);
+        let mut c = cfg(DecisionMode::GpuEpilogue);
+        c.slots = 16;
+        c.kv_capacity_tokens = max_need * 3;
+        let tight = simulate(&c, &reqs);
+        assert!(tight.preemptions > 0);
+        // same trace, same slots: evictions add recompute + smaller batches,
+        // so the constrained run needs at least as many iterations
+        assert!(
+            tight.iterations >= unconstrained.iterations,
+            "recompute cannot shrink work: {} vs {}",
+            tight.iterations,
+            unconstrained.iterations
+        );
     }
 }

@@ -6,6 +6,25 @@
 //! reconstruct full-vocabulary views per sequence by concatenating the
 //! rank-local slices **without copies** (step ④). [`ShardedLogits`] is that
 //! zero-copy view.
+//!
+//! Shapes and ownership, end to end:
+//!
+//! ```text
+//!  GPU worker                     shared view                  sampler
+//!  logits [B, V] row-major ──►  shard_row_major  ──►  ShardedLogits
+//!                                t RankSlices, each a           │
+//!                                vocab-major [V/t × B] slab     ▼
+//!                                in an Arc'd buffer     get(v, b) walks the
+//!                                (the shared-mem region) slices, no concat
+//! ```
+//!
+//! [`Tensor2`] is the owned row-major building block; [`shard_row_major`]
+//! transposes once to vocabulary-major and exposes `t` rank-local
+//! [`RankSlice`]s over reference-counted buffers, modelling the per-rank
+//! shared-memory slabs. Every sampler clones the same [`ShardedLogits`]
+//! and reads only its owned sequences' columns, so an iteration's logits
+//! are written once and read `m` times with zero copies — the property the
+//! ring protocol ([`crate::ringbuf`]) is built around.
 
 use std::sync::Arc;
 

@@ -4,12 +4,40 @@
 //! stopping disabled (§7.1). ShareGPT is unavailable offline, so we
 //! synthesize traces with the published shape of that dataset: log-normal
 //! prompt lengths (median ≈ tens of tokens, long tail) and log-normal
-//! output lengths (median ≈ 200), plus Poisson arrivals for the open-loop
-//! load–latency sweep (Figure 6).
+//! output lengths (median ≈ 200).
+//!
+//! # Arrival processes
+//!
+//! Open-loop load is stamped onto a trace by a [`TrafficPattern`]:
+//!
+//! - [`TrafficPattern::Steady`] — homogeneous Poisson arrivals, the classic
+//!   load–latency sweep (Figure 6).
+//! - [`TrafficPattern::Burst`] — a two-state Markov-modulated Poisson
+//!   process (MMPP): exponentially-distributed ON phases at
+//!   `burst_factor ×` the base rate alternate with quiet OFF phases. The
+//!   mean rate matches the steady pattern, but arrivals cluster — the
+//!   batch-churn regime (admission floods, KV pressure, preemption) that
+//!   steady traces never reach.
+//! - [`TrafficPattern::Zipf`] — flash crowds: Poisson-spaced arrival
+//!   *trains* whose sizes are Zipf-distributed, so most epochs bring one
+//!   request but a heavy tail brings near-simultaneous floods.
+//!
+//! All three are deterministic in `(trace, rate, seed)` and preserve the
+//! requested mean arrival rate, so P95/P99 latency under the three shapes
+//! is directly comparable (the `burst` harness scenario does exactly that).
+//!
+//! # Example
+//!
+//! ```no_run
+//! use simple_serve::workload::{self, TraceConfig, TrafficPattern};
+//! let mut trace = workload::generate(&TraceConfig::tiny(64, 1000));
+//! TrafficPattern::parse("burst").unwrap().stamp(&mut trace, 100.0, 7);
+//! ```
 
 use crate::decision::SamplingParams;
 use crate::engine::Request;
 use crate::rng::Philox;
+use crate::rng::zipf::ZipfMandelbrot;
 
 /// Trace generation parameters.
 #[derive(Debug, Clone)]
@@ -107,18 +135,123 @@ pub fn generate(cfg: &TraceConfig) -> Trace {
 /// Stamp Poisson arrivals at `rate` req/s onto a trace (open loop).
 /// `rate = f64::INFINITY` leaves everything at t = 0 (saturation).
 pub fn poisson_arrivals(trace: &mut Trace, rate: f64, seed: u64) {
-    if !rate.is_finite() {
-        for r in &mut trace.requests {
-            r.arrival = 0.0;
-        }
-        return;
+    TrafficPattern::Steady.stamp(trace, rate, seed);
+}
+
+/// Open-loop arrival process shape (see the module docs). All patterns
+/// preserve the requested *mean* rate; they differ in clustering.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficPattern {
+    /// Homogeneous Poisson arrivals.
+    Steady,
+    /// Two-state MMPP: ON phases (mean `mean_on_s` seconds) arrive at
+    /// `burst_factor ×` the base rate; OFF phases (mean `mean_off_s`) at a
+    /// compensating low rate so the long-run mean equals `rate`. The
+    /// factor is internally capped at `0.95 / duty-cycle` — beyond that no
+    /// positive OFF rate can preserve the mean.
+    Burst {
+        burst_factor: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Flash crowds: Poisson-spaced arrival trains with Zipf(`s`)-distributed
+    /// sizes in `1..=max_train`; a train's requests arrive simultaneously.
+    Zipf { s: f64, max_train: usize },
+}
+
+impl TrafficPattern {
+    /// Parse a CLI name (`steady` | `burst` | `zipf`) with scenario defaults.
+    pub fn parse(name: &str) -> Option<TrafficPattern> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "steady" | "poisson" => TrafficPattern::Steady,
+            "burst" | "bursty" | "mmpp" => TrafficPattern::Burst {
+                burst_factor: 4.0,
+                mean_on_s: 0.5,
+                mean_off_s: 2.0,
+            },
+            "zipf" | "flash" => TrafficPattern::Zipf { s: 1.5, max_train: 64 },
+            _ => return None,
+        })
     }
-    assert!(rate > 0.0);
-    let mut rng = Philox::new(seed);
-    let mut t = 0.0;
-    for r in &mut trace.requests {
-        t += rng.next_exp() / rate;
-        r.arrival = t;
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficPattern::Steady => "steady",
+            TrafficPattern::Burst { .. } => "burst",
+            TrafficPattern::Zipf { .. } => "zipf",
+        }
+    }
+
+    /// Stamp arrival times onto `trace` at mean `rate` req/s. Deterministic
+    /// in `(self, rate, seed)`; `rate = ∞` puts everything at t = 0.
+    pub fn stamp(self, trace: &mut Trace, rate: f64, seed: u64) {
+        if !rate.is_finite() {
+            for r in &mut trace.requests {
+                r.arrival = 0.0;
+            }
+            return;
+        }
+        assert!(rate > 0.0, "arrival rate must be positive");
+        let mut rng = Philox::new(seed);
+        match self {
+            TrafficPattern::Steady => {
+                let mut t = 0.0;
+                for r in &mut trace.requests {
+                    t += rng.next_exp() / rate;
+                    r.arrival = t;
+                }
+            }
+            TrafficPattern::Burst { burst_factor, mean_on_s, mean_off_s } => {
+                assert!(burst_factor >= 1.0 && mean_on_s > 0.0 && mean_off_s > 0.0);
+                let p_on = mean_on_s / (mean_on_s + mean_off_s);
+                // The mean-rate contract requires the ON phases alone to
+                // carry less than the whole mean (p_on·f < 1): cap the
+                // effective factor so the compensating OFF rate stays
+                // positive and the long-run mean is preserved exactly.
+                let f = burst_factor.min(0.95 / p_on);
+                let rate_on = rate * f;
+                let rate_off = (rate - p_on * rate_on) / (1.0 - p_on);
+                debug_assert!(rate_off > 0.0);
+                let mut t = 0.0f64;
+                let mut on = true;
+                let mut phase_end = rng.next_exp() * mean_on_s;
+                for r in &mut trace.requests {
+                    loop {
+                        let cur = if on { rate_on } else { rate_off };
+                        let dt = rng.next_exp() / cur;
+                        if t + dt <= phase_end {
+                            t += dt;
+                            break;
+                        }
+                        // cross into the next phase; the exponential's
+                        // memorylessness lets us redraw beyond the boundary
+                        t = phase_end;
+                        on = !on;
+                        let mean = if on { mean_on_s } else { mean_off_s };
+                        phase_end = t + rng.next_exp() * mean;
+                    }
+                    r.arrival = t;
+                }
+            }
+            TrafficPattern::Zipf { s, max_train } => {
+                assert!(max_train >= 1);
+                let z = ZipfMandelbrot::zipf(max_train, s);
+                // epoch rate preserves the mean request rate
+                let mean_train: f64 =
+                    (0..max_train).map(|r| (r + 1) as f64 * z.pmf(r)).sum();
+                let epoch_rate = rate / mean_train.max(1.0);
+                let mut t = 0.0f64;
+                let mut left_in_train = 0usize;
+                for r in &mut trace.requests {
+                    if left_in_train == 0 {
+                        t += rng.next_exp() / epoch_rate;
+                        left_in_train = z.sample(&mut rng) + 1;
+                    }
+                    r.arrival = t;
+                    left_in_train -= 1;
+                }
+            }
+        }
     }
 }
 
@@ -186,5 +319,85 @@ mod tests {
         let mut trace = generate(&cfg);
         poisson_arrivals(&mut trace, f64::INFINITY, 3);
         assert!(trace.requests.iter().all(|r| r.arrival == 0.0));
+    }
+
+    /// Squared coefficient of variation of inter-arrival gaps: 1 for a
+    /// Poisson process, > 1 for clustered (bursty) arrivals.
+    fn cv2(times: &[f64]) -> f64 {
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        var / (mean * mean)
+    }
+
+    fn stamped(pattern: TrafficPattern, n: usize, rate: f64, seed: u64) -> Vec<f64> {
+        let cfg = TraceConfig::tiny(n, 1000);
+        let mut trace = generate(&cfg);
+        pattern.stamp(&mut trace, rate, seed);
+        trace.requests.iter().map(|r| r.arrival).collect()
+    }
+
+    #[test]
+    fn traffic_patterns_parse_roundtrip() {
+        for name in ["steady", "burst", "zipf"] {
+            let p = TrafficPattern::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert_eq!(TrafficPattern::parse("mmpp").unwrap().name(), "burst");
+        assert!(TrafficPattern::parse("nope").is_none());
+    }
+
+    #[test]
+    fn all_patterns_preserve_mean_rate_and_monotonicity() {
+        for name in ["steady", "burst", "zipf"] {
+            let p = TrafficPattern::parse(name).unwrap();
+            let times = stamped(p, 4000, 50.0, 11);
+            assert!(times.windows(2).all(|w| w[1] >= w[0]), "{name} not sorted");
+            let rate = times.len() as f64 / times.last().unwrap();
+            assert!(
+                (rate - 50.0).abs() < 50.0 * 0.3,
+                "{name}: mean rate {rate} (want ≈50)"
+            );
+        }
+    }
+
+    #[test]
+    fn burst_and_zipf_are_overdispersed() {
+        let steady = cv2(&stamped(TrafficPattern::parse("steady").unwrap(), 4000, 50.0, 5));
+        let burst = cv2(&stamped(TrafficPattern::parse("burst").unwrap(), 4000, 50.0, 5));
+        let zipf = cv2(&stamped(TrafficPattern::parse("zipf").unwrap(), 4000, 50.0, 5));
+        assert!((steady - 1.0).abs() < 0.25, "Poisson CV² ≈ 1, got {steady}");
+        assert!(burst > 1.5, "burst CV² {burst} should exceed Poisson");
+        assert!(zipf > 1.5, "zipf CV² {zipf} should exceed Poisson");
+    }
+
+    #[test]
+    fn burst_mean_rate_holds_for_extreme_duty_cycles() {
+        // p_on · factor ≥ 1 would need a negative OFF rate; the factor cap
+        // must preserve the long-run mean instead of silently inflating it.
+        let p = TrafficPattern::Burst { burst_factor: 8.0, mean_on_s: 1.0, mean_off_s: 1.0 };
+        let times = stamped(p, 4000, 10.0, 21);
+        let rate = times.len() as f64 / times.last().unwrap();
+        assert!((rate - 10.0).abs() < 10.0 * 0.3, "mean rate {rate} (want ≈10)");
+    }
+
+    #[test]
+    fn zipf_trains_arrive_simultaneously() {
+        let times = stamped(TrafficPattern::parse("zipf").unwrap(), 2000, 50.0, 9);
+        let ties = times.windows(2).filter(|w| w[1] == w[0]).count();
+        assert!(
+            ties > times.len() / 10,
+            "flash crowds must share timestamps ({ties} ties)"
+        );
+    }
+
+    #[test]
+    fn patterns_are_deterministic_in_seed() {
+        for name in ["steady", "burst", "zipf"] {
+            let p = TrafficPattern::parse(name).unwrap();
+            assert_eq!(stamped(p, 200, 30.0, 3), stamped(p, 200, 30.0, 3), "{name}");
+            assert_ne!(stamped(p, 200, 30.0, 3), stamped(p, 200, 30.0, 4), "{name}");
+        }
     }
 }

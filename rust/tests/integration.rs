@@ -94,13 +94,13 @@ fn simulator_composes_with_workload_end_to_end() {
     let expected: usize = trace.iter().map(|r| r.output_len).sum();
 
     let gpu = GpuModel::new(model, platform.clone(), parallel);
-    let cfg = SimConfig {
+    let cfg = SimConfig::new(
         gpu,
-        mode: DecisionMode::SimpleOverlapped { per_seq_s: 50e-6, samplers: 16 },
-        slots: 256,
-        cpu_cores: platform.cpu_cores,
-        samplers: 16,
-    };
+        DecisionMode::SimpleOverlapped { per_seq_s: 50e-6, samplers: 16 },
+        256,
+        platform.cpu_cores,
+        16,
+    );
     let res = simulate(&cfg, &trace);
     assert_eq!(res.recorder.total_tokens(), expected);
     assert_eq!(res.recorder.finished_requests(), 150);

@@ -192,6 +192,45 @@ fn engine_open_loop_arrivals() {
 }
 
 #[test]
+fn engine_preempts_under_kv_pressure_and_serves_exactly() {
+    let Some(m) = manifest() else { return };
+    let rt = ModelRuntime::load(&m, "micro-test").unwrap();
+    let vocab = rt.vocab();
+    let max_seq = rt.max_seq();
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    // Over-commit the cache to its floor (one max-length sequence + one
+    // block) instead of the never-preempt b × max_seq sizing.
+    cfg.kv_blocks = 1;
+    let mut engine = PjrtEngine::new(rt, &cfg, None);
+    // Every request grows from a 1-block prompt to nearly max_seq, so any
+    // two concurrently-decoding sequences outgrow the floor-sized pool
+    // (one max-length sequence + one block) whatever the model's batch is.
+    let n = 6u64;
+    let max_new = max_seq - 8;
+    let mut expected = 0usize;
+    for id in 0..n {
+        let prompt: Vec<u32> = (0..4).map(|i| (id as u32 * 7 + i) % vocab as u32).collect();
+        engine.submit(Request::new(id, prompt, max_new));
+        expected += max_new;
+    }
+    let summary = engine.run_until_idle().unwrap();
+    assert_eq!(summary.finished, n as usize);
+    assert_eq!(summary.tokens, expected, "recompute-on-resume loses no tokens");
+    assert!(
+        engine.preemption_count() > 0,
+        "over-committed cache must preempt (kv floor, {n} growing seqs)"
+    );
+    let finished = engine.take_finished();
+    for f in &finished {
+        assert_eq!(f.output.len(), max_new);
+        assert!(f.output.iter().all(|&t| (t as usize) < vocab));
+    }
+    engine.shutdown();
+}
+
+#[test]
 fn prompt_too_long_panics() {
     let Some(m) = manifest() else { return };
     let rt = ModelRuntime::load(&m, "micro-test").unwrap();
