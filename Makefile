@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures
+.PHONY: artifacts artifacts-force build test figures ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -18,3 +18,11 @@ test:
 
 figures: build
 	cargo run --release -- figures
+
+# What .github/workflows/ci.yml runs: fmt gate, release build + tests,
+# python kernel/model tests (hypothesis optional — shim fallback).
+ci:
+	cargo fmt --check
+	cargo build --release
+	cargo test -q --release
+	python -m pytest python/tests -q

@@ -79,6 +79,29 @@ fn main() {
         }));
     }
 
+    // --- speculative-decoding verification (DESIGN.md §7) ---
+    if want("verify") {
+        use simple_serve::decision::draft::DraftProposer;
+        use simple_serve::decision::verify::{verify_window, GrammarSlot};
+        const K: usize = 4;
+        let proposer = DraftProposer::new();
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 4);
+        let mut vhist = BatchHistory::new(&[vec![1, 2, 3]], 1 << 20);
+        let mut grammar: GrammarSlot = None;
+        let mut out: Vec<u32> = Vec::new();
+        let chain: Vec<_> = (0..=K as u64).map(|j| gen.view(1, 10 + j, 1)).collect();
+        // normalize per chain position: items/s = verified positions/s
+        results.push(run_case("verify/spec_window_k4", &cfg, Some((K + 1) as f64), || {
+            let base = out.len() as u64;
+            let draft = proposer.propose(7, V, &[1, 2, 3], &out, K);
+            let v = verify_window(
+                &mut pipe, &chain, 0, &draft, &mut vhist, &mut grammar, &params, &[],
+                0, base,
+            );
+            out.extend(black_box(&v.tokens));
+        }));
+    }
+
     // --- truncation-first vs sort-based filtering ---
     if want("filter") {
         let pairs: Vec<(u32, f32)> = {

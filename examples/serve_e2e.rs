@@ -10,6 +10,15 @@
 //! arrivals onto the trace (default: closed loop, everything at t = 0) and
 //! reports P95 TTFT/TPOT plus KV-pressure preemption counts — the
 //! bursty-arrival scenario that stresses admit/preempt/resume churn.
+//!
+//! Speculative decoding: `--spec_k K` drafts K tokens per sequence per
+//! iteration and verifies them in the decision plane (DESIGN.md §7). The
+//! printed `stream digest` is a deterministic hash of every finished
+//! sequence's tokens: for fixed seeds it is IDENTICAL for any K and any
+//! sampler count m — verification is exact. `--loopy` serves the
+//! motif-cycled (templated-traffic) trace where self-drafting gets
+//! realistic acceptance rates; the per-variant line reports accepted
+//! drafts / proposed and committed tokens per decision step.
 
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
@@ -27,8 +36,31 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("rate", "mean arrival rate in req/s (open loop; default 20)"),
     OptSpec::value("prefill_budget", "chunked-prefill token budget per iteration"),
     OptSpec::value("kv_blocks", "KV blocks (0 = never-preempt sizing; small = churn)"),
+    OptSpec::value("spec_k", "speculative draft window per iteration (0 = off)"),
+    OptSpec::flag("loopy", "motif-cycled prompts (speculation-friendly trace)"),
     OptSpec::flag("quick", "small run"),
 ];
+
+/// FNV-1a over every finished sequence's (id, tokens), id-ordered: a
+/// deterministic digest of the served token streams.
+fn stream_digest(mut finished: Vec<simple_serve::engine::Sequence>) -> u64 {
+    finished.sort_by_key(|s| s.request.id);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for seq in &finished {
+        eat(seq.request.id);
+        eat(seq.output.len() as u64);
+        for &t in &seq.output {
+            eat(t as u64);
+        }
+    }
+    h
+}
 
 fn main() -> simple_serve::Result<()> {
     let args = Args::parse_env(SPECS, false)?;
@@ -49,18 +81,24 @@ fn main() -> simple_serve::Result<()> {
     let rate: f64 = args.get_or("rate", 20.0)?;
     let prefill_budget: usize = args.get_or("prefill_budget", 0)?;
     let kv_blocks: usize = args.get_or("kv_blocks", 0)?;
+    let spec_k: usize = args.get_or("spec_k", 0)?;
+    let loopy = args.flag("loopy");
 
     let manifest = Manifest::load(&default_artifacts_dir())
         .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
 
     match traffic {
         Some(p) => println!(
-            "=== end-to-end serving: {model}, {n} requests, {} arrivals at {rate} req/s ===\n",
+            "=== end-to-end serving: {model}, {n} requests, {} arrivals at {rate} req/s, \
+             spec_k={spec_k} ===\n",
             p.name()
         ),
-        None => println!("=== end-to-end serving: {model}, {n} requests (closed loop) ===\n"),
+        None => println!(
+            "=== end-to-end serving: {model}, {n} requests (closed loop), spec_k={spec_k} ===\n"
+        ),
     }
     let mut results = Vec::new();
+    let mut digests = Vec::new();
     for variant in [DecisionVariant::GpuEpilogue, DecisionVariant::Shvs] {
         let rt = ModelRuntime::load(&manifest, &model)?;
         let vocab = rt.vocab();
@@ -70,14 +108,19 @@ fn main() -> simple_serve::Result<()> {
         cfg.sampler.num_samplers = samplers;
         cfg.prefill_token_budget = prefill_budget;
         cfg.kv_blocks = kv_blocks;
+        cfg.spec_k = spec_k;
         // Offline-profiled hot set: the AOT model's Zipf head lives on
         // low ids by construction (see python/compile/model.py lm_bias).
         let h = (vocab / 5).min(32_768) as u32;
         let hot = (variant == DecisionVariant::Shvs)
             .then(|| HotVocab::new((0..h).collect(), vocab).into_arc());
         let mut engine = PjrtEngine::new(rt, &cfg, hot);
-        let mut trace =
-            workload::generate(&workload::TraceConfig::sharegpt_like(n, vocab, max_seq));
+        let trace_cfg = if loopy {
+            workload::TraceConfig::loopy(n, vocab, max_seq)
+        } else {
+            workload::TraceConfig::sharegpt_like(n, vocab, max_seq)
+        };
+        let mut trace = workload::generate(&trace_cfg);
         if let Some(pattern) = traffic {
             pattern.stamp(&mut trace, rate, 11);
         }
@@ -87,10 +130,21 @@ fn main() -> simple_serve::Result<()> {
         }
         let summary = engine.run_until_idle()?;
         assert_eq!(summary.tokens, expected, "all tokens produced");
+        let digest = stream_digest(engine.take_finished());
+        let spec_note = if engine.spec_windows > 0 {
+            format!(
+                " | spec: {}/{} drafts accepted, {:.2} tok/step",
+                engine.spec_accepted,
+                engine.spec_proposed,
+                engine.spec_committed as f64 / engine.spec_windows as f64
+            )
+        } else {
+            String::new()
+        };
         println!(
             "[{}] {:>7.0} tok/s | TPOT p50 {:>6.2} ms  p95 {:>6.2} ms | \
              TTFT p50 {:>6.1} ms  p95 {:>6.1} ms | gpu util {:.0}% cpu util {:.0}% | \
-             {} preemptions",
+             {} preemptions{}",
             variant.name(),
             summary.throughput,
             summary.tpot.p50 * 1e3,
@@ -100,8 +154,11 @@ fn main() -> simple_serve::Result<()> {
             engine.recorder.utilization("gpu") * 100.0,
             engine.recorder.utilization("cpu") * 100.0,
             engine.preemption_count(),
+            spec_note,
         );
+        println!("[{}] stream digest: {digest:016x}", variant.name());
         results.push((variant.name(), summary));
+        digests.push((variant.name(), digest));
         engine.shutdown();
     }
 
@@ -112,13 +169,29 @@ fn main() -> simple_serve::Result<()> {
         simple.throughput / base.throughput,
         (simple.tpot.p95 / base.tpot.p95 - 1.0) * 100.0
     );
+    if spec_k > 0 {
+        println!(
+            "(compare `stream digest` lines against a --spec_k 0 run: they must match \
+             — verification is exact for any k and m)"
+        );
+    }
     // Record machine-readable results for EXPERIMENTS.md.
     let out = Json::obj(vec![
         ("model", Json::Str(model)),
         ("requests", Json::Num(n as f64)),
+        ("spec_k", Json::Num(spec_k as f64)),
         (
             "traffic",
             Json::Str(traffic.map(|p| p.name()).unwrap_or("closed-loop").to_string()),
+        ),
+        (
+            "digests",
+            Json::obj(
+                digests
+                    .iter()
+                    .map(|(name, d)| (*name, Json::Str(format!("{d:016x}"))))
+                    .collect::<Vec<_>>(),
+            ),
         ),
         ("baseline", base.to_json()),
         ("simple", simple.to_json()),

@@ -107,6 +107,11 @@ pub struct EngineConfig {
     /// smaller pool over-commits the cache — production-style — and
     /// engages KV-pressure preemption with recompute-on-resume.
     pub kv_blocks: usize,
+    /// Speculative-decoding window: draft tokens proposed per sequence per
+    /// iteration (0 = off). The decision plane verifies the window with
+    /// exact-distribution rejection (DESIGN.md §7); token streams are
+    /// bit-identical to `spec_k = 0` for any k and sampler count.
+    pub spec_k: usize,
 }
 
 impl Default for EngineConfig {
@@ -121,6 +126,7 @@ impl Default for EngineConfig {
             kv_block_tokens: 16,
             prefill_token_budget: 0,
             kv_blocks: 0,
+            spec_k: 0,
         }
     }
 }
@@ -172,6 +178,9 @@ impl EngineConfig {
         if let Some(k) = j.get("kv_blocks").as_usize() {
             self.kv_blocks = k;
         }
+        if let Some(k) = j.get("spec_k").as_usize() {
+            self.spec_k = k;
+        }
         Ok(())
     }
 
@@ -193,6 +202,7 @@ impl EngineConfig {
             "max_seq_len",
             "prefill_budget",
             "kv_blocks",
+            "spec_k",
         ] {
             if let Some(v) = args.get(key) {
                 let n: f64 = v
@@ -234,6 +244,14 @@ mod tests {
         assert_eq!(cfg.parallel.pp, 2);
         assert_eq!(cfg.total_batch(), 16 * 8);
         assert_eq!(cfg.sampler.variant, DecisionVariant::Offloading);
+    }
+
+    #[test]
+    fn spec_k_override_applies() {
+        let mut cfg = EngineConfig::default();
+        assert_eq!(cfg.spec_k, 0, "speculation is opt-in");
+        cfg.apply_json(&Json::parse(r#"{"spec_k": 4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.spec_k, 4);
     }
 
     #[test]

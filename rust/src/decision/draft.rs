@@ -1,0 +1,209 @@
+//! Draft proposer for speculative decoding in the decision plane.
+//!
+//! The paper's §9 future-work item: the sampler's accept/reject machinery
+//! (built for SHVS) verifies *multiple* proposed tokens per iteration. This
+//! module supplies the proposals. There is no draft model in this offline
+//! environment, so the proposer is a deterministic **self-drafting n-gram
+//! stub** (prompt-lookup decoding): it finds the most recent earlier
+//! occurrence of the sequence's trailing n-gram and proposes the tokens
+//! that followed it, falling back to a Philox-keyed pseudo-draft when no
+//! match exists.
+//!
+//! Two properties matter more than draft quality:
+//!
+//! 1. **Determinism.** A proposal is a pure function of
+//!    `(request seed, prompt, output, k)` — independent of the sampler
+//!    count `m`, batch composition, slot assignment, and preemption — so
+//!    every component (engine, churn tests, property tests) recomputes the
+//!    identical draft and verified token streams stay bit-identical to
+//!    non-speculative decode.
+//! 2. **Exactness is the verifier's job.** A bad draft only lowers the
+//!    acceptance rate; [`super::verify`] guarantees the committed tokens
+//!    follow the exact target distribution regardless.
+
+use crate::rng::Philox;
+
+/// Deterministic self-drafting n-gram proposer (prompt-lookup decoding).
+#[derive(Debug, Clone)]
+pub struct DraftProposer {
+    /// Trailing n-gram length to match (2 = bigram lookup).
+    pub ngram: usize,
+    /// How far back the newest-first match scan looks. Bounds the per-call
+    /// cost at O(lookback + k) — without it a match-free context costs
+    /// O(len) per proposal, O(L²) per generation, in the engine's serial
+    /// section between plan and forward. Recent context also drafts better.
+    pub lookback: usize,
+}
+
+impl Default for DraftProposer {
+    fn default() -> Self {
+        DraftProposer { ngram: 2, lookback: 128 }
+    }
+}
+
+impl DraftProposer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clamp a configured window size for a sequence about to decode: the
+    /// bonus token is the last that can commit (never draft past
+    /// `max_new_tokens − 1` remaining), and the chain feeds positions
+    /// `position+1 ..= position+k`, which must stay inside the static KV
+    /// shape with room for the next feed. One definition shared by the
+    /// engine and the offline churn harness so the two cannot drift.
+    pub fn clamp_window(
+        spec_k: usize,
+        max_new_tokens: usize,
+        output_len: usize,
+        max_seq_len: usize,
+        position: usize,
+    ) -> usize {
+        let remaining = max_new_tokens.saturating_sub(output_len);
+        spec_k
+            .min(remaining.saturating_sub(1))
+            .min(max_seq_len.saturating_sub(position + 2))
+    }
+
+    /// Propose up to `k` draft tokens to follow `prompt ⧺ output`.
+    ///
+    /// `seed` is the request seed (the same one keying the decision
+    /// uniforms); `vocab` bounds the fallback pseudo-tokens. Returns exactly
+    /// `k` tokens (the window the verifier checks).
+    pub fn propose(
+        &self,
+        seed: u64,
+        vocab: usize,
+        prompt: &[u32],
+        output: &[u32],
+        k: usize,
+    ) -> Vec<u32> {
+        let mut draft = Vec::with_capacity(k);
+        if k == 0 {
+            return draft;
+        }
+        let len = prompt.len() + output.len();
+        let tok = |i: usize| -> u32 {
+            if i < prompt.len() {
+                prompt[i]
+            } else {
+                output[i - prompt.len()]
+            }
+        };
+
+        // --- n-gram lookup: latest earlier match of the trailing n-gram.
+        let n = self.ngram.max(1);
+        if len > n {
+            let is_match = |end: usize| (0..n).all(|j| tok(end - j) == tok(len - 1 - j));
+            // `end` is the last index of a candidate match, strictly before
+            // the trailing n-gram itself; scan newest-first, bounded by the
+            // lookback window.
+            let mut src = None;
+            for end in (n - 1..len - 1).rev().take(self.lookback.max(1)) {
+                if is_match(end) {
+                    src = Some(end + 1);
+                    break;
+                }
+            }
+            if let Some(start) = src {
+                for i in start..(start + k).min(len) {
+                    draft.push(tok(i));
+                }
+            }
+        }
+
+        // --- fallback: Philox-keyed pseudo-draft for the remaining slots,
+        // keyed by (seed, previous token, absolute position) so it is
+        // stable under replay and independent of the batch.
+        while draft.len() < k {
+            let pos = (len + draft.len()) as u64;
+            let prev = draft
+                .last()
+                .copied()
+                .unwrap_or_else(|| if len > 0 { tok(len - 1) } else { 0 });
+            let mut rng = Philox::at(
+                seed ^ 0xD12A_F7ED,
+                ((prev as u128) << 64) | (pos as u128),
+            );
+            draft.push(rng.next_below(vocab as u64) as u32);
+        }
+        draft
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_window_respects_budget_and_ceiling() {
+        // plenty of room: the configured k survives
+        assert_eq!(DraftProposer::clamp_window(4, 100, 0, 1024, 10), 4);
+        // one token left to generate: no point drafting (bonus covers it)
+        assert_eq!(DraftProposer::clamp_window(4, 10, 9, 1024, 10), 0);
+        // two left: one draft + bonus
+        assert_eq!(DraftProposer::clamp_window(4, 10, 8, 1024, 10), 1);
+        // KV ceiling: chain positions p+1..=p+k must stay < max_seq - 1
+        assert_eq!(DraftProposer::clamp_window(8, 100, 0, 16, 12), 2);
+        assert_eq!(DraftProposer::clamp_window(8, 100, 0, 16, 15), 0);
+    }
+
+    #[test]
+    fn proposes_exactly_k_tokens_in_vocab() {
+        let p = DraftProposer::new();
+        for k in [0usize, 1, 3, 8] {
+            let d = p.propose(7, 100, &[1, 2, 3], &[4, 5], k);
+            assert_eq!(d.len(), k);
+            assert!(d.iter().all(|&t| (t as usize) < 100));
+        }
+    }
+
+    #[test]
+    fn ngram_lookup_copies_the_continuation() {
+        // context: 1 2 3 9 9 1 2 — trailing bigram (1,2) matched at the
+        // front, so the draft copies what followed it: 3 9 9 ...
+        let p = DraftProposer::new();
+        let d = p.propose(0, 50, &[1, 2, 3, 9, 9], &[1, 2], 3);
+        assert_eq!(d, vec![3, 9, 9]);
+    }
+
+    #[test]
+    fn latest_match_wins() {
+        // (1,2) occurs twice; the most recent earlier occurrence (followed
+        // by 8) must be chosen, mirroring prompt-lookup decoding.
+        let p = DraftProposer::new();
+        let d = p.propose(0, 50, &[1, 2, 7, 1, 2, 8], &[1, 2], 1);
+        assert_eq!(d, vec![8]);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let p = DraftProposer::new();
+        // no n-gram match -> pure fallback path
+        let a = p.propose(3, 1000, &[5, 6, 7], &[], 4);
+        let b = p.propose(3, 1000, &[5, 6, 7], &[], 4);
+        assert_eq!(a, b);
+        let c = p.propose(4, 1000, &[5, 6, 7], &[], 4);
+        assert_ne!(a, c, "fallback drafts must vary with the request seed");
+    }
+
+    #[test]
+    fn split_invariant_across_prompt_output_boundary() {
+        // The proposer sees prompt ⧺ output as one context: moving the
+        // boundary must not change the proposal (preemption replay moves
+        // tokens between the two).
+        let p = DraftProposer::new();
+        let a = p.propose(9, 64, &[1, 2, 3, 1], &[2, 3, 1, 2], 3);
+        let b = p.propose(9, 64, &[1, 2], &[3, 1, 2, 3, 1, 2], 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn continuation_stops_at_context_end_then_falls_back() {
+        // match near the end: fewer than k copied tokens, rest from fallback
+        let p = DraftProposer::new();
+        let d = p.propose(11, 32, &[4, 4, 9], &[4, 4], 4);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[0], 9, "copied continuation comes first");
+    }
+}

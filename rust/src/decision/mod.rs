@@ -11,11 +11,16 @@
 //!   ablation ladder (naive CPU → parallel → offloading → SHVS).
 //! - [`controller`] — online QoS-aware H adaptation (§9 future work i).
 //! - [`grammar`] — grammar-constrained decoding masks (§9 future work iii).
+//! - [`draft`], [`verify`] — speculative decoding in the decision plane
+//!   (§9, DESIGN.md §7): a deterministic self-drafting proposer and batched
+//!   rejection verification with exact-distribution commits and
+//!   roll-forward/rollback of the per-sequence state.
 //! - [`params`], [`softmax`], [`categorical`] — sampling controls, stable
 //!   softmax, and deterministic pre-generated variates (§5.1).
 
 pub mod categorical;
 pub mod controller;
+pub mod draft;
 pub mod filter;
 pub mod grammar;
 pub mod hotvocab;
@@ -26,8 +31,10 @@ pub mod service;
 pub mod shvs;
 pub mod sizing;
 pub mod softmax;
+pub mod verify;
 
 pub use controller::{ControllerConfig, HotVocabController};
+pub use draft::DraftProposer;
 pub use grammar::GrammarConstraint;
 pub use hotvocab::HotVocab;
 pub use params::SamplingParams;
@@ -35,3 +42,4 @@ pub use pipeline::DecisionPipeline;
 pub use service::{ColumnMeta, DecisionBatch, IterationTask, SamplerService};
 pub use shvs::{Decision, Precompute, ShvsSampler};
 pub use sizing::SizingModel;
+pub use verify::{verify_window, Verdict};

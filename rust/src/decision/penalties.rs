@@ -41,6 +41,21 @@ impl SeqHistory {
         self.out_len += 1;
     }
 
+    /// Undo one [`Self::append`] of `token` — the speculative-decoding
+    /// rollback path: draft tokens are rolled forward through the histogram
+    /// for batched verification and un-counted past the rejection point.
+    /// Exact inverse: `append(t); unappend(t)` is the identity.
+    pub fn unappend(&mut self, token: u32) {
+        match self.out_counts.get_mut(&token) {
+            Some(c) if *c > 1 => *c -= 1,
+            Some(_) => {
+                self.out_counts.remove(&token);
+            }
+            None => panic!("unappend of token {token} never appended"),
+        }
+        self.out_len -= 1;
+    }
+
     pub fn out_len(&self) -> usize {
         self.out_len
     }
@@ -150,7 +165,7 @@ pub fn penalized_logit_at(
 
 /// Column-wise batch history: the preallocated row-append buffer
 /// `Y ∈ N^{Lmax×B}` plus per-sequence sparse histograms.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct BatchHistory {
     /// Row-append storage: rows[s][b] = token generated for sequence b at
     /// step s. Rows are contiguous B-wide appends (cache-friendly, no
@@ -200,6 +215,17 @@ impl BatchHistory {
             self.seqs[b].append(t);
         }
         self.rows.push(tokens.to_vec());
+    }
+
+    /// Remove the newest row (inverse of [`Self::append_row`]) — used by
+    /// speculative-decoding verification to roll back draft tokens past the
+    /// rejection point. Returns the removed row.
+    pub fn pop_row(&mut self) -> Vec<u32> {
+        let row = self.rows.pop().expect("pop_row on empty history");
+        for (b, &t) in row.iter().enumerate() {
+            self.seqs[b].unappend(t);
+        }
+        row
     }
 
     pub fn seq(&self, b: usize) -> &SeqHistory {
@@ -353,6 +379,51 @@ mod tests {
         }
         assert_eq!(bh.column(0), vec![1, 2, 1]);
         assert_eq!(bh.column(2), vec![1, 7, 7]);
+    }
+
+    #[test]
+    fn unappend_is_exact_inverse_of_append() {
+        let mut h = SeqHistory::new(&[1, 2]);
+        h.append(9);
+        h.append(9);
+        h.append(2);
+        let snapshot = (h.out_count(9), h.out_count(2), h.out_len());
+        h.append(9);
+        h.append(5);
+        h.unappend(5);
+        h.unappend(9);
+        assert_eq!((h.out_count(9), h.out_count(2), h.out_len()), snapshot);
+        assert!(!h.seen(5), "fully-rolled-back token leaves no trace");
+        assert_eq!(h.num_penalized(), 3); // {1, 2, 9}
+    }
+
+    #[test]
+    fn pop_row_rolls_back_batch_history() {
+        let mut bh = BatchHistory::new(&[vec![1], vec![2]], 8);
+        bh.append_row(&[3, 4]);
+        bh.append_row(&[5, 4]);
+        let cols = (bh.column(0), bh.column(1));
+        bh.append_row(&[7, 8]); // speculative roll-forward
+        bh.append_row(&[9, 4]);
+        assert_eq!(bh.pop_row(), vec![9, 4]);
+        assert_eq!(bh.pop_row(), vec![7, 8]);
+        assert_eq!((bh.column(0), bh.column(1)), cols);
+        assert_eq!(bh.seq(1).out_count(4), 2);
+        assert!(!bh.seq(0).seen(7));
+        // the rebuilt histogram agrees after rollback
+        for b in 0..2 {
+            for (&t, &c) in &bh.rebuild(b) {
+                assert_eq!(bh.seq(b).out_count(t), c);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unappend_never_appended_panics() {
+        let mut h = SeqHistory::new(&[1]);
+        h.append(2);
+        h.unappend(3);
     }
 
     #[test]

@@ -24,7 +24,8 @@ use super::hotvocab::HotVocab;
 use super::params::SamplingParams;
 use super::penalties::BatchHistory;
 use super::pipeline::DecisionPipeline;
-use super::shvs::{Decision, Precompute};
+use super::shvs::Precompute;
+use super::verify::{self, Verdict};
 use crate::config::SamplerConfig;
 #[cfg(test)]
 use crate::config::DecisionVariant;
@@ -40,18 +41,51 @@ use std::time::Instant;
 pub struct ColumnMeta {
     pub col: usize,
     pub seq_id: u64,
+    /// Decode iteration of the *base* chain position for this sequence
+    /// (speculative positions key their uniforms at `iteration + j`).
     pub iteration: u64,
 }
 
 /// One iteration's work for the decision plane. Shared (Arc'd) pieces are
 /// written once by the engine and read zero-copy by every sampler.
+///
+/// Speculative decoding ships the whole draft chain in one task:
+/// `views[0]` is the base decode step's logits; `views[j > 0]` were
+/// produced by feeding draft token `j-1`, and `drafts[ci]` carries column
+/// `ci`'s proposed window. The batch-axis sharding is untouched — each
+/// sampler still reads only its owned columns, in every view, with no
+/// vocab-axis collectives.
 pub struct IterationTask {
     pub iter: u64,
-    pub view: ShardedLogits,
+    /// Per-chain-position logits views (len 1 = plain decode).
+    pub views: Vec<ShardedLogits>,
     pub columns: Arc<Vec<ColumnMeta>>,
-    /// Per-column SHVS precompute, aligned with `columns` (empty when the
+    /// Per-view, per-column SHVS precompute: `pre[j][col]` (empty when the
     /// variant doesn't use it).
-    pub pre: Arc<Vec<Precompute>>,
+    pub pre: Arc<Vec<Vec<Precompute>>>,
+    /// Draft windows aligned with `columns` (an empty window = plain
+    /// decision; an empty outer vec = no speculation this iteration).
+    pub drafts: Arc<Vec<Vec<u32>>>,
+}
+
+impl IterationTask {
+    /// A plain non-speculative iteration: one view, no drafts. `pre` is the
+    /// per-column SHVS precompute for that view (may be empty).
+    pub fn single(
+        iter: u64,
+        view: ShardedLogits,
+        columns: Vec<ColumnMeta>,
+        pre: Vec<Precompute>,
+    ) -> IterationTask {
+        let pre = if pre.is_empty() { Vec::new() } else { vec![pre] };
+        IterationTask {
+            iter,
+            views: vec![view],
+            columns: Arc::new(columns),
+            pre: Arc::new(pre),
+            drafts: Arc::new(Vec::new()),
+        }
+    }
 }
 
 /// Control + data messages flowing engine → sampler.
@@ -79,8 +113,10 @@ pub enum SamplerMsg {
 pub struct DecisionBatch {
     pub iter: u64,
     pub sampler_id: usize,
-    /// (column, seq_id, decision)
-    pub decisions: Vec<(usize, u64, Decision)>,
+    /// (column, seq_id, verdict) — a verdict commits 1..=k+1 tokens
+    /// (accepted draft prefix + corrected bonus; exactly 1 without
+    /// speculation).
+    pub decisions: Vec<(usize, u64, Verdict)>,
     /// Wall seconds this sampler spent deciding (busy time).
     pub busy_s: f64,
 }
@@ -93,7 +129,10 @@ pub struct SamplerService {
     m: usize,
 }
 
-/// Per-sampler lifetime statistics.
+/// Per-sampler lifetime statistics. (Speculative-decoding acceptance is
+/// tallied engine-side from *committed* windows — see
+/// `PjrtEngine::spec_accepted` — not here, where discarded-after-preemption
+/// verdicts would skew the counts.)
 #[derive(Debug, Clone, Default)]
 pub struct SamplerStats {
     pub decisions: u64,
@@ -160,45 +199,33 @@ impl SamplerWorker {
                 SamplerMsg::Iterate(task) => {
                     let t0 = Instant::now();
                     let mut decisions = Vec::new();
-                    for meta in task.columns.iter() {
+                    for (ci, meta) in task.columns.iter().enumerate() {
                         if !self.owns(meta.seq_id) {
                             continue;
                         }
-                        let Some(seq) = self.owned.get(&meta.seq_id) else {
+                        let Some(seq) = self.owned.get_mut(&meta.seq_id) else {
                             continue; // retired concurrently; engine resends
                         };
-                        let mut params = seq.params.clone();
-                        // Structured decoding: restrict to grammar-viable
-                        // tokens (exact allow-list path; §9 extension iii).
-                        if let Some((g, state)) = &seq.grammar {
-                            let allowed = g.allowed_tokens(*state);
-                            if !allowed.is_empty() {
-                                params.allowed_tokens = Some(allowed);
-                            }
-                        }
-                        let pre = task.pre.get(meta.col);
-                        // SAFETY of the borrow dance: decide() needs &hist
-                        // and &mut pipeline; we re-borrow mutably after.
-                        let d = self.pipeline.decide(
-                            &task.view,
+                        let draft: &[u32] =
+                            task.drafts.get(ci).map(Vec::as_slice).unwrap_or(&[]);
+                        // One code path for both modes: with an empty draft
+                        // this is exactly one grammar-masked decision plus
+                        // the local metadata append (§5.1); with a draft it
+                        // is batched rejection verification with
+                        // roll-forward/rollback of the owned state.
+                        let verdict = verify::verify_window(
+                            &mut self.pipeline,
+                            &task.views,
                             meta.col,
-                            hist_view(&self.owned, meta.seq_id),
-                            0, // one single-column BatchHistory per sequence
-                            &params,
-                            pre,
+                            draft,
+                            &mut seq.hist,
+                            &mut seq.grammar,
+                            &seq.params,
+                            &task.pre,
                             meta.seq_id,
                             meta.iteration,
                         );
-                        // local metadata update (§5.1): append own decision
-                        if let Some(seq) = self.owned.get_mut(&meta.seq_id) {
-                            seq.hist.append_row(&[d.token]);
-                            if let Some((g, state)) = &mut seq.grammar {
-                                if let Some(next) = g.advance(*state, d.token) {
-                                    *state = next;
-                                }
-                            }
-                        }
-                        decisions.push((meta.col, meta.seq_id, d));
+                        decisions.push((meta.col, meta.seq_id, verdict));
                     }
                     let busy = t0.elapsed().as_secs_f64();
                     stats.busy_s += busy;
@@ -219,12 +246,6 @@ impl SamplerWorker {
         stats.alpha_sum = self.pipeline.alpha_sum;
         stats
     }
-}
-
-/// Work around simultaneous &mut pipeline / & history borrows of `self`:
-/// histories live in the map; this fetches a shared borrow by key.
-fn hist_view(owned: &HashMap<u64, OwnedSeq>, seq_id: u64) -> &BatchHistory {
-    &owned.get(&seq_id).unwrap().hist
 }
 
 impl SamplerService {
@@ -310,10 +331,10 @@ impl SamplerService {
     }
 
     /// Collect decisions for iteration `iter` (blocks until all `m` sampler
-    /// batches for that iteration arrived). Returns (col → (seq, decision))
+    /// batches for that iteration arrived). Returns (col → (seq, verdict))
     /// plus the max per-sampler busy time (the decision-plane latency that
     /// must hide under GPU compute).
-    pub fn collect(&self, iter: u64, expected_cols: usize) -> (Vec<(usize, u64, Decision)>, f64) {
+    pub fn collect(&self, iter: u64, expected_cols: usize) -> (Vec<(usize, u64, Verdict)>, f64) {
         let mut got = Vec::with_capacity(expected_cols);
         let mut batches = 0usize;
         let mut max_busy = 0.0f64;
@@ -349,6 +370,8 @@ impl SamplerService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::decision::draft::DraftProposer;
+    use crate::harness::measure::LogitsGen;
     use crate::tensor::{shard_row_major, Tensor2};
 
     fn logits_view(b: usize, v: usize, iter: u64, shards: usize) -> ShardedLogits {
@@ -382,17 +405,13 @@ mod tests {
             let columns: Vec<ColumnMeta> = (0..b)
                 .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
                 .collect();
-            svc.submit(IterationTask {
-                iter,
-                view,
-                columns: Arc::new(columns),
-                pre: Arc::new(Vec::new()),
-            });
+            svc.submit(IterationTask::single(iter, view, columns, Vec::new()));
             let (decisions, _busy) = svc.collect(iter, b);
             assert_eq!(decisions.len(), b, "every column decided");
-            for (col, seq, d) in decisions {
+            for (col, seq, verdict) in decisions {
                 assert_eq!(col as u64, seq);
-                streams[col].push(d.token);
+                assert_eq!(verdict.tokens.len(), 1, "non-speculative: one token");
+                streams[col].push(verdict.tokens[0]);
             }
         }
         for s in 0..b as u64 {
@@ -403,6 +422,97 @@ mod tests {
         let total: u64 = stats.iter().map(|s| s.decisions).sum();
         assert_eq!(total, iters * b as u64);
         streams
+    }
+
+    /// Drive the service with speculative windows of size `k` until every
+    /// sequence committed ≥ `total` tokens. Logits are keyed by
+    /// (seq, decode_iter) — the context-free synthetic data plane — so the
+    /// streams must be bit-identical across `k` and `m`.
+    fn run_service_spec(m: usize, k: usize, total: usize) -> Vec<Vec<u32>> {
+        let vocab = 256;
+        let b = 4usize;
+        let gen = LogitsGen::new(vocab, 1.1, 5);
+        let proposer = DraftProposer::new();
+        let cfg = SamplerConfig {
+            num_samplers: m,
+            variant: DecisionVariant::Offloading,
+            seed: 17,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 512);
+        let prompts: Vec<Vec<u32>> = (0..b).map(|s| vec![s as u32 + 1, 9]).collect();
+        let params: Vec<SamplingParams> = (0..b)
+            .map(|s| SamplingParams { seed: s as u64, ..SamplingParams::production_default() })
+            .collect();
+        for s in 0..b {
+            svc.register(s as u64, &prompts[s], &params[s]);
+        }
+        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut iter = 0u64;
+        while streams.iter().any(|s| s.len() < total) {
+            let live: Vec<usize> =
+                (0..b).filter(|&s| streams[s].len() < total).collect();
+            let drafts: Vec<Vec<u32>> = live
+                .iter()
+                .map(|&s| {
+                    proposer.propose(params[s].seed, vocab, &prompts[s], &streams[s], k)
+                })
+                .collect();
+            let kmax = drafts.iter().map(Vec::len).max().unwrap_or(0);
+            let columns: Vec<ColumnMeta> = live
+                .iter()
+                .enumerate()
+                .map(|(col, &s)| ColumnMeta {
+                    col,
+                    seq_id: s as u64,
+                    iteration: streams[s].len() as u64,
+                })
+                .collect();
+            // view j: per-column logits at that column's decode_iter + j
+            let views: Vec<ShardedLogits> = (0..=kmax as u64)
+                .map(|j| {
+                    let keys: Vec<(u64, u64)> = live
+                        .iter()
+                        .map(|&s| (s as u64, streams[s].len() as u64 + j))
+                        .collect();
+                    gen.seq_view(&keys, 2)
+                })
+                .collect();
+            svc.submit(IterationTask {
+                iter,
+                views,
+                columns: Arc::new(columns),
+                pre: Arc::new(Vec::new()),
+                drafts: Arc::new(drafts),
+            });
+            let (decisions, _busy) = svc.collect(iter, live.len());
+            assert_eq!(decisions.len(), live.len());
+            for (col, seq, verdict) in decisions {
+                let _ = col;
+                streams[seq as usize].extend(&verdict.tokens);
+            }
+            iter += 1;
+        }
+        for s in 0..b as u64 {
+            svc.retire(s);
+        }
+        svc.shutdown();
+        for s in streams.iter_mut() {
+            s.truncate(total);
+        }
+        streams
+    }
+
+    #[test]
+    fn speculative_streams_bit_identical_across_k_and_m() {
+        // The tentpole's end-to-end service contract: verified speculative
+        // decode commits the same stream as plain decode for any window
+        // size k and any sampler count m.
+        let baseline = run_service_spec(1, 0, 24);
+        for (m, k) in [(1usize, 2usize), (2, 2), (4, 4), (2, 3)] {
+            let spec = run_service_spec(m, k, 24);
+            assert_eq!(spec, baseline, "m={m} k={k}");
+        }
     }
 
     #[test]
@@ -449,12 +559,12 @@ mod tests {
         svc.retire(7);
         // Iterating a retired sequence: no decision is produced for it.
         let view = logits_view(1, 32, 0, 1);
-        svc.submit(IterationTask {
-            iter: 0,
+        svc.submit(IterationTask::single(
+            0,
             view,
-            columns: Arc::new(vec![ColumnMeta { col: 0, seq_id: 7, iteration: 0 }]),
-            pre: Arc::new(Vec::new()),
-        });
+            vec![ColumnMeta { col: 0, seq_id: 7, iteration: 0 }],
+            Vec::new(),
+        ));
         let (decisions, _) = svc.collect(0, 0);
         assert!(decisions.is_empty());
         svc.shutdown();

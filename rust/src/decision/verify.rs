@@ -1,0 +1,336 @@
+//! Speculative-decoding verification in the decision plane (§5.3, §9).
+//!
+//! Given `k` draft tokens proposed for a sequence and the target-model
+//! logits at the `k+1` chain positions (the base position plus one per
+//! draft token), the verifier commits the **accepted draft prefix plus one
+//! corrected bonus token**, exactly as classic rejection-based speculative
+//! decoding does — specialized to a *deterministic* draft.
+//!
+//! # Exactness
+//!
+//! With a deterministic proposal `d_j` (a point-mass draft distribution),
+//! rejection verification reduces to: draw `y_j` from the full filtered
+//! target distribution `p_j` (the same inverse-CDF draw non-speculative
+//! decode performs, with the same `(seed, seq, decode_iter)`-keyed
+//! uniform), accept the draft iff `d_j == y_j`, and on rejection commit
+//! `y_j` itself as the corrected token. Acceptance happens with probability
+//! `p_j(d_j)` and the committed token is distributed as `p_j` *in every
+//! case* — the general accept-with-`min(1, p/q)`-else-residual scheme
+//! collapses to this when `q` is a point mass. Two consequences:
+//!
+//! 1. the per-position induced distribution equals the oracle full-V
+//!    filtered softmax (checked by `harness/exactness.rs`), and
+//! 2. the committed stream is **bit-identical** to non-speculative decode
+//!    for any `k` and any sampler count `m`, because position `j` reuses
+//!    decode iteration `base + j`'s uniforms against the same logits.
+//!
+//! # Batched verification with rollback
+//!
+//! All `k+1` positions are decided against the *draft* chain (their logits
+//! were produced by feeding draft tokens, so penalties/grammar must see the
+//! same prefix): the sequence's incremental history and grammar state are
+//! rolled forward one draft token at a time, each position decided with the
+//! truncation-first filtered pipeline, and then the state is **rolled
+//! back** past the first rejection ([`BatchHistory::pop_row`] /
+//! saved [`ConstraintState`]s) before the corrected token is applied.
+//! Decisions beyond the rejection point are discarded — their logits were
+//! conditioned on a prefix that never got committed.
+
+use super::grammar::{ConstraintState, GrammarConstraint};
+use super::penalties::BatchHistory;
+use super::pipeline::DecisionPipeline;
+use super::params::SamplingParams;
+use super::shvs::Precompute;
+use crate::tensor::ShardedLogits;
+use std::sync::Arc;
+
+/// The outcome of verifying one speculative window for one sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Verdict {
+    /// Tokens to commit, in order: the accepted draft prefix followed by
+    /// one corrected/bonus token. `1 ..= proposed + 1` tokens.
+    pub tokens: Vec<u32>,
+    /// Number of draft tokens accepted (`tokens.len() - 1`).
+    pub accepted: usize,
+    /// Number of draft tokens proposed (the window size `k`; 0 for a plain
+    /// non-speculative decision).
+    pub proposed: usize,
+}
+
+impl Verdict {
+    /// Convenience for the non-speculative single-token case.
+    pub fn single(token: u32) -> Verdict {
+        Verdict { tokens: vec![token], accepted: 0, proposed: 0 }
+    }
+}
+
+/// Sampler-local grammar state, as owned by a sampler worker per sequence.
+pub type GrammarSlot = Option<(Arc<GrammarConstraint>, ConstraintState)>;
+
+/// Verify one speculative window for the sequence owning column `col`.
+///
+/// `views[j]` holds the target logits for chain position `j` (`views[0]`
+/// is the base decode step; `views[j>0]` was produced by feeding
+/// `draft[j-1]`). `pre[j]` carries the per-column SHVS precompute for view
+/// `j` (may be empty). `hist` is the owner's single-column history;
+/// `grammar` its constraint state. Both are left advanced by exactly the
+/// committed tokens — roll-forward along the draft chain is undone past the
+/// rejection point. With an empty `draft` this degenerates to one plain
+/// decision (and is the code path every non-speculative iteration takes).
+#[allow(clippy::too_many_arguments)]
+pub fn verify_window(
+    pipeline: &mut DecisionPipeline,
+    views: &[ShardedLogits],
+    col: usize,
+    draft: &[u32],
+    hist: &mut BatchHistory,
+    grammar: &mut GrammarSlot,
+    params: &SamplingParams,
+    pre: &[Vec<Precompute>],
+    seq_id: u64,
+    base_iter: u64,
+) -> Verdict {
+    assert!(!views.is_empty(), "verify_window needs at least the base view");
+    let k = draft.len().min(views.len() - 1);
+    let mut decided: Vec<u32> = Vec::with_capacity(k + 1);
+    // Grammar states saved before each draft roll-forward, for rollback.
+    let mut grammar_stack: Vec<ConstraintState> = Vec::with_capacity(k);
+
+    for (j, view) in views.iter().enumerate().take(k + 1) {
+        // Structured decoding: restrict to grammar-viable tokens at the
+        // rolled-forward state (exact allow-list path).
+        let owned;
+        let params_j = match grammar.as_ref() {
+            Some((g, state)) => {
+                let allowed = g.allowed_tokens(*state);
+                if allowed.is_empty() {
+                    params
+                } else {
+                    owned = SamplingParams {
+                        allowed_tokens: Some(allowed),
+                        ..params.clone()
+                    };
+                    &owned
+                }
+            }
+            None => params,
+        };
+        let pre_j = pre.get(j).and_then(|p| p.get(col));
+        let d = pipeline.decide(
+            view,
+            col,
+            hist,
+            0, // single-column owner history
+            params_j,
+            pre_j,
+            seq_id,
+            base_iter + j as u64,
+        );
+        decided.push(d.token);
+        if j < k {
+            // Roll local metadata forward along the DRAFT chain: position
+            // j+1's logits are conditioned on draft[..=j], so its penalties
+            // and grammar mask must be too.
+            if let Some((g, state)) = grammar.as_mut() {
+                grammar_stack.push(*state);
+                if let Some(next) = g.advance(*state, draft[j]) {
+                    *state = next;
+                }
+            }
+            hist.append_row(&[draft[j]]);
+        }
+    }
+
+    // Accepted prefix: the longest run where the target draw reproduced the
+    // draft. Everything after it was conditioned on a rejected prefix.
+    let mut accepted = 0usize;
+    while accepted < k && decided[accepted] == draft[accepted] {
+        accepted += 1;
+    }
+
+    // Rollback: un-count the rejected draft roll-forward.
+    for _ in accepted..k {
+        hist.pop_row();
+    }
+    if accepted < k {
+        if let Some((_, state)) = grammar.as_mut() {
+            *state = grammar_stack[accepted];
+        }
+    }
+
+    // Commit the corrected/bonus token into the local state. (The accepted
+    // prefix is already applied: its rows equal the committed tokens.)
+    let bonus = decided[accepted];
+    hist.append_row(&[bonus]);
+    if let Some((g, state)) = grammar.as_mut() {
+        if let Some(next) = g.advance(*state, bonus) {
+            *state = next;
+        }
+    }
+
+    decided.truncate(accepted + 1);
+    Verdict { tokens: decided, accepted, proposed: k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::draft::DraftProposer;
+    use crate::config::DecisionVariant;
+    use crate::harness::measure::LogitsGen;
+
+    const VOCAB: usize = 128;
+
+    /// Context-free synthetic data plane: logits keyed by decode_iter only,
+    /// so the spec chain's views are exactly what non-speculative decode
+    /// would see — the committed streams must then match bit-for-bit.
+    fn iter_views(gen: &LogitsGen, base: u64, n: usize) -> Vec<ShardedLogits> {
+        (0..n as u64).map(|j| gen.view(1, base + j, 2)).collect()
+    }
+
+    fn decode_plain(gen: &LogitsGen, params: &SamplingParams, steps: usize) -> Vec<u32> {
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 7);
+        let mut hist = BatchHistory::new(&[vec![1, 2, 3]], 256);
+        let mut out = Vec::new();
+        for it in 0..steps as u64 {
+            let view = gen.view(1, it, 2);
+            let d = pipe.decide(&view, 0, &hist, 0, params, None, 5, it);
+            hist.append_row(&[d.token]);
+            out.push(d.token);
+        }
+        out
+    }
+
+    fn decode_spec(
+        gen: &LogitsGen,
+        params: &SamplingParams,
+        steps: usize,
+        k: usize,
+    ) -> (Vec<u32>, usize, usize) {
+        let proposer = DraftProposer::new();
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 7);
+        let mut hist = BatchHistory::new(&[vec![1, 2, 3]], 256);
+        let mut grammar: GrammarSlot = None;
+        let mut out: Vec<u32> = Vec::new();
+        let (mut acc, mut prop) = (0usize, 0usize);
+        while out.len() < steps {
+            let base = out.len() as u64;
+            let draft = proposer.propose(params.seed, VOCAB, &[1, 2, 3], &out, k);
+            let views = iter_views(gen, base, draft.len() + 1);
+            let v = verify_window(
+                &mut pipe, &views, 0, &draft, &mut hist, &mut grammar, params, &[], 5,
+                base,
+            );
+            assert_eq!(v.tokens.len(), v.accepted + 1);
+            assert_eq!(v.tokens[..v.accepted], draft[..v.accepted]);
+            acc += v.accepted;
+            prop += v.proposed;
+            out.extend(&v.tokens);
+        }
+        out.truncate(steps);
+        (out, acc, prop)
+    }
+
+    #[test]
+    fn spec_streams_bit_identical_to_plain_decode() {
+        let gen = LogitsGen::new(VOCAB, 1.1, 21);
+        let params = SamplingParams::production_default();
+        let plain = decode_plain(&gen, &params, 40);
+        for k in [1usize, 2, 4, 7] {
+            let (spec, acc, prop) = decode_spec(&gen, &params, 40, k);
+            assert_eq!(spec, plain, "k={k}");
+            assert!(acc <= prop, "k={k}: accepted {acc} of {prop}");
+        }
+    }
+
+    #[test]
+    fn empty_draft_is_a_plain_decision() {
+        let gen = LogitsGen::new(VOCAB, 1.1, 3);
+        let params = SamplingParams::production_default();
+        let plain = decode_plain(&gen, &params, 12);
+        let (spec, acc, prop) = decode_spec(&gen, &params, 12, 0);
+        assert_eq!(spec, plain);
+        assert_eq!((acc, prop), (0, 0));
+    }
+
+    #[test]
+    fn history_matches_committed_tokens_after_rollback() {
+        // After every window the owner history must hold exactly the
+        // committed tokens — no residue from rejected draft roll-forward.
+        let gen = LogitsGen::new(VOCAB, 1.1, 9);
+        let params = SamplingParams::production_default();
+        let proposer = DraftProposer::new();
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 11);
+        let mut hist = BatchHistory::new(&[vec![4, 5]], 256);
+        let mut grammar: GrammarSlot = None;
+        let mut out: Vec<u32> = Vec::new();
+        for _ in 0..8 {
+            let base = out.len() as u64;
+            let draft = proposer.propose(0, VOCAB, &[4, 5], &out, 3);
+            let views = iter_views(&gen, base, draft.len() + 1);
+            let v = verify_window(
+                &mut pipe, &views, 0, &draft, &mut hist, &mut grammar, &params, &[], 2,
+                base,
+            );
+            out.extend(&v.tokens);
+            assert_eq!(hist.column(0), out, "history == committed stream");
+            assert_eq!(hist.seq(0).out_len(), out.len());
+        }
+    }
+
+    #[test]
+    fn grammar_state_rolls_back_past_rejection() {
+        use super::super::grammar::byte_tokenizer_table;
+        // Grammar [0-9]+ over the byte tokenizer; draft a token the grammar
+        // forbids — the verifier must reject it (the allow-list excludes
+        // it), commit a legal corrected token, and keep the grammar state
+        // consistent with the committed text only.
+        let vocab = 300;
+        let g = Arc::new(
+            GrammarConstraint::new(r"[0-9]+", byte_tokenizer_table(vocab)).unwrap(),
+        );
+        let start = g.start();
+        let mut grammar: GrammarSlot = Some((g.clone(), start));
+        let gen = LogitsGen::new(vocab, 1.1, 13);
+        let params = SamplingParams { temperature: 0.9, ..Default::default() };
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 5);
+        let mut hist = BatchHistory::new(&[vec![1]], 64);
+        let tok_x = 3 + 'x' as u32; // illegal under the grammar
+        let views = iter_views(&gen, 0, 3);
+        let v = verify_window(
+            &mut pipe,
+            &views,
+            0,
+            &[tok_x, tok_x],
+            &mut hist,
+            &mut grammar,
+            &params,
+            &[],
+            1,
+            0,
+        );
+        assert_eq!(v.accepted, 0, "grammar-illegal draft cannot be accepted");
+        assert_eq!(v.tokens.len(), 1);
+        let digit = v.tokens[0];
+        assert!((3 + '0' as u32..=3 + '9' as u32).contains(&digit), "token {digit}");
+        // state must equal start advanced by exactly the committed token
+        let expect = g.advance(start, digit).unwrap();
+        assert_eq!(grammar.unwrap().1, expect);
+        assert_eq!(hist.column(0), vec![digit]);
+    }
+
+    #[test]
+    fn acceptance_is_nonzero_for_self_repeating_streams() {
+        // Zipf-headed logits + greedy-ish temperature repeat tokens often;
+        // the n-gram proposer must then win a useful share of acceptances.
+        let gen = LogitsGen::new(VOCAB, 1.4, 2);
+        let params = SamplingParams {
+            temperature: 0.3,
+            top_k: 8,
+            ..SamplingParams::default()
+        };
+        let (_, acc, prop) = decode_spec(&gen, &params, 120, 3);
+        assert!(prop > 0);
+        assert!(acc > 0, "no draft token ever accepted over {prop} proposals");
+    }
+}

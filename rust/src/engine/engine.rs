@@ -13,17 +13,30 @@
 //! right after the forward — the serial last-stage epilogue the paper's
 //! baselines exhibit — so both architectures are measurable end to end on
 //! the same host.
+//!
+//! **Speculative decoding** (`cfg.spec_k > 0`, DESIGN.md §7): each
+//! iteration the engine drafts up to `k` tokens per decision-needing slot
+//! (deterministic self-drafting), runs `k` extra chained decode steps
+//! feeding the draft tokens, and ships all `k+1` logits views to the
+//! decision plane in one [`IterationTask`]. Samplers verify the window
+//! (accept-prefix + corrected bonus token, exact target distribution) and
+//! the scheduler commits 1..=k+1 tokens via `commit_multi`. Rejected draft
+//! positions leave stale KV rows that the next feed at the same position
+//! deterministically overwrites — the same idempotence argument as
+//! prefill-paused slots.
 
 use crate::config::{DecisionVariant, EngineConfig};
+use crate::decision::draft::DraftProposer;
 use crate::decision::penalties::BatchHistory;
 use crate::decision::service::{ColumnMeta, IterationTask, SamplerService};
+use crate::decision::verify::{verify_window, GrammarSlot, Verdict};
 use crate::decision::{DecisionPipeline, HotVocab, Precompute};
 use crate::engine::kvcache::KvAllocator;
 use crate::engine::request::Request;
 use crate::engine::scheduler::{Scheduler, SchedulerConfig};
 use crate::metrics::Recorder;
 use crate::runtime::ModelRuntime;
-use crate::tensor::{shard_row_major, Tensor2};
+use crate::tensor::{shard_row_major, ShardedLogits, Tensor2};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -40,6 +53,18 @@ pub struct PjrtEngine {
     t0: Instant,
     variant: DecisionVariant,
     max_seq_len: usize,
+    /// Speculative window size (0 = off) and its draft proposer.
+    spec_k: usize,
+    proposer: DraftProposer,
+    /// Speculation tallies over windows with at least one draft token:
+    /// draft tokens accepted *and committed* / proposed, total committed
+    /// tokens (accepted + bonus, after any EOS/KV/preemption cut), and
+    /// window count. Committed tokens per decision step =
+    /// spec_committed / spec_windows.
+    pub spec_accepted: u64,
+    pub spec_proposed: u64,
+    pub spec_committed: u64,
+    pub spec_windows: u64,
     /// (fast_path_hits, decisions) tallies from the service at shutdown.
     pub sampler_stats: Vec<crate::decision::service::SamplerStats>,
 }
@@ -104,6 +129,12 @@ impl PjrtEngine {
             t0: Instant::now(),
             variant,
             max_seq_len,
+            spec_k: cfg.spec_k,
+            proposer: DraftProposer::new(),
+            spec_accepted: 0,
+            spec_proposed: 0,
+            spec_committed: 0,
+            spec_windows: 0,
             sampler_stats: Vec::new(),
         }
     }
@@ -166,8 +197,39 @@ impl PjrtEngine {
             }
         }
 
-        // ① GPU compute (PJRT decode step).
+        // Draft proposals for decision-needing slots (speculative windows,
+        // indexed by slot; empty = plain single decision).
         let b = self.runtime.batch();
+        let vocab = self.runtime.vocab();
+        let mut drafts_by_slot: Vec<Vec<u32>> = vec![Vec::new(); b];
+        if self.spec_k > 0 {
+            for sp in &plan.slots {
+                if !sp.needs_decision {
+                    continue;
+                }
+                let seq = self.scheduler_seq(sp.slot).unwrap();
+                let k = DraftProposer::clamp_window(
+                    self.spec_k,
+                    seq.request.max_new_tokens,
+                    seq.output.len(),
+                    self.max_seq_len,
+                    sp.position,
+                );
+                if k == 0 {
+                    continue;
+                }
+                drafts_by_slot[sp.slot] = self.proposer.propose(
+                    seq.request.params.seed,
+                    vocab,
+                    &seq.request.prompt,
+                    &seq.output,
+                    k,
+                );
+            }
+        }
+        let kmax = drafts_by_slot.iter().map(Vec::len).max().unwrap_or(0);
+
+        // ① GPU compute (PJRT decode steps: base + one per draft position).
         let mut ids = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut tau = vec![1.0f32; b];
@@ -195,108 +257,136 @@ impl PjrtEngine {
                 positions[slot] = seq.position as i32;
             }
         }
+        // ②③ vocabulary-major TP-sharded views (the "logits writes"), one
+        // per chain position, with per-view SHVS precompute.
+        let mut views: Vec<ShardedLogits> = Vec::with_capacity(kmax + 1);
+        let mut pre_views: Vec<Vec<Precompute>> = Vec::with_capacity(kmax + 1);
         let fwd_start = self.now();
-        let out = self.runtime.step(&ids, &positions, &tau)?;
+        for j in 0..=kmax {
+            if j > 0 {
+                // Chain step j: speculating slots feed draft token j−1 at
+                // the next position; all other slots re-feed their current
+                // (token, position) — KV-idempotent, logits ignored.
+                for sp in &plan.slots {
+                    let draft = &drafts_by_slot[sp.slot];
+                    if draft.len() >= j {
+                        ids[sp.slot] = draft[j - 1] as i32;
+                        positions[sp.slot] = (sp.position + j) as i32;
+                    }
+                }
+            }
+            let out = self.runtime.step(&ids, &positions, &tau)?;
+            let logits = Tensor2::from_vec(b, vocab, out.logits);
+            views.push(shard_row_major(&logits, self.tp_shards));
+            pre_views.push(
+                out.stats
+                    .iter()
+                    .map(|s| Precompute {
+                        z_max: s[0],
+                        tail_sum: s[2] as f64,
+                        tail_max_w: s[3] as f64,
+                    })
+                    .collect(),
+            );
+        }
         let fwd_end = self.now();
         self.recorder.on_busy("gpu", fwd_start, fwd_end);
 
-        // ②③ vocabulary-major TP-sharded view (the "logits write").
-        let vocab = self.runtime.vocab();
-        let logits = Tensor2::from_vec(b, vocab, out.logits);
-        let view = shard_row_major(&logits, self.tp_shards);
-        let pre: Vec<Precompute> = out
-            .stats
-            .iter()
-            .map(|s| Precompute {
-                z_max: s[0],
-                tail_sum: s[2] as f64,
-                tail_max_w: s[3] as f64,
-            })
-            .collect();
-
-        // ④⑤ decision plane.
-        let decision_cols: Vec<ColumnMeta> = plan
-            .slots
-            .iter()
-            .filter(|sp| sp.needs_decision)
-            .map(|sp| ColumnMeta {
+        // ④⑤ decision plane: one task carries the whole chain.
+        let mut decision_cols: Vec<ColumnMeta> = Vec::new();
+        let mut col_drafts: Vec<Vec<u32>> = Vec::new();
+        for sp in plan.slots.iter().filter(|sp| sp.needs_decision) {
+            decision_cols.push(ColumnMeta {
                 col: sp.slot,
                 seq_id: sp.seq_id,
                 iteration: sp.decode_iter,
-            })
-            .collect();
-        let mut decided: Vec<(usize, u64, u32)> = Vec::new();
+            });
+            col_drafts.push(std::mem::take(&mut drafts_by_slot[sp.slot]));
+        }
+        let mut decided: Vec<(usize, u64, Verdict)> = Vec::new();
         if !decision_cols.is_empty() {
             if self.service.is_some() {
-                {
-                    let svc = self.service.as_ref().unwrap();
-                    let iter = plan.iter;
-                    let n = decision_cols.len();
-                    svc.submit(IterationTask {
-                        iter,
-                        view,
-                        columns: Arc::new(decision_cols),
-                        pre: Arc::new(pre),
-                    });
-                    let (decisions, busy) = svc.collect(iter, n);
-                    let t = self.now();
-                    self.recorder.on_busy("cpu", t - busy, t);
-                    for (col, seq, d) in decisions {
-                        decided.push((col, seq, d.token));
-                    }
-                }
+                let svc = self.service.as_ref().unwrap();
+                let iter = plan.iter;
+                let n = decision_cols.len();
+                svc.submit(IterationTask {
+                    iter,
+                    views,
+                    columns: Arc::new(decision_cols),
+                    pre: Arc::new(pre_views),
+                    drafts: Arc::new(col_drafts),
+                });
+                let (decisions, busy) = svc.collect(iter, n);
+                let t = self.now();
+                self.recorder.on_busy("cpu", t - busy, t);
+                decided = decisions;
             } else {
-                {
-                    // Serial GPU-epilogue baseline: decide inline, single
-                    // thread, naive full-V kernels.
-                    let ep_start = self.t0.elapsed().as_secs_f64();
-                    for meta in &decision_cols {
-                        let params = self
-                            .scheduler
-                            .slot(meta.col)
-                            .unwrap()
-                            .request
-                            .params
-                            .clone();
-                        let hist = self.inline_hist.get(&meta.seq_id).expect("registered");
-                        let pipe = self.inline_pipe.as_mut().unwrap();
-                        let d = pipe.decide(
-                            &view,
-                            meta.col,
-                            hist,
-                            0, // single-column history per sequence
-                            &params,
-                            None,
-                            meta.seq_id,
-                            meta.iteration,
-                        );
-                        decided.push((meta.col, meta.seq_id, d.token));
-                    }
-                    let ep_end = self.t0.elapsed().as_secs_f64();
-                    // the epilogue extends the GPU stage (the holdout!)
-                    self.recorder.on_busy("gpu", ep_start, ep_end);
-                    for &(_, seq, token) in &decided {
-                        if let Some(h) = self.inline_hist.get_mut(&seq) {
-                            h.append_row(&[token]);
-                        }
-                    }
+                // Serial GPU-epilogue baseline: verify inline, single
+                // thread, naive full-V kernels (no grammar support on this
+                // path, matching the pre-speculation behavior).
+                let ep_start = self.t0.elapsed().as_secs_f64();
+                for (meta, draft) in decision_cols.iter().zip(&col_drafts) {
+                    let params = self
+                        .scheduler
+                        .slot(meta.col)
+                        .unwrap()
+                        .request
+                        .params
+                        .clone();
+                    let hist =
+                        self.inline_hist.get_mut(&meta.seq_id).expect("registered");
+                    let pipe = self.inline_pipe.as_mut().unwrap();
+                    let mut grammar: GrammarSlot = None;
+                    let verdict = verify_window(
+                        pipe,
+                        &views,
+                        meta.col,
+                        draft,
+                        hist,
+                        &mut grammar,
+                        &params,
+                        &[],
+                        meta.seq_id,
+                        meta.iteration,
+                    );
+                    decided.push((meta.col, meta.seq_id, verdict));
                 }
+                let ep_end = self.t0.elapsed().as_secs_f64();
+                // the epilogue extends the GPU stage (the holdout!)
+                self.recorder.on_busy("gpu", ep_start, ep_end);
             }
         }
 
-        // ⑥ commit + retire (+ preempt under KV pressure).
+        // ⑥ commit + retire (+ preempt under KV pressure). A verdict
+        // commits 1..=k+1 tokens; the scheduler cuts the window at EOS /
+        // max_new_tokens / KV pressure.
         let t_commit = self.now();
-        for (slot, seq_id, token) in decided {
+        for (slot, seq_id, verdict) in decided {
             // a commit earlier in this loop may have preempted this slot's
-            // sequence; its token is discarded and re-sampled (identically,
-            // by the deterministic RNG keying) after resume
+            // sequence; its verdict is discarded and re-derived
+            // (identically, by the deterministic RNG keying) after resume
             if self.scheduler.slot(slot).map(|s| s.request.id) != Some(seq_id) {
                 continue;
             }
-            let outcome = self.scheduler.commit(slot, token);
-            // the committed token survives even a self-preemption (it is
-            // carried into the waiting queue for replay), so record it
-            self.recorder.on_token(seq_id, t_commit);
+            let outcome = self.scheduler.commit_multi(slot, &verdict.tokens);
+            if verdict.proposed > 0 {
+                // tally COMMITTED acceptances: a window cut by EOS / the KV
+                // ceiling / self-preemption discards its accepted suffix
+                // (re-verified identically after resume), which must not
+                // inflate the reported tokens-per-step
+                self.spec_windows += 1;
+                self.spec_proposed += verdict.proposed as u64;
+                self.spec_committed += outcome.committed as u64;
+                // committed tokens are accepted drafts except the bonus, so
+                // a window cut before its bonus committed exactly
+                // `outcome.committed` accepted drafts
+                self.spec_accepted += verdict.accepted.min(outcome.committed) as u64;
+            }
+            // committed tokens survive even a self-preemption (they are
+            // carried into the waiting queue for replay), so record them
+            for _ in 0..outcome.committed {
+                self.recorder.on_token(seq_id, t_commit);
+            }
             for (vslot, vid) in outcome.preempted {
                 // evicted under KV pressure: drop decision-plane state and
                 // clear the data-plane KV slot; the sequence re-enters via

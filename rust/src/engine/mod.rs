@@ -11,4 +11,6 @@ pub mod tokenizer;
 pub use engine::PjrtEngine;
 pub use kvcache::KvAllocator;
 pub use request::{Phase, Request, Sequence};
-pub use scheduler::{CommitOutcome, Scheduler, SchedulerConfig, SchedulingOutput, SlotPlan};
+pub use scheduler::{
+    CommitOutcome, MultiCommitOutcome, Scheduler, SchedulerConfig, SchedulingOutput, SlotPlan,
+};

@@ -91,6 +91,117 @@ impl LogitsGen {
     pub fn seq_view(&self, cols: &[(u64, u64)], shards: usize) -> ShardedLogits {
         shard_row_major(&self.seq_batch_logits(cols), shards)
     }
+
+    /// Row-major [batch, V] logits keyed by `(seq_id, decode_iter, fed
+    /// token)` — the context-SENSITIVE synthetic data plane. Speculative
+    /// decoding needs it: a draft chain position fed a *rejected* token
+    /// must see different logits than the true continuation would, so any
+    /// bug that commits past the accept point breaks stream determinism
+    /// loudly instead of being masked by context-free logits.
+    pub fn ctx_batch_logits(&self, cols: &[(u64, u64, u32)]) -> Tensor2 {
+        let mut data = vec![0.0f32; cols.len() * self.vocab];
+        for (b, &(seq_id, decode_iter, fed)) in cols.iter().enumerate() {
+            let mut rng = Philox::at(
+                self.seed ^ 0xC07E,
+                ((seq_id as u128) << 72)
+                    | ((decode_iter as u128) << 40)
+                    | ((fed as u128) << 8),
+            );
+            let row = &mut data[b * self.vocab..(b + 1) * self.vocab];
+            for (id, z) in row.iter_mut().enumerate() {
+                let rank = self.rank_of_id[id] as f64;
+                *z = (-self.zipf_s * (rank + 2.0).ln()) as f32
+                    + rng.next_normal() as f32 * 0.7;
+            }
+        }
+        Tensor2::from_vec(cols.len(), self.vocab, data)
+    }
+
+    /// Sharded view of [`Self::ctx_batch_logits`].
+    pub fn ctx_view(&self, cols: &[(u64, u64, u32)], shards: usize) -> ShardedLogits {
+        shard_row_major(&self.ctx_batch_logits(cols), shards)
+    }
+}
+
+/// Build the `kmax+1` context-keyed chain views for one iteration's
+/// decision columns — THE convention `verify_window` indexes by, held in
+/// one place for every offline driver (churn tests, property tests,
+/// acceptance measurement): `views[j]` holds, for each column, logits
+/// keyed `(seq, base_iter + j, fed token)`, where `fed` is the column's
+/// base input token at `j = 0` and its draft token `j−1` beyond (clamped
+/// for columns with shorter windows, which never read those views).
+///
+/// `cols[ci] = (seq_id, base_decode_iter, base_input_token)`, aligned with
+/// `drafts[ci]`.
+pub fn chain_views(
+    gen: &LogitsGen,
+    cols: &[(u64, u64, u32)],
+    drafts: &[Vec<u32>],
+    shards: usize,
+) -> Vec<ShardedLogits> {
+    assert_eq!(cols.len(), drafts.len(), "one draft window per column");
+    let kmax = drafts.iter().map(Vec::len).max().unwrap_or(0);
+    (0..=kmax)
+        .map(|j| {
+            let keys: Vec<(u64, u64, u32)> = cols
+                .iter()
+                .zip(drafts)
+                .map(|(&(seq, base, fed0), d)| {
+                    let fed = if j == 0 || d.is_empty() {
+                        fed0
+                    } else {
+                        d[(j - 1).min(d.len() - 1)]
+                    };
+                    (seq, base + j as u64, fed)
+                })
+                .collect();
+            gen.ctx_view(&keys, shards)
+        })
+        .collect()
+}
+
+/// Measured per-position draft acceptance under verified speculative
+/// decoding: runs the REAL proposer + verifier (never modelled) over a
+/// self-drafted decode on the synthetic data plane, and reports
+/// accepted/proposed. This is the `accept_rate` the simulator's
+/// `DecisionMode::SpecVerify` is injected with.
+pub fn measure_spec_acceptance(vocab: usize, k: usize, steps: u64) -> f64 {
+    if k == 0 || steps == 0 {
+        return 0.0;
+    }
+    let gen = LogitsGen::new(vocab, 1.2, 23);
+    let proposer = crate::decision::draft::DraftProposer::new();
+    let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 3);
+    let params = SamplingParams::production_default();
+    let prompt = vec![1u32, 2, 3];
+    let cap = (steps as usize) * (k + 2) + 8;
+    let mut hist = BatchHistory::new(&[prompt.clone()], cap);
+    let mut grammar: crate::decision::verify::GrammarSlot = None;
+    let mut out: Vec<u32> = Vec::new();
+    let (mut acc, mut prop) = (0u64, 0u64);
+    for _ in 0..steps {
+        let base = out.len() as u64;
+        let draft = proposer.propose(params.seed, vocab, &prompt, &out, k);
+        let fed0 = out.last().copied().unwrap_or(prompt[prompt.len() - 1]);
+        let views = chain_views(
+            &gen,
+            &[(0, base, fed0)],
+            std::slice::from_ref(&draft),
+            1,
+        );
+        let v = crate::decision::verify::verify_window(
+            &mut pipe, &views, 0, &draft, &mut hist, &mut grammar, &params, &[], 0,
+            base,
+        );
+        acc += v.accepted as u64;
+        prop += v.proposed as u64;
+        out.extend(&v.tokens);
+    }
+    if prop == 0 {
+        0.0
+    } else {
+        acc as f64 / prop as f64
+    }
 }
 
 /// Measured per-variant decision costs (seconds per sequence).
@@ -289,6 +400,25 @@ mod tests {
         // deterministic
         let a2 = gen.batch_logits(2, 0);
         assert_eq!(a.row(0), a2.row(0));
+    }
+
+    #[test]
+    fn ctx_view_distinguishes_fed_tokens() {
+        // Same (seq, iter) but a different fed token ⇒ different logits —
+        // the property that makes spec-decode differential tests honest.
+        let gen = LogitsGen::new(400, 1.1, 6);
+        let a = gen.ctx_batch_logits(&[(3, 5, 10)]);
+        let b = gen.ctx_batch_logits(&[(3, 5, 11)]);
+        let c = gen.ctx_batch_logits(&[(3, 5, 10)]);
+        assert_ne!(a.row(0), b.row(0), "fed token must perturb the logits");
+        assert_eq!(a.row(0), c.row(0), "deterministic in the key");
+    }
+
+    #[test]
+    fn spec_acceptance_is_a_probability() {
+        let alpha = measure_spec_acceptance(512, 3, 60);
+        assert!((0.0..=1.0).contains(&alpha), "alpha {alpha}");
+        assert_eq!(measure_spec_acceptance(512, 0, 60), 0.0);
     }
 
     #[test]

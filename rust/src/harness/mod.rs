@@ -52,10 +52,11 @@ impl Effort {
 }
 
 /// All experiment ids, in paper order, plus repo-native scenarios beyond
-/// the paper (currently `burst`: tail latency under bursty arrivals).
+/// the paper (`burst`: tail latency under bursty arrivals; `specdec`:
+/// verified speculative decoding vs draft window size).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-    "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst",
+    "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst", "specdec",
 ];
 
 /// Run one experiment by id.
@@ -73,6 +74,7 @@ pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
         "fig9" => e2e::utilization("fig9", "cpu", effort),
         "table3" => e2e::table3(effort),
         "burst" => e2e::burst(effort),
+        "specdec" => e2e::specdec(effort),
         "fig10" => micro::fig10(effort),
         "fig11" => micro::fig11(effort),
         "fig12" => micro::fig12(effort),

@@ -29,6 +29,7 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("seed", "engine seed"),
     OptSpec::value("batch_per_gpu", "microbatch per GPU (sim)"),
     OptSpec::value("max_seq_len", "max sequence length"),
+    OptSpec::value("spec_k", "speculative draft window per iteration (serve; 0 = off)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),
     OptSpec::flag("full", "full effort (paper-scale sweeps)"),
     OptSpec::flag("help", "show help"),
@@ -101,6 +102,12 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
     }
     let summary = engine.run_until_idle()?;
     println!("{}", summary.to_json().to_string_pretty());
+    if engine.spec_windows > 0 {
+        println!(
+            "speculative decoding: {}/{} drafts accepted over {} windows",
+            engine.spec_accepted, engine.spec_proposed, engine.spec_windows
+        );
+    }
     let (_, stats) = engine.shutdown();
     let decisions: u64 = stats.iter().map(|s| s.decisions).sum();
     let fast: u64 = stats.iter().map(|s| s.fast_path_hits).sum();

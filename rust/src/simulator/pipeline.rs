@@ -19,6 +19,19 @@ pub enum DecisionMode {
     /// SIMPLE: sequence-parallel CPU sampling overlapped with the forward;
     /// it binds only when slower than the pipeline cycle.
     SimpleOverlapped { per_seq_s: f64, samplers: usize },
+    /// SIMPLE + speculative decoding verified in the decision plane
+    /// (DESIGN.md §7): each iteration feeds a `k`-token draft chain through
+    /// the forward (one weight pass, k+1 tokens of GEMM/KV work) and the
+    /// samplers verify all k+1 positions. `accept_rate` is the *measured*
+    /// per-position draft acceptance probability (never modelled — see
+    /// `harness::measure::measure_spec_acceptance`); a sequence commits
+    /// `1 + LeadingAccepts(k, accept_rate)` tokens per iteration.
+    SpecVerify {
+        per_seq_s: f64,
+        samplers: usize,
+        k: usize,
+        accept_rate: f64,
+    },
 }
 
 impl DecisionMode {
@@ -31,6 +44,19 @@ impl DecisionMode {
                 let m = samplers.max(1) as f64;
                 (batch as f64 / m).ceil() * per_seq_s
             }
+            DecisionMode::SpecVerify { per_seq_s, samplers, k, .. } => {
+                // batched verification decides every chain position
+                let m = samplers.max(1) as f64;
+                (batch as f64 / m).ceil() * per_seq_s * (k + 1) as f64
+            }
+        }
+    }
+
+    /// The speculative window shape, if any: (k, accept_rate).
+    pub fn spec_shape(&self) -> Option<(usize, f64)> {
+        match *self {
+            DecisionMode::SpecVerify { k, accept_rate, .. } => Some((k, accept_rate)),
+            _ => None,
         }
     }
 }
@@ -66,22 +92,25 @@ pub fn decode_iteration(
     let p = gpu.parallel.pp;
     let stage = gpu.stage_compute_s(batch, ctx);
     let comm = gpu.pp_comm_s(batch);
-    let simple = matches!(mode, DecisionMode::SimpleOverlapped { .. });
+    let simple = matches!(
+        mode,
+        DecisionMode::SimpleOverlapped { .. } | DecisionMode::SpecVerify { .. }
+    );
     let fanout = gpu.fanout_s(simple);
 
-    let (cycle, gpu_sampling, cpu_decision) = match mode {
+    let (cycle, gpu_sampling, cpu_decision, stage_eff, comm_eff) = match mode {
         DecisionMode::GpuEpilogue => {
             let samp = gpu.gpu_sampling_s(batch);
             // Eq. 4: the last stage carries compute + sampling; the cycle is
             // pinned at the stage maximum, plus the synchronous host gap.
             let last = stage + samp;
-            (last + comm + fanout + gpu.data.baseline_sync_s, samp, 0.0)
+            (last + comm + fanout + gpu.data.baseline_sync_s, samp, 0.0, stage, comm)
         }
         DecisionMode::CpuSerial { .. } => {
             // Offloaded but NOT overlapped: decision wall time serializes
             // after the forward each iteration (still a synchronous stack).
             let d = mode.decision_wall_s(batch);
-            (stage + comm + fanout + gpu.data.baseline_sync_s + d, 0.0, d)
+            (stage + comm + fanout + gpu.data.baseline_sync_s + d, 0.0, d, stage, comm)
         }
         DecisionMode::SimpleOverlapped { .. } => {
             // Overlapped: the decision plane runs under the next forward;
@@ -89,7 +118,18 @@ pub fn decode_iteration(
             // the host gap.
             let d = mode.decision_wall_s(batch);
             let gpu_cycle = stage + comm + fanout + gpu.data.simple_sync_s;
-            (gpu_cycle.max(d), 0.0, d)
+            (gpu_cycle.max(d), 0.0, d, stage, comm)
+        }
+        DecisionMode::SpecVerify { k, .. } => {
+            // Draft chain: one weight pass but k+1 tokens of GEMM / KV /
+            // collective work per sequence — the roofline's weight-read
+            // term is batch-independent, so the multi-token chain reuses
+            // it while the per-token terms scale with the chain length.
+            let chain_stage = gpu.stage_compute_s(batch * (k + 1), ctx);
+            let chain_comm = gpu.pp_comm_s(batch * (k + 1));
+            let d = mode.decision_wall_s(batch);
+            let gpu_cycle = chain_stage + chain_comm + fanout + gpu.data.simple_sync_s;
+            (gpu_cycle.max(d), 0.0, d, chain_stage, chain_comm)
         }
     };
 
@@ -97,17 +137,20 @@ pub fn decode_iteration(
     let sampling_fraction = match mode {
         DecisionMode::GpuEpilogue => gpu_sampling / cycle,
         DecisionMode::CpuSerial { .. } => cpu_decision / cycle,
-        DecisionMode::SimpleOverlapped { .. } => {
+        DecisionMode::SimpleOverlapped { .. } | DecisionMode::SpecVerify { .. } => {
             // visible share: only the non-hidden part
-            ((cpu_decision - (stage + comm)).max(0.0)) / cycle
+            ((cpu_decision - (stage_eff + comm_eff)).max(0.0)) / cycle
         }
     };
 
-    // Bubbles: every stage is busy `stage` per cycle (the baseline's last
-    // stage additionally runs the sampling epilogue while the others idle).
+    // Bubbles: every stage is busy `stage_eff` per cycle (the baseline's
+    // last stage additionally runs the sampling epilogue while the others
+    // idle).
     let total_busy = match mode {
-        DecisionMode::GpuEpilogue => (p - 1) as f64 * stage + (stage + gpu_sampling),
-        _ => p as f64 * stage,
+        DecisionMode::GpuEpilogue => {
+            (p - 1) as f64 * stage_eff + (stage_eff + gpu_sampling)
+        }
+        _ => p as f64 * stage_eff,
     };
     let bubble_fraction = 1.0 - total_busy / (cycle * p as f64);
     // Mean GPU utilization across stages (what nvidia-smi style Figures 8
@@ -117,7 +160,7 @@ pub fn decode_iteration(
     let _ = total_sampling;
     IterationTiming {
         cycle_s: cycle,
-        stage_max_s: stage,
+        stage_max_s: stage_eff,
         gpu_sampling_s: gpu_sampling,
         cpu_decision_s: cpu_decision,
         sampling_fraction,
@@ -205,6 +248,52 @@ mod tests {
             512.0,
         );
         assert!(serial.cycle_s > overlapped.cycle_s);
+    }
+
+    #[test]
+    fn spec_verify_cycle_sublinear_in_k() {
+        // The draft chain reuses the weight pass: a k=3 iteration must cost
+        // well under 4 plain iterations (that headroom, times acceptance,
+        // is speculative decoding's whole win), yet more than one.
+        let g = gpu(4, 2);
+        let base = decode_iteration(
+            &g,
+            DecisionMode::SimpleOverlapped { per_seq_s: 10e-6, samplers: 64 },
+            256,
+            512.0,
+        );
+        let spec = decode_iteration(
+            &g,
+            DecisionMode::SpecVerify {
+                per_seq_s: 10e-6,
+                samplers: 64,
+                k: 3,
+                accept_rate: 0.6,
+            },
+            256,
+            512.0,
+        );
+        assert!(spec.cycle_s > base.cycle_s, "chain work is not free");
+        assert!(
+            spec.cycle_s < 4.0 * base.cycle_s,
+            "chain {} vs 4x plain {}",
+            spec.cycle_s,
+            4.0 * base.cycle_s
+        );
+    }
+
+    #[test]
+    fn spec_verify_decision_wall_scales_with_window() {
+        let m = DecisionMode::SpecVerify {
+            per_seq_s: 10e-6,
+            samplers: 16,
+            k: 3,
+            accept_rate: 0.5,
+        };
+        let plain = DecisionMode::SimpleOverlapped { per_seq_s: 10e-6, samplers: 16 };
+        assert!((m.decision_wall_s(64) - 4.0 * plain.decision_wall_s(64)).abs() < 1e-12);
+        assert_eq!(m.spec_shape(), Some((3, 0.5)));
+        assert_eq!(plain.spec_shape(), None);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use super::gpu::GpuModel;
 use super::pipeline::{decode_iteration, DecisionMode};
 use crate::metrics::Recorder;
+use crate::rng::Philox;
 use std::collections::VecDeque;
 
 /// One simulated request.
@@ -86,6 +87,11 @@ pub struct SimResult {
     pub host_mem_bytes: f64,
     /// KV-pressure evictions (recompute-on-resume).
     pub preemptions: u64,
+    /// Speculative decoding: total tokens committed by spec windows and the
+    /// number of windows (decode-sequence-iterations); their ratio is the
+    /// accepted-tokens-per-step the `specdec` scenario reports.
+    pub spec_tokens: u64,
+    pub spec_windows: u64,
 }
 
 impl SimResult {
@@ -109,6 +115,8 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     }
     let mut clock = 0.0f64;
     let mut iterations = 0u64;
+    let mut spec_tokens = 0u64;
+    let mut spec_windows = 0u64;
     // sampling/bubble fractions are decode-iteration means: pure-prefill
     // iterations (chunked mode, batch == 0) must not dilute them
     let mut decode_iters = 0u64;
@@ -231,16 +239,37 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
             recorder.on_busy("gpu", start, start + cycle);
         }
 
-        // Every fully-prefilled sequence emits one token this iteration.
+        // Every fully-prefilled sequence commits this iteration: one token,
+        // or 1 + LeadingAccepts(k, accept_rate) under speculative decoding
+        // (deterministic per (seq, context) — the accept run mirrors the
+        // verifier's prefix-accept semantics).
+        let spec = cfg.mode.spec_shape();
         let mut still_running = Vec::with_capacity(running.len());
         for mut s in running.drain(..) {
             if s.prefill_left > 0 {
                 still_running.push(s);
                 continue;
             }
-            recorder.on_token(s.id, clock);
-            s.ctx += 1;
-            s.remaining -= 1;
+            let commit = match spec {
+                Some((k, accept)) if k > 0 => {
+                    let mut rng =
+                        Philox::at(0x5bec ^ s.id, ((s.ctx as u128) << 32) | iterations as u128);
+                    let mut acc = 0usize;
+                    while acc < k && rng.next_f64() < accept {
+                        acc += 1;
+                    }
+                    let c = (1 + acc).min(s.remaining);
+                    spec_windows += 1;
+                    spec_tokens += c as u64;
+                    c
+                }
+                _ => 1,
+            };
+            for _ in 0..commit {
+                recorder.on_token(s.id, clock);
+            }
+            s.ctx += commit;
+            s.remaining -= commit;
             if s.remaining == 0 {
                 recorder.on_finish(s.id, clock);
             } else {
@@ -308,6 +337,8 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
         },
         host_mem_bytes,
         preemptions,
+        spec_tokens,
+        spec_windows,
     }
 }
 
@@ -484,6 +515,70 @@ mod tests {
             p95_chunked <= p95_legacy,
             "chunked P95 {p95_chunked} vs legacy {p95_legacy}"
         );
+    }
+
+    #[test]
+    fn spec_decode_completes_exactly_and_raises_throughput() {
+        // Small batch: decode sits squarely in the weight-bound regime,
+        // where the draft chain's extra per-token work hides under the
+        // weight pass — speculative decoding's winning regime.
+        let reqs = requests(150, None);
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        let mut plain_cfg =
+            cfg(DecisionMode::SimpleOverlapped { per_seq_s: 20e-6, samplers: 64 });
+        plain_cfg.slots = 32;
+        let plain = simulate(&plain_cfg, &reqs);
+        let mut spec_cfg = cfg(DecisionMode::SpecVerify {
+            per_seq_s: 20e-6,
+            samplers: 64,
+            k: 2,
+            accept_rate: 0.8,
+        });
+        spec_cfg.slots = 32;
+        let spec = simulate(&spec_cfg, &reqs);
+        // exactness: speculation changes timing, never token counts
+        assert_eq!(spec.recorder.total_tokens(), expected);
+        assert_eq!(spec.recorder.finished_requests(), 150);
+        assert_eq!(plain.recorder.total_tokens(), expected);
+        // accepted-tokens-per-step ∈ (1, k+1]
+        let per_step = spec.spec_tokens as f64 / spec.spec_windows as f64;
+        assert!(per_step > 1.2 && per_step <= 3.0, "tokens/step {per_step}");
+        assert_eq!(plain.spec_windows, 0);
+        // at 80% per-position acceptance the chain pays for itself
+        assert!(
+            spec.throughput() > plain.throughput(),
+            "spec {} !> plain {}",
+            spec.throughput(),
+            plain.throughput()
+        );
+        // fewer iterations: multi-token commits shrink the schedule
+        assert!(spec.iterations < plain.iterations);
+    }
+
+    #[test]
+    fn spec_decode_zero_accept_still_completes() {
+        // accept_rate 0: every window commits exactly the bonus token; the
+        // run degenerates to plain decode token-count-wise but pays the
+        // chain cost, so it must not be faster.
+        let reqs = requests(60, None);
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        let plain = simulate(
+            &cfg(DecisionMode::SimpleOverlapped { per_seq_s: 20e-6, samplers: 64 }),
+            &reqs,
+        );
+        let spec = simulate(
+            &cfg(DecisionMode::SpecVerify {
+                per_seq_s: 20e-6,
+                samplers: 64,
+                k: 4,
+                accept_rate: 0.0,
+            }),
+            &reqs,
+        );
+        assert_eq!(spec.recorder.total_tokens(), expected);
+        let per_step = spec.spec_tokens as f64 / spec.spec_windows as f64;
+        assert!((per_step - 1.0).abs() < 1e-9);
+        assert!(spec.throughput() <= plain.throughput() * 1.001);
     }
 
     #[test]

@@ -57,6 +57,11 @@ pub struct TraceConfig {
     /// Zipf exponent of prompt-token frequencies.
     pub zipf_s: f64,
     pub seed: u64,
+    /// Motif length for loopy prompts (0 = off): prompts cycle a small
+    /// per-request token motif, so trailing n-grams recur and self-drafting
+    /// (prompt-lookup) speculative decoding gets realistic hit rates —
+    /// the shape of templated/agentic traffic.
+    pub motif_len: usize,
 }
 
 impl TraceConfig {
@@ -76,6 +81,7 @@ impl TraceConfig {
             vocab,
             zipf_s: 1.05,
             seed: 0xC0FFEE,
+            motif_len: 0,
         }
     }
 
@@ -94,6 +100,18 @@ impl TraceConfig {
             vocab,
             zipf_s: 1.1,
             seed: 7,
+            motif_len: 0,
+        }
+    }
+
+    /// Loopy (motif-cycled) prompts at ShareGPT-like lengths: the
+    /// speculative-decoding-friendly workload (templated / agentic traffic
+    /// repeats n-grams, which prompt-lookup drafting exploits). Used by
+    /// `serve_e2e --loopy`.
+    pub fn loopy(num_requests: usize, vocab: usize, max_seq: usize) -> TraceConfig {
+        TraceConfig {
+            motif_len: 4,
+            ..Self::sharegpt_like(num_requests, vocab, max_seq)
         }
     }
 }
@@ -118,9 +136,24 @@ pub fn generate(cfg: &TraceConfig) -> Trace {
             .clamp(cfg.min_prompt, cfg.max_prompt);
         let olen = (rng.next_lognormal(cfg.output_mu, cfg.output_sigma) as usize)
             .clamp(cfg.min_output, cfg.max_output);
-        let prompt: Vec<u32> = (0..plen)
-            .map(|_| zipf.sample(&mut rng) as u32)
-            .collect();
+        let prompt: Vec<u32> = if cfg.motif_len > 0 {
+            // loopy prompt: cycle a per-request motif with occasional fresh
+            // tokens, so trailing n-grams repeat (templated-traffic shape)
+            let motif: Vec<u32> = (0..cfg.motif_len)
+                .map(|_| zipf.sample(&mut rng) as u32)
+                .collect();
+            (0..plen)
+                .map(|i| {
+                    if rng.next_f64() < 0.15 {
+                        zipf.sample(&mut rng) as u32
+                    } else {
+                        motif[i % motif.len()]
+                    }
+                })
+                .collect()
+        } else {
+            (0..plen).map(|_| zipf.sample(&mut rng) as u32).collect()
+        };
         let mut req = Request::new(id as u64, prompt, olen);
         req.params = SamplingParams {
             seed: id as u64,
@@ -280,6 +313,38 @@ mod tests {
         for (x, y) in a.requests.iter().zip(&b.requests) {
             assert_eq!(x.prompt, y.prompt);
             assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn loopy_prompts_repeat_their_trailing_ngrams() {
+        // The property speculative self-drafting relies on: in a loopy
+        // trace, the trailing bigram of most prompts has an earlier
+        // occurrence for prompt-lookup to match.
+        let loopy = generate(&TraceConfig::loopy(200, 10_000, 256));
+        let plain = generate(&TraceConfig::sharegpt_like(200, 10_000, 256));
+        let hit_rate = |t: &Trace| {
+            let mut hits = 0usize;
+            let mut eligible = 0usize;
+            for r in &t.requests {
+                let p = &r.prompt;
+                if p.len() < 4 {
+                    continue;
+                }
+                eligible += 1;
+                let tail = (p[p.len() - 2], p[p.len() - 1]);
+                if (1..p.len() - 1).any(|i| (p[i - 1], p[i]) == tail) {
+                    hits += 1;
+                }
+            }
+            hits as f64 / eligible.max(1) as f64
+        };
+        let (l, p) = (hit_rate(&loopy), hit_rate(&plain));
+        assert!(l > 0.6, "loopy bigram hit rate {l}");
+        assert!(l > p, "loopy {l} must beat plain {p}");
+        // still a valid trace: lengths, vocab bounds
+        for r in &loopy.requests {
+            assert!(r.prompt.iter().all(|&t| (t as usize) < 10_000));
         }
     }
 

@@ -9,7 +9,6 @@ use simple_serve::harness::measure::LogitsGen;
 use simple_serve::harness::{run_experiment, Effort, ALL_EXPERIMENTS};
 use simple_serve::simulator::{simulate, DecisionMode, GpuModel, SimConfig};
 use simple_serve::workload;
-use std::sync::Arc;
 
 #[test]
 fn service_sustains_many_iterations_with_churn() {
@@ -51,12 +50,7 @@ fn service_sustains_many_iterations_with_churn() {
             .enumerate()
             .map(|(col, &seq_id)| ColumnMeta { col, seq_id, iteration: iter })
             .collect();
-        svc.submit(IterationTask {
-            iter,
-            view,
-            columns: Arc::new(columns),
-            pre: Arc::new(pre),
-        });
+        svc.submit(IterationTask::single(iter, view, columns, pre));
         let (decisions, busy) = svc.collect(iter, live.len());
         assert_eq!(decisions.len(), live.len(), "iter {iter}");
         assert!(busy >= 0.0);
@@ -155,14 +149,14 @@ fn deterministic_service_streams_with_tp_sharded_views() {
                 &hot,
                 params.temperature,
             )];
-            svc.submit(IterationTask {
+            svc.submit(IterationTask::single(
                 iter,
                 view,
-                columns: Arc::new(vec![ColumnMeta { col: 0, seq_id: 0, iteration: iter }]),
-                pre: Arc::new(pre),
-            });
+                vec![ColumnMeta { col: 0, seq_id: 0, iteration: iter }],
+                pre,
+            ));
             let (d, _) = svc.collect(iter, 1);
-            out.push(d[0].2.token);
+            out.push(d[0].2.tokens[0]);
         }
         svc.retire(0);
         svc.shutdown();

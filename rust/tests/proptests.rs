@@ -4,14 +4,20 @@
 //! deterministic Philox-generated random cases; failures print the case
 //! seed for reproduction. Each property runs dozens-to-hundreds of cases.
 
+use simple_serve::config::{DecisionVariant, SamplerConfig};
+use simple_serve::decision::draft::DraftProposer;
 use simple_serve::decision::filter::{self, Truncated};
 use simple_serve::decision::penalties::{apply_penalties_dense, BatchHistory, SeqHistory};
+use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
 use simple_serve::decision::shvs::{Precompute, ShvsSampler};
-use simple_serve::decision::{HotVocab, SamplingParams};
+use simple_serve::decision::verify::{verify_window, GrammarSlot};
+use simple_serve::decision::{DecisionPipeline, HotVocab, SamplingParams};
 use simple_serve::engine::KvAllocator;
+use simple_serve::harness::measure::{chain_views, LogitsGen};
 use simple_serve::metrics::stats::total_variation_distance;
 use simple_serve::rng::Philox;
 use simple_serve::tensor::{shard_row_major, Tensor2};
+use std::sync::Arc;
 
 /// Run `n` cases of a property, feeding each a per-case RNG.
 fn props(name: &str, n: u64, mut prop: impl FnMut(&mut Philox)) {
@@ -210,6 +216,150 @@ fn prop_shvs_matches_oracle_distribution() {
         let oracle = dist_of(&t, vocab);
         let tvd = total_variation_distance(&counts, &oracle);
         assert!(tvd < 0.02, "tvd {tvd} (params {params:?})");
+    });
+}
+
+/// Drive a full SamplerService decode with speculative windows of size `k`
+/// over `m` samplers, on the context-SENSITIVE synthetic data plane
+/// (logits keyed by (seq, decode_iter, fed token) — a bug committing past
+/// the accept point changes the logits it sees and breaks the stream).
+/// Returns each sequence's first `total` committed tokens.
+fn spec_service_streams(
+    vocab: usize,
+    params_base: &SamplingParams,
+    m: usize,
+    k: usize,
+    total: usize,
+    gen_seed: u64,
+) -> Vec<Vec<u32>> {
+    let b = 3usize;
+    let gen = LogitsGen::new(vocab, 1.1, gen_seed);
+    let proposer = DraftProposer::new();
+    let cfg = SamplerConfig {
+        num_samplers: m,
+        variant: DecisionVariant::Offloading,
+        seed: 0xA11CE,
+        ..Default::default()
+    };
+    let svc = SamplerService::start(&cfg, None, 4 * total + 32);
+    let prompts: Vec<Vec<u32>> =
+        (0..b).map(|s| vec![(s % vocab) as u32, 1]).collect();
+    let params: Vec<SamplingParams> = (0..b)
+        .map(|s| SamplingParams { seed: params_base.seed ^ (s as u64) << 3, ..params_base.clone() })
+        .collect();
+    for s in 0..b {
+        svc.register(s as u64, &prompts[s], &params[s]);
+    }
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
+    let mut iter = 0u64;
+    while streams.iter().any(|s| s.len() < total) {
+        let live: Vec<usize> = (0..b).filter(|&s| streams[s].len() < total).collect();
+        let drafts: Vec<Vec<u32>> = live
+            .iter()
+            .map(|&s| proposer.propose(params[s].seed, vocab, &prompts[s], &streams[s], k))
+            .collect();
+        let columns: Vec<ColumnMeta> = live
+            .iter()
+            .enumerate()
+            .map(|(col, &s)| ColumnMeta {
+                col,
+                seq_id: s as u64,
+                iteration: streams[s].len() as u64,
+            })
+            .collect();
+        let col_keys: Vec<(u64, u64, u32)> = live
+            .iter()
+            .map(|&s| {
+                let fed0 = streams[s].last().copied().unwrap_or(prompts[s][1]);
+                (s as u64, streams[s].len() as u64, fed0)
+            })
+            .collect();
+        let views = chain_views(&gen, &col_keys, &drafts, 2);
+        svc.submit(IterationTask {
+            iter,
+            views,
+            columns: Arc::new(columns),
+            pre: Arc::new(Vec::new()),
+            drafts: Arc::new(drafts),
+        });
+        let (decisions, _busy) = svc.collect(iter, live.len());
+        assert_eq!(decisions.len(), live.len());
+        for (_, seq, verdict) in decisions {
+            assert!(verdict.tokens.len() == verdict.accepted + 1);
+            streams[seq as usize].extend(&verdict.tokens);
+        }
+        iter += 1;
+    }
+    for s in 0..b as u64 {
+        svc.retire(s);
+    }
+    svc.shutdown();
+    for s in streams.iter_mut() {
+        s.truncate(total);
+    }
+    streams
+}
+
+#[test]
+fn prop_spec_decode_streams_bit_identical_for_any_k_and_m() {
+    // The tentpole differential property: verified speculative decode is
+    // invisible in the tokens — for random sampler params (penalties,
+    // truncation combos), any window size k, and any sampler count m, the
+    // committed streams equal non-speculative single-sampler decode.
+    props("spec streams == plain", 8, |rng| {
+        let vocab = 64 + rng.next_below(200) as usize;
+        let mut params = random_params(rng, vocab);
+        params.seed = rng.next_u64();
+        let gen_seed = rng.next_u64();
+        let total = 12 + rng.next_below(10) as usize;
+        let baseline = spec_service_streams(vocab, &params, 1, 0, total, gen_seed);
+        let k = 1 + rng.next_below(4) as usize;
+        let m = 1 + rng.next_below(4) as usize;
+        let spec = spec_service_streams(vocab, &params, m, k, total, gen_seed);
+        assert_eq!(spec, baseline, "k={k} m={m} params={params:?}");
+    });
+}
+
+#[test]
+fn prop_verify_rollback_leaves_history_equal_to_commits() {
+    // Random (even adversarial garbage) drafts: after every window the
+    // owner history holds exactly the committed tokens — rejected
+    // roll-forward must leave zero residue in counts or rows.
+    props("verify rollback residue-free", 30, |rng| {
+        let vocab = 48 + rng.next_below(150) as usize;
+        let gen = LogitsGen::new(vocab, 1.1, rng.next_u64());
+        let mut params = random_params(rng, vocab);
+        params.seed = rng.next_u64();
+        let mut pipe = DecisionPipeline::new(DecisionVariant::Offloading, None, 3);
+        let prompt = vec![rng.next_below(vocab as u64) as u32];
+        let mut hist = BatchHistory::new(&[prompt.clone()], 256);
+        let mut grammar: GrammarSlot = None;
+        let mut out: Vec<u32> = Vec::new();
+        for _ in 0..6 {
+            let k = rng.next_below(5) as usize;
+            let draft: Vec<u32> =
+                (0..k).map(|_| rng.next_below(vocab as u64) as u32).collect();
+            let base = out.len() as u64;
+            let fed0 = out.last().copied().unwrap_or(prompt[0]);
+            let views = chain_views(
+                &gen,
+                &[(9, base, fed0)],
+                std::slice::from_ref(&draft),
+                1,
+            );
+            let v = verify_window(
+                &mut pipe, &views, 0, &draft, &mut hist, &mut grammar, &params, &[],
+                9, base,
+            );
+            assert_eq!(v.tokens[..v.accepted], draft[..v.accepted]);
+            out.extend(&v.tokens);
+            assert_eq!(hist.column(0), out);
+            assert_eq!(hist.seq(0).out_len(), out.len());
+            // incremental counts equal a from-scratch rebuild
+            for (&t, &c) in &hist.rebuild(0) {
+                assert_eq!(hist.seq(0).out_count(t), c);
+            }
+        }
     });
 }
 

@@ -1,22 +1,29 @@
 //! Scheduler-churn integration: a bursty open-loop trace driven through the
 //! preemptive continuous-batching scheduler *and* the sequence-parallel
 //! decision service together — admissions, chunked prefill, KV-pressure
-//! preemption, recompute-on-resume — without the PJRT runtime (no
-//! artifacts needed), asserting:
+//! preemption, recompute-on-resume, and speculative-decoding windows —
+//! without the PJRT runtime (no artifacts needed), asserting:
 //!
 //! - no slot or KV-block leaks after drain, for any sampler count `m`;
 //! - token-stream determinism across sampler counts *and* across
 //!   preemption (tight cache vs ample cache produce identical tokens);
-//! - chunked-prefill budgets change timing, never tokens.
+//! - chunked-prefill budgets change timing, never tokens;
+//! - verified speculative decode (`spec_k > 0`) commits bit-identical
+//!   streams for any window size, including preemption landing
+//!   mid-speculation (multi-token commits replay exactly).
 //!
-//! Logits come from [`LogitsGen::seq_view`], keyed by (seq, decode_iter)
-//! rather than batch position, mirroring a real model where logits depend
-//! on the sequence's tokens and not the slot it occupies.
+//! Logits come from [`LogitsGen::ctx_view`], keyed by (seq, decode_iter,
+//! fed token) rather than batch position: a real model's logits depend on
+//! the sequence's tokens, so a draft chain fed a rejected token sees
+//! *different* logits than the true continuation — any bug that commits
+//! past the accept point (or leaks rolled-back state) breaks the stream
+//! comparisons loudly.
 
 use simple_serve::config::{DecisionVariant, SamplerConfig};
+use simple_serve::decision::draft::DraftProposer;
 use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
 use simple_serve::engine::{KvAllocator, Scheduler, SchedulerConfig};
-use simple_serve::harness::measure::LogitsGen;
+use simple_serve::harness::measure::{chain_views, LogitsGen};
 use simple_serve::workload::{self, TraceConfig, TrafficPattern};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -29,12 +36,16 @@ const N_REQ: usize = 30;
 struct ChurnResult {
     streams: HashMap<u64, Vec<u32>>,
     preemptions: u64,
+    spec_accepted: u64,
+    spec_proposed: u64,
 }
 
-/// Drive the burst trace to drain through scheduler + service.
-fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig) -> ChurnResult {
+/// Drive the burst trace to drain through scheduler + service, speculating
+/// `spec_k` draft tokens per decode iteration (0 = plain decode).
+fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig, spec_k: usize) -> ChurnResult {
     let gen = LogitsGen::new(VOCAB, 1.1, 17);
     let hot = gen.hot_vocab(32).into_arc();
+    let proposer = DraftProposer::new();
     let svc_cfg = SamplerConfig {
         num_samplers: m,
         variant: DecisionVariant::Offloading,
@@ -54,6 +65,8 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig) -> ChurnResult {
     let mut clock = 0.0f64;
     let mut iter = 0u64;
     let mut guard = 0u32;
+    let mut spec_accepted = 0u64;
+    let mut spec_proposed = 0u64;
     while !sched.is_idle() {
         guard += 1;
         assert!(guard < 20_000, "scheduler+service stuck");
@@ -74,8 +87,35 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig) -> ChurnResult {
             sched.advance();
             continue;
         }
-        let keys: Vec<(u64, u64)> = cols.iter().map(|p| (p.seq_id, p.decode_iter)).collect();
-        let view = gen.seq_view(&keys, 2);
+        // Draft windows (clamped like the engine: the bonus token is the
+        // last that can commit; the chain stays inside the KV shape).
+        let drafts: Vec<Vec<u32>> = cols
+            .iter()
+            .map(|p| {
+                let seq = sched.slot(p.slot).unwrap();
+                let k = DraftProposer::clamp_window(
+                    spec_k,
+                    seq.request.max_new_tokens,
+                    seq.output.len(),
+                    MAX_SEQ,
+                    p.position,
+                );
+                proposer.propose(
+                    seq.request.params.seed,
+                    VOCAB,
+                    &seq.request.prompt,
+                    &seq.output,
+                    k,
+                )
+            })
+            .collect();
+        // Chain views: position j of a column is keyed by the token the
+        // data plane fed there (shared convention: measure::chain_views).
+        let col_keys: Vec<(u64, u64, u32)> = cols
+            .iter()
+            .map(|p| (p.seq_id, p.decode_iter, p.input_token))
+            .collect();
+        let views = chain_views(&gen, &col_keys, &drafts, 2);
         let columns: Vec<ColumnMeta> = cols
             .iter()
             .enumerate()
@@ -83,22 +123,25 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig) -> ChurnResult {
             .collect();
         svc.submit(IterationTask {
             iter,
-            view,
+            views,
             columns: Arc::new(columns),
             pre: Arc::new(Vec::new()),
+            drafts: Arc::new(drafts),
         });
         let (decisions, _busy) = svc.collect(iter, cols.len());
         assert_eq!(decisions.len(), cols.len(), "every column decided");
         iter += 1;
-        for (ci, seq_id, d) in decisions {
+        for (ci, seq_id, verdict) in decisions {
             let slot = cols[ci].slot;
             // a commit earlier in this loop may have preempted this slot's
-            // sequence: its decision is discarded and re-made (identically)
-            // after resume
+            // sequence: its verdict is discarded and re-derived
+            // (identically) after resume
             if sched.slot(slot).map(|s| s.request.id) != Some(seq_id) {
                 continue;
             }
-            let out = sched.commit(slot, d.token);
+            spec_accepted += verdict.accepted as u64;
+            spec_proposed += verdict.proposed as u64;
+            let out = sched.commit_multi(slot, &verdict.tokens);
             for (_, vid) in out.preempted {
                 svc.retire(vid);
             }
@@ -120,7 +163,12 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig) -> ChurnResult {
         streams.insert(f.request.id, f.output);
     }
     svc.shutdown();
-    ChurnResult { streams, preemptions: sched.preemption_count() }
+    ChurnResult {
+        streams,
+        preemptions: sched.preemption_count(),
+        spec_accepted,
+        spec_proposed,
+    }
 }
 
 /// Tight cache: 4 slots each hold ≥1 of 5 blocks, so any block-boundary
@@ -133,7 +181,7 @@ const AMPLE_KV: usize = 64;
 #[test]
 fn burst_churn_drains_without_leaks_for_any_sampler_count() {
     for m in [1usize, 2, 5] {
-        let res = run_churn(m, TIGHT_KV, SchedulerConfig::default());
+        let res = run_churn(m, TIGHT_KV, SchedulerConfig::default(), 0);
         assert_eq!(res.streams.len(), N_REQ, "m={m}: all requests finished");
         assert!(res.preemptions > 0, "m={m}: tight cache must churn");
         // every request produced exactly its target token count
@@ -154,8 +202,8 @@ fn token_streams_invariant_to_sampler_count_under_preemption() {
     // §5.1 determinism, now under admit/preempt/resume churn: m=1 and m=3
     // partition sequences across samplers differently AND interleave
     // preemptions differently-owned state — the streams must not change.
-    let a = run_churn(1, TIGHT_KV, SchedulerConfig::default());
-    let b = run_churn(3, TIGHT_KV, SchedulerConfig::default());
+    let a = run_churn(1, TIGHT_KV, SchedulerConfig::default(), 0);
+    let b = run_churn(3, TIGHT_KV, SchedulerConfig::default(), 0);
     assert!(a.preemptions > 0 && b.preemptions > 0);
     assert_eq!(a.streams, b.streams);
 }
@@ -165,8 +213,8 @@ fn token_streams_invariant_to_preemption_itself() {
     // The same trace with an ample cache (no preemption at all) must
     // produce byte-identical streams: eviction + recompute-on-resume is
     // invisible in the tokens, visible only in latency.
-    let tight = run_churn(2, TIGHT_KV, SchedulerConfig::default());
-    let ample = run_churn(2, AMPLE_KV, SchedulerConfig::default());
+    let tight = run_churn(2, TIGHT_KV, SchedulerConfig::default(), 0);
+    let ample = run_churn(2, AMPLE_KV, SchedulerConfig::default(), 0);
     assert!(tight.preemptions > 0, "tight run must actually preempt");
     assert_eq!(ample.preemptions, 0, "ample run must not preempt");
     assert_eq!(tight.streams, ample.streams);
@@ -179,8 +227,8 @@ fn chunked_prefill_budget_changes_timing_not_tokens() {
         max_prefill_chunk: 1,
         ..SchedulerConfig::default()
     };
-    let a = run_churn(2, AMPLE_KV, budgeted);
-    let b = run_churn(2, AMPLE_KV, SchedulerConfig::default());
+    let a = run_churn(2, AMPLE_KV, budgeted, 0);
+    let b = run_churn(2, AMPLE_KV, SchedulerConfig::default(), 0);
     assert_eq!(a.streams, b.streams, "budget must only reshape the schedule");
 }
 
@@ -194,7 +242,56 @@ fn multi_token_chunks_preserve_streams() {
         max_prefill_chunk: 4,
         ..SchedulerConfig::default()
     };
-    let a = run_churn(2, AMPLE_KV, chunky);
-    let b = run_churn(2, AMPLE_KV, SchedulerConfig::default());
+    let a = run_churn(2, AMPLE_KV, chunky, 0);
+    let b = run_churn(2, AMPLE_KV, SchedulerConfig::default(), 0);
     assert_eq!(a.streams, b.streams);
+}
+
+// ---- speculative decoding under churn ----
+
+#[test]
+fn spec_decode_streams_bit_identical_for_any_k_and_m() {
+    // Verified speculation is invisible in the tokens across window sizes
+    // AND sampler counts, under the full admit/commit/retire machinery.
+    let baseline = run_churn(1, AMPLE_KV, SchedulerConfig::default(), 0);
+    for (m, k) in [(1usize, 2usize), (2, 2), (4, 4), (2, 3)] {
+        let spec = run_churn(m, AMPLE_KV, SchedulerConfig::default(), k);
+        assert_eq!(spec.streams, baseline.streams, "m={m} k={k}");
+        assert!(
+            spec.spec_proposed > 0,
+            "m={m} k={k}: windows must actually speculate"
+        );
+        assert!(spec.spec_accepted <= spec.spec_proposed);
+    }
+}
+
+#[test]
+fn preemption_mid_speculation_replays_multi_token_commits_exactly() {
+    // The satellite: preemption landing mid-speculation (multi-token
+    // commits triggering KV-pressure evictions, including of the
+    // committing sequence itself) must replay exactly — no KV leak (the
+    // drain invariants inside run_churn), deterministic resume, streams
+    // identical to the ample-cache spec run AND to plain decode.
+    let plain = run_churn(2, AMPLE_KV, SchedulerConfig::default(), 0);
+    let spec_ample = run_churn(2, AMPLE_KV, SchedulerConfig::default(), 3);
+    let spec_tight = run_churn(2, TIGHT_KV, SchedulerConfig::default(), 3);
+    assert!(spec_tight.preemptions > 0, "tight cache must preempt mid-spec");
+    assert_eq!(spec_ample.preemptions, 0);
+    assert_eq!(spec_tight.streams, spec_ample.streams);
+    assert_eq!(spec_tight.streams, plain.streams);
+}
+
+#[test]
+fn spec_decode_composes_with_chunked_prefill_and_sampler_churn() {
+    // Everything at once: chunked prefill budgets + speculation + tight KV
+    // + different m. Still the same tokens.
+    let chunky = SchedulerConfig {
+        prefill_token_budget: 8,
+        max_prefill_chunk: 4,
+        ..SchedulerConfig::default()
+    };
+    let a = run_churn(3, TIGHT_KV, chunky.clone(), 2);
+    let b = run_churn(1, AMPLE_KV, SchedulerConfig::default(), 0);
+    assert_eq!(a.streams, b.streams);
+    assert!(a.preemptions > 0);
 }
