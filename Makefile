@@ -19,10 +19,11 @@ test:
 figures: build
 	cargo run --release -- figures
 
-# What .github/workflows/ci.yml runs: fmt gate, release build + tests,
-# python kernel/model tests (hypothesis optional — shim fallback).
+# What .github/workflows/ci.yml runs: fmt + clippy gates, release build +
+# tests, python kernel/model tests (hypothesis optional — shim fallback).
 ci:
 	cargo fmt --check
+	cargo clippy --release --all-targets -- -D warnings
 	cargo build --release
 	cargo test -q --release
 	python -m pytest python/tests -q

@@ -16,7 +16,7 @@ fn main() {
     let filter_str: Option<&str> = args.iter().find(|a| !a.starts_with('-')).map(|s| s.as_str());
     let quick = args.iter().any(|a| a == "--quick");
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
-    let want = |name: &str| filter_str.map_or(true, |f| name.contains(f));
+    let want = |name: &str| filter_str.is_none_or(|f| name.contains(f));
     let mut results: Vec<BenchResult> = Vec::new();
 
     const V: usize = 152_064; // QwQ-32B vocabulary
@@ -100,6 +100,69 @@ fn main() {
             );
             out.extend(black_box(&v.tokens));
         }));
+    }
+
+    // --- decision overlap: exposed (sync) vs hidden (async) ---
+    // Per-iteration wall time at fixed batch/vocab with the decision plane
+    // collected synchronously after the forward vs overlapped under the
+    // next forward (the pipelined executor's win, measured in isolation:
+    // the view generation stands in for the forward's wall time).
+    if want("overlap") {
+        use simple_serve::config::SamplerConfig;
+        use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
+        const B: usize = 8;
+        let svc_cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            seed: 7,
+            ..Default::default()
+        };
+        let make_columns = |iter: u64| -> Vec<ColumnMeta> {
+            (0..B)
+                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                .collect()
+        };
+
+        // exposed: forward, then block on decisions (synchronous engine)
+        {
+            let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
+            for s in 0..B as u64 {
+                svc.register(s, &[1, 2, 3], &params);
+            }
+            let mut it = 0u64;
+            results.push(run_case("overlap/exposed_sync", &cfg, Some(1.0), || {
+                let view = gen.view(B, it, 1); // the "forward"
+                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let (d, _) = svc.collect(it, B);
+                black_box(d.len());
+                it += 1;
+            }));
+            svc.shutdown();
+        }
+
+        // hidden: submit, run the next "forward", then reap the previous
+        // iteration's decisions (one microbatch in flight)
+        {
+            let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
+            for s in 0..B as u64 {
+                svc.register(s, &[1, 2, 3], &params);
+            }
+            let mut it = 0u64;
+            let mut outstanding: Option<u64> = None;
+            results.push(run_case("overlap/hidden_async", &cfg, Some(1.0), || {
+                let view = gen.view(B, it, 1); // the "forward"
+                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                if let Some(prev) = outstanding.replace(it) {
+                    let (d, _) = svc.collect(prev, B);
+                    black_box(d.len());
+                }
+                it += 1;
+            }));
+            if let Some(prev) = outstanding {
+                let _ = svc.collect(prev, B);
+            }
+            svc.shutdown();
+        }
     }
 
     // --- truncation-first vs sort-based filtering ---

@@ -4,6 +4,10 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::{HotVocab, SamplingParams};
 use simple_serve::engine::{tokenizer, PjrtEngine, Request};

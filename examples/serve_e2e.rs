@@ -19,6 +19,17 @@
 //! motif-cycled (templated-traffic) trace where self-drafting gets
 //! realistic acceptance rates; the per-variant line reports accepted
 //! drafts / proposed and committed tokens per decision step.
+//!
+//! Overlapped execution (DESIGN.md §8): `--n_microbatches N --overlap`
+//! splits the slot space into N in-flight microbatches so one microbatch's
+//! decisions are sampled while another's forward runs; the per-variant
+//! `overlap:` line reports the measured hidden fraction and last-stage
+//! bubble. Stream digests stay bit-identical to the synchronous run for
+//! any (N, overlap, m, spec_k) — overlap changes timing, never tokens.
+
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
 
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
@@ -37,29 +48,20 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("prefill_budget", "chunked-prefill token budget per iteration"),
     OptSpec::value("kv_blocks", "KV blocks (0 = never-preempt sizing; small = churn)"),
     OptSpec::value("spec_k", "speculative draft window per iteration (0 = off)"),
+    OptSpec::value("n_microbatches", "in-flight microbatches (pipelined executor; default 1)"),
+    OptSpec::value("idle_poll_us", "idle poll quantum in µs (0 = busy-poll)"),
+    OptSpec::flag("overlap", "overlap the decision plane with forwards (DESIGN.md §8)"),
     OptSpec::flag("loopy", "motif-cycled prompts (speculation-friendly trace)"),
     OptSpec::flag("quick", "small run"),
 ];
 
-/// FNV-1a over every finished sequence's (id, tokens), id-ordered: a
-/// deterministic digest of the served token streams.
-fn stream_digest(mut finished: Vec<simple_serve::engine::Sequence>) -> u64 {
-    finished.sort_by_key(|s| s.request.id);
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    let mut eat = |x: u64| {
-        for b in x.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-    };
-    for seq in &finished {
-        eat(seq.request.id);
-        eat(seq.output.len() as u64);
-        for &t in &seq.output {
-            eat(t as u64);
-        }
-    }
-    h
+/// Deterministic digest of the served token streams (the shared
+/// [`simple_serve::util::stream_digest`], so the `overlap` harness and
+/// this example hash identically).
+fn stream_digest(finished: Vec<simple_serve::engine::Sequence>) -> u64 {
+    simple_serve::util::stream_digest(
+        finished.into_iter().map(|s| (s.request.id, s.output)).collect(),
+    )
 }
 
 fn main() -> simple_serve::Result<()> {
@@ -82,6 +84,9 @@ fn main() -> simple_serve::Result<()> {
     let prefill_budget: usize = args.get_or("prefill_budget", 0)?;
     let kv_blocks: usize = args.get_or("kv_blocks", 0)?;
     let spec_k: usize = args.get_or("spec_k", 0)?;
+    let n_microbatches: usize = args.get_or("n_microbatches", 1)?;
+    let idle_poll_us: u64 = args.get_or("idle_poll_us", 200)?;
+    let overlap = args.flag("overlap");
     let loopy = args.flag("loopy");
 
     let manifest = Manifest::load(&default_artifacts_dir())
@@ -99,6 +104,7 @@ fn main() -> simple_serve::Result<()> {
     }
     let mut results = Vec::new();
     let mut digests = Vec::new();
+    let mut overlaps = Vec::new();
     for variant in [DecisionVariant::GpuEpilogue, DecisionVariant::Shvs] {
         let rt = ModelRuntime::load(&manifest, &model)?;
         let vocab = rt.vocab();
@@ -109,6 +115,9 @@ fn main() -> simple_serve::Result<()> {
         cfg.prefill_token_budget = prefill_budget;
         cfg.kv_blocks = kv_blocks;
         cfg.spec_k = spec_k;
+        cfg.n_microbatches = n_microbatches;
+        cfg.overlap = overlap;
+        cfg.idle_poll_us = idle_poll_us;
         // Offline-profiled hot set: the AOT model's Zipf head lives on
         // low ids by construction (see python/compile/model.py lm_bias).
         let h = (vocab / 5).min(32_768) as u32;
@@ -157,8 +166,21 @@ fn main() -> simple_serve::Result<()> {
             spec_note,
         );
         println!("[{}] stream digest: {digest:016x}", variant.name());
+        let ov = engine.overlap_report();
+        if ov.decision_busy_s > 0.0 {
+            println!(
+                "[{}] overlap: {:.0}% of decision time hidden under forwards | \
+                 exposed {:.2} ms | last-stage bubble {:.1}% | {} microbatch(es)",
+                variant.name(),
+                ov.overlap_fraction * 100.0,
+                ov.exposed_wait_s * 1e3,
+                ov.last_stage_bubble * 100.0,
+                ov.microbatches,
+            );
+        }
         results.push((variant.name(), summary));
         digests.push((variant.name(), digest));
+        overlaps.push((variant.name(), ov));
         engine.shutdown();
     }
 
@@ -175,11 +197,30 @@ fn main() -> simple_serve::Result<()> {
              — verification is exact for any k and m)"
         );
     }
+    if overlap || n_microbatches > 1 {
+        println!(
+            "(compare `stream digest` lines against a run without --overlap/--n_microbatches: \
+             they must match — overlap changes timing, never tokens; \
+             `figures --experiments overlap` compares the measured hidden fraction \
+             against the simulator's prediction)"
+        );
+    }
     // Record machine-readable results for EXPERIMENTS.md.
     let out = Json::obj(vec![
         ("model", Json::Str(model)),
         ("requests", Json::Num(n as f64)),
         ("spec_k", Json::Num(spec_k as f64)),
+        ("n_microbatches", Json::Num(n_microbatches as f64)),
+        ("overlap", Json::Bool(overlap)),
+        (
+            "overlap_measured",
+            Json::obj(
+                overlaps
+                    .iter()
+                    .map(|(name, ov)| (*name, ov.to_json()))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
         (
             "traffic",
             Json::Str(traffic.map(|p| p.name()).unwrap_or("closed-loop").to_string()),

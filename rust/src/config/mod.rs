@@ -112,6 +112,20 @@ pub struct EngineConfig {
     /// exact-distribution rejection (DESIGN.md §7); token streams are
     /// bit-identical to `spec_k = 0` for any k and sampler count.
     pub spec_k: usize,
+    /// In-flight microbatches for the pipelined executor (DESIGN.md §8):
+    /// the slot space is split into `n` interleaved microbatches so one
+    /// microbatch's decisions can be sampled while another's forward runs.
+    /// 1 = the synchronous engine (clamped to the batch size).
+    pub n_microbatches: usize,
+    /// Overlap the decision plane with forwards (asynchronous submit +
+    /// two-phase commit). Off = block on decisions every iteration, even
+    /// with multiple microbatches. Changes timing only, never tokens.
+    pub overlap: bool,
+    /// Idle-poll quantum in microseconds when no microbatch has runnable
+    /// work (open-loop gaps between arrivals). The engine skips the sleep
+    /// entirely when the next arrival is already due, and bounds it by the
+    /// time until that arrival otherwise. 0 = busy-poll.
+    pub idle_poll_us: u64,
 }
 
 impl Default for EngineConfig {
@@ -127,6 +141,9 @@ impl Default for EngineConfig {
             prefill_token_budget: 0,
             kv_blocks: 0,
             spec_k: 0,
+            n_microbatches: 1,
+            overlap: false,
+            idle_poll_us: 200,
         }
     }
 }
@@ -181,6 +198,18 @@ impl EngineConfig {
         if let Some(k) = j.get("spec_k").as_usize() {
             self.spec_k = k;
         }
+        if let Some(n) = j.get("n_microbatches").as_usize() {
+            self.n_microbatches = n.max(1);
+        }
+        // accept both a JSON bool and the CLI's numeric 0/1
+        if let Some(o) = j.get("overlap").as_bool() {
+            self.overlap = o;
+        } else if let Some(o) = j.get("overlap").as_f64() {
+            self.overlap = o != 0.0;
+        }
+        if let Some(u) = j.get("idle_poll_us").as_usize() {
+            self.idle_poll_us = u as u64;
+        }
         Ok(())
     }
 
@@ -203,6 +232,8 @@ impl EngineConfig {
             "prefill_budget",
             "kv_blocks",
             "spec_k",
+            "n_microbatches",
+            "idle_poll_us",
         ] {
             if let Some(v) = args.get(key) {
                 let n: f64 = v
@@ -252,6 +283,25 @@ mod tests {
         assert_eq!(cfg.spec_k, 0, "speculation is opt-in");
         cfg.apply_json(&Json::parse(r#"{"spec_k": 4}"#).unwrap()).unwrap();
         assert_eq!(cfg.spec_k, 4);
+    }
+
+    #[test]
+    fn pipelining_overrides_apply() {
+        let mut cfg = EngineConfig::default();
+        assert_eq!(cfg.n_microbatches, 1, "pipelining is opt-in");
+        assert!(!cfg.overlap);
+        assert_eq!(cfg.idle_poll_us, 200, "seed-compatible idle poll");
+        let j = Json::parse(
+            r#"{"n_microbatches": 2, "overlap": true, "idle_poll_us": 50}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.n_microbatches, 2);
+        assert!(cfg.overlap);
+        assert_eq!(cfg.idle_poll_us, 50);
+        // the CLI's numeric form of the flag also works
+        cfg.apply_json(&Json::parse(r#"{"overlap": 0}"#).unwrap()).unwrap();
+        assert!(!cfg.overlap);
     }
 
     #[test]

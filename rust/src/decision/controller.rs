@@ -139,7 +139,7 @@ impl HotVocabController {
                 best_h = h;
             }
             if self.cfg.cycle_budget_s > 0.0 && f <= self.cfg.cycle_budget_s {
-                if best_feasible.map_or(true, |(bf, _)| f < bf) {
+                if best_feasible.is_none_or(|(bf, _)| f < bf) {
                     best_feasible = Some((f, h));
                 }
             }

@@ -24,7 +24,7 @@ impl HotVocab {
         ids.sort_unstable();
         ids.dedup();
         assert!(
-            ids.last().map_or(true, |&v| (v as usize) < vocab),
+            ids.last().is_none_or(|&v| (v as usize) < vocab),
             "hot id out of vocab"
         );
         assert!(ids.len() < vocab, "hot set must be a strict subset");

@@ -32,9 +32,9 @@ use crate::config::DecisionVariant;
 use crate::ringbuf::{mpmc, spsc};
 use crate::tensor::ShardedLogits;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-column metadata within an iteration's microbatch.
 #[derive(Debug, Clone)]
@@ -56,7 +56,14 @@ pub struct ColumnMeta {
 /// sampler still reads only its owned columns, in every view, with no
 /// vocab-axis collectives.
 pub struct IterationTask {
+    /// Task id — the scheduler's global plan counter. Unique across
+    /// microbatches; the completion queue is keyed by it.
     pub iter: u64,
+    /// Microbatch this task belongs to (0 for the synchronous engine).
+    /// Samplers copy it into their [`DecisionBatch`]es so the assembled
+    /// [`Collected`] can attribute decision intervals to the right
+    /// microbatch in the stage timeline.
+    pub mb: usize,
     /// Per-chain-position logits views (len 1 = plain decode).
     pub views: Vec<ShardedLogits>,
     pub columns: Arc<Vec<ColumnMeta>>,
@@ -80,6 +87,7 @@ impl IterationTask {
         let pre = if pre.is_empty() { Vec::new() } else { vec![pre] };
         IterationTask {
             iter,
+            mb: 0,
             views: vec![view],
             columns: Arc::new(columns),
             pre: Arc::new(pre),
@@ -112,6 +120,8 @@ pub enum SamplerMsg {
 #[derive(Debug)]
 pub struct DecisionBatch {
     pub iter: u64,
+    /// Microbatch tag copied from the task (stage-timeline attribution).
+    pub mb: usize,
     pub sampler_id: usize,
     /// (column, seq_id, verdict) — a verdict commits 1..=k+1 tokens
     /// (accepted draft prefix + corrected bonus; exactly 1 without
@@ -119,13 +129,48 @@ pub struct DecisionBatch {
     pub decisions: Vec<(usize, u64, Verdict)>,
     /// Wall seconds this sampler spent deciding (busy time).
     pub busy_s: f64,
+    /// Busy interval endpoints, seconds since the service epoch (the
+    /// engine's t0) — the stage timeline's raw material.
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// All `m` samplers' decisions for one task, assembled by the completion
+/// queue (see [`SamplerService::try_collect`]).
+#[derive(Debug, Default)]
+pub struct Collected {
+    /// Microbatch the task belonged to (as tagged by the submitter).
+    pub mb: usize,
+    /// Column-sorted (column, seq_id, verdict) triples.
+    pub decisions: Vec<(usize, u64, Verdict)>,
+    /// Max per-sampler busy seconds — the decision-plane latency that must
+    /// hide under GPU compute.
+    pub busy_s: f64,
+    /// Per-sampler busy intervals (epoch seconds), for overlap accounting.
+    pub intervals: Vec<(f64, f64)>,
+}
+
+/// Partially-assembled task result in the completion queue.
+#[derive(Default)]
+struct PendingCollect {
+    mb: usize,
+    decisions: Vec<(usize, u64, Verdict)>,
+    intervals: Vec<(f64, f64)>,
+    batches: usize,
+    max_busy: f64,
 }
 
 /// Running service handle.
 pub struct SamplerService {
     senders: Vec<spsc::Producer<SamplerMsg>>,
     results: mpmc::Receiver<DecisionBatch>,
-    workers: Vec<JoinHandle<SamplerStats>>,
+    /// Worker handles; slots are taken when a dead worker is joined for
+    /// panic propagation, and drained at shutdown/drop.
+    workers: Mutex<Vec<Option<JoinHandle<SamplerStats>>>>,
+    /// Completion queue: batches drained off the return channel, bucketed
+    /// by task id `(iter)` until all `m` samplers reported. Lets multiple
+    /// microbatches' tasks be in flight and reaped out of order.
+    pending: Mutex<HashMap<u64, PendingCollect>>,
     m: usize,
 }
 
@@ -146,6 +191,9 @@ struct SamplerWorker {
     id: usize,
     m: usize,
     pipeline: DecisionPipeline,
+    /// Shared time origin (the engine's t0) so busy intervals are directly
+    /// comparable with the engine's GPU stage timestamps.
+    epoch: Instant,
     /// Histories of owned sequences, keyed by seq_id. Each history is a
     /// single-column BatchHistory (the column-wise machinery per sequence).
     owned: HashMap<u64, OwnedSeq>,
@@ -197,7 +245,7 @@ impl SamplerWorker {
                     }
                 }
                 SamplerMsg::Iterate(task) => {
-                    let t0 = Instant::now();
+                    let start_s = self.epoch.elapsed().as_secs_f64();
                     let mut decisions = Vec::new();
                     for (ci, meta) in task.columns.iter().enumerate() {
                         if !self.owns(meta.seq_id) {
@@ -227,13 +275,17 @@ impl SamplerWorker {
                         );
                         decisions.push((meta.col, meta.seq_id, verdict));
                     }
-                    let busy = t0.elapsed().as_secs_f64();
+                    let end_s = self.epoch.elapsed().as_secs_f64();
+                    let busy = end_s - start_s;
                     stats.busy_s += busy;
                     let batch = DecisionBatch {
                         iter: task.iter,
+                        mb: task.mb,
                         sampler_id: self.id,
                         decisions,
                         busy_s: busy,
+                        start_s,
+                        end_s,
                     };
                     if tx.send(batch).is_err() {
                         break; // engine gone
@@ -248,10 +300,33 @@ impl SamplerWorker {
     }
 }
 
+/// Render a worker panic payload for error surfacing.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 impl SamplerService {
-    /// Spawn `cfg.num_samplers` workers. `hot` is required for the SHVS
-    /// variant; `vocab` sizes the default hot set if none is given.
+    /// Spawn `cfg.num_samplers` workers with a fresh time epoch. `hot` is
+    /// required for the SHVS variant.
     pub fn start(cfg: &SamplerConfig, hot: Option<Arc<HotVocab>>, max_seq_len: usize) -> Self {
+        Self::start_with_epoch(cfg, hot, max_seq_len, Instant::now())
+    }
+
+    /// Spawn workers that timestamp their busy intervals relative to
+    /// `epoch` (the engine's t0), so decision intervals land on the same
+    /// timeline as the engine's GPU stage intervals.
+    pub fn start_with_epoch(
+        cfg: &SamplerConfig,
+        hot: Option<Arc<HotVocab>>,
+        max_seq_len: usize,
+        epoch: Instant,
+    ) -> Self {
         let m = cfg.num_samplers.max(1);
         let (result_tx, results) = mpmc::channel::<DecisionBatch>(m * cfg.ring_depth.max(1) * 2);
         let mut senders = Vec::with_capacity(m);
@@ -262,6 +337,7 @@ impl SamplerService {
                 id,
                 m,
                 pipeline: DecisionPipeline::new(cfg.variant, hot.clone(), cfg.seed),
+                epoch,
                 owned: HashMap::new(),
             };
             let result_tx = result_tx.clone();
@@ -270,10 +346,16 @@ impl SamplerService {
                 .spawn(move || worker.run(rx, result_tx, max_seq_len))
                 .expect("spawn sampler");
             senders.push(tx);
-            workers.push(handle);
+            workers.push(Some(handle));
         }
         drop(result_tx);
-        SamplerService { senders, results, workers, m }
+        SamplerService {
+            senders,
+            results,
+            workers: Mutex::new(workers),
+            pending: Mutex::new(HashMap::new()),
+            m,
+        }
     }
 
     pub fn num_samplers(&self) -> usize {
@@ -330,40 +412,172 @@ impl SamplerService {
         }
     }
 
+    /// Bucket one returned batch into the completion queue.
+    fn absorb(&self, batch: DecisionBatch) {
+        let mut pending = self.pending.lock().unwrap();
+        let entry = pending.entry(batch.iter).or_default();
+        entry.mb = batch.mb;
+        entry.batches += 1;
+        entry.max_busy = entry.max_busy.max(batch.busy_s);
+        if batch.end_s > batch.start_s {
+            entry.intervals.push((batch.start_s, batch.end_s));
+        }
+        entry.decisions.extend(batch.decisions);
+    }
+
+    /// Remove task `iter` from the completion queue if all `m` sampler
+    /// batches for it arrived.
+    fn take_if_complete(&self, iter: u64) -> Option<Collected> {
+        let mut pending = self.pending.lock().unwrap();
+        if pending.get(&iter).is_some_and(|e| e.batches >= self.m) {
+            let entry = pending.remove(&iter).unwrap();
+            let mut decisions = entry.decisions;
+            decisions.sort_unstable_by_key(|&(col, _, _)| col);
+            Some(Collected {
+                mb: entry.mb,
+                decisions,
+                busy_s: entry.max_busy,
+                intervals: entry.intervals,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Propagate sampler-thread death: a worker whose handle is finished
+    /// while the service is live either panicked (its payload is surfaced)
+    /// or exited early — both are fatal to the iteration protocol. Without
+    /// this check a dead worker deadlocks `collect` forever, because the
+    /// surviving workers keep the return channel alive while the batch
+    /// count can never reach `m`.
+    fn check_workers(&self) -> crate::Result<()> {
+        let mut workers = self.workers.lock().unwrap();
+        for (id, slot) in workers.iter_mut().enumerate() {
+            if slot.as_ref().is_some_and(|h| h.is_finished()) {
+                let handle = slot.take().unwrap();
+                return match handle.join() {
+                    Err(payload) => Err(anyhow::anyhow!(
+                        "sampler {id} panicked: {}",
+                        panic_message(payload.as_ref())
+                    )),
+                    Ok(_) => Err(anyhow::anyhow!("sampler {id} exited mid-service")),
+                };
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking collect: drain whatever the samplers have pushed so
+    /// far and return task `iter`'s assembled result if complete. Errors
+    /// if a sampler thread died.
+    pub fn try_collect(&self, iter: u64) -> crate::Result<Option<Collected>> {
+        loop {
+            if let Some(done) = self.take_if_complete(iter) {
+                return Ok(Some(done));
+            }
+            match self.results.try_recv() {
+                Some(batch) => self.absorb(batch),
+                None => {
+                    self.check_workers()?;
+                    return Ok(None);
+                }
+            }
+        }
+    }
+
+    /// Blocking collect for task `iter`: waits until all `m` sampler
+    /// batches arrived, surfacing worker panics as errors instead of
+    /// deadlocking (the satellite fix: join-on-death with error surfacing).
+    pub fn collect_checked(&self, iter: u64) -> crate::Result<Collected> {
+        loop {
+            if let Some(done) = self.take_if_complete(iter) {
+                return Ok(done);
+            }
+            match self.results.recv_timeout(Duration::from_millis(20)) {
+                Ok(Some(batch)) => self.absorb(batch),
+                Ok(None) => anyhow::bail!("decision plane disconnected"),
+                Err(()) => self.check_workers()?, // starved: look for corpses
+            }
+        }
+    }
+
     /// Collect decisions for iteration `iter` (blocks until all `m` sampler
     /// batches for that iteration arrived). Returns (col → (seq, verdict))
     /// plus the max per-sampler busy time (the decision-plane latency that
-    /// must hide under GPU compute).
+    /// must hide under GPU compute). `expected_cols` is the caller's
+    /// submitted column count, asserted against what came back — a mismatch
+    /// means a sequence was decided by zero or two owners. Panics if a
+    /// sampler died — callers on the fallible path use
+    /// [`Self::collect_checked`].
     pub fn collect(&self, iter: u64, expected_cols: usize) -> (Vec<(usize, u64, Verdict)>, f64) {
-        let mut got = Vec::with_capacity(expected_cols);
-        let mut batches = 0usize;
-        let mut max_busy = 0.0f64;
-        while batches < self.m {
-            match self.results.recv() {
-                Some(batch) => {
-                    debug_assert_eq!(batch.iter, iter, "iteration interleave");
-                    max_busy = max_busy.max(batch.busy_s);
-                    got.extend(batch.decisions);
-                    batches += 1;
-                }
-                None => break,
-            }
-        }
-        got.sort_unstable_by_key(|&(col, _, _)| col);
-        (got, max_busy)
+        let done = self.collect_checked(iter).expect("decision plane failed");
+        debug_assert_eq!(
+            done.decisions.len(),
+            expected_cols,
+            "task {iter}: decided columns != submitted columns"
+        );
+        (done.decisions, done.busy_s)
     }
 
-    /// Shut down and return per-sampler stats.
-    pub fn shutdown(self) -> Vec<SamplerStats> {
+    /// Close the rings and join every worker. Returns the stats of workers
+    /// that exited cleanly; panicked workers are surfaced per `propagate`
+    /// (true = re-panic, false = log and continue — the drop path).
+    fn join_all(&mut self, propagate: bool) -> Vec<SamplerStats> {
         for tx in &self.senders {
             tx.close();
         }
-        drop(self.senders);
-        drop(self.results);
-        self.workers
-            .into_iter()
-            .map(|w| w.join().expect("sampler panicked"))
-            .collect()
+        self.senders.clear(); // Producer::drop closes the rings
+        let mut handles: Vec<Option<JoinHandle<SamplerStats>>> =
+            std::mem::take(&mut *self.workers.lock().unwrap());
+        // Drain stray result batches while workers wind down so none blocks
+        // forever on a full return channel (timed waits, not a spin: each
+        // worker drops its sender on exit, so `Ok(None)` means all done).
+        loop {
+            match self.results.recv_timeout(Duration::from_millis(5)) {
+                Ok(Some(_)) => {}  // discard a stray batch
+                Ok(None) => break, // every worker dropped its sender
+                Err(()) => {
+                    let all_done = handles
+                        .iter()
+                        .all(|h| h.as_ref().is_none_or(|h| h.is_finished()));
+                    if all_done {
+                        break;
+                    }
+                }
+            }
+        }
+        while self.results.try_recv().is_some() {}
+        let mut stats = Vec::new();
+        for (id, slot) in handles.iter_mut().enumerate() {
+            let Some(handle) = slot.take() else { continue };
+            match handle.join() {
+                Ok(s) => stats.push(s),
+                Err(payload) => {
+                    let msg =
+                        format!("sampler {id} panicked: {}", panic_message(payload.as_ref()));
+                    if propagate && !std::thread::panicking() {
+                        panic!("{msg}");
+                    }
+                    eprintln!("[sampler-service] {msg}");
+                }
+            }
+        }
+        stats
+    }
+
+    /// Shut down and return per-sampler stats. Panics if a worker panicked
+    /// (explicit shutdown wants the failure loud).
+    pub fn shutdown(mut self) -> Vec<SamplerStats> {
+        self.join_all(true)
+    }
+}
+
+impl Drop for SamplerService {
+    /// Join-on-drop: an engine that errors out (or a panicking test) still
+    /// tears the workers down instead of leaking threads; worker panics are
+    /// surfaced to stderr rather than silently swallowed.
+    fn drop(&mut self) {
+        self.join_all(false);
     }
 }
 
@@ -480,6 +694,7 @@ mod tests {
                 .collect();
             svc.submit(IterationTask {
                 iter,
+                mb: 0,
                 views,
                 columns: Arc::new(columns),
                 pre: Arc::new(Vec::new()),
@@ -544,6 +759,83 @@ mod tests {
             assert!(x.iter().all(|&t| (t as usize) < 64));
             assert!(y.iter().all(|&t| (t as usize) < 64));
         }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_instead_of_deadlocking() {
+        // A column index past the view's batch makes the owning sampler
+        // panic mid-iteration. Before the completion-queue rework this
+        // deadlocked `collect` forever (the surviving workers keep the
+        // return channel open while the batch count can never reach m);
+        // now the dead worker is joined and its panic surfaces as an error.
+        let cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 64);
+        let params = SamplingParams::default();
+        svc.register(0, &[1], &params);
+        let view = logits_view(1, 32, 0, 1);
+        svc.submit(IterationTask::single(
+            0,
+            view,
+            vec![ColumnMeta { col: 7, seq_id: 0, iteration: 0 }],
+            Vec::new(),
+        ));
+        let res = svc.collect_checked(0);
+        let err = res.expect_err("dead sampler must surface, not deadlock");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("sampler") && msg.contains("panicked"),
+            "unhelpful error: {msg}"
+        );
+        // drop (join-on-drop) must not re-panic the test thread
+        drop(svc);
+    }
+
+    #[test]
+    fn completion_queue_reaps_tasks_out_of_order() {
+        // Two tasks in flight at once (the pipelined executor's shape):
+        // reaping the later one first must work, and the earlier one's
+        // batches stay buffered in the completion queue.
+        let cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            seed: 9,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 128);
+        let params = SamplingParams::production_default();
+        for s in 0..2u64 {
+            svc.register(s, &[1, 2], &params);
+        }
+        for iter in 0..2u64 {
+            let view = logits_view(2, 64, iter, 1);
+            let columns: Vec<ColumnMeta> = (0..2)
+                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                .collect();
+            svc.submit(IterationTask::single(iter, view, columns, Vec::new()));
+        }
+        let later = svc.collect_checked(1).expect("task 1");
+        assert_eq!(later.decisions.len(), 2);
+        assert!(later.busy_s >= 0.0);
+        // task 0 completes too (possibly already buffered by the first
+        // collect's draining; otherwise try_collect drains it here)
+        let earlier = loop {
+            if let Some(done) = svc.try_collect(0).expect("no dead workers") {
+                break done;
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(earlier.decisions.len(), 2);
+        for (start, end) in earlier.intervals.iter().chain(&later.intervals) {
+            assert!(end >= start, "interval {start}..{end}");
+        }
+        for s in 0..2u64 {
+            svc.retire(s);
+        }
+        svc.shutdown();
     }
 
     #[test]

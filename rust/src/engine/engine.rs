@@ -1,13 +1,30 @@
-//! The serving engine: PJRT data plane + disaggregated decision plane.
+//! The serving engine: data plane + disaggregated decision plane, run as a
+//! **pipelined executor with in-flight microbatches**.
 //!
-//! Per iteration (paper §4.2 ⓪–⑥):
-//! ⓪ the scheduler emits a scheduling output (admissions + slot plan);
-//! ① the PJRT runtime executes the decode step (GPU compute);
+//! Per microbatch iteration (paper §4.2 ⓪–⑥):
+//! ⓪ the scheduler emits a microbatch-scoped scheduling output
+//!   ([`Scheduler::plan_mb`]: admissions + slot plan);
+//! ① the runtime executes the decode step (GPU compute);
 //! ② ③ logits are transposed to vocabulary-major and "written" as
 //!   TP-sharded slices into the shared view ([`crate::tensor::shard_row_major`]);
 //! ④ ⑤ the sampler service reads its sequence partitions zero-copy and runs
 //!   SHVS with the kernel-produced precompute;
 //! ⑥ decisions are committed, finished sequences retired.
+//!
+//! **Overlap (DESIGN.md §8).** The slot space is split into
+//! `cfg.n_microbatches` interleaved microbatches. With `cfg.overlap` on,
+//! step ④⑤ is *asynchronous*: the engine submits microbatch A's
+//! [`IterationTask`] and immediately launches microbatch B's forward;
+//! A's decisions are reaped (non-blocking completion queue keyed by task
+//! id) and land as **pending commits**, applied just before A's next plan —
+//! a two-phase commit that preserves exact preemption/spec-verify
+//! semantics. Decision latency is hidden whenever it is shorter than a
+//! forward; the recorder's stage timeline measures exactly how much
+//! ([`crate::metrics::OverlapReport`]). Committed token streams are
+//! bit-identical to the synchronous engine for any `(n_microbatches,
+//! overlap, m, spec_k)`: decisions are keyed by (seed, seq, decode
+//! iteration) and logits depend only on the sequence's own slot context,
+//! so interleaving changes timing, never tokens.
 //!
 //! The `GpuEpilogue` variant instead samples inline on the engine thread
 //! right after the forward — the serial last-stage epilogue the paper's
@@ -34,16 +51,79 @@ use crate::decision::{DecisionPipeline, HotVocab, Precompute};
 use crate::engine::kvcache::KvAllocator;
 use crate::engine::request::Request;
 use crate::engine::scheduler::{Scheduler, SchedulerConfig};
-use crate::metrics::Recorder;
-use crate::runtime::ModelRuntime;
+use crate::metrics::{OverlapReport, Recorder};
+use crate::runtime::{ModelRuntime, StepOutput};
 use crate::tensor::{shard_row_major, ShardedLogits, Tensor2};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// End-to-end engine over a loaded PJRT model.
-pub struct PjrtEngine {
-    runtime: ModelRuntime,
+/// The engine's view of a data plane: a static-batch decode-step model
+/// with per-slot KV state. [`ModelRuntime`] (the PJRT/AOT path) is the
+/// production implementation; [`super::synthetic::SyntheticRuntime`] is a
+/// context-faithful in-process stand-in for tests, benches, and the
+/// overlap harness, letting the *same executor code* run without
+/// artifacts.
+pub trait DataPlane {
+    /// Static batch size B (slot count).
+    fn batch(&self) -> usize;
+    /// Vocabulary size V.
+    fn vocab(&self) -> usize;
+    /// Max sequence length (KV time dimension).
+    fn max_seq(&self) -> usize;
+    /// Execute one decode step for the whole batch: `ids[b]` is the token
+    /// fed for slot b, `positions[b]` its 0-based position, `tau[b]` the
+    /// temperature for SHVS precompute. The KV write at `(b, positions[b])`
+    /// must be a deterministic function of the fed token (idempotent
+    /// re-feeds), which recompute-on-resume and paused-slot feeding rely on.
+    fn step(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        tau: &[f32],
+    ) -> crate::Result<StepOutput>;
+    /// Zero one slot's KV rows (sequence retired or preempted).
+    fn reset_kv_slot(&mut self, slot: usize);
+    /// Install the hot-vocab mask for SHVS precompute (no-op where
+    /// unsupported).
+    fn install_hot_vocab(&mut self, _hot: &HotVocab) {}
+}
+
+impl DataPlane for ModelRuntime {
+    fn batch(&self) -> usize {
+        ModelRuntime::batch(self)
+    }
+    fn vocab(&self) -> usize {
+        ModelRuntime::vocab(self)
+    }
+    fn max_seq(&self) -> usize {
+        ModelRuntime::max_seq(self)
+    }
+    fn step(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        tau: &[f32],
+    ) -> crate::Result<StepOutput> {
+        ModelRuntime::step(self, ids, positions, tau)
+    }
+    fn reset_kv_slot(&mut self, slot: usize) {
+        ModelRuntime::reset_kv_slot(self, slot)
+    }
+    fn install_hot_vocab(&mut self, hot: &HotVocab) {
+        self.set_hot_vocab(hot)
+    }
+}
+
+/// A microbatch's submitted-but-unreaped decision task.
+struct InFlight {
+    task_id: u64,
+}
+
+/// End-to-end engine over a loaded data plane. `PjrtEngine` is the
+/// PJRT-backed alias every production caller uses.
+pub struct Engine<D: DataPlane> {
+    runtime: D,
     scheduler: Scheduler,
     service: Option<SamplerService>,
     inline_pipe: Option<DecisionPipeline>,
@@ -56,10 +136,19 @@ pub struct PjrtEngine {
     /// Speculative window size (0 = off) and its draft proposer.
     spec_k: usize,
     proposer: DraftProposer,
+    /// Pipelined-executor state: microbatch count, overlap switch, idle
+    /// poll quantum, the round-robin cursor, and per-microbatch in-flight
+    /// tasks / pending (reaped, unapplied) commits.
+    n_mb: usize,
+    overlap: bool,
+    idle_poll_us: u64,
+    cursor: usize,
+    inflight: Vec<Option<InFlight>>,
+    pending: Vec<Vec<(usize, u64, Verdict)>>,
     /// Speculation tallies over windows with at least one draft token:
     /// draft tokens accepted *and committed* / proposed, total committed
-    /// tokens (accepted + bonus, after any EOS/KV/preemption cut), and
-    /// window count. Committed tokens per decision step =
+    /// tokens (accepted + bonus, after any EOS/max_new/preemption cut),
+    /// and window count. Committed tokens per decision step =
     /// spec_committed / spec_windows.
     pub spec_accepted: u64,
     pub spec_proposed: u64,
@@ -69,10 +158,14 @@ pub struct PjrtEngine {
     pub sampler_stats: Vec<crate::decision::service::SamplerStats>,
 }
 
-impl PjrtEngine {
+/// The PJRT-backed production engine.
+pub type PjrtEngine = Engine<ModelRuntime>;
+
+impl<D: DataPlane> Engine<D> {
     /// Build from a loaded runtime. `cfg.sampler.variant` picks the decision
-    /// plane; `cfg.parallel.tp` controls the simulated logits sharding.
-    pub fn new(mut runtime: ModelRuntime, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
+    /// plane; `cfg.parallel.tp` controls the simulated logits sharding;
+    /// `cfg.n_microbatches`/`cfg.overlap` configure the pipelined executor.
+    pub fn new(mut runtime: D, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
         let b = runtime.batch();
         let max_seq_len = runtime.max_seq();
         // KV accounting: by default enough blocks for every slot to run to
@@ -99,10 +192,13 @@ impl PjrtEngine {
             },
         );
         if let Some(h) = &hot {
-            runtime.set_hot_vocab(h);
+            runtime.install_hot_vocab(h);
         }
         let variant = cfg.sampler.variant;
         let inline_epilogue = matches!(variant, DecisionVariant::GpuEpilogue);
+        // Samplers timestamp against the engine's t0 so decision and GPU
+        // stage intervals share one timeline.
+        let t0 = Instant::now();
         let (service, inline_pipe) = if inline_epilogue {
             (
                 None,
@@ -114,11 +210,17 @@ impl PjrtEngine {
             )
         } else {
             (
-                Some(SamplerService::start(&cfg.sampler, hot, max_seq_len)),
+                Some(SamplerService::start_with_epoch(
+                    &cfg.sampler,
+                    hot,
+                    max_seq_len,
+                    t0,
+                )),
                 None,
             )
         };
-        PjrtEngine {
+        let n_mb = cfg.n_microbatches.clamp(1, b.max(1));
+        Engine {
             runtime,
             scheduler,
             service,
@@ -126,11 +228,17 @@ impl PjrtEngine {
             inline_hist: HashMap::new(),
             tp_shards: cfg.parallel.tp.max(1),
             recorder: Recorder::new(),
-            t0: Instant::now(),
+            t0,
             variant,
             max_seq_len,
             spec_k: cfg.spec_k,
             proposer: DraftProposer::new(),
+            n_mb,
+            overlap: cfg.overlap,
+            idle_poll_us: cfg.idle_poll_us,
+            cursor: 0,
+            inflight: (0..n_mb).map(|_| None).collect(),
+            pending: (0..n_mb).map(|_| Vec::new()).collect(),
             spec_accepted: 0,
             spec_proposed: 0,
             spec_committed: 0,
@@ -141,6 +249,11 @@ impl PjrtEngine {
 
     pub fn variant(&self) -> DecisionVariant {
         self.variant
+    }
+
+    /// Microbatch count the executor is running with.
+    pub fn n_microbatches(&self) -> usize {
+        self.n_mb
     }
 
     fn now(&self) -> f64 {
@@ -159,17 +272,66 @@ impl PjrtEngine {
         self.scheduler.submit(req);
     }
 
-    /// Run one iteration. Returns false when idle.
+    /// Run one executor turn: settle the cursor microbatch's previous
+    /// iteration (reap → apply pending commits → advance), then launch its
+    /// next forward. Without overlap the new iteration's decisions are
+    /// reaped and applied in the same turn — exactly the synchronous
+    /// engine. Returns false when fully drained.
     pub fn step_once(&mut self) -> crate::Result<bool> {
+        if self.scheduler.is_idle()
+            && self.inflight.iter().all(Option::is_none)
+            && self.pending.iter().all(Vec::is_empty)
+        {
+            return Ok(false);
+        }
+        let mb = self.cursor;
+        self.cursor = (self.cursor + 1) % self.n_mb;
+
+        // Phase A (two-phase commit, phase 2): settle this microbatch's
+        // previous iteration before planning its next one.
+        self.reap_decisions(mb, true)?;
+        self.apply_commits(mb);
+        self.scheduler.advance_mb(mb, self.n_mb);
+
+        // Phase B: plan + forward + submit the next iteration.
+        let launched = self.launch_forward(mb)?;
+        if !launched {
+            self.idle_wait();
+            return Ok(true);
+        }
+        if self.overlap {
+            // Eagerly drain other microbatches' completed decisions
+            // (non-blocking): their samplers likely finished under this
+            // forward, and reaping now timestamps the hidden work and has
+            // the pending commits ready before their turns.
+            for other in 0..self.n_mb {
+                if other != mb {
+                    self.reap_decisions(other, false)?;
+                }
+            }
+        } else {
+            // Synchronous mode: block on this iteration's decisions now.
+            self.reap_decisions(mb, true)?;
+            self.apply_commits(mb);
+            self.scheduler.advance_mb(mb, self.n_mb);
+        }
+        Ok(true)
+    }
+
+    /// ⓪–⑤ for one microbatch: plan, register admissions, draft, run the
+    /// forward chain, and hand the logits to the decision plane. Returns
+    /// false if the microbatch had nothing runnable.
+    fn launch_forward(&mut self, mb: usize) -> crate::Result<bool> {
         if self.scheduler.is_idle() {
             return Ok(false);
         }
         let now = self.now();
-        let plan = self.scheduler.plan(now);
+        let plan = self.scheduler.plan_mb(now, mb, self.n_mb);
         if plan.slots.is_empty() {
-            // nothing runnable yet (future arrivals)
-            std::thread::sleep(std::time::Duration::from_micros(200));
-            return Ok(true);
+            // Nothing runnable in this microbatch right now (future
+            // arrivals, or all slots owned by other microbatches).
+            debug_assert!(plan.admitted.is_empty(), "admitted without a planned slot");
+            return Ok(false);
         }
 
         // Register admissions with the decision plane. A resumed sequence
@@ -229,7 +391,7 @@ impl PjrtEngine {
         }
         let kmax = drafts_by_slot.iter().map(Vec::len).max().unwrap_or(0);
 
-        // ① GPU compute (PJRT decode steps: base + one per draft position).
+        // ① GPU compute (decode steps: base + one per draft position).
         let mut ids = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut tau = vec![1.0f32; b];
@@ -243,11 +405,13 @@ impl PjrtEngine {
             let t = seq.request.params.temperature;
             tau[sp.slot] = if t > 0.0 { t } else { 1.0 };
         }
-        // Occupied slots paused by the prefill budget still step through the
-        // forward (the static-B graph runs every slot); feeding the *current*
-        // (token, position) again is idempotent on the KV cache — the same
-        // deterministic write lands there when the slot resumes — and its
-        // logits are simply ignored this iteration.
+        // Occupied slots outside this plan — prefill-paused, or owned by
+        // another microbatch (possibly with a decision in flight) — still
+        // step through the forward (the static-B graph runs every slot);
+        // feeding the *current* (token, position) again is idempotent on
+        // the KV cache — the same deterministic write lands there when the
+        // slot's own microbatch runs — and its logits are simply ignored
+        // this iteration.
         for slot in 0..b {
             if planned[slot] {
                 continue;
@@ -290,9 +454,11 @@ impl PjrtEngine {
             );
         }
         let fwd_end = self.now();
-        self.recorder.on_busy("gpu", fwd_start, fwd_end);
+        self.recorder.on_stage_gpu(mb, fwd_start, fwd_end);
 
-        // ④⑤ decision plane: one task carries the whole chain.
+        // ④⑤ decision plane: one task carries the whole chain. With the
+        // service it is submitted asynchronously (reaped later); the
+        // GpuEpilogue baseline decides inline, serially, on this thread.
         let mut decision_cols: Vec<ColumnMeta> = Vec::new();
         let mut col_drafts: Vec<Vec<u32>> = Vec::new();
         for sp in plan.slots.iter().filter(|sp| sp.needs_decision) {
@@ -303,72 +469,115 @@ impl PjrtEngine {
             });
             col_drafts.push(std::mem::take(&mut drafts_by_slot[sp.slot]));
         }
-        let mut decided: Vec<(usize, u64, Verdict)> = Vec::new();
-        if !decision_cols.is_empty() {
-            if self.service.is_some() {
-                let svc = self.service.as_ref().unwrap();
-                let iter = plan.iter;
-                let n = decision_cols.len();
-                svc.submit(IterationTask {
-                    iter,
-                    views,
-                    columns: Arc::new(decision_cols),
-                    pre: Arc::new(pre_views),
-                    drafts: Arc::new(col_drafts),
-                });
-                let (decisions, busy) = svc.collect(iter, n);
-                let t = self.now();
-                self.recorder.on_busy("cpu", t - busy, t);
-                decided = decisions;
-            } else {
-                // Serial GPU-epilogue baseline: verify inline, single
-                // thread, naive full-V kernels (no grammar support on this
-                // path, matching the pre-speculation behavior).
-                let ep_start = self.t0.elapsed().as_secs_f64();
-                for (meta, draft) in decision_cols.iter().zip(&col_drafts) {
-                    let params = self
-                        .scheduler
-                        .slot(meta.col)
-                        .unwrap()
-                        .request
-                        .params
-                        .clone();
-                    let hist =
-                        self.inline_hist.get_mut(&meta.seq_id).expect("registered");
-                    let pipe = self.inline_pipe.as_mut().unwrap();
-                    let mut grammar: GrammarSlot = None;
-                    let verdict = verify_window(
-                        pipe,
-                        &views,
-                        meta.col,
-                        draft,
-                        hist,
-                        &mut grammar,
-                        &params,
-                        &[],
-                        meta.seq_id,
-                        meta.iteration,
-                    );
-                    decided.push((meta.col, meta.seq_id, verdict));
-                }
-                let ep_end = self.t0.elapsed().as_secs_f64();
-                // the epilogue extends the GPU stage (the holdout!)
-                self.recorder.on_busy("gpu", ep_start, ep_end);
-            }
+        if decision_cols.is_empty() {
+            return Ok(true); // pure prefill chunk: nothing to decide
         }
+        if let Some(svc) = &self.service {
+            let task_id = plan.iter;
+            svc.submit(IterationTask {
+                iter: task_id,
+                mb,
+                views,
+                columns: Arc::new(decision_cols),
+                pre: Arc::new(pre_views),
+                drafts: Arc::new(col_drafts),
+            });
+            debug_assert!(self.inflight[mb].is_none(), "one task per microbatch");
+            self.inflight[mb] = Some(InFlight { task_id });
+        } else {
+            // Serial GPU-epilogue baseline: verify inline, single thread,
+            // naive full-V kernels (no grammar support on this path,
+            // matching the pre-speculation behavior). The epilogue extends
+            // the GPU stage (the holdout!), and its decisions go straight
+            // to the pending-commit queue.
+            let ep_start = self.now();
+            let mut decided = Vec::with_capacity(decision_cols.len());
+            for (meta, draft) in decision_cols.iter().zip(&col_drafts) {
+                let params = self
+                    .scheduler
+                    .slot(meta.col)
+                    .unwrap()
+                    .request
+                    .params
+                    .clone();
+                let hist =
+                    self.inline_hist.get_mut(&meta.seq_id).expect("registered");
+                let pipe = self.inline_pipe.as_mut().unwrap();
+                let mut grammar: GrammarSlot = None;
+                let verdict = verify_window(
+                    pipe,
+                    &views,
+                    meta.col,
+                    draft,
+                    hist,
+                    &mut grammar,
+                    &params,
+                    &[],
+                    meta.seq_id,
+                    meta.iteration,
+                );
+                decided.push((meta.col, meta.seq_id, verdict));
+            }
+            let ep_end = self.now();
+            self.recorder.on_stage_gpu(mb, ep_start, ep_end);
+            self.pending[mb].extend(decided);
+        }
+        Ok(true)
+    }
 
-        // ⑥ commit + retire (+ preempt under KV pressure). A verdict
-        // commits 1..=k+1 tokens; the scheduler cuts the window at EOS /
-        // max_new_tokens / KV pressure.
+    /// Reap a microbatch's in-flight decisions into its pending-commit
+    /// queue (two-phase commit, phase 1). Blocking reaps account the
+    /// engine-thread stall as *exposed* decision time — zero whenever the
+    /// decision plane finished under another microbatch's forward.
+    fn reap_decisions(&mut self, mb: usize, block: bool) -> crate::Result<bool> {
+        let Some(inflight) = self.inflight[mb].as_ref() else {
+            return Ok(true);
+        };
+        let task_id = inflight.task_id;
+        let svc = self.service.as_ref().expect("in-flight task implies service");
+        let collected = if block {
+            let wait_start = self.now();
+            let done = svc.collect_checked(task_id)?;
+            self.recorder.on_decision_exposed(self.now() - wait_start);
+            Some(done)
+        } else {
+            svc.try_collect(task_id)?
+        };
+        let Some(done) = collected else {
+            return Ok(false);
+        };
+        self.inflight[mb] = None;
+        debug_assert_eq!(done.mb, mb, "completion queue returned a foreign task");
+        for (start, end) in done.intervals {
+            self.recorder.on_stage_decision(done.mb, start, end);
+        }
+        self.pending[mb].extend(done.decisions);
+        Ok(true)
+    }
+
+    /// ⑥ apply a microbatch's pending commits (two-phase commit, phase 2):
+    /// commit + retire (+ preempt under KV pressure). A verdict commits
+    /// 1..=k+1 tokens; the scheduler cuts the window at EOS /
+    /// max_new_tokens / KV pressure. Runs just before the microbatch's
+    /// next plan, so a stale verdict can never alias a re-admitted
+    /// sequence (admissions into this microbatch happen only after this).
+    fn apply_commits(&mut self, mb: usize) {
+        let decided = std::mem::take(&mut self.pending[mb]);
+        if decided.is_empty() {
+            return;
+        }
         let t_commit = self.now();
         for (slot, seq_id, verdict) in decided {
-            // a commit earlier in this loop may have preempted this slot's
-            // sequence; its verdict is discarded and re-derived
+            // a commit earlier in this loop — or another microbatch's
+            // commit while this one was in flight — may have preempted
+            // this slot's sequence; its verdict is discarded and re-derived
             // (identically, by the deterministic RNG keying) after resume
             if self.scheduler.slot(slot).map(|s| s.request.id) != Some(seq_id) {
                 continue;
             }
-            let outcome = self.scheduler.commit_multi(slot, &verdict.tokens);
+            let outcome =
+                self.scheduler
+                    .commit_multi_scoped(slot, &verdict.tokens, mb, self.n_mb);
             if verdict.proposed > 0 {
                 // tally COMMITTED acceptances: a window cut by EOS / the KV
                 // ceiling / self-preemption discards its accepted suffix
@@ -406,13 +615,44 @@ impl PjrtEngine {
                 self.runtime.reset_kv_slot(slot);
             }
         }
-        self.scheduler.advance();
-        Ok(true)
+    }
+
+    /// Idle handling when a microbatch had nothing runnable: sleep only if
+    /// *no* microbatch has work (no running slots, no in-flight tasks, no
+    /// pending commits), bounded by `idle_poll_us` — and skip the sleep
+    /// entirely when the next arrival is already due.
+    fn idle_wait(&self) {
+        if self.inflight.iter().any(Option::is_some)
+            || self.pending.iter().any(|p| !p.is_empty())
+            || self.scheduler.running_len() > 0
+        {
+            return; // another microbatch owns runnable or reapable work
+        }
+        if self.idle_poll_us == 0 {
+            return; // busy-poll mode
+        }
+        let now = self.now();
+        let poll_us = match self.scheduler.next_arrival() {
+            Some(t) if t <= now => return, // due now: replan immediately
+            Some(t) => {
+                let until_us = ((t - now) * 1e6).ceil() as u64;
+                self.idle_poll_us.min(until_us.max(1))
+            }
+            // no future arrivals either: the run is drained, nothing to
+            // poll for
+            None => return,
+        };
+        std::thread::sleep(std::time::Duration::from_micros(poll_us));
     }
 
     /// KV-pressure evictions so far (recompute-on-resume preemptions).
     pub fn preemption_count(&self) -> u64 {
         self.scheduler.preemption_count()
+    }
+
+    /// Measured decision/GPU overlap from the recorder's stage timeline.
+    pub fn overlap_report(&self) -> OverlapReport {
+        self.recorder.overlap_report()
     }
 
     fn scheduler_seq(&self, slot: usize) -> Option<&crate::engine::request::Sequence> {

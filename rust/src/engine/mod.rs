@@ -1,15 +1,20 @@
 //! Serving engine: requests, preemptive continuous-batching scheduler
 //! (chunked prefill, recompute-on-resume, SLO-aware admission), paged KV
-//! accounting, tokenizer, and the PJRT-backed end-to-end engine.
+//! accounting, tokenizer, and the pipelined executor ([`Engine`]) that
+//! runs end to end over any [`DataPlane`] — PJRT in production
+//! ([`PjrtEngine`]), [`synthetic::SyntheticRuntime`] for artifact-free
+//! tests and the overlap harness.
 
 pub mod engine;
 pub mod kvcache;
 pub mod request;
 pub mod scheduler;
+pub mod synthetic;
 pub mod tokenizer;
 
-pub use engine::PjrtEngine;
+pub use engine::{DataPlane, Engine, PjrtEngine};
 pub use kvcache::KvAllocator;
+pub use synthetic::SyntheticRuntime;
 pub use request::{Phase, Request, Sequence};
 pub use scheduler::{
     CommitOutcome, MultiCommitOutcome, Scheduler, SchedulerConfig, SchedulingOutput, SlotPlan,

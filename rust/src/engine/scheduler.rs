@@ -218,12 +218,40 @@ impl Scheduler {
         age / slo + boost
     }
 
+    /// Earliest arrival time among waiting requests, if any — lets the
+    /// engine bound (or skip) its idle poll instead of sleeping a fixed
+    /// quantum while an arrival is already due.
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.waiting
+            .iter()
+            .map(|e| e.req.arrival)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
     /// Admit waiting requests into free slots (KV admission control in
     /// SLO-priority order), allocate the chunked-prefill budget, then emit
     /// this iteration's plan. `now` gates arrivals (open-loop traces).
     pub fn plan(&mut self, now: f64) -> SchedulingOutput {
+        self.plan_mb(now, 0, 1)
+    }
+
+    /// Microbatch-scoped plan: the slot space is partitioned into `n_mb`
+    /// interleaved microbatches (slot `s` belongs to microbatch `s % n_mb`)
+    /// and this call admits into, budgets, and plans ONLY microbatch `mb`'s
+    /// slots. Other microbatches' planned chunks (`last_chunks`) are left
+    /// untouched, so in-flight microbatches advance independently via
+    /// [`Self::advance_mb`]. `plan(now)` is the `n_mb = 1` special case.
+    ///
+    /// The chunked-prefill token budget is per *plan*, i.e. per microbatch
+    /// iteration: each microbatch's prefill concurrency is bounded
+    /// independently, matching its independent forward pass.
+    pub fn plan_mb(&mut self, now: f64, mb: usize, n_mb: usize) -> SchedulingOutput {
+        assert!(n_mb >= 1 && mb < n_mb, "microbatch {mb} of {n_mb}");
+        let in_mb = |s: usize| s % n_mb == mb;
         let mut admitted = Vec::new();
-        while let Some(slot) = self.slots.iter().position(|s| s.is_none()) {
+        while let Some(slot) =
+            (0..self.slots.len()).find(|&s| in_mb(s) && self.slots[s].is_none())
+        {
             // highest-scoring arrived entry that fits; ties (e.g. the
             // closed-loop case where every score is 0) keep queue order.
             let mut best: Option<(usize, f64)> = None;
@@ -232,7 +260,7 @@ impl Scheduler {
                     continue;
                 }
                 let score = self.admission_score(e, now);
-                if best.map_or(true, |(_, b)| score > b + 1e-12) {
+                if best.is_none_or(|(_, b)| score > b + 1e-12) {
                     best = Some((i, score));
                 }
             }
@@ -248,10 +276,14 @@ impl Scheduler {
         }
 
         // Chunk allocation: decode slots always advance one token; prefill
-        // slots share the budget oldest-arrival-first.
+        // slots share the budget oldest-arrival-first. Only this
+        // microbatch's slots participate.
         let mut chunks = vec![0usize; self.slots.len()];
         let mut prefill: Vec<usize> = Vec::new();
         for (s, slot) in self.slots.iter().enumerate() {
+            if !in_mb(s) {
+                continue;
+            }
             let Some(seq) = slot else { continue };
             if seq.phase == Phase::Decode {
                 chunks[s] = 1;
@@ -284,6 +316,9 @@ impl Scheduler {
 
         let mut plan = SchedulingOutput { iter: self.iter, slots: Vec::new(), admitted };
         for (s, seq) in self.slots.iter().enumerate() {
+            if !in_mb(s) {
+                continue; // another microbatch's slot
+            }
             let Some(seq) = seq else { continue };
             if chunks[s] == 0 {
                 continue; // prefill-paused
@@ -300,7 +335,13 @@ impl Scheduler {
                 decode_iter: seq.output.len() as u64,
             });
         }
-        self.last_chunks = chunks;
+        // Merge this microbatch's chunks; other microbatches' pending
+        // chunks (not yet consumed by their advance_mb) must survive.
+        for s in 0..self.slots.len() {
+            if in_mb(s) {
+                self.last_chunks[s] = chunks[s];
+            }
+        }
         self.iter += 1;
         plan
     }
@@ -407,6 +448,37 @@ impl Scheduler {
         out
     }
 
+    /// Microbatch-scoped commit path for the pipelined executor's
+    /// two-phase commit: decisions reaped from the asynchronous decision
+    /// plane land as *pending commits* and are applied — through this
+    /// method — just before the owning microbatch's next plan.
+    ///
+    /// The scope assertion is the contract that keeps preemption and
+    /// spec-verify semantics exact: a pending commit may only ever be
+    /// applied to a slot of its own microbatch, at a point where that
+    /// microbatch has no forward in flight. Cross-microbatch effects are
+    /// limited to KV-pressure evictions of *other* microbatches' slots,
+    /// whose not-yet-reaped verdicts the engine discards by the
+    /// `(slot, seq_id)` identity guard — and because admissions into a
+    /// microbatch happen only in its own `plan_mb`, after its pending
+    /// commits are applied, a stale verdict can never alias a re-admitted
+    /// sequence in the same slot.
+    pub fn commit_multi_scoped(
+        &mut self,
+        slot: usize,
+        tokens: &[u32],
+        mb: usize,
+        n_mb: usize,
+    ) -> MultiCommitOutcome {
+        assert!(n_mb >= 1 && mb < n_mb, "microbatch {mb} of {n_mb}");
+        assert_eq!(
+            slot % n_mb,
+            mb,
+            "pending commit applied to a foreign microbatch's slot"
+        );
+        self.commit_multi(slot, tokens)
+    }
+
     /// Victim policy: the latest-arrived running sequence other than
     /// `except` (LIFO preemption — youngest work is cheapest to redo).
     fn pick_victim(&self, except: usize) -> Option<usize> {
@@ -445,7 +517,18 @@ impl Scheduler {
     /// (after commits). Slots emptied since planning (finished, preempted)
     /// are skipped; calling twice without a new plan is a no-op.
     pub fn advance(&mut self) {
+        self.advance_mb(0, 1);
+    }
+
+    /// Microbatch-scoped advance: consume only microbatch `mb`'s planned
+    /// chunks, leaving other microbatches' pending chunks intact (they may
+    /// still have forwards or decisions in flight).
+    pub fn advance_mb(&mut self, mb: usize, n_mb: usize) {
+        assert!(n_mb >= 1 && mb < n_mb, "microbatch {mb} of {n_mb}");
         for s in 0..self.last_chunks.len() {
+            if s % n_mb != mb {
+                continue;
+            }
             let chunk = std::mem::take(&mut self.last_chunks[s]);
             if chunk == 0 {
                 continue;
@@ -949,6 +1032,140 @@ mod tests {
         assert_eq!((p3.slots[0].chunk_len, p3.slots[0].needs_decision), (2, true));
         assert!(s.commit(0, 4).finished.is_some(), "max_new_tokens = 1");
         assert_eq!(s.kv.used_blocks(), 0);
+    }
+
+    // ---- microbatch-scoped planning (pipelined executor) ----
+
+    #[test]
+    fn plan_mb_partitions_slot_space() {
+        let mut s = sched(4, 100);
+        for i in 0..4 {
+            s.submit(req(i, 2, 2));
+        }
+        let p0 = s.plan_mb(0.0, 0, 2);
+        // microbatch 0 owns slots 0 and 2
+        assert_eq!(p0.admitted, vec![0, 1]);
+        assert!(p0.slots.iter().all(|sp| sp.slot % 2 == 0), "{p0:?}");
+        let p1 = s.plan_mb(0.0, 1, 2);
+        assert_eq!(p1.admitted, vec![2, 3]);
+        assert!(p1.slots.iter().all(|sp| sp.slot % 2 == 1), "{p1:?}");
+        // advancing microbatch 0 must not consume microbatch 1's chunks
+        s.advance_mb(0, 2);
+        let pos_mb1: Vec<usize> =
+            [1, 3].iter().map(|&sl| s.slot(sl).unwrap().position).collect();
+        assert_eq!(pos_mb1, vec![0, 0], "mb 1 not advanced by mb 0's advance");
+        s.advance_mb(1, 2);
+        assert_eq!(s.slot(1).unwrap().position, 1);
+        assert_eq!(s.slot(0).unwrap().position, 1);
+    }
+
+    #[test]
+    fn interleaved_microbatch_plans_match_single_plan_streams() {
+        // Driving two interleaved microbatches to drain commits the same
+        // per-request tokens as the monolithic plan/advance loop.
+        let run = |n_mb: usize| {
+            let mut s = sched(4, 100);
+            for i in 0..6 {
+                s.submit(req(i, 3, 4));
+            }
+            let mut guard = 0;
+            while !s.is_idle() {
+                for mb in 0..n_mb {
+                    let plan = s.plan_mb(0.0, mb, n_mb);
+                    let decisions: Vec<(usize, u64)> = plan
+                        .slots
+                        .iter()
+                        .filter(|p| p.needs_decision)
+                        .map(|p| (p.slot, p.seq_id))
+                        .collect();
+                    for (slot, seq_id) in decisions {
+                        if s.slot(slot).map(|q| q.request.id) != Some(seq_id) {
+                            continue;
+                        }
+                        let _ = s.commit_multi_scoped(slot, &[5], mb, n_mb);
+                    }
+                    s.advance_mb(mb, n_mb);
+                }
+                guard += 1;
+                assert!(guard < 200, "stuck");
+            }
+            let mut fin: Vec<(u64, Vec<u32>)> = s
+                .take_finished()
+                .into_iter()
+                .map(|f| (f.request.id, f.output))
+                .collect();
+            fin.sort();
+            fin
+        };
+        assert_eq!(run(1), run(2));
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign microbatch")]
+    fn scoped_commit_rejects_foreign_slot() {
+        let mut s = sched(2, 100);
+        s.submit(req(0, 1, 2));
+        s.submit(req(1, 1, 2));
+        let _ = s.plan_mb(0.0, 0, 2);
+        let _ = s.plan_mb(0.0, 1, 2);
+        // slot 1 belongs to microbatch 1; committing it as mb 0 must panic
+        let _ = s.commit_multi_scoped(1, &[3], 0, 2);
+    }
+
+    #[test]
+    fn cross_microbatch_preemption_zeroes_victims_pending_chunk() {
+        // A commit in microbatch 0 evicts microbatch 1's slot under KV
+        // pressure while mb 1's chunk is still pending: the victim's chunk
+        // must be cleared so mb 1's later advance doesn't touch a
+        // re-admitted stranger.
+        let mut s = Scheduler::with_config(
+            2,
+            KvAllocator::new(2, 4),
+            64,
+            SchedulerConfig::default(),
+        );
+        let mut a = req(0, 3, 20);
+        a.arrival = 0.0;
+        let mut b = req(1, 3, 20);
+        b.arrival = 0.5;
+        s.submit(a);
+        s.submit(b);
+        // prefill both microbatches to their decision points (position 2)
+        for _ in 0..2 {
+            let _ = s.plan_mb(1.0, 0, 2);
+            let _ = s.plan_mb(1.0, 1, 2);
+            s.advance_mb(0, 2);
+            s.advance_mb(1, 2);
+        }
+        let p0 = s.plan_mb(1.0, 0, 2);
+        let _p1 = s.plan_mb(1.0, 1, 2); // mb 1's chunk now pending
+        assert!(p0.slots[0].needs_decision);
+        // grow slot 0 until it needs a second block → evicts slot 1
+        let out = s.commit_multi_scoped(0, &[7, 7, 7, 7], 0, 2);
+        assert!(
+            out.preempted.iter().any(|&(sl, vid)| sl == 1 && vid == 1),
+            "{out:?}"
+        );
+        // the victim's pending chunk was cleared by preempt()
+        s.advance_mb(1, 2); // must be a no-op, not a panic
+        assert!(s.slot(1).is_none());
+        s.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn next_arrival_tracks_waiting_queue() {
+        let mut s = sched(1, 100);
+        assert_eq!(s.next_arrival(), None);
+        let mut r = req(0, 2, 2);
+        r.arrival = 4.0;
+        s.submit(r);
+        let mut r2 = req(1, 2, 2);
+        r2.arrival = 2.5;
+        s.submit(r2);
+        assert_eq!(s.next_arrival(), Some(2.5));
+        let _ = s.plan(3.0); // admits request 1
+        assert_eq!(s.next_arrival(), Some(4.0));
     }
 
     #[test]

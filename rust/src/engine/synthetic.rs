@@ -1,0 +1,167 @@
+//! A context-faithful synthetic data plane implementing
+//! [`DataPlane`](super::engine::DataPlane), so the *real* pipelined
+//! executor — scheduler, two-phase commits, sampler service, overlap
+//! accounting — can run end to end without the PJRT artifacts (tests,
+//! property sweeps, the `overlap` harness, benches).
+//!
+//! Faithfulness matters more than realism here. Like the real runtime:
+//!
+//! - **KV state is per-slot and write-idempotent.** `step` records the fed
+//!   token at `(slot, position)`; re-feeding the same (token, position) —
+//!   what prefill-paused slots and other in-flight microbatches do — is a
+//!   no-op, and recompute-on-resume rebuilds the identical state from
+//!   position 0.
+//! - **Logits are a function of the slot's fed-token prefix** (a hash of
+//!   `kv[slot][0..=pos]` seeds a Zipf-shaped row). A draft chain fed a
+//!   rejected token therefore sees *different* logits than the true
+//!   continuation, so any bug that commits past the accept point — or
+//!   interleaves microbatches incorrectly — breaks stream comparisons
+//!   loudly, exactly like the `LogitsGen::ctx_view` churn tests.
+//! - **Rows cost real compute** (V hashes per slot per step), so the
+//!   forward has genuine wall time for the overlap machinery to hide
+//!   decision work under.
+//!
+//! Stale rows past a rejection point stay in `kv` until overwritten by a
+//! later feed at the same position — the same idempotent-overwrite
+//! contract as the real KV cache.
+
+use super::engine::DataPlane;
+use crate::rng::SplitMix64;
+use crate::runtime::StepOutput;
+
+/// In-process synthetic decode-step runtime.
+pub struct SyntheticRuntime {
+    batch: usize,
+    vocab: usize,
+    max_seq: usize,
+    seed: u64,
+    /// Fed token per (slot, position) — the synthetic KV cache.
+    kv: Vec<Vec<u32>>,
+}
+
+/// One SplitMix64 mix step as a pure keyed hash (the shared mixer from
+/// [`crate::rng`], evaluated statelessly).
+#[inline]
+fn mix(x: u64) -> u64 {
+    SplitMix64::new(x).next_u64()
+}
+
+impl SyntheticRuntime {
+    pub fn new(batch: usize, vocab: usize, max_seq: usize, seed: u64) -> SyntheticRuntime {
+        SyntheticRuntime {
+            batch,
+            vocab,
+            max_seq,
+            seed,
+            kv: vec![Vec::new(); batch],
+        }
+    }
+
+    /// One logits row for the context `kv[slot][0..=pos]`: a Zipf-shaped
+    /// head (low ids likelier, like the AOT model's `lm_bias`) plus
+    /// context-keyed noise. Pure function of (seed, context bytes).
+    fn row(&self, slot: usize, pos: usize) -> Vec<f32> {
+        let mut key = self.seed ^ 0xC0FF_EE00_D15E_A5E5;
+        for &t in &self.kv[slot][..=pos] {
+            key = mix(key ^ t as u64);
+        }
+        let mut out = Vec::with_capacity(self.vocab);
+        for v in 0..self.vocab {
+            let bias = -1.1 * ((1 + v) as f32).ln();
+            let h = mix(key ^ (v as u64).wrapping_mul(0x9E37_79B9));
+            // uniform in [-2, 2): enough spread for truncation filters to
+            // bite without drowning the Zipf head
+            let noise = ((h >> 11) as f32 / (1u64 << 53) as f32) * 4.0 - 2.0;
+            out.push(bias + noise);
+        }
+        out
+    }
+}
+
+impl DataPlane for SyntheticRuntime {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn step(
+        &mut self,
+        ids: &[i32],
+        positions: &[i32],
+        tau: &[f32],
+    ) -> crate::Result<StepOutput> {
+        assert_eq!(ids.len(), self.batch);
+        assert_eq!(positions.len(), self.batch);
+        let _ = tau; // no SHVS precompute on the synthetic plane
+        let mut logits = Vec::with_capacity(self.batch * self.vocab);
+        for slot in 0..self.batch {
+            let pos = positions[slot] as usize;
+            assert!(pos < self.max_seq, "position {pos} past max_seq");
+            if self.kv[slot].len() <= pos {
+                self.kv[slot].resize(pos + 1, 0);
+            }
+            // Idempotent KV write: same (token, position) → same state.
+            self.kv[slot][pos] = ids[slot] as u32;
+            logits.extend(self.row(slot, pos));
+        }
+        Ok(StepOutput { logits, stats: Vec::new() })
+    }
+
+    fn reset_kv_slot(&mut self, slot: usize) {
+        self.kv[slot].clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refeeding_same_position_is_idempotent() {
+        let mut rt = SyntheticRuntime::new(2, 64, 32, 7);
+        let a = rt.step(&[3, 5], &[0, 0], &[1.0, 1.0]).unwrap();
+        let b = rt.step(&[3, 5], &[0, 0], &[1.0, 1.0]).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn logits_depend_on_full_context_not_position_alone() {
+        let mut rt = SyntheticRuntime::new(1, 64, 32, 7);
+        rt.step(&[3], &[0], &[1.0]).unwrap();
+        let after_a = rt.step(&[9], &[1], &[1.0]).unwrap();
+        let mut rt2 = SyntheticRuntime::new(1, 64, 32, 7);
+        rt2.step(&[4], &[0], &[1.0]).unwrap(); // different prefix
+        let after_b = rt2.step(&[9], &[1], &[1.0]).unwrap();
+        assert_ne!(after_a.logits, after_b.logits, "context must matter");
+    }
+
+    #[test]
+    fn recompute_after_reset_rebuilds_identical_state() {
+        let mut rt = SyntheticRuntime::new(1, 64, 32, 7);
+        rt.step(&[3], &[0], &[1.0]).unwrap();
+        let orig = rt.step(&[9], &[1], &[1.0]).unwrap();
+        rt.reset_kv_slot(0);
+        rt.step(&[3], &[0], &[1.0]).unwrap();
+        let replay = rt.step(&[9], &[1], &[1.0]).unwrap();
+        assert_eq!(orig.logits, replay.logits);
+    }
+
+    #[test]
+    fn stale_draft_rows_are_overwritten_by_later_feeds() {
+        let mut rt = SyntheticRuntime::new(1, 64, 32, 7);
+        rt.step(&[3], &[0], &[1.0]).unwrap();
+        // draft chain wrote a (later rejected) token at position 1
+        rt.step(&[50], &[1], &[1.0]).unwrap();
+        // the committed path re-feeds position 1 with the real token
+        let fixed = rt.step(&[9], &[1], &[1.0]).unwrap();
+        let mut clean = SyntheticRuntime::new(1, 64, 32, 7);
+        clean.step(&[3], &[0], &[1.0]).unwrap();
+        let want = clean.step(&[9], &[1], &[1.0]).unwrap();
+        assert_eq!(fixed.logits, want.logits, "overwrite must erase the draft");
+    }
+}

@@ -7,6 +7,7 @@ pub mod exactness;
 pub mod holdout;
 pub mod measure;
 pub mod micro;
+pub mod overlap;
 
 use crate::util::json::Json;
 use std::path::Path;
@@ -53,10 +54,13 @@ impl Effort {
 
 /// All experiment ids, in paper order, plus repo-native scenarios beyond
 /// the paper (`burst`: tail latency under bursty arrivals; `specdec`:
-/// verified speculative decoding vs draft window size).
+/// verified speculative decoding vs draft window size; `overlap`:
+/// measured-vs-simulated decision-plane overlap under the pipelined
+/// executor).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst", "specdec",
+    "overlap",
 ];
 
 /// Run one experiment by id.
@@ -79,6 +83,7 @@ pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
         "fig11" => micro::fig11(effort),
         "fig12" => micro::fig12(effort),
         "fig13" => exactness::fig13(effort),
+        "overlap" => overlap::overlap(effort),
         other => anyhow::bail!("unknown experiment {other}"),
     })
 }

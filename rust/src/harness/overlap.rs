@@ -1,0 +1,215 @@
+//! Measured-vs-simulated decision-plane overlap (DESIGN.md §8): does the
+//! pipelined executor actually hide decision latency under forwards, and
+//! does the hidden fraction match what the timing model predicts?
+//!
+//! The **measured** side runs the *real* executor — scheduler, two-phase
+//! commits, sampler service threads, stage timeline — over the
+//! context-faithful [`SyntheticRuntime`] data plane (no artifacts needed),
+//! sweeping `n_microbatches` with overlap on/off. The decision plane is
+//! real, measured code; only the forward is synthetic (and it costs real
+//! wall time, so there is something to hide under). The **simulated** side
+//! evaluates [`decode_iteration`]'s `overlap_fraction` for the paper's
+//! deployments with the measured SHVS per-sequence cost.
+//!
+//! The report also prints each sweep row's stream digest: overlap and
+//! microbatching must change timing, never tokens.
+
+use super::e2e::measured_shvs_per_seq;
+use super::{Effort, Report};
+use crate::config::{DecisionVariant, EngineConfig, ParallelConfig, PlatformSpec};
+use crate::engine::{Engine, SyntheticRuntime};
+use crate::metrics::OverlapReport;
+use crate::simulator::{decode_iteration, DecisionMode, GpuModel};
+use crate::util::json::Json;
+use crate::workload::{self, TraceConfig};
+use std::fmt::Write;
+
+/// One measured sweep row.
+struct MiniRun {
+    digest: u64,
+    report: OverlapReport,
+    wall_s: f64,
+    tokens: usize,
+}
+
+/// Drive the real executor over the synthetic data plane.
+fn run_mini(
+    n_mb: usize,
+    overlap: bool,
+    spec_k: usize,
+    n_req: usize,
+    vocab: usize,
+    samplers: usize,
+) -> MiniRun {
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = samplers;
+    cfg.sampler.seed = 0x0EE7_1A9;
+    cfg.n_microbatches = n_mb;
+    cfg.overlap = overlap;
+    cfg.spec_k = spec_k;
+    cfg.idle_poll_us = 20;
+    let runtime = SyntheticRuntime::new(8, vocab, 256, 11);
+    let mut engine = Engine::new(runtime, &cfg, None);
+    let trace = workload::generate(&TraceConfig::tiny(n_req, vocab));
+    for r in trace.requests {
+        engine.submit(r);
+    }
+    let t0 = std::time::Instant::now();
+    let summary = engine.run_until_idle().expect("synthetic engine run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let finished: Vec<(u64, Vec<u32>)> = engine
+        .take_finished()
+        .into_iter()
+        .map(|f| (f.request.id, f.output))
+        .collect();
+    let report = engine.overlap_report();
+    engine.shutdown();
+    MiniRun {
+        digest: crate::util::stream_digest(finished),
+        report,
+        wall_s,
+        tokens: summary.tokens,
+    }
+}
+
+/// The `overlap` experiment: measured sweep + simulated deployments.
+pub fn overlap(effort: Effort) -> Report {
+    let n_req = effort.scale(16, 64) as usize;
+    let vocab = effort.scale(4_096, 16_384) as usize;
+    let samplers = 2;
+
+    let mut md = String::from(
+        "### overlap — decision latency hidden under forwards \
+         (measured executor vs timing model)\n\n\
+         measured: real sampler service + pipelined executor over the \
+         synthetic data plane\n\n\
+         | n_mb | overlap | hidden | exposed wait | bubble | ms/token | digest |\n\
+         |---:|---|---:|---:|---:|---:|---|\n",
+    );
+    let mut rows = Vec::new();
+    let mut digests = Vec::new();
+    for (n_mb, ov) in [(1usize, false), (2, true), (4, true)] {
+        let run = run_mini(n_mb, ov, 0, n_req, vocab, samplers);
+        let r = &run.report;
+        let _ = writeln!(
+            md,
+            "| {} | {} | {:>5.1}% | {:>7.2} ms | {:>5.1}% | {:>7.3} ms | {:016x} |",
+            n_mb,
+            if ov { "on" } else { "off" },
+            r.overlap_fraction * 100.0,
+            r.exposed_wait_s * 1e3,
+            r.last_stage_bubble * 100.0,
+            run.wall_s / (run.tokens.max(1) as f64) * 1e3,
+            run.digest,
+        );
+        digests.push(run.digest);
+        rows.push(Json::obj(vec![
+            ("n_microbatches", Json::Num(n_mb as f64)),
+            ("overlap", Json::Bool(ov)),
+            ("overlap_fraction", Json::Num(r.overlap_fraction)),
+            ("exposed_wait_s", Json::Num(r.exposed_wait_s)),
+            ("last_stage_bubble", Json::Num(r.last_stage_bubble)),
+            ("decision_busy_s", Json::Num(r.decision_busy_s)),
+            ("gpu_busy_s", Json::Num(r.gpu_busy_s)),
+            ("digest", Json::Str(format!("{:016x}", run.digest))),
+        ]));
+    }
+    let identical = digests.windows(2).all(|w| w[0] == w[1]);
+    let _ = writeln!(
+        md,
+        "\nstream digests identical across the sweep: **{identical}** \
+         (overlap changes timing, never tokens)\n"
+    );
+
+    // Simulated column: the timing model's predicted hidden fraction for
+    // the paper deployments, with the measured SHVS per-seq cost.
+    md.push_str(
+        "simulated (roofline model, measured SHVS cost):\n\n\
+         | platform | model | TP×PP | predicted hidden |\n|---|---|---|---:|\n",
+    );
+    let mut sim_rows = Vec::new();
+    for platform in [PlatformSpec::l40(), PlatformSpec::h100(), PlatformSpec::b200()] {
+        let Some((model, parallel)) = ParallelConfig::paper_matrix(&platform).pop() else {
+            continue;
+        };
+        let per_seq = measured_shvs_per_seq(model.vocab, effort);
+        let gpu = GpuModel::new(model.clone(), platform.clone(), parallel);
+        let batch = 32 * parallel.world_size();
+        let t = decode_iteration(
+            &gpu,
+            DecisionMode::SimpleOverlapped { per_seq_s: per_seq, samplers: 64 },
+            batch,
+            512.0,
+        );
+        let _ = writeln!(
+            md,
+            "| {} | {} | {}x{} | {:.1}% |",
+            platform.name,
+            model.name,
+            parallel.tp,
+            parallel.pp,
+            t.overlap_fraction * 100.0
+        );
+        sim_rows.push(Json::obj(vec![
+            ("platform", Json::Str(platform.name.into())),
+            ("model", Json::Str(model.name.into())),
+            ("overlap_fraction", Json::Num(t.overlap_fraction)),
+        ]));
+    }
+    md.push_str(
+        "\nthe paper's claim is exactly this cell: the decision plane \
+         overlaps (hidden ≈ 100%) whenever its wall time is shorter than a \
+         forward; `serve_e2e --overlap --n_microbatches 2` reports the same \
+         measured fraction on the real PJRT stack\n",
+    );
+
+    Report {
+        id: "overlap",
+        title: "Measured vs simulated decision-plane overlap".into(),
+        markdown: md,
+        json: Json::obj(vec![
+            ("measured", Json::Arr(rows)),
+            ("digests_identical", Json::Bool(identical)),
+            ("simulated", Json::Arr(sim_rows)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_experiment_streams_invariant_and_hidden_fraction_sane() {
+        let r = overlap(Effort::Quick);
+        assert!(r.json.get("digests_identical").as_bool().unwrap());
+        let rows = r.json.get("measured").as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        // synchronous engine hides nothing by construction
+        let sync = &rows[0];
+        assert_eq!(sync.get("n_microbatches").as_usize(), Some(1));
+        assert!(sync.get("overlap_fraction").as_f64().unwrap() < 0.05);
+        // Overlapped runs should hide a measurable share of decision work —
+        // but actual concurrency is an OS-scheduling fact, so only assert
+        // strict positivity where the host can genuinely run the sampler
+        // threads beside the engine thread (skip on tiny/saturated runners).
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        for row in &rows[1..] {
+            let f = row.get("overlap_fraction").as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&f));
+            if cores >= 4 {
+                assert!(
+                    f > 0.0,
+                    "n_mb={:?}: overlap fraction {f} not positive on a {cores}-core host",
+                    row.get("n_microbatches").as_usize()
+                );
+            }
+        }
+        // simulated rows are valid fractions
+        for row in r.json.get("simulated").as_arr().unwrap() {
+            let f = row.get("overlap_fraction").as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&f));
+        }
+    }
+}

@@ -7,6 +7,10 @@
 //! - `calibrate`  — measure decision-plane costs + fit the sizing model.
 //! - `sim`        — run one distributed serving simulation and print it.
 
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
 use simple_serve::engine::PjrtEngine;
@@ -30,6 +34,9 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("batch_per_gpu", "microbatch per GPU (sim)"),
     OptSpec::value("max_seq_len", "max sequence length"),
     OptSpec::value("spec_k", "speculative draft window per iteration (serve; 0 = off)"),
+    OptSpec::value("n_microbatches", "in-flight microbatches for the pipelined executor"),
+    OptSpec::value("idle_poll_us", "idle poll quantum in µs (0 = busy-poll)"),
+    OptSpec::flag("overlap", "overlap the decision plane with forwards (serve)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),
     OptSpec::flag("full", "full effort (paper-scale sweeps)"),
     OptSpec::flag("help", "show help"),
@@ -70,6 +77,9 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
     let n: usize = args.get_or("requests", 16)?;
     let mut cfg = EngineConfig::default();
     cfg.apply_args(args)?;
+    if args.flag("overlap") {
+        cfg.overlap = true;
+    }
 
     let manifest = Manifest::load(&default_artifacts_dir())?;
     let rt = ModelRuntime::load(&manifest, &model)?;
@@ -102,6 +112,17 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
     }
     let summary = engine.run_until_idle()?;
     println!("{}", summary.to_json().to_string_pretty());
+    let ov = engine.overlap_report();
+    if ov.decision_busy_s > 0.0 {
+        println!(
+            "decision overlap: {:.0}% hidden under forwards, {:.2} ms exposed, \
+             last-stage bubble {:.1}% ({} microbatches)",
+            ov.overlap_fraction * 100.0,
+            ov.exposed_wait_s * 1e3,
+            ov.last_stage_bubble * 100.0,
+            ov.microbatches
+        );
+    }
     if engine.spec_windows > 0 {
         println!(
             "speculative decoding: {}/{} drafts accepted over {} windows",

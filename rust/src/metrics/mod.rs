@@ -22,5 +22,5 @@ pub mod recorder;
 pub mod stats;
 
 pub use histogram::LatencyHistogram;
-pub use recorder::{Recorder, ServingSummary};
+pub use recorder::{OverlapReport, Recorder, ServingSummary};
 pub use stats::{ecdf, mean, percentile, total_variation_distance, Summary};

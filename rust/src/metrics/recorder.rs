@@ -25,10 +25,90 @@ pub struct Recorder {
     requests: HashMap<u64, RequestRecord>,
     /// (start, end) busy intervals per resource name (e.g. "gpu0", "cpu").
     busy: HashMap<String, Vec<(f64, f64)>>,
+    /// Stage timeline (pipelined executor): (microbatch, start, end)
+    /// GPU-busy intervals — forwards (and inline epilogues) per microbatch.
+    ///
+    /// Deliberately separate from the `busy` map even though `on_stage_*`
+    /// feeds both: `busy["gpu"]`/`busy["cpu"]` are the generic named
+    /// resources that *simulated* runs also write (utilization figures),
+    /// while the stage vectors carry only real-engine intervals with
+    /// microbatch attribution — overlap math over the busy map would
+    /// silently mix simulator spans in. The duplication is a few dozen
+    /// bytes per iteration.
+    stage_gpu: Vec<(usize, f64, f64)>,
+    /// (microbatch, start, end) decision-busy intervals, one per sampler
+    /// batch, timestamped by the workers against the shared epoch.
+    stage_decision: Vec<(usize, f64, f64)>,
+    /// Engine-thread seconds spent blocked waiting on decisions (the
+    /// exposed, non-overlapped part of the decision plane).
+    exposed_wait_s: f64,
     /// Observation horizon for throughput/utilization.
     t_start: f64,
     t_end: f64,
     horizon_init: bool,
+}
+
+/// Measured overlap between decision-plane work and data-plane compute —
+/// the quantity the paper's Fig. 3 gains rest on (decision latency hidden
+/// under forwards instead of serializing the last stage).
+#[derive(Debug, Clone, Default)]
+pub struct OverlapReport {
+    /// Total decision-plane busy seconds (summed across samplers).
+    pub decision_busy_s: f64,
+    /// Portion of `decision_busy_s` that ran while a GPU stage was busy.
+    pub hidden_s: f64,
+    /// `hidden_s / decision_busy_s` (0 when there were no decisions).
+    pub overlap_fraction: f64,
+    /// Engine-thread seconds stalled waiting for decisions.
+    pub exposed_wait_s: f64,
+    /// The measured last-stage bubble: stalled wait as a fraction of the
+    /// engine's productive timeline (GPU busy + stalls).
+    pub last_stage_bubble: f64,
+    /// Merged GPU-busy seconds across microbatches.
+    pub gpu_busy_s: f64,
+    /// Microbatches observed in the stage timeline.
+    pub microbatches: usize,
+}
+
+impl OverlapReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("decision_busy_s", Json::Num(self.decision_busy_s)),
+            ("hidden_s", Json::Num(self.hidden_s)),
+            ("overlap_fraction", Json::Num(self.overlap_fraction)),
+            ("exposed_wait_s", Json::Num(self.exposed_wait_s)),
+            ("last_stage_bubble", Json::Num(self.last_stage_bubble)),
+            ("gpu_busy_s", Json::Num(self.gpu_busy_s)),
+            ("microbatches", Json::Num(self.microbatches as f64)),
+        ])
+    }
+}
+
+/// Sort + merge possibly-overlapping intervals into disjoint spans.
+fn merge_intervals(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Length of `[s, e] ∩ ⋃ spans` for sorted disjoint `spans`.
+fn intersect_len(s: f64, e: f64, spans: &[(f64, f64)]) -> f64 {
+    // First span that could overlap: the one before the partition point.
+    let start = spans.partition_point(|&(_, se)| se < s);
+    let mut hidden = 0.0;
+    for &(gs, ge) in &spans[start..] {
+        if gs >= e {
+            break;
+        }
+        hidden += (e.min(ge) - s.max(gs)).max(0.0);
+    }
+    hidden
 }
 
 impl Recorder {
@@ -66,6 +146,68 @@ impl Recorder {
         if end > start {
             self.busy.entry(resource.to_string()).or_default().push((start, end));
             self.extend_horizon(end);
+        }
+    }
+
+    /// Record one microbatch's GPU stage interval (a forward pass, or the
+    /// baseline's inline sampling epilogue). Also feeds the "gpu"
+    /// utilization resource.
+    pub fn on_stage_gpu(&mut self, mb: usize, start: f64, end: f64) {
+        if end > start {
+            self.stage_gpu.push((mb, start, end));
+            self.on_busy("gpu", start, end);
+        }
+    }
+
+    /// Record one sampler's decision-busy interval for a microbatch's
+    /// task. Also feeds the "cpu" utilization resource.
+    pub fn on_stage_decision(&mut self, mb: usize, start: f64, end: f64) {
+        if end > start {
+            self.stage_decision.push((mb, start, end));
+            self.on_busy("cpu", start, end);
+        }
+    }
+
+    /// Account engine-thread stall time spent blocked on decision reaping
+    /// (the exposed decision latency — zero when overlap hides it all).
+    pub fn on_decision_exposed(&mut self, dt: f64) {
+        if dt > 0.0 {
+            self.exposed_wait_s += dt;
+        }
+    }
+
+    /// Measured overlap between decision work and GPU stages: how much of
+    /// the decision plane's busy time ran under a forward, and how big the
+    /// remaining last-stage bubble was.
+    pub fn overlap_report(&self) -> OverlapReport {
+        let gpu = merge_intervals(self.stage_gpu.iter().map(|&(_, s, e)| (s, e)).collect());
+        let gpu_busy_s: f64 = gpu.iter().map(|&(s, e)| e - s).sum();
+        let mut decision_busy_s = 0.0;
+        let mut hidden_s = 0.0;
+        for &(_, s, e) in &self.stage_decision {
+            decision_busy_s += e - s;
+            hidden_s += intersect_len(s, e, &gpu);
+        }
+        let microbatches = self
+            .stage_gpu
+            .iter()
+            .chain(&self.stage_decision)
+            .map(|&(mb, _, _)| mb + 1)
+            .max()
+            .unwrap_or(0);
+        let overlap_fraction =
+            if decision_busy_s > 0.0 { hidden_s / decision_busy_s } else { 0.0 };
+        let denom = gpu_busy_s + self.exposed_wait_s;
+        let last_stage_bubble =
+            if denom > 0.0 { self.exposed_wait_s / denom } else { 0.0 };
+        OverlapReport {
+            decision_busy_s,
+            hidden_s,
+            overlap_fraction: overlap_fraction.clamp(0.0, 1.0),
+            exposed_wait_s: self.exposed_wait_s,
+            last_stage_bubble,
+            gpu_busy_s,
+            microbatches,
         }
     }
 
@@ -300,6 +442,43 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("requests").as_usize(), Some(1));
         assert_eq!(j.get("tokens").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn overlap_report_separates_hidden_and_exposed() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        // mb0 forward [0,1], mb1 forward [1.5, 2.5]
+        r.on_stage_gpu(0, 0.0, 1.0);
+        r.on_stage_gpu(1, 1.5, 2.5);
+        // decision A fully under mb0's forward; B half-exposed in the gap
+        r.on_stage_decision(1, 0.2, 0.6); // 0.4 hidden
+        r.on_stage_decision(0, 1.3, 1.7); // 0.2 of 0.4 hidden
+        r.on_decision_exposed(0.2);
+        let o = r.overlap_report();
+        assert!((o.decision_busy_s - 0.8).abs() < 1e-9);
+        assert!((o.hidden_s - 0.6).abs() < 1e-9, "hidden {}", o.hidden_s);
+        assert!((o.overlap_fraction - 0.75).abs() < 1e-9);
+        assert!((o.gpu_busy_s - 2.0).abs() < 1e-9);
+        assert!((o.exposed_wait_s - 0.2).abs() < 1e-9);
+        assert!((o.last_stage_bubble - 0.2 / 2.2).abs() < 1e-9);
+        assert_eq!(o.microbatches, 2);
+        // stage intervals also feed the legacy utilization resources
+        assert!(r.utilization("gpu") > 0.0);
+        assert!(r.utilization("cpu") > 0.0);
+    }
+
+    #[test]
+    fn overlap_report_zero_without_stage_timeline() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0);
+        r.on_busy("gpu", 0.0, 1.0); // legacy busy only — no stage data
+        let o = r.overlap_report();
+        assert_eq!(o.overlap_fraction, 0.0);
+        assert_eq!(o.microbatches, 0);
+        assert_eq!(o.last_stage_bubble, 0.0);
+        let j = o.to_json();
+        assert_eq!(j.get("microbatches").as_usize(), Some(0));
     }
 
     #[test]

@@ -78,6 +78,11 @@ pub struct IterationTiming {
     pub bubble_fraction: f64,
     /// GPU busy fraction within the cycle.
     pub gpu_busy_fraction: f64,
+    /// Predicted fraction of decision-plane work hidden under GPU compute:
+    /// `min(gpu-only cycle, decision wall) / decision wall` for the
+    /// overlapped modes, 0 for the serial ones. The measured counterpart
+    /// is [`crate::metrics::OverlapReport::overlap_fraction`].
+    pub overlap_fraction: f64,
 }
 
 /// Compose one decode iteration's timing.
@@ -98,40 +103,59 @@ pub fn decode_iteration(
     );
     let fanout = gpu.fanout_s(simple);
 
-    let (cycle, gpu_sampling, cpu_decision, stage_eff, comm_eff) = match mode {
-        DecisionMode::GpuEpilogue => {
-            let samp = gpu.gpu_sampling_s(batch);
-            // Eq. 4: the last stage carries compute + sampling; the cycle is
-            // pinned at the stage maximum, plus the synchronous host gap.
-            let last = stage + samp;
-            (last + comm + fanout + gpu.data.baseline_sync_s, samp, 0.0, stage, comm)
-        }
-        DecisionMode::CpuSerial { .. } => {
-            // Offloaded but NOT overlapped: decision wall time serializes
-            // after the forward each iteration (still a synchronous stack).
-            let d = mode.decision_wall_s(batch);
-            (stage + comm + fanout + gpu.data.baseline_sync_s + d, 0.0, d, stage, comm)
-        }
-        DecisionMode::SimpleOverlapped { .. } => {
-            // Overlapped: the decision plane runs under the next forward;
-            // it binds only if slower than the GPU cycle. Async rings shrink
-            // the host gap.
-            let d = mode.decision_wall_s(batch);
-            let gpu_cycle = stage + comm + fanout + gpu.data.simple_sync_s;
-            (gpu_cycle.max(d), 0.0, d, stage, comm)
-        }
-        DecisionMode::SpecVerify { k, .. } => {
-            // Draft chain: one weight pass but k+1 tokens of GEMM / KV /
-            // collective work per sequence — the roofline's weight-read
-            // term is batch-independent, so the multi-token chain reuses
-            // it while the per-token terms scale with the chain length.
-            let chain_stage = gpu.stage_compute_s(batch * (k + 1), ctx);
-            let chain_comm = gpu.pp_comm_s(batch * (k + 1));
-            let d = mode.decision_wall_s(batch);
-            let gpu_cycle = chain_stage + chain_comm + fanout + gpu.data.simple_sync_s;
-            (gpu_cycle.max(d), 0.0, d, chain_stage, chain_comm)
-        }
-    };
+    let (cycle, gpu_sampling, cpu_decision, stage_eff, comm_eff, overlap_fraction) =
+        match mode {
+            DecisionMode::GpuEpilogue => {
+                let samp = gpu.gpu_sampling_s(batch);
+                // Eq. 4: the last stage carries compute + sampling; the cycle
+                // is pinned at the stage maximum, plus the synchronous host
+                // gap. Nothing overlaps.
+                let last = stage + samp;
+                (
+                    last + comm + fanout + gpu.data.baseline_sync_s,
+                    samp,
+                    0.0,
+                    stage,
+                    comm,
+                    0.0,
+                )
+            }
+            DecisionMode::CpuSerial { .. } => {
+                // Offloaded but NOT overlapped: decision wall time serializes
+                // after the forward each iteration (still a synchronous
+                // stack) — hidden fraction zero by construction.
+                let d = mode.decision_wall_s(batch);
+                (
+                    stage + comm + fanout + gpu.data.baseline_sync_s + d,
+                    0.0,
+                    d,
+                    stage,
+                    comm,
+                    0.0,
+                )
+            }
+            DecisionMode::SimpleOverlapped { .. } => {
+                // Overlapped: the decision plane runs under the next forward;
+                // it binds only if slower than the GPU cycle. Async rings
+                // shrink the host gap.
+                let d = mode.decision_wall_s(batch);
+                let gpu_cycle = stage + comm + fanout + gpu.data.simple_sync_s;
+                let hidden = if d > 0.0 { gpu_cycle.min(d) / d } else { 0.0 };
+                (gpu_cycle.max(d), 0.0, d, stage, comm, hidden)
+            }
+            DecisionMode::SpecVerify { k, .. } => {
+                // Draft chain: one weight pass but k+1 tokens of GEMM / KV /
+                // collective work per sequence — the roofline's weight-read
+                // term is batch-independent, so the multi-token chain reuses
+                // it while the per-token terms scale with the chain length.
+                let chain_stage = gpu.stage_compute_s(batch * (k + 1), ctx);
+                let chain_comm = gpu.pp_comm_s(batch * (k + 1));
+                let d = mode.decision_wall_s(batch);
+                let gpu_cycle = chain_stage + chain_comm + fanout + gpu.data.simple_sync_s;
+                let hidden = if d > 0.0 { gpu_cycle.min(d) / d } else { 0.0 };
+                (gpu_cycle.max(d), 0.0, d, chain_stage, chain_comm, hidden)
+            }
+        };
 
     let total_sampling = gpu_sampling + cpu_decision;
     let sampling_fraction = match mode {
@@ -166,6 +190,7 @@ pub fn decode_iteration(
         sampling_fraction,
         bubble_fraction: bubble_fraction.clamp(0.0, 1.0),
         gpu_busy_fraction,
+        overlap_fraction: overlap_fraction.clamp(0.0, 1.0),
     }
 }
 
@@ -216,6 +241,12 @@ mod tests {
         assert!(simple.bubble_fraction < base.bubble_fraction);
         assert_eq!(simple.sampling_fraction, 0.0, "fully hidden");
         assert!(simple.gpu_busy_fraction > base.gpu_busy_fraction - 1e-9);
+        assert!(
+            (simple.overlap_fraction - 1.0).abs() < 1e-12,
+            "a hidden decision plane overlaps fully: {}",
+            simple.overlap_fraction
+        );
+        assert_eq!(base.overlap_fraction, 0.0, "epilogue overlaps nothing");
     }
 
     #[test]
@@ -229,6 +260,11 @@ mod tests {
         );
         assert!(slow.cycle_s >= slow.cpu_decision_s);
         assert!(slow.sampling_fraction > 0.0, "visible share when binding");
+        assert!(
+            slow.overlap_fraction < 1.0 && slow.overlap_fraction > 0.0,
+            "a binding decision plane is only partly hidden: {}",
+            slow.overlap_fraction
+        );
     }
 
     #[test]

@@ -58,9 +58,46 @@ pub fn ensure_dir(path: &std::path::Path) -> std::io::Result<()> {
     std::fs::create_dir_all(path)
 }
 
+/// FNV-1a digest over `(sequence id, committed tokens)` streams, id-ordered
+/// — THE deterministic token-stream fingerprint. `serve_e2e` prints it per
+/// engine variant and the `overlap` harness cross-checks it across
+/// executor configurations; both must hash identically, which is why this
+/// lives here and not in either caller.
+pub fn stream_digest(mut streams: Vec<(u64, Vec<u32>)>) -> u64 {
+    streams.sort();
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for (id, tokens) in &streams {
+        eat(*id);
+        eat(tokens.len() as u64);
+        for &t in tokens {
+            eat(t as u64);
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stream_digest_is_order_invariant_and_content_sensitive() {
+        let a = stream_digest(vec![(0, vec![1, 2]), (1, vec![3])]);
+        let b = stream_digest(vec![(1, vec![3]), (0, vec![1, 2])]);
+        assert_eq!(a, b, "id-ordered: input order must not matter");
+        let c = stream_digest(vec![(0, vec![1, 2]), (1, vec![4])]);
+        assert_ne!(a, c, "different tokens must move the digest");
+        // length-prefixing separates (tokens, id) boundaries
+        let d = stream_digest(vec![(0, vec![1, 2, 3])]);
+        let e = stream_digest(vec![(0, vec![1, 2]), (3, vec![])]);
+        assert_ne!(d, e);
+    }
 
     #[test]
     fn ceil_div_rounds_up() {

@@ -4,7 +4,11 @@
 //! deterministic Philox-generated random cases; failures print the case
 //! seed for reproduction. Each property runs dozens-to-hundreds of cases.
 
-use simple_serve::config::{DecisionVariant, SamplerConfig};
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
+use simple_serve::config::{DecisionVariant, EngineConfig, SamplerConfig};
 use simple_serve::decision::draft::DraftProposer;
 use simple_serve::decision::filter::{self, Truncated};
 use simple_serve::decision::penalties::{apply_penalties_dense, BatchHistory, SeqHistory};
@@ -12,7 +16,7 @@ use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService}
 use simple_serve::decision::shvs::{Precompute, ShvsSampler};
 use simple_serve::decision::verify::{verify_window, GrammarSlot};
 use simple_serve::decision::{DecisionPipeline, HotVocab, SamplingParams};
-use simple_serve::engine::KvAllocator;
+use simple_serve::engine::{Engine, KvAllocator, Request, SyntheticRuntime};
 use simple_serve::harness::measure::{chain_views, LogitsGen};
 use simple_serve::metrics::stats::total_variation_distance;
 use simple_serve::rng::Philox;
@@ -245,7 +249,7 @@ fn spec_service_streams(
     let prompts: Vec<Vec<u32>> =
         (0..b).map(|s| vec![(s % vocab) as u32, 1]).collect();
     let params: Vec<SamplingParams> = (0..b)
-        .map(|s| SamplingParams { seed: params_base.seed ^ (s as u64) << 3, ..params_base.clone() })
+        .map(|s| SamplingParams { seed: params_base.seed ^ ((s as u64) << 3), ..params_base.clone() })
         .collect();
     for s in 0..b {
         svc.register(s as u64, &prompts[s], &params[s]);
@@ -277,6 +281,7 @@ fn spec_service_streams(
         let views = chain_views(&gen, &col_keys, &drafts, 2);
         svc.submit(IterationTask {
             iter,
+            mb: 0,
             views,
             columns: Arc::new(columns),
             pre: Arc::new(Vec::new()),
@@ -317,6 +322,81 @@ fn prop_spec_decode_streams_bit_identical_for_any_k_and_m() {
         let m = 1 + rng.next_below(4) as usize;
         let spec = spec_service_streams(vocab, &params, m, k, total, gen_seed);
         assert_eq!(spec, baseline, "k={k} m={m} params={params:?}");
+    });
+}
+
+/// Run the real pipelined executor end to end over the context-faithful
+/// synthetic data plane, returning each finished request's token stream.
+fn synthetic_engine_streams(
+    reqs: &[(Vec<u32>, usize, SamplingParams)],
+    vocab: usize,
+    plane_seed: u64,
+    n_mb: usize,
+    overlap: bool,
+    m: usize,
+    spec_k: usize,
+) -> Vec<(u64, Vec<u32>)> {
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = m;
+    cfg.sampler.seed = 0xF1E1D;
+    cfg.n_microbatches = n_mb;
+    cfg.overlap = overlap;
+    cfg.spec_k = spec_k;
+    cfg.idle_poll_us = 0;
+    let runtime = SyntheticRuntime::new(4, vocab, 96, plane_seed);
+    let mut engine = Engine::new(runtime, &cfg, None);
+    for (i, (prompt, max_new, params)) in reqs.iter().enumerate() {
+        let mut r = Request::new(i as u64, prompt.clone(), *max_new);
+        r.params = params.clone();
+        engine.submit(r);
+    }
+    engine.run_until_idle().expect("synthetic engine run");
+    let mut fin: Vec<(u64, Vec<u32>)> = engine
+        .take_finished()
+        .into_iter()
+        .map(|f| (f.request.id, f.output))
+        .collect();
+    engine.shutdown();
+    fin.sort();
+    fin
+}
+
+#[test]
+fn prop_overlapped_executor_streams_equal_synchronous() {
+    // The tentpole differential property: the pipelined executor with
+    // in-flight microbatches and an asynchronous two-phase-commit decision
+    // plane commits bit-identical streams to the synchronous single-
+    // microbatch engine, for random sampler params × n_microbatches ×
+    // sampler count m × speculative window k. Overlap changes timing,
+    // never tokens.
+    props("overlapped streams == sync", 6, |rng| {
+        let vocab = 64 + rng.next_below(192) as usize;
+        let n_req = 3 + rng.next_below(4) as usize;
+        let reqs: Vec<(Vec<u32>, usize, SamplingParams)> = (0..n_req)
+            .map(|i| {
+                let plen = 1 + rng.next_below(6) as usize;
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.next_below(vocab as u64) as u32).collect();
+                let max_new = 3 + rng.next_below(10) as usize;
+                let mut params = random_params(rng, vocab);
+                params.seed = rng.next_u64() ^ ((i as u64) << 5);
+                (prompt, max_new, params)
+            })
+            .collect();
+        let plane_seed = rng.next_u64();
+        let baseline = synthetic_engine_streams(&reqs, vocab, plane_seed, 1, false, 1, 0);
+        assert_eq!(baseline.len(), n_req, "all requests finish");
+        let n_mb = [2usize, 3, 4][rng.next_below(3) as usize];
+        let m = 1 + rng.next_below(4) as usize;
+        let spec_k = rng.next_below(4) as usize;
+        let overlapped =
+            synthetic_engine_streams(&reqs, vocab, plane_seed, n_mb, true, m, spec_k);
+        assert_eq!(overlapped, baseline, "n_mb={n_mb} m={m} spec_k={spec_k}");
+        // microbatching without async overlap must also be invisible
+        let pipelined_sync =
+            synthetic_engine_streams(&reqs, vocab, plane_seed, n_mb, false, m, spec_k);
+        assert_eq!(pipelined_sync, baseline, "sync n_mb={n_mb} m={m} spec_k={spec_k}");
     });
 }
 

@@ -2,6 +2,10 @@
 //!
 //! These tests need `make artifacts` (they skip, loudly, if missing).
 
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
 use simple_serve::engine::{PjrtEngine, Request};

@@ -19,10 +19,14 @@
 //! past the accept point (or leaks rolled-back state) breaks the stream
 //! comparisons loudly.
 
-use simple_serve::config::{DecisionVariant, SamplerConfig};
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
+use simple_serve::config::{DecisionVariant, EngineConfig, SamplerConfig};
 use simple_serve::decision::draft::DraftProposer;
 use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
-use simple_serve::engine::{KvAllocator, Scheduler, SchedulerConfig};
+use simple_serve::engine::{Engine, KvAllocator, Scheduler, SchedulerConfig, SyntheticRuntime};
 use simple_serve::harness::measure::{chain_views, LogitsGen};
 use simple_serve::workload::{self, TraceConfig, TrafficPattern};
 use std::collections::HashMap;
@@ -123,6 +127,7 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig, spec_k: usize) ->
             .collect();
         svc.submit(IterationTask {
             iter,
+            mb: 0,
             views,
             columns: Arc::new(columns),
             pre: Arc::new(Vec::new()),
@@ -279,6 +284,73 @@ fn preemption_mid_speculation_replays_multi_token_commits_exactly() {
     assert_eq!(spec_ample.preemptions, 0);
     assert_eq!(spec_tight.streams, spec_ample.streams);
     assert_eq!(spec_tight.streams, plain.streams);
+}
+
+// ---- pipelined executor (in-flight microbatches, two-phase commit) ----
+
+/// Drive the real engine over the synthetic data plane (closed loop).
+/// `kv_blocks = 0` sizes the cache ample (never preempts); a small value
+/// over-commits it so commits evict slots of *other* microbatches while
+/// those still have un-reaped in-flight decisions.
+fn pipelined_engine_run(
+    n_mb: usize,
+    overlap: bool,
+    kv_blocks: usize,
+    spec_k: usize,
+) -> (HashMap<u64, Vec<u32>>, u64) {
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    cfg.sampler.seed = 41;
+    cfg.n_microbatches = n_mb;
+    cfg.overlap = overlap;
+    cfg.spec_k = spec_k;
+    cfg.kv_blocks = kv_blocks;
+    cfg.idle_poll_us = 10;
+    let runtime = SyntheticRuntime::new(8, VOCAB, MAX_SEQ, 23);
+    let mut engine = Engine::new(runtime, &cfg, None);
+    let trace = workload::generate(&TraceConfig::tiny(20, VOCAB));
+    for r in trace.requests {
+        engine.submit(r);
+    }
+    engine.run_until_idle().expect("engine run");
+    let streams: HashMap<u64, Vec<u32>> = engine
+        .take_finished()
+        .into_iter()
+        .map(|f| (f.request.id, f.output))
+        .collect();
+    let preemptions = engine.preemption_count();
+    engine.shutdown();
+    (streams, preemptions)
+}
+
+#[test]
+fn preemption_fires_while_microbatch_has_unreaped_pending_commit() {
+    // The two-phase-commit churn case: with overlap on and a tight KV
+    // cache, applying microbatch A's pending commits evicts microbatch B's
+    // slots while B still has an un-reaped in-flight decision. The stale
+    // verdict must be discarded (identity guard) and the victim replayed —
+    // streams bit-identical to the ample-cache synchronous run.
+    let (sync_streams, sync_preempt) = pipelined_engine_run(1, false, 0, 0);
+    assert_eq!(sync_streams.len(), 20, "all requests finish");
+    assert_eq!(sync_preempt, 0, "ample cache must not preempt");
+    // floor is max_seq/block + 1 = 7 blocks for 8 slots: crossing a block
+    // boundary at full occupancy must evict
+    let (tight_streams, tight_preempt) = pipelined_engine_run(2, true, 7, 0);
+    assert!(tight_preempt > 0, "tight cache must preempt mid-flight");
+    assert_eq!(tight_streams, sync_streams);
+}
+
+#[test]
+fn overlapped_spec_decode_survives_preemption_churn() {
+    // Everything at once: in-flight microbatches + overlap + speculative
+    // windows + KV-pressure preemption landing mid-window. Same tokens.
+    let (sync_streams, _) = pipelined_engine_run(1, false, 0, 0);
+    let (spec_streams, spec_preempt) = pipelined_engine_run(2, true, 7, 3);
+    assert!(spec_preempt > 0, "tight cache must preempt mid-spec");
+    assert_eq!(spec_streams, sync_streams);
+    let (quad_streams, _) = pipelined_engine_run(4, true, 0, 2);
+    assert_eq!(quad_streams, sync_streams);
 }
 
 #[test]
