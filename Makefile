@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures ci
+.PHONY: artifacts artifacts-force build test figures cluster-smoke ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -19,11 +19,20 @@ test:
 figures: build
 	cargo run --release -- figures
 
+# The cluster experiment at smoke effort on the synthetic plane (no
+# artifacts needed): replicas × routing policy × traffic; the experiment
+# asserts every fleet digest equals the single-engine baseline, so a
+# routing bug fails this target loudly.
+cluster-smoke: build
+	cargo run --release -- figures --experiments cluster
+
 # What .github/workflows/ci.yml runs: fmt + clippy gates, release build +
-# tests, python kernel/model tests (hypothesis optional — shim fallback).
+# tests, the cluster smoke, python kernel/model tests (hypothesis optional
+# — shim fallback).
 ci:
 	cargo fmt --check
 	cargo clippy --release --all-targets -- -D warnings
 	cargo build --release
 	cargo test -q --release
+	$(MAKE) cluster-smoke
 	python -m pytest python/tests -q

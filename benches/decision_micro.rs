@@ -165,6 +165,100 @@ fn main() {
         }
     }
 
+    // --- cluster: shared sampler pool vs stranded per-replica pools ---
+    // Two data-parallel replicas submit imbalanced iterations (6 vs 2
+    // decision columns) at equal TOTAL sampler count (2). Per-replica
+    // pools strand one sampler on the light replica while the heavy
+    // replica's lone sampler serializes 6 columns; the shared pool
+    // spreads all 8 columns by sequence ownership, 4 per sampler —
+    // pooled decision capacity vs stranded (DESIGN.md §9). items/s =
+    // decided columns/s, so shared should report ≥ per_replica.
+    if want("cluster") {
+        use simple_serve::config::SamplerConfig;
+        use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
+        const HEAVY: usize = 6;
+        const LIGHT: usize = 2;
+        let svc_cfg = SamplerConfig {
+            num_samplers: 1,
+            variant: DecisionVariant::Offloading,
+            seed: 11,
+            ..Default::default()
+        };
+        let cols = |n: usize, base: u64, iter: u64| -> Vec<ColumnMeta> {
+            (0..n)
+                .map(|c| ColumnMeta { col: c, seq_id: base + c as u64, iteration: iter })
+                .collect()
+        };
+
+        // stranded: one m=1 service per replica
+        {
+            let a = SamplerService::start(&svc_cfg, None, 1 << 20);
+            let b = SamplerService::start(&svc_cfg, None, 1 << 20);
+            for s in 0..HEAVY as u64 {
+                a.register(s, &[1, 2, 3], &params);
+            }
+            for s in 0..LIGHT as u64 {
+                b.register(HEAVY as u64 + s, &[1, 2, 3], &params);
+            }
+            let mut it = 0u64;
+            results.push(run_case(
+                "cluster/per_replica_pool",
+                &cfg,
+                Some((HEAVY + LIGHT) as f64),
+                || {
+                    let va = gen.view(HEAVY, it, 1);
+                    let vb = gen.view(LIGHT, it, 1);
+                    a.submit(IterationTask::single(it, va, cols(HEAVY, 0, it), Vec::new()));
+                    b.submit(IterationTask::single(
+                        it,
+                        vb,
+                        cols(LIGHT, HEAVY as u64, it),
+                        Vec::new(),
+                    ));
+                    let (da, _) = a.collect(it, HEAVY);
+                    let (db, _) = b.collect(it, LIGHT);
+                    black_box(da.len() + db.len());
+                    it += 1;
+                },
+            ));
+            a.shutdown();
+            b.shutdown();
+        }
+
+        // pooled: one m=2 service shared by both replicas, task ids
+        // namespaced per replica exactly as Engine::with_shared_service does
+        {
+            let pool_cfg = SamplerConfig { num_samplers: 2, ..svc_cfg.clone() };
+            let svc = SamplerService::start(&pool_cfg, None, 1 << 20);
+            for s in 0..(HEAVY + LIGHT) as u64 {
+                svc.register(s, &[1, 2, 3], &params);
+            }
+            let mut it = 0u64;
+            results.push(run_case(
+                "cluster/shared_pool",
+                &cfg,
+                Some((HEAVY + LIGHT) as f64),
+                || {
+                    let va = gen.view(HEAVY, it, 1);
+                    let vb = gen.view(LIGHT, it, 1);
+                    let (ta, tb) = ((1u64 << 48) | it, (2u64 << 48) | it);
+                    svc.submit(IterationTask::single(ta, va, cols(HEAVY, 0, it), Vec::new()));
+                    svc.submit(IterationTask::single(
+                        tb,
+                        vb,
+                        cols(LIGHT, HEAVY as u64, it),
+                        Vec::new(),
+                    ));
+                    let (da, _) = svc.collect(ta, HEAVY);
+                    let (db, _) = svc.collect(tb, LIGHT);
+                    black_box(da.len() + db.len());
+                    it += 1;
+                },
+            ));
+            svc.shutdown();
+        }
+    }
+
     // --- truncation-first vs sort-based filtering ---
     if want("filter") {
         let pairs: Vec<(u32, f32)> = {

@@ -26,11 +26,20 @@
 //! `overlap:` line reports the measured hidden fraction and last-stage
 //! bubble. Stream digests stay bit-identical to the synchronous run for
 //! any (N, overlap, m, spec_k) — overlap changes timing, never tokens.
+//!
+//! Cluster serving (DESIGN.md §9): `--replicas R [--route P]
+//! [--shared_samplers] [--prefill_replicas N]` runs the same workload
+//! through R data-parallel replicas behind the decision-plane-aware
+//! router; the JSON gains per-replica and fleet-aggregate sections, and
+//! the fleet stream digest stays bit-identical to a single-replica run
+//! for every policy, replica count, and pool mode — routing moves work,
+//! never decisions.
 
 // Config structs are built by `default()` + field assignment (sweep-driver
 // idiom); see the identical crate-level allow in lib.rs.
 #![allow(clippy::field_reassign_with_default)]
 
+use simple_serve::cluster::{Cluster, ClusterConfig};
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
 use simple_serve::engine::PjrtEngine;
@@ -52,6 +61,11 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("idle_poll_us", "idle poll quantum in µs (0 = busy-poll)"),
     OptSpec::flag("overlap", "overlap the decision plane with forwards (DESIGN.md §8)"),
     OptSpec::flag("loopy", "motif-cycled prompts (speculation-friendly trace)"),
+    OptSpec::value("replicas", "data-parallel engine replicas (default 1)"),
+    OptSpec::value("route", "routing policy: rr|least-outstanding|kv-pressure|session-affinity"),
+    OptSpec::flag("shared_samplers", "one shared sampler pool for the whole fleet"),
+    OptSpec::value("prefill_replicas", "DistServe-style split: prefill-only replicas"),
+    OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token"),
     OptSpec::flag("quick", "small run"),
 ];
 
@@ -88,6 +102,8 @@ fn main() -> simple_serve::Result<()> {
     let idle_poll_us: u64 = args.get_or("idle_poll_us", 200)?;
     let overlap = args.flag("overlap");
     let loopy = args.flag("loopy");
+    let mut ccfg = ClusterConfig::default();
+    ccfg.apply_args(&args)?;
 
     let manifest = Manifest::load(&default_artifacts_dir())
         .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
@@ -105,10 +121,10 @@ fn main() -> simple_serve::Result<()> {
     let mut results = Vec::new();
     let mut digests = Vec::new();
     let mut overlaps = Vec::new();
+    let mut replica_sections = Vec::new();
     for variant in [DecisionVariant::GpuEpilogue, DecisionVariant::Shvs] {
-        let rt = ModelRuntime::load(&manifest, &model)?;
-        let vocab = rt.vocab();
-        let max_seq = rt.max_seq();
+        let spec = manifest.model(&model)?;
+        let (vocab, max_seq) = (spec.vocab, spec.max_seq);
         let mut cfg = EngineConfig::default();
         cfg.sampler.variant = variant;
         cfg.sampler.num_samplers = samplers;
@@ -123,7 +139,6 @@ fn main() -> simple_serve::Result<()> {
         let h = (vocab / 5).min(32_768) as u32;
         let hot = (variant == DecisionVariant::Shvs)
             .then(|| HotVocab::new((0..h).collect(), vocab).into_arc());
-        let mut engine = PjrtEngine::new(rt, &cfg, hot);
         let trace_cfg = if loopy {
             workload::TraceConfig::loopy(n, vocab, max_seq)
         } else {
@@ -134,21 +149,96 @@ fn main() -> simple_serve::Result<()> {
             pattern.stamp(&mut trace, rate, 11);
         }
         let expected: usize = trace.output_lens.iter().sum();
-        for r in trace.requests {
-            engine.submit(r);
-        }
-        let summary = engine.run_until_idle()?;
-        assert_eq!(summary.tokens, expected, "all tokens produced");
-        let digest = stream_digest(engine.take_finished());
-        let spec_note = if engine.spec_windows > 0 {
-            format!(
-                " | spec: {}/{} drafts accepted, {:.2} tok/step",
-                engine.spec_accepted,
-                engine.spec_proposed,
-                engine.spec_committed as f64 / engine.spec_windows as f64
+        // Either one engine or a routed fleet of them — same workload,
+        // same expected tokens, same stream digest.
+        let clustered = ccfg.replicas > 1 || ccfg.prefill_replicas > 0;
+        let (summary, digest, ov, preemptions, gpu_util, cpu_util, spec_note) = if clustered
+        {
+            let mut vcfg = ccfg.clone();
+            // the inline epilogue baseline has no service to share
+            vcfg.shared_samplers &= variant != DecisionVariant::GpuEpilogue;
+            vcfg.idle_poll_us = idle_poll_us;
+            let artifacts = default_artifacts_dir();
+            let model_name = model.clone();
+            let mut cluster = Cluster::start(&cfg, &vcfg, hot, max_seq, move |_id| {
+                ModelRuntime::load(&Manifest::load(&artifacts)?, &model_name)
+            });
+            cluster.run(trace.requests)?;
+            let report = cluster.shutdown()?;
+            let summary = report.recorder.summary();
+            assert_eq!(summary.tokens, expected, "all tokens produced");
+            for r in &report.per_replica {
+                println!(
+                    "[{}] replica {} [{}]: {:>7.0} tok/s | {} tokens | {} preemptions",
+                    variant.name(),
+                    r.id,
+                    r.role.name(),
+                    r.summary.throughput,
+                    r.summary.tokens,
+                    r.preemptions
+                );
+            }
+            replica_sections.push((
+                variant.name(),
+                Json::Arr(
+                    report
+                        .per_replica
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Num(r.id as f64)),
+                                ("role", Json::Str(r.role.name().into())),
+                                ("preemptions", Json::Num(r.preemptions as f64)),
+                                ("summary", r.summary.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            let spec_note = if report.spec_windows > 0 {
+                format!(
+                    " | spec: {}/{} drafts accepted, {:.2} tok/step",
+                    report.spec_accepted,
+                    report.spec_proposed,
+                    report.spec_committed as f64 / report.spec_windows as f64
+                )
+            } else {
+                String::new()
+            };
+            (
+                summary,
+                report.stream_digest(),
+                report.recorder.overlap_report(),
+                report.preemptions,
+                report.recorder.utilization("gpu"),
+                report.recorder.utilization("cpu"),
+                spec_note,
             )
         } else {
-            String::new()
+            let rt = ModelRuntime::load(&manifest, &model)?;
+            let mut engine = PjrtEngine::new(rt, &cfg, hot);
+            for r in trace.requests {
+                engine.submit(r);
+            }
+            let summary = engine.run_until_idle()?;
+            assert_eq!(summary.tokens, expected, "all tokens produced");
+            let digest = stream_digest(engine.take_finished());
+            let spec_note = if engine.spec_windows > 0 {
+                format!(
+                    " | spec: {}/{} drafts accepted, {:.2} tok/step",
+                    engine.spec_accepted,
+                    engine.spec_proposed,
+                    engine.spec_committed as f64 / engine.spec_windows as f64
+                )
+            } else {
+                String::new()
+            };
+            let ov = engine.overlap_report();
+            let preemptions = engine.preemption_count();
+            let gpu_util = engine.recorder.utilization("gpu");
+            let cpu_util = engine.recorder.utilization("cpu");
+            engine.shutdown();
+            (summary, digest, ov, preemptions, gpu_util, cpu_util, spec_note)
         };
         println!(
             "[{}] {:>7.0} tok/s | TPOT p50 {:>6.2} ms  p95 {:>6.2} ms | \
@@ -160,13 +250,12 @@ fn main() -> simple_serve::Result<()> {
             summary.tpot.p95 * 1e3,
             summary.ttft.p50 * 1e3,
             summary.ttft.p95 * 1e3,
-            engine.recorder.utilization("gpu") * 100.0,
-            engine.recorder.utilization("cpu") * 100.0,
-            engine.preemption_count(),
+            gpu_util * 100.0,
+            cpu_util * 100.0,
+            preemptions,
             spec_note,
         );
         println!("[{}] stream digest: {digest:016x}", variant.name());
-        let ov = engine.overlap_report();
         if ov.decision_busy_s > 0.0 {
             println!(
                 "[{}] overlap: {:.0}% of decision time hidden under forwards | \
@@ -181,7 +270,6 @@ fn main() -> simple_serve::Result<()> {
         results.push((variant.name(), summary));
         digests.push((variant.name(), digest));
         overlaps.push((variant.name(), ov));
-        engine.shutdown();
     }
 
     let base = &results[0].1;
@@ -205,6 +293,13 @@ fn main() -> simple_serve::Result<()> {
              against the simulator's prediction)"
         );
     }
+    if ccfg.replicas > 1 || ccfg.prefill_replicas > 0 {
+        println!(
+            "(compare `stream digest` lines against a --replicas 1 run: they must \
+             match for every policy, replica count, and pool mode — routing moves \
+             work, never decisions)"
+        );
+    }
     // Record machine-readable results for EXPERIMENTS.md.
     let out = Json::obj(vec![
         ("model", Json::Str(model)),
@@ -212,6 +307,16 @@ fn main() -> simple_serve::Result<()> {
         ("spec_k", Json::Num(spec_k as f64)),
         ("n_microbatches", Json::Num(n_microbatches as f64)),
         ("overlap", Json::Bool(overlap)),
+        ("replicas", Json::Num(ccfg.replicas as f64)),
+        ("route", Json::Str(ccfg.policy.name().to_string())),
+        ("shared_samplers", Json::Bool(ccfg.shared_samplers)),
+        ("prefill_replicas", Json::Num(ccfg.prefill_replicas as f64)),
+        (
+            // per-replica sections (fleet runs only); the `baseline` /
+            // `simple` entries below are the fleet aggregates there
+            "per_replica",
+            Json::obj(replica_sections.iter().map(|(n, j)| (*n, j.clone())).collect()),
+        ),
         (
             "overlap_measured",
             Json::obj(

@@ -1,0 +1,205 @@
+//! Cluster layer (DESIGN.md §9): data-parallel engine replicas behind a
+//! decision-plane-aware router, with an optionally *shared* sampler pool.
+//!
+//! The paper disaggregates sampling from GPU inference along the stage
+//! axis; this layer makes the decision plane **replica-agnostic** too —
+//! one CPU sampler pool can serve a whole fleet of `Engine<D>` replicas,
+//! pooling decision capacity instead of stranding `m` samplers per
+//! replica. On top of the replicas sit pluggable routing policies
+//! (round-robin, least-outstanding, KV-pressure, session affinity) and an
+//! optional DistServe-style prefill/decode split with a simulated
+//! KV-transfer cost, mirrored by `simulator::serving::simulate_cluster`
+//! so measured and simulated cluster throughput can be compared.
+//!
+//! Hard invariant, inherited from every layer below: routing moves work,
+//! never changes decisions — per-sequence token streams are bit-identical
+//! to a single-replica engine for every policy, replica count, sampler
+//! count, `spec_k`, and `n_microbatches`.
+
+pub mod replica;
+pub mod router;
+
+pub use replica::{Replica, ReplicaResult, ReplicaRole, ReplicaStatus};
+pub use router::{Cluster, ClusterConfig, ClusterReport, ReplicaSummary, RoutePolicy};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DecisionVariant, EngineConfig};
+    use crate::engine::{Engine, Request, SyntheticRuntime};
+    use crate::workload::{self, TraceConfig};
+    use std::collections::HashMap;
+
+    const VOCAB: usize = 512;
+    const MAX_SEQ: usize = 96;
+    const BATCH: usize = 4;
+    const PLANE_SEED: u64 = 29;
+
+    fn engine_cfg(m: usize) -> EngineConfig {
+        let mut cfg = EngineConfig::default();
+        cfg.sampler.variant = DecisionVariant::Offloading;
+        cfg.sampler.num_samplers = m;
+        cfg.sampler.seed = 77;
+        cfg.idle_poll_us = 20;
+        cfg
+    }
+
+    fn trace(n: usize) -> Vec<Request> {
+        workload::generate(&TraceConfig::tiny(n, VOCAB)).requests
+    }
+
+    /// The ground truth: one engine serving the whole trace.
+    fn single_engine_streams(n: usize, m: usize) -> HashMap<u64, Vec<u32>> {
+        let cfg = engine_cfg(m);
+        let runtime = SyntheticRuntime::new(BATCH, VOCAB, MAX_SEQ, PLANE_SEED);
+        let mut engine = Engine::new(runtime, &cfg, None);
+        for r in trace(n) {
+            engine.submit(r);
+        }
+        engine.run_until_idle().expect("single engine run");
+        let streams = engine
+            .take_finished()
+            .into_iter()
+            .map(|f| (f.request.id, f.output))
+            .collect();
+        engine.shutdown();
+        streams
+    }
+
+    fn run_cluster(n: usize, ccfg: &ClusterConfig, m: usize) -> ClusterReport {
+        let cfg = engine_cfg(m);
+        let mut cluster = Cluster::start(
+            &cfg,
+            ccfg,
+            None,
+            MAX_SEQ,
+            |_id| Ok(SyntheticRuntime::new(BATCH, VOCAB, MAX_SEQ, PLANE_SEED)),
+        );
+        cluster.run(trace(n)).expect("cluster run");
+        cluster.shutdown().expect("cluster shutdown")
+    }
+
+    fn streams_of(report: &ClusterReport) -> HashMap<u64, Vec<u32>> {
+        report
+            .finished
+            .iter()
+            .map(|s| (s.request.id, s.output.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn cluster_config_applies_cli_args() {
+        use crate::util::argparse::{Args, OptSpec};
+        let argv: Vec<String> = [
+            "p", "--replicas", "4", "--route", "kv", "--shared_samplers",
+            "--prefill_replicas", "1", "--kv_transfer_us", "3.5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let specs = [
+            OptSpec::value("replicas", ""),
+            OptSpec::value("route", ""),
+            OptSpec::flag("shared_samplers", ""),
+            OptSpec::value("prefill_replicas", ""),
+            OptSpec::value("kv_transfer_us", ""),
+        ];
+        let args = Args::parse(&argv, &specs, false).unwrap();
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.policy, RoutePolicy::KvPressure);
+        assert!(cfg.shared_samplers);
+        assert_eq!(cfg.prefill_replicas, 1);
+        assert!((cfg.kv_transfer_us_per_token - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn route_policy_parse_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("kv"), Some(RoutePolicy::KvPressure));
+        assert_eq!(RoutePolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn every_policy_matches_the_single_engine_streams() {
+        let n = 14;
+        let want = single_engine_streams(n, 2);
+        assert_eq!(want.len(), n);
+        for policy in RoutePolicy::ALL {
+            let mut ccfg = ClusterConfig::default();
+            ccfg.replicas = 2;
+            ccfg.policy = policy;
+            let report = run_cluster(n, &ccfg, 2);
+            assert_eq!(
+                streams_of(&report),
+                want,
+                "policy {} must not change tokens",
+                policy.name()
+            );
+            assert_eq!(report.recorder.finished_requests(), n);
+        }
+    }
+
+    #[test]
+    fn shared_pool_matches_per_replica_pools() {
+        let n = 12;
+        let want = single_engine_streams(n, 2);
+        let mut ccfg = ClusterConfig::default();
+        ccfg.replicas = 2;
+        ccfg.policy = RoutePolicy::LeastOutstanding;
+        // per-replica pools: 2 × m=2
+        let per = run_cluster(n, &ccfg, 2);
+        assert_eq!(streams_of(&per), want);
+        // one shared pool: m=2 total, serving both replicas
+        ccfg.shared_samplers = true;
+        let shared = run_cluster(n, &ccfg, 2);
+        assert_eq!(streams_of(&shared), want, "shared pool must not change tokens");
+        // shared mode reports exactly the pool's m samplers
+        assert_eq!(shared.sampler_stats.len(), 2);
+        let decided: u64 = shared.sampler_stats.iter().map(|s| s.decisions).sum();
+        assert!(decided > 0, "the shared pool actually decided");
+    }
+
+    #[test]
+    fn prefill_decode_split_hands_off_and_matches_streams() {
+        let n = 12;
+        let want = single_engine_streams(n, 2);
+        let mut ccfg = ClusterConfig::default();
+        ccfg.replicas = 3;
+        ccfg.prefill_replicas = 1;
+        ccfg.kv_transfer_us_per_token = 5.0;
+        let report = run_cluster(n, &ccfg, 2);
+        assert_eq!(
+            streams_of(&report),
+            want,
+            "handoff + recompute + transfer delay must not change tokens"
+        );
+        // roles recorded per replica; the prefill replica saw work
+        assert_eq!(report.per_replica[0].role, ReplicaRole::Prefill);
+        assert!(report.per_replica[0].summary.tokens > 0);
+        // decode replicas produced the bulk of the tokens
+        let decode_tokens: usize = report.per_replica[1..]
+            .iter()
+            .map(|r| r.summary.tokens)
+            .sum();
+        assert!(decode_tokens > report.per_replica[0].summary.tokens);
+    }
+
+    #[test]
+    fn merged_recorder_counts_every_token_once() {
+        let mut ccfg = ClusterConfig::default();
+        ccfg.replicas = 2;
+        let report = run_cluster(10, &ccfg, 1);
+        let expected: usize = report.finished.iter().map(|s| s.output.len()).sum();
+        assert_eq!(report.recorder.total_tokens(), expected);
+        let agg = report.recorder.summary();
+        assert_eq!(agg.finished, 10);
+        // per-replica token counts partition the fleet total
+        let split: usize = report.per_replica.iter().map(|r| r.summary.tokens).sum();
+        assert_eq!(split, expected);
+    }
+}

@@ -1,0 +1,297 @@
+//! A data-parallel engine replica: one [`Engine`] running on its own
+//! worker thread behind a submit/reap channel pair (DESIGN.md §9).
+//!
+//! The worker drains its inbox into the engine, runs one executor turn
+//! ([`Engine::step_once`]), refreshes a lock-free heartbeat (queue depth,
+//! live KV-block occupancy), and hands finished sequences back through
+//! its outbox. When the engine is fully drained the worker
+//! polls the inbox at the replica's `idle_poll_us` quantum — the same
+//! bounded-poll discipline as the engine's own arrival wait — and exits
+//! only on a requested stop *with an empty inbox*, so a shutdown can
+//! never strand an in-flight or still-routed sequence (join-on-shutdown,
+//! mirroring the sampler service's join-on-death).
+//!
+//! **Routing invariant.** Replicas are interchangeable decision-wise: a
+//! sequence's logits depend only on its own fed-token prefix (every
+//! replica loads the same model / the same synthetic plane seed) and its
+//! decisions are keyed by (sampler seed, request seed, sequence,
+//! iteration). Which replica a sequence lands on — or whether it is
+//! handed off mid-lifecycle — changes timing, never tokens.
+
+use crate::config::EngineConfig;
+use crate::decision::service::{SamplerService, SamplerStats};
+use crate::decision::HotVocab;
+use crate::engine::{DataPlane, Engine, Request, Sequence};
+use crate::metrics::Recorder;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Role in the optional DistServe-style split: `Unified` replicas serve
+/// whole lifecycles; `Prefill` replicas serve a request truncated to its
+/// first token (the TTFT work) and the router hands the sequence off;
+/// `Decode` replicas resume it with recompute after the simulated
+/// KV-transfer delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaRole {
+    Unified,
+    Prefill,
+    Decode,
+}
+
+impl ReplicaRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaRole::Unified => "unified",
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+        }
+    }
+}
+
+/// Lock-free heartbeat the worker refreshes every executor turn; the
+/// router reads it for the load-aware policies (`LeastOutstanding` reads
+/// `depth`, `KvPressure` reads `kv_free_blocks`). End-of-run quantities
+/// (preemptions, token counts) travel in [`ReplicaResult`] instead.
+#[derive(Debug, Default)]
+pub struct ReplicaStatus {
+    /// Waiting + running sequences inside the engine.
+    pub depth: AtomicUsize,
+    /// Free KV blocks right now (live occupancy).
+    pub kv_free_blocks: AtomicUsize,
+}
+
+/// Inbound work: fresh requests, or prefill→decode handoffs carrying the
+/// tokens generated before the transfer.
+enum Inbound {
+    Submit(Request),
+    Resume(Request, Vec<u32>),
+}
+
+/// What a worker returns at join time.
+pub struct ReplicaResult {
+    pub recorder: Recorder,
+    pub sampler_stats: Vec<SamplerStats>,
+    pub preemptions: u64,
+    /// Speculative-decoding tallies over committed windows (see
+    /// `Engine::spec_accepted` — the fleet report sums them).
+    pub spec_accepted: u64,
+    pub spec_proposed: u64,
+    pub spec_committed: u64,
+    pub spec_windows: u64,
+}
+
+/// Router-side handle to a running replica.
+pub struct Replica {
+    pub id: usize,
+    pub role: ReplicaRole,
+    inbox: Arc<Mutex<VecDeque<Inbound>>>,
+    outbox: Arc<Mutex<Vec<Sequence>>>,
+    status: Arc<ReplicaStatus>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<crate::Result<ReplicaResult>>>,
+}
+
+/// Render a worker panic payload for error surfacing (the same shape the
+/// sampler service uses).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl Replica {
+    /// Spawn a replica. The data plane is built *inside* the worker thread
+    /// (`make_plane`), so planes that must not cross threads — the PJRT
+    /// runtime's client handles — still work; only the factory is `Send`.
+    /// With `pool` set the engine submits into the shared sampler service,
+    /// namespacing its task ids with `(id + 1) << 48`; otherwise it spawns
+    /// its own samplers timestamped against the cluster `epoch`.
+    pub fn spawn<D, F>(
+        id: usize,
+        role: ReplicaRole,
+        cfg: EngineConfig,
+        hot: Option<Arc<HotVocab>>,
+        pool: Option<Arc<SamplerService>>,
+        epoch: Instant,
+        make_plane: F,
+    ) -> Replica
+    where
+        D: DataPlane + 'static,
+        F: FnOnce() -> crate::Result<D> + Send + 'static,
+    {
+        let inbox: Arc<Mutex<VecDeque<Inbound>>> = Arc::new(Mutex::new(VecDeque::new()));
+        let outbox: Arc<Mutex<Vec<Sequence>>> = Arc::new(Mutex::new(Vec::new()));
+        let status = Arc::new(ReplicaStatus::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (w_inbox, w_outbox, w_status, w_stop) =
+            (inbox.clone(), outbox.clone(), status.clone(), stop.clone());
+        let handle = std::thread::Builder::new()
+            .name(format!("replica-{id}"))
+            .spawn(move || {
+                let idle_poll_us = cfg.idle_poll_us;
+                let plane = make_plane()?;
+                let engine = match pool {
+                    Some(svc) => Engine::with_shared_service(
+                        plane,
+                        &cfg,
+                        hot,
+                        svc,
+                        (id as u64 + 1) << 48,
+                    ),
+                    None => Engine::with_epoch(plane, &cfg, hot, epoch),
+                };
+                run_worker(engine, w_inbox, w_outbox, w_status, w_stop, idle_poll_us)
+            })
+            .expect("spawn replica");
+        Replica {
+            id,
+            role,
+            inbox,
+            outbox,
+            status,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Route a fresh request into this replica.
+    pub fn submit(&self, req: Request) {
+        self.inbox.lock().unwrap().push_back(Inbound::Submit(req));
+    }
+
+    /// Route a prefill→decode handoff: the sequence resumes with recompute
+    /// and decisions continue from iteration `output.len()`.
+    pub fn submit_resumed(&self, req: Request, output: Vec<u32>) {
+        self.inbox.lock().unwrap().push_back(Inbound::Resume(req, output));
+    }
+
+    /// Routed-but-unadmitted plus in-engine sequences — `LeastOutstanding`'s
+    /// load signal.
+    pub fn outstanding(&self) -> usize {
+        self.inbox.lock().unwrap().len() + self.status.depth.load(Ordering::Relaxed)
+    }
+
+    /// Free KV blocks from the latest heartbeat — `KvPressure`'s signal.
+    pub fn kv_free_blocks(&self) -> usize {
+        self.status.kv_free_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Take whatever finished sequences the worker handed back so far.
+    pub fn drain_finished(&self) -> Vec<Sequence> {
+        std::mem::take(&mut *self.outbox.lock().unwrap())
+    }
+
+    /// Ask the worker to exit once drained (graceful: in-flight and
+    /// already-routed sequences still complete first).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Surface a worker that died *before* a stop was requested — an engine
+    /// error or panic; without this check the router would idle-poll
+    /// forever waiting for sequences the dead replica can never finish.
+    pub fn check_alive(&mut self) -> crate::Result<()> {
+        let died = self.handle.as_ref().is_some_and(|h| h.is_finished())
+            && !self.stop.load(Ordering::Acquire);
+        if !died {
+            return Ok(());
+        }
+        let handle = self.handle.take().unwrap();
+        match handle.join() {
+            Ok(Ok(_)) => Err(anyhow::anyhow!("replica {} exited mid-run", self.id)),
+            Ok(Err(e)) => Err(e.context(format!("replica {} failed", self.id))),
+            Err(payload) => Err(anyhow::anyhow!(
+                "replica {} panicked: {}",
+                self.id,
+                panic_message(payload.as_ref())
+            )),
+        }
+    }
+
+    /// Join the worker (call after [`Self::request_stop`]).
+    pub fn join(mut self) -> crate::Result<ReplicaResult> {
+        let Some(handle) = self.handle.take() else {
+            anyhow::bail!("replica {} already reaped after failure", self.id);
+        };
+        match handle.join() {
+            Ok(res) => res,
+            Err(payload) => Err(anyhow::anyhow!(
+                "replica {} panicked: {}",
+                self.id,
+                panic_message(payload.as_ref())
+            )),
+        }
+    }
+}
+
+/// The worker loop: drain inbox → one executor turn → heartbeat → hand
+/// back finished sequences → bounded idle poll when drained.
+fn run_worker<D: DataPlane>(
+    mut engine: Engine<D>,
+    inbox: Arc<Mutex<VecDeque<Inbound>>>,
+    outbox: Arc<Mutex<Vec<Sequence>>>,
+    status: Arc<ReplicaStatus>,
+    stop: Arc<AtomicBool>,
+    idle_poll_us: u64,
+) -> crate::Result<ReplicaResult> {
+    status
+        .kv_free_blocks
+        .store(engine.kv_free_blocks(), Ordering::Relaxed);
+    loop {
+        {
+            let mut q = inbox.lock().unwrap();
+            while let Some(msg) = q.pop_front() {
+                match msg {
+                    Inbound::Submit(r) => engine.submit(r),
+                    Inbound::Resume(r, out) => engine.submit_resumed(r, out),
+                }
+            }
+        }
+        let progressed = engine.step_once()?;
+        status.depth.store(engine.queue_depth(), Ordering::Relaxed);
+        status
+            .kv_free_blocks
+            .store(engine.kv_free_blocks(), Ordering::Relaxed);
+        let fin = engine.take_finished();
+        if !fin.is_empty() {
+            outbox.lock().unwrap().extend(fin);
+        }
+        if !progressed {
+            // Fully drained. Exit only on a requested stop with an empty
+            // inbox — the router sets stop strictly after collecting every
+            // final sequence, so nothing routed is ever dropped.
+            if stop.load(Ordering::Acquire) && inbox.lock().unwrap().is_empty() {
+                break;
+            }
+            if idle_poll_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(idle_poll_us));
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+    let preemptions = engine.preemption_count();
+    let (spec_accepted, spec_proposed, spec_committed, spec_windows) = (
+        engine.spec_accepted,
+        engine.spec_proposed,
+        engine.spec_committed,
+        engine.spec_windows,
+    );
+    let (recorder, sampler_stats) = engine.shutdown();
+    Ok(ReplicaResult {
+        recorder,
+        sampler_stats,
+        preemptions,
+        spec_accepted,
+        spec_proposed,
+        spec_committed,
+        spec_windows,
+    })
+}

@@ -1,0 +1,497 @@
+//! The cluster front-end: a decision-plane-aware router admitting requests
+//! into data-parallel engine replicas (DESIGN.md §9).
+//!
+//! Four pluggable [`RoutePolicy`]s: `RoundRobin` (placement-blind),
+//! `LeastOutstanding` (queue depth from replica heartbeats),
+//! `KvPressure` (live KV-block occupancy — the llm-d-style load signal
+//! that diverts traffic from a cache-saturated replica *before* it starts
+//! preempting), and `SessionAffinity` (prompt-prefix hash, so
+//! shared-prefix traffic lands on the replica whose cache already holds
+//! the prefix's working set).
+//!
+//! Routing moves work, never decisions: per-sequence token streams are
+//! bit-identical to a single-replica engine for every policy, replica
+//! count, sampler count, `spec_k`, and `n_microbatches`
+//! (`proptests.rs::prop_routed_streams_equal_single_replica`).
+//!
+//! With `shared_samplers` the router owns one [`SamplerService`] pool that
+//! every replica submits into (task ids namespaced per replica), pooling
+//! decision-plane capacity instead of stranding it per replica. With
+//! `prefill_replicas > 0` the fleet splits DistServe-style: prefill
+//! replicas serve each request truncated to its first token, then the
+//! router hands the sequence to a decode replica with a simulated
+//! KV-transfer delay (`kv_transfer_us_per_token × context`), realized as
+//! the resumed request's arrival time.
+
+use super::replica::{Replica, ReplicaRole};
+use crate::config::EngineConfig;
+use crate::decision::service::{SamplerService, SamplerStats};
+use crate::decision::HotVocab;
+use crate::engine::{DataPlane, Request, Sequence};
+use crate::metrics::{Recorder, ServingSummary};
+use crate::util::argparse::Args;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Replica-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through the candidates — placement-blind baseline.
+    RoundRobin,
+    /// Fewest routed-but-unfinished sequences (inbox + engine depth).
+    LeastOutstanding,
+    /// Most free KV blocks in the latest heartbeat, net of
+    /// routed-but-unadmitted load (ties: fewest outstanding, then lowest
+    /// id) — diverts from cache-saturated replicas before they preempt.
+    KvPressure,
+    /// Prompt-prefix hash, so shared-prefix sessions co-locate.
+    SessionAffinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Self::RoundRobin,
+            "lo" | "least" | "least-outstanding" => Self::LeastOutstanding,
+            "kv" | "kv-pressure" | "kvpressure" => Self::KvPressure,
+            "affinity" | "session" | "session-affinity" => Self::SessionAffinity,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::LeastOutstanding => "least-outstanding",
+            Self::KvPressure => "kv-pressure",
+            Self::SessionAffinity => "session-affinity",
+        }
+    }
+
+    pub const ALL: [RoutePolicy; 4] = [
+        Self::RoundRobin,
+        Self::LeastOutstanding,
+        Self::KvPressure,
+        Self::SessionAffinity,
+    ];
+}
+
+/// Cluster-layer configuration (the engine-layer knobs stay in
+/// [`EngineConfig`]; every replica gets a clone of it).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Data-parallel engine replicas.
+    pub replicas: usize,
+    pub policy: RoutePolicy,
+    /// One shared sampler pool for the whole fleet instead of
+    /// `replicas × num_samplers` stranded per-replica workers.
+    pub shared_samplers: bool,
+    /// DistServe-style split: this many replicas serve prefill only and
+    /// hand sequences to the remaining decode replicas (0 = unified).
+    pub prefill_replicas: usize,
+    /// Simulated KV-transfer cost per context token for the prefill→decode
+    /// handoff, in microseconds (the decode arrival is delayed by
+    /// `context × this`).
+    pub kv_transfer_us_per_token: f64,
+    /// Router idle-poll quantum in µs, bounded by the time until the next
+    /// due arrival (the `Scheduler::next_arrival` discipline).
+    pub idle_poll_us: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            policy: RoutePolicy::RoundRobin,
+            shared_samplers: false,
+            prefill_replicas: 0,
+            kv_transfer_us_per_token: 2.0,
+            idle_poll_us: 200,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// CLI overrides: `--replicas N --route P --shared_samplers
+    /// --prefill_replicas N --kv_transfer_us T`.
+    pub fn apply_args(&mut self, args: &Args) -> crate::Result<()> {
+        self.replicas = args.get_or("replicas", self.replicas)?;
+        if let Some(p) = args.get("route") {
+            self.policy = RoutePolicy::parse(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown route policy {p}"))?;
+        }
+        if args.flag("shared_samplers") {
+            self.shared_samplers = true;
+        }
+        self.prefill_replicas = args.get_or("prefill_replicas", self.prefill_replicas)?;
+        self.kv_transfer_us_per_token =
+            args.get_or("kv_transfer_us", self.kv_transfer_us_per_token)?;
+        anyhow::ensure!(
+            self.replicas >= 1,
+            "--replicas must be at least 1 (got {})",
+            self.replicas
+        );
+        anyhow::ensure!(
+            self.prefill_replicas == 0 || self.prefill_replicas < self.replicas,
+            "--prefill_replicas {} needs at least one decode replica \
+             (--replicas {} — raise it)",
+            self.prefill_replicas,
+            self.replicas
+        );
+        Ok(())
+    }
+}
+
+/// One replica's end-of-run view inside a [`ClusterReport`].
+pub struct ReplicaSummary {
+    pub id: usize,
+    pub role: ReplicaRole,
+    pub summary: ServingSummary,
+    pub preemptions: u64,
+}
+
+/// Everything a drained cluster hands back: final sequences, the merged
+/// fleet recorder (exact fleet-wide percentiles — see [`Recorder::merge`]),
+/// per-replica summaries, and the decision plane's lifetime stats.
+pub struct ClusterReport {
+    pub finished: Vec<Sequence>,
+    pub recorder: Recorder,
+    pub per_replica: Vec<ReplicaSummary>,
+    pub sampler_stats: Vec<SamplerStats>,
+    pub preemptions: u64,
+    /// Fleet-summed speculative-decoding tallies over committed windows.
+    pub spec_accepted: u64,
+    pub spec_proposed: u64,
+    pub spec_committed: u64,
+    pub spec_windows: u64,
+}
+
+impl ClusterReport {
+    /// The deterministic fleet stream digest — must equal a single-replica
+    /// engine's digest for the same trace, whatever the routing did.
+    pub fn stream_digest(&self) -> u64 {
+        crate::util::stream_digest(
+            self.finished
+                .iter()
+                .map(|s| (s.request.id, s.output.clone()))
+                .collect(),
+        )
+    }
+}
+
+/// FNV-1a over the first 8 prompt tokens — the session key for
+/// [`RoutePolicy::SessionAffinity`] (shared-prefix traffic hashes alike).
+fn prefix_hash(prompt: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in prompt.iter().take(8) {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// A running fleet: replicas + the routing front-end.
+pub struct Cluster {
+    replicas: Vec<Replica>,
+    cfg: ClusterConfig,
+    pool: Option<Arc<SamplerService>>,
+    t0: Instant,
+    rr: usize,
+    /// Original requests routed through the prefill pool, awaiting their
+    /// first token; the handoff restores the real `max_new_tokens`.
+    pending_handoff: HashMap<u64, Request>,
+    finished: Vec<Sequence>,
+    submitted: usize,
+}
+
+impl Cluster {
+    /// Start `cfg.replicas` workers. Each data plane is built inside its
+    /// worker thread by `make_plane(replica_id)`; every replica must load
+    /// the *same* model (or the same synthetic-plane seed) — the routing
+    /// invariant that keeps streams placement-independent. `pool_max_seq`
+    /// sizes the shared pool's history caps (the planes' max_seq).
+    pub fn start<D, F>(
+        ecfg: &EngineConfig,
+        ccfg: &ClusterConfig,
+        hot: Option<Arc<HotVocab>>,
+        pool_max_seq: usize,
+        make_plane: F,
+    ) -> Cluster
+    where
+        D: DataPlane + 'static,
+        F: Fn(usize) -> crate::Result<D> + Send + Sync + 'static,
+    {
+        assert!(ccfg.replicas >= 1, "a cluster needs at least one replica");
+        if ccfg.prefill_replicas > 0 {
+            assert!(
+                ccfg.prefill_replicas < ccfg.replicas,
+                "the prefill/decode split needs at least one decode replica"
+            );
+        }
+        let t0 = Instant::now();
+        let pool = ccfg.shared_samplers.then(|| {
+            Arc::new(SamplerService::start_with_epoch(
+                &ecfg.sampler,
+                hot.clone(),
+                pool_max_seq,
+                t0,
+            ))
+        });
+        let make = Arc::new(make_plane);
+        let replicas = (0..ccfg.replicas)
+            .map(|id| {
+                let role = if ccfg.prefill_replicas == 0 {
+                    ReplicaRole::Unified
+                } else if id < ccfg.prefill_replicas {
+                    ReplicaRole::Prefill
+                } else {
+                    ReplicaRole::Decode
+                };
+                let mk = make.clone();
+                Replica::spawn(
+                    id,
+                    role,
+                    ecfg.clone(),
+                    hot.clone(),
+                    pool.clone(),
+                    t0,
+                    move || mk(id),
+                )
+            })
+            .collect();
+        Cluster {
+            replicas,
+            cfg: ccfg.clone(),
+            pool,
+            t0,
+            rr: 0,
+            pending_handoff: HashMap::new(),
+            finished: Vec::new(),
+            submitted: 0,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Pick a replica of `role` for `req` under the configured policy.
+    fn pick(&mut self, req: &Request, role: ReplicaRole) -> usize {
+        let cands: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.role == role)
+            .map(|(i, _)| i)
+            .collect();
+        debug_assert!(!cands.is_empty(), "no {} replica", role.name());
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                let i = cands[self.rr % cands.len()];
+                self.rr += 1;
+                i
+            }
+            RoutePolicy::LeastOutstanding => *cands
+                .iter()
+                .min_by_key(|&&i| (self.replicas[i].outstanding(), i))
+                .unwrap(),
+            RoutePolicy::KvPressure => *cands
+                .iter()
+                .max_by_key(|&&i| {
+                    // Free blocks NET of routed-but-unadmitted load (each
+                    // outstanding sequence will take at least one block):
+                    // a dispatch burst between heartbeats must not pile
+                    // onto the replica whose heartbeat merely came first.
+                    let r = &self.replicas[i];
+                    (
+                        r.kv_free_blocks().saturating_sub(r.outstanding()),
+                        std::cmp::Reverse(r.outstanding()),
+                        std::cmp::Reverse(i),
+                    )
+                })
+                .unwrap(),
+            RoutePolicy::SessionAffinity => {
+                cands[(prefix_hash(&req.prompt) % cands.len() as u64) as usize]
+            }
+        }
+    }
+
+    /// Admit one request into the fleet. In split mode a multi-token
+    /// request first visits the prefill pool truncated to its first token.
+    pub fn submit(&mut self, req: Request) {
+        self.submitted += 1;
+        if self.cfg.prefill_replicas == 0 {
+            let i = self.pick(&req, ReplicaRole::Unified);
+            self.replicas[i].submit(req);
+        } else if req.max_new_tokens > 1 {
+            let mut first = req.clone();
+            first.max_new_tokens = 1;
+            self.pending_handoff.insert(req.id, req);
+            let i = self.pick(&first, ReplicaRole::Prefill);
+            self.replicas[i].submit(first);
+        } else {
+            // single-token request: the prefill pool is its whole lifecycle
+            let i = self.pick(&req, ReplicaRole::Prefill);
+            self.replicas[i].submit(req);
+        }
+    }
+
+    /// Drain every replica's outbox: collect final sequences and perform
+    /// pending prefill→decode handoffs.
+    fn collect_finished(&mut self) {
+        let drained: Vec<Sequence> = self
+            .replicas
+            .iter()
+            .flat_map(|r| r.drain_finished())
+            .collect();
+        for mut seq in drained {
+            let id = seq.request.id;
+            let Some(orig) = self.pending_handoff.remove(&id) else {
+                self.finished.push(seq);
+                continue;
+            };
+            debug_assert_eq!(seq.output.len(), 1, "prefill pool emits one token");
+            let hit_eos = orig
+                .eos_token
+                .is_some_and(|e| seq.output.last() == Some(&e));
+            if hit_eos {
+                // genuinely finished on its first token: no handoff;
+                // restore the untruncated request for faithful reporting
+                seq.request.max_new_tokens = orig.max_new_tokens;
+                self.finished.push(seq);
+            } else {
+                // Handoff: the decode replica resumes with recompute
+                // (decisions continue from iteration 1), admitted only
+                // after the simulated KV-transfer delay has elapsed.
+                let ctx = orig.prompt.len() + seq.output.len();
+                let mut next = orig;
+                next.arrival =
+                    self.now() + ctx as f64 * self.cfg.kv_transfer_us_per_token * 1e-6;
+                let d = self.pick(&next, ReplicaRole::Decode);
+                self.replicas[d].submit_resumed(next, seq.output);
+            }
+        }
+    }
+
+    /// Total requests still in flight anywhere in the fleet.
+    pub fn inflight(&self) -> usize {
+        self.submitted - self.finished.len()
+    }
+
+    /// Dispatch a trace open-loop — each request fires at its `arrival`
+    /// stamp against the cluster epoch — and drain the fleet. The idle
+    /// loop is `Scheduler::next_arrival`-style bounded polling: sleep at
+    /// most `idle_poll_us`, clipped to the time until the next due
+    /// arrival, and not at all when one is already due. Returns once every
+    /// request's final sequence has been collected (handoffs included).
+    pub fn run(&mut self, mut requests: Vec<Request>) -> crate::Result<()> {
+        requests.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut queue: VecDeque<Request> = requests.into();
+        loop {
+            let now = self.now();
+            while queue.front().is_some_and(|r| r.arrival <= now) {
+                let r = queue.pop_front().unwrap();
+                self.submit(r);
+            }
+            self.collect_finished();
+            if queue.is_empty() && self.inflight() == 0 {
+                debug_assert!(self.pending_handoff.is_empty());
+                return Ok(());
+            }
+            for r in &mut self.replicas {
+                r.check_alive()?;
+            }
+            let poll_us = match queue.front() {
+                Some(r) => {
+                    let until_us = ((r.arrival - self.now()) * 1e6).ceil();
+                    if until_us <= 0.0 {
+                        continue; // due now: dispatch immediately
+                    }
+                    self.cfg.idle_poll_us.min(until_us as u64).max(1)
+                }
+                None => self.cfg.idle_poll_us.max(1),
+            };
+            std::thread::sleep(std::time::Duration::from_micros(poll_us));
+        }
+    }
+
+    /// Drain whatever is still in flight, stop every replica, join the
+    /// workers, and assemble the fleet report. The stop is only requested
+    /// *after* the last final sequence is collected, so join-on-shutdown
+    /// can never lose an in-flight or handed-off sequence.
+    pub fn shutdown(mut self) -> crate::Result<ClusterReport> {
+        while self.inflight() > 0 {
+            self.collect_finished();
+            if self.inflight() == 0 {
+                break;
+            }
+            for r in &mut self.replicas {
+                r.check_alive()?;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(
+                self.cfg.idle_poll_us.max(1),
+            ));
+        }
+        for r in &self.replicas {
+            r.request_stop();
+        }
+        let mut merged = Recorder::new();
+        let mut per_replica = Vec::new();
+        let mut sampler_stats = Vec::new();
+        let mut preemptions = 0u64;
+        let mut spec = [0u64; 4];
+        for r in self.replicas.drain(..) {
+            let (id, role) = (r.id, r.role);
+            let res = r.join()?;
+            merged.merge(&res.recorder);
+            preemptions += res.preemptions;
+            spec[0] += res.spec_accepted;
+            spec[1] += res.spec_proposed;
+            spec[2] += res.spec_committed;
+            spec[3] += res.spec_windows;
+            sampler_stats.extend(res.sampler_stats);
+            per_replica.push(ReplicaSummary {
+                id,
+                role,
+                summary: res.recorder.summary(),
+                preemptions: res.preemptions,
+            });
+        }
+        if let Some(pool) = self.pool.take() {
+            match Arc::try_unwrap(pool) {
+                // shared mode: the pool holds the fleet's only sampler stats
+                Ok(svc) => sampler_stats = svc.shutdown(),
+                Err(_) => anyhow::bail!("shared sampler pool still referenced at shutdown"),
+            }
+        }
+        Ok(ClusterReport {
+            finished: std::mem::take(&mut self.finished),
+            recorder: merged,
+            per_replica,
+            sampler_stats,
+            preemptions,
+            spec_accepted: spec[0],
+            spec_proposed: spec[1],
+            spec_committed: spec[2],
+            spec_windows: spec[3],
+        })
+    }
+}
+
+impl Drop for Cluster {
+    /// A cluster dropped without `shutdown()` (an error path) at least
+    /// unblocks its workers: they exit as soon as their engines drain.
+    fn drop(&mut self) {
+        for r in &self.replicas {
+            r.request_stop();
+        }
+    }
+}

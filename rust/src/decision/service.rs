@@ -18,6 +18,16 @@
 //! **Determinism.** Decisions use pre-generated Philox uniforms keyed by
 //! (engine seed, request seed, sequence, iteration), so the token stream is
 //! identical for any `m` (asserted in tests).
+//!
+//! **Shared pools (DESIGN.md §9).** One service may serve a whole fleet of
+//! data-parallel engine replicas: submitters namespace their task ids
+//! (`replica id` in the high bits of [`IterationTask::iter`]) so the
+//! completion queue never aliases two replicas' iterations, and sequence
+//! ownership stays `seq_id % m` — globally unique request ids spread the
+//! fleet's sequences over one sampler pool instead of stranding capacity
+//! per replica. The submit paths serialize on an internal lock (the SPSC
+//! rings still have exactly one logical producer); collects are already
+//! concurrent-safe through the shared completion queue.
 
 use super::grammar::{ConstraintState, GrammarConstraint};
 use super::hotvocab::HotVocab;
@@ -162,7 +172,11 @@ struct PendingCollect {
 
 /// Running service handle.
 pub struct SamplerService {
-    senders: Vec<spsc::Producer<SamplerMsg>>,
+    /// Per-sampler control/data rings. Locked because a *shared* pool has
+    /// several engine replicas submitting concurrently; each ring still
+    /// sees a serialized producer stream (register-before-iterate order is
+    /// preserved per replica by the lock).
+    senders: Mutex<Vec<spsc::Producer<SamplerMsg>>>,
     results: mpmc::Receiver<DecisionBatch>,
     /// Worker handles; slots are taken when a dead worker is joined for
     /// panic propagation, and drained at shutdown/drop.
@@ -172,6 +186,9 @@ pub struct SamplerService {
     /// microbatches' tasks be in flight and reaped out of order.
     pending: Mutex<HashMap<u64, PendingCollect>>,
     m: usize,
+    /// Shared time origin the workers timestamp against (the engine's t0;
+    /// a cluster's replicas all adopt it so fleet stage timelines merge).
+    epoch: Instant,
 }
 
 /// Per-sampler lifetime statistics. (Speculative-decoding acceptance is
@@ -350,16 +367,24 @@ impl SamplerService {
         }
         drop(result_tx);
         SamplerService {
-            senders,
+            senders: Mutex::new(senders),
             results,
             workers: Mutex::new(workers),
             pending: Mutex::new(HashMap::new()),
             m,
+            epoch,
         }
     }
 
     pub fn num_samplers(&self) -> usize {
         self.m
+    }
+
+    /// The time origin workers timestamp busy intervals against. Engines
+    /// sharing this service adopt it as their t0 so GPU and decision stage
+    /// intervals live on one fleet-wide timeline.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
     }
 
     /// Register a new sequence (broadcast; only the owner keeps it).
@@ -389,7 +414,7 @@ impl SamplerService {
         grammar: Option<Arc<GrammarConstraint>>,
     ) {
         let owner = (seq_id as usize) % self.m;
-        self.senders[owner].push(SamplerMsg::Register {
+        self.senders.lock().unwrap()[owner].push(SamplerMsg::Register {
             seq_id,
             prompt: prompt.to_vec(),
             output: output.to_vec(),
@@ -401,13 +426,14 @@ impl SamplerService {
     /// Retire a finished sequence.
     pub fn retire(&self, seq_id: u64) {
         let owner = (seq_id as usize) % self.m;
-        self.senders[owner].push(SamplerMsg::Retire { seq_id });
+        self.senders.lock().unwrap()[owner].push(SamplerMsg::Retire { seq_id });
     }
 
-    /// Publish one iteration's logits + metadata to all samplers.
+    /// Publish one iteration's logits + metadata to all samplers. Shared
+    /// pools rely on the caller namespacing `task.iter` (unique fleet-wide).
     pub fn submit(&self, task: IterationTask) {
         let task = Arc::new(task);
-        for tx in &self.senders {
+        for tx in self.senders.lock().unwrap().iter() {
             tx.push(SamplerMsg::Iterate(task.clone()));
         }
     }
@@ -523,10 +549,12 @@ impl SamplerService {
     /// that exited cleanly; panicked workers are surfaced per `propagate`
     /// (true = re-panic, false = log and continue — the drop path).
     fn join_all(&mut self, propagate: bool) -> Vec<SamplerStats> {
-        for tx in &self.senders {
+        let mut senders = self.senders.lock().unwrap();
+        for tx in senders.iter() {
             tx.close();
         }
-        self.senders.clear(); // Producer::drop closes the rings
+        senders.clear(); // Producer::drop closes the rings
+        drop(senders);
         let mut handles: Vec<Option<JoinHandle<SamplerStats>>> =
             std::mem::take(&mut *self.workers.lock().unwrap());
         // Drain stray result batches while workers wind down so none blocks

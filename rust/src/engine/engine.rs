@@ -125,7 +125,14 @@ struct InFlight {
 pub struct Engine<D: DataPlane> {
     runtime: D,
     scheduler: Scheduler,
-    service: Option<SamplerService>,
+    /// Decision-plane service. `Arc` so a cluster can share one sampler
+    /// pool across data-parallel replicas (DESIGN.md §9); a standalone
+    /// engine holds the only reference and tears it down at shutdown.
+    service: Option<Arc<SamplerService>>,
+    /// High bits OR-ed into every submitted task id so a shared pool's
+    /// completion queue never aliases two replicas' iterations (0 for a
+    /// standalone engine — the ids are then exactly the plan counter).
+    task_base: u64,
     inline_pipe: Option<DecisionPipeline>,
     inline_hist: HashMap<u64, BatchHistory>,
     tp_shards: usize,
@@ -165,7 +172,52 @@ impl<D: DataPlane> Engine<D> {
     /// Build from a loaded runtime. `cfg.sampler.variant` picks the decision
     /// plane; `cfg.parallel.tp` controls the simulated logits sharding;
     /// `cfg.n_microbatches`/`cfg.overlap` configure the pipelined executor.
-    pub fn new(mut runtime: D, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
+    pub fn new(runtime: D, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
+        Self::build(runtime, cfg, hot, Instant::now(), None, 0)
+    }
+
+    /// Like [`Self::new`] but timestamping against a caller-provided epoch,
+    /// so several replicas' recorders (and their sampler services) share
+    /// one timeline and [`Recorder::merge`] unions comparable intervals.
+    pub fn with_epoch(
+        runtime: D,
+        cfg: &EngineConfig,
+        hot: Option<Arc<HotVocab>>,
+        epoch: Instant,
+    ) -> Self {
+        Self::build(runtime, cfg, hot, epoch, None, 0)
+    }
+
+    /// Build a replica over a *shared* sampler pool (DESIGN.md §9): the
+    /// engine submits into `service` instead of spawning its own workers,
+    /// namespacing every task id with `task_base` (callers use
+    /// `(replica + 1) << 48`) so the pool's completion queue never aliases
+    /// two replicas' iterations. The engine adopts the pool's epoch as its
+    /// t0, putting the whole fleet's stage intervals on one timeline. The
+    /// pool owner — not this engine — shuts the service down.
+    pub fn with_shared_service(
+        runtime: D,
+        cfg: &EngineConfig,
+        hot: Option<Arc<HotVocab>>,
+        service: Arc<SamplerService>,
+        task_base: u64,
+    ) -> Self {
+        assert!(
+            !matches!(cfg.sampler.variant, DecisionVariant::GpuEpilogue),
+            "the inline GPU-epilogue baseline has no service to share"
+        );
+        let epoch = service.epoch();
+        Self::build(runtime, cfg, hot, epoch, Some(service), task_base)
+    }
+
+    fn build(
+        mut runtime: D,
+        cfg: &EngineConfig,
+        hot: Option<Arc<HotVocab>>,
+        t0: Instant,
+        shared: Option<Arc<SamplerService>>,
+        task_base: u64,
+    ) -> Self {
         let b = runtime.batch();
         let max_seq_len = runtime.max_seq();
         // KV accounting: by default enough blocks for every slot to run to
@@ -197,9 +249,11 @@ impl<D: DataPlane> Engine<D> {
         let variant = cfg.sampler.variant;
         let inline_epilogue = matches!(variant, DecisionVariant::GpuEpilogue);
         // Samplers timestamp against the engine's t0 so decision and GPU
-        // stage intervals share one timeline.
-        let t0 = Instant::now();
-        let (service, inline_pipe) = if inline_epilogue {
+        // stage intervals share one timeline. With a shared pool the t0 IS
+        // the pool's epoch (asserted by `with_shared_service`).
+        let (service, inline_pipe) = if let Some(svc) = shared {
+            (Some(svc), None)
+        } else if inline_epilogue {
             (
                 None,
                 Some(DecisionPipeline::new(
@@ -210,12 +264,12 @@ impl<D: DataPlane> Engine<D> {
             )
         } else {
             (
-                Some(SamplerService::start_with_epoch(
+                Some(Arc::new(SamplerService::start_with_epoch(
                     &cfg.sampler,
                     hot,
                     max_seq_len,
                     t0,
-                )),
+                ))),
                 None,
             )
         };
@@ -224,6 +278,7 @@ impl<D: DataPlane> Engine<D> {
             runtime,
             scheduler,
             service,
+            task_base,
             inline_pipe,
             inline_hist: HashMap::new(),
             tp_shards: cfg.parallel.tp.max(1),
@@ -270,6 +325,34 @@ impl<D: DataPlane> Engine<D> {
         );
         self.recorder.on_arrival(req.id, req.arrival.max(0.0));
         self.scheduler.submit(req);
+    }
+
+    /// Submit a sequence that already generated `output` tokens elsewhere —
+    /// a cluster's prefill→decode handoff (DESIGN.md §9). The scheduler
+    /// replays `prompt ⧺ output` through the forward (recompute, exactly
+    /// the preemption-resume path) and decisions continue from iteration
+    /// `output.len()`, so the combined stream is bit-identical to one
+    /// engine running the sequence end to end. `req.arrival` carries the
+    /// handoff time plus the simulated KV-transfer cost.
+    pub fn submit_resumed(&mut self, req: Request, output: Vec<u32>) {
+        assert!(
+            req.prompt.len() + output.len() + 2 < self.max_seq_len,
+            "resumed context ({} tokens) too long for model (max_seq {})",
+            req.prompt.len() + output.len(),
+            self.max_seq_len
+        );
+        self.recorder.on_arrival(req.id, req.arrival.max(0.0));
+        self.scheduler.submit_resumed(req, output);
+    }
+
+    /// Waiting + running sequences — the router's queue-depth heartbeat.
+    pub fn queue_depth(&self) -> usize {
+        self.scheduler.waiting_len() + self.scheduler.running_len()
+    }
+
+    /// Free KV blocks right now — the router's KV-pressure heartbeat.
+    pub fn kv_free_blocks(&self) -> usize {
+        self.scheduler.kv.free_blocks()
     }
 
     /// Run one executor turn: settle the cursor microbatch's previous
@@ -473,7 +556,10 @@ impl<D: DataPlane> Engine<D> {
             return Ok(true); // pure prefill chunk: nothing to decide
         }
         if let Some(svc) = &self.service {
-            let task_id = plan.iter;
+            // Namespaced task id: unique fleet-wide under a shared pool
+            // (replica id in the high bits), exactly the plan counter for
+            // a standalone engine.
+            let task_id = self.task_base | plan.iter;
             svc.submit(IterationTask {
                 iter: task_id,
                 mb,
@@ -670,10 +756,14 @@ impl<D: DataPlane> Engine<D> {
         self.scheduler.take_finished()
     }
 
-    /// Shut the decision plane down, collecting sampler stats.
+    /// Shut the decision plane down, collecting sampler stats. An engine
+    /// over a *shared* pool only drops its reference — the pool owner
+    /// joins the workers (and gets the stats) once every replica is gone.
     pub fn shutdown(mut self) -> (Recorder, Vec<crate::decision::service::SamplerStats>) {
         if let Some(svc) = self.service.take() {
-            self.sampler_stats = svc.shutdown();
+            if let Ok(svc) = Arc::try_unwrap(svc) {
+                self.sampler_stats = svc.shutdown();
+            }
         }
         (self.recorder, self.sampler_stats)
     }

@@ -181,9 +181,18 @@ impl Scheduler {
     }
 
     pub fn submit(&mut self, req: Request) {
+        self.submit_resumed(req, Vec::new());
+    }
+
+    /// Submit a sequence carrying tokens generated elsewhere (a cluster's
+    /// prefill→decode handoff): admission replays `prompt ⧺ output` through
+    /// the forward pass exactly like a preemption resume, and decisions
+    /// continue from iteration `output.len()`. Unlike a preemption entry it
+    /// gets no resume boost — it queues at its arrival-time priority.
+    pub fn submit_resumed(&mut self, req: Request, output: Vec<u32>) {
         self.waiting.push_back(WaitingEntry {
             req,
-            resumed_output: Vec::new(),
+            resumed_output: output,
             preemptions: 0,
         });
     }

@@ -2,6 +2,7 @@
 //! (DESIGN.md §4 maps each to its modules). Every driver returns a
 //! [`Report`] (markdown + JSON series) and can write it under `results/`.
 
+pub mod cluster;
 pub mod e2e;
 pub mod exactness;
 pub mod holdout;
@@ -56,11 +57,12 @@ impl Effort {
 /// the paper (`burst`: tail latency under bursty arrivals; `specdec`:
 /// verified speculative decoding vs draft window size; `overlap`:
 /// measured-vs-simulated decision-plane overlap under the pipelined
-/// executor).
+/// executor; `cluster`: data-parallel replicas × routing policy × traffic
+/// behind the decision-plane-aware router).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst", "specdec",
-    "overlap",
+    "overlap", "cluster",
 ];
 
 /// Run one experiment by id.
@@ -84,6 +86,7 @@ pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
         "fig12" => micro::fig12(effort),
         "fig13" => exactness::fig13(effort),
         "overlap" => overlap::overlap(effort),
+        "cluster" => cluster::cluster(effort),
         other => anyhow::bail!("unknown experiment {other}"),
     })
 }

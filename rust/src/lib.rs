@@ -35,6 +35,9 @@
 //! The [`runtime`] module loads the AOT artifacts through PJRT; the
 //! [`simulator`] module provides the distributed-GPU timing substrate used to
 //! regenerate the paper's figures on a CPU-only host (see `DESIGN.md` §2).
+//! The [`cluster`] module scales the same decision plane across the fleet
+//! axis: data-parallel engine replicas behind a decision-plane-aware router,
+//! optionally sharing one sampler pool (`DESIGN.md` §9).
 
 // Config structs (EngineConfig, SamplerConfig, SimConfig, …) are built by
 // `let mut cfg = X::default();` followed by field assignments throughout
@@ -44,6 +47,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 pub mod bench;
+pub mod cluster;
 pub mod config;
 pub mod decision;
 pub mod engine;

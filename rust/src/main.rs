@@ -11,6 +11,7 @@
 // idiom); see the identical crate-level allow in lib.rs.
 #![allow(clippy::field_reassign_with_default)]
 
+use simple_serve::cluster::{Cluster, ClusterConfig};
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
 use simple_serve::engine::PjrtEngine;
@@ -37,6 +38,11 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("n_microbatches", "in-flight microbatches for the pipelined executor"),
     OptSpec::value("idle_poll_us", "idle poll quantum in µs (0 = busy-poll)"),
     OptSpec::flag("overlap", "overlap the decision plane with forwards (serve)"),
+    OptSpec::value("replicas", "data-parallel engine replicas (serve; default 1)"),
+    OptSpec::value("route", "routing policy: rr|least-outstanding|kv-pressure|session-affinity"),
+    OptSpec::flag("shared_samplers", "one shared sampler pool for the whole fleet (serve)"),
+    OptSpec::value("prefill_replicas", "DistServe-style split: prefill-only replicas (serve)"),
+    OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token (handoff)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),
     OptSpec::flag("full", "full effort (paper-scale sweeps)"),
     OptSpec::flag("help", "show help"),
@@ -80,22 +86,17 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
     if args.flag("overlap") {
         cfg.overlap = true;
     }
+    let mut ccfg = ClusterConfig::default();
+    ccfg.apply_args(args)?;
+    ccfg.idle_poll_us = cfg.idle_poll_us;
 
     let manifest = Manifest::load(&default_artifacts_dir())?;
+    if ccfg.replicas > 1 || ccfg.prefill_replicas > 0 {
+        return serve_cluster(&model, n, &cfg, &ccfg, &manifest);
+    }
     let rt = ModelRuntime::load(&manifest, &model)?;
     let vocab = rt.vocab();
-    let hot = if cfg.sampler.variant == DecisionVariant::Shvs {
-        let h = if cfg.sampler.hot_vocab > 0 {
-            cfg.sampler.hot_vocab
-        } else {
-            (vocab / 5).clamp(64, 32_768)
-        };
-        // AOT models put their Zipf head on low ids (lm_bias); the hot set
-        // trace profiling would find is the id prefix.
-        Some(HotVocab::new((0..h as u32).collect(), vocab).into_arc())
-    } else {
-        None
-    };
+    let hot = serve_hot_set(&cfg, vocab);
     println!(
         "serving {n} requests on {model} (V={vocab}) via {} with {} samplers ...",
         cfg.sampler.variant.name(),
@@ -136,6 +137,92 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
         println!(
             "decision plane: {decisions} decisions, {:.1}% fast path",
             fast as f64 / decisions as f64 * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Offline-profiled hot set for the SHVS variant (AOT models put their
+/// Zipf head on low ids — see python/compile/model.py lm_bias).
+fn serve_hot_set(cfg: &EngineConfig, vocab: usize) -> Option<std::sync::Arc<HotVocab>> {
+    (cfg.sampler.variant == DecisionVariant::Shvs).then(|| {
+        let h = if cfg.sampler.hot_vocab > 0 {
+            cfg.sampler.hot_vocab
+        } else {
+            (vocab / 5).clamp(64, 32_768)
+        };
+        HotVocab::new((0..h as u32).collect(), vocab).into_arc()
+    })
+}
+
+/// `serve --replicas R [--route P] [--shared_samplers]`: the same workload
+/// through a fleet of data-parallel PJRT replicas behind the router
+/// (DESIGN.md §9). Each replica loads the model inside its own worker
+/// thread; the fleet report merges every replica's recorder.
+fn serve_cluster(
+    model: &str,
+    n: usize,
+    cfg: &EngineConfig,
+    ccfg: &ClusterConfig,
+    manifest: &Manifest,
+) -> simple_serve::Result<()> {
+    anyhow::ensure!(
+        !(ccfg.shared_samplers && cfg.sampler.variant == DecisionVariant::GpuEpilogue),
+        "--shared_samplers needs a service-backed variant \
+         (the GPU-epilogue baseline samples inline)"
+    );
+    let spec = manifest.model(model)?;
+    let (vocab, max_seq) = (spec.vocab, spec.max_seq);
+    let hot = serve_hot_set(cfg, vocab);
+    println!(
+        "serving {n} requests on {model} (V={vocab}) across {} replicas \
+         [{}{}{}] with {} samplers/pool ...",
+        ccfg.replicas,
+        ccfg.policy.name(),
+        if ccfg.shared_samplers { ", shared pool" } else { "" },
+        if ccfg.prefill_replicas > 0 {
+            format!(", {} prefill", ccfg.prefill_replicas)
+        } else {
+            String::new()
+        },
+        cfg.sampler.num_samplers
+    );
+    let artifacts = default_artifacts_dir();
+    let model_name = model.to_string();
+    let mut cluster = Cluster::start(
+        cfg,
+        ccfg,
+        hot,
+        max_seq,
+        move |_id| {
+            let manifest = Manifest::load(&artifacts)?;
+            ModelRuntime::load(&manifest, &model_name)
+        },
+    );
+    let trace = workload::generate(&workload::TraceConfig::sharegpt_like(
+        n,
+        vocab,
+        max_seq.min(256),
+    ));
+    cluster.run(trace.requests)?;
+    let report = cluster.shutdown()?;
+    println!("{}", report.recorder.summary().to_json().to_string_pretty());
+    for r in &report.per_replica {
+        println!(
+            "  replica {} [{}]: {:.0} tok/s, {} tokens, {} preemptions",
+            r.id,
+            r.role.name(),
+            r.summary.throughput,
+            r.summary.tokens,
+            r.preemptions
+        );
+    }
+    println!("fleet stream digest: {:016x}", report.stream_digest());
+    let decisions: u64 = report.sampler_stats.iter().map(|s| s.decisions).sum();
+    if decisions > 0 {
+        println!(
+            "decision plane: {decisions} decisions over {} sampler(s)",
+            report.sampler_stats.len()
         );
     }
     Ok(())

@@ -211,6 +211,59 @@ impl Recorder {
         }
     }
 
+    /// Merge another recorder's streams into this one — the fleet-wide view
+    /// of a cluster of data-parallel replicas (DESIGN.md §9). Requires both
+    /// recorders to share a time origin (replicas adopt the cluster epoch).
+    ///
+    /// Per-request records union: a request that lived on two replicas (a
+    /// prefill→decode handoff) merges into one lifecycle — earliest
+    /// arrival/first-token, all token times interleaved in time order, and
+    /// the *latest* finish (the prefill side's truncated "finish" is
+    /// superseded by the decode side's real one). Busy intervals and stage
+    /// timelines concatenate; `utilization`/`overlap_report` already union
+    /// overlapping spans at query time, so fleet utilization reads "any
+    /// replica busy". Percentiles over the merged recorder are therefore
+    /// exact fleet-wide quantiles, not averages of per-replica quantiles.
+    pub fn merge(&mut self, other: &Recorder) {
+        for (&id, r) in &other.requests {
+            match self.requests.entry(id) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let m = e.get_mut();
+                    m.arrival = m.arrival.min(r.arrival);
+                    m.first_token = match (m.first_token, r.first_token) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (a, b) => a.or(b),
+                    };
+                    m.token_times.extend_from_slice(&r.token_times);
+                    m.token_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    m.finished = match (m.finished, r.finished) {
+                        (Some(a), Some(b)) => Some(a.max(b)),
+                        (a, b) => a.or(b),
+                    };
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(r.clone());
+                }
+            }
+        }
+        for (name, iv) in &other.busy {
+            self.busy.entry(name.clone()).or_default().extend_from_slice(iv);
+        }
+        self.stage_gpu.extend_from_slice(&other.stage_gpu);
+        self.stage_decision.extend_from_slice(&other.stage_decision);
+        self.exposed_wait_s += other.exposed_wait_s;
+        if other.horizon_init {
+            self.extend_horizon(other.t_start);
+            self.extend_horizon(other.t_end);
+        }
+    }
+
+    /// Finish time of a request, if it finished — the cluster simulator's
+    /// prefill→decode handoff reads this to schedule the decode phase.
+    pub fn finish_time(&self, req: u64) -> Option<f64> {
+        self.requests.get(&req).and_then(|r| r.finished)
+    }
+
     fn extend_horizon(&mut self, t: f64) {
         if !self.horizon_init {
             self.t_start = t;
@@ -479,6 +532,67 @@ mod tests {
         assert_eq!(o.last_stage_bubble, 0.0);
         let j = o.to_json();
         assert_eq!(j.get("microbatches").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn merge_equals_single_recorder_over_the_same_events() {
+        // Fleet-wide percentiles: events split across two recorders then
+        // merged must reproduce the one-recorder quantities exactly.
+        let mut whole = Recorder::new();
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        for (rec, alt, id) in [(&mut a, false, 1u64), (&mut b, true, 2u64)] {
+            let shift = if alt { 0.05 } else { 0.0 };
+            rec.on_arrival(id, shift);
+            whole.on_arrival(id, shift);
+            for i in 1..=4 {
+                let t = shift + i as f64 * 0.1;
+                rec.on_token(id, t);
+                whole.on_token(id, t);
+            }
+            rec.on_finish(id, shift + 0.4);
+            whole.on_finish(id, shift + 0.4);
+        }
+        a.on_busy("gpu", 0.0, 0.3);
+        whole.on_busy("gpu", 0.0, 0.3);
+        b.on_busy("gpu", 0.2, 0.5); // overlaps a's interval across replicas
+        whole.on_busy("gpu", 0.2, 0.5);
+        a.merge(&b);
+        assert_eq!(a.total_tokens(), whole.total_tokens());
+        assert_eq!(a.finished_requests(), 2);
+        let (ma, mw) = (a.tpot_summary(), whole.tpot_summary());
+        assert_eq!(ma.n, mw.n);
+        assert!((ma.p50 - mw.p50).abs() < 1e-12);
+        assert!((ma.p95 - mw.p95).abs() < 1e-12);
+        assert!((ma.p99 - mw.p99).abs() < 1e-12);
+        assert!((a.throughput() - whole.throughput()).abs() < 1e-9);
+        // busy-interval union, not sum: overlap across replicas merges
+        assert!((a.utilization("gpu") - whole.utilization("gpu")).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_unions_a_handoff_request_into_one_lifecycle() {
+        // The prefill replica records arrival + the first token + a
+        // truncated "finish"; the decode replica records a later arrival
+        // (transfer delay) + the remaining tokens + the real finish.
+        let mut prefill = Recorder::new();
+        prefill.on_arrival(7, 0.0);
+        prefill.on_token(7, 0.2);
+        prefill.on_finish(7, 0.2);
+        let mut decode = Recorder::new();
+        decode.on_arrival(7, 0.3); // handoff + transfer
+        decode.on_token(7, 0.5);
+        decode.on_token(7, 0.6);
+        decode.on_finish(7, 0.6);
+        prefill.merge(&decode);
+        assert_eq!(prefill.total_tokens(), 3);
+        assert_eq!(prefill.requests.len(), 1, "one lifecycle, not two");
+        assert_eq!(prefill.ttfts(), vec![0.2], "TTFT from the prefill side");
+        assert_eq!(prefill.finish_time(7), Some(0.6), "decode finish wins");
+        let mut gaps = prefill.tpots();
+        gaps.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        // 0.2→0.5 spans the handoff (0.3), 0.5→0.6 is a decode gap
+        assert!((gaps[0] - 0.1).abs() < 1e-12 && (gaps[1] - 0.3).abs() < 1e-12);
     }
 
     #[test]

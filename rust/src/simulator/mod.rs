@@ -13,4 +13,7 @@ pub mod serving;
 
 pub use gpu::{DataPlaneModel, GpuModel, SamplingCostModel};
 pub use pipeline::{amdahl_drift, decode_iteration, DecisionMode, IterationTiming};
-pub use serving::{simulate, SimConfig, SimRequest, SimResult};
+pub use serving::{
+    simulate, simulate_cluster, ClusterSimConfig, ClusterSimResult, SimConfig, SimRequest,
+    SimResult,
+};

@@ -342,6 +342,134 @@ pub fn simulate(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     }
 }
 
+/// Cluster-layer mirror of `cluster::ClusterConfig` (DESIGN.md §9): how
+/// many data-parallel replicas the simulated fleet runs, whether a
+/// DistServe-style prefill/decode split is active, and the handoff-cost
+/// model — so measured and simulated cluster throughput are comparable.
+#[derive(Debug, Clone)]
+pub struct ClusterSimConfig {
+    pub replicas: usize,
+    /// Replicas dedicated to prefill (0 = unified fleet). The rest decode.
+    pub prefill_replicas: usize,
+    /// Simulated KV-transfer cost per context token for the handoff,
+    /// seconds (mirrors the router's `kv_transfer_us_per_token`).
+    pub kv_transfer_s_per_token: f64,
+}
+
+impl Default for ClusterSimConfig {
+    fn default() -> Self {
+        ClusterSimConfig {
+            replicas: 1,
+            prefill_replicas: 0,
+            kv_transfer_s_per_token: 2e-6,
+        }
+    }
+}
+
+/// Fleet-level simulation result.
+pub struct ClusterSimResult {
+    /// Merged fleet recorder (exact fleet-wide percentiles).
+    pub recorder: Recorder,
+    pub per_replica: Vec<SimResult>,
+    pub preemptions: u64,
+}
+
+impl ClusterSimResult {
+    pub fn throughput(&self) -> f64 {
+        self.recorder.throughput()
+    }
+}
+
+/// Simulate a fleet of data-parallel replicas, each an independent
+/// [`simulate`] run over its routed share of the trace (deterministic
+/// round-robin — the placement-blind mirror of the measured router; every
+/// routing policy commits the same tokens, so the simulator models the
+/// placement-independent quantity).
+///
+/// With `prefill_replicas > 0` the fleet splits DistServe-style: the
+/// prefill pool serves every request truncated to its first token, then
+/// each sequence's decode phase is replayed on the decode pool with its
+/// arrival delayed by the prefill finish time plus the simulated
+/// KV-transfer cost — the same two-phase lifecycle the measured router
+/// realizes, so fleet TPOT includes the handoff gap.
+pub fn simulate_cluster(
+    cfg: &SimConfig,
+    ccfg: &ClusterSimConfig,
+    requests: &[SimRequest],
+) -> ClusterSimResult {
+    assert!(ccfg.replicas >= 1);
+    let mut per_replica = Vec::new();
+    let mut recorder = Recorder::new();
+    let mut preemptions = 0u64;
+    if ccfg.prefill_replicas == 0 {
+        for rep in 0..ccfg.replicas {
+            let share: Vec<SimRequest> = requests
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % ccfg.replicas == rep)
+                .map(|(_, r)| r.clone())
+                .collect();
+            let res = simulate(cfg, &share);
+            recorder.merge(&res.recorder);
+            preemptions += res.preemptions;
+            per_replica.push(res);
+        }
+        return ClusterSimResult { recorder, per_replica, preemptions };
+    }
+    assert!(
+        ccfg.prefill_replicas < ccfg.replicas,
+        "the split needs at least one decode replica"
+    );
+    // Phase 1: the prefill pool produces every request's first token.
+    let n_prefill = ccfg.prefill_replicas;
+    let mut prefill_results = Vec::new();
+    for rep in 0..n_prefill {
+        let share: Vec<SimRequest> = requests
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_prefill == rep)
+            .map(|(_, r)| SimRequest { output_len: 1, ..r.clone() })
+            .collect();
+        prefill_results.push(simulate(cfg, &share));
+    }
+    // Phase 2: decode resumes each multi-token request after its prefill
+    // finish + the transfer of its (prompt + 1)-token context.
+    let n_decode = ccfg.replicas - n_prefill;
+    let mut decode_requests: Vec<SimRequest> = Vec::new();
+    for r in requests {
+        if r.output_len <= 1 {
+            continue; // its whole lifecycle lived on the prefill pool
+        }
+        let done = prefill_results
+            .iter()
+            .find_map(|res| res.recorder.finish_time(r.id))
+            .expect("prefill pool finished every request");
+        let ctx = r.prompt_len + 1;
+        decode_requests.push(SimRequest {
+            id: r.id,
+            arrival: done + ctx as f64 * ccfg.kv_transfer_s_per_token,
+            prompt_len: ctx, // recompute replays prompt + the first token
+            output_len: r.output_len - 1,
+        });
+    }
+    let mut decode_results = Vec::new();
+    for rep in 0..n_decode {
+        let share: Vec<SimRequest> = decode_requests
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_decode == rep)
+            .map(|(_, r)| r.clone())
+            .collect();
+        decode_results.push(simulate(cfg, &share));
+    }
+    for res in prefill_results.into_iter().chain(decode_results) {
+        recorder.merge(&res.recorder);
+        preemptions += res.preemptions;
+        per_replica.push(res);
+    }
+    ClusterSimResult { recorder, per_replica, preemptions }
+}
+
 /// Convenience: build SimRequests from the workload generator's trace.
 pub fn to_sim_requests(trace: &crate::workload::Trace) -> Vec<SimRequest> {
     trace
@@ -598,6 +726,53 @@ mod tests {
         // unlimited-capacity run of the same trace never preempts
         let free = simulate(&cfg(DecisionMode::GpuEpilogue), &reqs);
         assert_eq!(free.preemptions, 0);
+    }
+
+    // ---- cluster layer (data-parallel replicas, DESIGN.md §9) ----
+
+    #[test]
+    fn cluster_replicas_scale_throughput_and_lose_no_tokens() {
+        let reqs = requests(200, None);
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        // 32 slots per replica: the closed loop saturates one replica's
+        // slot capacity, so the fleet's extra slots are visible throughput
+        let mut scfg = cfg(DecisionMode::GpuEpilogue);
+        scfg.slots = 32;
+        let one = simulate_cluster(&scfg, &ClusterSimConfig::default(), &reqs);
+        let mut c4 = ClusterSimConfig::default();
+        c4.replicas = 4;
+        let four = simulate_cluster(&scfg, &c4, &reqs);
+        assert_eq!(one.recorder.total_tokens(), expected);
+        assert_eq!(four.recorder.total_tokens(), expected);
+        assert_eq!(four.recorder.finished_requests(), 200);
+        assert_eq!(four.per_replica.len(), 4);
+        // 4 replicas split a saturating closed loop: clearly faster,
+        // sublinear-or-linear (each replica also runs smaller batches)
+        let gain = four.throughput() / one.throughput();
+        assert!(gain > 1.5, "4-replica gain {gain}");
+    }
+
+    #[test]
+    fn cluster_prefill_decode_split_completes_with_transfer_gaps() {
+        let reqs = requests(80, Some(100.0));
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        let mut split = ClusterSimConfig::default();
+        split.replicas = 3;
+        split.prefill_replicas = 1;
+        split.kv_transfer_s_per_token = 1e-3; // far above any queueing noise
+        let res = simulate_cluster(&cfg(DecisionMode::GpuEpilogue), &split, &reqs);
+        assert_eq!(res.recorder.total_tokens(), expected, "handoff loses no tokens");
+        assert_eq!(res.recorder.finished_requests(), 80);
+        assert_eq!(res.per_replica.len(), 3);
+        // a cheap-transfer split finishes sooner per request than an
+        // expensive one — the handoff cost model is visible in the tail
+        let mut cheap = split.clone();
+        cheap.kv_transfer_s_per_token = 0.0;
+        let fast = simulate_cluster(&cfg(DecisionMode::GpuEpilogue), &cheap, &reqs);
+        assert!(
+            fast.recorder.tpot_summary().max <= res.recorder.tpot_summary().max,
+            "transfer cost must widen the worst handoff gap"
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@
 // idiom); see the identical crate-level allow in lib.rs.
 #![allow(clippy::field_reassign_with_default)]
 
+use simple_serve::cluster::{Cluster, ClusterConfig, RoutePolicy};
 use simple_serve::config::{DecisionVariant, EngineConfig, SamplerConfig};
 use simple_serve::decision::draft::DraftProposer;
 use simple_serve::decision::filter::{self, Truncated};
@@ -397,6 +398,103 @@ fn prop_overlapped_executor_streams_equal_synchronous() {
         let pipelined_sync =
             synthetic_engine_streams(&reqs, vocab, plane_seed, n_mb, false, m, spec_k);
         assert_eq!(pipelined_sync, baseline, "sync n_mb={n_mb} m={m} spec_k={spec_k}");
+    });
+}
+
+/// Run the same requests through a routed cluster of synthetic-plane
+/// replicas (same plane seed + sampler seed as [`synthetic_engine_streams`],
+/// so the single engine is the ground truth).
+fn routed_streams(
+    reqs: &[(Vec<u32>, usize, SamplingParams)],
+    vocab: usize,
+    plane_seed: u64,
+    ccfg: &ClusterConfig,
+    m: usize,
+    n_mb: usize,
+    spec_k: usize,
+) -> Vec<(u64, Vec<u32>)> {
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = m;
+    cfg.sampler.seed = 0xF1E1D;
+    cfg.n_microbatches = n_mb;
+    cfg.overlap = n_mb > 1;
+    cfg.spec_k = spec_k;
+    cfg.idle_poll_us = 10;
+    let mut cluster = Cluster::start(&cfg, ccfg, None, 96, move |_id| {
+        Ok(SyntheticRuntime::new(4, vocab, 96, plane_seed))
+    });
+    let requests: Vec<Request> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, (prompt, max_new, params))| {
+            let mut r = Request::new(i as u64, prompt.clone(), *max_new);
+            r.params = params.clone();
+            r
+        })
+        .collect();
+    cluster.run(requests).expect("cluster run");
+    let report = cluster.shutdown().expect("cluster shutdown");
+    let mut fin: Vec<(u64, Vec<u32>)> = report
+        .finished
+        .iter()
+        .map(|s| (s.request.id, s.output.clone()))
+        .collect();
+    fin.sort();
+    fin
+}
+
+#[test]
+fn prop_routed_streams_equal_single_replica() {
+    // The cluster-layer differential property: for random routing policy ×
+    // replica count × sampler count × speculative window × microbatch
+    // count (± a shared sampler pool, ± a prefill/decode split), routed
+    // per-sequence streams are bit-identical to one engine serving the
+    // whole trace. Routing moves work, never decisions.
+    props("routed streams == single replica", 5, |rng| {
+        let vocab = 64 + rng.next_below(192) as usize;
+        let n_req = 4 + rng.next_below(5) as usize;
+        let reqs: Vec<(Vec<u32>, usize, SamplingParams)> = (0..n_req)
+            .map(|i| {
+                let plen = 1 + rng.next_below(6) as usize;
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.next_below(vocab as u64) as u32).collect();
+                let max_new = 2 + rng.next_below(10) as usize;
+                let mut params = random_params(rng, vocab);
+                params.seed = rng.next_u64() ^ ((i as u64) << 5);
+                (prompt, max_new, params)
+            })
+            .collect();
+        let plane_seed = rng.next_u64();
+        let baseline = synthetic_engine_streams(&reqs, vocab, plane_seed, 1, false, 1, 0);
+        assert_eq!(baseline.len(), n_req, "all requests finish");
+        let policy = RoutePolicy::ALL[rng.next_below(4) as usize];
+        let replicas = 1 + rng.next_below(4) as usize;
+        let m = 1 + rng.next_below(3) as usize;
+        let spec_k = rng.next_below(3) as usize;
+        let n_mb = 1 + rng.next_below(2) as usize;
+        let mut ccfg = ClusterConfig::default();
+        ccfg.replicas = replicas;
+        ccfg.policy = policy;
+        ccfg.shared_samplers = rng.next_f64() < 0.5;
+        let routed = routed_streams(&reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k);
+        assert_eq!(
+            routed, baseline,
+            "policy={} replicas={replicas} shared={} m={m} spec_k={spec_k} n_mb={n_mb}",
+            policy.name(),
+            ccfg.shared_samplers
+        );
+        if replicas >= 2 {
+            // the DistServe-style split (handoff + transfer delay) must be
+            // just as invisible in the tokens
+            ccfg.prefill_replicas = 1;
+            let split = routed_streams(&reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k);
+            assert_eq!(
+                split, baseline,
+                "split fleet: policy={} replicas={replicas} m={m} spec_k={spec_k}",
+                policy.name()
+            );
+        }
     });
 }
 

@@ -353,6 +353,52 @@ fn overlapped_spec_decode_survives_preemption_churn() {
     assert_eq!(quad_streams, sync_streams);
 }
 
+// ---- cluster layer (data-parallel replicas, DESIGN.md §9) ----
+
+#[test]
+fn cluster_kv_pressure_diverts_under_preemption_churn_and_streams_match() {
+    // Replica KV caches sized at the preemption floor (7 blocks for 8
+    // slots — crossing a block boundary at full occupancy must evict):
+    // sequences preempt *while* the KvPressure policy routes each new
+    // request toward the replica with more free blocks. The satellite's
+    // churn case: diversion + preemption + recompute together must still
+    // commit exactly the single-ample-engine streams.
+    use simple_serve::cluster::{Cluster, ClusterConfig, RoutePolicy};
+    let (want, ample_preempt) = pipelined_engine_run(1, false, 0, 0);
+    assert_eq!(ample_preempt, 0);
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    cfg.sampler.seed = 41;
+    cfg.kv_blocks = 7;
+    cfg.idle_poll_us = 10;
+    let mut ccfg = ClusterConfig::default();
+    ccfg.replicas = 2;
+    ccfg.policy = RoutePolicy::KvPressure;
+    let mut cluster = Cluster::start(&cfg, &ccfg, None, MAX_SEQ, |_id| {
+        Ok(SyntheticRuntime::new(8, VOCAB, MAX_SEQ, 23))
+    });
+    let trace = workload::generate(&TraceConfig::tiny(20, VOCAB));
+    cluster.run(trace.requests).expect("cluster run");
+    let report = cluster.shutdown().expect("cluster shutdown");
+    assert!(report.preemptions > 0, "tight caches must preempt mid-run");
+    assert!(
+        report.per_replica.iter().all(|r| r.summary.tokens > 0),
+        "KvPressure must divert work to both replicas: {:?}",
+        report
+            .per_replica
+            .iter()
+            .map(|r| r.summary.tokens)
+            .collect::<Vec<_>>()
+    );
+    let streams: HashMap<u64, Vec<u32>> = report
+        .finished
+        .iter()
+        .map(|s| (s.request.id, s.output.clone()))
+        .collect();
+    assert_eq!(streams, want, "diversion + preemption must not change tokens");
+}
+
 #[test]
 fn spec_decode_composes_with_chunked_prefill_and_sampler_churn() {
     // Everything at once: chunked prefill budgets + speculation + tight KV
