@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures cluster-smoke ci
+.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke bench ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -26,13 +26,28 @@ figures: build
 cluster-smoke: build
 	cargo run --release -- figures --experiments cluster
 
+# The chaos experiment at smoke effort (DESIGN.md §10): injected sampler
+# kills / lock poisons / replica kills; the experiment asserts every fleet
+# digest equals the fault-free baseline, so a recovery bug fails this
+# target loudly.
+chaos-smoke: build
+	cargo run --release -- figures --experiments chaos
+
+# Decision-plane microbenchmarks (quick profile), including the
+# chaos/recovery_pause group, with machine-readable output — CI uploads
+# BENCH_decision.json so throughput/P95 are tracked across PRs.
+bench: build
+	cargo bench --bench decision_micro -- --quick --json BENCH_decision.json
+
 # What .github/workflows/ci.yml runs: fmt + clippy gates, release build +
-# tests, the cluster smoke, python kernel/model tests (hypothesis optional
-# — shim fallback).
+# tests, the cluster and chaos smokes, the bench JSON, python kernel/model
+# tests (hypothesis optional — shim fallback).
 ci:
 	cargo fmt --check
 	cargo clippy --release --all-targets -- -D warnings
 	cargo build --release
 	cargo test -q --release
 	$(MAKE) cluster-smoke
+	$(MAKE) chaos-smoke
+	$(MAKE) bench
 	python -m pytest python/tests -q

@@ -3,8 +3,13 @@
 //! targets the §Perf pass iterates on.
 //!
 //! Filter by substring: `cargo bench --bench decision_micro -- shvs`.
+//! `--json <path>` additionally writes the machine-readable results
+//! (`make bench` uses it for `BENCH_decision.json`, uploaded by CI so the
+//! perf trajectory is tracked across PRs).
 
-use simple_serve::bench::{black_box, render_table, run_case, BenchConfig, BenchResult};
+use simple_serve::bench::{
+    black_box, render_table, results_to_json, run_case, BenchConfig, BenchResult,
+};
 use simple_serve::config::DecisionVariant;
 use simple_serve::decision::penalties::{BatchHistory, SeqHistory};
 use simple_serve::decision::{filter, DecisionPipeline, Precompute, SamplingParams};
@@ -12,7 +17,19 @@ use simple_serve::harness::measure::LogitsGen;
 use simple_serve::ringbuf::spsc;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut args: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < raw.len() {
+        if raw[i] == "--json" {
+            i += 1;
+            json_path = raw.get(i).cloned();
+        } else {
+            args.push(raw[i].clone());
+        }
+        i += 1;
+    }
     let filter_str: Option<&str> = args.iter().find(|a| !a.starts_with('-')).map(|s| s.as_str());
     let quick = args.iter().any(|a| a == "--quick");
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
@@ -320,5 +337,68 @@ fn main() {
         }));
     }
 
+    // --- chaos: sampler crash-recovery pause vs the healthy collect ---
+    // Each `recovery_pause` iteration kills one sampler just before the
+    // task, so the collect pays detection (the starvation timeout) +
+    // respawn + registry replay + task resubmission — the recovery pause
+    // `serve --chaos` runs pay, measured in isolation against the same
+    // submit/collect loop with no faults.
+    if want("chaos") {
+        use simple_serve::config::SamplerConfig;
+        use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
+        const B: usize = 4;
+        let svc_cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            seed: 13,
+            ..Default::default()
+        };
+        let make_columns = |iter: u64| -> Vec<ColumnMeta> {
+            (0..B)
+                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                .collect()
+        };
+        {
+            let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
+            for s in 0..B as u64 {
+                svc.register(s, &[1, 2, 3], &params);
+            }
+            let mut it = 0u64;
+            results.push(run_case("chaos/healthy_collect", &cfg, Some(1.0), || {
+                let view = gen.view(B, it, 1);
+                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let (d, _) = svc.collect(it, B);
+                black_box(d.len());
+                it += 1;
+            }));
+            svc.shutdown();
+        }
+        {
+            let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
+            for s in 0..B as u64 {
+                svc.register(s, &[1, 2, 3], &params);
+            }
+            let mut it = 0u64;
+            results.push(run_case("chaos/recovery_pause", &cfg, Some(1.0), || {
+                // alternate victims so the crash-loop breaker never trips
+                svc.inject_sampler_crash((it % 2) as usize);
+                let view = gen.view(B, it, 1);
+                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let (d, _) = svc.collect(it, B);
+                black_box(d.len());
+                it += 1;
+            }));
+            svc.shutdown();
+        }
+    }
+
     println!("{}", render_table("decision-plane microbenchmarks", &results));
+    if let Some(path) = json_path {
+        simple_serve::util::json::write_json_file(
+            std::path::Path::new(&path),
+            &results_to_json(&results),
+        )
+        .expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -66,6 +66,11 @@ const SPECS: &[OptSpec] = &[
     OptSpec::flag("shared_samplers", "one shared sampler pool for the whole fleet"),
     OptSpec::value("prefill_replicas", "DistServe-style split: prefill-only replicas"),
     OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token"),
+    OptSpec::value(
+        "chaos",
+        "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (DESIGN.md §10)",
+    ),
+    OptSpec::flag("no_failover", "fail the run on replica death instead of requeueing"),
     OptSpec::flag("quick", "small run"),
 ];
 
@@ -104,6 +109,11 @@ fn main() -> simple_serve::Result<()> {
     let loopy = args.flag("loopy");
     let mut ccfg = ClusterConfig::default();
     ccfg.apply_args(&args)?;
+    if let Some(spec) = args.get("chaos") {
+        // fail loudly on a plan that cannot fire (wrong sampler/replica
+        // ids) — a silently no-op injection makes a chaos run vacuous
+        simple_serve::fault::FaultPlan::parse(spec)?.validate(samplers, ccfg.replicas)?;
+    }
 
     let manifest = Manifest::load(&default_artifacts_dir())
         .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
@@ -134,6 +144,12 @@ fn main() -> simple_serve::Result<()> {
         cfg.n_microbatches = n_microbatches;
         cfg.overlap = overlap;
         cfg.idle_poll_us = idle_poll_us;
+        if let Some(spec) = args.get("chaos") {
+            // engine-level fault domains; replica kills ride ccfg.faults
+            // (ClusterConfig::apply_args parsed the same spec above)
+            let (engine_faults, _) = simple_serve::fault::FaultPlan::parse(spec)?.split();
+            cfg.faults = engine_faults;
+        }
         // Offline-profiled hot set: the AOT model's Zipf head lives on
         // low ids by construction (see python/compile/model.py lm_bias).
         let h = (vocab / 5).min(32_768) as u32;
@@ -166,7 +182,14 @@ fn main() -> simple_serve::Result<()> {
             cluster.run(trace.requests)?;
             let report = cluster.shutdown()?;
             let summary = report.recorder.summary();
-            assert_eq!(summary.tokens, expected, "all tokens produced");
+            // Every request's final sequence is complete regardless of
+            // faults; the recorder can under-count after a replica kill
+            // (the corpse's partial recorder dies with it) but must never
+            // invent tokens.
+            let final_tokens: usize =
+                report.finished.iter().map(|s| s.output.len()).sum();
+            assert_eq!(final_tokens, expected, "all tokens produced");
+            assert!(summary.tokens <= expected, "recorder must not invent tokens");
             for r in &report.per_replica {
                 println!(
                     "[{}] replica {} [{}]: {:>7.0} tok/s | {} tokens | {} preemptions",
@@ -195,6 +218,16 @@ fn main() -> simple_serve::Result<()> {
                         .collect(),
                 ),
             ));
+            if report.recorder.recoveries() > 0 {
+                println!(
+                    "[{}] fault recovery: {} failover(s)/respawn(s), {} requeued, \
+                     {:.2} ms",
+                    variant.name(),
+                    report.recorder.recoveries(),
+                    report.requeued,
+                    report.recorder.recovery_s() * 1e3
+                );
+            }
             let spec_note = if report.spec_windows > 0 {
                 format!(
                     " | spec: {}/{} drafts accepted, {:.2} tok/step",
@@ -237,7 +270,15 @@ fn main() -> simple_serve::Result<()> {
             let preemptions = engine.preemption_count();
             let gpu_util = engine.recorder.utilization("gpu");
             let cpu_util = engine.recorder.utilization("cpu");
-            engine.shutdown();
+            let (recorder, _) = engine.shutdown();
+            if recorder.recoveries() > 0 {
+                println!(
+                    "[{}] fault recovery: {} sampler respawn(s), {:.2} ms",
+                    variant.name(),
+                    recorder.recoveries(),
+                    recorder.recovery_s() * 1e3
+                );
+            }
             (summary, digest, ov, preemptions, gpu_util, cpu_util, spec_note)
         };
         println!(

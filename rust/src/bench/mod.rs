@@ -125,6 +125,33 @@ pub fn render_table(title: &str, results: &[BenchResult]) -> String {
     out
 }
 
+/// Machine-readable rendering: one object per case with tail latencies
+/// and throughput. `make bench` writes this as `BENCH_decision.json` (and
+/// CI uploads it), so the perf trajectory is tracked across PRs instead
+/// of living only in scrollback.
+pub fn results_to_json(results: &[BenchResult]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("iters", Json::Num(r.summary.n as f64)),
+                    ("mean_s", Json::Num(r.summary.mean)),
+                    ("p50_s", Json::Num(r.summary.p50)),
+                    ("p95_s", Json::Num(r.summary.p95)),
+                    ("p99_s", Json::Num(r.summary.p99)),
+                    (
+                        "items_per_sec",
+                        r.items_per_sec().map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Human-formatted rate (tokens/s etc).
 pub fn format_rate(v: f64) -> String {
     if v >= 1e6 {
@@ -180,6 +207,20 @@ mod tests {
         let md = render_table("t", &[a, b]);
         assert!(md.contains("| a |"));
         assert!(md.contains("| b |"));
+    }
+
+    #[test]
+    fn results_to_json_one_object_per_case() {
+        let cfg = BenchConfig::quick();
+        let a = run_case("a", &cfg, Some(10.0), || {});
+        let b = run_case("b", &cfg, None, || {});
+        let j = results_to_json(&[a, b]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").as_str(), Some("a"));
+        assert!(arr[0].get("items_per_sec").as_f64().unwrap() > 0.0);
+        assert!(arr[1].get("items_per_sec").as_f64().is_none());
+        assert!(arr[0].get("p99_s").as_f64().unwrap() >= 0.0);
     }
 
     #[test]

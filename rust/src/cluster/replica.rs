@@ -17,9 +17,17 @@
 //! decisions are keyed by (sampler seed, request seed, sequence,
 //! iteration). Which replica a sequence lands on — or whether it is
 //! handed off mid-lifecycle — changes timing, never tokens.
+//!
+//! **Failure domain (DESIGN.md §10).** A replica worker can die mid-run
+//! (an engine error, a panic, or a chaos-injected kill). The router's
+//! failure sweep reaps the corpse through [`Replica::try_reap_failure`]
+//! and — with failover enabled — requeues its outstanding sequences onto
+//! survivors via `submit_resumed`, the same recompute path the
+//! prefill→decode handoff uses; the interchangeability invariant above is
+//! exactly why the requeued sequences' streams stay bit-identical.
 
 use crate::config::EngineConfig;
-use crate::decision::service::{SamplerService, SamplerStats};
+use crate::decision::service::{SamplerService, SamplerStats, TASK_NS_SHIFT};
 use crate::decision::HotVocab;
 use crate::engine::{DataPlane, Engine, Request, Sequence};
 use crate::metrics::Recorder;
@@ -63,8 +71,8 @@ pub struct ReplicaStatus {
     pub kv_free_blocks: AtomicUsize,
 }
 
-/// Inbound work: fresh requests, or prefill→decode handoffs carrying the
-/// tokens generated before the transfer.
+/// Inbound work: fresh requests, or resumes (prefill→decode handoffs and
+/// failover requeues) carrying the tokens generated before the transfer.
 enum Inbound {
     Submit(Request),
     Resume(Request, Vec<u32>),
@@ -91,6 +99,11 @@ pub struct Replica {
     outbox: Arc<Mutex<Vec<Sequence>>>,
     status: Arc<ReplicaStatus>,
     stop: Arc<AtomicBool>,
+    /// Chaos injection: makes the worker panic at the top of its loop.
+    kill: Arc<AtomicBool>,
+    /// Set once the router reaped this replica's corpse (failover mode):
+    /// it takes no further routing and is skipped at shutdown.
+    dead: bool,
     handle: Option<JoinHandle<crate::Result<ReplicaResult>>>,
 }
 
@@ -111,8 +124,8 @@ impl Replica {
     /// (`make_plane`), so planes that must not cross threads — the PJRT
     /// runtime's client handles — still work; only the factory is `Send`.
     /// With `pool` set the engine submits into the shared sampler service,
-    /// namespacing its task ids with `(id + 1) << 48`; otherwise it spawns
-    /// its own samplers timestamped against the cluster `epoch`.
+    /// namespacing its task ids with `(id + 1) << TASK_NS_SHIFT`; otherwise
+    /// it spawns its own samplers timestamped against the cluster `epoch`.
     pub fn spawn<D, F>(
         id: usize,
         role: ReplicaRole,
@@ -130,8 +143,14 @@ impl Replica {
         let outbox: Arc<Mutex<Vec<Sequence>>> = Arc::new(Mutex::new(Vec::new()));
         let status = Arc::new(ReplicaStatus::default());
         let stop = Arc::new(AtomicBool::new(false));
-        let (w_inbox, w_outbox, w_status, w_stop) =
-            (inbox.clone(), outbox.clone(), status.clone(), stop.clone());
+        let kill = Arc::new(AtomicBool::new(false));
+        let (w_inbox, w_outbox, w_status, w_stop, w_kill) = (
+            inbox.clone(),
+            outbox.clone(),
+            status.clone(),
+            stop.clone(),
+            kill.clone(),
+        );
         let handle = std::thread::Builder::new()
             .name(format!("replica-{id}"))
             .spawn(move || {
@@ -143,11 +162,13 @@ impl Replica {
                         &cfg,
                         hot,
                         svc,
-                        (id as u64 + 1) << 48,
+                        (id as u64 + 1) << TASK_NS_SHIFT,
                     ),
                     None => Engine::with_epoch(plane, &cfg, hot, epoch),
                 };
-                run_worker(engine, w_inbox, w_outbox, w_status, w_stop, idle_poll_us)
+                run_worker(
+                    id, engine, w_inbox, w_outbox, w_status, w_stop, w_kill, idle_poll_us,
+                )
             })
             .expect("spawn replica");
         Replica {
@@ -157,8 +178,15 @@ impl Replica {
             outbox,
             status,
             stop,
+            kill,
+            dead: false,
             handle: Some(handle),
         }
+    }
+
+    /// The task-id namespace this replica uses in a shared sampler pool.
+    pub fn task_namespace(&self) -> u64 {
+        (self.id as u64 + 1) << TASK_NS_SHIFT
     }
 
     /// Route a fresh request into this replica.
@@ -166,8 +194,9 @@ impl Replica {
         self.inbox.lock().unwrap().push_back(Inbound::Submit(req));
     }
 
-    /// Route a prefill→decode handoff: the sequence resumes with recompute
-    /// and decisions continue from iteration `output.len()`.
+    /// Route a resume: a prefill→decode handoff or a failover requeue.
+    /// The sequence resumes with recompute and decisions continue from
+    /// iteration `output.len()`.
     pub fn submit_resumed(&self, req: Request, output: Vec<u32>) {
         self.inbox.lock().unwrap().push_back(Inbound::Resume(req, output));
     }
@@ -194,25 +223,38 @@ impl Replica {
         self.stop.store(true, Ordering::Release);
     }
 
-    /// Surface a worker that died *before* a stop was requested — an engine
-    /// error or panic; without this check the router would idle-poll
-    /// forever waiting for sequences the dead replica can never finish.
-    pub fn check_alive(&mut self) -> crate::Result<()> {
+    /// Chaos injection: make the worker thread panic at the top of its
+    /// next loop turn — a replica crash with arbitrary in-flight state.
+    pub fn inject_kill(&self) {
+        self.kill.store(true, Ordering::Release);
+    }
+
+    /// Whether the router has reaped this replica after a failure.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Reap a worker that died *before* a stop was requested — an engine
+    /// error or panic. Returns the failure message and marks the replica
+    /// dead (it is skipped by routing and shutdown from here on); returns
+    /// `None` while the worker is healthy or already reaped.
+    pub fn try_reap_failure(&mut self) -> Option<String> {
         let died = self.handle.as_ref().is_some_and(|h| h.is_finished())
             && !self.stop.load(Ordering::Acquire);
         if !died {
-            return Ok(());
+            return None;
         }
+        self.dead = true;
         let handle = self.handle.take().unwrap();
-        match handle.join() {
-            Ok(Ok(_)) => Err(anyhow::anyhow!("replica {} exited mid-run", self.id)),
-            Ok(Err(e)) => Err(e.context(format!("replica {} failed", self.id))),
-            Err(payload) => Err(anyhow::anyhow!(
+        Some(match handle.join() {
+            Ok(Ok(_)) => format!("replica {} exited mid-run", self.id),
+            Ok(Err(e)) => format!("replica {} failed: {e:#}", self.id),
+            Err(payload) => format!(
                 "replica {} panicked: {}",
                 self.id,
                 panic_message(payload.as_ref())
-            )),
-        }
+            ),
+        })
     }
 
     /// Join the worker (call after [`Self::request_stop`]).
@@ -233,18 +275,24 @@ impl Replica {
 
 /// The worker loop: drain inbox → one executor turn → heartbeat → hand
 /// back finished sequences → bounded idle poll when drained.
+#[allow(clippy::too_many_arguments)]
 fn run_worker<D: DataPlane>(
+    id: usize,
     mut engine: Engine<D>,
     inbox: Arc<Mutex<VecDeque<Inbound>>>,
     outbox: Arc<Mutex<Vec<Sequence>>>,
     status: Arc<ReplicaStatus>,
     stop: Arc<AtomicBool>,
+    kill: Arc<AtomicBool>,
     idle_poll_us: u64,
 ) -> crate::Result<ReplicaResult> {
     status
         .kv_free_blocks
         .store(engine.kv_free_blocks(), Ordering::Relaxed);
     loop {
+        if kill.load(Ordering::Acquire) {
+            panic!("chaos: injected replica kill (replica {id})");
+        }
         {
             let mut q = inbox.lock().unwrap();
             while let Some(msg) = q.pop_front() {

@@ -22,12 +22,23 @@
 //! router hands the sequence to a decode replica with a simulated
 //! KV-transfer delay (`kv_transfer_us_per_token × context`), realized as
 //! the resumed request's arrival time.
+//!
+//! **Replica failover (DESIGN.md §10).** With `failover` on (the
+//! default), the router's failure sweep reaps a dead replica and requeues
+//! every sequence routed to it onto survivors of the same role through
+//! `submit_resumed` — the recompute path the prefill→decode handoff
+//! already uses — so a replica crash costs latency, never tokens or
+//! sequences. Requeued requests keep their original arrival stamps, so
+//! the merged fleet recorder's TTFT/TPOT percentiles absorb the recovery
+//! pause exactly; the explicit counters (`ClusterReport::failovers`,
+//! `requeued`, `Recorder::recovery_s`) make the cost itself visible.
 
 use super::replica::{Replica, ReplicaRole};
 use crate::config::EngineConfig;
 use crate::decision::service::{SamplerService, SamplerStats};
 use crate::decision::HotVocab;
 use crate::engine::{DataPlane, Request, Sequence};
+use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{Recorder, ServingSummary};
 use crate::util::argparse::Args;
 use std::collections::{HashMap, VecDeque};
@@ -97,6 +108,13 @@ pub struct ClusterConfig {
     /// Router idle-poll quantum in µs, bounded by the time until the next
     /// due arrival (the `Scheduler::next_arrival` discipline).
     pub idle_poll_us: u64,
+    /// Requeue a dead replica's outstanding sequences onto survivors
+    /// instead of failing the run (DESIGN.md §10).
+    pub failover: bool,
+    /// Chaos-injection schedule for the router-level fault domain
+    /// (replica kills, keyed by admitted-request count). Engine-level
+    /// faults live in `EngineConfig::faults`.
+    pub faults: FaultPlan,
 }
 
 impl Default for ClusterConfig {
@@ -108,13 +126,16 @@ impl Default for ClusterConfig {
             prefill_replicas: 0,
             kv_transfer_us_per_token: 2.0,
             idle_poll_us: 200,
+            failover: true,
+            faults: FaultPlan::default(),
         }
     }
 }
 
 impl ClusterConfig {
     /// CLI overrides: `--replicas N --route P --shared_samplers
-    /// --prefill_replicas N --kv_transfer_us T`.
+    /// --prefill_replicas N --kv_transfer_us T --no_failover
+    /// --chaos <spec>`.
     pub fn apply_args(&mut self, args: &Args) -> crate::Result<()> {
         self.replicas = args.get_or("replicas", self.replicas)?;
         if let Some(p) = args.get("route") {
@@ -127,6 +148,13 @@ impl ClusterConfig {
         self.prefill_replicas = args.get_or("prefill_replicas", self.prefill_replicas)?;
         self.kv_transfer_us_per_token =
             args.get_or("kv_transfer_us", self.kv_transfer_us_per_token)?;
+        if args.flag("no_failover") {
+            self.failover = false;
+        }
+        if let Some(spec) = args.get("chaos") {
+            let (_engine, router_faults) = FaultPlan::parse(spec)?.split();
+            self.faults = router_faults;
+        }
         anyhow::ensure!(
             self.replicas >= 1,
             "--replicas must be at least 1 (got {})",
@@ -160,6 +188,10 @@ pub struct ClusterReport {
     pub per_replica: Vec<ReplicaSummary>,
     pub sampler_stats: Vec<SamplerStats>,
     pub preemptions: u64,
+    /// Replica deaths the router failed over (each costs a requeue pass).
+    pub failovers: u64,
+    /// Sequences requeued onto survivors by those failovers.
+    pub requeued: u64,
     /// Fleet-summed speculative-decoding tallies over committed windows.
     pub spec_accepted: u64,
     pub spec_proposed: u64,
@@ -169,7 +201,8 @@ pub struct ClusterReport {
 
 impl ClusterReport {
     /// The deterministic fleet stream digest — must equal a single-replica
-    /// engine's digest for the same trace, whatever the routing did.
+    /// engine's digest for the same trace, whatever the routing (or the
+    /// fault plan) did.
     pub fn stream_digest(&self) -> u64 {
         crate::util::stream_digest(
             self.finished
@@ -193,6 +226,18 @@ fn prefix_hash(prompt: &[u32]) -> u64 {
     h
 }
 
+/// Work the router has routed and not yet collected: everything needed to
+/// replay the sequence on a survivor if its replica dies (`req` is the
+/// request exactly as routed — the prefill-truncated copy in split mode —
+/// and `output` the tokens it resumed with, empty for fresh submissions).
+#[derive(Clone)]
+struct RoutedEntry {
+    replica: usize,
+    role: ReplicaRole,
+    req: Request,
+    output: Vec<u32>,
+}
+
 /// A running fleet: replicas + the routing front-end.
 pub struct Cluster {
     replicas: Vec<Replica>,
@@ -203,6 +248,13 @@ pub struct Cluster {
     /// Original requests routed through the prefill pool, awaiting their
     /// first token; the handoff restores the real `max_new_tokens`.
     pending_handoff: HashMap<u64, Request>,
+    /// In-flight work by request id — the failover sweep's replay source.
+    routed: HashMap<u64, RoutedEntry>,
+    /// Router-level chaos schedule (replica kills).
+    faults: FaultPlan,
+    failovers: u64,
+    requeued: u64,
+    failover_s: f64,
     finished: Vec<Sequence>,
     submitted: usize,
 }
@@ -269,6 +321,11 @@ impl Cluster {
             t0,
             rr: 0,
             pending_handoff: HashMap::new(),
+            routed: HashMap::new(),
+            faults: ccfg.faults.clone(),
+            failovers: 0,
+            requeued: 0,
+            failover_s: 0.0,
             finished: Vec::new(),
             submitted: 0,
         }
@@ -278,17 +335,23 @@ impl Cluster {
         self.t0.elapsed().as_secs_f64()
     }
 
-    /// Pick a replica of `role` for `req` under the configured policy.
-    fn pick(&mut self, req: &Request, role: ReplicaRole) -> usize {
+    /// Pick a surviving replica of `role` for `req` under the configured
+    /// policy. Errors when every replica of that role is dead — the one
+    /// failure failover cannot route around.
+    fn pick(&mut self, req: &Request, role: ReplicaRole) -> crate::Result<usize> {
         let cands: Vec<usize> = self
             .replicas
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.role == role)
+            .filter(|(_, r)| r.role == role && !r.is_dead())
             .map(|(i, _)| i)
             .collect();
-        debug_assert!(!cands.is_empty(), "no {} replica", role.name());
-        match self.cfg.policy {
+        anyhow::ensure!(
+            !cands.is_empty(),
+            "no surviving {} replica to route to",
+            role.name()
+        );
+        Ok(match self.cfg.policy {
             RoutePolicy::RoundRobin => {
                 let i = cands[self.rr % cands.len()];
                 self.rr += 1;
@@ -316,39 +379,74 @@ impl Cluster {
             RoutePolicy::SessionAffinity => {
                 cands[(prefix_hash(&req.prompt) % cands.len() as u64) as usize]
             }
+        })
+    }
+
+    /// Route one unit of work (fresh when `output` is empty, a resume
+    /// otherwise) to a surviving replica of `role`, recording it for the
+    /// failover sweep.
+    fn dispatch(
+        &mut self,
+        role: ReplicaRole,
+        req: Request,
+        output: Vec<u32>,
+    ) -> crate::Result<()> {
+        let i = self.pick(&req, role)?;
+        self.routed.insert(
+            req.id,
+            RoutedEntry { replica: i, role, req: req.clone(), output: output.clone() },
+        );
+        if output.is_empty() {
+            self.replicas[i].submit(req);
+        } else {
+            self.replicas[i].submit_resumed(req, output);
         }
+        Ok(())
     }
 
     /// Admit one request into the fleet. In split mode a multi-token
     /// request first visits the prefill pool truncated to its first token.
-    pub fn submit(&mut self, req: Request) {
+    pub fn submit(&mut self, req: Request) -> crate::Result<()> {
         self.submitted += 1;
+        // Chaos injection: replica kills keyed by admitted-request count.
+        let due = self
+            .faults
+            .take_due(self.submitted as u64, |k| matches!(k, FaultKind::KillReplica { .. }));
+        for kind in due {
+            if let FaultKind::KillReplica { replica } = kind {
+                if let Some(r) = self.replicas.get(replica) {
+                    if !r.is_dead() {
+                        r.inject_kill();
+                    }
+                }
+            }
+        }
         if self.cfg.prefill_replicas == 0 {
-            let i = self.pick(&req, ReplicaRole::Unified);
-            self.replicas[i].submit(req);
+            self.dispatch(ReplicaRole::Unified, req, Vec::new())
         } else if req.max_new_tokens > 1 {
             let mut first = req.clone();
             first.max_new_tokens = 1;
             self.pending_handoff.insert(req.id, req);
-            let i = self.pick(&first, ReplicaRole::Prefill);
-            self.replicas[i].submit(first);
+            self.dispatch(ReplicaRole::Prefill, first, Vec::new())
         } else {
             // single-token request: the prefill pool is its whole lifecycle
-            let i = self.pick(&req, ReplicaRole::Prefill);
-            self.replicas[i].submit(req);
+            self.dispatch(ReplicaRole::Prefill, req, Vec::new())
         }
     }
 
     /// Drain every replica's outbox: collect final sequences and perform
-    /// pending prefill→decode handoffs.
-    fn collect_finished(&mut self) {
+    /// pending prefill→decode handoffs. Returns how many sequences were
+    /// drained, so callers can skip the idle sleep while results flow.
+    fn collect_finished(&mut self) -> crate::Result<usize> {
         let drained: Vec<Sequence> = self
             .replicas
             .iter()
             .flat_map(|r| r.drain_finished())
             .collect();
+        let n = drained.len();
         for mut seq in drained {
             let id = seq.request.id;
+            self.routed.remove(&id);
             let Some(orig) = self.pending_handoff.remove(&id) else {
                 self.finished.push(seq);
                 continue;
@@ -370,10 +468,58 @@ impl Cluster {
                 let mut next = orig;
                 next.arrival =
                     self.now() + ctx as f64 * self.cfg.kv_transfer_us_per_token * 1e-6;
-                let d = self.pick(&next, ReplicaRole::Decode);
-                self.replicas[d].submit_resumed(next, seq.output);
+                self.dispatch(ReplicaRole::Decode, next, seq.output)?;
             }
         }
+        Ok(n)
+    }
+
+    /// Reap dead replicas and — with failover on — requeue their
+    /// outstanding sequences onto survivors through the resume path. The
+    /// requeued requests keep their original arrival stamps, so the
+    /// recorder's latency percentiles absorb the recovery pause exactly.
+    fn sweep_failures(&mut self) -> crate::Result<()> {
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        for i in 0..self.replicas.len() {
+            if let Some(msg) = self.replicas[i].try_reap_failure() {
+                dead.push((i, msg));
+            }
+        }
+        if dead.is_empty() {
+            return Ok(());
+        }
+        if !self.cfg.failover {
+            anyhow::bail!("{} (failover disabled)", dead[0].1);
+        }
+        let t0 = Instant::now();
+        // Final sequences the corpses handed back before dying must be
+        // collected first, or a finished sequence would be replayed.
+        self.collect_finished()?;
+        for (i, msg) in dead {
+            eprintln!("[cluster] {msg}; requeueing its sequences onto survivors");
+            if let Some(pool) = &self.pool {
+                // Drop the dead replica's in-flight decision state: its
+                // pending partial collects and retained tasks, and any
+                // stale batches still in flight for its namespace — the
+                // requeue below re-registers the sequences with replay.
+                pool.purge_namespace(self.replicas[i].task_namespace());
+            }
+            let mut orphans: Vec<(u64, RoutedEntry)> = self
+                .routed
+                .iter()
+                .filter(|(_, e)| e.replica == i)
+                .map(|(&id, e)| (id, e.clone()))
+                .collect();
+            orphans.sort_unstable_by_key(|&(id, _)| id);
+            for (id, e) in orphans {
+                self.routed.remove(&id);
+                self.requeued += 1;
+                self.dispatch(e.role, e.req, e.output)?;
+            }
+            self.failovers += 1;
+        }
+        self.failover_s += t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     /// Total requests still in flight anywhere in the fleet.
@@ -381,12 +527,34 @@ impl Cluster {
         self.submitted - self.finished.len()
     }
 
+    /// Bounded idle poll: sleep at most `idle_poll_us`, clipped to the
+    /// time until `next_arrival` when one is pending — and not at all when
+    /// it is already due (`None` = sleep the full quantum). The same
+    /// discipline as `Scheduler::next_arrival`, shared by the run loop and
+    /// the shutdown drain so neither inflates drain latency by a full poll
+    /// interval.
+    fn bounded_poll(&self, next_arrival: Option<f64>) {
+        let quantum = self.cfg.idle_poll_us.max(1);
+        let poll_us = match next_arrival {
+            Some(t) => {
+                let until_us = ((t - self.now()) * 1e6).ceil();
+                if until_us <= 0.0 {
+                    return; // due now: continue immediately
+                }
+                quantum.min(until_us as u64).max(1)
+            }
+            None => quantum,
+        };
+        std::thread::sleep(std::time::Duration::from_micros(poll_us));
+    }
+
     /// Dispatch a trace open-loop — each request fires at its `arrival`
     /// stamp against the cluster epoch — and drain the fleet. The idle
-    /// loop is `Scheduler::next_arrival`-style bounded polling: sleep at
-    /// most `idle_poll_us`, clipped to the time until the next due
-    /// arrival, and not at all when one is already due. Returns once every
-    /// request's final sequence has been collected (handoffs included).
+    /// loop is `Scheduler::next_arrival`-style bounded polling (see
+    /// [`Self::bounded_poll`]), and skips the sleep entirely on any pass
+    /// that drained a finished sequence. Returns once every request's
+    /// final sequence has been collected (handoffs and failover requeues
+    /// included).
     pub fn run(&mut self, mut requests: Vec<Request>) -> crate::Result<()> {
         requests.sort_by(|a, b| {
             a.arrival
@@ -399,58 +567,74 @@ impl Cluster {
             let now = self.now();
             while queue.front().is_some_and(|r| r.arrival <= now) {
                 let r = queue.pop_front().unwrap();
-                self.submit(r);
+                self.submit(r)?;
             }
-            self.collect_finished();
+            let drained = self.collect_finished()?;
             if queue.is_empty() && self.inflight() == 0 {
                 debug_assert!(self.pending_handoff.is_empty());
                 return Ok(());
             }
-            for r in &mut self.replicas {
-                r.check_alive()?;
+            self.sweep_failures()?;
+            if drained > 0 {
+                continue; // results are flowing: re-check without sleeping
             }
-            let poll_us = match queue.front() {
-                Some(r) => {
-                    let until_us = ((r.arrival - self.now()) * 1e6).ceil();
-                    if until_us <= 0.0 {
-                        continue; // due now: dispatch immediately
-                    }
-                    self.cfg.idle_poll_us.min(until_us as u64).max(1)
-                }
-                None => self.cfg.idle_poll_us.max(1),
-            };
-            std::thread::sleep(std::time::Duration::from_micros(poll_us));
+            self.bounded_poll(queue.front().map(|r| r.arrival));
         }
     }
 
     /// Drain whatever is still in flight, stop every replica, join the
     /// workers, and assemble the fleet report. The stop is only requested
     /// *after* the last final sequence is collected, so join-on-shutdown
-    /// can never lose an in-flight or handed-off sequence.
+    /// can never lose an in-flight, handed-off, or requeued sequence.
     pub fn shutdown(mut self) -> crate::Result<ClusterReport> {
+        // A corpse may postdate run()'s last sweep — a kill landing on an
+        // already-idle replica leaves inflight at 0, so neither run() nor
+        // the drain loop below would reap it. Sweep once up front, while
+        // `stop` is still unset (try_reap_failure ignores post-stop exits).
+        self.sweep_failures()?;
         while self.inflight() > 0 {
-            self.collect_finished();
+            let drained = self.collect_finished()?;
             if self.inflight() == 0 {
                 break;
             }
-            for r in &mut self.replicas {
-                r.check_alive()?;
+            self.sweep_failures()?;
+            if drained == 0 {
+                // same bounded discipline as the run loop (no pending
+                // arrivals here — sleep at most one quantum, and only
+                // when no results flowed this pass)
+                self.bounded_poll(None);
             }
-            std::thread::sleep(std::time::Duration::from_micros(
-                self.cfg.idle_poll_us.max(1),
-            ));
         }
         for r in &self.replicas {
             r.request_stop();
         }
+        let failover = self.cfg.failover;
+        let mut late_failovers = 0u64;
         let mut merged = Recorder::new();
         let mut per_replica = Vec::new();
         let mut sampler_stats = Vec::new();
         let mut preemptions = 0u64;
         let mut spec = [0u64; 4];
         for r in self.replicas.drain(..) {
+            if r.is_dead() {
+                // reaped after a failure: its partial recorder died with
+                // it; its requeued sequences' lifecycles were recorded in
+                // full by the survivors that replayed them
+                continue;
+            }
             let (id, role) = (r.id, r.role);
-            let res = r.join()?;
+            let res = match r.join() {
+                Ok(res) => res,
+                Err(e) if failover => {
+                    // died in the sweep→stop window: every final sequence
+                    // is already collected (inflight is 0), so the death
+                    // costs only this replica's partial recorder
+                    eprintln!("[cluster] replica {id} died at shutdown ({e:#})");
+                    late_failovers += 1;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
             merged.merge(&res.recorder);
             preemptions += res.preemptions;
             spec[0] += res.spec_accepted;
@@ -465,19 +649,28 @@ impl Cluster {
                 preemptions: res.preemptions,
             });
         }
+        self.failovers += late_failovers;
         if let Some(pool) = self.pool.take() {
             match Arc::try_unwrap(pool) {
-                // shared mode: the pool holds the fleet's only sampler stats
-                Ok(svc) => sampler_stats = svc.shutdown(),
+                // shared mode: the pool holds the fleet's only sampler
+                // stats and its sampler-level recovery accounting
+                Ok(svc) => {
+                    let rec = svc.recovery_stats();
+                    merged.on_recovery(rec.respawns, rec.recovery_s);
+                    sampler_stats = svc.shutdown();
+                }
                 Err(_) => anyhow::bail!("shared sampler pool still referenced at shutdown"),
             }
         }
+        merged.on_recovery(self.failovers, self.failover_s);
         Ok(ClusterReport {
             finished: std::mem::take(&mut self.finished),
             recorder: merged,
             per_replica,
             sampler_stats,
             preemptions,
+            failovers: self.failovers,
+            requeued: self.requeued,
             spec_accepted: spec[0],
             spec_proposed: spec[1],
             spec_committed: spec[2],

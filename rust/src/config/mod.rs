@@ -71,6 +71,10 @@ pub struct SamplerConfig {
     /// Fixed RNG seed for deterministic decisions.
     pub seed: u64,
     pub variant: DecisionVariant,
+    /// Respawn crashed sampler workers and replay their owned state
+    /// instead of failing the collect (DESIGN.md §10). Token streams are
+    /// bit-identical either way; recovery trades a pause for survival.
+    pub recovery: bool,
 }
 
 impl Default for SamplerConfig {
@@ -81,6 +85,7 @@ impl Default for SamplerConfig {
             ring_depth: 4,
             seed: 0x5111_7713,
             variant: DecisionVariant::Shvs,
+            recovery: true,
         }
     }
 }
@@ -126,6 +131,11 @@ pub struct EngineConfig {
     /// entirely when the next arrival is already due, and bounds it by the
     /// time until that arrival otherwise. 0 = busy-poll.
     pub idle_poll_us: u64,
+    /// Chaos-injection schedule for the engine-level fault domains
+    /// (sampler kills and lock poisons, keyed by plan iteration — see
+    /// [`crate::fault::FaultPlan`]). Empty = no injected faults. Replica
+    /// kills live in `ClusterConfig::faults` instead.
+    pub faults: crate::fault::FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -144,6 +154,7 @@ impl Default for EngineConfig {
             n_microbatches: 1,
             overlap: false,
             idle_poll_us: 200,
+            faults: crate::fault::FaultPlan::default(),
         }
     }
 }
@@ -242,7 +253,15 @@ impl EngineConfig {
                 obj.insert(key.to_string(), Json::Num(n));
             }
         }
-        self.apply_json(&Json::Obj(obj))
+        self.apply_json(&Json::Obj(obj))?;
+        // `--chaos <spec>` carries the whole fault plan; the engine keeps
+        // its own fault domains (sampler kills, lock poisons) and the
+        // router-side split is picked up by `ClusterConfig::apply_args`.
+        if let Some(spec) = args.get("chaos") {
+            let (engine_faults, _router) = crate::fault::FaultPlan::parse(spec)?.split();
+            self.faults = engine_faults;
+        }
+        Ok(())
     }
 }
 

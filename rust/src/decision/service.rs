@@ -28,23 +28,65 @@
 //! per replica. The submit paths serialize on an internal lock (the SPSC
 //! rings still have exactly one logical producer); collects are already
 //! concurrent-safe through the shared completion queue.
+//!
+//! **Crash recovery (DESIGN.md §10).** A sampler thread can die mid-
+//! iteration (a panic — real or chaos-injected) while the GPU side keeps
+//! producing logits. With `cfg.recovery` on (the default), the service
+//! self-heals instead of failing the collect: the collect paths detect the
+//! corpse, join it, respawn a fresh worker on a fresh ring, replay its
+//! owned sequences from the service-side **registry** (the same
+//! resume-replay `Register` path preemption uses — prompt ⧺ decided
+//! output), and resubmit any in-flight [`IterationTask`] the dead worker
+//! had not answered. The registry mirrors worker-local state exactly: it
+//! is written on `register_full`, dropped on `retire`, and rolled forward
+//! by each absorbed verdict — precisely the worker's own roll-forward
+//! discipline, so the respawned worker recomputes bit-identical decisions
+//! (uniforms are keyed by (seed, seq, iteration), not by worker identity).
+//! A worker that dies repeatedly without producing work trips a
+//! crash-loop breaker and the failure surfaces as an error. Every service
+//! mutex is accessed through poison-tolerant locking (`into_inner`), so a
+//! panic that poisons a lock is surfaced once with its real payload rather
+//! than cascading `PoisonError`s through every later submit.
 
-use super::grammar::{ConstraintState, GrammarConstraint};
+use super::grammar::GrammarConstraint;
 use super::hotvocab::HotVocab;
 use super::params::SamplingParams;
 use super::penalties::BatchHistory;
 use super::pipeline::DecisionPipeline;
 use super::shvs::Precompute;
 use super::verify::{self, Verdict};
-use crate::config::SamplerConfig;
 #[cfg(test)]
 use crate::config::DecisionVariant;
+use crate::config::SamplerConfig;
 use crate::ringbuf::{mpmc, spsc};
 use crate::tensor::ShardedLogits;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Bit position of the task-id namespace: a shared pool's submitters put
+/// their replica id in the bits at and above this shift (`(id+1) << 48`),
+/// leaving the low bits for the per-engine plan counter.
+pub const TASK_NS_SHIFT: u32 = 48;
+/// Mask selecting the namespace bits of a task id.
+pub const TASK_NS_MASK: u64 = !((1u64 << TASK_NS_SHIFT) - 1);
+
+/// Consecutive respawns of the same worker (without it producing a single
+/// batch in between) before recovery gives up and surfaces the panic — the
+/// crash-loop breaker for deterministically-poisonous tasks.
+const MAX_CONSECUTIVE_RESPAWNS: u32 = 3;
+
+/// Poison-tolerant lock: a panic while holding a service mutex must be
+/// surfaced once (by the collect that joins the corpse) with its real
+/// payload — not turned into an opaque `PoisonError` panic in every
+/// subsequent submit/collect. The inner data is still consistent for every
+/// poison source we have: the injected chaos poison panics before touching
+/// the map, and worker panics never run while holding service locks.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Per-column metadata within an iteration's microbatch.
 #[derive(Debug, Clone)]
@@ -124,6 +166,9 @@ pub enum SamplerMsg {
     Iterate(Arc<IterationTask>),
     /// A sequence finished: drop its metadata.
     Retire { seq_id: u64 },
+    /// Chaos injection: panic inside the worker thread (a simulated
+    /// sampler crash, exercised by the recovery path and `--chaos`).
+    Crash,
 }
 
 /// One sampler's decisions for one iteration.
@@ -168,6 +213,52 @@ struct PendingCollect {
     intervals: Vec<(f64, f64)>,
     batches: usize,
     max_busy: f64,
+    /// Which samplers reported for this task (lazily sized to `m`): makes
+    /// crash-recovery resubmission idempotent — a respawned worker's
+    /// re-decision of a task its predecessor already answered is dropped.
+    reported: Vec<bool>,
+}
+
+/// Service-side replay state for one live sequence — the authoritative
+/// mirror of the owner worker's local state, used to rebuild a respawned
+/// worker. `output` is rolled forward verdict-by-verdict at absorb time
+/// (exactly the worker's own roll-forward); every divergence between
+/// verdicts and committed tokens (EOS / max_new / KV-ceiling cuts,
+/// preemption) ends in a `retire` or a fresh `register_full`, which resets
+/// this entry the same way it resets the worker.
+///
+/// `gen` is the entry's registration incarnation (globally unique): a
+/// submitted task stamps each column with its sequence's gen at submit
+/// time, and absorb only rolls a verdict forward when the stamp still
+/// matches — so a stale in-flight verdict from *before* a retire +
+/// re-register (a preempted sequence whose task was mid-flight) can never
+/// double-apply against the fresh incarnation. The workers need no such
+/// guard: their SPSC rings deliver Register/Retire/Iterate in exact push
+/// order.
+struct RegEntry {
+    gen: u64,
+    prompt: Vec<u32>,
+    output: Vec<u32>,
+    params: SamplingParams,
+    grammar: Option<Arc<GrammarConstraint>>,
+}
+
+/// A submitted-but-uncollected task plus the registry incarnations its
+/// columns were stamped with (col → gen, computed once at submit — the
+/// absorb hot path only looks entries up).
+struct LiveTask {
+    task: Arc<IterationTask>,
+    col_gens: HashMap<usize, u64>,
+}
+
+/// Lifetime fault-recovery statistics of a service.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecoveryStats {
+    /// Sampler workers respawned after a crash.
+    pub respawns: u64,
+    /// Wall seconds spent respawning + replaying state (the recovery
+    /// pauses a fault-free run would not have paid).
+    pub recovery_s: f64,
 }
 
 /// Running service handle.
@@ -175,16 +266,44 @@ pub struct SamplerService {
     /// Per-sampler control/data rings. Locked because a *shared* pool has
     /// several engine replicas submitting concurrently; each ring still
     /// sees a serialized producer stream (register-before-iterate order is
-    /// preserved per replica by the lock).
+    /// preserved per replica by the lock). Recovery holds this lock across
+    /// its whole respawn-replay-resubmit critical section so no submit can
+    /// interleave with a half-rebuilt worker.
     senders: Mutex<Vec<spsc::Producer<SamplerMsg>>>,
     results: mpmc::Receiver<DecisionBatch>,
-    /// Worker handles; slots are taken when a dead worker is joined for
-    /// panic propagation, and drained at shutdown/drop.
+    /// Kept so crash-recovery can hand a respawned worker the return
+    /// channel; dropped at shutdown so channel disconnect still means
+    /// "every worker exited".
+    result_tx: Option<mpmc::Sender<DecisionBatch>>,
+    /// Worker handles; slots are taken when a dead worker is joined
+    /// (respawn or panic propagation), and drained at shutdown/drop.
     workers: Mutex<Vec<Option<JoinHandle<SamplerStats>>>>,
     /// Completion queue: batches drained off the return channel, bucketed
     /// by task id `(iter)` until all `m` samplers reported. Lets multiple
     /// microbatches' tasks be in flight and reaped out of order.
     pending: Mutex<HashMap<u64, PendingCollect>>,
+    /// Submitted-but-uncollected tasks (+ column gen stamps), retained so
+    /// recovery can resubmit them to a respawned worker. Removed when the
+    /// task completes.
+    live_tasks: Mutex<HashMap<u64, LiveTask>>,
+    /// Task-id namespaces whose owner is gone (a failed-over replica):
+    /// their stale batches are dropped on arrival so they can neither
+    /// recreate purged pending entries nor roll the registry forward past
+    /// the state the failover requeue replays from. Replica ids are never
+    /// reused, so purging is permanent.
+    purged: Mutex<std::collections::HashSet<u64>>,
+    /// Replay registry: live sequences' resume state (see [`RegEntry`]).
+    registry: Mutex<HashMap<u64, RegEntry>>,
+    /// Consecutive respawns per worker since it last produced a batch —
+    /// the crash-loop breaker's state.
+    respawns: Vec<AtomicU32>,
+    /// Registration-incarnation counter (see [`RegEntry::gen`]).
+    reg_gen: AtomicU64,
+    recovery_log: Mutex<RecoveryStats>,
+    /// Spawn ingredients for respawns.
+    cfg: SamplerConfig,
+    hot: Option<Arc<HotVocab>>,
+    max_seq_len: usize,
     m: usize,
     /// Shared time origin the workers timestamp against (the engine's t0;
     /// a cluster's replicas all adopt it so fleet stage timelines merge).
@@ -220,7 +339,7 @@ struct SamplerWorker {
 struct OwnedSeq {
     hist: BatchHistory,
     params: SamplingParams,
-    grammar: Option<(Arc<GrammarConstraint>, ConstraintState)>,
+    grammar: Option<(Arc<GrammarConstraint>, super::grammar::ConstraintState)>,
 }
 
 impl SamplerWorker {
@@ -260,6 +379,9 @@ impl SamplerWorker {
                     if self.owns(seq_id) {
                         self.owned.remove(&seq_id);
                     }
+                }
+                SamplerMsg::Crash => {
+                    panic!("chaos: injected sampler crash (worker {})", self.id);
                 }
                 SamplerMsg::Iterate(task) => {
                     let start_s = self.epoch.elapsed().as_secs_f64();
@@ -349,28 +471,26 @@ impl SamplerService {
         let mut senders = Vec::with_capacity(m);
         let mut workers = Vec::with_capacity(m);
         for id in 0..m {
-            let (tx, rx) = spsc::ring::<SamplerMsg>(cfg.ring_depth.max(1) * 64);
-            let worker = SamplerWorker {
-                id,
-                m,
-                pipeline: DecisionPipeline::new(cfg.variant, hot.clone(), cfg.seed),
-                epoch,
-                owned: HashMap::new(),
-            };
-            let result_tx = result_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("sampler-{id}"))
-                .spawn(move || worker.run(rx, result_tx, max_seq_len))
-                .expect("spawn sampler");
+            let (tx, handle) =
+                spawn_worker(id, m, cfg, hot.clone(), max_seq_len, epoch, result_tx.clone());
             senders.push(tx);
             workers.push(Some(handle));
         }
-        drop(result_tx);
         SamplerService {
             senders: Mutex::new(senders),
             results,
+            result_tx: Some(result_tx),
             workers: Mutex::new(workers),
             pending: Mutex::new(HashMap::new()),
+            live_tasks: Mutex::new(HashMap::new()),
+            purged: Mutex::new(std::collections::HashSet::new()),
+            registry: Mutex::new(HashMap::new()),
+            respawns: (0..m).map(|_| AtomicU32::new(0)).collect(),
+            reg_gen: AtomicU64::new(0),
+            recovery_log: Mutex::new(RecoveryStats::default()),
+            cfg: cfg.clone(),
+            hot,
+            max_seq_len,
             m,
             epoch,
         }
@@ -387,7 +507,7 @@ impl SamplerService {
         self.epoch
     }
 
-    /// Register a new sequence (broadcast; only the owner keeps it).
+    /// Register a new sequence (routed to its owner sampler).
     pub fn register(&self, seq_id: u64, prompt: &[u32], params: &SamplingParams) {
         self.register_full(seq_id, prompt, &[], params, None);
     }
@@ -414,7 +534,23 @@ impl SamplerService {
         grammar: Option<Arc<GrammarConstraint>>,
     ) {
         let owner = (seq_id as usize) % self.m;
-        self.senders.lock().unwrap()[owner].push(SamplerMsg::Register {
+        let senders = plock(&self.senders);
+        // Registry entry BEFORE the ring push, both under the senders lock:
+        // recovery (which also holds that lock) therefore either sees the
+        // entry and replays it, or runs before this registration entirely —
+        // never in between, where the push could vanish into a dead ring
+        // without a registry record to replay from.
+        plock(&self.registry).insert(
+            seq_id,
+            RegEntry {
+                gen: self.reg_gen.fetch_add(1, Ordering::Relaxed),
+                prompt: prompt.to_vec(),
+                output: output.to_vec(),
+                params: params.clone(),
+                grammar: grammar.clone(),
+            },
+        );
+        senders[owner].push(SamplerMsg::Register {
             seq_id,
             prompt: prompt.to_vec(),
             output: output.to_vec(),
@@ -426,27 +562,77 @@ impl SamplerService {
     /// Retire a finished sequence.
     pub fn retire(&self, seq_id: u64) {
         let owner = (seq_id as usize) % self.m;
-        self.senders.lock().unwrap()[owner].push(SamplerMsg::Retire { seq_id });
+        let senders = plock(&self.senders);
+        plock(&self.registry).remove(&seq_id);
+        senders[owner].push(SamplerMsg::Retire { seq_id });
     }
 
     /// Publish one iteration's logits + metadata to all samplers. Shared
     /// pools rely on the caller namespacing `task.iter` (unique fleet-wide).
+    /// The task is retained until collected so crash-recovery can resubmit
+    /// it to a respawned worker.
     pub fn submit(&self, task: IterationTask) {
         let task = Arc::new(task);
-        for tx in self.senders.lock().unwrap().iter() {
+        let senders = plock(&self.senders);
+        // Stamp each column with its sequence's current registration
+        // incarnation — the absorb-time freshness guard for the registry
+        // roll-forward (see [`RegEntry::gen`]). Unregistered columns get
+        // no stamp, so their verdicts never roll the registry.
+        let col_gens: HashMap<usize, u64> = {
+            let reg = plock(&self.registry);
+            task.columns
+                .iter()
+                .filter_map(|c| reg.get(&c.seq_id).map(|e| (c.col, e.gen)))
+                .collect()
+        };
+        plock(&self.live_tasks)
+            .insert(task.iter, LiveTask { task: task.clone(), col_gens });
+        for tx in senders.iter() {
             tx.push(SamplerMsg::Iterate(task.clone()));
         }
     }
 
-    /// Bucket one returned batch into the completion queue.
+    /// Bucket one returned batch into the completion queue, rolling its
+    /// verdicts into the replay registry (the service-side mirror of the
+    /// owner worker's roll-forward).
     fn absorb(&self, batch: DecisionBatch) {
-        let mut pending = self.pending.lock().unwrap();
+        if plock(&self.purged).contains(&(batch.iter & TASK_NS_MASK)) {
+            return; // stale answer to a failed-over replica's task
+        }
+        let mut pending = plock(&self.pending);
         let entry = pending.entry(batch.iter).or_default();
+        if entry.reported.is_empty() {
+            entry.reported = vec![false; self.m];
+        }
+        if entry.reported[batch.sampler_id] {
+            // a respawned worker re-decided a task its crashed predecessor
+            // had already answered — identical by determinism; drop it
+            return;
+        }
+        entry.reported[batch.sampler_id] = true;
+        self.respawns[batch.sampler_id].store(0, Ordering::Relaxed);
         entry.mb = batch.mb;
         entry.batches += 1;
         entry.max_busy = entry.max_busy.max(batch.busy_s);
         if batch.end_s > batch.start_s {
             entry.intervals.push((batch.start_s, batch.end_s));
+        }
+        // Roll the verdicts into the replay registry — but only where the
+        // column's submit-time gen stamp still matches the entry (a stale
+        // verdict from before a retire + re-register must not double-apply
+        // against the fresh incarnation; the engine discards the same
+        // verdict through its (slot, seq_id) identity guard).
+        {
+            let live = plock(&self.live_tasks);
+            let col_gens = live.get(&batch.iter).map(|lt| &lt.col_gens);
+            let mut reg = plock(&self.registry);
+            for (col, seq_id, verdict) in &batch.decisions {
+                if let Some(e) = reg.get_mut(seq_id) {
+                    if col_gens.and_then(|g| g.get(col)) == Some(&e.gen) {
+                        e.output.extend_from_slice(&verdict.tokens);
+                    }
+                }
+            }
         }
         entry.decisions.extend(batch.decisions);
     }
@@ -454,48 +640,201 @@ impl SamplerService {
     /// Remove task `iter` from the completion queue if all `m` sampler
     /// batches for it arrived.
     fn take_if_complete(&self, iter: u64) -> Option<Collected> {
-        let mut pending = self.pending.lock().unwrap();
-        if pending.get(&iter).is_some_and(|e| e.batches >= self.m) {
-            let entry = pending.remove(&iter).unwrap();
-            let mut decisions = entry.decisions;
-            decisions.sort_unstable_by_key(|&(col, _, _)| col);
-            Some(Collected {
-                mb: entry.mb,
-                decisions,
-                busy_s: entry.max_busy,
-                intervals: entry.intervals,
-            })
-        } else {
-            None
-        }
+        let done = {
+            let mut pending = plock(&self.pending);
+            if !pending.get(&iter).is_some_and(|e| e.batches >= self.m) {
+                return None;
+            }
+            pending.remove(&iter).unwrap()
+        };
+        plock(&self.live_tasks).remove(&iter);
+        let mut decisions = done.decisions;
+        decisions.sort_unstable_by_key(|&(col, _, _)| col);
+        Some(Collected {
+            mb: done.mb,
+            decisions,
+            busy_s: done.max_busy,
+            intervals: done.intervals,
+        })
     }
 
-    /// Propagate sampler-thread death: a worker whose handle is finished
-    /// while the service is live either panicked (its payload is surfaced)
-    /// or exited early — both are fatal to the iteration protocol. Without
-    /// this check a dead worker deadlocks `collect` forever, because the
-    /// surviving workers keep the return channel alive while the batch
-    /// count can never reach `m`.
-    fn check_workers(&self) -> crate::Result<()> {
-        let mut workers = self.workers.lock().unwrap();
+    /// Reap dead workers: take + join every finished handle while the
+    /// service is live. Returns their (id, failure message) pairs.
+    fn reap_dead(&self) -> Vec<(usize, String)> {
+        let mut workers = plock(&self.workers);
+        let mut dead = Vec::new();
         for (id, slot) in workers.iter_mut().enumerate() {
             if slot.as_ref().is_some_and(|h| h.is_finished()) {
                 let handle = slot.take().unwrap();
-                return match handle.join() {
-                    Err(payload) => Err(anyhow::anyhow!(
+                let msg = match handle.join() {
+                    Err(payload) => format!(
                         "sampler {id} panicked: {}",
                         panic_message(payload.as_ref())
-                    )),
-                    Ok(_) => Err(anyhow::anyhow!("sampler {id} exited mid-service")),
+                    ),
+                    Ok(_) => format!("sampler {id} exited mid-service"),
                 };
+                dead.push((id, msg));
             }
         }
+        dead
+    }
+
+    /// Propagate or repair sampler-thread death. A worker whose handle is
+    /// finished while the service is live either panicked or exited early;
+    /// without this check a dead worker deadlocks `collect` forever,
+    /// because the surviving workers keep the return channel alive while
+    /// the batch count can never reach `m`. With `cfg.recovery` the corpse
+    /// is respawned and its state replayed (see [`Self::recover`]);
+    /// otherwise — or when the crash-loop breaker trips — the death
+    /// surfaces as an error carrying the panic payload.
+    fn check_workers(&self) -> crate::Result<()> {
+        let dead = self.reap_dead();
+        if dead.is_empty() {
+            return Ok(());
+        }
+        if !self.cfg.recovery {
+            anyhow::bail!("{}", dead[0].1);
+        }
+        for (id, msg) in &dead {
+            let n = self.respawns[*id].fetch_add(1, Ordering::Relaxed) + 1;
+            if n > MAX_CONSECUTIVE_RESPAWNS {
+                anyhow::bail!(
+                    "sampler {id} crash-looping ({n} consecutive respawns): {msg}"
+                );
+            }
+        }
+        self.recover(&dead)
+    }
+
+    /// Respawn dead workers and rebuild their state: fresh ring + thread,
+    /// drain the return channel (so `reported` and the registry are
+    /// current), replay owned sequences through the resume-`Register`
+    /// path, and resubmit every live task the corpse had not answered.
+    /// Holds the senders lock throughout so no submit interleaves with a
+    /// half-rebuilt worker.
+    fn recover(&self, dead: &[(usize, String)]) -> crate::Result<()> {
+        let t0 = Instant::now();
+        let mut senders = plock(&self.senders);
+        let Some(result_tx) = &self.result_tx else {
+            anyhow::bail!("{} (service shutting down)", dead[0].1);
+        };
+        for (id, msg) in dead {
+            eprintln!("[sampler-service] {msg}; respawning worker {id}");
+            let (tx, handle) = spawn_worker(
+                *id,
+                self.m,
+                &self.cfg,
+                self.hot.clone(),
+                self.max_seq_len,
+                self.epoch,
+                result_tx.clone(),
+            );
+            senders[*id] = tx; // old producer drops; the dead ring closes
+            plock(&self.workers)[*id] = Some(handle);
+        }
+        // Everything the corpses sent before dying is already in the
+        // return channel: drain it so the registry holds their final
+        // roll-forward and `reported` knows which tasks they answered.
+        while let Some(batch) = self.results.try_recv() {
+            self.absorb(batch);
+        }
+        // Replay owned sequences (deterministic order for reproducibility).
+        {
+            let reg = plock(&self.registry);
+            let mut ids: Vec<u64> = reg
+                .keys()
+                .copied()
+                .filter(|s| dead.iter().any(|(id, _)| (*s as usize) % self.m == *id))
+                .collect();
+            ids.sort_unstable();
+            for seq_id in ids {
+                let e = &reg[&seq_id];
+                senders[(seq_id as usize) % self.m].push(SamplerMsg::Register {
+                    seq_id,
+                    prompt: e.prompt.clone(),
+                    output: e.output.clone(),
+                    params: e.params.clone(),
+                    grammar: e.grammar.clone(),
+                });
+            }
+        }
+        // Resubmit unanswered live tasks to the respawned workers only
+        // (idempotent: `absorb` drops a duplicate answer anyway).
+        {
+            let mut tasks: Vec<(u64, Arc<IterationTask>)> = plock(&self.live_tasks)
+                .iter()
+                .map(|(&id, lt)| (id, lt.task.clone()))
+                .collect();
+            tasks.sort_unstable_by_key(|&(id, _)| id);
+            for (tid, task) in tasks {
+                let answered = plock(&self.pending)
+                    .get(&tid)
+                    .map(|e| e.reported.clone())
+                    .unwrap_or_default();
+                for (id, _) in dead {
+                    if !answered.get(*id).copied().unwrap_or(false) {
+                        senders[*id].push(SamplerMsg::Iterate(task.clone()));
+                    }
+                }
+            }
+        }
+        let mut log = plock(&self.recovery_log);
+        log.respawns += dead.len() as u64;
+        log.recovery_s += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Lifetime recovery statistics (respawn count + recovery seconds).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        *plock(&self.recovery_log)
+    }
+
+    /// Chaos injection: crash sampler `id` (its thread panics on the next
+    /// message it processes). Recovery — if enabled — repairs it on the
+    /// next collect; otherwise the death surfaces as an error.
+    pub fn inject_sampler_crash(&self, id: usize) {
+        let senders = plock(&self.senders);
+        match senders.get(id) {
+            Some(tx) => {
+                tx.push(SamplerMsg::Crash);
+            }
+            // callers validate ids up front (FaultPlan::validate); never
+            // let a typo'd id pass as a silently fault-free chaos run
+            None => eprintln!(
+                "[sampler-service] chaos: no sampler {id} to crash ({} exist)",
+                senders.len()
+            ),
+        }
+    }
+
+    /// Chaos injection: poison the completion-queue mutex (a thread panics
+    /// while holding it, before touching the data). Every later access
+    /// goes through poison-tolerant locking, so the service keeps
+    /// operating — the injected panic stays contained in its thread.
+    pub fn inject_lock_poison(&self) {
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _guard = plock(&self.pending);
+                panic!("chaos: injected lock poison");
+            });
+            let _ = h.join(); // the panic is the point; swallow it
+        });
+    }
+
+    /// Drop all queue state owned by one task-id namespace (a dead engine
+    /// replica's in-flight tasks in a shared pool): its pending partial
+    /// collects and retained live tasks. Its registered sequences are NOT
+    /// dropped here — the router re-registers them (with replay) when it
+    /// requeues the replica's sequences onto survivors.
+    pub fn purge_namespace(&self, task_base: u64) {
+        plock(&self.purged).insert(task_base);
+        plock(&self.pending).retain(|&id, _| id & TASK_NS_MASK != task_base);
+        plock(&self.live_tasks).retain(|&id, _| id & TASK_NS_MASK != task_base);
     }
 
     /// Non-blocking collect: drain whatever the samplers have pushed so
     /// far and return task `iter`'s assembled result if complete. Errors
-    /// if a sampler thread died.
+    /// if a sampler thread died and could not be recovered.
     pub fn try_collect(&self, iter: u64) -> crate::Result<Option<Collected>> {
         loop {
             if let Some(done) = self.take_if_complete(iter) {
@@ -512,8 +851,9 @@ impl SamplerService {
     }
 
     /// Blocking collect for task `iter`: waits until all `m` sampler
-    /// batches arrived, surfacing worker panics as errors instead of
-    /// deadlocking (the satellite fix: join-on-death with error surfacing).
+    /// batches arrived, recovering crashed workers along the way (or
+    /// surfacing their panics as errors instead of deadlocking when
+    /// recovery is off or crash-looping).
     pub fn collect_checked(&self, iter: u64) -> crate::Result<Collected> {
         loop {
             if let Some(done) = self.take_if_complete(iter) {
@@ -533,8 +873,9 @@ impl SamplerService {
     /// must hide under GPU compute). `expected_cols` is the caller's
     /// submitted column count, asserted against what came back — a mismatch
     /// means a sequence was decided by zero or two owners. Panics if a
-    /// sampler died — callers on the fallible path use
-    /// [`Self::collect_checked`].
+    /// sampler died unrecoverably — callers on the fallible path (the
+    /// engine loop) use [`Self::collect_checked`]; this wrapper exists for
+    /// tests and benches.
     pub fn collect(&self, iter: u64, expected_cols: usize) -> (Vec<(usize, u64, Verdict)>, f64) {
         let done = self.collect_checked(iter).expect("decision plane failed");
         debug_assert_eq!(
@@ -549,14 +890,15 @@ impl SamplerService {
     /// that exited cleanly; panicked workers are surfaced per `propagate`
     /// (true = re-panic, false = log and continue — the drop path).
     fn join_all(&mut self, propagate: bool) -> Vec<SamplerStats> {
-        let mut senders = self.senders.lock().unwrap();
+        self.result_tx = None; // recovery is over; let the channel disconnect
+        let mut senders = plock(&self.senders);
         for tx in senders.iter() {
             tx.close();
         }
         senders.clear(); // Producer::drop closes the rings
         drop(senders);
         let mut handles: Vec<Option<JoinHandle<SamplerStats>>> =
-            std::mem::take(&mut *self.workers.lock().unwrap());
+            std::mem::take(&mut *plock(&self.workers));
         // Drain stray result batches while workers wind down so none blocks
         // forever on a full return channel (timed waits, not a spin: each
         // worker drops its sender on exit, so `Ok(None)` means all done).
@@ -600,6 +942,31 @@ impl SamplerService {
     }
 }
 
+/// Spawn one sampler worker on a fresh ring (initial start and respawns).
+fn spawn_worker(
+    id: usize,
+    m: usize,
+    cfg: &SamplerConfig,
+    hot: Option<Arc<HotVocab>>,
+    max_seq_len: usize,
+    epoch: Instant,
+    result_tx: mpmc::Sender<DecisionBatch>,
+) -> (spsc::Producer<SamplerMsg>, JoinHandle<SamplerStats>) {
+    let (tx, rx) = spsc::ring::<SamplerMsg>(cfg.ring_depth.max(1) * 64);
+    let worker = SamplerWorker {
+        id,
+        m,
+        pipeline: DecisionPipeline::new(cfg.variant, hot, cfg.seed),
+        epoch,
+        owned: HashMap::new(),
+    };
+    let handle = std::thread::Builder::new()
+        .name(format!("sampler-{id}"))
+        .spawn(move || worker.run(rx, result_tx, max_seq_len))
+        .expect("spawn sampler");
+    (tx, handle)
+}
+
 impl Drop for SamplerService {
     /// Join-on-drop: an engine that errors out (or a panicking test) still
     /// tears the workers down instead of leaking threads; worker panics are
@@ -627,6 +994,18 @@ mod tests {
     }
 
     fn run_service(m: usize, variant: DecisionVariant, iters: u64) -> Vec<Vec<u32>> {
+        run_service_with_faults(m, variant, iters, &[])
+    }
+
+    /// Drive the service for `iters` plain iterations; `crash_at` lists
+    /// (iteration, sampler) chaos injections fired just before that
+    /// iteration's submit.
+    fn run_service_with_faults(
+        m: usize,
+        variant: DecisionVariant,
+        iters: u64,
+        crash_at: &[(u64, usize)],
+    ) -> Vec<Vec<u32>> {
         let v = 64;
         let b = 6;
         let cfg = SamplerConfig {
@@ -643,6 +1022,11 @@ mod tests {
         }
         let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
         for iter in 0..iters {
+            for &(at, sampler) in crash_at {
+                if at == iter {
+                    svc.inject_sampler_crash(sampler);
+                }
+            }
             let view = logits_view(b, v, iter, 2);
             let columns: Vec<ColumnMeta> = (0..b)
                 .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
@@ -659,10 +1043,15 @@ mod tests {
         for s in 0..b as u64 {
             svc.retire(s);
         }
-        let stats = svc.shutdown();
-        assert_eq!(stats.len(), m);
-        let total: u64 = stats.iter().map(|s| s.decisions).sum();
-        assert_eq!(total, iters * b as u64);
+        if crash_at.is_empty() {
+            let stats = svc.shutdown();
+            assert_eq!(stats.len(), m);
+            let total: u64 = stats.iter().map(|s| s.decisions).sum();
+            assert_eq!(total, iters * b as u64);
+        } else {
+            assert!(svc.recovery_stats().respawns > 0, "faults must respawn");
+            svc.shutdown();
+        }
         streams
     }
 
@@ -790,15 +1179,99 @@ mod tests {
     }
 
     #[test]
-    fn worker_panic_surfaces_instead_of_deadlocking() {
-        // A column index past the view's batch makes the owning sampler
-        // panic mid-iteration. Before the completion-queue rework this
-        // deadlocked `collect` forever (the surviving workers keep the
-        // return channel open while the batch count can never reach m);
-        // now the dead worker is joined and its panic surfaces as an error.
+    fn crashed_sampler_respawns_and_streams_stay_identical() {
+        // The tentpole: a sampler killed mid-run is respawned, its owned
+        // sequences replayed from the registry, and the in-flight task
+        // resubmitted — the caller sees at most a hiccup and the committed
+        // streams are bit-identical to the fault-free run.
+        let want = run_service(2, DecisionVariant::Offloading, 12);
+        for faults in [vec![(4u64, 0usize)], vec![(2, 1), (7, 0)], vec![(0, 0)]] {
+            let got =
+                run_service_with_faults(2, DecisionVariant::Offloading, 12, &faults);
+            assert_eq!(got, want, "faults {faults:?}");
+        }
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_cascade() {
+        // A panic while holding the completion-queue mutex must be
+        // contained: subsequent submits/collects keep working (the
+        // poisoned-mutex satellite), and the streams stay identical.
+        let want = run_service(2, DecisionVariant::Offloading, 6);
         let cfg = SamplerConfig {
             num_samplers: 2,
             variant: DecisionVariant::Offloading,
+            seed: 42,
+            ..Default::default()
+        };
+        let hot = HotVocab::new((0..16).collect(), 64).into_arc();
+        let svc = SamplerService::start(&cfg, Some(hot), 128);
+        let params = SamplingParams::production_default();
+        for s in 0..6u64 {
+            svc.register(s, &[1, 2, 3], &params);
+        }
+        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); 6];
+        for iter in 0..6u64 {
+            if iter == 2 {
+                svc.inject_lock_poison();
+            }
+            let view = logits_view(6, 64, iter, 2);
+            let columns: Vec<ColumnMeta> = (0..6)
+                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                .collect();
+            svc.submit(IterationTask::single(iter, view, columns, Vec::new()));
+            let done = svc.collect_checked(iter).expect("poison must not cascade");
+            for (col, _, verdict) in done.decisions {
+                streams[col].push(verdict.tokens[0]);
+            }
+        }
+        for s in 0..6u64 {
+            svc.retire(s);
+        }
+        svc.shutdown();
+        assert_eq!(streams, want);
+    }
+
+    #[test]
+    fn crash_loop_trips_breaker_when_recovery_enabled() {
+        // A deterministically-poisonous task (out-of-range column) kills
+        // every respawn: recovery must give up after the breaker limit and
+        // surface the real panic instead of looping forever.
+        let cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 64);
+        let params = SamplingParams::default();
+        svc.register(0, &[1], &params);
+        let view = logits_view(1, 32, 0, 1);
+        svc.submit(IterationTask::single(
+            0,
+            view,
+            vec![ColumnMeta { col: 7, seq_id: 0, iteration: 0 }],
+            Vec::new(),
+        ));
+        let err = svc
+            .collect_checked(0)
+            .expect_err("crash loop must surface, not spin");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("sampler") && msg.contains("panicked"),
+            "unhelpful error: {msg}"
+        );
+        drop(svc); // join-on-drop must not re-panic the test thread
+    }
+
+    #[test]
+    fn worker_panic_surfaces_instead_of_deadlocking_without_recovery() {
+        // With recovery disabled, the pre-hardening contract still holds:
+        // a dead worker is joined and its panic surfaces as an error on
+        // the first collect (never a deadlock, never a PoisonError).
+        let cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            recovery: false,
             ..Default::default()
         };
         let svc = SamplerService::start(&cfg, None, 64);
@@ -860,6 +1333,43 @@ mod tests {
         for (start, end) in earlier.intervals.iter().chain(&later.intervals) {
             assert!(end >= start, "interval {start}..{end}");
         }
+        for s in 0..2u64 {
+            svc.retire(s);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn purge_namespace_drops_only_that_namespace() {
+        let cfg = SamplerConfig {
+            num_samplers: 1,
+            variant: DecisionVariant::Offloading,
+            seed: 3,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 64);
+        let params = SamplingParams::production_default();
+        for s in 0..2u64 {
+            svc.register(s, &[1, 2], &params);
+        }
+        let (base_a, base_b) = (1u64 << TASK_NS_SHIFT, 2u64 << TASK_NS_SHIFT);
+        for (base, seq) in [(base_a, 0u64), (base_b, 1u64)] {
+            let view = logits_view(1, 64, seq, 1);
+            svc.submit(IterationTask::single(
+                base,
+                view,
+                vec![ColumnMeta { col: 0, seq_id: seq, iteration: 0 }],
+                Vec::new(),
+            ));
+        }
+        // both tasks complete; purge A's namespace before collecting it
+        let b = svc.collect_checked(base_b).expect("task b");
+        assert_eq!(b.decisions.len(), 1);
+        svc.purge_namespace(base_a);
+        assert!(
+            svc.try_collect(base_a).expect("no dead workers").is_none(),
+            "purged namespace must not complete"
+        );
         for s in 0..2u64 {
             svc.retire(s);
         }

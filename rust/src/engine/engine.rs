@@ -51,6 +51,7 @@ use crate::decision::{DecisionPipeline, HotVocab, Precompute};
 use crate::engine::kvcache::KvAllocator;
 use crate::engine::request::Request;
 use crate::engine::scheduler::{Scheduler, SchedulerConfig};
+use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{OverlapReport, Recorder};
 use crate::runtime::{ModelRuntime, StepOutput};
 use crate::tensor::{shard_row_major, ShardedLogits, Tensor2};
@@ -152,6 +153,10 @@ pub struct Engine<D: DataPlane> {
     cursor: usize,
     inflight: Vec<Option<InFlight>>,
     pending: Vec<Vec<(usize, u64, Verdict)>>,
+    /// Chaos-injection schedule (engine-level fault domains): sampler
+    /// kills and lock poisons fired as the plan counter passes each
+    /// event's trigger (DESIGN.md §10).
+    faults: FaultPlan,
     /// Speculation tallies over windows with at least one draft token:
     /// draft tokens accepted *and committed* / proposed, total committed
     /// tokens (accepted + bonus, after any EOS/max_new/preemption cut),
@@ -294,6 +299,7 @@ impl<D: DataPlane> Engine<D> {
             cursor: 0,
             inflight: (0..n_mb).map(|_| None).collect(),
             pending: (0..n_mb).map(|_| Vec::new()).collect(),
+            faults: cfg.faults.clone(),
             spec_accepted: 0,
             spec_proposed: 0,
             spec_committed: 0,
@@ -556,6 +562,26 @@ impl<D: DataPlane> Engine<D> {
             return Ok(true); // pure prefill chunk: nothing to decide
         }
         if let Some(svc) = &self.service {
+            // Chaos injection (DESIGN.md §10): fire engine-level fault
+            // events whose trigger the plan counter has passed, strictly
+            // BEFORE this iteration's task — so every injected kill is
+            // followed by a collect that detects the corpse and recovers
+            // it (respawn + registry replay + task resubmission), and no
+            // corpse can linger undetected into shutdown. Streams stay
+            // bit-identical; the inline GpuEpilogue baseline has no
+            // service to kill, so its fault events never fire.
+            if !self.faults.is_empty() {
+                for kind in self.faults.take_due(plan.iter, |_| true) {
+                    match kind {
+                        FaultKind::KillSampler { sampler } => {
+                            svc.inject_sampler_crash(sampler);
+                        }
+                        FaultKind::PoisonLock => svc.inject_lock_poison(),
+                        // replica kills are the router's fault domain
+                        FaultKind::KillReplica { .. } => {}
+                    }
+                }
+            }
             // Namespaced task id: unique fleet-wide under a shared pool
             // (replica id in the high bits), exactly the plan counter for
             // a standalone engine.
@@ -758,10 +784,13 @@ impl<D: DataPlane> Engine<D> {
 
     /// Shut the decision plane down, collecting sampler stats. An engine
     /// over a *shared* pool only drops its reference — the pool owner
-    /// joins the workers (and gets the stats) once every replica is gone.
+    /// joins the workers (and gets the stats + recovery accounting) once
+    /// every replica is gone.
     pub fn shutdown(mut self) -> (Recorder, Vec<crate::decision::service::SamplerStats>) {
         if let Some(svc) = self.service.take() {
             if let Ok(svc) = Arc::try_unwrap(svc) {
+                let rec = svc.recovery_stats();
+                self.recorder.on_recovery(rec.respawns, rec.recovery_s);
                 self.sampler_stats = svc.shutdown();
             }
         }

@@ -1,0 +1,253 @@
+//! Chaos-injection fault plans (DESIGN.md §10).
+//!
+//! A [`FaultPlan`] is a deterministic schedule of injected failures —
+//! "kill sampler *i* at engine iteration *t*", "kill replica *r* after the
+//! router has admitted *n* requests", "poison a service lock at iteration
+//! *t*" — used by the `chaos` harness scenario, `serve --chaos`, and the
+//! fault-recovery tests. Injection points are keyed by deterministic
+//! progress counters (plan iterations, routed-request counts), never wall
+//! time, so a chaos run is reproducible.
+//!
+//! The recovery hard bar the plans exist to prove: for ANY plan, per-
+//! sequence token streams are bit-identical to the fault-free run
+//! (decisions are keyed by (seed, seq, iteration) and every recovery path
+//! replays state through the same recompute-on-resume machinery that
+//! preemption and the prefill→decode handoff use), no panic escapes the
+//! service or the router, and no KV block or slot leaks.
+
+/// One kind of injected failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Crash sampler worker `sampler` (a panic inside its thread). The
+    /// service detects the corpse on the next collect, respawns the
+    /// worker, and replays its owned sequences from the registry.
+    KillSampler { sampler: usize },
+    /// Crash engine replica `replica` (a panic inside its worker thread).
+    /// The router's failure sweep requeues its outstanding sequences onto
+    /// survivors through `submit_resumed` (recompute from the last known
+    /// prefix — streams stay bit-identical by deterministic replay).
+    KillReplica { replica: usize },
+    /// Poison a service mutex (a panic while holding the completion-queue
+    /// lock). The service's poison-tolerant locking keeps operating on the
+    /// still-consistent inner data.
+    PoisonLock,
+}
+
+/// One scheduled fault. `at` is a progress counter, not a time: for
+/// [`FaultKind::KillSampler`] and [`FaultKind::PoisonLock`] it is the
+/// engine's scheduling-plan iteration; for [`FaultKind::KillReplica`] it
+/// is the number of requests the router has admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of injected failures. Cloned into the engine
+/// (sampler faults) and the router (replica faults); each holder fires its
+/// own events once as its progress counter passes `at`.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    /// Per-event fired flag (parallel to `events`).
+    fired: Vec<bool>,
+}
+
+impl FaultPlan {
+    pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
+        let fired = vec![false; events.len()];
+        FaultPlan { events, fired }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Append one event.
+    pub fn push(&mut self, at: u64, kind: FaultKind) {
+        self.events.push(FaultEvent { at, kind });
+        self.fired.push(false);
+    }
+
+    /// Take every not-yet-fired event with `at <= progress` that matches
+    /// `pick`, marking it fired. Each holder (engine vs router) passes the
+    /// filter for the fault kinds it owns.
+    pub fn take_due(
+        &mut self,
+        progress: u64,
+        pick: impl Fn(&FaultKind) -> bool,
+    ) -> Vec<FaultKind> {
+        let mut due = Vec::new();
+        for (i, e) in self.events.iter().enumerate() {
+            if !self.fired[i] && e.at <= progress && pick(&e.kind) {
+                self.fired[i] = true;
+                due.push(e.kind);
+            }
+        }
+        due
+    }
+
+    /// Split into (engine-level plan, router-level plan): sampler kills and
+    /// lock poisons fire inside the engine loop; replica kills fire in the
+    /// router. Each side gets a plan holding only its own events.
+    pub fn split(&self) -> (FaultPlan, FaultPlan) {
+        let (mut engine, mut router) = (Vec::new(), Vec::new());
+        for e in &self.events {
+            match e.kind {
+                FaultKind::KillReplica { .. } => router.push(*e),
+                _ => engine.push(*e),
+            }
+        }
+        (FaultPlan::new(engine), FaultPlan::new(router))
+    }
+
+    /// Parse a plan spec: comma-separated events of the forms
+    /// `sampler:<id>@<iter>`, `replica:<id>@<n>`, `poison@<iter>`.
+    /// E.g. `sampler:0@5,replica:1@8,poison@3`.
+    pub fn parse(spec: &str) -> crate::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (head, at) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault `{part}`: missing `@<when>`"))?;
+            let at: u64 = at
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault `{part}`: bad trigger `{at}`"))?;
+            let kind = match head.split_once(':') {
+                Some(("sampler", id)) => FaultKind::KillSampler {
+                    sampler: id.parse().map_err(|_| {
+                        anyhow::anyhow!("fault `{part}`: bad sampler id `{id}`")
+                    })?,
+                },
+                Some(("replica", id)) => FaultKind::KillReplica {
+                    replica: id.parse().map_err(|_| {
+                        anyhow::anyhow!("fault `{part}`: bad replica id `{id}`")
+                    })?,
+                },
+                None if head == "poison" => FaultKind::PoisonLock,
+                _ => anyhow::bail!(
+                    "fault `{part}`: expected sampler:<id>@<iter>, \
+                     replica:<id>@<n>, or poison@<iter>"
+                ),
+            };
+            plan.push(at, kind);
+        }
+        Ok(plan)
+    }
+
+    /// Validate the plan against the deployment it will run in: every
+    /// sampler id must be < `num_samplers` and every replica id <
+    /// `replicas` (with at least 2 replicas, or the kill has no survivor
+    /// to fail over to). A plan that cannot fire must error loudly at
+    /// startup — a silently no-op injection makes a chaos gate vacuous.
+    pub fn validate(&self, num_samplers: usize, replicas: usize) -> crate::Result<()> {
+        for e in &self.events {
+            match e.kind {
+                FaultKind::KillSampler { sampler } => anyhow::ensure!(
+                    sampler < num_samplers,
+                    "chaos plan kills sampler {sampler} but only {num_samplers} \
+                     sampler(s) exist"
+                ),
+                FaultKind::KillReplica { replica } => {
+                    anyhow::ensure!(
+                        replicas >= 2,
+                        "chaos plan kills replica {replica} but a single-replica \
+                         deployment has no survivor (use --replicas 2+)"
+                    );
+                    anyhow::ensure!(
+                        replica < replicas,
+                        "chaos plan kills replica {replica} but only {replicas} \
+                         replica(s) exist"
+                    );
+                }
+                FaultKind::PoisonLock => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Render back to the `parse` spec format (for logs and reports).
+    pub fn render(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::KillSampler { sampler } => {
+                    format!("sampler:{sampler}@{}", e.at)
+                }
+                FaultKind::KillReplica { replica } => {
+                    format!("replica:{replica}@{}", e.at)
+                }
+                FaultKind::PoisonLock => format!("poison@{}", e.at),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        let plan = FaultPlan::parse("sampler:2@5, replica:1@8,poison@3").unwrap();
+        assert_eq!(plan.events().len(), 3);
+        assert_eq!(plan.render(), "sampler:2@5,replica:1@8,poison@3");
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent { at: 5, kind: FaultKind::KillSampler { sampler: 2 } }
+        );
+        assert_eq!(
+            plan.events()[1],
+            FaultEvent { at: 8, kind: FaultKind::KillReplica { replica: 1 } }
+        );
+        assert_eq!(plan.events()[2], FaultEvent { at: 3, kind: FaultKind::PoisonLock });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("sampler:0").is_err());
+        assert!(FaultPlan::parse("sampler:x@3").is_err());
+        assert!(FaultPlan::parse("gpu:0@3").is_err());
+        assert!(FaultPlan::parse("poison@soon").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn take_due_fires_each_event_once_in_progress_order() {
+        let mut plan = FaultPlan::parse("sampler:0@2,sampler:1@4,poison@2").unwrap();
+        let all = |_: &FaultKind| true;
+        assert!(plan.take_due(1, all).is_empty());
+        let due = plan.take_due(2, all);
+        assert_eq!(
+            due,
+            vec![FaultKind::KillSampler { sampler: 0 }, FaultKind::PoisonLock]
+        );
+        assert!(plan.take_due(3, all).is_empty(), "already fired");
+        assert_eq!(plan.take_due(10, all), vec![FaultKind::KillSampler { sampler: 1 }]);
+    }
+
+    #[test]
+    fn validate_rejects_unfireable_plans() {
+        let plan = FaultPlan::parse("sampler:1@2,replica:1@4").unwrap();
+        assert!(plan.validate(2, 2).is_ok());
+        assert!(plan.validate(1, 2).is_err(), "sampler 1 of 1");
+        assert!(plan.validate(2, 1).is_err(), "replica kill needs a survivor");
+        let lone = FaultPlan::parse("replica:0@1").unwrap();
+        assert!(lone.validate(4, 1).is_err(), "no survivor");
+        assert!(lone.validate(4, 2).is_ok());
+    }
+
+    #[test]
+    fn split_partitions_engine_and_router_events() {
+        let plan = FaultPlan::parse("sampler:0@1,replica:1@2,poison@3").unwrap();
+        let (engine, router) = plan.split();
+        assert_eq!(engine.events().len(), 2);
+        assert_eq!(router.events().len(), 1);
+        assert!(matches!(router.events()[0].kind, FaultKind::KillReplica { replica: 1 }));
+    }
+}

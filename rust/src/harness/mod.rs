@@ -2,6 +2,7 @@
 //! (DESIGN.md §4 maps each to its modules). Every driver returns a
 //! [`Report`] (markdown + JSON series) and can write it under `results/`.
 
+pub mod chaos;
 pub mod cluster;
 pub mod e2e;
 pub mod exactness;
@@ -58,11 +59,13 @@ impl Effort {
 /// verified speculative decoding vs draft window size; `overlap`:
 /// measured-vs-simulated decision-plane overlap under the pipelined
 /// executor; `cluster`: data-parallel replicas × routing policy × traffic
-/// behind the decision-plane-aware router).
+/// behind the decision-plane-aware router; `chaos`: injected sampler /
+/// replica / lock faults vs the recovery hard bar — bit-identical streams
+/// under every fault plan).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst", "specdec",
-    "overlap", "cluster",
+    "overlap", "cluster", "chaos",
 ];
 
 /// Run one experiment by id.
@@ -87,6 +90,7 @@ pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
         "fig13" => exactness::fig13(effort),
         "overlap" => overlap::overlap(effort),
         "cluster" => cluster::cluster(effort),
+        "chaos" => chaos::chaos(effort),
         other => anyhow::bail!("unknown experiment {other}"),
     })
 }

@@ -51,6 +51,7 @@ pub mod cluster;
 pub mod config;
 pub mod decision;
 pub mod engine;
+pub mod fault;
 pub mod harness;
 pub mod metrics;
 pub mod ringbuf;

@@ -43,6 +43,11 @@ const SPECS: &[OptSpec] = &[
     OptSpec::flag("shared_samplers", "one shared sampler pool for the whole fleet (serve)"),
     OptSpec::value("prefill_replicas", "DistServe-style split: prefill-only replicas (serve)"),
     OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token (handoff)"),
+    OptSpec::value(
+        "chaos",
+        "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (serve)",
+    ),
+    OptSpec::flag("no_failover", "fail the run on replica death instead of requeueing (serve)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),
     OptSpec::flag("full", "full effort (paper-scale sweeps)"),
     OptSpec::flag("help", "show help"),
@@ -89,6 +94,12 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
     let mut ccfg = ClusterConfig::default();
     ccfg.apply_args(args)?;
     ccfg.idle_poll_us = cfg.idle_poll_us;
+    if let Some(spec) = args.get("chaos") {
+        // fail loudly on a plan that cannot fire (wrong sampler/replica
+        // ids) — a silently no-op injection makes a chaos run vacuous
+        simple_serve::fault::FaultPlan::parse(spec)?
+            .validate(cfg.sampler.num_samplers, ccfg.replicas)?;
+    }
 
     let manifest = Manifest::load(&default_artifacts_dir())?;
     if ccfg.replicas > 1 || ccfg.prefill_replicas > 0 {
@@ -130,7 +141,15 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
             engine.spec_accepted, engine.spec_proposed, engine.spec_windows
         );
     }
-    let (_, stats) = engine.shutdown();
+    let (recorder, stats) = engine.shutdown();
+    if recorder.recoveries() > 0 {
+        println!(
+            "fault recovery: {} sampler respawn(s), {:.2} ms recovery time \
+             (streams bit-identical to the fault-free run)",
+            recorder.recoveries(),
+            recorder.recovery_s() * 1e3
+        );
+    }
     let decisions: u64 = stats.iter().map(|s| s.decisions).sum();
     let fast: u64 = stats.iter().map(|s| s.fast_path_hits).sum();
     if decisions > 0 {
@@ -218,6 +237,15 @@ fn serve_cluster(
         );
     }
     println!("fleet stream digest: {:016x}", report.stream_digest());
+    if report.recorder.recoveries() > 0 {
+        println!(
+            "fault recovery: {} failover(s)/respawn(s), {} sequence(s) requeued, \
+             {:.2} ms recovery time",
+            report.recorder.recoveries(),
+            report.requeued,
+            report.recorder.recovery_s() * 1e3
+        );
+    }
     let decisions: u64 = report.sampler_stats.iter().map(|s| s.decisions).sum();
     if decisions > 0 {
         println!(

@@ -42,6 +42,14 @@ pub struct Recorder {
     /// Engine-thread seconds spent blocked waiting on decisions (the
     /// exposed, non-overlapped part of the decision plane).
     exposed_wait_s: f64,
+    /// Fault-recovery accounting (DESIGN.md §10): respawned sampler
+    /// workers / failed-over replicas, and the wall seconds the recovery
+    /// machinery spent rebuilding state — the latency a fault-free run
+    /// would not have paid. TTFT/TPOT tails already absorb these pauses
+    /// (requeued sequences keep their original arrival stamps); the
+    /// explicit counters make the recovery cost itself visible.
+    recoveries: u64,
+    recovery_s: f64,
     /// Observation horizon for throughput/utilization.
     t_start: f64,
     t_end: f64,
@@ -176,6 +184,25 @@ impl Recorder {
         }
     }
 
+    /// Account fault recoveries: `n` repaired failures (sampler respawns,
+    /// replica failovers) taking `secs` of recovery work in total.
+    pub fn on_recovery(&mut self, n: u64, secs: f64) {
+        self.recoveries += n;
+        if secs > 0.0 {
+            self.recovery_s += secs;
+        }
+    }
+
+    /// Repaired-failure count recorded so far.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    /// Total recovery seconds recorded so far.
+    pub fn recovery_s(&self) -> f64 {
+        self.recovery_s
+    }
+
     /// Measured overlap between decision work and GPU stages: how much of
     /// the decision plane's busy time ran under a forward, and how big the
     /// remaining last-stage bubble was.
@@ -252,6 +279,8 @@ impl Recorder {
         self.stage_gpu.extend_from_slice(&other.stage_gpu);
         self.stage_decision.extend_from_slice(&other.stage_decision);
         self.exposed_wait_s += other.exposed_wait_s;
+        self.recoveries += other.recoveries;
+        self.recovery_s += other.recovery_s;
         if other.horizon_init {
             self.extend_horizon(other.t_start);
             self.extend_horizon(other.t_end);
@@ -397,6 +426,8 @@ impl Recorder {
             throughput: self.throughput(),
             ttft: self.ttft_summary(),
             tpot: self.tpot_summary(),
+            recoveries: self.recoveries,
+            recovery_s: self.recovery_s,
         }
     }
 }
@@ -411,6 +442,10 @@ pub struct ServingSummary {
     pub throughput: f64,
     pub ttft: Summary,
     pub tpot: Summary,
+    /// Repaired failures (sampler respawns + replica failovers).
+    pub recoveries: u64,
+    /// Wall seconds spent in recovery work.
+    pub recovery_s: f64,
 }
 
 impl ServingSummary {
@@ -423,6 +458,8 @@ impl ServingSummary {
             ("throughput_tok_s", Json::Num(self.throughput)),
             ("ttft", self.ttft.to_json()),
             ("tpot", self.tpot.to_json()),
+            ("recoveries", Json::Num(self.recoveries as f64)),
+            ("recovery_s", Json::Num(self.recovery_s)),
         ])
     }
 }

@@ -354,6 +354,19 @@ pub struct ClusterSimConfig {
     /// Simulated KV-transfer cost per context token for the handoff,
     /// seconds (mirrors the router's `kv_transfer_us_per_token`).
     pub kv_transfer_s_per_token: f64,
+    /// Fault/recovery timing model (DESIGN.md §10): replica
+    /// `fail_replica` dies at this simulated time; its unfinished
+    /// requests are requeued onto the survivors after `recovery_delay_s`
+    /// and recompute from scratch — the timing mirror of the router's
+    /// failover sweep. `None` = fault-free. Unified fleets only (the
+    /// split-mode two-phase replay has no single death time per request);
+    /// needs at least 2 replicas so a survivor exists.
+    pub fail_at_s: Option<f64>,
+    /// Which replica the fault kills.
+    pub fail_replica: usize,
+    /// Detection + requeue latency the orphaned requests pay before a
+    /// survivor sees them (mirrors the sweep's failover pause).
+    pub recovery_delay_s: f64,
 }
 
 impl Default for ClusterSimConfig {
@@ -362,6 +375,9 @@ impl Default for ClusterSimConfig {
             replicas: 1,
             prefill_replicas: 0,
             kv_transfer_s_per_token: 2e-6,
+            fail_at_s: None,
+            fail_replica: 0,
+            recovery_delay_s: 0.05,
         }
     }
 }
@@ -372,6 +388,8 @@ pub struct ClusterSimResult {
     pub recorder: Recorder,
     pub per_replica: Vec<SimResult>,
     pub preemptions: u64,
+    /// Requests the fault model requeued onto survivors (0 = fault-free).
+    pub requeued: usize,
 }
 
 impl ClusterSimResult {
@@ -402,20 +420,62 @@ pub fn simulate_cluster(
     let mut recorder = Recorder::new();
     let mut preemptions = 0u64;
     if ccfg.prefill_replicas == 0 {
-        for rep in 0..ccfg.replicas {
-            let share: Vec<SimRequest> = requests
+        let mut shares: Vec<Vec<SimRequest>> = (0..ccfg.replicas)
+            .map(|rep| {
+                requests
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % ccfg.replicas == rep)
+                    .map(|(_, r)| r.clone())
+                    .collect()
+            })
+            .collect();
+        // Fault/recovery timing model: probe the doomed replica fault-free
+        // to learn which of its requests outlive the death time; those are
+        // requeued onto the survivors (full recompute — the router's
+        // deterministic replay) arriving after the recovery delay, and the
+        // dead replica keeps only the work it finished in time.
+        let mut requeued = 0usize;
+        if let Some(fail_t) = ccfg.fail_at_s {
+            assert!(
+                ccfg.replicas >= 2 && ccfg.fail_replica < ccfg.replicas,
+                "the fault model needs a surviving replica"
+            );
+            let probe = simulate(cfg, &shares[ccfg.fail_replica]);
+            let (kept, lost): (Vec<SimRequest>, Vec<SimRequest>) = shares
+                [ccfg.fail_replica]
                 .iter()
-                .enumerate()
-                .filter(|(i, _)| i % ccfg.replicas == rep)
-                .map(|(_, r)| r.clone())
-                .collect();
-            let res = simulate(cfg, &share);
+                .cloned()
+                .partition(|r| {
+                    probe.recorder.finish_time(r.id).is_some_and(|t| t <= fail_t)
+                });
+            requeued = lost.len();
+            shares[ccfg.fail_replica] = kept;
+            let survivors: Vec<usize> =
+                (0..ccfg.replicas).filter(|&r| r != ccfg.fail_replica).collect();
+            for (j, mut r) in lost.into_iter().enumerate() {
+                // the request queues from its ORIGINAL arrival (merge takes
+                // the min), but a survivor only serves it after the fault +
+                // recovery delay — TTFT/TPOT absorb the pause, exactly like
+                // the measured router's requeue accounting
+                recorder.on_arrival(r.id, r.arrival);
+                r.arrival = r.arrival.max(fail_t + ccfg.recovery_delay_s);
+                shares[survivors[j % survivors.len()]].push(r);
+            }
+            recorder.on_recovery(1, ccfg.recovery_delay_s);
+        }
+        for share in &shares {
+            let res = simulate(cfg, share);
             recorder.merge(&res.recorder);
             preemptions += res.preemptions;
             per_replica.push(res);
         }
-        return ClusterSimResult { recorder, per_replica, preemptions };
+        return ClusterSimResult { recorder, per_replica, preemptions, requeued };
     }
+    assert!(
+        ccfg.fail_at_s.is_none(),
+        "the fault model composes with unified fleets only"
+    );
     assert!(
         ccfg.prefill_replicas < ccfg.replicas,
         "the split needs at least one decode replica"
@@ -467,7 +527,7 @@ pub fn simulate_cluster(
         preemptions += res.preemptions;
         per_replica.push(res);
     }
-    ClusterSimResult { recorder, per_replica, preemptions }
+    ClusterSimResult { recorder, per_replica, preemptions, requeued: 0 }
 }
 
 /// Convenience: build SimRequests from the workload generator's trace.
@@ -772,6 +832,36 @@ mod tests {
         assert!(
             fast.recorder.tpot_summary().max <= res.recorder.tpot_summary().max,
             "transfer cost must widen the worst handoff gap"
+        );
+    }
+
+    #[test]
+    fn cluster_fault_model_requeues_without_losing_tokens() {
+        // DESIGN.md §10: a replica death mid-run loses capacity and adds a
+        // recovery pause, never tokens — the simulated mirror of the
+        // router's failover sweep.
+        let reqs = requests(200, None);
+        let expected: usize = reqs.iter().map(|r| r.output_len).sum();
+        let mut scfg = cfg(DecisionMode::GpuEpilogue);
+        scfg.slots = 32;
+        let mut healthy = ClusterSimConfig::default();
+        healthy.replicas = 3;
+        let base = simulate_cluster(&scfg, &healthy, &reqs);
+        let mut faulty = healthy.clone();
+        // kill replica 1 halfway through the fault-free fleet makespan
+        faulty.fail_at_s = Some(base.recorder.summary().duration * 0.5);
+        faulty.fail_replica = 1;
+        faulty.recovery_delay_s = 0.05;
+        let res = simulate_cluster(&scfg, &faulty, &reqs);
+        assert_eq!(res.recorder.total_tokens(), expected, "failover loses no tokens");
+        assert_eq!(res.recorder.finished_requests(), 200);
+        assert!(res.requeued > 0, "a mid-run death must orphan some requests");
+        assert_eq!(res.recorder.recoveries(), 1);
+        assert!(res.recorder.recovery_s() > 0.0);
+        // lost capacity + recompute: the faulty fleet cannot finish sooner
+        assert!(
+            res.recorder.summary().duration >= base.recorder.summary().duration,
+            "a death cannot speed the fleet up"
         );
     }
 

@@ -18,6 +18,7 @@ use simple_serve::decision::shvs::{Precompute, ShvsSampler};
 use simple_serve::decision::verify::{verify_window, GrammarSlot};
 use simple_serve::decision::{DecisionPipeline, HotVocab, SamplingParams};
 use simple_serve::engine::{Engine, KvAllocator, Request, SyntheticRuntime};
+use simple_serve::fault::{FaultKind, FaultPlan};
 use simple_serve::harness::measure::{chain_views, LogitsGen};
 use simple_serve::metrics::stats::total_variation_distance;
 use simple_serve::rng::Philox;
@@ -403,7 +404,9 @@ fn prop_overlapped_executor_streams_equal_synchronous() {
 
 /// Run the same requests through a routed cluster of synthetic-plane
 /// replicas (same plane seed + sampler seed as [`synthetic_engine_streams`],
-/// so the single engine is the ground truth).
+/// so the single engine is the ground truth). `engine_faults` carries the
+/// engine-level chaos schedule (sampler kills, lock poisons); router-level
+/// replica kills ride in `ccfg.faults`.
 fn routed_streams(
     reqs: &[(Vec<u32>, usize, SamplingParams)],
     vocab: usize,
@@ -412,6 +415,7 @@ fn routed_streams(
     m: usize,
     n_mb: usize,
     spec_k: usize,
+    engine_faults: FaultPlan,
 ) -> Vec<(u64, Vec<u32>)> {
     let mut cfg = EngineConfig::default();
     cfg.sampler.variant = DecisionVariant::Offloading;
@@ -421,6 +425,7 @@ fn routed_streams(
     cfg.overlap = n_mb > 1;
     cfg.spec_k = spec_k;
     cfg.idle_poll_us = 10;
+    cfg.faults = engine_faults;
     let mut cluster = Cluster::start(&cfg, ccfg, None, 96, move |_id| {
         Ok(SyntheticRuntime::new(4, vocab, 96, plane_seed))
     });
@@ -477,7 +482,9 @@ fn prop_routed_streams_equal_single_replica() {
         ccfg.replicas = replicas;
         ccfg.policy = policy;
         ccfg.shared_samplers = rng.next_f64() < 0.5;
-        let routed = routed_streams(&reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k);
+        let routed = routed_streams(
+            &reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k, FaultPlan::default(),
+        );
         assert_eq!(
             routed, baseline,
             "policy={} replicas={replicas} shared={} m={m} spec_k={spec_k} n_mb={n_mb}",
@@ -488,13 +495,82 @@ fn prop_routed_streams_equal_single_replica() {
             // the DistServe-style split (handoff + transfer delay) must be
             // just as invisible in the tokens
             ccfg.prefill_replicas = 1;
-            let split = routed_streams(&reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k);
+            let split = routed_streams(
+                &reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k, FaultPlan::default(),
+            );
             assert_eq!(
                 split, baseline,
                 "split fleet: policy={} replicas={replicas} m={m} spec_k={spec_k}",
                 policy.name()
             );
         }
+    });
+}
+
+#[test]
+fn prop_streams_identical_under_injected_faults() {
+    // The hardening hard bar (DESIGN.md §10): for RANDOM fault plans —
+    // sampler kills, lock poisons, replica kills, in any combination —
+    // across random (replicas × m × spec_k × n_microbatches ± shared
+    // pool), recovery replays state deterministically: per-sequence token
+    // streams are bit-identical to the fault-free single-engine run, and
+    // every request still finishes.
+    props("streams identical under injected faults", 4, |rng| {
+        let vocab = 64 + rng.next_below(192) as usize;
+        let n_req = 4 + rng.next_below(4) as usize;
+        let reqs: Vec<(Vec<u32>, usize, SamplingParams)> = (0..n_req)
+            .map(|i| {
+                let plen = 1 + rng.next_below(6) as usize;
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.next_below(vocab as u64) as u32).collect();
+                let max_new = 3 + rng.next_below(10) as usize;
+                let mut params = random_params(rng, vocab);
+                params.seed = rng.next_u64() ^ ((i as u64) << 5);
+                (prompt, max_new, params)
+            })
+            .collect();
+        let plane_seed = rng.next_u64();
+        let baseline = synthetic_engine_streams(&reqs, vocab, plane_seed, 1, false, 1, 0);
+        assert_eq!(baseline.len(), n_req, "all requests finish fault-free");
+        let replicas = 1 + rng.next_below(3) as usize;
+        let m = 1 + rng.next_below(3) as usize;
+        let spec_k = rng.next_below(3) as usize;
+        let n_mb = 1 + rng.next_below(2) as usize;
+        // random fault plan: 1-2 sampler kills, maybe a poison, and (with
+        // a survivor available) maybe a replica kill
+        let mut engine_faults = FaultPlan::default();
+        for _ in 0..(1 + rng.next_below(2)) {
+            engine_faults.push(
+                rng.next_below(15),
+                FaultKind::KillSampler { sampler: rng.next_below(m as u64) as usize },
+            );
+        }
+        if rng.next_f64() < 0.4 {
+            engine_faults.push(rng.next_below(10), FaultKind::PoisonLock);
+        }
+        let mut ccfg = ClusterConfig::default();
+        ccfg.replicas = replicas;
+        ccfg.policy = RoutePolicy::ALL[rng.next_below(4) as usize];
+        ccfg.shared_samplers = rng.next_f64() < 0.5;
+        if replicas >= 2 && rng.next_f64() < 0.6 {
+            ccfg.faults.push(
+                1 + rng.next_below(n_req as u64),
+                FaultKind::KillReplica {
+                    replica: rng.next_below(replicas as u64) as usize,
+                },
+            );
+        }
+        let plan_desc =
+            format!("engine[{}] router[{}]", engine_faults.render(), ccfg.faults.render());
+        let routed =
+            routed_streams(&reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k, engine_faults);
+        assert_eq!(
+            routed, baseline,
+            "chaos {plan_desc}: policy={} replicas={replicas} shared={} m={m} \
+             spec_k={spec_k} n_mb={n_mb}",
+            ccfg.policy.name(),
+            ccfg.shared_samplers
+        );
     });
 }
 

@@ -291,12 +291,16 @@ fn preemption_mid_speculation_replays_multi_token_commits_exactly() {
 /// Drive the real engine over the synthetic data plane (closed loop).
 /// `kv_blocks = 0` sizes the cache ample (never preempts); a small value
 /// over-commits it so commits evict slots of *other* microbatches while
-/// those still have un-reaped in-flight decisions.
-fn pipelined_engine_run(
+/// those still have un-reaped in-flight decisions. `chaos` is a
+/// `FaultPlan::parse` spec ("" = fault-free); with faults the run also
+/// asserts the drain left no slot or KV-block behind and that recovery
+/// actually fired.
+fn chaos_engine_run(
     n_mb: usize,
     overlap: bool,
     kv_blocks: usize,
     spec_k: usize,
+    chaos: &str,
 ) -> (HashMap<u64, Vec<u32>>, u64) {
     let mut cfg = EngineConfig::default();
     cfg.sampler.variant = DecisionVariant::Offloading;
@@ -307,21 +311,45 @@ fn pipelined_engine_run(
     cfg.spec_k = spec_k;
     cfg.kv_blocks = kv_blocks;
     cfg.idle_poll_us = 10;
+    if !chaos.is_empty() {
+        let (engine_faults, _) =
+            simple_serve::fault::FaultPlan::parse(chaos).expect("chaos spec").split();
+        cfg.faults = engine_faults;
+    }
     let runtime = SyntheticRuntime::new(8, VOCAB, MAX_SEQ, 23);
     let mut engine = Engine::new(runtime, &cfg, None);
+    let kv_free_at_start = engine.kv_free_blocks();
     let trace = workload::generate(&TraceConfig::tiny(20, VOCAB));
     for r in trace.requests {
         engine.submit(r);
     }
-    engine.run_until_idle().expect("engine run");
+    engine.run_until_idle().expect("engine run (recovery, not failure)");
     let streams: HashMap<u64, Vec<u32>> = engine
         .take_finished()
         .into_iter()
         .map(|f| (f.request.id, f.output))
         .collect();
     let preemptions = engine.preemption_count();
-    engine.shutdown();
+    assert_eq!(engine.queue_depth(), 0, "no sequence left in a slot or queue");
+    assert_eq!(
+        engine.kv_free_blocks(),
+        kv_free_at_start,
+        "KV blocks leaked across the drain"
+    );
+    let (recorder, _) = engine.shutdown();
+    if !chaos.is_empty() {
+        assert!(recorder.recoveries() > 0, "chaos run must actually recover");
+    }
     (streams, preemptions)
+}
+
+fn pipelined_engine_run(
+    n_mb: usize,
+    overlap: bool,
+    kv_blocks: usize,
+    spec_k: usize,
+) -> (HashMap<u64, Vec<u32>>, u64) {
+    chaos_engine_run(n_mb, overlap, kv_blocks, spec_k, "")
 }
 
 #[test]
@@ -397,6 +425,72 @@ fn cluster_kv_pressure_diverts_under_preemption_churn_and_streams_match() {
         .map(|s| (s.request.id, s.output.clone()))
         .collect();
     assert_eq!(streams, want, "diversion + preemption must not change tokens");
+}
+
+// ---- fault recovery (DESIGN.md §10) ----
+
+#[test]
+fn sampler_crash_recovery_under_preemption_churn_leaks_nothing() {
+    // A sampler killed mid-run — twice, different workers — while the
+    // tight cache is preempting and re-admitting sequences: recovery must
+    // replay the dead worker's owned state exactly (streams bit-identical
+    // to the fault-free ample-cache run) and the drain must leave zero
+    // slot or KV-block leaks (asserted inside chaos_engine_run).
+    let (want, _) = pipelined_engine_run(1, false, 0, 0);
+    let (got, preempt) = chaos_engine_run(1, false, 7, 0, "sampler:0@5,sampler:1@14");
+    assert!(preempt > 0, "tight cache must churn under the faults");
+    assert_eq!(got, want, "sampler crashes must not change tokens");
+}
+
+#[test]
+fn sampler_crash_recovery_composes_with_overlap_and_speculation() {
+    // The worst engine shape for recovery: in-flight microbatches with
+    // reaped-but-unapplied verdicts, speculative windows mid-flight, and
+    // a sampler kill landing among them — plus a poisoned lock for good
+    // measure. Same tokens, nothing leaked.
+    let (want, _) = pipelined_engine_run(1, false, 0, 0);
+    let (got, _) = chaos_engine_run(2, true, 0, 2, "sampler:1@6,poison@9");
+    assert_eq!(got, want, "chaos under overlap+spec must not change tokens");
+}
+
+#[test]
+fn replica_death_requeues_onto_survivor_and_streams_match() {
+    // Kill replica 1 mid-burst: the router's failure sweep must requeue
+    // its outstanding sequences onto replica 0 through the resume path —
+    // every request still finishes, streams bit-identical to the single
+    // ample engine, and the failover is visible in the report counters.
+    use simple_serve::cluster::{Cluster, ClusterConfig, RoutePolicy};
+    let (want, _) = pipelined_engine_run(1, false, 0, 0);
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    cfg.sampler.seed = 41;
+    cfg.idle_poll_us = 10;
+    let mut ccfg = ClusterConfig::default();
+    ccfg.replicas = 2;
+    ccfg.policy = RoutePolicy::RoundRobin;
+    let (_, router_faults) = simple_serve::fault::FaultPlan::parse("replica:1@6")
+        .expect("chaos spec")
+        .split();
+    ccfg.faults = router_faults;
+    let mut cluster = Cluster::start(&cfg, &ccfg, None, MAX_SEQ, |_id| {
+        Ok(SyntheticRuntime::new(8, VOCAB, MAX_SEQ, 23))
+    });
+    let trace = workload::generate(&TraceConfig::tiny(20, VOCAB));
+    cluster.run(trace.requests).expect("failover, not failure");
+    let report = cluster.shutdown().expect("cluster shutdown");
+    assert_eq!(report.failovers, 1, "exactly one replica death");
+    assert!(report.requeued > 0, "the dead replica had outstanding work");
+    assert_eq!(report.recorder.recoveries(), 1);
+    let streams: HashMap<u64, Vec<u32>> = report
+        .finished
+        .iter()
+        .map(|s| (s.request.id, s.output.clone()))
+        .collect();
+    assert_eq!(streams, want, "failover requeue must not change tokens");
+    // the surviving replica carried the whole fleet's final state
+    assert_eq!(report.per_replica.len(), 1, "dead replica skipped at join");
+    assert_eq!(report.per_replica[0].id, 0);
 }
 
 #[test]
