@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke bench ci
+.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke bench bench-check ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -27,9 +27,9 @@ cluster-smoke: build
 	cargo run --release -- figures --experiments cluster
 
 # The chaos experiment at smoke effort (DESIGN.md §10): injected sampler
-# kills / lock poisons / replica kills; the experiment asserts every fleet
-# digest equals the fault-free baseline, so a recovery bug fails this
-# target loudly.
+# kills (including the legacy poison@ syntax, now a clean worker kill) /
+# replica kills; the experiment asserts every fleet digest equals the
+# fault-free baseline, so a recovery bug fails this target loudly.
 chaos-smoke: build
 	cargo run --release -- figures --experiments chaos
 
@@ -38,6 +38,17 @@ chaos-smoke: build
 # BENCH_decision.json so throughput/P95 are tracked across PRs.
 bench: build
 	cargo bench --bench decision_micro -- --quick --json BENCH_decision.json
+
+# Perf-regression gate (DESIGN.md §11): re-run the gated cluster group
+# into a scratch file and compare the shared-pool cases against the
+# committed BENCH_decision.json — a >15% items/s drop fails. Must run
+# BEFORE `bench`, which overwrites the committed baseline in place. A
+# provisional (unmeasured) baseline warns and passes; promote real
+# numbers with `python python/bench_check.py BENCH_decision.json
+# BENCH_decision.fresh.json --promote`.
+bench-check: build
+	cargo bench --bench decision_micro -- --quick cluster --json BENCH_decision.fresh.json
+	python python/bench_check.py BENCH_decision.json BENCH_decision.fresh.json
 
 # What .github/workflows/ci.yml runs: fmt + clippy gates, release build +
 # tests, the cluster and chaos smokes, the bench JSON, python kernel/model
@@ -49,5 +60,6 @@ ci:
 	cargo test -q --release
 	$(MAKE) cluster-smoke
 	$(MAKE) chaos-smoke
+	$(MAKE) bench-check
 	$(MAKE) bench
 	python -m pytest python/tests -q

@@ -143,13 +143,13 @@ fn main() {
         // exposed: forward, then block on decisions (synchronous engine)
         {
             let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
-            for s in 0..B as u64 {
-                svc.register(s, &[1, 2, 3], &params);
-            }
+            let handles: Vec<_> =
+                (0..B as u64).map(|s| svc.register(s, &[1, 2, 3], &params)).collect();
             let mut it = 0u64;
             results.push(run_case("overlap/exposed_sync", &cfg, Some(1.0), || {
                 let view = gen.view(B, it, 1); // the "forward"
-                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let recs = handles.iter().cloned().map(Some).collect();
+                svc.submit(IterationTask::single(it, view, make_columns(it), recs, Vec::new()));
                 let (d, _) = svc.collect(it, B);
                 black_box(d.len());
                 it += 1;
@@ -161,14 +161,14 @@ fn main() {
         // iteration's decisions (one microbatch in flight)
         {
             let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
-            for s in 0..B as u64 {
-                svc.register(s, &[1, 2, 3], &params);
-            }
+            let handles: Vec<_> =
+                (0..B as u64).map(|s| svc.register(s, &[1, 2, 3], &params)).collect();
             let mut it = 0u64;
             let mut outstanding: Option<u64> = None;
             results.push(run_case("overlap/hidden_async", &cfg, Some(1.0), || {
                 let view = gen.view(B, it, 1); // the "forward"
-                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let recs = handles.iter().cloned().map(Some).collect();
+                svc.submit(IterationTask::single(it, view, make_columns(it), recs, Vec::new()));
                 if let Some(prev) = outstanding.replace(it) {
                     let (d, _) = svc.collect(prev, B);
                     black_box(d.len());
@@ -211,12 +211,11 @@ fn main() {
         {
             let a = SamplerService::start(&svc_cfg, None, 1 << 20);
             let b = SamplerService::start(&svc_cfg, None, 1 << 20);
-            for s in 0..HEAVY as u64 {
-                a.register(s, &[1, 2, 3], &params);
-            }
-            for s in 0..LIGHT as u64 {
-                b.register(HEAVY as u64 + s, &[1, 2, 3], &params);
-            }
+            let ha: Vec<_> =
+                (0..HEAVY as u64).map(|s| a.register(s, &[1, 2, 3], &params)).collect();
+            let hb: Vec<_> = (0..LIGHT as u64)
+                .map(|s| b.register(HEAVY as u64 + s, &[1, 2, 3], &params))
+                .collect();
             let mut it = 0u64;
             results.push(run_case(
                 "cluster/per_replica_pool",
@@ -225,11 +224,14 @@ fn main() {
                 || {
                     let va = gen.view(HEAVY, it, 1);
                     let vb = gen.view(LIGHT, it, 1);
-                    a.submit(IterationTask::single(it, va, cols(HEAVY, 0, it), Vec::new()));
+                    let ra = ha.iter().cloned().map(Some).collect();
+                    let rb = hb.iter().cloned().map(Some).collect();
+                    a.submit(IterationTask::single(it, va, cols(HEAVY, 0, it), ra, Vec::new()));
                     b.submit(IterationTask::single(
                         it,
                         vb,
                         cols(LIGHT, HEAVY as u64, it),
+                        rb,
                         Vec::new(),
                     ));
                     let (da, _) = a.collect(it, HEAVY);
@@ -247,9 +249,9 @@ fn main() {
         {
             let pool_cfg = SamplerConfig { num_samplers: 2, ..svc_cfg.clone() };
             let svc = SamplerService::start(&pool_cfg, None, 1 << 20);
-            for s in 0..(HEAVY + LIGHT) as u64 {
-                svc.register(s, &[1, 2, 3], &params);
-            }
+            let hs: Vec<_> = (0..(HEAVY + LIGHT) as u64)
+                .map(|s| svc.register(s, &[1, 2, 3], &params))
+                .collect();
             let mut it = 0u64;
             results.push(run_case(
                 "cluster/shared_pool",
@@ -259,11 +261,14 @@ fn main() {
                     let va = gen.view(HEAVY, it, 1);
                     let vb = gen.view(LIGHT, it, 1);
                     let (ta, tb) = ((1u64 << 48) | it, (2u64 << 48) | it);
-                    svc.submit(IterationTask::single(ta, va, cols(HEAVY, 0, it), Vec::new()));
+                    let ra = hs[..HEAVY].iter().cloned().map(Some).collect();
+                    let rb = hs[HEAVY..].iter().cloned().map(Some).collect();
+                    svc.submit(IterationTask::single(ta, va, cols(HEAVY, 0, it), ra, Vec::new()));
                     svc.submit(IterationTask::single(
                         tb,
                         vb,
                         cols(LIGHT, HEAVY as u64, it),
+                        rb,
                         Vec::new(),
                     ));
                     let (da, _) = svc.collect(ta, HEAVY);
@@ -273,6 +278,122 @@ fn main() {
                 },
             ));
             svc.shutdown();
+        }
+
+        // --- fleet scale sweep: the contention cliff (DESIGN.md §11) ---
+        // R submitter threads (one per simulated replica) each publish a
+        // B-column iteration into the pool and block on its collect, every
+        // bench iteration, at equal TOTAL sampler count (R) in both modes.
+        // Under the old global service mutex the shared pool fell off a
+        // cliff as R grew; the lock-free pool's bar is shared-pool
+        // per-replica throughput within ~10% of per-replica pools at every
+        // R (items/s = decided columns/s across the fleet, so compare
+        // shared_pool_r{R} against per_replica_pool_r{R} directly).
+        const SB: usize = 4;
+        let scale_cols = |base: u64, iter: u64| -> Vec<ColumnMeta> {
+            (0..SB)
+                .map(|c| ColumnMeta { col: c, seq_id: base + c as u64, iteration: iter })
+                .collect()
+        };
+        for r in [1usize, 2, 4, 8] {
+            // stranded: R independent m=1 services
+            {
+                let svcs: Vec<_> = (0..r)
+                    .map(|_| SamplerService::start(&svc_cfg, None, 1 << 20))
+                    .collect();
+                let handles: Vec<Vec<_>> = svcs
+                    .iter()
+                    .enumerate()
+                    .map(|(ri, svc)| {
+                        (0..SB as u64)
+                            .map(|s| {
+                                svc.register(ri as u64 * SB as u64 + s, &[1, 2, 3], &params)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let mut it = 0u64;
+                results.push(run_case(
+                    &format!("cluster/per_replica_pool_r{r}"),
+                    &cfg,
+                    Some((r * SB) as f64),
+                    || {
+                        let now = it;
+                        std::thread::scope(|scope| {
+                            for (ri, svc) in svcs.iter().enumerate() {
+                                let hs = &handles[ri];
+                                let gen = &gen;
+                                scope.spawn(move || {
+                                    let base = ri as u64 * SB as u64;
+                                    let view = gen.view(SB, now, 1);
+                                    let recs = hs.iter().cloned().map(Some).collect();
+                                    svc.submit(IterationTask::single(
+                                        now,
+                                        view,
+                                        scale_cols(base, now),
+                                        recs,
+                                        Vec::new(),
+                                    ));
+                                    let (d, _) = svc.collect(now, SB);
+                                    black_box(d.len());
+                                });
+                            }
+                        });
+                        it += 1;
+                    },
+                ));
+                for svc in svcs {
+                    svc.shutdown();
+                }
+            }
+
+            // pooled: one m=R service shared by all R replicas, task ids
+            // namespaced per replica (Engine::with_shared_service idiom)
+            {
+                let pool_cfg = SamplerConfig { num_samplers: r, ..svc_cfg.clone() };
+                let svc = SamplerService::start(&pool_cfg, None, 1 << 20);
+                let handles: Vec<Vec<_>> = (0..r)
+                    .map(|ri| {
+                        (0..SB as u64)
+                            .map(|s| {
+                                svc.register(ri as u64 * SB as u64 + s, &[1, 2, 3], &params)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let mut it = 0u64;
+                results.push(run_case(
+                    &format!("cluster/shared_pool_r{r}"),
+                    &cfg,
+                    Some((r * SB) as f64),
+                    || {
+                        let now = it;
+                        let svc = &svc;
+                        std::thread::scope(|scope| {
+                            for (ri, hs) in handles.iter().enumerate() {
+                                let gen = &gen;
+                                scope.spawn(move || {
+                                    let base = ri as u64 * SB as u64;
+                                    let task = ((ri as u64 + 1) << 48) | now;
+                                    let view = gen.view(SB, now, 1);
+                                    let recs = hs.iter().cloned().map(Some).collect();
+                                    svc.submit(IterationTask::single(
+                                        task,
+                                        view,
+                                        scale_cols(base, now),
+                                        recs,
+                                        Vec::new(),
+                                    ));
+                                    let (d, _) = svc.collect(task, SB);
+                                    black_box(d.len());
+                                });
+                            }
+                        });
+                        it += 1;
+                    },
+                ));
+                svc.shutdown();
+            }
         }
     }
 
@@ -319,6 +440,15 @@ fn main() {
                 black_box(c.try_pop().ok());
             }
         }));
+        // the shared-pool substrate: single-threaded push/pop cost of the
+        // lock-free MPMC ring (per-slot lap counters + CAS head/tail)
+        results.push(run_case("ringbuf/mpmc_push_pop_1k", &cfg, Some(1000.0), || {
+            let ring = simple_serve::ringbuf::mpmc::Ring::<u64>::new(256);
+            for i in 0..1000u64 {
+                ring.try_push(i).ok();
+                black_box(ring.try_pop().ok());
+            }
+        }));
     }
 
     // --- zero-copy sharded reads ---
@@ -339,10 +469,11 @@ fn main() {
 
     // --- chaos: sampler crash-recovery pause vs the healthy collect ---
     // Each `recovery_pause` iteration kills one sampler just before the
-    // task, so the collect pays detection (the starvation timeout) +
-    // respawn + registry replay + task resubmission — the recovery pause
+    // task, so the collect pays detection (the dead-flag sweep) + claim
+    // release + shard-message resubmission + respawn — the recovery pause
     // `serve --chaos` runs pay, measured in isolation against the same
-    // submit/collect loop with no faults.
+    // submit/collect loop with no faults (lazy state rebuild from the
+    // replay records lands on the next decide, not here).
     if want("chaos") {
         use simple_serve::config::SamplerConfig;
         use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
@@ -360,13 +491,13 @@ fn main() {
         };
         {
             let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
-            for s in 0..B as u64 {
-                svc.register(s, &[1, 2, 3], &params);
-            }
+            let handles: Vec<_> =
+                (0..B as u64).map(|s| svc.register(s, &[1, 2, 3], &params)).collect();
             let mut it = 0u64;
             results.push(run_case("chaos/healthy_collect", &cfg, Some(1.0), || {
                 let view = gen.view(B, it, 1);
-                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let recs = handles.iter().cloned().map(Some).collect();
+                svc.submit(IterationTask::single(it, view, make_columns(it), recs, Vec::new()));
                 let (d, _) = svc.collect(it, B);
                 black_box(d.len());
                 it += 1;
@@ -375,15 +506,15 @@ fn main() {
         }
         {
             let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
-            for s in 0..B as u64 {
-                svc.register(s, &[1, 2, 3], &params);
-            }
+            let handles: Vec<_> =
+                (0..B as u64).map(|s| svc.register(s, &[1, 2, 3], &params)).collect();
             let mut it = 0u64;
             results.push(run_case("chaos/recovery_pause", &cfg, Some(1.0), || {
                 // alternate victims so the crash-loop breaker never trips
                 svc.inject_sampler_crash((it % 2) as usize);
                 let view = gen.view(B, it, 1);
-                svc.submit(IterationTask::single(it, view, make_columns(it), Vec::new()));
+                let recs = handles.iter().cloned().map(Some).collect();
+                svc.submit(IterationTask::single(it, view, make_columns(it), recs, Vec::new()));
                 let (d, _) = svc.collect(it, B);
                 black_box(d.len());
                 it += 1;

@@ -68,7 +68,7 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token"),
     OptSpec::value(
         "chaos",
-        "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (DESIGN.md §10)",
+        "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (legacy; kills worker 0) (DESIGN.md §10)",
     ),
     OptSpec::flag("no_failover", "fail the run on replica death instead of requeueing"),
     OptSpec::flag("quick", "small run"),

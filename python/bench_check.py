@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Gate decision-plane bench throughput against the committed baseline.
+
+`make bench-check` runs the microbenchmarks into a fresh JSON file and
+compares the gated cases (the shared-pool cluster group) against the
+committed ``BENCH_decision.json``: a drop in ``items_per_sec`` beyond the
+tolerance (default 15%) fails the build, so a regression that re-grows
+the shared-pool contention cliff is caught at PR time.
+
+The committed baseline may be *provisional* — synthesized on a machine
+that could not run the benches (marked by a ``_baseline/provisional``
+entry, or by gated cases carrying ``null`` throughput). A provisional
+baseline never fails the gate; it prints the fresh numbers and asks to be
+promoted. Promote real numbers with::
+
+    python python/bench_check.py BENCH_decision.json fresh.json --promote
+
+which replaces the baseline file with the fresh results (dropping the
+provisional marker), arming the gate for subsequent runs.
+
+Stdlib only — no third-party imports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+# Case-name prefixes the gate enforces. Everything else is informational.
+GATED_PREFIXES = ("cluster/shared_pool",)
+PROVISIONAL_MARKER = "_baseline/provisional"
+DEFAULT_TOLERANCE = 0.15
+
+
+def load_cases(path: str) -> dict[str, float | None]:
+    """name -> items_per_sec (None when the case reported no rate)."""
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a JSON array of bench cases")
+    out: dict[str, float | None] = {}
+    for case in data:
+        name = case.get("name")
+        if not isinstance(name, str):
+            raise SystemExit(f"{path}: bench case without a name: {case!r}")
+        out[name] = case.get("items_per_sec")
+    return out
+
+
+def gated(cases: dict[str, float | None]) -> dict[str, float | None]:
+    return {
+        name: ips
+        for name, ips in cases.items()
+        if any(name.startswith(p) for p in GATED_PREFIXES)
+    }
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON (BENCH_decision.json)")
+    ap.add_argument("fresh", help="freshly measured bench JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=DEFAULT_TOLERANCE,
+        help="allowed fractional items/s drop before failing (default 0.15)",
+    )
+    ap.add_argument(
+        "--promote",
+        action="store_true",
+        help="replace the baseline with the fresh results and exit",
+    )
+    args = ap.parse_args(argv)
+
+    fresh = load_cases(args.fresh)
+    if args.promote:
+        if not gated(fresh):
+            print(f"refusing to promote {args.fresh}: no gated cases in it")
+            return 1
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"promoted {args.fresh} -> {args.baseline} "
+              f"({len(fresh)} cases, gate armed)")
+        return 0
+
+    base = load_cases(args.baseline)
+    provisional = PROVISIONAL_MARKER in base or all(
+        ips is None for ips in gated(base).values()
+    )
+
+    base_gated = {n: v for n, v in gated(base).items() if n != PROVISIONAL_MARKER}
+    fresh_gated = gated(fresh)
+    failures: list[str] = []
+    rows: list[str] = []
+    for name in sorted(set(base_gated) | set(fresh_gated)):
+        b, f = base_gated.get(name), fresh_gated.get(name)
+        if name not in fresh_gated:
+            failures.append(f"{name}: gated case missing from fresh run")
+            continue
+        if name not in base_gated:
+            rows.append(f"  {name}: new case (no baseline), {f:.1f} items/s")
+            continue
+        if b is None or f is None:
+            rows.append(f"  {name}: no throughput to compare")
+            continue
+        delta = (f - b) / b if b > 0 else 0.0
+        verdict = "OK"
+        if delta < -args.tolerance:
+            verdict = "REGRESSED"
+            failures.append(
+                f"{name}: {f:.1f} items/s vs baseline {b:.1f} "
+                f"({delta:+.1%} < -{args.tolerance:.0%})"
+            )
+        rows.append(f"  {name}: {b:.1f} -> {f:.1f} items/s ({delta:+.1%}) {verdict}")
+
+    print(f"bench-check: {len(base_gated) or len(fresh_gated)} gated case(s), "
+          f"tolerance {args.tolerance:.0%}")
+    for row in rows:
+        print(row)
+
+    if provisional:
+        print(
+            "baseline is PROVISIONAL (no measured numbers committed): gate "
+            "passes unconditionally.\nPromote real numbers with: "
+            f"python python/bench_check.py {args.baseline} {args.fresh} --promote"
+        )
+        return 0
+    if failures:
+        print("bench-check FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("bench-check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

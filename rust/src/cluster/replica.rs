@@ -1,7 +1,11 @@
 //! A data-parallel engine replica: one [`Engine`] running on its own
-//! worker thread behind a submit/reap channel pair (DESIGN.md §9).
+//! worker thread behind a submit/reap ring pair (DESIGN.md §9).
 //!
-//! The worker drains its inbox into the engine, runs one executor turn
+//! The mailboxes are bounded lock-free MPMC rings
+//! ([`crate::ringbuf::mpmc::Ring`]) rather than mutexed queues, so the
+//! router's routing hot path and the worker's drain never contend on a
+//! lock — the same submit discipline the shared sampler pool uses. The
+//! worker drains its inbox into the engine, runs one executor turn
 //! ([`Engine::step_once`]), refreshes a lock-free heartbeat (queue depth,
 //! live KV-block occupancy), and hands finished sequences back through
 //! its outbox. When the engine is fully drained the worker
@@ -31,11 +35,16 @@ use crate::decision::service::{SamplerService, SamplerStats, TASK_NS_SHIFT};
 use crate::decision::HotVocab;
 use crate::engine::{DataPlane, Engine, Request, Sequence};
 use crate::metrics::Recorder;
-use std::collections::VecDeque;
+use crate::ringbuf::mpmc;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Mailbox ring capacity. Routing is paced by arrivals and the worker
+/// drains every turn, so a burst beyond this depth merely backpressures
+/// the router's push (spin-then-yield) — it never drops or reorders.
+const MAILBOX_DEPTH: usize = 1024;
 
 /// Role in the optional DistServe-style split: `Unified` replicas serve
 /// whole lifecycles; `Prefill` replicas serve a request truncated to its
@@ -95,8 +104,8 @@ pub struct ReplicaResult {
 pub struct Replica {
     pub id: usize,
     pub role: ReplicaRole,
-    inbox: Arc<Mutex<VecDeque<Inbound>>>,
-    outbox: Arc<Mutex<Vec<Sequence>>>,
+    inbox: mpmc::Ring<Inbound>,
+    outbox: mpmc::Ring<Sequence>,
     status: Arc<ReplicaStatus>,
     stop: Arc<AtomicBool>,
     /// Chaos injection: makes the worker panic at the top of its loop.
@@ -139,8 +148,8 @@ impl Replica {
         D: DataPlane + 'static,
         F: FnOnce() -> crate::Result<D> + Send + 'static,
     {
-        let inbox: Arc<Mutex<VecDeque<Inbound>>> = Arc::new(Mutex::new(VecDeque::new()));
-        let outbox: Arc<Mutex<Vec<Sequence>>> = Arc::new(Mutex::new(Vec::new()));
+        let inbox: mpmc::Ring<Inbound> = mpmc::Ring::new(MAILBOX_DEPTH);
+        let outbox: mpmc::Ring<Sequence> = mpmc::Ring::new(MAILBOX_DEPTH);
         let status = Arc::new(ReplicaStatus::default());
         let stop = Arc::new(AtomicBool::new(false));
         let kill = Arc::new(AtomicBool::new(false));
@@ -189,22 +198,22 @@ impl Replica {
         (self.id as u64 + 1) << TASK_NS_SHIFT
     }
 
-    /// Route a fresh request into this replica.
+    /// Route a fresh request into this replica (lock-free ring push).
     pub fn submit(&self, req: Request) {
-        self.inbox.lock().unwrap().push_back(Inbound::Submit(req));
+        self.inbox.push(Inbound::Submit(req));
     }
 
     /// Route a resume: a prefill→decode handoff or a failover requeue.
     /// The sequence resumes with recompute and decisions continue from
     /// iteration `output.len()`.
     pub fn submit_resumed(&self, req: Request, output: Vec<u32>) {
-        self.inbox.lock().unwrap().push_back(Inbound::Resume(req, output));
+        self.inbox.push(Inbound::Resume(req, output));
     }
 
     /// Routed-but-unadmitted plus in-engine sequences — `LeastOutstanding`'s
     /// load signal.
     pub fn outstanding(&self) -> usize {
-        self.inbox.lock().unwrap().len() + self.status.depth.load(Ordering::Relaxed)
+        self.inbox.len() + self.status.depth.load(Ordering::Relaxed)
     }
 
     /// Free KV blocks from the latest heartbeat — `KvPressure`'s signal.
@@ -214,7 +223,11 @@ impl Replica {
 
     /// Take whatever finished sequences the worker handed back so far.
     pub fn drain_finished(&self) -> Vec<Sequence> {
-        std::mem::take(&mut *self.outbox.lock().unwrap())
+        let mut out = Vec::new();
+        while let Ok(seq) = self.outbox.try_pop() {
+            out.push(seq);
+        }
+        out
     }
 
     /// Ask the worker to exit once drained (graceful: in-flight and
@@ -279,8 +292,8 @@ impl Replica {
 fn run_worker<D: DataPlane>(
     id: usize,
     mut engine: Engine<D>,
-    inbox: Arc<Mutex<VecDeque<Inbound>>>,
-    outbox: Arc<Mutex<Vec<Sequence>>>,
+    inbox: mpmc::Ring<Inbound>,
+    outbox: mpmc::Ring<Sequence>,
     status: Arc<ReplicaStatus>,
     stop: Arc<AtomicBool>,
     kill: Arc<AtomicBool>,
@@ -293,13 +306,10 @@ fn run_worker<D: DataPlane>(
         if kill.load(Ordering::Acquire) {
             panic!("chaos: injected replica kill (replica {id})");
         }
-        {
-            let mut q = inbox.lock().unwrap();
-            while let Some(msg) = q.pop_front() {
-                match msg {
-                    Inbound::Submit(r) => engine.submit(r),
-                    Inbound::Resume(r, out) => engine.submit_resumed(r, out),
-                }
+        while let Ok(msg) = inbox.try_pop() {
+            match msg {
+                Inbound::Submit(r) => engine.submit(r),
+                Inbound::Resume(r, out) => engine.submit_resumed(r, out),
             }
         }
         let progressed = engine.step_once()?;
@@ -307,15 +317,14 @@ fn run_worker<D: DataPlane>(
         status
             .kv_free_blocks
             .store(engine.kv_free_blocks(), Ordering::Relaxed);
-        let fin = engine.take_finished();
-        if !fin.is_empty() {
-            outbox.lock().unwrap().extend(fin);
+        for seq in engine.take_finished() {
+            outbox.push(seq);
         }
         if !progressed {
             // Fully drained. Exit only on a requested stop with an empty
             // inbox — the router sets stop strictly after collecting every
             // final sequence, so nothing routed is ever dropped.
-            if stop.load(Ordering::Acquire) && inbox.lock().unwrap().is_empty() {
+            if stop.load(Ordering::Acquire) && inbox.is_empty() {
                 break;
             }
             if idle_poll_us > 0 {

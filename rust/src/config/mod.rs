@@ -132,7 +132,8 @@ pub struct EngineConfig {
     /// time until that arrival otherwise. 0 = busy-poll.
     pub idle_poll_us: u64,
     /// Chaos-injection schedule for the engine-level fault domains
-    /// (sampler kills and lock poisons, keyed by plan iteration — see
+    /// (sampler kills, incl. the legacy `poison@` syntax — now a clean
+    /// worker kill — keyed by plan iteration; see
     /// [`crate::fault::FaultPlan`]). Empty = no injected faults. Replica
     /// kills live in `ClusterConfig::faults` instead.
     pub faults: crate::fault::FaultPlan,
@@ -255,8 +256,8 @@ impl EngineConfig {
         }
         self.apply_json(&Json::Obj(obj))?;
         // `--chaos <spec>` carries the whole fault plan; the engine keeps
-        // its own fault domains (sampler kills, lock poisons) and the
-        // router-side split is picked up by `ClusterConfig::apply_args`.
+        // its own fault domains (sampler kills, incl. legacy poisons) and
+        // the router-side split is picked up by `ClusterConfig::apply_args`.
         if let Some(spec) = args.get("chaos") {
             let (engine_faults, _router) = crate::fault::FaultPlan::parse(spec)?.split();
             self.faults = engine_faults;

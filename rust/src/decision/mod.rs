@@ -17,6 +17,9 @@
 //!   roll-forward/rollback of the per-sequence state.
 //! - [`params`], [`softmax`], [`categorical`] — sampling controls, stable
 //!   softmax, and deterministic pre-generated variates (§5.1).
+//! - [`seqrec`], [`slots`] — the lock-free substrate of the shared sampler
+//!   pool (DESIGN.md §11): per-sequence replay records and the in-flight
+//!   task slot table with quiescent-state reclamation.
 
 pub mod categorical;
 pub mod controller;
@@ -27,9 +30,11 @@ pub mod hotvocab;
 pub mod params;
 pub mod penalties;
 pub mod pipeline;
+pub mod seqrec;
 pub mod service;
 pub mod shvs;
 pub mod sizing;
+pub mod slots;
 pub mod softmax;
 pub mod verify;
 
@@ -39,6 +44,7 @@ pub use grammar::GrammarConstraint;
 pub use hotvocab::HotVocab;
 pub use params::SamplingParams;
 pub use pipeline::DecisionPipeline;
+pub use seqrec::{SeqHandle, SeqRec};
 pub use service::{ColumnMeta, DecisionBatch, IterationTask, SamplerService};
 pub use shvs::{Decision, Precompute, ShvsSampler};
 pub use sizing::SizingModel;

@@ -1,0 +1,233 @@
+//! Lock-free per-sequence replay records — the shared pool's replacement
+//! for the mutex-guarded service registry (DESIGN.md §11).
+//!
+//! A [`SeqRec`] is the authoritative resume state of one live sequence:
+//! its immutable prompt/params/grammar plus a fixed-capacity, positionally
+//! written token log of decided output. Whichever worker decides a window
+//! for the sequence writes the verdict's tokens at their absolute output
+//! positions and publishes the new high-water length with a `fetch_max`;
+//! a later rebuild (a respawned worker, or a sibling that *stole* the
+//! sequence's shard) reads `tokens[..iteration]` and replays — exactly the
+//! resume-`Register` path preemption uses, now without any lock.
+//!
+//! Positional writes make re-decides idempotent: decisions are keyed by
+//! (sampler seed, request seed, sequence, iteration) — never by worker
+//! identity — so a crash-recovery re-decision of an already-logged window
+//! rewrites byte-identical tokens, and an engine-side cut (KV ceiling,
+//! EOS) merely re-keys later tasks at a smaller `iteration`, which readers
+//! truncate to. Stale in-flight verdicts from *before* a retire +
+//! re-register can never corrupt the fresh incarnation because a
+//! re-register mints a **new** `Arc<SeqRec>`: tasks carry the record they
+//! were submitted with, so a stale verdict rolls only the orphaned old
+//! record (the Arc-identity guard that replaces the registry's `gen`
+//! stamps).
+
+use super::grammar::{ConstraintState, GrammarConstraint};
+use super::params::SamplingParams;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared handle to one sequence's replay record. `Arc` pointer identity
+/// *is* the registration incarnation: comparing handles with
+/// [`SeqHandle::same_rec`] distinguishes a live registration from a stale
+/// one without any counter.
+pub type SeqHandle = Arc<SeqRec>;
+
+/// One live sequence's resume state. See the module docs for the write
+/// protocol.
+pub struct SeqRec {
+    pub seq_id: u64,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    pub grammar: Option<Arc<GrammarConstraint>>,
+    /// Decided-output log, written positionally; entries `< len` are
+    /// published.
+    tokens: Box<[AtomicU32]>,
+    /// High-water published length (monotone via `fetch_max`).
+    len: AtomicUsize,
+    /// Set by `retire`: workers skip columns whose record is retired, so a
+    /// task in flight across a retire produces no decision for it.
+    retired: AtomicBool,
+}
+
+impl SeqRec {
+    /// Build a record with `capacity` output-token slots (the service's
+    /// `max_seq_len`), seeded with `output` — the tokens generated before a
+    /// preemption, replayed so penalties/constraints stay byte-identical.
+    pub fn new(
+        seq_id: u64,
+        prompt: &[u32],
+        output: &[u32],
+        params: &SamplingParams,
+        grammar: Option<Arc<GrammarConstraint>>,
+        capacity: usize,
+    ) -> SeqHandle {
+        let capacity = capacity.max(output.len());
+        let tokens: Box<[AtomicU32]> = (0..capacity).map(|_| AtomicU32::new(0)).collect();
+        for (i, &t) in output.iter().enumerate() {
+            tokens[i].store(t, Ordering::Relaxed);
+        }
+        Arc::new(SeqRec {
+            seq_id,
+            prompt: prompt.to_vec(),
+            params: params.clone(),
+            grammar,
+            tokens,
+            len: AtomicUsize::new(output.len()),
+            retired: AtomicBool::new(false),
+        })
+    }
+
+    /// Log a decided window: `toks` start at absolute output position
+    /// `base`. Idempotent — determinism guarantees any overlapping rewrite
+    /// carries identical values, so last-writer races are harmless.
+    pub fn log_decided(&self, base: u64, toks: &[u32]) {
+        let base = base as usize;
+        let end = (base + toks.len()).min(self.tokens.len());
+        for (i, &t) in toks.iter().take(end.saturating_sub(base)).enumerate() {
+            self.tokens[base + i].store(t, Ordering::Relaxed);
+        }
+        // AcqRel: later readers of this len must also observe every write
+        // published under the smaller lens this max chains over.
+        self.len.fetch_max(end, Ordering::AcqRel);
+    }
+
+    /// Published decided-output length.
+    pub fn decided_len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    /// Copy the first `upto` decided tokens (clamped to the published
+    /// length) — the replay prefix a rebuild truncates to.
+    pub fn read_upto(&self, upto: u64) -> Vec<u32> {
+        let n = (upto as usize).min(self.len.load(Ordering::Acquire));
+        (0..n).map(|i| self.tokens[i].load(Ordering::Relaxed)).collect()
+    }
+
+    /// Mark retired. The record stays readable (stale in-flight tasks may
+    /// still hold the handle) but workers decide nothing for it.
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+    }
+
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
+    }
+
+    /// Rebuild the grammar DFA state after `output` (the worker-side replay
+    /// the `Register` message arm used to do).
+    pub fn replay_grammar(
+        &self,
+        output: &[u32],
+    ) -> Option<(Arc<GrammarConstraint>, ConstraintState)> {
+        let g = self.grammar.clone()?;
+        let mut state = g.start();
+        for &t in output {
+            if let Some(next) = g.advance(state, t) {
+                state = next;
+            }
+        }
+        Some((g, state))
+    }
+}
+
+/// Arc-identity comparison: true iff both handles are the *same*
+/// registration incarnation.
+pub trait SameRec {
+    fn same_rec(&self, other: &SeqHandle) -> bool;
+}
+
+impl SameRec for SeqHandle {
+    fn same_rec(&self, other: &SeqHandle) -> bool {
+        Arc::ptr_eq(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cap: usize) -> SeqHandle {
+        SeqRec::new(7, &[1, 2], &[], &SamplingParams::default(), None, cap)
+    }
+
+    #[test]
+    fn positional_log_and_truncating_read() {
+        let r = rec(16);
+        r.log_decided(0, &[10, 11]);
+        r.log_decided(2, &[12, 13, 14]);
+        assert_eq!(r.decided_len(), 5);
+        assert_eq!(r.read_upto(3), vec![10, 11, 12]);
+        assert_eq!(r.read_upto(99), vec![10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn rewrite_is_idempotent_and_len_monotone() {
+        let r = rec(8);
+        r.log_decided(0, &[5, 6, 7]);
+        // A crash-recovery re-decide rewrites a prefix window: values are
+        // identical by determinism, and len must not shrink.
+        r.log_decided(0, &[5, 6]);
+        assert_eq!(r.decided_len(), 3);
+        assert_eq!(r.read_upto(3), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn seeded_output_replays() {
+        let r = SeqRec::new(1, &[9], &[3, 4], &SamplingParams::default(), None, 8);
+        assert_eq!(r.decided_len(), 2);
+        assert_eq!(r.read_upto(2), vec![3, 4]);
+    }
+
+    #[test]
+    fn writes_never_overflow_capacity() {
+        let r = rec(4);
+        r.log_decided(2, &[1, 2, 3, 4]); // tail clamped
+        assert_eq!(r.decided_len(), 4);
+        assert_eq!(r.read_upto(9), vec![0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn retire_flag_and_arc_identity() {
+        let a = rec(4);
+        let b = rec(4);
+        assert!(a.same_rec(&a.clone()));
+        assert!(!a.same_rec(&b));
+        assert!(!a.is_retired());
+        a.retire();
+        assert!(a.is_retired());
+    }
+
+    #[test]
+    fn concurrent_writer_and_readers_agree() {
+        let r = rec(1024);
+        let w = r.clone();
+        let writer = std::thread::spawn(move || {
+            for i in 0..1024u64 {
+                w.log_decided(i, &[i as u32 ^ 0xABCD]);
+            }
+        });
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    loop {
+                        let n = r.decided_len();
+                        let snap = r.read_upto(n as u64);
+                        for (i, &t) in snap.iter().enumerate() {
+                            assert_eq!(t, i as u32 ^ 0xABCD);
+                        }
+                        if n == 1024 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for h in readers {
+            h.join().unwrap();
+        }
+    }
+}

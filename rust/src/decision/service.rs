@@ -1,70 +1,66 @@
-//! The disaggregated decision-plane service (§4.2, §5.1).
+//! The disaggregated decision-plane service (§4.2, §5.1) — lock-free
+//! shared-pool edition (DESIGN.md §11).
 //!
-//! `m` sampler workers run on dedicated threads. Each iteration, the engine
-//! publishes one [`IterationTask`] per sampler over that sampler's SPSC ring
-//! (the shared-memory ring analog); the task carries a zero-copy
-//! [`ShardedLogits`] view plus per-column metadata. Samplers decide their
-//! columns independently — **sequence-parallel**, no vocabulary-axis
-//! reconciliation — and push [`DecisionBatch`]es to the shared return
-//! channel (the paper's lightweight ZMQ path back to the scheduler).
+//! `m` sampler workers run on dedicated threads. Each iteration, a
+//! submitter publishes one [`IterationTask`] into the in-flight slot table
+//! and pushes one *shard message* per worker onto that worker's MPMC ring
+//! ([`crate::ringbuf::mpmc::Ring`]): shard `v` covers the columns of the
+//! sequences owned by sampler `v` (`seq_id % m`). Workers decide their
+//! shard's columns independently — **sequence-parallel**, no
+//! vocabulary-axis reconciliation — and write their [`DecisionBatch`] into
+//! the task's per-shard cell; a collect assembles the cells once all `m`
+//! reported. There is **no mutex anywhere on the submit, decide, or
+//! collect hot path**: several engine replicas sharing one pool submit and
+//! collect concurrently through CAS-only rings, claims, and slot states.
 //!
-//! **Ownership.** A sequence is owned by sampler `seq_id % m` for its whole
-//! life, so its history metadata is created, updated, and retired *locally*
-//! (the paper's "per-sequence metadata follow the same batch partition and
-//! are updated locally"), independent of batch composition. Ownership-by-id
-//! replaces the paper's per-iteration contiguous ranges — the balance is the
-//! same in expectation and history never migrates.
+//! **Work stealing.** An idle worker pops a backlogged sibling's ring and
+//! decides that shard in its place. Safe because decisions are keyed by
+//! (sampler seed, request seed, sequence, iteration) — never by worker
+//! identity — and per-sequence state is rebuilt on demand from the
+//! sequence's lock-free [`SeqRec`] replay log; the per-cell claim CAS
+//! guarantees exactly one decider per shard per task no matter who pops
+//! the message.
+//!
+//! **Ownership.** A sequence's *shard* is `seq_id % m` for its whole life,
+//! so its columns always travel in the same cell and the same ring —
+//! stealing moves the compute, never the keying. Ownership-by-id replaces
+//! the paper's per-iteration contiguous ranges — the balance is the same
+//! in expectation.
 //!
 //! **Determinism.** Decisions use pre-generated Philox uniforms keyed by
-//! (engine seed, request seed, sequence, iteration), so the token stream is
-//! identical for any `m` (asserted in tests).
+//! (engine seed, request seed, sequence, iteration), so the token stream
+//! is identical for any `m`, any replica count, any steal schedule, and
+//! any fault plan (asserted in tests).
 //!
-//! **Shared pools (DESIGN.md §9).** One service may serve a whole fleet of
-//! data-parallel engine replicas: submitters namespace their task ids
-//! (`replica id` in the high bits of [`IterationTask::iter`]) so the
-//! completion queue never aliases two replicas' iterations, and sequence
-//! ownership stays `seq_id % m` — globally unique request ids spread the
-//! fleet's sequences over one sampler pool instead of stranding capacity
-//! per replica. The submit paths serialize on an internal lock (the SPSC
-//! rings still have exactly one logical producer); collects are already
-//! concurrent-safe through the shared completion queue.
-//!
-//! **Crash recovery (DESIGN.md §10).** A sampler thread can die mid-
-//! iteration (a panic — real or chaos-injected) while the GPU side keeps
-//! producing logits. With `cfg.recovery` on (the default), the service
-//! self-heals instead of failing the collect: the collect paths detect the
-//! corpse, join it, respawn a fresh worker on a fresh ring, replay its
-//! owned sequences from the service-side **registry** (the same
-//! resume-replay `Register` path preemption uses — prompt ⧺ decided
-//! output), and resubmit any in-flight [`IterationTask`] the dead worker
-//! had not answered. The registry mirrors worker-local state exactly: it
-//! is written on `register_full`, dropped on `retire`, and rolled forward
-//! by each absorbed verdict — precisely the worker's own roll-forward
-//! discipline, so the respawned worker recomputes bit-identical decisions
-//! (uniforms are keyed by (seed, seq, iteration), not by worker identity).
-//! A worker that dies repeatedly without producing work trips a
-//! crash-loop breaker and the failure surfaces as an error. Every service
-//! mutex is accessed through poison-tolerant locking (`into_inner`), so a
-//! panic that poisons a lock is surfaced once with its real payload rather
-//! than cascading `PoisonError`s through every later submit.
+//! **Crash recovery (DESIGN.md §10, §11).** A dead worker is detected by a
+//! lock-free death flag (set by a drop guard during unwind), joined, and
+//! respawned on the *same* ring — rings and per-sequence records survive
+//! the worker, so recovery releases the dead incarnation's cell claims
+//! with single CASes, re-pushes the unanswered shard messages, and starts
+//! a fresh thread; the respawn replays nothing eagerly because workers
+//! rebuild sequence state lazily from the [`SeqRec`] log. A worker that
+//! dies repeatedly without the pool completing a collect trips a
+//! crash-loop breaker and the failure surfaces as an error.
 
 use super::grammar::GrammarConstraint;
 use super::hotvocab::HotVocab;
 use super::params::SamplingParams;
 use super::penalties::BatchHistory;
 use super::pipeline::DecisionPipeline;
+use super::seqrec::{SeqHandle, SeqRec};
 use super::shvs::Precompute;
+use super::slots::{claim_pack, TakenTask, TaskSlots};
 use super::verify::{self, Verdict};
 #[cfg(test)]
 use crate::config::DecisionVariant;
 use crate::config::SamplerConfig;
-use crate::ringbuf::{mpmc, spsc};
+use crate::ringbuf::mpmc;
 use crate::tensor::ShardedLogits;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Bit position of the task-id namespace: a shared pool's submitters put
 /// their replica id in the bits at and above this shift (`(id+1) << 48`),
@@ -73,20 +69,10 @@ pub const TASK_NS_SHIFT: u32 = 48;
 /// Mask selecting the namespace bits of a task id.
 pub const TASK_NS_MASK: u64 = !((1u64 << TASK_NS_SHIFT) - 1);
 
-/// Consecutive respawns of the same worker (without it producing a single
-/// batch in between) before recovery gives up and surfaces the panic — the
-/// crash-loop breaker for deterministically-poisonous tasks.
+/// Consecutive respawns of the same worker (without any collect completing
+/// a cell it claimed in between) before recovery gives up and surfaces the
+/// panic — the crash-loop breaker for deterministically-poisonous tasks.
 const MAX_CONSECUTIVE_RESPAWNS: u32 = 3;
-
-/// Poison-tolerant lock: a panic while holding a service mutex must be
-/// surfaced once (by the collect that joins the corpse) with its real
-/// payload — not turned into an opaque `PoisonError` panic in every
-/// subsequent submit/collect. The inner data is still consistent for every
-/// poison source we have: the injected chaos poison panics before touching
-/// the map, and worker panics never run while holding service locks.
-fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// Per-column metadata within an iteration's microbatch.
 #[derive(Debug, Clone)]
@@ -94,7 +80,9 @@ pub struct ColumnMeta {
     pub col: usize,
     pub seq_id: u64,
     /// Decode iteration of the *base* chain position for this sequence
-    /// (speculative positions key their uniforms at `iteration + j`).
+    /// (speculative positions key their uniforms at `iteration + j`). This
+    /// equals the sequence's committed-output length at submit time — the
+    /// replay prefix a rebuilding worker truncates its [`SeqRec`] to.
     pub iteration: u64,
 }
 
@@ -105,20 +93,24 @@ pub struct ColumnMeta {
 /// `views[0]` is the base decode step's logits; `views[j > 0]` were
 /// produced by feeding draft token `j-1`, and `drafts[ci]` carries column
 /// `ci`'s proposed window. The batch-axis sharding is untouched — each
-/// sampler still reads only its owned columns, in every view, with no
+/// sampler still reads only its shard's columns, in every view, with no
 /// vocab-axis collectives.
 pub struct IterationTask {
     /// Task id — the scheduler's global plan counter. Unique across
-    /// microbatches; the completion queue is keyed by it.
+    /// microbatches (and, in a shared pool, namespaced per replica); the
+    /// slot table is keyed by it.
     pub iter: u64,
     /// Microbatch this task belongs to (0 for the synchronous engine).
-    /// Samplers copy it into their [`DecisionBatch`]es so the assembled
-    /// [`Collected`] can attribute decision intervals to the right
-    /// microbatch in the stage timeline.
     pub mb: usize,
     /// Per-chain-position logits views (len 1 = plain decode).
     pub views: Vec<ShardedLogits>,
     pub columns: Arc<Vec<ColumnMeta>>,
+    /// Per-column sequence records, aligned with `columns`. `None` (or a
+    /// retired record) = decide nothing for that column — the task-in-
+    /// flight-across-retire contract. Carrying the record *in the task*
+    /// is the Arc-identity staleness guard: a retire + re-register mints a
+    /// new record, so a stale task can only touch its orphaned old one.
+    pub recs: Arc<Vec<Option<SeqHandle>>>,
     /// Per-view, per-column SHVS precompute: `pre[j][col]` (empty when the
     /// variant doesn't use it).
     pub pre: Arc<Vec<Vec<Precompute>>>,
@@ -134,6 +126,7 @@ impl IterationTask {
         iter: u64,
         view: ShardedLogits,
         columns: Vec<ColumnMeta>,
+        recs: Vec<Option<SeqHandle>>,
         pre: Vec<Precompute>,
     ) -> IterationTask {
         let pre = if pre.is_empty() { Vec::new() } else { vec![pre] };
@@ -142,41 +135,31 @@ impl IterationTask {
             mb: 0,
             views: vec![view],
             columns: Arc::new(columns),
+            recs: Arc::new(recs),
             pre: Arc::new(pre),
             drafts: Arc::new(Vec::new()),
         }
     }
 }
 
-/// Control + data messages flowing engine → sampler.
-pub enum SamplerMsg {
-    /// A sequence enters the system: register its prompt + params with its
-    /// owner sampler. `output` is non-empty when a preempted sequence
-    /// resumes (recompute-on-resume): the owner replays those tokens into
-    /// its local history/grammar state so penalties and constraints are
-    /// byte-identical to an uninterrupted run.
-    Register {
-        seq_id: u64,
-        prompt: Vec<u32>,
-        output: Vec<u32>,
-        params: SamplingParams,
-        grammar: Option<Arc<GrammarConstraint>>,
-    },
-    /// Decide this iteration's owned columns.
-    Iterate(Arc<IterationTask>),
-    /// A sequence finished: drop its metadata.
-    Retire { seq_id: u64 },
-    /// Chaos injection: panic inside the worker thread (a simulated
-    /// sampler crash, exercised by the recovery path and `--chaos`).
-    Crash,
+/// One shard's unit of work: decide task `task`'s columns whose sequences
+/// hash to `shard`, and write the result into `slot`'s cell `shard`. The
+/// whole submit/steal/recovery protocol moves only this message.
+pub struct ShardMsg {
+    pub task: Arc<IterationTask>,
+    pub slot: usize,
+    pub shard: usize,
 }
 
-/// One sampler's decisions for one iteration.
+/// One shard's decisions for one iteration.
 #[derive(Debug)]
 pub struct DecisionBatch {
     pub iter: u64,
     /// Microbatch tag copied from the task (stage-timeline attribution).
     pub mb: usize,
+    /// The worker thread that actually decided this shard (the owner, a
+    /// stealer, or a respawned incarnation) — stats/breaker attribution;
+    /// never part of the decision keying.
     pub sampler_id: usize,
     /// (column, seq_id, verdict) — a verdict commits 1..=k+1 tokens
     /// (accepted draft prefix + corrected bonus; exactly 1 without
@@ -190,65 +173,18 @@ pub struct DecisionBatch {
     pub end_s: f64,
 }
 
-/// All `m` samplers' decisions for one task, assembled by the completion
-/// queue (see [`SamplerService::try_collect`]).
+/// All `m` shards' decisions for one task, assembled from the slot cells.
 #[derive(Debug, Default)]
 pub struct Collected {
     /// Microbatch the task belonged to (as tagged by the submitter).
     pub mb: usize,
     /// Column-sorted (column, seq_id, verdict) triples.
     pub decisions: Vec<(usize, u64, Verdict)>,
-    /// Max per-sampler busy seconds — the decision-plane latency that must
+    /// Max per-shard busy seconds — the decision-plane latency that must
     /// hide under GPU compute.
     pub busy_s: f64,
-    /// Per-sampler busy intervals (epoch seconds), for overlap accounting.
+    /// Per-shard busy intervals (epoch seconds), for overlap accounting.
     pub intervals: Vec<(f64, f64)>,
-}
-
-/// Partially-assembled task result in the completion queue.
-#[derive(Default)]
-struct PendingCollect {
-    mb: usize,
-    decisions: Vec<(usize, u64, Verdict)>,
-    intervals: Vec<(f64, f64)>,
-    batches: usize,
-    max_busy: f64,
-    /// Which samplers reported for this task (lazily sized to `m`): makes
-    /// crash-recovery resubmission idempotent — a respawned worker's
-    /// re-decision of a task its predecessor already answered is dropped.
-    reported: Vec<bool>,
-}
-
-/// Service-side replay state for one live sequence — the authoritative
-/// mirror of the owner worker's local state, used to rebuild a respawned
-/// worker. `output` is rolled forward verdict-by-verdict at absorb time
-/// (exactly the worker's own roll-forward); every divergence between
-/// verdicts and committed tokens (EOS / max_new / KV-ceiling cuts,
-/// preemption) ends in a `retire` or a fresh `register_full`, which resets
-/// this entry the same way it resets the worker.
-///
-/// `gen` is the entry's registration incarnation (globally unique): a
-/// submitted task stamps each column with its sequence's gen at submit
-/// time, and absorb only rolls a verdict forward when the stamp still
-/// matches — so a stale in-flight verdict from *before* a retire +
-/// re-register (a preempted sequence whose task was mid-flight) can never
-/// double-apply against the fresh incarnation. The workers need no such
-/// guard: their SPSC rings deliver Register/Retire/Iterate in exact push
-/// order.
-struct RegEntry {
-    gen: u64,
-    prompt: Vec<u32>,
-    output: Vec<u32>,
-    params: SamplingParams,
-    grammar: Option<Arc<GrammarConstraint>>,
-}
-
-/// A submitted-but-uncollected task plus the registry incarnations its
-/// columns were stamped with (col → gen, computed once at submit — the
-/// absorb hot path only looks entries up).
-struct LiveTask {
-    task: Arc<IterationTask>,
-    col_gens: HashMap<usize, u64>,
 }
 
 /// Lifetime fault-recovery statistics of a service.
@@ -256,58 +192,9 @@ struct LiveTask {
 pub struct RecoveryStats {
     /// Sampler workers respawned after a crash.
     pub respawns: u64,
-    /// Wall seconds spent respawning + replaying state (the recovery
-    /// pauses a fault-free run would not have paid).
+    /// Wall seconds spent respawning + resubmitting (the recovery pauses a
+    /// fault-free run would not have paid).
     pub recovery_s: f64,
-}
-
-/// Running service handle.
-pub struct SamplerService {
-    /// Per-sampler control/data rings. Locked because a *shared* pool has
-    /// several engine replicas submitting concurrently; each ring still
-    /// sees a serialized producer stream (register-before-iterate order is
-    /// preserved per replica by the lock). Recovery holds this lock across
-    /// its whole respawn-replay-resubmit critical section so no submit can
-    /// interleave with a half-rebuilt worker.
-    senders: Mutex<Vec<spsc::Producer<SamplerMsg>>>,
-    results: mpmc::Receiver<DecisionBatch>,
-    /// Kept so crash-recovery can hand a respawned worker the return
-    /// channel; dropped at shutdown so channel disconnect still means
-    /// "every worker exited".
-    result_tx: Option<mpmc::Sender<DecisionBatch>>,
-    /// Worker handles; slots are taken when a dead worker is joined
-    /// (respawn or panic propagation), and drained at shutdown/drop.
-    workers: Mutex<Vec<Option<JoinHandle<SamplerStats>>>>,
-    /// Completion queue: batches drained off the return channel, bucketed
-    /// by task id `(iter)` until all `m` samplers reported. Lets multiple
-    /// microbatches' tasks be in flight and reaped out of order.
-    pending: Mutex<HashMap<u64, PendingCollect>>,
-    /// Submitted-but-uncollected tasks (+ column gen stamps), retained so
-    /// recovery can resubmit them to a respawned worker. Removed when the
-    /// task completes.
-    live_tasks: Mutex<HashMap<u64, LiveTask>>,
-    /// Task-id namespaces whose owner is gone (a failed-over replica):
-    /// their stale batches are dropped on arrival so they can neither
-    /// recreate purged pending entries nor roll the registry forward past
-    /// the state the failover requeue replays from. Replica ids are never
-    /// reused, so purging is permanent.
-    purged: Mutex<std::collections::HashSet<u64>>,
-    /// Replay registry: live sequences' resume state (see [`RegEntry`]).
-    registry: Mutex<HashMap<u64, RegEntry>>,
-    /// Consecutive respawns per worker since it last produced a batch —
-    /// the crash-loop breaker's state.
-    respawns: Vec<AtomicU32>,
-    /// Registration-incarnation counter (see [`RegEntry::gen`]).
-    reg_gen: AtomicU64,
-    recovery_log: Mutex<RecoveryStats>,
-    /// Spawn ingredients for respawns.
-    cfg: SamplerConfig,
-    hot: Option<Arc<HotVocab>>,
-    max_seq_len: usize,
-    m: usize,
-    /// Shared time origin the workers timestamp against (the engine's t0;
-    /// a cluster's replicas all adopt it so fleet stage timelines merge).
-    epoch: Instant,
 }
 
 /// Per-sampler lifetime statistics. (Speculative-decoding acceptance is
@@ -322,113 +209,135 @@ pub struct SamplerStats {
     pub busy_s: f64,
 }
 
+/// Running service handle. Submit/decide/collect touch only the lock-free
+/// rings, records, and slot table; the two mutexes below guard *cold*
+/// paths exclusively (respawn bookkeeping and recovery stats), proven by
+/// `submit_collect_hot_path_holds_no_service_lock` below.
+pub struct SamplerService {
+    /// Per-worker task rings. Immutable for the life of the service: a
+    /// respawned worker pops the *same* ring its predecessor did, so no
+    /// message is ever stranded by a death and no lock guards the set.
+    rings: Arc<Vec<mpmc::Ring<ShardMsg>>>,
+    /// In-flight task table (slots, cells, claims — see `slots`).
+    slots: Arc<TaskSlots>,
+    /// Set by a worker's drop guard the moment its thread unwinds or
+    /// returns — the lock-free death signal every collect polls.
+    dead_flags: Arc<Vec<AtomicBool>>,
+    /// Chaos injection: worker `id` panics at the top of its next loop
+    /// turn when its flag is set (replaces the old in-band Crash message,
+    /// which a stealer could have accidentally absorbed).
+    crash_flags: Arc<Vec<AtomicBool>>,
+    /// Current thread incarnation per worker; claims pack it so recovery
+    /// can release a dead incarnation's claims without racing live ones.
+    incarnations: Vec<AtomicU32>,
+    /// Consecutive respawns per worker since a collect last completed a
+    /// cell that worker claimed — the per-worker crash-loop breaker.
+    respawns: Vec<AtomicU32>,
+    /// Respawns since *any* collect completed — the pool-wide breaker
+    /// (stealing can spread a poisonous task's kills across workers, so
+    /// per-worker counters alone could loop forever).
+    stuck_respawns: AtomicU32,
+    /// Cold: worker join handles (taken by recovery joins and shutdown).
+    workers: Mutex<Vec<Option<JoinHandle<SamplerStats>>>>,
+    /// Cold: lifetime recovery stats.
+    recovery_log: Mutex<RecoveryStats>,
+    /// Spawn ingredients for respawns.
+    cfg: SamplerConfig,
+    hot: Option<Arc<HotVocab>>,
+    max_seq_len: usize,
+    m: usize,
+    /// Shared time origin the workers timestamp against (the engine's t0;
+    /// a cluster's replicas all adopt it so fleet stage timelines merge).
+    epoch: Instant,
+}
+
+/// Sets the worker's death flag on *any* thread exit — panic unwind or
+/// clean return — giving collects a lock-free corpse signal.
+struct DeathGuard {
+    flags: Arc<Vec<AtomicBool>>,
+    id: usize,
+}
+
+impl Drop for DeathGuard {
+    fn drop(&mut self) {
+        self.flags[self.id].store(true, Ordering::Release);
+    }
+}
+
+/// Cached per-sequence decide state. Valid only while `rec` is the same
+/// registration incarnation (Arc identity) *and* `decided` equals the
+/// incoming task's `iteration` — any mismatch (steal hand-back, respawn,
+/// engine cut, re-register) rebuilds from the record's replay log.
+struct CachedSeq {
+    rec: SeqHandle,
+    hist: BatchHistory,
+    grammar: Option<(Arc<GrammarConstraint>, super::grammar::ConstraintState)>,
+    decided: u64,
+}
+
 /// A sampler's worker loop state.
 struct SamplerWorker {
     id: usize,
     m: usize,
+    /// This thread's incarnation (packed into every claim it takes).
+    incarnation: u32,
     pipeline: DecisionPipeline,
-    /// Shared time origin (the engine's t0) so busy intervals are directly
-    /// comparable with the engine's GPU stage timestamps.
     epoch: Instant,
-    /// Histories of owned sequences, keyed by seq_id. Each history is a
-    /// single-column BatchHistory (the column-wise machinery per sequence).
-    owned: HashMap<u64, OwnedSeq>,
+    rings: Arc<Vec<mpmc::Ring<ShardMsg>>>,
+    slots: Arc<TaskSlots>,
+    crash_flags: Arc<Vec<AtomicBool>>,
+    /// Sequence-state cache, keyed by seq_id (see [`CachedSeq`]). Grows
+    /// with stolen shards; retired entries are swept periodically.
+    owned: HashMap<u64, CachedSeq>,
+    max_seq_len: usize,
+    processed: u64,
 }
 
-/// Per-sequence sampler-local state.
-struct OwnedSeq {
-    hist: BatchHistory,
-    params: SamplingParams,
-    grammar: Option<(Arc<GrammarConstraint>, super::grammar::ConstraintState)>,
-}
+/// Steal only from siblings with a backlog at least this deep — below it,
+/// the owner is already on the message and stealing would just burn a
+/// claim bounce.
+const STEAL_BACKLOG: usize = 2;
+/// After this many empty polls, steal even a single queued message — the
+/// owner is probably dead or wedged (this is what lets survivors absorb a
+/// corpse's shard before recovery even runs).
+const STEAL_DESPERATION: u32 = 4096;
 
 impl SamplerWorker {
-    fn owns(&self, seq_id: u64) -> bool {
-        (seq_id as usize) % self.m == self.id
-    }
-
-    fn run(
-        mut self,
-        rx: spsc::Consumer<SamplerMsg>,
-        tx: mpmc::Sender<DecisionBatch>,
-        max_seq_len: usize,
-    ) -> SamplerStats {
+    fn run(mut self) -> SamplerStats {
         let mut stats = SamplerStats::default();
-        while let Some(msg) = rx.pop() {
-            match msg {
-                SamplerMsg::Register { seq_id, prompt, output, params, grammar } => {
-                    if self.owns(seq_id) {
-                        // resumed sequence: replay pre-preemption decisions
-                        // into the history and the grammar state
-                        let hist = BatchHistory::with_replay(prompt, &output, max_seq_len);
-                        let mut grammar = grammar.map(|g| {
-                            let s = g.start();
-                            (g, s)
-                        });
-                        for &t in &output {
-                            if let Some((g, state)) = &mut grammar {
-                                if let Some(next) = g.advance(*state, t) {
-                                    *state = next;
-                                }
-                            }
-                        }
-                        self.owned.insert(seq_id, OwnedSeq { hist, params, grammar });
+        let mut idle = 0u32;
+        loop {
+            if self.crash_flags[self.id].swap(false, Ordering::AcqRel) {
+                panic!("chaos: injected sampler crash (worker {})", self.id);
+            }
+            match self.rings[self.id].try_pop() {
+                Ok(msg) => {
+                    idle = 0;
+                    self.process(msg, &mut stats);
+                    continue;
+                }
+                Err(mpmc::PopError::Closed) => break,
+                Err(mpmc::PopError::Empty) => {}
+            }
+            let threshold = if idle > STEAL_DESPERATION { 1 } else { STEAL_BACKLOG };
+            let mut stole = false;
+            for off in 1..self.m {
+                let v = (self.id + off) % self.m;
+                if self.rings[v].len() >= threshold {
+                    if let Ok(msg) = self.rings[v].try_pop() {
+                        idle = 0;
+                        stole = true;
+                        self.process(msg, &mut stats);
+                        break;
                     }
                 }
-                SamplerMsg::Retire { seq_id } => {
-                    if self.owns(seq_id) {
-                        self.owned.remove(&seq_id);
-                    }
-                }
-                SamplerMsg::Crash => {
-                    panic!("chaos: injected sampler crash (worker {})", self.id);
-                }
-                SamplerMsg::Iterate(task) => {
-                    let start_s = self.epoch.elapsed().as_secs_f64();
-                    let mut decisions = Vec::new();
-                    for (ci, meta) in task.columns.iter().enumerate() {
-                        if !self.owns(meta.seq_id) {
-                            continue;
-                        }
-                        let Some(seq) = self.owned.get_mut(&meta.seq_id) else {
-                            continue; // retired concurrently; engine resends
-                        };
-                        let draft: &[u32] =
-                            task.drafts.get(ci).map(Vec::as_slice).unwrap_or(&[]);
-                        // One code path for both modes: with an empty draft
-                        // this is exactly one grammar-masked decision plus
-                        // the local metadata append (§5.1); with a draft it
-                        // is batched rejection verification with
-                        // roll-forward/rollback of the owned state.
-                        let verdict = verify::verify_window(
-                            &mut self.pipeline,
-                            &task.views,
-                            meta.col,
-                            draft,
-                            &mut seq.hist,
-                            &mut seq.grammar,
-                            &seq.params,
-                            &task.pre,
-                            meta.seq_id,
-                            meta.iteration,
-                        );
-                        decisions.push((meta.col, meta.seq_id, verdict));
-                    }
-                    let end_s = self.epoch.elapsed().as_secs_f64();
-                    let busy = end_s - start_s;
-                    stats.busy_s += busy;
-                    let batch = DecisionBatch {
-                        iter: task.iter,
-                        mb: task.mb,
-                        sampler_id: self.id,
-                        decisions,
-                        busy_s: busy,
-                        start_s,
-                        end_s,
-                    };
-                    if tx.send(batch).is_err() {
-                        break; // engine gone
-                    }
+            }
+            if !stole {
+                idle = idle.saturating_add(1);
+                if idle < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
                 }
             }
         }
@@ -436,6 +345,114 @@ impl SamplerWorker {
         stats.fast_path_hits = self.pipeline.fast_path_hits;
         stats.alpha_sum = self.pipeline.alpha_sum;
         stats
+    }
+
+    /// Claim → decide → publish for one shard message. Pins bracket only
+    /// the atomic claim and the cell write; the decision itself runs
+    /// unpinned so a panic inside it can never wedge reclamation.
+    fn process(&mut self, msg: ShardMsg, stats: &mut SamplerStats) {
+        let ShardMsg { task, slot, shard } = msg;
+        {
+            let Some(_pin) = self.slots.pin(slot, task.iter) else {
+                return; // task collected, purged, or slot already recycled
+            };
+            if !self.slots.try_claim(slot, shard, claim_pack(self.id, self.incarnation)) {
+                return; // duplicate message — someone else owns this cell
+            }
+        }
+        let batch = self.decide(&task, shard, stats);
+        if let Some(_pin) = self.slots.pin(slot, task.iter) {
+            self.slots.publish_cell(slot, shard, batch);
+        }
+        self.processed += 1;
+        if self.processed % 256 == 0 {
+            self.owned.retain(|_, c| !c.rec.is_retired());
+        }
+    }
+
+    /// Decide shard `shard`'s columns of `task`. Works identically for the
+    /// shard's owner, a stealer, and a respawned incarnation — state comes
+    /// from the cache when fresh, else from a [`SeqRec`] replay.
+    fn decide(
+        &mut self,
+        task: &IterationTask,
+        shard: usize,
+        stats: &mut SamplerStats,
+    ) -> DecisionBatch {
+        let start_s = self.epoch.elapsed().as_secs_f64();
+        let mut decisions = Vec::new();
+        for (ci, meta) in task.columns.iter().enumerate() {
+            if (meta.seq_id as usize) % self.m != shard {
+                continue;
+            }
+            let Some(rec) = task.recs.get(ci).and_then(|r| r.as_ref()) else {
+                continue; // unregistered column decides nothing
+            };
+            if rec.is_retired() {
+                continue; // retired mid-flight; engine resends if needed
+            }
+            let seq =
+                Self::seq_state(&mut self.owned, rec, meta.iteration, self.max_seq_len);
+            let draft: &[u32] = task.drafts.get(ci).map(Vec::as_slice).unwrap_or(&[]);
+            // One code path for both modes: with an empty draft this is
+            // exactly one grammar-masked decision plus the local metadata
+            // append (§5.1); with a draft it is batched rejection
+            // verification with roll-forward/rollback of the owned state.
+            let verdict = verify::verify_window(
+                &mut self.pipeline,
+                &task.views,
+                meta.col,
+                draft,
+                &mut seq.hist,
+                &mut seq.grammar,
+                &rec.params,
+                &task.pre,
+                meta.seq_id,
+                meta.iteration,
+            );
+            // Log to the shared record so any later decider (respawn,
+            // steal hand-back) can rebuild this prefix; positional +
+            // deterministic = idempotent under recovery re-decides.
+            rec.log_decided(meta.iteration, &verdict.tokens);
+            seq.decided = meta.iteration + verdict.tokens.len() as u64;
+            decisions.push((meta.col, meta.seq_id, verdict));
+        }
+        let end_s = self.epoch.elapsed().as_secs_f64();
+        let busy = end_s - start_s;
+        stats.busy_s += busy;
+        DecisionBatch {
+            iter: task.iter,
+            mb: task.mb,
+            sampler_id: self.id,
+            decisions,
+            busy_s: busy,
+            start_s,
+            end_s,
+        }
+    }
+
+    /// Fetch the cached decide state for `rec`, rebuilding it from the
+    /// record's replay log when the cache is stale (different registration
+    /// incarnation, or decided length ≠ the task's iteration).
+    fn seq_state<'a>(
+        owned: &'a mut HashMap<u64, CachedSeq>,
+        rec: &SeqHandle,
+        iteration: u64,
+        max_seq_len: usize,
+    ) -> &'a mut CachedSeq {
+        let fresh = owned
+            .get(&rec.seq_id)
+            .is_some_and(|c| Arc::ptr_eq(&c.rec, rec) && c.decided == iteration);
+        if !fresh {
+            let replay = rec.read_upto(iteration);
+            let hist = BatchHistory::with_replay(rec.prompt.clone(), &replay, max_seq_len);
+            let grammar = rec.replay_grammar(&replay);
+            owned.insert(
+                rec.seq_id,
+                CachedSeq { rec: rec.clone(), hist, grammar, decided: iteration },
+            );
+        }
+        owned.get_mut(&rec.seq_id).unwrap()
     }
 }
 
@@ -467,33 +484,56 @@ impl SamplerService {
         epoch: Instant,
     ) -> Self {
         let m = cfg.num_samplers.max(1);
-        let (result_tx, results) = mpmc::channel::<DecisionBatch>(m * cfg.ring_depth.max(1) * 2);
-        let mut senders = Vec::with_capacity(m);
-        let mut workers = Vec::with_capacity(m);
-        for id in 0..m {
-            let (tx, handle) =
-                spawn_worker(id, m, cfg, hot.clone(), max_seq_len, epoch, result_tx.clone());
-            senders.push(tx);
-            workers.push(Some(handle));
-        }
-        SamplerService {
-            senders: Mutex::new(senders),
-            results,
-            result_tx: Some(result_tx),
-            workers: Mutex::new(workers),
-            pending: Mutex::new(HashMap::new()),
-            live_tasks: Mutex::new(HashMap::new()),
-            purged: Mutex::new(std::collections::HashSet::new()),
-            registry: Mutex::new(HashMap::new()),
+        // Slot table sized off the ring-depth knob; rings get 2x slack so
+        // recovery duplicates never wedge a resubmit.
+        let slot_cap = (cfg.ring_depth.max(1) * 64).max(64);
+        let svc = SamplerService {
+            rings: Arc::new((0..m).map(|_| mpmc::Ring::new(slot_cap * 2)).collect()),
+            slots: Arc::new(TaskSlots::new(slot_cap, m)),
+            dead_flags: Arc::new((0..m).map(|_| AtomicBool::new(false)).collect()),
+            crash_flags: Arc::new((0..m).map(|_| AtomicBool::new(false)).collect()),
+            incarnations: (0..m).map(|_| AtomicU32::new(1)).collect(),
             respawns: (0..m).map(|_| AtomicU32::new(0)).collect(),
-            reg_gen: AtomicU64::new(0),
+            stuck_respawns: AtomicU32::new(0),
+            workers: Mutex::new((0..m).map(|_| None).collect()),
             recovery_log: Mutex::new(RecoveryStats::default()),
             cfg: cfg.clone(),
             hot,
             max_seq_len,
             m,
             epoch,
+        };
+        {
+            let mut workers = svc.workers.lock().unwrap();
+            for (id, slot) in workers.iter_mut().enumerate() {
+                *slot = Some(svc.spawn_worker(id));
+            }
         }
+        svc
+    }
+
+    fn spawn_worker(&self, id: usize) -> JoinHandle<SamplerStats> {
+        let worker = SamplerWorker {
+            id,
+            m: self.m,
+            incarnation: self.incarnations[id].load(Ordering::Acquire),
+            pipeline: DecisionPipeline::new(self.cfg.variant, self.hot.clone(), self.cfg.seed),
+            epoch: self.epoch,
+            rings: self.rings.clone(),
+            slots: self.slots.clone(),
+            crash_flags: self.crash_flags.clone(),
+            owned: HashMap::new(),
+            max_seq_len: self.max_seq_len,
+            processed: 0,
+        };
+        let guard = DeathGuard { flags: self.dead_flags.clone(), id };
+        std::thread::Builder::new()
+            .name(format!("sampler-{id}"))
+            .spawn(move || {
+                let _guard = guard;
+                worker.run()
+            })
+            .expect("spawn sampler")
     }
 
     pub fn num_samplers(&self) -> usize {
@@ -507,9 +547,11 @@ impl SamplerService {
         self.epoch
     }
 
-    /// Register a new sequence (routed to its owner sampler).
-    pub fn register(&self, seq_id: u64, prompt: &[u32], params: &SamplingParams) {
-        self.register_full(seq_id, prompt, &[], params, None);
+    /// Register a new sequence: mint its replay record. The caller keeps
+    /// the handle and passes it (cloned) in every task that carries the
+    /// sequence's column — registration touches no service state at all.
+    pub fn register(&self, seq_id: u64, prompt: &[u32], params: &SamplingParams) -> SeqHandle {
+        self.register_full(seq_id, prompt, &[], params, None)
     }
 
     /// Register with an optional structured-decoding constraint.
@@ -519,12 +561,15 @@ impl SamplerService {
         prompt: &[u32],
         params: &SamplingParams,
         grammar: Option<Arc<GrammarConstraint>>,
-    ) {
-        self.register_full(seq_id, prompt, &[], params, grammar);
+    ) -> SeqHandle {
+        self.register_full(seq_id, prompt, &[], params, grammar)
     }
 
     /// Register a (possibly resumed) sequence: `output` carries tokens
-    /// generated before a preemption, replayed into the owner's local state.
+    /// generated before a preemption, replayed by whichever worker next
+    /// decides for it. Always mints a **new** record — the Arc-identity
+    /// incarnation guard that keeps stale in-flight verdicts away from the
+    /// fresh registration.
     pub fn register_full(
         &self,
         seq_id: u64,
@@ -532,165 +577,91 @@ impl SamplerService {
         output: &[u32],
         params: &SamplingParams,
         grammar: Option<Arc<GrammarConstraint>>,
-    ) {
-        let owner = (seq_id as usize) % self.m;
-        let senders = plock(&self.senders);
-        // Registry entry BEFORE the ring push, both under the senders lock:
-        // recovery (which also holds that lock) therefore either sees the
-        // entry and replays it, or runs before this registration entirely —
-        // never in between, where the push could vanish into a dead ring
-        // without a registry record to replay from.
-        plock(&self.registry).insert(
-            seq_id,
-            RegEntry {
-                gen: self.reg_gen.fetch_add(1, Ordering::Relaxed),
-                prompt: prompt.to_vec(),
-                output: output.to_vec(),
-                params: params.clone(),
-                grammar: grammar.clone(),
-            },
-        );
-        senders[owner].push(SamplerMsg::Register {
-            seq_id,
-            prompt: prompt.to_vec(),
-            output: output.to_vec(),
-            params: params.clone(),
-            grammar,
-        });
+    ) -> SeqHandle {
+        SeqRec::new(seq_id, prompt, output, params, grammar, self.max_seq_len)
     }
 
-    /// Retire a finished sequence.
-    pub fn retire(&self, seq_id: u64) {
-        let owner = (seq_id as usize) % self.m;
-        let senders = plock(&self.senders);
-        plock(&self.registry).remove(&seq_id);
-        senders[owner].push(SamplerMsg::Retire { seq_id });
+    /// Retire a finished sequence: flips the record's flag, so any task
+    /// still in flight decides nothing for it.
+    pub fn retire(&self, rec: &SeqHandle) {
+        rec.retire();
     }
 
-    /// Publish one iteration's logits + metadata to all samplers. Shared
-    /// pools rely on the caller namespacing `task.iter` (unique fleet-wide).
-    /// The task is retained until collected so crash-recovery can resubmit
-    /// it to a respawned worker.
+    /// Publish one iteration's logits + metadata to all shards. Shared
+    /// pools rely on the caller namespacing `task.iter` (unique
+    /// fleet-wide). Lock-free: one slot-table CAS walk plus `m` ring
+    /// pushes; backpressure (full table / full ring) spins.
     pub fn submit(&self, task: IterationTask) {
+        debug_assert_eq!(
+            task.recs.len(),
+            task.columns.len(),
+            "task {}: recs must align with columns",
+            task.iter
+        );
         let task = Arc::new(task);
-        let senders = plock(&self.senders);
-        // Stamp each column with its sequence's current registration
-        // incarnation — the absorb-time freshness guard for the registry
-        // roll-forward (see [`RegEntry::gen`]). Unregistered columns get
-        // no stamp, so their verdicts never roll the registry.
-        let col_gens: HashMap<usize, u64> = {
-            let reg = plock(&self.registry);
-            task.columns
-                .iter()
-                .filter_map(|c| reg.get(&c.seq_id).map(|e| (c.col, e.gen)))
-                .collect()
-        };
-        plock(&self.live_tasks)
-            .insert(task.iter, LiveTask { task: task.clone(), col_gens });
-        for tx in senders.iter() {
-            tx.push(SamplerMsg::Iterate(task.clone()));
+        let slot = self.slots.publish(task.clone());
+        for shard in 0..self.m {
+            self.rings[shard].push(ShardMsg { task: task.clone(), slot, shard });
         }
     }
 
-    /// Bucket one returned batch into the completion queue, rolling its
-    /// verdicts into the replay registry (the service-side mirror of the
-    /// owner worker's roll-forward).
-    fn absorb(&self, batch: DecisionBatch) {
-        if plock(&self.purged).contains(&(batch.iter & TASK_NS_MASK)) {
-            return; // stale answer to a failed-over replica's task
-        }
-        let mut pending = plock(&self.pending);
-        let entry = pending.entry(batch.iter).or_default();
-        if entry.reported.is_empty() {
-            entry.reported = vec![false; self.m];
-        }
-        if entry.reported[batch.sampler_id] {
-            // a respawned worker re-decided a task its crashed predecessor
-            // had already answered — identical by determinism; drop it
-            return;
-        }
-        entry.reported[batch.sampler_id] = true;
-        self.respawns[batch.sampler_id].store(0, Ordering::Relaxed);
-        entry.mb = batch.mb;
-        entry.batches += 1;
-        entry.max_busy = entry.max_busy.max(batch.busy_s);
-        if batch.end_s > batch.start_s {
-            entry.intervals.push((batch.start_s, batch.end_s));
-        }
-        // Roll the verdicts into the replay registry — but only where the
-        // column's submit-time gen stamp still matches the entry (a stale
-        // verdict from before a retire + re-register must not double-apply
-        // against the fresh incarnation; the engine discards the same
-        // verdict through its (slot, seq_id) identity guard).
-        {
-            let live = plock(&self.live_tasks);
-            let col_gens = live.get(&batch.iter).map(|lt| &lt.col_gens);
-            let mut reg = plock(&self.registry);
-            for (col, seq_id, verdict) in &batch.decisions {
-                if let Some(e) = reg.get_mut(seq_id) {
-                    if col_gens.and_then(|g| g.get(col)) == Some(&e.gen) {
-                        e.output.extend_from_slice(&verdict.tokens);
-                    }
-                }
+    /// Assemble a completed task's cells and reset the crash-loop
+    /// breakers (a completed collect is the pool's forward progress).
+    fn assemble(&self, taken: TakenTask) -> Collected {
+        self.stuck_respawns.store(0, Ordering::Relaxed);
+        for &w in &taken.claimants {
+            if let Some(r) = self.respawns.get(w) {
+                r.store(0, Ordering::Relaxed);
             }
         }
-        entry.decisions.extend(batch.decisions);
-    }
-
-    /// Remove task `iter` from the completion queue if all `m` sampler
-    /// batches for it arrived.
-    fn take_if_complete(&self, iter: u64) -> Option<Collected> {
-        let done = {
-            let mut pending = plock(&self.pending);
-            if !pending.get(&iter).is_some_and(|e| e.batches >= self.m) {
-                return None;
+        let mb = taken.task.mb;
+        let mut decisions = Vec::new();
+        let mut intervals = Vec::new();
+        let mut max_busy = 0.0f64;
+        for b in taken.batches {
+            max_busy = max_busy.max(b.busy_s);
+            if b.end_s > b.start_s {
+                intervals.push((b.start_s, b.end_s));
             }
-            pending.remove(&iter).unwrap()
-        };
-        plock(&self.live_tasks).remove(&iter);
-        let mut decisions = done.decisions;
+            decisions.extend(b.decisions);
+        }
         decisions.sort_unstable_by_key(|&(col, _, _)| col);
-        Some(Collected {
-            mb: done.mb,
-            decisions,
-            busy_s: done.max_busy,
-            intervals: done.intervals,
-        })
+        Collected { mb, decisions, busy_s: max_busy, intervals }
     }
 
-    /// Reap dead workers: take + join every finished handle while the
-    /// service is live. Returns their (id, failure message) pairs.
-    fn reap_dead(&self) -> Vec<(usize, String)> {
-        let mut workers = plock(&self.workers);
-        let mut dead = Vec::new();
-        for (id, slot) in workers.iter_mut().enumerate() {
-            if slot.as_ref().is_some_and(|h| h.is_finished()) {
-                let handle = slot.take().unwrap();
-                let msg = match handle.join() {
-                    Err(payload) => format!(
-                        "sampler {id} panicked: {}",
-                        panic_message(payload.as_ref())
-                    ),
-                    Ok(_) => format!("sampler {id} exited mid-service"),
-                };
-                dead.push((id, msg));
-            }
-        }
-        dead
-    }
-
-    /// Propagate or repair sampler-thread death. A worker whose handle is
-    /// finished while the service is live either panicked or exited early;
-    /// without this check a dead worker deadlocks `collect` forever,
-    /// because the surviving workers keep the return channel alive while
-    /// the batch count can never reach `m`. With `cfg.recovery` the corpse
-    /// is respawned and its state replayed (see [`Self::recover`]);
-    /// otherwise — or when the crash-loop breaker trips — the death
-    /// surfaces as an error carrying the panic payload.
+    /// Lock-free liveness check: a handful of atomic loads while every
+    /// worker is healthy; only an actual corpse takes the cold path.
     fn check_workers(&self) -> crate::Result<()> {
-        let dead = self.reap_dead();
-        if dead.is_empty() {
+        if !self.dead_flags.iter().any(|f| f.load(Ordering::Acquire)) {
             return Ok(());
+        }
+        self.handle_dead_workers()
+    }
+
+    /// Cold path: join corpses, run the breakers, respawn on the same
+    /// rings, release dead claims, resubmit unanswered cells. Serialized
+    /// on the workers mutex; concurrent submits/collects proceed — rings
+    /// and the slot table carry all the shared state.
+    #[cold]
+    fn handle_dead_workers(&self) -> crate::Result<()> {
+        let t0 = Instant::now();
+        let mut workers = self.workers.lock().unwrap();
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        for id in 0..self.m {
+            if !self.dead_flags[id].load(Ordering::Acquire) {
+                continue;
+            }
+            let Some(handle) = workers[id].take() else { continue };
+            let msg = match handle.join() {
+                Err(payload) => {
+                    format!("sampler {id} panicked: {}", panic_message(payload.as_ref()))
+                }
+                Ok(_) => format!("sampler {id} exited mid-service"),
+            };
+            dead.push((id, msg));
+        }
+        if dead.is_empty() {
+            return Ok(()); // another collector already recovered this corpse
         }
         if !self.cfg.recovery {
             anyhow::bail!("{}", dead[0].1);
@@ -698,87 +669,32 @@ impl SamplerService {
         for (id, msg) in &dead {
             let n = self.respawns[*id].fetch_add(1, Ordering::Relaxed) + 1;
             if n > MAX_CONSECUTIVE_RESPAWNS {
+                anyhow::bail!("sampler {id} crash-looping ({n} consecutive respawns): {msg}");
+            }
+            let pool_wide = self.stuck_respawns.fetch_add(1, Ordering::Relaxed) + 1;
+            if pool_wide > self.m as u32 * (MAX_CONSECUTIVE_RESPAWNS + 1) {
                 anyhow::bail!(
-                    "sampler {id} crash-looping ({n} consecutive respawns): {msg}"
+                    "sampler pool crash-looping ({pool_wide} respawns without a completed \
+                     collect; last: {msg})"
                 );
             }
         }
-        self.recover(&dead)
-    }
-
-    /// Respawn dead workers and rebuild their state: fresh ring + thread,
-    /// drain the return channel (so `reported` and the registry are
-    /// current), replay owned sequences through the resume-`Register`
-    /// path, and resubmit every live task the corpse had not answered.
-    /// Holds the senders lock throughout so no submit interleaves with a
-    /// half-rebuilt worker.
-    fn recover(&self, dead: &[(usize, String)]) -> crate::Result<()> {
-        let t0 = Instant::now();
-        let mut senders = plock(&self.senders);
-        let Some(result_tx) = &self.result_tx else {
-            anyhow::bail!("{} (service shutting down)", dead[0].1);
-        };
-        for (id, msg) in dead {
+        for (id, msg) in &dead {
             eprintln!("[sampler-service] {msg}; respawning worker {id}");
-            let (tx, handle) = spawn_worker(
-                *id,
-                self.m,
-                &self.cfg,
-                self.hot.clone(),
-                self.max_seq_len,
-                self.epoch,
-                result_tx.clone(),
-            );
-            senders[*id] = tx; // old producer drops; the dead ring closes
-            plock(&self.workers)[*id] = Some(handle);
-        }
-        // Everything the corpses sent before dying is already in the
-        // return channel: drain it so the registry holds their final
-        // roll-forward and `reported` knows which tasks they answered.
-        while let Some(batch) = self.results.try_recv() {
-            self.absorb(batch);
-        }
-        // Replay owned sequences (deterministic order for reproducibility).
-        {
-            let reg = plock(&self.registry);
-            let mut ids: Vec<u64> = reg
-                .keys()
-                .copied()
-                .filter(|s| dead.iter().any(|(id, _)| (*s as usize) % self.m == *id))
-                .collect();
-            ids.sort_unstable();
-            for seq_id in ids {
-                let e = &reg[&seq_id];
-                senders[(seq_id as usize) % self.m].push(SamplerMsg::Register {
-                    seq_id,
-                    prompt: e.prompt.clone(),
-                    output: e.output.clone(),
-                    params: e.params.clone(),
-                    grammar: e.grammar.clone(),
+            // The dead thread's incarnation retires here; its claims are
+            // released by exact CAS (a live claim can never match it).
+            let old_inc = self.incarnations[*id].fetch_add(1, Ordering::AcqRel);
+            for r in self.slots.sweep_dead_claims(claim_pack(*id, old_inc)) {
+                self.rings[r.shard].push(ShardMsg {
+                    task: r.task,
+                    slot: r.slot,
+                    shard: r.shard,
                 });
             }
+            self.dead_flags[*id].store(false, Ordering::Release);
+            workers[*id] = Some(self.spawn_worker(*id));
         }
-        // Resubmit unanswered live tasks to the respawned workers only
-        // (idempotent: `absorb` drops a duplicate answer anyway).
-        {
-            let mut tasks: Vec<(u64, Arc<IterationTask>)> = plock(&self.live_tasks)
-                .iter()
-                .map(|(&id, lt)| (id, lt.task.clone()))
-                .collect();
-            tasks.sort_unstable_by_key(|&(id, _)| id);
-            for (tid, task) in tasks {
-                let answered = plock(&self.pending)
-                    .get(&tid)
-                    .map(|e| e.reported.clone())
-                    .unwrap_or_default();
-                for (id, _) in dead {
-                    if !answered.get(*id).copied().unwrap_or(false) {
-                        senders[*id].push(SamplerMsg::Iterate(task.clone()));
-                    }
-                }
-            }
-        }
-        let mut log = plock(&self.recovery_log);
+        let mut log = self.recovery_log.lock().unwrap();
         log.respawns += dead.len() as u64;
         log.recovery_s += t0.elapsed().as_secs_f64();
         Ok(())
@@ -786,94 +702,71 @@ impl SamplerService {
 
     /// Lifetime recovery statistics (respawn count + recovery seconds).
     pub fn recovery_stats(&self) -> RecoveryStats {
-        *plock(&self.recovery_log)
+        *self.recovery_log.lock().unwrap()
     }
 
-    /// Chaos injection: crash sampler `id` (its thread panics on the next
-    /// message it processes). Recovery — if enabled — repairs it on the
-    /// next collect; otherwise the death surfaces as an error.
+    /// Chaos injection: crash sampler `id` (its thread panics at the top
+    /// of its next loop turn). Recovery — if enabled — repairs it on the
+    /// next collect; otherwise the death surfaces as an error. Also the
+    /// engine-level mapping target for the legacy `poison@<iter>` fault
+    /// syntax, now that no poisonable hot-path mutex exists.
     pub fn inject_sampler_crash(&self, id: usize) {
-        let senders = plock(&self.senders);
-        match senders.get(id) {
-            Some(tx) => {
-                tx.push(SamplerMsg::Crash);
-            }
+        match self.crash_flags.get(id) {
+            Some(flag) => flag.store(true, Ordering::Release),
             // callers validate ids up front (FaultPlan::validate); never
             // let a typo'd id pass as a silently fault-free chaos run
             None => eprintln!(
                 "[sampler-service] chaos: no sampler {id} to crash ({} exist)",
-                senders.len()
+                self.m
             ),
         }
     }
 
-    /// Chaos injection: poison the completion-queue mutex (a thread panics
-    /// while holding it, before touching the data). Every later access
-    /// goes through poison-tolerant locking, so the service keeps
-    /// operating — the injected panic stays contained in its thread.
-    pub fn inject_lock_poison(&self) {
-        std::thread::scope(|s| {
-            let h = s.spawn(|| {
-                let _guard = plock(&self.pending);
-                panic!("chaos: injected lock poison");
-            });
-            let _ = h.join(); // the panic is the point; swallow it
-        });
-    }
-
-    /// Drop all queue state owned by one task-id namespace (a dead engine
-    /// replica's in-flight tasks in a shared pool): its pending partial
-    /// collects and retained live tasks. Its registered sequences are NOT
-    /// dropped here — the router re-registers them (with replay) when it
-    /// requeues the replica's sequences onto survivors.
+    /// Drop all in-flight tasks of one task-id namespace (a dead engine
+    /// replica's in a shared pool): their slots retire without collection.
+    /// Registered sequences are untouched — the router re-registers them
+    /// (minting fresh records) when it requeues onto survivors, and the
+    /// old records absorb any stale in-flight decisions harmlessly.
+    /// Replica ids are never reused, so purging is permanent.
     pub fn purge_namespace(&self, task_base: u64) {
-        plock(&self.purged).insert(task_base);
-        plock(&self.pending).retain(|&id, _| id & TASK_NS_MASK != task_base);
-        plock(&self.live_tasks).retain(|&id, _| id & TASK_NS_MASK != task_base);
+        self.slots.purge_namespace(task_base, TASK_NS_MASK);
     }
 
-    /// Non-blocking collect: drain whatever the samplers have pushed so
-    /// far and return task `iter`'s assembled result if complete. Errors
-    /// if a sampler thread died and could not be recovered.
+    /// Non-blocking collect: return task `iter`'s assembled result if all
+    /// `m` shard cells reported. Errors if a sampler thread died and could
+    /// not be recovered.
     pub fn try_collect(&self, iter: u64) -> crate::Result<Option<Collected>> {
-        loop {
-            if let Some(done) = self.take_if_complete(iter) {
-                return Ok(Some(done));
-            }
-            match self.results.try_recv() {
-                Some(batch) => self.absorb(batch),
-                None => {
-                    self.check_workers()?;
-                    return Ok(None);
-                }
-            }
-        }
+        self.check_workers()?;
+        Ok(self.slots.try_take(iter).map(|t| self.assemble(t)))
     }
 
-    /// Blocking collect for task `iter`: waits until all `m` sampler
-    /// batches arrived, recovering crashed workers along the way (or
-    /// surfacing their panics as errors instead of deadlocking when
-    /// recovery is off or crash-looping).
+    /// Blocking collect for task `iter`: waits until all `m` shard cells
+    /// arrived, recovering crashed workers along the way (or surfacing
+    /// their panics as errors instead of deadlocking when recovery is off
+    /// or crash-looping).
     pub fn collect_checked(&self, iter: u64) -> crate::Result<Collected> {
+        let mut spins = 0u32;
         loop {
-            if let Some(done) = self.take_if_complete(iter) {
-                return Ok(done);
+            self.check_workers()?;
+            if let Some(taken) = self.slots.try_take(iter) {
+                return Ok(self.assemble(taken));
             }
-            match self.results.recv_timeout(Duration::from_millis(20)) {
-                Ok(Some(batch)) => self.absorb(batch),
-                Ok(None) => anyhow::bail!("decision plane disconnected"),
-                Err(()) => self.check_workers()?, // starved: look for corpses
+            spins = spins.saturating_add(1);
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
             }
         }
     }
 
-    /// Collect decisions for iteration `iter` (blocks until all `m` sampler
-    /// batches for that iteration arrived). Returns (col → (seq, verdict))
-    /// plus the max per-sampler busy time (the decision-plane latency that
+    /// Collect decisions for iteration `iter` (blocks until all `m` shard
+    /// cells for that iteration arrived). Returns (col → (seq, verdict))
+    /// plus the max per-shard busy time (the decision-plane latency that
     /// must hide under GPU compute). `expected_cols` is the caller's
-    /// submitted column count, asserted against what came back — a mismatch
-    /// means a sequence was decided by zero or two owners. Panics if a
-    /// sampler died unrecoverably — callers on the fallible path (the
+    /// submitted column count, asserted against what came back — a
+    /// mismatch means a sequence was decided by zero or two shards. Panics
+    /// if a sampler died unrecoverably — callers on the fallible path (the
     /// engine loop) use [`Self::collect_checked`]; this wrapper exists for
     /// tests and benches.
     pub fn collect(&self, iter: u64, expected_cols: usize) -> (Vec<(usize, u64, Verdict)>, f64) {
@@ -890,33 +783,11 @@ impl SamplerService {
     /// that exited cleanly; panicked workers are surfaced per `propagate`
     /// (true = re-panic, false = log and continue — the drop path).
     fn join_all(&mut self, propagate: bool) -> Vec<SamplerStats> {
-        self.result_tx = None; // recovery is over; let the channel disconnect
-        let mut senders = plock(&self.senders);
-        for tx in senders.iter() {
-            tx.close();
+        for ring in self.rings.iter() {
+            ring.close();
         }
-        senders.clear(); // Producer::drop closes the rings
-        drop(senders);
         let mut handles: Vec<Option<JoinHandle<SamplerStats>>> =
-            std::mem::take(&mut *plock(&self.workers));
-        // Drain stray result batches while workers wind down so none blocks
-        // forever on a full return channel (timed waits, not a spin: each
-        // worker drops its sender on exit, so `Ok(None)` means all done).
-        loop {
-            match self.results.recv_timeout(Duration::from_millis(5)) {
-                Ok(Some(_)) => {}  // discard a stray batch
-                Ok(None) => break, // every worker dropped its sender
-                Err(()) => {
-                    let all_done = handles
-                        .iter()
-                        .all(|h| h.as_ref().is_none_or(|h| h.is_finished()));
-                    if all_done {
-                        break;
-                    }
-                }
-            }
-        }
-        while self.results.try_recv().is_some() {}
+            std::mem::take(&mut *self.workers.lock().unwrap());
         let mut stats = Vec::new();
         for (id, slot) in handles.iter_mut().enumerate() {
             let Some(handle) = slot.take() else { continue };
@@ -940,31 +811,6 @@ impl SamplerService {
     pub fn shutdown(mut self) -> Vec<SamplerStats> {
         self.join_all(true)
     }
-}
-
-/// Spawn one sampler worker on a fresh ring (initial start and respawns).
-fn spawn_worker(
-    id: usize,
-    m: usize,
-    cfg: &SamplerConfig,
-    hot: Option<Arc<HotVocab>>,
-    max_seq_len: usize,
-    epoch: Instant,
-    result_tx: mpmc::Sender<DecisionBatch>,
-) -> (spsc::Producer<SamplerMsg>, JoinHandle<SamplerStats>) {
-    let (tx, rx) = spsc::ring::<SamplerMsg>(cfg.ring_depth.max(1) * 64);
-    let worker = SamplerWorker {
-        id,
-        m,
-        pipeline: DecisionPipeline::new(cfg.variant, hot, cfg.seed),
-        epoch,
-        owned: HashMap::new(),
-    };
-    let handle = std::thread::Builder::new()
-        .name(format!("sampler-{id}"))
-        .spawn(move || worker.run(rx, result_tx, max_seq_len))
-        .expect("spawn sampler");
-    (tx, handle)
 }
 
 impl Drop for SamplerService {
@@ -1017,9 +863,9 @@ mod tests {
         let hot = HotVocab::new((0..16).collect(), v).into_arc();
         let svc = SamplerService::start(&cfg, Some(hot), 128);
         let params = SamplingParams::production_default();
-        for s in 0..b as u64 {
-            svc.register(s, &[1, 2, 3], &params);
-        }
+        let handles: Vec<SeqHandle> = (0..b as u64)
+            .map(|s| svc.register(s, &[1, 2, 3], &params))
+            .collect();
         let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
         for iter in 0..iters {
             for &(at, sampler) in crash_at {
@@ -1031,7 +877,9 @@ mod tests {
             let columns: Vec<ColumnMeta> = (0..b)
                 .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
                 .collect();
-            svc.submit(IterationTask::single(iter, view, columns, Vec::new()));
+            let recs: Vec<Option<SeqHandle>> =
+                columns.iter().map(|c| Some(handles[c.seq_id as usize].clone())).collect();
+            svc.submit(IterationTask::single(iter, view, columns, recs, Vec::new()));
             let (decisions, _busy) = svc.collect(iter, b);
             assert_eq!(decisions.len(), b, "every column decided");
             for (col, seq, verdict) in decisions {
@@ -1040,8 +888,8 @@ mod tests {
                 streams[col].push(verdict.tokens[0]);
             }
         }
-        for s in 0..b as u64 {
-            svc.retire(s);
+        for h in &handles {
+            svc.retire(h);
         }
         if crash_at.is_empty() {
             let stats = svc.shutdown();
@@ -1075,9 +923,9 @@ mod tests {
         let params: Vec<SamplingParams> = (0..b)
             .map(|s| SamplingParams { seed: s as u64, ..SamplingParams::production_default() })
             .collect();
-        for s in 0..b {
-            svc.register(s as u64, &prompts[s], &params[s]);
-        }
+        let handles: Vec<SeqHandle> = (0..b)
+            .map(|s| svc.register(s as u64, &prompts[s], &params[s]))
+            .collect();
         let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
         let mut iter = 0u64;
         while streams.iter().any(|s| s.len() < total) {
@@ -1099,6 +947,8 @@ mod tests {
                     iteration: streams[s].len() as u64,
                 })
                 .collect();
+            let recs: Vec<Option<SeqHandle>> =
+                live.iter().map(|&s| Some(handles[s].clone())).collect();
             // view j: per-column logits at that column's decode_iter + j
             let views: Vec<ShardedLogits> = (0..=kmax as u64)
                 .map(|j| {
@@ -1114,6 +964,7 @@ mod tests {
                 mb: 0,
                 views,
                 columns: Arc::new(columns),
+                recs: Arc::new(recs),
                 pre: Arc::new(Vec::new()),
                 drafts: Arc::new(drafts),
             });
@@ -1125,8 +976,8 @@ mod tests {
             }
             iter += 1;
         }
-        for s in 0..b as u64 {
-            svc.retire(s);
+        for h in &handles {
+            svc.retire(h);
         }
         svc.shutdown();
         for s in streams.iter_mut() {
@@ -1180,10 +1031,11 @@ mod tests {
 
     #[test]
     fn crashed_sampler_respawns_and_streams_stay_identical() {
-        // The tentpole: a sampler killed mid-run is respawned, its owned
-        // sequences replayed from the registry, and the in-flight task
-        // resubmitted — the caller sees at most a hiccup and the committed
-        // streams are bit-identical to the fault-free run.
+        // The recovery contract survives the lock-free rebuild: a sampler
+        // killed mid-run is respawned on the same ring, its dead claims
+        // released, unanswered cells resubmitted — the caller sees at most
+        // a hiccup and the committed streams are bit-identical to the
+        // fault-free run.
         let want = run_service(2, DecisionVariant::Offloading, 12);
         for faults in [vec![(4u64, 0usize)], vec![(2, 1), (7, 0)], vec![(0, 0)]] {
             let got =
@@ -1193,50 +1045,83 @@ mod tests {
     }
 
     #[test]
-    fn poisoned_lock_does_not_cascade() {
-        // A panic while holding the completion-queue mutex must be
-        // contained: subsequent submits/collects keep working (the
-        // poisoned-mutex satellite), and the streams stay identical.
-        let want = run_service(2, DecisionVariant::Offloading, 6);
+    fn submit_collect_hot_path_holds_no_service_lock() {
+        // The lock-freedom canary: a background thread grabs every mutex
+        // the service still owns (all cold-path) and sits on them while
+        // the main thread registers, submits, and collects a full
+        // iteration. If any hot-path operation took either lock, this
+        // test would deadlock instead of finishing.
         let cfg = SamplerConfig {
             num_samplers: 2,
             variant: DecisionVariant::Offloading,
-            seed: 42,
+            seed: 11,
             ..Default::default()
         };
-        let hot = HotVocab::new((0..16).collect(), 64).into_arc();
-        let svc = SamplerService::start(&cfg, Some(hot), 128);
+        let svc = SamplerService::start(&cfg, None, 64);
         let params = SamplingParams::production_default();
-        for s in 0..6u64 {
-            svc.register(s, &[1, 2, 3], &params);
-        }
-        let mut streams: Vec<Vec<u32>> = vec![Vec::new(); 6];
-        for iter in 0..6u64 {
-            if iter == 2 {
-                svc.inject_lock_poison();
+        let locks_held = AtomicBool::new(false);
+        let release = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _workers = svc.workers.lock().unwrap();
+                let _log = svc.recovery_log.lock().unwrap();
+                locks_held.store(true, Ordering::Release);
+                while !release.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+            });
+            while !locks_held.load(Ordering::Acquire) {
+                std::thread::yield_now();
             }
-            let view = logits_view(6, 64, iter, 2);
-            let columns: Vec<ColumnMeta> = (0..6)
-                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
-                .collect();
-            svc.submit(IterationTask::single(iter, view, columns, Vec::new()));
-            let done = svc.collect_checked(iter).expect("poison must not cascade");
-            for (col, _, verdict) in done.decisions {
-                streams[col].push(verdict.tokens[0]);
+            let handles: Vec<SeqHandle> =
+                (0..4u64).map(|q| svc.register(q, &[1, 2], &params)).collect();
+            for iter in 0..4u64 {
+                let view = logits_view(4, 64, iter, 1);
+                let columns: Vec<ColumnMeta> = (0..4)
+                    .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                    .collect();
+                let recs: Vec<Option<SeqHandle>> =
+                    columns.iter().map(|c| Some(handles[c.seq_id as usize].clone())).collect();
+                svc.submit(IterationTask::single(iter, view, columns, recs, Vec::new()));
+                // Poll with the lock-free non-blocking collect only.
+                let done = loop {
+                    if let Some(d) = svc.try_collect(iter).expect("healthy pool") {
+                        break d;
+                    }
+                    std::thread::yield_now();
+                };
+                assert_eq!(done.decisions.len(), 4);
             }
-        }
-        for s in 0..6u64 {
-            svc.retire(s);
-        }
+            for h in &handles {
+                svc.retire(h);
+            }
+            release.store(true, Ordering::Release);
+        });
         svc.shutdown();
-        assert_eq!(streams, want);
+    }
+
+    #[test]
+    fn submit_path_types_are_send() {
+        // Compile-time guard: everything the lock-free submit path moves
+        // across threads is Send (and the shared handles Sync) — the
+        // static half of the no-mutex-on-the-hot-path acceptance bar.
+        fn assert_send<T: Send>() {}
+        fn assert_sync<T: Sync>() {}
+        assert_send::<ShardMsg>();
+        assert_send::<Arc<IterationTask>>();
+        assert_send::<SeqHandle>();
+        assert_send::<mpmc::Ring<ShardMsg>>();
+        assert_sync::<TaskSlots>();
+        assert_sync::<SamplerService>();
     }
 
     #[test]
     fn crash_loop_trips_breaker_when_recovery_enabled() {
         // A deterministically-poisonous task (out-of-range column) kills
         // every respawn: recovery must give up after the breaker limit and
-        // surface the real panic instead of looping forever.
+        // surface the real panic instead of looping forever. With work
+        // stealing the kills may spread across workers — the pool-wide
+        // breaker bounds that case.
         let cfg = SamplerConfig {
             num_samplers: 2,
             variant: DecisionVariant::Offloading,
@@ -1244,12 +1129,13 @@ mod tests {
         };
         let svc = SamplerService::start(&cfg, None, 64);
         let params = SamplingParams::default();
-        svc.register(0, &[1], &params);
+        let h = svc.register(0, &[1], &params);
         let view = logits_view(1, 32, 0, 1);
         svc.submit(IterationTask::single(
             0,
             view,
             vec![ColumnMeta { col: 7, seq_id: 0, iteration: 0 }],
+            vec![Some(h)],
             Vec::new(),
         ));
         let err = svc
@@ -1267,7 +1153,7 @@ mod tests {
     fn worker_panic_surfaces_instead_of_deadlocking_without_recovery() {
         // With recovery disabled, the pre-hardening contract still holds:
         // a dead worker is joined and its panic surfaces as an error on
-        // the first collect (never a deadlock, never a PoisonError).
+        // the first collect (never a deadlock).
         let cfg = SamplerConfig {
             num_samplers: 2,
             variant: DecisionVariant::Offloading,
@@ -1276,12 +1162,13 @@ mod tests {
         };
         let svc = SamplerService::start(&cfg, None, 64);
         let params = SamplingParams::default();
-        svc.register(0, &[1], &params);
+        let h = svc.register(0, &[1], &params);
         let view = logits_view(1, 32, 0, 1);
         svc.submit(IterationTask::single(
             0,
             view,
             vec![ColumnMeta { col: 7, seq_id: 0, iteration: 0 }],
+            vec![Some(h)],
             Vec::new(),
         ));
         let res = svc.collect_checked(0);
@@ -1299,7 +1186,7 @@ mod tests {
     fn completion_queue_reaps_tasks_out_of_order() {
         // Two tasks in flight at once (the pipelined executor's shape):
         // reaping the later one first must work, and the earlier one's
-        // batches stay buffered in the completion queue.
+        // cells stay parked in their slot.
         let cfg = SamplerConfig {
             num_samplers: 2,
             variant: DecisionVariant::Offloading,
@@ -1308,21 +1195,20 @@ mod tests {
         };
         let svc = SamplerService::start(&cfg, None, 128);
         let params = SamplingParams::production_default();
-        for s in 0..2u64 {
-            svc.register(s, &[1, 2], &params);
-        }
+        let handles: Vec<SeqHandle> =
+            (0..2u64).map(|s| svc.register(s, &[1, 2], &params)).collect();
         for iter in 0..2u64 {
             let view = logits_view(2, 64, iter, 1);
             let columns: Vec<ColumnMeta> = (0..2)
                 .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
                 .collect();
-            svc.submit(IterationTask::single(iter, view, columns, Vec::new()));
+            let recs: Vec<Option<SeqHandle>> =
+                columns.iter().map(|c| Some(handles[c.seq_id as usize].clone())).collect();
+            svc.submit(IterationTask::single(iter, view, columns, recs, Vec::new()));
         }
         let later = svc.collect_checked(1).expect("task 1");
         assert_eq!(later.decisions.len(), 2);
         assert!(later.busy_s >= 0.0);
-        // task 0 completes too (possibly already buffered by the first
-        // collect's draining; otherwise try_collect drains it here)
         let earlier = loop {
             if let Some(done) = svc.try_collect(0).expect("no dead workers") {
                 break done;
@@ -1333,8 +1219,8 @@ mod tests {
         for (start, end) in earlier.intervals.iter().chain(&later.intervals) {
             assert!(end >= start, "interval {start}..{end}");
         }
-        for s in 0..2u64 {
-            svc.retire(s);
+        for h in &handles {
+            svc.retire(h);
         }
         svc.shutdown();
     }
@@ -1349,9 +1235,8 @@ mod tests {
         };
         let svc = SamplerService::start(&cfg, None, 64);
         let params = SamplingParams::production_default();
-        for s in 0..2u64 {
-            svc.register(s, &[1, 2], &params);
-        }
+        let handles: Vec<SeqHandle> =
+            (0..2u64).map(|s| svc.register(s, &[1, 2], &params)).collect();
         let (base_a, base_b) = (1u64 << TASK_NS_SHIFT, 2u64 << TASK_NS_SHIFT);
         for (base, seq) in [(base_a, 0u64), (base_b, 1u64)] {
             let view = logits_view(1, 64, seq, 1);
@@ -1359,6 +1244,7 @@ mod tests {
                 base,
                 view,
                 vec![ColumnMeta { col: 0, seq_id: seq, iteration: 0 }],
+                vec![Some(handles[seq as usize].clone())],
                 Vec::new(),
             ));
         }
@@ -1370,8 +1256,8 @@ mod tests {
             svc.try_collect(base_a).expect("no dead workers").is_none(),
             "purged namespace must not complete"
         );
-        for s in 0..2u64 {
-            svc.retire(s);
+        for h in &handles {
+            svc.retire(h);
         }
         svc.shutdown();
     }
@@ -1385,18 +1271,53 @@ mod tests {
         };
         let svc = SamplerService::start(&cfg, None, 64);
         let params = SamplingParams::default();
-        svc.register(7, &[1], &params);
-        svc.retire(7);
-        // Iterating a retired sequence: no decision is produced for it.
+        let h = svc.register(7, &[1], &params);
+        svc.retire(&h);
+        // Iterating a retired sequence: no decision is produced for it,
+        // even though the stale task still carries the retired record.
         let view = logits_view(1, 32, 0, 1);
         svc.submit(IterationTask::single(
             0,
             view,
             vec![ColumnMeta { col: 0, seq_id: 7, iteration: 0 }],
+            vec![Some(h)],
             Vec::new(),
         ));
         let (decisions, _) = svc.collect(0, 0);
         assert!(decisions.is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reregister_mints_a_fresh_record_and_orphans_the_old() {
+        // The Arc-identity incarnation guard: retire + re-register while a
+        // task is in flight must leave the new record exactly as seeded —
+        // the stale task's decisions land on the orphaned old record.
+        let cfg = SamplerConfig {
+            num_samplers: 1,
+            variant: DecisionVariant::Offloading,
+            seed: 5,
+            ..Default::default()
+        };
+        let svc = SamplerService::start(&cfg, None, 64);
+        let params = SamplingParams::production_default();
+        let old = svc.register(3, &[1, 2], &params);
+        let view = logits_view(1, 64, 0, 1);
+        svc.submit(IterationTask::single(
+            0,
+            view,
+            vec![ColumnMeta { col: 0, seq_id: 3, iteration: 0 }],
+            vec![Some(old.clone())],
+            Vec::new(),
+        ));
+        let (decisions, _) = svc.collect(0, 1);
+        assert_eq!(decisions.len(), 1);
+        assert_eq!(old.decided_len(), 1, "decision logged on the old record");
+        svc.retire(&old);
+        let fresh = svc.register_full(3, &[1, 2], &[], &params, None);
+        assert!(!Arc::ptr_eq(&old, &fresh), "re-register mints a new record");
+        assert_eq!(fresh.decided_len(), 0, "fresh record untouched by the stale task");
+        svc.retire(&fresh);
         svc.shutdown();
     }
 }

@@ -1,0 +1,492 @@
+//! Lock-free in-flight task table with quiescent-state reclamation —
+//! the shared pool's completion queue without the completion-queue mutex
+//! (DESIGN.md §11).
+//!
+//! Every submitted [`IterationTask`] occupies one slot holding the task
+//! `Arc`, one **cell** per sampler shard for that shard's
+//! [`DecisionBatch`], one packed **claim word** per cell, and a `reported`
+//! bitmask. The life of a slot:
+//!
+//! ```text
+//! FREE/RETIRED --alloc (CAS)--> RESERVED --init--> PUBLISHED
+//!     PUBLISHED --all cells reported, collector CAS--> COLLECTING
+//!     COLLECTING --cells moved out--> RETIRED  (contents reclaimed at
+//!                                               next alloc, when no
+//!                                               reader holds a pin)
+//! ```
+//!
+//! **Claims.** A worker takes a cell by CAS-ing its claim word from 0 to
+//! `(1<<63) | (worker << 32) | incarnation` — claim and claimant identity
+//! are one atomic word, so crash recovery can release a *dead*
+//! incarnation's claim with a single CAS and can never race a live
+//! worker's (a live claim carries the live incarnation, which recovery
+//! does not match). Duplicate task messages are therefore harmless: the
+//! claim CAS admits exactly one decider per cell.
+//!
+//! **Pins (quiescent-state reclamation).** Readers guard short accesses to
+//! a slot's contents by incrementing `readers` and *then* validating
+//! `(state, task_id)`; allocation reuses a RETIRED slot only after
+//! observing `readers == 0` from RESERVED, so contents are never dropped
+//! while any validated reader exists. Pins are held only across the
+//! atomic claim/write/read sections — never across a decision — so
+//! reclamation never waits on user code.
+
+use super::service::{DecisionBatch, IterationTask};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+const FREE: u64 = 0;
+const RESERVED: u64 = 1;
+const PUBLISHED: u64 = 2;
+const COLLECTING: u64 = 3;
+const RETIRED: u64 = 4;
+
+/// Pack a cell claim: bit 63 = claimed, bits 62..32 = worker id,
+/// bits 31..0 = that worker thread's incarnation.
+pub fn claim_pack(worker: usize, incarnation: u32) -> u64 {
+    (1u64 << 63) | ((worker as u64) << 32) | incarnation as u64
+}
+
+/// Worker id carried by a packed claim word.
+pub fn claim_worker(packed: u64) -> usize {
+    ((packed >> 32) & 0x7FFF_FFFF) as usize
+}
+
+struct Slot {
+    state: AtomicU64,
+    task_id: AtomicU64,
+    /// Pin count — readers currently validated against this slot.
+    readers: AtomicU32,
+    /// Bit `v` set once cell `v`'s batch is written.
+    reported: AtomicU64,
+    claims: Box<[AtomicU64]>,
+    cells: Box<[UnsafeCell<Option<DecisionBatch>>]>,
+    task: UnsafeCell<Option<Arc<IterationTask>>>,
+}
+
+// Cell/task contents are only touched by the claim/pin/state protocol
+// above; every access path is argued at its unsafe block.
+unsafe impl Send for Slot {}
+unsafe impl Sync for Slot {}
+
+/// RAII pin on one slot (see module docs). Dropping it quiesces the read.
+pub struct Pin<'a> {
+    slot: &'a Slot,
+}
+
+impl Drop for Pin<'_> {
+    fn drop(&mut self) {
+        self.slot.readers.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// A completed task moved out of its slot by the collector.
+pub struct TakenTask {
+    pub task: Arc<IterationTask>,
+    /// One batch per cell, in cell (shard) order.
+    pub batches: Vec<DecisionBatch>,
+    /// The worker ids whose claims answered each cell — crash-loop
+    /// breakers reset on these (proof of forward progress).
+    pub claimants: Vec<usize>,
+}
+
+/// A cell crash recovery wants re-decided: the claim (if any) belonged to
+/// a dead incarnation and was released, or the in-flight message may have
+/// died with its consumer.
+pub struct Resubmit {
+    pub task_id: u64,
+    pub slot: usize,
+    pub shard: usize,
+    pub task: Arc<IterationTask>,
+}
+
+/// Fixed-size lock-free table of in-flight tasks (see module docs).
+pub struct TaskSlots {
+    slots: Box<[Slot]>,
+    m: usize,
+    full_mask: u64,
+    /// Rotating allocation cursor (load spread, not correctness).
+    cursor: AtomicUsize,
+}
+
+impl TaskSlots {
+    /// `capacity` in-flight tasks, `m` cells each. `m <= 63` (the reported
+    /// bitmask plus the claim packing bound it).
+    pub fn new(capacity: usize, m: usize) -> TaskSlots {
+        assert!(m >= 1 && m <= 63, "sampler count {m} out of range 1..=63");
+        let slots: Box<[Slot]> = (0..capacity.max(1))
+            .map(|_| Slot {
+                state: AtomicU64::new(FREE),
+                task_id: AtomicU64::new(0),
+                readers: AtomicU32::new(0),
+                reported: AtomicU64::new(0),
+                claims: (0..m).map(|_| AtomicU64::new(0)).collect(),
+                cells: (0..m).map(|_| UnsafeCell::new(None)).collect(),
+                task: UnsafeCell::new(None),
+            })
+            .collect();
+        TaskSlots {
+            slots,
+            m,
+            full_mask: (1u64 << m) - 1,
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Try to place a task, reclaiming a RETIRED slot's contents if its
+    /// readers have quiesced. Hands the task back when every slot is in
+    /// flight.
+    pub fn try_publish(
+        &self,
+        task: Arc<IterationTask>,
+    ) -> Result<usize, Arc<IterationTask>> {
+        let n = self.slots.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed);
+        for off in 0..n {
+            let idx = (start + off) % n;
+            let slot = &self.slots[idx];
+            let st = slot.state.load(Ordering::Acquire);
+            if st != FREE && st != RETIRED {
+                continue;
+            }
+            if slot
+                .state
+                .compare_exchange(st, RESERVED, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            // Reclamation gate: contents may only be dropped once no
+            // pinned reader remains. A racing pin that lands after the
+            // CAS sees RESERVED at validation and backs out, so a zero
+            // here is stable for the duration of the init.
+            if slot.readers.load(Ordering::Acquire) != 0 {
+                slot.state.store(st, Ordering::Release);
+                continue;
+            }
+            // Exclusive: state is RESERVED (no new pins validate) and
+            // readers == 0 (no old pin outstanding).
+            unsafe {
+                *slot.task.get() = Some(task);
+                for cell in slot.cells.iter() {
+                    *cell.get() = None;
+                }
+            }
+            let id = unsafe { (*slot.task.get()).as_ref().unwrap().iter };
+            slot.task_id.store(id, Ordering::Relaxed);
+            slot.reported.store(0, Ordering::Relaxed);
+            for c in slot.claims.iter() {
+                c.store(0, Ordering::Relaxed);
+            }
+            slot.state.store(PUBLISHED, Ordering::Release);
+            return Ok(idx);
+        }
+        Err(task)
+    }
+
+    /// Place a task, spinning (yield) while the table is full — the
+    /// submit-side backpressure, analogous to a full ring.
+    pub fn publish(&self, mut task: Arc<IterationTask>) -> usize {
+        loop {
+            match self.try_publish(task) {
+                Ok(idx) => return idx,
+                Err(back) => {
+                    task = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Pin slot `idx` if it still carries `task_id` in a readable state.
+    pub fn pin(&self, idx: usize, task_id: u64) -> Option<Pin<'_>> {
+        let slot = &self.slots[idx];
+        slot.readers.fetch_add(1, Ordering::AcqRel);
+        let st = slot.state.load(Ordering::Acquire);
+        if st == PUBLISHED && slot.task_id.load(Ordering::Relaxed) == task_id {
+            Some(Pin { slot })
+        } else {
+            slot.readers.fetch_sub(1, Ordering::Release);
+            None
+        }
+    }
+
+    /// CAS-claim cell `shard` of slot `idx` with a packed claim word.
+    /// Exactly one caller wins per cell lifetime; duplicates bounce off.
+    /// Caller must hold a pin on the slot.
+    pub fn try_claim(&self, idx: usize, shard: usize, packed: u64) -> bool {
+        self.slots[idx].claims[shard]
+            .compare_exchange(0, packed, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Write cell `shard`'s batch and mark it reported. Caller must hold a
+    /// pin *and* the cell's claim — the claim makes this the cell's unique
+    /// writer, the pin keeps the contents alive across the write.
+    pub fn publish_cell(&self, idx: usize, shard: usize, batch: DecisionBatch) {
+        let slot = &self.slots[idx];
+        unsafe { *slot.cells[shard].get() = Some(batch) };
+        slot.reported.fetch_or(1u64 << shard, Ordering::AcqRel);
+    }
+
+    /// Collect task `task_id` if every cell reported: moves the batches
+    /// (and the task `Arc`, releasing its logits) out and retires the
+    /// slot. `None` while incomplete or unknown.
+    pub fn try_take(&self, task_id: u64) -> Option<TakenTask> {
+        for slot in self.slots.iter() {
+            if slot.state.load(Ordering::Acquire) != PUBLISHED
+                || slot.task_id.load(Ordering::Relaxed) != task_id
+            {
+                continue;
+            }
+            if slot.reported.load(Ordering::Acquire) != self.full_mask {
+                return None;
+            }
+            if slot
+                .state
+                .compare_exchange(PUBLISHED, COLLECTING, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                return None; // another collector of the same id won
+            }
+            // Exclusive: COLLECTING blocks writers (pin validation) and
+            // allocation (needs RETIRED); all cell writes happened-before
+            // the reported mask read above.
+            let claimants: Vec<usize> = slot
+                .claims
+                .iter()
+                .map(|c| claim_worker(c.load(Ordering::Relaxed)))
+                .collect();
+            let batches: Vec<DecisionBatch> = slot
+                .cells
+                .iter()
+                .filter_map(|c| unsafe { (*c.get()).take() })
+                .collect();
+            let task = unsafe { (*slot.task.get()).take() }.expect("published slot has task");
+            slot.state.store(RETIRED, Ordering::Release);
+            return Some(TakenTask { task, batches, claimants });
+        }
+        None
+    }
+
+    /// Retire every in-flight task of one task-id namespace (a dead
+    /// replica's): they will never be collected, so their slots go
+    /// straight to RETIRED and are reclaimed at the next allocation. Must
+    /// not race submits *from that namespace* (the namespace owner is dead
+    /// by contract); concurrent submits, decisions, and collects of other
+    /// namespaces are fine.
+    pub fn purge_namespace(&self, task_base: u64, ns_mask: u64) {
+        for slot in self.slots.iter() {
+            if slot.state.load(Ordering::Acquire) == PUBLISHED
+                && slot.task_id.load(Ordering::Relaxed) & ns_mask == task_base
+            {
+                let _ = slot.state.compare_exchange(
+                    PUBLISHED,
+                    RETIRED,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                );
+            }
+        }
+    }
+
+    /// Crash recovery: release every claim held by a dead worker
+    /// incarnation (`packed_dead`) and list every unreported, now-unclaimed
+    /// cell for resubmission. Cells whose message may still sit in a live
+    /// ring are listed too — duplicates are resolved by the claim CAS.
+    pub fn sweep_dead_claims(&self, packed_dead: u64) -> Vec<Resubmit> {
+        let mut out = Vec::new();
+        for (idx, slot) in self.slots.iter().enumerate() {
+            let task_id = slot.task_id.load(Ordering::Relaxed);
+            let Some(pin) = self.pin(idx, task_id) else { continue };
+            let reported = slot.reported.load(Ordering::Acquire);
+            for shard in 0..self.m {
+                if reported & (1u64 << shard) != 0 {
+                    continue;
+                }
+                let claim = &slot.claims[shard];
+                if claim.load(Ordering::Acquire) == packed_dead {
+                    // Release the dead claim; a live claim never matches a
+                    // dead incarnation, so this cannot steal a live cell.
+                    let _ = claim.compare_exchange(
+                        packed_dead,
+                        0,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
+                }
+                if claim.load(Ordering::Acquire) == 0 {
+                    // Pinned + PUBLISHED: the task field is stable.
+                    let task = unsafe { (*slot.task.get()).as_ref().unwrap().clone() };
+                    out.push(Resubmit { task_id, slot: idx, shard, task });
+                }
+            }
+            drop(pin);
+        }
+        out.sort_unstable_by_key(|r| (r.task_id, r.shard));
+        out
+    }
+
+    /// How many slots are currently in flight (PUBLISHED or COLLECTING) —
+    /// observability for tests and the chaos harness.
+    pub fn in_flight(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| {
+                let st = s.state.load(Ordering::Relaxed);
+                st == PUBLISHED || st == COLLECTING
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decision::verify::Verdict;
+
+    fn mk_task(iter: u64) -> Arc<IterationTask> {
+        Arc::new(IterationTask {
+            iter,
+            mb: 0,
+            views: Vec::new(),
+            columns: Arc::new(Vec::new()),
+            recs: Arc::new(Vec::new()),
+            pre: Arc::new(Vec::new()),
+            drafts: Arc::new(Vec::new()),
+        })
+    }
+
+    fn mk_batch(iter: u64, sampler: usize) -> DecisionBatch {
+        DecisionBatch {
+            iter,
+            mb: 0,
+            sampler_id: sampler,
+            decisions: vec![(
+                sampler,
+                sampler as u64,
+                Verdict { tokens: vec![iter as u32], accepted: 0, proposed: 0 },
+            )],
+            busy_s: 0.0,
+            start_s: 0.0,
+            end_s: 0.0,
+        }
+    }
+
+    /// Full protocol walk: publish → claim/write per cell → take.
+    #[test]
+    fn publish_claim_report_collect_roundtrip() {
+        let slots = TaskSlots::new(4, 2);
+        let idx = slots.try_publish(mk_task(42)).ok().unwrap();
+        assert!(slots.try_take(42).is_none(), "incomplete: only 0/2 cells");
+        for shard in 0..2 {
+            let pin = slots.pin(idx, 42).expect("published slot pins");
+            assert!(slots.try_claim(idx, shard, claim_pack(shard, 1)));
+            assert!(!slots.try_claim(idx, shard, claim_pack(1 - shard, 1)), "dup claim");
+            slots.publish_cell(idx, shard, mk_batch(42, shard));
+            drop(pin);
+        }
+        let taken = slots.try_take(42).expect("complete");
+        assert_eq!(taken.batches.len(), 2);
+        assert_eq!(taken.claimants, vec![0, 1]);
+        assert!(slots.try_take(42).is_none(), "collected once");
+    }
+
+    #[test]
+    fn table_full_backpressures_and_reuses_retired() {
+        let slots = TaskSlots::new(2, 1);
+        let a = slots.try_publish(mk_task(1)).ok().unwrap();
+        let _b = slots.try_publish(mk_task(2)).ok().unwrap();
+        assert!(slots.try_publish(mk_task(3)).is_err(), "table full");
+        let pin = slots.pin(a, 1).unwrap();
+        assert!(slots.try_claim(a, 0, claim_pack(0, 1)));
+        slots.publish_cell(a, 0, mk_batch(1, 0));
+        drop(pin);
+        assert!(slots.try_take(1).is_some());
+        let c = slots.try_publish(mk_task(3)).unwrap_or_else(|_| panic!("retired slot reused"));
+        assert_eq!(c, a);
+    }
+
+    /// The reclamation invariant: a RETIRED slot is not reused while a
+    /// reader still holds a pin taken before retirement.
+    #[test]
+    fn pinned_slot_is_not_reclaimed() {
+        let slots = TaskSlots::new(1, 1);
+        let idx = slots.try_publish(mk_task(5)).ok().unwrap();
+        let pin = slots.pin(idx, 5).unwrap();
+        {
+            let p2 = slots.pin(idx, 5).unwrap();
+            slots.try_claim(idx, 0, claim_pack(0, 1));
+            slots.publish_cell(idx, 0, mk_batch(5, 0));
+            drop(p2);
+        }
+        assert!(slots.try_take(5).is_some()); // slot now RETIRED
+        assert!(
+            slots.try_publish(mk_task(6)).is_err(),
+            "pinned RETIRED slot must not be reclaimed"
+        );
+        drop(pin);
+        assert!(slots.try_publish(mk_task(6)).is_ok(), "quiesced: reusable");
+    }
+
+    #[test]
+    fn pin_validates_state_and_id() {
+        let slots = TaskSlots::new(2, 1);
+        let idx = slots.try_publish(mk_task(9)).ok().unwrap();
+        assert!(slots.pin(idx, 8).is_none(), "wrong id");
+        assert!(slots.pin(idx, 9).is_some());
+        slots.purge_namespace(0, 0); // everything matches base 0, mask 0
+        assert!(slots.pin(idx, 9).is_none(), "retired by purge");
+    }
+
+    #[test]
+    fn purge_retires_only_matching_namespace() {
+        use crate::decision::service::{TASK_NS_MASK, TASK_NS_SHIFT};
+        let slots = TaskSlots::new(4, 1);
+        let a = 1u64 << TASK_NS_SHIFT;
+        let b = 2u64 << TASK_NS_SHIFT;
+        slots.try_publish(mk_task(a | 1)).ok().unwrap();
+        let bi = slots.try_publish(mk_task(b | 1)).ok().unwrap();
+        slots.purge_namespace(a, TASK_NS_MASK);
+        assert_eq!(slots.in_flight(), 1);
+        assert!(slots.pin(bi, b | 1).is_some(), "other namespace untouched");
+    }
+
+    #[test]
+    fn sweep_releases_dead_claims_and_lists_unreported_cells() {
+        let slots = TaskSlots::new(2, 2);
+        let idx = slots.try_publish(mk_task(7)).ok().unwrap();
+        // Worker 0 (incarnation 1) claims cell 0 then "dies" pre-report;
+        // cell 1 reports normally via worker 1.
+        let pin = slots.pin(idx, 7).unwrap();
+        assert!(slots.try_claim(idx, 0, claim_pack(0, 1)));
+        assert!(slots.try_claim(idx, 1, claim_pack(1, 1)));
+        slots.publish_cell(idx, 1, mk_batch(7, 1));
+        drop(pin);
+        let resub = slots.sweep_dead_claims(claim_pack(0, 1));
+        assert_eq!(resub.len(), 1);
+        assert_eq!((resub[0].slot, resub[0].shard, resub[0].task_id), (idx, 0, 7));
+        // The claim is free again: the respawned incarnation can take it.
+        let pin = slots.pin(idx, 7).unwrap();
+        assert!(slots.try_claim(idx, 0, claim_pack(0, 2)));
+        slots.publish_cell(idx, 0, mk_batch(7, 0));
+        drop(pin);
+        assert!(slots.try_take(7).is_some());
+    }
+
+    #[test]
+    fn sweep_never_releases_live_claims() {
+        let slots = TaskSlots::new(1, 1);
+        let idx = slots.try_publish(mk_task(3)).ok().unwrap();
+        let pin = slots.pin(idx, 3).unwrap();
+        assert!(slots.try_claim(idx, 0, claim_pack(0, 2))); // live incarnation 2
+        drop(pin);
+        let resub = slots.sweep_dead_claims(claim_pack(0, 1)); // dead inc 1
+        assert!(resub.is_empty(), "live claim must survive a dead sweep");
+    }
+}

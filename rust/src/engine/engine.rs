@@ -47,7 +47,7 @@ use crate::decision::draft::DraftProposer;
 use crate::decision::penalties::BatchHistory;
 use crate::decision::service::{ColumnMeta, IterationTask, SamplerService};
 use crate::decision::verify::{verify_window, GrammarSlot, Verdict};
-use crate::decision::{DecisionPipeline, HotVocab, Precompute};
+use crate::decision::{DecisionPipeline, HotVocab, Precompute, SeqHandle};
 use crate::engine::kvcache::KvAllocator;
 use crate::engine::request::Request;
 use crate::engine::scheduler::{Scheduler, SchedulerConfig};
@@ -136,6 +136,12 @@ pub struct Engine<D: DataPlane> {
     task_base: u64,
     inline_pipe: Option<DecisionPipeline>,
     inline_hist: HashMap<u64, BatchHistory>,
+    /// Live registrations with the decision plane, by sequence id. The
+    /// handle IS the registration (lock-free replay record): every task
+    /// that carries the sequence's column clones it in, and retiring means
+    /// removing + flagging it — a later re-register mints a fresh record,
+    /// which is the staleness guard for in-flight tasks.
+    seq_handles: HashMap<u64, SeqHandle>,
     tp_shards: usize,
     pub recorder: Recorder,
     t0: Instant,
@@ -154,8 +160,9 @@ pub struct Engine<D: DataPlane> {
     inflight: Vec<Option<InFlight>>,
     pending: Vec<Vec<(usize, u64, Verdict)>>,
     /// Chaos-injection schedule (engine-level fault domains): sampler
-    /// kills and lock poisons fired as the plan counter passes each
-    /// event's trigger (DESIGN.md §10).
+    /// kills (including the legacy `poison@` syntax, now a clean kill of
+    /// worker 0) fired as the plan counter passes each event's trigger
+    /// (DESIGN.md §10).
     faults: FaultPlan,
     /// Speculation tallies over windows with at least one draft token:
     /// draft tokens accepted *and committed* / proposed, total committed
@@ -286,6 +293,7 @@ impl<D: DataPlane> Engine<D> {
             task_base,
             inline_pipe,
             inline_hist: HashMap::new(),
+            seq_handles: HashMap::new(),
             tp_shards: cfg.parallel.tp.max(1),
             recorder: Recorder::new(),
             t0,
@@ -439,7 +447,8 @@ impl<D: DataPlane> Engine<D> {
             let params = seq.request.params.clone();
             let grammar = seq.request.grammar.clone();
             if let Some(svc) = &self.service {
-                svc.register_full(seq_id, &prompt, &output, &params, grammar);
+                let handle = svc.register_full(seq_id, &prompt, &output, &params, grammar);
+                self.seq_handles.insert(seq_id, handle);
             } else {
                 self.inline_hist.insert(
                     seq_id,
@@ -576,7 +585,11 @@ impl<D: DataPlane> Engine<D> {
                         FaultKind::KillSampler { sampler } => {
                             svc.inject_sampler_crash(sampler);
                         }
-                        FaultKind::PoisonLock => svc.inject_lock_poison(),
+                        // The lock-free service has no poisonable hot-path
+                        // mutex left; the legacy `poison@<iter>` syntax
+                        // stays accepted and maps to a clean worker kill
+                        // (same recovery machinery, same determinism bar).
+                        FaultKind::PoisonLock => svc.inject_sampler_crash(0),
                         // replica kills are the router's fault domain
                         FaultKind::KillReplica { .. } => {}
                     }
@@ -586,11 +599,16 @@ impl<D: DataPlane> Engine<D> {
             // (replica id in the high bits), exactly the plan counter for
             // a standalone engine.
             let task_id = self.task_base | plan.iter;
+            let recs: Vec<Option<SeqHandle>> = decision_cols
+                .iter()
+                .map(|meta| self.seq_handles.get(&meta.seq_id).cloned())
+                .collect();
             svc.submit(IterationTask {
                 iter: task_id,
                 mb,
                 views,
                 columns: Arc::new(decision_cols),
+                recs: Arc::new(recs),
                 pre: Arc::new(pre_views),
                 drafts: Arc::new(col_drafts),
             });
@@ -712,16 +730,20 @@ impl<D: DataPlane> Engine<D> {
                 // evicted under KV pressure: drop decision-plane state and
                 // clear the data-plane KV slot; the sequence re-enters via
                 // `admitted` with recompute-on-resume
-                if let Some(svc) = &self.service {
-                    svc.retire(vid);
+                if let Some(handle) = self.seq_handles.remove(&vid) {
+                    if let Some(svc) = &self.service {
+                        svc.retire(&handle);
+                    }
                 }
                 self.inline_hist.remove(&vid);
                 self.runtime.reset_kv_slot(vslot);
             }
             if let Some(finished) = outcome.finished {
                 self.recorder.on_finish(finished, t_commit);
-                if let Some(svc) = &self.service {
-                    svc.retire(finished);
+                if let Some(handle) = self.seq_handles.remove(&finished) {
+                    if let Some(svc) = &self.service {
+                        svc.retire(&handle);
+                    }
                 }
                 self.inline_hist.remove(&finished);
                 self.runtime.reset_kv_slot(slot);

@@ -2,8 +2,10 @@
 //!
 //! A [`FaultPlan`] is a deterministic schedule of injected failures —
 //! "kill sampler *i* at engine iteration *t*", "kill replica *r* after the
-//! router has admitted *n* requests", "poison a service lock at iteration
-//! *t*" — used by the `chaos` harness scenario, `serve --chaos`, and the
+//! router has admitted *n* requests", plus the legacy "poison a service
+//! lock at iteration *t*" (now a clean worker kill — the lock-free service
+//! has no poisonable hot-path mutex) — used by the `chaos` harness
+//! scenario, `serve --chaos`, and the
 //! fault-recovery tests. Injection points are keyed by deterministic
 //! progress counters (plan iterations, routed-request counts), never wall
 //! time, so a chaos run is reproducible.
@@ -19,17 +21,21 @@
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
     /// Crash sampler worker `sampler` (a panic inside its thread). The
-    /// service detects the corpse on the next collect, respawns the
-    /// worker, and replays its owned sequences from the registry.
+    /// service detects the corpse on the next collect, respawns the worker
+    /// on the same ring, releases the dead incarnation's cell claims, and
+    /// resubmits its unanswered shard messages; sequence state rebuilds
+    /// lazily from the lock-free replay records.
     KillSampler { sampler: usize },
     /// Crash engine replica `replica` (a panic inside its worker thread).
     /// The router's failure sweep requeues its outstanding sequences onto
     /// survivors through `submit_resumed` (recompute from the last known
     /// prefix — streams stay bit-identical by deterministic replay).
     KillReplica { replica: usize },
-    /// Poison a service mutex (a panic while holding the completion-queue
-    /// lock). The service's poison-tolerant locking keeps operating on the
-    /// still-consistent inner data.
+    /// Legacy fault: poison a service mutex. The lock-free service no
+    /// longer has a poisonable hot-path mutex, so the syntax stays
+    /// accepted (`poison@<iter>` plans keep parsing and rendering) but the
+    /// engine maps it to a clean kill of worker 0 — same recovery
+    /// machinery, same determinism bar.
     PoisonLock,
 }
 

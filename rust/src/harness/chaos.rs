@@ -4,8 +4,10 @@
 //!
 //! Two sections:
 //! 1. **Measured chaos sweep** — a matrix of [`FaultPlan`]s (sampler
-//!    kills, lock poisons, replica kills, and combinations) × engine
-//!    shapes (replicas × samplers × spec_k × microbatches × shared pool).
+//!    kills, legacy `poison@` events — now clean worker kills, the
+//!    lock-free service has no poisonable hot-path mutex — replica
+//!    kills, and combinations) × engine shapes (replicas × samplers ×
+//!    spec_k × microbatches × shared pool).
 //!    Every run's fleet stream digest must equal the fault-free
 //!    single-engine baseline: **recovery replays state, it never invents
 //!    or loses tokens**. The run also reports what the recovery machinery
@@ -113,7 +115,7 @@ pub fn chaos(effort: Effort) -> Report {
                replicas: 1, m: 2, spec_k: 0, n_mb: 1, shared: false },
         Case { name: "sampler kill ×2", plan: "sampler:1@3,sampler:0@9",
                replicas: 1, m: 2, spec_k: 0, n_mb: 1, shared: false },
-        Case { name: "poisoned lock", plan: "poison@2",
+        Case { name: "legacy poison (worker kill)", plan: "poison@2",
                replicas: 1, m: 2, spec_k: 0, n_mb: 1, shared: false },
         Case { name: "kill under spec", plan: "sampler:0@5",
                replicas: 1, m: 2, spec_k: 3, n_mb: 1, shared: false },

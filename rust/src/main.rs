@@ -45,7 +45,7 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token (handoff)"),
     OptSpec::value(
         "chaos",
-        "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (serve)",
+        "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (legacy; kills worker 0) (serve)",
     ),
     OptSpec::flag("no_failover", "fail the run on replica death instead of requeueing (serve)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),

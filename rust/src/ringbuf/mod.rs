@@ -9,8 +9,10 @@
 //! This module provides the in-process analog:
 //! - [`spsc::Ring`] — bounded lock-free single-producer/single-consumer ring
 //!   with cache-padded indices (one ring per worker↔sampler edge).
-//! - [`mpmc::Queue`] — Mutex+Condvar bounded MPMC queue for the return path
-//!   (decisions → scheduler), where contention is low and blocking is fine.
+//! - [`mpmc::Ring`] — bounded *lock-free* MPMC ring (Vyukov sequence-slot
+//!   queue): the sharded per-worker task queues of the shared sampler pool,
+//!   pushed by any number of engine replicas and popped by the owning
+//!   worker or a work-stealing sibling.
 //! - [`LogitsPool`] — a pool of reusable, reference-counted logits slabs: the
 //!   "shared memory region" GPU workers write vocabulary-major slices into
 //!   and samplers read zero-copy.

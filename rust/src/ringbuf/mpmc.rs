@@ -1,284 +1,477 @@
-//! Bounded blocking MPMC queue (Mutex + Condvar).
+//! Bounded lock-free MPMC ring (Vyukov bounded queue).
 //!
-//! Used for the low-rate control paths: decisions returning from m samplers
-//! to the scheduler (the paper's ZMQ channel) and request admission. The
-//! data-plane logits stream uses the lock-free [`super::spsc`] rings instead.
+//! The decision plane's sharded task queues: every sampler worker owns one
+//! ring, the engine (or several engine replicas sharing one pool) pushes
+//! into it concurrently, and *any* worker may pop from it — the owner on
+//! its fast path, siblings when they steal. Per-slot sequence numbers
+//! carry the synchronization, so neither push nor pop ever takes a lock:
+//! a push claims a slot by CAS on the head counter and publishes the value
+//! with a release store of the slot's sequence; a pop claims by CAS on the
+//! tail and retires the slot one lap ahead. Contended operations retry on
+//! a fresh counter read instead of blocking.
+//!
+//! Compared with the [`super::spsc`] ring (exactly one producer, one
+//! consumer, used for the logits data path), this ring trades two CAS
+//! loops for full MPMC freedom — which is exactly what work stealing and
+//! multi-replica submission need.
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 
-struct Shared<T> {
-    q: Mutex<State<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
-    cap: usize,
+/// Pad to a cache line to avoid false sharing between the head and tail
+/// counters (crossbeam's CachePadded, hand-rolled).
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+struct Slot<T> {
+    /// Lap sequence: `pos` = empty and writable for the push at `pos`;
+    /// `pos + 1` = full and readable for the pop at `pos`; `pos + cap` =
+    /// empty again one lap later.
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
 }
 
-struct State<T> {
-    items: VecDeque<T>,
-    senders: usize,
-    receivers: usize,
+struct Inner<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    /// Next enqueue position (monotonic; slot = pos & mask).
+    head: CachePadded<AtomicUsize>,
+    /// Next dequeue position.
+    tail: CachePadded<AtomicUsize>,
+    closed: AtomicBool,
 }
 
-/// Sending half (cloneable).
-pub struct Sender<T> {
-    shared: Arc<Shared<T>>,
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+/// Cloneable handle; every clone may both push and pop.
+pub struct Ring<T> {
+    inner: Arc<Inner<T>>,
 }
 
-/// Receiving half (cloneable).
-pub struct Receiver<T> {
-    shared: Arc<Shared<T>>,
+impl<T> Clone for Ring<T> {
+    fn clone(&self) -> Self {
+        Ring { inner: self.inner.clone() }
+    }
 }
 
-/// Error: all receivers dropped.
+/// Error returned by [`Ring::try_push`], handing the item back.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Ring at capacity.
+    Full(T),
+    /// Ring closed; no further items are accepted.
+    Closed(T),
+}
+
+/// Error returned by [`Ring::try_pop`] on an empty ring.
 #[derive(Debug, PartialEq, Eq)]
-pub struct SendError<T>(pub T);
-
-/// Create a bounded MPMC channel.
-pub fn channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
-    let shared = Arc::new(Shared {
-        q: Mutex::new(State { items: VecDeque::with_capacity(cap), senders: 1, receivers: 1 }),
-        not_empty: Condvar::new(),
-        not_full: Condvar::new(),
-        cap: cap.max(1),
-    });
-    (Sender { shared: shared.clone() }, Receiver { shared })
+pub enum PopError {
+    Empty,
+    /// Closed *and* drained.
+    Closed,
 }
 
-impl<T> Clone for Sender<T> {
-    fn clone(&self) -> Self {
-        self.shared.q.lock().unwrap().senders += 1;
-        Sender { shared: self.shared.clone() }
-    }
-}
-
-impl<T> Drop for Sender<T> {
-    fn drop(&mut self) {
-        let mut st = self.shared.q.lock().unwrap();
-        st.senders -= 1;
-        if st.senders == 0 {
-            drop(st);
-            self.shared.not_empty.notify_all();
+impl<T> Ring<T> {
+    /// Create a ring of capacity `cap` (rounded up to a power of two).
+    pub fn new(cap: usize) -> Ring<T> {
+        let cap = cap.max(2).next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        Ring {
+            inner: Arc::new(Inner {
+                slots,
+                mask: cap - 1,
+                head: CachePadded(AtomicUsize::new(0)),
+                tail: CachePadded(AtomicUsize::new(0)),
+                closed: AtomicBool::new(false),
+            }),
         }
     }
-}
 
-impl<T> Clone for Receiver<T> {
-    fn clone(&self) -> Self {
-        self.shared.q.lock().unwrap().receivers += 1;
-        Receiver { shared: self.shared.clone() }
-    }
-}
-
-impl<T> Drop for Receiver<T> {
-    fn drop(&mut self) {
-        let mut st = self.shared.q.lock().unwrap();
-        st.receivers -= 1;
-        if st.receivers == 0 {
-            drop(st);
-            self.shared.not_full.notify_all();
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let inner = &*self.inner;
+        if inner.closed.load(Ordering::Acquire) {
+            return Err(PushError::Closed(item));
         }
-    }
-}
-
-impl<T> Sender<T> {
-    /// Blocking send; fails only if all receivers are gone.
-    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.q.lock().unwrap();
+        let mut pos = inner.head.0.load(Ordering::Relaxed);
         loop {
-            if st.receivers == 0 {
-                return Err(SendError(item));
+            let slot = &inner.slots[pos & inner.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                // Slot empty for this lap: claim it by advancing head.
+                match inner.head.0.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(item) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                // Slot still holds last lap's value: ring full.
+                return Err(PushError::Full(item));
+            } else {
+                // Another producer claimed `pos`; chase the head.
+                pos = inner.head.0.load(Ordering::Relaxed);
             }
-            if st.items.len() < self.shared.cap {
-                st.items.push_back(item);
-                drop(st);
-                self.shared.not_empty.notify_one();
-                return Ok(());
-            }
-            st = self.shared.not_full.wait(st).unwrap();
         }
     }
 
-    /// Non-blocking send; returns the item if full or disconnected.
-    pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.q.lock().unwrap();
-        if st.receivers == 0 || st.items.len() >= self.shared.cap {
-            return Err(SendError(item));
+    /// Spin-then-yield blocking push. Returns `false` (item dropped) if the
+    /// ring is closed.
+    pub fn push(&self, mut item: T) -> bool {
+        let mut spins = 0u32;
+        loop {
+            match self.try_push(item) {
+                Ok(()) => return true,
+                Err(PushError::Closed(_)) => return false,
+                Err(PushError::Full(back)) => {
+                    item = back;
+                    spins += 1;
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
         }
-        st.items.push_back(item);
-        drop(st);
-        self.shared.not_empty.notify_one();
-        Ok(())
     }
 
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Result<T, PopError> {
+        let inner = &*self.inner;
+        let mut pos = inner.tail.0.load(Ordering::Relaxed);
+        loop {
+            let slot = &inner.slots[pos & inner.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                // Slot full for this lap: claim it by advancing tail.
+                match inner.tail.0.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let item = unsafe { (*slot.val.get()).assume_init_read() };
+                        // Retire the slot for the push one lap ahead.
+                        slot.seq.store(pos + inner.mask + 1, Ordering::Release);
+                        return Ok(item);
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                // Nothing published at `pos` yet. A closed ring is only
+                // *drained* once no push has claimed past us (an in-flight
+                // push that claimed before the close still gets delivered).
+                return if inner.closed.load(Ordering::Acquire)
+                    && inner.head.0.load(Ordering::Acquire) == pos
+                {
+                    Err(PopError::Closed)
+                } else {
+                    Err(PopError::Empty)
+                };
+            } else {
+                // Another consumer claimed `pos`; chase the tail.
+                pos = inner.tail.0.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Spin-then-yield blocking pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut spins = 0u32;
+        loop {
+            match self.try_pop() {
+                Ok(item) => return Some(item),
+                Err(PopError::Closed) => return None,
+                Err(PopError::Empty) => {
+                    spins += 1;
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mark the ring closed: pushes fail from here on, pops drain what is
+    /// left and then report [`PopError::Closed`].
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::Acquire)
+    }
+
+    /// Approximate queued-item count (exact when quiescent).
     pub fn len(&self) -> usize {
-        self.shared.q.lock().unwrap().items.len()
+        let head = self.inner.head.0.load(Ordering::Relaxed);
+        let tail = self.inner.tail.0.load(Ordering::Relaxed);
+        head.saturating_sub(tail)
     }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.mask + 1
+    }
 }
 
-impl<T> Receiver<T> {
-    /// Blocking receive; `None` when all senders dropped and queue drained.
-    pub fn recv(&self) -> Option<T> {
-        let mut st = self.shared.q.lock().unwrap();
-        loop {
-            if let Some(item) = st.items.pop_front() {
-                drop(st);
-                self.shared.not_full.notify_one();
-                return Some(item);
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Sole owner at this point: drain still-published slots so T's
+        // Drop runs (leak check covered in tests).
+        let mask = self.mask;
+        let mut pos = *self.tail.0.get_mut();
+        let head = *self.head.0.get_mut();
+        while pos != head {
+            let slot = &mut self.slots[pos & mask];
+            if *slot.seq.get_mut() == pos + 1 {
+                unsafe { slot.val.get_mut().assume_init_drop() };
             }
-            if st.senders == 0 {
-                return None;
-            }
-            st = self.shared.not_empty.wait(st).unwrap();
+            pos += 1;
         }
-    }
-
-    /// Receive with timeout. `Ok(None)` = disconnected+drained; `Err(())` =
-    /// timed out.
-    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
-        let deadline = std::time::Instant::now() + timeout;
-        let mut st = self.shared.q.lock().unwrap();
-        loop {
-            if let Some(item) = st.items.pop_front() {
-                drop(st);
-                self.shared.not_full.notify_one();
-                return Ok(Some(item));
-            }
-            if st.senders == 0 {
-                return Ok(None);
-            }
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                return Err(());
-            }
-            let (guard, res) =
-                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
-            if res.timed_out() && st.items.is_empty() && st.senders > 0 {
-                return Err(());
-            }
-        }
-    }
-
-    /// Non-blocking receive.
-    pub fn try_recv(&self) -> Option<T> {
-        let mut st = self.shared.q.lock().unwrap();
-        let item = st.items.pop_front();
-        if item.is_some() {
-            drop(st);
-            self.shared.not_full.notify_one();
-        }
-        item
-    }
-
-    pub fn len(&self) -> usize {
-        self.shared.q.lock().unwrap().items.len()
-    }
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
     use std::thread;
 
     #[test]
-    fn send_recv_fifo() {
-        let (tx, rx) = channel::<u32>(4);
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
-        assert_eq!(rx.recv(), Some(1));
-        assert_eq!(rx.recv(), Some(2));
-        assert_eq!(rx.try_recv(), None);
+    fn fifo_single_thread() {
+        let r = Ring::<u32>::new(4);
+        for i in 0..4 {
+            r.try_push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(r.try_pop().unwrap(), i);
+        }
+        assert_eq!(r.try_pop(), Err(PopError::Empty));
     }
 
     #[test]
-    fn disconnect_on_all_senders_dropped() {
-        let (tx, rx) = channel::<u32>(2);
-        let tx2 = tx.clone();
-        tx.send(5).unwrap();
-        drop(tx);
-        drop(tx2);
-        assert_eq!(rx.recv(), Some(5));
-        assert_eq!(rx.recv(), None);
+    fn full_ring_backpressure() {
+        let r = Ring::<u32>::new(4);
+        for i in 0..4 {
+            r.try_push(i).unwrap();
+        }
+        assert!(matches!(r.try_push(99), Err(PushError::Full(99))));
+        assert_eq!(r.len(), 4);
+        // Blocking push unblocks exactly when a pop frees a slot.
+        let r2 = r.clone();
+        let pusher = thread::spawn(move || r2.push(4));
+        thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(r.try_pop().unwrap(), 0);
+        assert!(pusher.join().unwrap());
+        let rest: Vec<u32> = std::iter::from_fn(|| r.try_pop().ok()).collect();
+        assert_eq!(rest, vec![1, 2, 3, 4]);
     }
 
     #[test]
-    fn send_fails_when_receivers_gone() {
-        let (tx, rx) = channel::<u32>(2);
-        drop(rx);
-        assert_eq!(tx.send(1), Err(SendError(1)));
+    fn wraparound_at_capacity_boundaries() {
+        // Repeatedly cross the wrap point with a fill level that is not a
+        // divisor of the capacity, so every slot sees many laps and the
+        // lap-sequence arithmetic is exercised on both sides of the seam.
+        let r = Ring::<usize>::new(4);
+        let mut next_push = 0usize;
+        let mut next_pop = 0usize;
+        for round in 0..1000 {
+            let burst = 1 + (round % 3);
+            for _ in 0..burst {
+                r.try_push(next_push).unwrap();
+                next_push += 1;
+            }
+            for _ in 0..burst {
+                assert_eq!(r.try_pop().unwrap(), next_pop);
+                next_pop += 1;
+            }
+        }
+        assert!(r.is_empty());
     }
 
     #[test]
-    fn try_send_full() {
-        let (tx, _rx) = channel::<u32>(1);
-        tx.try_send(1).unwrap();
-        assert_eq!(tx.try_send(2), Err(SendError(2)));
+    fn closed_drains_then_reports_closed() {
+        let r = Ring::<u32>::new(8);
+        r.try_push(1).unwrap();
+        r.try_push(2).unwrap();
+        r.close();
+        assert!(matches!(r.try_push(3), Err(PushError::Closed(3))));
+        assert!(!r.push(4));
+        assert_eq!(r.pop(), Some(1));
+        assert_eq!(r.try_pop(), Ok(2));
+        assert_eq!(r.try_pop(), Err(PopError::Closed));
+        assert_eq!(r.pop(), None);
     }
 
     #[test]
-    fn recv_timeout_times_out() {
-        let (_tx, rx) = channel::<u32>(1);
-        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Err(()));
-    }
-
-    #[test]
-    fn multi_producer_multi_consumer_conserves_items() {
-        let (tx, rx) = channel::<u64>(16);
-        const PER: u64 = 10_000;
+    fn concurrent_steal_vs_pop_conserves_items() {
+        // One "owner" and two "stealers" race pops on a shared ring while
+        // three producers push: every item must surface exactly once.
+        const PER: u64 = 20_000;
         const P: usize = 3;
+        const C: usize = 3;
+        let r = Ring::<u64>::new(64);
+        let done = Arc::new(AtomicBool::new(false));
         let producers: Vec<_> = (0..P)
             .map(|pid| {
-                let tx = tx.clone();
+                let r = r.clone();
                 thread::spawn(move || {
                     for i in 0..PER {
-                        tx.send(pid as u64 * PER + i).unwrap();
+                        assert!(r.push(pid as u64 * PER + i));
                     }
                 })
             })
             .collect();
-        drop(tx);
-        let consumers: Vec<_> = (0..2)
+        let consumers: Vec<_> = (0..C)
             .map(|_| {
-                let rx = rx.clone();
+                let r = r.clone();
+                let done = done.clone();
                 thread::spawn(move || {
                     let mut got = Vec::new();
-                    while let Some(v) = rx.recv() {
-                        got.push(v);
+                    loop {
+                        match r.try_pop() {
+                            Ok(v) => got.push(v),
+                            Err(PopError::Closed) => break,
+                            Err(PopError::Empty) => {
+                                if done.load(Ordering::Acquire) && r.is_empty() {
+                                    break;
+                                }
+                                thread::yield_now();
+                            }
+                        }
                     }
                     got
                 })
             })
             .collect();
-        drop(rx);
         for p in producers {
             p.join().unwrap();
         }
+        done.store(true, Ordering::Release);
         let mut all: Vec<u64> = consumers
             .into_iter()
             .flat_map(|c| c.join().unwrap())
             .collect();
         all.sort_unstable();
-        assert_eq!(all.len(), P * PER as usize);
+        assert_eq!(all.len(), P * PER as usize, "lost items");
         all.dedup();
-        assert_eq!(all.len(), P * PER as usize, "duplicates detected");
+        assert_eq!(all.len(), P * PER as usize, "duplicated items");
     }
 
     #[test]
-    fn blocking_send_unblocks_on_recv() {
-        let (tx, rx) = channel::<u32>(1);
-        tx.send(0).unwrap();
-        let h = thread::spawn(move || tx.send(1).unwrap());
-        thread::sleep(Duration::from_millis(20));
-        assert_eq!(rx.recv(), Some(0));
-        assert_eq!(rx.recv(), Some(1));
-        h.join().unwrap();
+    fn drop_while_nonempty_runs_destructors() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let r = Ring::<D>::new(8);
+        for _ in 0..5 {
+            r.try_push(D).unwrap();
+        }
+        let r2 = r.clone();
+        drop(r);
+        r2.try_pop().ok(); // consume one normally
+        assert_eq!(DROPS.load(Ordering::SeqCst), 1);
+        drop(r2); // remaining 4 dropped by the ring itself
+        assert_eq!(DROPS.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn drop_after_wraparound_drops_only_live_items() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let r = Ring::<D>::new(4);
+        // Push/pop past a full lap so stale slots exist, then leave 3 live.
+        for _ in 0..6 {
+            r.try_push(D).unwrap();
+            drop(r.try_pop().unwrap());
+        }
+        for _ in 0..3 {
+            r.try_push(D).unwrap();
+        }
+        let before = DROPS.load(Ordering::SeqCst);
+        drop(r);
+        assert_eq!(DROPS.load(Ordering::SeqCst), before + 3);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let r = Ring::<u8>::new(5);
+        assert_eq!(r.capacity(), 8);
+    }
+
+    #[test]
+    fn many_producers_many_consumers_under_close() {
+        // Producers race the close; consumers must still see exactly the
+        // successfully-pushed prefix of each producer's stream.
+        let r = Ring::<u64>::new(16);
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let producers: Vec<_> = (0..4)
+            .map(|pid| {
+                let r = r.clone();
+                let pushed = pushed.clone();
+                thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        if r.push(pid * 5_000 + i) {
+                            pushed.fetch_add(1, Ordering::SeqCst);
+                        } else {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let r = r.clone();
+                thread::spawn(move || {
+                    let mut n = 0usize;
+                    while r.pop().is_some() {
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        thread::sleep(std::time::Duration::from_millis(5));
+        r.close();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let consumed: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(consumed, pushed.load(Ordering::SeqCst));
     }
 }

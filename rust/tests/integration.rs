@@ -4,11 +4,12 @@
 
 use simple_serve::config::{DecisionVariant, SamplerConfig};
 use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
-use simple_serve::decision::SamplingParams;
+use simple_serve::decision::{SamplingParams, SeqHandle};
 use simple_serve::harness::measure::LogitsGen;
 use simple_serve::harness::{run_experiment, Effort, ALL_EXPERIMENTS};
 use simple_serve::simulator::{simulate, DecisionMode, GpuModel, SimConfig};
 use simple_serve::workload;
+use std::collections::HashMap;
 
 #[test]
 fn service_sustains_many_iterations_with_churn() {
@@ -28,8 +29,9 @@ fn service_sustains_many_iterations_with_churn() {
 
     let batch = 6usize;
     let mut live: Vec<u64> = (0..batch as u64).collect();
+    let mut handles: HashMap<u64, SeqHandle> = HashMap::new();
     for &s in &live {
-        svc.register(s, &[1, 2], &params);
+        handles.insert(s, svc.register(s, &[1, 2], &params));
     }
     let mut next_id = batch as u64;
     let mut decided_total = 0usize;
@@ -50,7 +52,9 @@ fn service_sustains_many_iterations_with_churn() {
             .enumerate()
             .map(|(col, &seq_id)| ColumnMeta { col, seq_id, iteration: iter })
             .collect();
-        svc.submit(IterationTask::single(iter, view, columns, pre));
+        let recs: Vec<Option<SeqHandle>> =
+            live.iter().map(|s| handles.get(s).cloned()).collect();
+        svc.submit(IterationTask::single(iter, view, columns, recs, pre));
         let (decisions, busy) = svc.collect(iter, live.len());
         assert_eq!(decisions.len(), live.len(), "iter {iter}");
         assert!(busy >= 0.0);
@@ -58,14 +62,18 @@ fn service_sustains_many_iterations_with_churn() {
         // churn: retire one sequence every 3 iters, admit a replacement
         if iter % 3 == 2 {
             let gone = live.remove((iter as usize) % live.len());
-            svc.retire(gone);
-            svc.register(next_id, &[4, 5, 6], &params);
+            if let Some(h) = handles.remove(&gone) {
+                svc.retire(&h);
+            }
+            handles.insert(next_id, svc.register(next_id, &[4, 5, 6], &params));
             live.push(next_id);
             next_id += 1;
         }
     }
     for &s in &live {
-        svc.retire(s);
+        if let Some(h) = handles.remove(&s) {
+            svc.retire(&h);
+        }
     }
     let stats = svc.shutdown();
     let sum: u64 = stats.iter().map(|s| s.decisions).sum();
@@ -139,7 +147,7 @@ fn deterministic_service_streams_with_tp_sharded_views() {
             ..Default::default()
         };
         let svc = SamplerService::start(&cfg, Some(hot.clone()), 128);
-        svc.register(0, &[7], &params);
+        let handle = svc.register(0, &[7], &params);
         let mut out = Vec::new();
         for iter in 0..25u64 {
             let view = gen.view(1, iter, shards);
@@ -153,12 +161,13 @@ fn deterministic_service_streams_with_tp_sharded_views() {
                 iter,
                 view,
                 vec![ColumnMeta { col: 0, seq_id: 0, iteration: iter }],
+                vec![Some(handle.clone())],
                 pre,
             ));
             let (d, _) = svc.collect(iter, 1);
             out.push(d[0].2.tokens[0]);
         }
-        svc.retire(0);
+        svc.retire(&handle);
         svc.shutdown();
         streams.push(out);
     }

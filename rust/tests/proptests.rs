@@ -16,7 +16,7 @@ use simple_serve::decision::penalties::{apply_penalties_dense, BatchHistory, Seq
 use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
 use simple_serve::decision::shvs::{Precompute, ShvsSampler};
 use simple_serve::decision::verify::{verify_window, GrammarSlot};
-use simple_serve::decision::{DecisionPipeline, HotVocab, SamplingParams};
+use simple_serve::decision::{DecisionPipeline, HotVocab, SamplingParams, SeqHandle};
 use simple_serve::engine::{Engine, KvAllocator, Request, SyntheticRuntime};
 use simple_serve::fault::{FaultKind, FaultPlan};
 use simple_serve::harness::measure::{chain_views, LogitsGen};
@@ -253,9 +253,9 @@ fn spec_service_streams(
     let params: Vec<SamplingParams> = (0..b)
         .map(|s| SamplingParams { seed: params_base.seed ^ ((s as u64) << 3), ..params_base.clone() })
         .collect();
-    for s in 0..b {
-        svc.register(s as u64, &prompts[s], &params[s]);
-    }
+    let handles: Vec<SeqHandle> = (0..b)
+        .map(|s| svc.register(s as u64, &prompts[s], &params[s]))
+        .collect();
     let mut streams: Vec<Vec<u32>> = vec![Vec::new(); b];
     let mut iter = 0u64;
     while streams.iter().any(|s| s.len() < total) {
@@ -281,11 +281,14 @@ fn spec_service_streams(
             })
             .collect();
         let views = chain_views(&gen, &col_keys, &drafts, 2);
+        let recs: Vec<Option<SeqHandle>> =
+            live.iter().map(|&s| Some(handles[s].clone())).collect();
         svc.submit(IterationTask {
             iter,
             mb: 0,
             views,
             columns: Arc::new(columns),
+            recs: Arc::new(recs),
             pre: Arc::new(Vec::new()),
             drafts: Arc::new(drafts),
         });
@@ -297,8 +300,8 @@ fn spec_service_streams(
         }
         iter += 1;
     }
-    for s in 0..b as u64 {
-        svc.retire(s);
+    for h in &handles {
+        svc.retire(h);
     }
     svc.shutdown();
     for s in streams.iter_mut() {
@@ -405,7 +408,7 @@ fn prop_overlapped_executor_streams_equal_synchronous() {
 /// Run the same requests through a routed cluster of synthetic-plane
 /// replicas (same plane seed + sampler seed as [`synthetic_engine_streams`],
 /// so the single engine is the ground truth). `engine_faults` carries the
-/// engine-level chaos schedule (sampler kills, lock poisons); router-level
+/// engine-level chaos schedule (sampler kills, legacy poisons); router-level
 /// replica kills ride in `ccfg.faults`.
 fn routed_streams(
     reqs: &[(Vec<u32>, usize, SamplingParams)],
@@ -510,7 +513,7 @@ fn prop_routed_streams_equal_single_replica() {
 #[test]
 fn prop_streams_identical_under_injected_faults() {
     // The hardening hard bar (DESIGN.md §10): for RANDOM fault plans —
-    // sampler kills, lock poisons, replica kills, in any combination —
+    // sampler kills, legacy poisons, replica kills, in any combination —
     // across random (replicas × m × spec_k × n_microbatches ± shared
     // pool), recovery replays state deterministically: per-sequence token
     // streams are bit-identical to the fault-free single-engine run, and
@@ -536,8 +539,9 @@ fn prop_streams_identical_under_injected_faults() {
         let m = 1 + rng.next_below(3) as usize;
         let spec_k = rng.next_below(3) as usize;
         let n_mb = 1 + rng.next_below(2) as usize;
-        // random fault plan: 1-2 sampler kills, maybe a poison, and (with
-        // a survivor available) maybe a replica kill
+        // random fault plan: 1-2 sampler kills, maybe a legacy poison
+        // (now a clean kill of worker 0 under the lock-free service), and
+        // (with a survivor available) maybe a replica kill
         let mut engine_faults = FaultPlan::default();
         for _ in 0..(1 + rng.next_below(2)) {
             engine_faults.push(
@@ -551,7 +555,6 @@ fn prop_streams_identical_under_injected_faults() {
         let mut ccfg = ClusterConfig::default();
         ccfg.replicas = replicas;
         ccfg.policy = RoutePolicy::ALL[rng.next_below(4) as usize];
-        ccfg.shared_samplers = rng.next_f64() < 0.5;
         if replicas >= 2 && rng.next_f64() < 0.6 {
             ccfg.faults.push(
                 1 + rng.next_below(n_req as u64),
@@ -562,15 +565,30 @@ fn prop_streams_identical_under_injected_faults() {
         }
         let plan_desc =
             format!("engine[{}] router[{}]", engine_faults.render(), ccfg.faults.render());
-        let routed =
-            routed_streams(&reqs, vocab, plane_seed, &ccfg, m, n_mb, spec_k, engine_faults);
-        assert_eq!(
-            routed, baseline,
-            "chaos {plan_desc}: policy={} replicas={replicas} shared={} m={m} \
-             spec_k={spec_k} n_mb={n_mb}",
-            ccfg.policy.name(),
-            ccfg.shared_samplers
-        );
+        // Sweep BOTH pool modes under the same fault plan: per-replica
+        // pools, and the lock-free shared pool (where kills land on pool
+        // workers serving every replica, recovery resubmits through the
+        // shared slot table, and a `poison@` event must be a clean worker
+        // kill rather than a poisoned-mutex cascade).
+        for shared in [false, true] {
+            ccfg.shared_samplers = shared;
+            let routed = routed_streams(
+                &reqs,
+                vocab,
+                plane_seed,
+                &ccfg,
+                m,
+                n_mb,
+                spec_k,
+                engine_faults.clone(),
+            );
+            assert_eq!(
+                routed, baseline,
+                "chaos {plan_desc}: policy={} replicas={replicas} shared={shared} \
+                 m={m} spec_k={spec_k} n_mb={n_mb}",
+                ccfg.policy.name(),
+            );
+        }
     });
 }
 

@@ -26,6 +26,7 @@
 use simple_serve::config::{DecisionVariant, EngineConfig, SamplerConfig};
 use simple_serve::decision::draft::DraftProposer;
 use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
+use simple_serve::decision::SeqHandle;
 use simple_serve::engine::{Engine, KvAllocator, Scheduler, SchedulerConfig, SyntheticRuntime};
 use simple_serve::harness::measure::{chain_views, LogitsGen};
 use simple_serve::workload::{self, TraceConfig, TrafficPattern};
@@ -71,6 +72,9 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig, spec_k: usize) ->
     let mut guard = 0u32;
     let mut spec_accepted = 0u64;
     let mut spec_proposed = 0u64;
+    // The handle IS the registration: holding it keeps the replay record
+    // live; dropping it after `retire` lets the pool reclaim.
+    let mut handles: HashMap<u64, SeqHandle> = HashMap::new();
     while !sched.is_idle() {
         guard += 1;
         assert!(guard < 20_000, "scheduler+service stuck");
@@ -84,7 +88,9 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig, spec_k: usize) ->
             let seq = (0..SLOTS)
                 .find_map(|s| sched.slot(s).filter(|q| q.request.id == id))
                 .expect("admitted sequence in a slot");
-            svc.register_full(id, &seq.request.prompt, &seq.output, &seq.request.params, None);
+            let h =
+                svc.register_full(id, &seq.request.prompt, &seq.output, &seq.request.params, None);
+            handles.insert(id, h);
         }
         let cols: Vec<_> = plan.slots.iter().filter(|p| p.needs_decision).collect();
         if cols.is_empty() {
@@ -125,11 +131,14 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig, spec_k: usize) ->
             .enumerate()
             .map(|(i, p)| ColumnMeta { col: i, seq_id: p.seq_id, iteration: p.decode_iter })
             .collect();
+        let recs: Vec<Option<SeqHandle>> =
+            columns.iter().map(|meta| handles.get(&meta.seq_id).cloned()).collect();
         svc.submit(IterationTask {
             iter,
             mb: 0,
             views,
             columns: Arc::new(columns),
+            recs: Arc::new(recs),
             pre: Arc::new(Vec::new()),
             drafts: Arc::new(drafts),
         });
@@ -148,10 +157,14 @@ fn run_churn(m: usize, kv_blocks: usize, cfg: SchedulerConfig, spec_k: usize) ->
             spec_proposed += verdict.proposed as u64;
             let out = sched.commit_multi(slot, &verdict.tokens);
             for (_, vid) in out.preempted {
-                svc.retire(vid);
+                if let Some(h) = handles.remove(&vid) {
+                    svc.retire(&h);
+                }
             }
             if let Some(fid) = out.finished {
-                svc.retire(fid);
+                if let Some(h) = handles.remove(&fid) {
+                    svc.retire(&h);
+                }
             }
         }
         sched.advance();
@@ -446,8 +459,9 @@ fn sampler_crash_recovery_under_preemption_churn_leaks_nothing() {
 fn sampler_crash_recovery_composes_with_overlap_and_speculation() {
     // The worst engine shape for recovery: in-flight microbatches with
     // reaped-but-unapplied verdicts, speculative windows mid-flight, and
-    // a sampler kill landing among them — plus a poisoned lock for good
-    // measure. Same tokens, nothing leaked.
+    // a sampler kill landing among them — plus a legacy `poison@` event
+    // (now a clean kill of worker 0) for good measure. Same tokens,
+    // nothing leaked.
     let (want, _) = pipelined_engine_run(1, false, 0, 0);
     let (got, _) = chaos_engine_run(2, true, 0, 2, "sampler:1@6,poison@9");
     assert_eq!(got, want, "chaos under overlap+spec must not change tokens");
@@ -491,6 +505,48 @@ fn replica_death_requeues_onto_survivor_and_streams_match() {
     // the surviving replica carried the whole fleet's final state
     assert_eq!(report.per_replica.len(), 1, "dead replica skipped at join");
     assert_eq!(report.per_replica[0].id, 0);
+}
+
+#[test]
+fn shared_pool_steals_across_replica_failover_requeue() {
+    // Satellite: the lock-free shared pool under failover churn. Both
+    // replicas submit into ONE sampler pool; replica 1 dies mid-burst and
+    // the router purges its task namespace from the shared slot table,
+    // then requeues its sequences onto replica 0 through the resume path.
+    // The surviving replica now carries the whole fleet, so its shard
+    // rings back up and the idle workers steal — verdicts for requeued
+    // sequences are produced by whichever worker got there first. Streams
+    // must still match the single ample engine bit-for-bit (decisions are
+    // keyed by (seed, seq, iteration), never worker identity).
+    use simple_serve::cluster::{Cluster, ClusterConfig, RoutePolicy};
+    let (want, _) = pipelined_engine_run(1, false, 0, 0);
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    cfg.sampler.seed = 41;
+    cfg.idle_poll_us = 10;
+    let mut ccfg = ClusterConfig::default();
+    ccfg.replicas = 2;
+    ccfg.policy = RoutePolicy::RoundRobin;
+    ccfg.shared_samplers = true;
+    let (_, router_faults) = simple_serve::fault::FaultPlan::parse("replica:1@6")
+        .expect("chaos spec")
+        .split();
+    ccfg.faults = router_faults;
+    let mut cluster = Cluster::start(&cfg, &ccfg, None, MAX_SEQ, |_id| {
+        Ok(SyntheticRuntime::new(8, VOCAB, MAX_SEQ, 23))
+    });
+    let trace = workload::generate(&TraceConfig::tiny(20, VOCAB));
+    cluster.run(trace.requests).expect("failover, not failure");
+    let report = cluster.shutdown().expect("cluster shutdown");
+    assert_eq!(report.failovers, 1, "exactly one replica death");
+    assert!(report.requeued > 0, "the dead replica had outstanding work");
+    let streams: HashMap<u64, Vec<u32>> = report
+        .finished
+        .iter()
+        .map(|s| (s.request.id, s.output.clone()))
+        .collect();
+    assert_eq!(streams, want, "shared-pool failover must not change tokens");
 }
 
 #[test]
