@@ -39,15 +39,17 @@ chaos-smoke: build
 bench: build
 	cargo bench --bench decision_micro -- --quick --json BENCH_decision.json
 
-# Perf-regression gate (DESIGN.md §11): re-run the gated cluster group
-# into a scratch file and compare the shared-pool cases against the
-# committed BENCH_decision.json — a >15% items/s drop fails. Must run
-# BEFORE `bench`, which overwrites the committed baseline in place. A
-# provisional (unmeasured) baseline warns and passes; promote real
-# numbers with `python python/bench_check.py BENCH_decision.json
-# BENCH_decision.fresh.json --promote`.
+# Perf-regression gate (DESIGN.md §11–§12): re-run the microbenchmarks
+# into a scratch file and compare the gated groups (cluster shared-pool
+# AND the fused dense-kernel pair) against the committed
+# BENCH_decision.json — a >15% items/s drop fails, and the kernel pair
+# must hold simd ≥ 1.5× scalar on the 32k-vocab group. Must run BEFORE
+# `bench`, which overwrites the committed baseline in place. A
+# provisional (unmeasured) baseline warns and passes the baseline
+# comparison; promote real numbers with `python python/bench_check.py
+# BENCH_decision.json BENCH_decision.fresh.json --promote`.
 bench-check: build
-	cargo bench --bench decision_micro -- --quick cluster --json BENCH_decision.fresh.json
+	cargo bench --bench decision_micro -- --quick --json BENCH_decision.fresh.json
 	python python/bench_check.py BENCH_decision.json BENCH_decision.fresh.json
 
 # What .github/workflows/ci.yml runs: fmt + clippy gates, release build +

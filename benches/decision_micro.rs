@@ -12,7 +12,9 @@ use simple_serve::bench::{
 };
 use simple_serve::config::DecisionVariant;
 use simple_serve::decision::penalties::{BatchHistory, SeqHistory};
-use simple_serve::decision::{filter, DecisionPipeline, Precompute, SamplingParams};
+use simple_serve::decision::{
+    filter, DecisionPipeline, DenseKernel, KernelBackend, Precompute, SamplingParams,
+};
 use simple_serve::harness::measure::LogitsGen;
 use simple_serve::ringbuf::spsc;
 
@@ -94,6 +96,37 @@ fn main() {
             );
             it += 1;
         }));
+    }
+
+    // --- fused single-pass dense kernels: scalar vs 8-wide lanes ---
+    // One full production column (penalties → top-k/top-p/min-p → stable
+    // softmax weights → draw) at a 32k vocabulary, per backend. items/s =
+    // columns/s, so per-column ns = 1e9 / items_per_sec; `make bench-check`
+    // gates simd ≥ 1.5× scalar on this pair (DESIGN.md §12).
+    if want("kernels") {
+        const KV: usize = 32_768;
+        let kgen = LogitsGen::new(KV, 1.08, 7);
+        let kviews: Vec<_> = (0..4).map(|i| kgen.view(1, i, 1)).collect();
+        let mut khist = SeqHistory::new(&[1, 2, 3]);
+        for t in 0..48u32 {
+            khist.append(t % 29);
+        }
+        for (backend, name) in [
+            (KernelBackend::Scalar, "kernels/scalar_penalty_filter_softmax"),
+            (KernelBackend::Simd, "kernels/simd_penalty_filter_softmax"),
+        ] {
+            if !want(name) {
+                continue;
+            }
+            let mut kern = DenseKernel::new(backend);
+            let mut it = 0u64;
+            results.push(run_case(name, &cfg, Some(1.0), || {
+                let i = (it % 4) as usize;
+                let u = ((it % 1013) as f64 + 0.5) / 1013.0;
+                black_box(kern.decide(&kviews[i], 0, &khist, &params, u));
+                it += 1;
+            }));
+        }
     }
 
     // --- speculative-decoding verification (DESIGN.md §7) ---
@@ -524,6 +557,11 @@ fn main() {
     }
 
     println!("{}", render_table("decision-plane microbenchmarks", &results));
+    // Per-column latency of the fused dense kernels (the §12 headline
+    // number; items/iter = 1 column, so mean IS the per-column time).
+    for r in results.iter().filter(|r| r.name.starts_with("kernels/")) {
+        println!("{}: {:.1} ns/column", r.name, r.summary.mean * 1e9);
+    }
     if let Some(path) = json_path {
         simple_serve::util::json::write_json_file(
             std::path::Path::new(&path),

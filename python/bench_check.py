@@ -2,10 +2,14 @@
 """Gate decision-plane bench throughput against the committed baseline.
 
 `make bench-check` runs the microbenchmarks into a fresh JSON file and
-compares the gated cases (the shared-pool cluster group) against the
-committed ``BENCH_decision.json``: a drop in ``items_per_sec`` beyond the
-tolerance (default 15%) fails the build, so a regression that re-grows
-the shared-pool contention cliff is caught at PR time.
+compares the gated cases (the shared-pool cluster group and the fused
+dense-kernel pair) against the committed ``BENCH_decision.json``: a drop
+in ``items_per_sec`` beyond the tolerance (default 15%) fails the build,
+so a regression that re-grows the shared-pool contention cliff is caught
+at PR time. The kernel pair additionally carries an absolute floor,
+measured on the *fresh* run alone: the SIMD single-pass column kernel
+must be at least 1.5x the scalar reference on the 32k-vocab group
+(DESIGN.md §12), or the vectorization has rotted.
 
 The committed baseline may be *provisional* — synthesized on a machine
 that could not run the benches (marked by a ``_baseline/provisional``
@@ -29,9 +33,17 @@ import shutil
 import sys
 
 # Case-name prefixes the gate enforces. Everything else is informational.
-GATED_PREFIXES = ("cluster/shared_pool",)
+GATED_PREFIXES = ("cluster/shared_pool", "kernels/")
 PROVISIONAL_MARKER = "_baseline/provisional"
 DEFAULT_TOLERANCE = 0.15
+
+# Absolute floor on the fused dense-kernel pair: the SIMD column kernel
+# must beat the scalar reference by this factor on the fresh run. This
+# check is independent of the committed baseline (and of its provisional
+# state) — both numbers come from the same machine, same run.
+KERNEL_SCALAR = "kernels/scalar_penalty_filter_softmax"
+KERNEL_SIMD = "kernels/simd_penalty_filter_softmax"
+MIN_KERNEL_SPEEDUP = 1.5
 
 
 def load_cases(path: str) -> dict[str, float | None]:
@@ -114,11 +126,36 @@ def main(argv: list[str]) -> int:
             )
         rows.append(f"  {name}: {b:.1f} -> {f:.1f} items/s ({delta:+.1%}) {verdict}")
 
+    # SIMD speedup floor, measured entirely within the fresh run.
+    ratio_failures: list[str] = []
+    scalar_ips, simd_ips = fresh.get(KERNEL_SCALAR), fresh.get(KERNEL_SIMD)
+    if isinstance(scalar_ips, (int, float)) and isinstance(simd_ips, (int, float)) \
+            and scalar_ips > 0:
+        speedup = simd_ips / scalar_ips
+        verdict = "OK" if speedup >= MIN_KERNEL_SPEEDUP else "TOO SLOW"
+        rows.append(
+            f"  kernels 32k speedup: simd {speedup:.2f}x scalar "
+            f"(floor {MIN_KERNEL_SPEEDUP:.1f}x) {verdict}"
+        )
+        if speedup < MIN_KERNEL_SPEEDUP:
+            ratio_failures.append(
+                f"simd kernel only {speedup:.2f}x scalar on the 32k group "
+                f"(floor {MIN_KERNEL_SPEEDUP:.1f}x): "
+                f"{simd_ips:.1f} vs {scalar_ips:.1f} items/s"
+            )
+    elif KERNEL_SCALAR in fresh or KERNEL_SIMD in fresh:
+        rows.append("  kernels 32k speedup: pair not measured in fresh run (skipped)")
+
     print(f"bench-check: {len(base_gated) or len(fresh_gated)} gated case(s), "
           f"tolerance {args.tolerance:.0%}")
     for row in rows:
         print(row)
 
+    if ratio_failures:
+        print("bench-check FAILED (kernel speedup floor):")
+        for f in ratio_failures:
+            print(f"  {f}")
+        return 1
     if provisional:
         print(
             "baseline is PROVISIONAL (no measured numbers committed): gate "

@@ -7,13 +7,16 @@
 //! scans (§9 limitations). This controller closes the loop:
 //!
 //! 1. Observe the realized acceptance rate over a sliding window.
-//! 2. Re-anchor the sizing model's ᾱ(H) curve by a multiplicative shift
-//!    that matches the observation at the current H.
-//! 3. Re-solve for H* and step toward it, rate-limited to avoid
-//!    oscillation, bounded so the decision plane stays under the cycle
-//!    budget F(H) ≤ T_cycle (the §5.4 deployment rule).
+//! 2. Fold the observation into an [`OnlineAlphaEstimator`] — a
+//!    multiplicative correction *curve* over the offline ᾱ(H) prior,
+//!    learned locally at the H values actually visited (a single global
+//!    scale would wrongly extrapolate a shift at one H to all of them).
+//! 3. Re-solve for H* under the corrected curve and step toward it,
+//!    rate-limited to avoid oscillation, bounded so the decision plane
+//!    stays under the cycle budget F(H) ≤ T_cycle (the §5.4 deployment
+//!    rule).
 
-use super::sizing::SizingModel;
+use super::sizing::{OnlineAlphaEstimator, SizingModel};
 
 /// Controller configuration.
 #[derive(Debug, Clone)]
@@ -59,8 +62,9 @@ pub struct HotVocabController {
     sizing: SizingModel,
     current_h: usize,
     window: WindowStats,
-    /// Multiplicative correction applied to ᾱ(H) (1.0 = offline model).
-    alpha_scale: f64,
+    /// Learned multiplicative correction curve over ᾱ(H) (1.0 = offline
+    /// model everywhere until runtime evidence arrives).
+    est: OnlineAlphaEstimator,
     /// Number of completed control periods.
     pub periods: u64,
     /// History of (period, H, observed ᾱ) for observability.
@@ -70,12 +74,19 @@ pub struct HotVocabController {
 impl HotVocabController {
     pub fn new(cfg: ControllerConfig, sizing: SizingModel, initial_h: usize) -> Self {
         let h = initial_h.clamp(cfg.h_min, cfg.h_max.min(sizing.vocab - 1));
+        let (lo, hi) = sizing.alpha.domain();
+        let est = OnlineAlphaEstimator::new(
+            lo.max(cfg.h_min as f64),
+            hi.min((sizing.vocab - 1) as f64),
+            16,
+            0.5,
+        );
         HotVocabController {
             cfg,
             sizing,
             current_h: h,
             window: WindowStats::default(),
-            alpha_scale: 1.0,
+            est,
             periods: 0,
             history: Vec::new(),
         }
@@ -86,9 +97,15 @@ impl HotVocabController {
         self.current_h
     }
 
+    /// The learned ᾱ correction at a given H (1.0 = still trusting the
+    /// offline prior there).
+    pub fn alpha_correction(&self, h: f64) -> f64 {
+        self.est.correction(h)
+    }
+
     /// The effective (re-anchored) hit-ratio estimate at a given H.
     pub fn alpha_estimate(&self, h: f64) -> f64 {
-        (self.sizing.alpha.eval(h) * self.alpha_scale).clamp(0.0, 1.0)
+        (self.sizing.alpha.eval(h) * self.est.correction(h)).clamp(0.0, 1.0)
     }
 
     /// Expected decision cost with the re-anchored ᾱ.
@@ -114,12 +131,14 @@ impl HotVocabController {
         self.periods += 1;
         self.history.push((self.periods, self.current_h, observed));
 
-        // Re-anchor ᾱ at the current H.
+        // Re-anchor ᾱ locally at the current H: fold the observed/predicted
+        // ratio into the correction curve (the estimator clamps the ratio
+        // and splits the update across the bracketing knots).
         let predicted = self.sizing.alpha.eval(self.current_h as f64);
-        if predicted > 1e-9 && (observed - self.alpha_estimate(self.current_h as f64)).abs()
-            > self.cfg.deadband
+        if predicted > 1e-9
+            && (observed - self.alpha_estimate(self.current_h as f64)).abs() > self.cfg.deadband
         {
-            self.alpha_scale = (observed / predicted).clamp(0.25, 2.0);
+            self.est.observe(self.current_h as f64, observed / predicted);
         }
 
         // Re-solve argmin F under the adapted curve (coarse grid — the
@@ -233,7 +252,8 @@ mod tests {
             h0,
             ctl.h()
         );
-        assert!(ctl.alpha_scale < 0.9, "scale {}", ctl.alpha_scale);
+        let corr = ctl.alpha_correction(ctl.h() as f64);
+        assert!(corr < 0.9, "correction {corr}");
     }
 
     #[test]

@@ -19,6 +19,11 @@ use super::params::SamplingParams;
 /// vocabulary, `weights[i] = exp((z_i − z_max)/τ)` are unnormalized softmax
 /// weights over the subset, `sum` their total. Sampling draws from
 /// `weights/sum`; this *is* the truncated stable softmax.
+///
+/// Canonical ordering invariant: `ids` is always ascending, and `sum` is the
+/// left-to-right f64 sum of `weights` in that id order. Every producer
+/// (quickselect, sort-based, SIMD) must emit this exact layout so the
+/// bit-identical-streams invariant holds across kernel backends.
 #[derive(Debug, Clone)]
 pub struct Truncated {
     pub ids: Vec<u32>,
@@ -41,14 +46,20 @@ impl Truncated {
     }
 }
 
-/// Quickselect: partition `items` so the `k` largest-by-logit items occupy
+/// Quickselect: partition `items` so the `k` largest items occupy
 /// `items[..k]` (order within unspecified). Average O(n) via std's
 /// introselect (`select_nth_unstable_by`).
+///
+/// Ties at the kth logit break by **lowest id wins**: the comparator is the
+/// total order (logit desc, id asc), so the selected top-k *set* is unique
+/// and backend-independent even with duplicate logits.
 pub fn select_top_k(items: &mut [(u32, f32)], k: usize) {
     if k == 0 || k >= items.len() {
         return;
     }
-    items.select_nth_unstable_by(k - 1, |a, b| b.1.partial_cmp(&a.1).unwrap());
+    items.select_nth_unstable_by(k - 1, |a, b| {
+        b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+    });
 }
 
 /// Apply the truncation-first chain to penalized candidates `(id, logit)`.
@@ -66,10 +77,12 @@ pub fn truncate(mut candidates: Vec<(u32, f32)>, p: &SamplingParams) -> Truncate
         return Truncated { ids: vec![id], weights: vec![1.0], sum: 1.0, z_max: z };
     }
 
-    // 1. top-k (quickselect, O(n))
+    // 1. top-k (quickselect, O(n)); survivors restored to ascending-id
+    // order so stage 2's f64 accumulation order is backend-independent.
     if p.top_k > 0 && p.top_k < candidates.len() {
         select_top_k(&mut candidates, p.top_k);
         candidates.truncate(p.top_k);
+        candidates.sort_unstable_by_key(|&(id, _)| id);
     }
 
     // 2. temperature + stable weights over the survivors
@@ -90,7 +103,9 @@ pub fn truncate(mut candidates: Vec<(u32, f32)>, p: &SamplingParams) -> Truncate
 
     // 3. nucleus top-p on the renormalized survivors
     if p.top_p < 1.0 {
-        // sort subset desc by weight (O(k log k), k already small)
+        // Stable sort desc by weight (O(k log k), k already small). Indices
+        // are ascending-id, so equal weights at the cutoff keep the lowest
+        // id first — the nucleus set is deterministic under ties.
         let mut order: Vec<usize> = (0..ids.len()).collect();
         order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
         let threshold = p.top_p as f64 * sum;
@@ -144,7 +159,9 @@ pub fn truncate_sort_based(mut candidates: Vec<(u32, f32)>, p: &SamplingParams) 
     if p.top_k > 0 && p.top_k < candidates.len() {
         candidates.truncate(p.top_k);
     }
-    // Delegate to the same weight/top-p/min-p logic (already truncated by k).
+    // Restore the canonical ascending-id order before delegating so the f64
+    // accumulation order matches the quickselect path bit-for-bit.
+    candidates.sort_unstable_by_key(|&(id, _)| id);
     let rest = SamplingParams { top_k: 0, ..p.clone() };
     truncate(candidates, &rest)
 }
@@ -383,5 +400,75 @@ mod tests {
     #[should_panic]
     fn empty_candidates_panic() {
         truncate(Vec::new(), &SamplingParams::default());
+    }
+
+    #[test]
+    fn top_k_geq_vocab_is_noop() {
+        let logits = [1.0f32, 3.0, 2.0, 0.0];
+        let unfiltered = truncate(cands(&logits), &SamplingParams::default());
+        for k in [4usize, 5, 1000] {
+            let p = SamplingParams { top_k: k, ..Default::default() };
+            let t = truncate(cands(&logits), &p);
+            assert_eq!(t.ids, vec![0, 1, 2, 3]);
+            assert_eq!(t.weights, unfiltered.weights);
+            assert_eq!(t.sum.to_bits(), unfiltered.sum.to_bits());
+        }
+    }
+
+    #[test]
+    fn top_p_one_keeps_everything_even_with_ties() {
+        let logits = [2.0f32, 2.0, 2.0, 1.0];
+        let p = SamplingParams { top_p: 1.0, ..Default::default() };
+        let t = truncate(cands(&logits), &p);
+        assert_eq!(t.ids, vec![0, 1, 2, 3]);
+        let s: f64 = (0..t.len()).map(|i| t.prob(i)).sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_p_ties_at_cutoff_keep_lowest_ids() {
+        // Four equal weights; top_p = 0.5 keeps exactly the two lowest ids
+        // because the nucleus sort is stable over ascending-id indices.
+        let logits = [1.0f32, 1.0, 1.0, 1.0];
+        let p = SamplingParams { top_p: 0.5, ..Default::default() };
+        let t = truncate(cands(&logits), &p);
+        assert_eq!(t.ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn min_p_eliminates_all_but_argmax() {
+        let logits = [0.0f32, 10.0, 1.0, 2.0];
+        let p = SamplingParams { min_p: 0.999, ..Default::default() };
+        let t = truncate(cands(&logits), &p);
+        assert_eq!(t.ids, vec![1]);
+        assert!((t.prob(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_k_ties_at_kth_keep_lowest_ids() {
+        // Total order (logit desc, id asc): top-3 of these is {5, 1, 2}.
+        let c =
+            vec![(0u32, 1.0f32), (1, 2.0), (2, 2.0), (3, 2.0), (4, 0.5), (5, 3.0)];
+        let p = SamplingParams { top_k: 3, ..Default::default() };
+        let t = truncate(c, &p);
+        assert_eq!(t.ids, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn empty_allow_list_rejected_before_filtering() {
+        // A grammar dead state yields an empty allow mask, and a user
+        // allow-list disjoint from the grammar mask empties the candidates;
+        // params validation is the guard that keeps both out of `truncate`
+        // (which panics on an empty set).
+        assert!(apply_allow_list(cands(&[1.0, 2.0]), &[]).is_empty());
+        let grammar_mask = [0u32, 2];
+        let user_allow = [1u32, 3];
+        let once = apply_allow_list(cands(&[1.0, 2.0, 3.0, 4.0]), &grammar_mask);
+        assert!(apply_allow_list(once, &user_allow).is_empty());
+        let p = SamplingParams {
+            allowed_tokens: Some(vec![]),
+            ..Default::default()
+        };
+        assert!(p.validate(4).is_err());
     }
 }

@@ -1,8 +1,13 @@
 //! Hot-vocabulary construction (§5.3).
 //!
-//! The hot set `H ⊂ V` is model-dependent and built offline from traces:
-//! rank tokens by observed frequency and keep the top H. Membership tests
-//! are O(1) via a bitset; the sorted id list drives the O(H) hot-path scan.
+//! The hot set `H ⊂ V` is model-dependent and built from traces: rank
+//! tokens by observed frequency and keep the top H. A `HotVocab` carries the
+//! *full* frequency ranking (rank → id permutation over V, shared via `Arc`),
+//! not just the member list: the adaptive sizing controller (§5.4) resizes H
+//! online with [`HotVocab::resize`], and the SHVS coupled draw walks tokens
+//! in rank order so that nested prefixes of one ranking produce bit-identical
+//! token streams for every H. Membership tests are O(1) via the inverse
+//! rank table; the sorted id list drives the O(H) hot-path gather.
 
 use crate::rng::zipf::ZipfMandelbrot;
 use crate::rng::Philox;
@@ -13,13 +18,21 @@ use std::sync::Arc;
 pub struct HotVocab {
     /// Hot token ids, ascending.
     ids: Vec<u32>,
-    /// Bitset over the vocabulary: bit v set ⇔ v ∈ H.
-    mask: Vec<u64>,
+    /// rank → id permutation over the full vocabulary (rank 0 = hottest).
+    /// Shared across resized instances so all H share one rank order.
+    ranking: Arc<Vec<u32>>,
+    /// id → rank inverse of `ranking`.
+    rank_of: Arc<Vec<u32>>,
+    /// rank r (r < h) → index into `ids`, so the id-order hot gather can be
+    /// walked in rank order without re-sorting.
+    rank_pos: Vec<u32>,
     vocab: usize,
 }
 
 impl HotVocab {
-    /// Build from an explicit id list.
+    /// Build from an explicit id list. The synthesized ranking is the hot
+    /// ids ascending followed by the tail ascending — i.e. rank order within
+    /// H equals id order, which keeps pre-ranking callers bit-compatible.
     pub fn new(mut ids: Vec<u32>, vocab: usize) -> Self {
         ids.sort_unstable();
         ids.dedup();
@@ -28,25 +41,69 @@ impl HotVocab {
             "hot id out of vocab"
         );
         assert!(ids.len() < vocab, "hot set must be a strict subset");
-        let mut mask = vec![0u64; vocab.div_ceil(64)];
+        let h = ids.len();
+        let mut ranking = Vec::with_capacity(vocab);
+        ranking.extend_from_slice(&ids);
+        let mut member = vec![false; vocab];
         for &v in &ids {
-            mask[(v / 64) as usize] |= 1u64 << (v % 64);
+            member[v as usize] = true;
         }
-        HotVocab { ids, mask, vocab }
+        ranking.extend((0..vocab as u32).filter(|&v| !member[v as usize]));
+        let rank_of = invert(&ranking);
+        HotVocab {
+            ids,
+            ranking: Arc::new(ranking),
+            rank_of: Arc::new(rank_of),
+            rank_pos: (0..h as u32).collect(),
+            vocab,
+        }
     }
 
-    /// Build from trace token counts: the `h` most frequent ids (ties by id).
+    /// Build from a full frequency ranking (rank → id permutation over V),
+    /// keeping the first `h` ranks hot.
+    pub fn from_ranking(ranking: Arc<Vec<u32>>, h: usize, vocab: usize) -> Self {
+        assert_eq!(ranking.len(), vocab, "ranking must cover the vocab");
+        assert!(h < vocab, "hot set must be a strict subset");
+        let rank_of = Arc::new(invert(&ranking));
+        Self::from_shared(ranking, rank_of, h, vocab)
+    }
+
+    fn from_shared(
+        ranking: Arc<Vec<u32>>,
+        rank_of: Arc<Vec<u32>>,
+        h: usize,
+        vocab: usize,
+    ) -> Self {
+        let mut ids: Vec<u32> = ranking[..h].to_vec();
+        ids.sort_unstable();
+        let rank_pos = ranking[..h]
+            .iter()
+            .map(|&id| ids.binary_search(&id).unwrap() as u32)
+            .collect();
+        HotVocab { ids, ranking, rank_of, rank_pos, vocab }
+    }
+
+    /// A hot set over the same ranking with a different H. O(h log h); the
+    /// rank tables are shared, so adaptive resizing allocates only the id
+    /// list. Nested prefixes of one ranking are what make adaptive-vs-static
+    /// SHVS streams bit-identical.
+    pub fn resize(&self, new_h: usize) -> Self {
+        let new_h = new_h.clamp(1, self.vocab - 1);
+        Self::from_shared(self.ranking.clone(), self.rank_of.clone(), new_h, self.vocab)
+    }
+
+    /// Build from trace token counts: the `h` most frequent ids (ties by
+    /// id), with the full count ranking retained for online resizing.
     pub fn from_counts(counts: &[u64], h: usize) -> Self {
         let vocab = counts.len();
         let h = h.min(vocab.saturating_sub(1)).max(1);
         let mut idx: Vec<u32> = (0..vocab as u32).collect();
-        idx.select_nth_unstable_by(h - 1, |&a, &b| {
+        idx.sort_unstable_by(|&a, &b| {
             counts[b as usize]
                 .cmp(&counts[a as usize])
                 .then(a.cmp(&b))
         });
-        idx.truncate(h);
-        Self::new(idx, vocab)
+        Self::from_ranking(Arc::new(idx), h, vocab)
     }
 
     /// Synthetic trace: draw `samples` tokens from a Zipf-shaped unigram
@@ -77,12 +134,22 @@ impl HotVocab {
     pub fn contains(&self, v: u32) -> bool {
         let v = v as usize;
         debug_assert!(v < self.vocab);
-        (self.mask[v / 64] >> (v % 64)) & 1 == 1
+        (self.rank_of[v] as usize) < self.ids.len()
     }
 
     /// Sorted hot ids.
     pub fn ids(&self) -> &[u32] {
         &self.ids
+    }
+    /// The full rank → id permutation (rank 0 = hottest).
+    pub fn ranking(&self) -> &[u32] {
+        &self.ranking
+    }
+    /// For rank r < h: the index of `ranking[r]` within the ascending `ids`
+    /// list, so id-order gathers can be consumed in rank order.
+    #[inline]
+    pub fn rank_index(&self, r: usize) -> usize {
+        self.rank_pos[r] as usize
     }
     pub fn len(&self) -> usize {
         self.ids.len()
@@ -100,6 +167,15 @@ impl HotVocab {
     pub fn into_arc(self) -> Arc<HotVocab> {
         Arc::new(self)
     }
+}
+
+fn invert(ranking: &[u32]) -> Vec<u32> {
+    let mut rank_of = vec![u32::MAX; ranking.len()];
+    for (r, &id) in ranking.iter().enumerate() {
+        assert_eq!(rank_of[id as usize], u32::MAX, "ranking must be a permutation");
+        rank_of[id as usize] = r as u32;
+    }
+    rank_of
 }
 
 #[cfg(test)]
@@ -123,6 +199,8 @@ mod tests {
         let h = HotVocab::from_counts(&counts, 3);
         // top-3 by count: 1(100), 3(50), 4(50)
         assert_eq!(h.ids(), &[1, 3, 4]);
+        // full ranking continues past H in count order
+        assert_eq!(h.ranking(), &[1, 3, 4, 0, 2, 5]);
     }
 
     #[test]
@@ -156,10 +234,40 @@ mod tests {
     }
 
     #[test]
-    fn bitset_spans_word_boundaries() {
+    fn membership_spans_word_boundaries() {
         let h = HotVocab::new(vec![63, 64, 127, 128], 200);
         assert!(h.contains(63) && h.contains(64) && h.contains(127) && h.contains(128));
         assert!(!h.contains(62) && !h.contains(65) && !h.contains(199));
+    }
+
+    #[test]
+    fn resize_shares_ranking_and_nests() {
+        let counts = vec![9u64, 1, 8, 7, 2, 6, 3, 5, 4, 0];
+        let big = HotVocab::from_counts(&counts, 6);
+        let small = big.resize(3);
+        assert_eq!(small.ranking(), big.ranking());
+        // nested prefix: every small member is a big member
+        for &id in small.ids() {
+            assert!(big.contains(id));
+        }
+        assert_eq!(small.len(), 3);
+        // rank_index maps rank order onto the ascending id list
+        for r in 0..small.len() {
+            assert_eq!(small.ids()[small.rank_index(r)], small.ranking()[r]);
+        }
+        let grown = small.resize(8);
+        assert_eq!(grown.len(), 8);
+        assert_eq!(grown.ranking(), big.ranking());
+    }
+
+    #[test]
+    fn new_synthesizes_id_order_ranking() {
+        let h = HotVocab::new(vec![4, 2, 7], 9);
+        // hot ids ascending first, then the tail ascending
+        assert_eq!(h.ranking(), &[2, 4, 7, 0, 1, 3, 5, 6, 8]);
+        for r in 0..h.len() {
+            assert_eq!(h.ids()[h.rank_index(r)], h.ranking()[r]);
+        }
     }
 
     #[test]

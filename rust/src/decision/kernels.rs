@@ -1,0 +1,519 @@
+//! Vectorized single-pass dense sampling kernels (§5.2 hot path).
+//!
+//! The per-column decision work — sparse penalty patch, max reduction,
+//! top-k boundary selection — is restructured here around explicit 8-wide
+//! f32/u32 lane structs (`[f32; 8]` / `[u32; 8]` blocks that LLVM
+//! autovectorizes to SSE/AVX/NEON without any non-portable intrinsics or
+//! new dependencies). The backend is runtime-dispatched via
+//! [`KernelBackend::detect`] (`SIMPLE_KERNELS=scalar|simd`), and `cargo
+//! test` exercises both: `rust/tests/simd_kernels.rs` drives the two
+//! backends against each other over adversarial vocabularies.
+//!
+//! **Bit-identical-streams invariant.** The vector path must produce the
+//! same `Truncated` sets and the same sampled tokens as the scalar path,
+//! bit for bit. Three design rules make that hold:
+//!
+//! 1. Lanes only touch *order* computations (max, compare, count), never
+//!    the `exp`/f64 accumulation — weights and sums always flow through the
+//!    one scalar formula in [`super::filter::truncate`].
+//! 2. Comparisons run on a canonical order-preserving `u32` key
+//!    ([`order_key`]): sign-flipped IEEE bits with `-0.0` canonicalized to
+//!    `+0.0`, so key `>`/`==` agree exactly with f32 `partial_cmp` on every
+//!    non-NaN input (±inf and subnormals included) and the tie classes
+//!    match the scalar comparator's.
+//! 3. Ties break **lowest index wins** everywhere — each lane keeps its
+//!    earliest maximum via strict `>`, and the horizontal reduction picks
+//!    the lowest absolute index among equal lane maxima, matching
+//!    [`super::softmax::argmax`] and the top-k total order (logit desc,
+//!    id asc) of [`super::filter::select_top_k`].
+//!
+//! The fused column pass is cache-resident: one sweep over the
+//! materialized row builds the keys *and* tracks the running max; the
+//! top-k boundary is then found by quickselect over the `u32` keys (far
+//! cheaper than tuple-comparator quickselect on `(u32, f32)` pairs), the
+//! strict-majority count `#{key > kth}` is a lane-parallel compare-count,
+//! and survivors are emitted directly in ascending-id order — the canonical
+//! `Truncated` layout — so the shared scalar continuation (temperature,
+//! top-p, min-p, draw) is bitwise the slow path's.
+
+use super::categorical::draw_token;
+use super::filter::{truncate, Truncated};
+use super::params::SamplingParams;
+use super::penalties::{penalize_logit, SeqHistory};
+use super::shvs::slow_path_token;
+use crate::tensor::ShardedLogits;
+
+/// Portable lane width: 8 × f32 = one AVX2 register, two NEON registers.
+pub const LANES: usize = 8;
+
+/// Which kernel implementation a sampler runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// The reference scalar path ([`slow_path_token`] verbatim).
+    Scalar,
+    /// The lane-vectorized fused path (default).
+    Simd,
+}
+
+impl KernelBackend {
+    /// Runtime dispatch: `SIMPLE_KERNELS=scalar` forces the reference
+    /// path, `SIMPLE_KERNELS=simd` (or unset) the vector path. Exists so
+    /// CI can run the whole suite under both backends.
+    pub fn detect() -> KernelBackend {
+        match std::env::var("SIMPLE_KERNELS").ok().as_deref() {
+            Some("scalar") => KernelBackend::Scalar,
+            _ => KernelBackend::Simd,
+        }
+    }
+}
+
+/// Order-preserving key transform: for all non-NaN `a, b`:
+/// `order_key(a) > order_key(b) ⟺ a > b` and equality likewise, with
+/// `-0.0` and `+0.0` mapping to one tie class (as f32 `==` does).
+#[inline(always)]
+fn order_key(z: f32) -> u32 {
+    let bits = if z == 0.0 { 0 } else { z.to_bits() };
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits ^ 0x8000_0000
+    }
+}
+
+/// Backend-dispatched argmax. Tie rule: lowest index wins (the
+/// [`super::softmax::argmax`] contract).
+pub fn argmax(backend: KernelBackend, row: &[f32]) -> usize {
+    match backend {
+        KernelBackend::Scalar => super::softmax::argmax(row),
+        KernelBackend::Simd => argmax_simd(row),
+    }
+}
+
+fn argmax_simd(row: &[f32]) -> usize {
+    let n = row.len();
+    if n < LANES * 2 {
+        return super::softmax::argmax(row);
+    }
+    // Per-lane running max with strict `>`: each lane keeps its EARLIEST
+    // maximum, so the horizontal pass below sees one candidate per lane.
+    let mut best = [0.0f32; LANES];
+    let mut idx = [0u32; LANES];
+    for l in 0..LANES {
+        best[l] = row[l];
+        idx[l] = l as u32;
+    }
+    let mut i = LANES;
+    while i + LANES <= n {
+        for l in 0..LANES {
+            let z = row[i + l];
+            if z > best[l] {
+                best[l] = z;
+                idx[l] = (i + l) as u32;
+            }
+        }
+        i += LANES;
+    }
+    // Horizontal combine: strict `>` plus lowest-absolute-index tie-break,
+    // which reproduces the scalar left-to-right strict-`>` scan exactly.
+    let mut bz = best[0];
+    let mut bi = idx[0];
+    for l in 1..LANES {
+        if best[l] > bz || (best[l] == bz && idx[l] < bi) {
+            bz = best[l];
+            bi = idx[l];
+        }
+    }
+    // Remainder indices exceed every processed index, so strict `>` alone
+    // preserves the tie rule.
+    while i < n {
+        if row[i] > bz {
+            bz = row[i];
+            bi = i as u32;
+        }
+        i += 1;
+    }
+    bi as usize
+}
+
+/// Fused column pass: write `order_key(row[i])` into `keys` and return the
+/// argmax index (lowest-index tie rule) in the same cache-resident sweep.
+fn build_keys_fused(row: &[f32], keys: &mut Vec<u32>) -> usize {
+    let n = row.len();
+    keys.clear();
+    keys.resize(n, 0);
+    if n < LANES * 2 {
+        let mut bi = 0usize;
+        for (i, &z) in row.iter().enumerate() {
+            let k = order_key(z);
+            keys[i] = k;
+            if k > keys[bi] {
+                bi = i;
+            }
+        }
+        return bi;
+    }
+    let mut best = [0u32; LANES];
+    let mut idx = [0u32; LANES];
+    for l in 0..LANES {
+        let k = order_key(row[l]);
+        keys[l] = k;
+        best[l] = k;
+        idx[l] = l as u32;
+    }
+    let mut i = LANES;
+    while i + LANES <= n {
+        for l in 0..LANES {
+            let k = order_key(row[i + l]);
+            keys[i + l] = k;
+            if k > best[l] {
+                best[l] = k;
+                idx[l] = (i + l) as u32;
+            }
+        }
+        i += LANES;
+    }
+    let mut bk = best[0];
+    let mut bi = idx[0];
+    for l in 1..LANES {
+        if best[l] > bk || (best[l] == bk && idx[l] < bi) {
+            bk = best[l];
+            bi = idx[l];
+        }
+    }
+    while i < n {
+        let k = order_key(row[i]);
+        keys[i] = k;
+        if k > bk {
+            bk = k;
+            bi = i as u32;
+        }
+        i += 1;
+    }
+    bi as usize
+}
+
+/// Lane-parallel `#{key > t}`.
+fn count_gt(keys: &[u32], t: u32) -> usize {
+    let mut acc = [0u32; LANES];
+    let mut chunks = keys.chunks_exact(LANES);
+    for ch in &mut chunks {
+        for l in 0..LANES {
+            acc[l] += (ch[l] > t) as u32;
+        }
+    }
+    let mut n: usize = acc.iter().map(|&c| c as usize).sum();
+    for &k in chunks.remainder() {
+        n += (k > t) as usize;
+    }
+    n
+}
+
+/// A dense full-vocabulary decision kernel with reusable scratch buffers
+/// (one per sampler thread; the vector path must not allocate per column).
+pub struct DenseKernel {
+    backend: KernelBackend,
+    row: Vec<f32>,
+    keys: Vec<u32>,
+    sel: Vec<u32>,
+}
+
+impl DenseKernel {
+    pub fn new(backend: KernelBackend) -> Self {
+        DenseKernel { backend, row: Vec::new(), keys: Vec::new(), sel: Vec::new() }
+    }
+
+    pub fn backend(&self) -> KernelBackend {
+        self.backend
+    }
+
+    /// Decide one column exactly: penalties → filter chain → draw. Output
+    /// is bitwise [`slow_path_token`]'s for every input, on both backends.
+    pub fn decide(
+        &mut self,
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+        u: f64,
+    ) -> u32 {
+        match self.backend {
+            KernelBackend::Scalar => slow_path_token(view, b, hist, params, u),
+            KernelBackend::Simd => self.decide_simd(view, b, hist, params, u),
+        }
+    }
+
+    /// Materialize column `b` and apply the sparse penalty patch, identical
+    /// in structure to `slow_path_token`: penalize each touched id first,
+    /// then the separate bias-add loop (the order matters — bias applies
+    /// after the sign-aware division). Pure per-element scalar arithmetic,
+    /// so the patched row is bitwise the slow path's on both backends.
+    fn load_column(
+        &mut self,
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+    ) {
+        view.materialize_row_into(b, &mut self.row);
+        if params.has_penalties() {
+            for (id, out_count) in hist.penalized_ids() {
+                if let Some(z) = self.row.get_mut(id as usize) {
+                    *z = penalize_logit(*z, true, out_count, params);
+                }
+            }
+        }
+        for (&id, &bias) in &params.logit_bias {
+            if let Some(z) = self.row.get_mut(id as usize) {
+                *z += bias;
+            }
+        }
+    }
+
+    /// The vector top-k truncation over the loaded row. Fused pass builds
+    /// canonical keys + running max in one sweep; quickselect finds the
+    /// k-th largest KEY (u32 compares — no NaN branches, no tuple
+    /// shuffles); survivors come out in one ascending-id scan: every key
+    /// above the boundary, plus the first (k − #above) boundary ties —
+    /// exactly the total-order (logit desc, id asc) top-k set, already in
+    /// canonical order for the shared scalar continuation.
+    fn truncate_loaded_topk(&mut self, params: &SamplingParams) -> Truncated {
+        let _ = build_keys_fused(&self.row, &mut self.keys);
+        let k = params.top_k;
+        self.sel.clear();
+        self.sel.extend_from_slice(&self.keys);
+        self.sel.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+        let kth = self.sel[k - 1];
+        let n_gt = count_gt(&self.keys, kth);
+        debug_assert!(n_gt < k);
+        let mut tie_take = k - n_gt;
+        let mut survivors: Vec<(u32, f32)> = Vec::with_capacity(k);
+        for (v, &key) in self.keys.iter().enumerate() {
+            if key > kth {
+                survivors.push((v as u32, self.row[v]));
+            } else if key == kth && tie_take > 0 {
+                tie_take -= 1;
+                survivors.push((v as u32, self.row[v]));
+            }
+            if survivors.len() == k {
+                break;
+            }
+        }
+        let rest = SamplingParams { top_k: 0, ..params.clone() };
+        truncate(survivors, &rest)
+    }
+
+    /// The column's canonical [`Truncated`] set under this backend — the
+    /// differential-suite surface: kept ids, per-id stable weights, and the
+    /// f64 weight sum must be bitwise equal across backends for every
+    /// filter combination. (Greedy and allow-list columns never build a
+    /// `Truncated` on the decide path; callers compare those via tokens.)
+    pub fn truncated_column(
+        &mut self,
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+    ) -> Truncated {
+        self.load_column(view, b, hist, params);
+        let vocab = self.row.len();
+        if self.backend == KernelBackend::Simd && params.top_k > 0 && params.top_k < vocab
+        {
+            return self.truncate_loaded_topk(params);
+        }
+        let pairs: Vec<(u32, f32)> = self
+            .row
+            .iter()
+            .enumerate()
+            .map(|(v, &z)| (v as u32, z))
+            .collect();
+        truncate(pairs, params)
+    }
+
+    fn decide_simd(
+        &mut self,
+        view: &ShardedLogits,
+        b: usize,
+        hist: &SeqHistory,
+        params: &SamplingParams,
+        u: f64,
+    ) -> u32 {
+        // Allow-lists shrink the candidate set to a handful of ids — the
+        // scalar path is already optimal there and keeps grammar-masked
+        // requests on one audited code path.
+        if params.allowed_tokens.is_some() {
+            return slow_path_token(view, b, hist, params, u);
+        }
+        self.load_column(view, b, hist, params);
+
+        if params.is_greedy() {
+            // truncate's greedy singleton is (max logit, lowest id) — the
+            // lane argmax implements the identical total order.
+            return argmax_simd(&self.row) as u32;
+        }
+
+        let vocab = self.row.len();
+        if params.top_k > 0 && params.top_k < vocab {
+            if params.top_k == 1 {
+                // Total-order top-1 is the argmax; top-p/min-p keep a
+                // singleton unchanged and the draw is forced.
+                return argmax_simd(&self.row) as u32;
+            }
+            let truncated = self.truncate_loaded_topk(params);
+            return draw_token(&truncated, u);
+        }
+
+        // No top-k: the chain starts at the temperature/top-p/min-p stage,
+        // whose cost is the shared scalar continuation either way.
+        let pairs: Vec<(u32, f32)> = self
+            .row
+            .iter()
+            .enumerate()
+            .map(|(v, &z)| (v as u32, z))
+            .collect();
+        let truncated = truncate(pairs, params);
+        draw_token(&truncated, u)
+    }
+}
+
+/// One-shot convenience wrapper (tests, oracles). Hot paths should hold a
+/// [`DenseKernel`] to reuse its scratch.
+pub fn decide_dense(
+    backend: KernelBackend,
+    view: &ShardedLogits,
+    b: usize,
+    hist: &SeqHistory,
+    params: &SamplingParams,
+    u: f64,
+) -> u32 {
+    DenseKernel::new(backend).decide(view, b, hist, params, u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+    use crate::tensor::{shard_row_major, Tensor2};
+
+    #[test]
+    fn order_key_is_order_preserving() {
+        let samples = [
+            f32::NEG_INFINITY,
+            -3.4e38,
+            -1.0,
+            -1e-40, // subnormal
+            -0.0,
+            0.0,
+            1e-40, // subnormal
+            f32::MIN_POSITIVE,
+            0.5,
+            1.0,
+            3.4e38,
+            f32::INFINITY,
+        ];
+        for (i, &a) in samples.iter().enumerate() {
+            for &b in &samples[i..] {
+                assert_eq!(order_key(a) > order_key(b), a > b, "{a} vs {b}");
+                assert_eq!(order_key(a) == order_key(b), a == b, "{a} vs {b}");
+            }
+        }
+        // ±0 is one tie class
+        assert_eq!(order_key(-0.0), order_key(0.0));
+    }
+
+    #[test]
+    fn lane_argmax_matches_scalar() {
+        let mut rng = Philox::new(11);
+        for n in [1usize, 7, 8, 9, 16, 17, 100, 1000] {
+            for round in 0..8 {
+                let row: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if round % 2 == 0 {
+                            rng.next_f32() * 10.0 - 5.0
+                        } else {
+                            // coarse quantization forces ties
+                            (rng.next_f32() * 4.0).floor()
+                        }
+                    })
+                    .collect();
+                assert_eq!(
+                    argmax_simd(&row),
+                    super::super::softmax::argmax(&row),
+                    "n={n} round={round}"
+                );
+            }
+        }
+        // all-equal rows: lowest index wins on both
+        assert_eq!(argmax_simd(&vec![1.5f32; 37]), 0);
+        // ±inf extremes
+        let mut row = vec![f32::NEG_INFINITY; 40];
+        row[23] = f32::INFINITY;
+        row[31] = f32::INFINITY;
+        assert_eq!(argmax_simd(&row), 23);
+    }
+
+    #[test]
+    fn count_gt_matches_naive() {
+        let mut rng = Philox::new(13);
+        let keys: Vec<u32> = (0..301).map(|_| rng.next_u64() as u32 % 64).collect();
+        for t in [0u32, 5, 31, 63, u32::MAX] {
+            let naive = keys.iter().filter(|&&k| k > t).count();
+            assert_eq!(count_gt(&keys, t), naive, "t={t}");
+        }
+    }
+
+    #[test]
+    fn fused_keys_agree_with_per_element_transform() {
+        let mut rng = Philox::new(17);
+        let row: Vec<f32> = (0..131).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+        let mut keys = Vec::new();
+        let amax = build_keys_fused(&row, &mut keys);
+        for (i, &z) in row.iter().enumerate() {
+            assert_eq!(keys[i], order_key(z));
+        }
+        assert_eq!(amax, super::super::softmax::argmax(&row));
+    }
+
+    #[test]
+    fn simd_decide_matches_scalar_quick() {
+        let v = 257; // off lane boundary
+        let b = 2;
+        let mut rng = Philox::new(23);
+        let logits: Vec<f32> =
+            (0..b * v).map(|_| (rng.next_f32() * 8.0).floor() * 0.5).collect();
+        let view = shard_row_major(&Tensor2::from_vec(b, v, logits), 3);
+        let mut hist = SeqHistory::new(&[3, 90]);
+        hist.append(17);
+        let mut params = SamplingParams {
+            top_k: 24,
+            top_p: 0.92,
+            min_p: 0.01,
+            temperature: 0.8,
+            repetition_penalty: 1.2,
+            presence_penalty: 0.1,
+            frequency_penalty: 0.1,
+            ..Default::default()
+        };
+        params.logit_bias.insert(200, 1.5);
+        let mut scalar = DenseKernel::new(KernelBackend::Scalar);
+        let mut simd = DenseKernel::new(KernelBackend::Simd);
+        for col in 0..b {
+            for i in 0..50 {
+                let u = (i as f64 + 0.5) / 50.0;
+                assert_eq!(
+                    simd.decide(&view, col, &hist, &params, u),
+                    scalar.decide(&view, col, &hist, &params, u),
+                    "col={col} u={u}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn detect_honors_env_contract() {
+        // Can't mutate the process env safely in parallel tests; just pin
+        // the default.
+        if std::env::var("SIMPLE_KERNELS").is_err() {
+            assert_eq!(KernelBackend::detect(), KernelBackend::Simd);
+        }
+    }
+}

@@ -5,6 +5,8 @@
 //!   rings (§5.1, §4.2).
 //! - [`penalties`] — column-wise, incrementally updated penalty state (§5.2).
 //! - [`filter`] — truncation-first top-k/top-p/min-p with index maps (§5.2).
+//! - [`kernels`] — lane-vectorized single-pass dense kernels with runtime
+//!   scalar/SIMD dispatch and a bit-identical-streams contract (§5.2).
 //! - [`shvs`] — speculative hot-vocab sampling with rejection-correctness
 //!   (§5.3); [`hotvocab`] builds the hot set, [`sizing`] chooses H* (§5.4).
 //! - [`pipeline`] — the per-sequence decision pipeline with the §7.4
@@ -27,6 +29,7 @@ pub mod draft;
 pub mod filter;
 pub mod grammar;
 pub mod hotvocab;
+pub mod kernels;
 pub mod params;
 pub mod penalties;
 pub mod pipeline;
@@ -42,6 +45,7 @@ pub use controller::{ControllerConfig, HotVocabController};
 pub use draft::DraftProposer;
 pub use grammar::GrammarConstraint;
 pub use hotvocab::HotVocab;
+pub use kernels::{DenseKernel, KernelBackend};
 pub use params::SamplingParams;
 pub use pipeline::DecisionPipeline;
 pub use seqrec::{SeqHandle, SeqRec};

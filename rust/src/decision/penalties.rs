@@ -163,6 +163,21 @@ pub fn penalized_logit_at(
     z
 }
 
+/// Every id whose logit the penalties or the bias can move, sorted and
+/// deduplicated. The sorted order matters: incremental f64 sum adjustments
+/// iterate this list, and a deterministic order keeps those sums bit-equal
+/// across samplers (HashMap iteration order is not).
+pub fn touched_ids_sorted(hist: &SeqHistory, p: &SamplingParams) -> Vec<u32> {
+    let mut ids: Vec<u32> = Vec::with_capacity(hist.num_penalized() + p.logit_bias.len());
+    if p.has_penalties() {
+        ids.extend(hist.penalized_ids().map(|(id, _)| id));
+    }
+    ids.extend(p.logit_bias.keys().copied());
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
 /// Column-wise batch history: the preallocated row-append buffer
 /// `Y ∈ N^{Lmax×B}` plus per-sequence sparse histograms.
 #[derive(Debug, Clone)]

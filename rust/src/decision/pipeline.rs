@@ -7,7 +7,7 @@
 //! |--------------|-------------------|----------------------|------------------------|------|
 //! | `NaiveCpu`   | materialized copy | histogram **rebuilt**| full **sort** O(V logV)| O(V) |
 //! | `Parallel`   | zero-copy views   | rebuilt              | full sort              | O(V) |
-//! | `Offloading` | zero-copy views   | **incremental** (§5.2)| truncation-first O(V) | O(k) |
+//! | `Offloading` | zero-copy views   | **incremental** (§5.2)| truncation-first O(V), lane-vectorized ([`super::kernels`]) | O(k) |
 //! | `Shvs`       | zero-copy views   | incremental           | hot-set + certificate  | O(H) |
 //!
 //! All variants produce the *same distribution*; they differ only in cost.
@@ -17,6 +17,7 @@
 use super::categorical::{draw_token, VariateSource};
 use super::filter::{apply_allow_list, truncate_sort_based};
 use super::hotvocab::HotVocab;
+use super::kernels::{DenseKernel, KernelBackend};
 use super::params::SamplingParams;
 use super::penalties::{apply_penalties_dense, BatchHistory, SeqHistory};
 use super::shvs::{slow_path_token, Decision, Precompute, ShvsSampler};
@@ -28,6 +29,9 @@ use std::sync::Arc;
 pub struct DecisionPipeline {
     variant: DecisionVariant,
     shvs: Option<ShvsSampler>,
+    /// Vectorized dense kernel for the `Offloading` variant
+    /// (backend from [`KernelBackend::detect`]: `SIMPLE_KERNELS=scalar|simd`).
+    dense: DenseKernel,
     variates: VariateSource,
     // stats
     pub decisions: u64,
@@ -47,10 +51,21 @@ impl DecisionPipeline {
         DecisionPipeline {
             variant,
             shvs,
+            dense: DenseKernel::new(KernelBackend::detect()),
             variates: VariateSource::new(engine_seed),
             decisions: 0,
             fast_path_hits: 0,
             alpha_sum: 0.0,
+        }
+    }
+
+    /// Swap the SHVS hot set online (the adaptive sizing controller's
+    /// actuation). No-op for non-SHVS variants. Subsequent decisions must
+    /// see `Precompute`s for the new H; the `pre: None` reference path
+    /// recomputes per call and is therefore always safe.
+    pub fn set_hot_vocab(&mut self, hot: Arc<HotVocab>) {
+        if let Some(s) = self.shvs.as_mut() {
+            s.set_hot(hot);
         }
     }
 
@@ -140,8 +155,10 @@ impl DecisionPipeline {
             }
             DecisionVariant::Offloading => {
                 // Column-wise incremental penalties + truncation-first
-                // quickselect filtering — exact full-V, single pass.
-                let token = slow_path_token(view, b, hist, params, uniforms.2);
+                // quickselect filtering — exact full-V, one fused
+                // cache-resident pass through the lane-vectorized kernel
+                // (bitwise identical to `slow_path_token` on both backends).
+                let token = self.dense.decide(view, b, hist, params, uniforms.2);
                 Decision { token, alpha: 1.0, fast_path: false, accepted: false }
             }
             DecisionVariant::Shvs => {

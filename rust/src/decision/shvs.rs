@@ -2,31 +2,41 @@
 //!
 //! Split the support into the hot set `H` and tail `V\H`. Compute stable
 //! weights `w_v = exp((z'_v − z_max)/τ)` (Eq. 6); the hot mass is
-//! `α = S_H / (S_H + S_tail)` (Eq. 7). Draw a hot candidate `ŷ ∼ q ∝ w|_H`
-//! and accept it iff `u ≤ α`; on rejection draw from the tail proposal
-//! `r ∝ w|_{V\H}` (Eq. 8). Since `p̃_v/q_v = α` on `H`, the composite is
-//! exact rejection sampling with envelope M = 1 (Eq. 9) — distributionally
-//! identical to full-vocabulary sampling, at O(H) common-case cost.
+//! `α = S_H / S_V` (Eq. 7). The unfiltered draw is a **rank-order coupled
+//! inverse-CDF**: one uniform `u_select` picks `target = u·S_V`, and the
+//! sampler walks tokens in the hot ranking's rank order, accumulating
+//! weights until the target is crossed. If the crossing happens within the
+//! first H ranks the decision is O(H) (the fast path, probability exactly
+//! α); otherwise the walk continues into the tail. Because the walk order
+//! and the total `S_V` are independent of where the H cut sits, *the drawn
+//! token is bit-identical for every H that is a prefix of the same
+//! ranking* — this is what lets the adaptive sizing controller (§5.4) move
+//! H online without perturbing token streams.
 //!
-//! **GPU precompute.** `z_max`, `S_tail`, and the tail max weight are
-//! produced where the logits are written (the L1 Pallas kernel outputs
-//! them; [`Precompute::reference`] is the CPU oracle). The CPU sampler
-//! adjusts them *incrementally* for the few penalty-touched ids, so no
-//! O(V) pass happens on the fast path.
+//! **GPU precompute.** `z_max`, `S_V` (the full-vocab weight sum), `S_tail`,
+//! and the tail max weight are produced where the logits are written (the
+//! L1 Pallas kernel outputs them; [`Precompute::reference`] is the CPU
+//! oracle, and the only path exercised in CI — the PJRT literal composes
+//! `S_V` from f32 partials, which is approximate and documented as such).
+//! The CPU sampler adjusts them *incrementally* for the few penalty-touched
+//! ids — iterated in sorted id order so every f64 adjustment is
+//! deterministic — and no O(V) pass happens on the fast path.
 //!
 //! **Filters.** When top-k/top-p/min-p are enabled, the fast path runs the
 //! truncation-first chain on the hot candidates and proves, via a
-//! *containment certificate* against the (adjusted) tail max weight, that
-//! the globally filtered set lies entirely inside `H`; if the certificate
-//! fails (rare: a tail token could enter the filtered set), it falls back
-//! to the exact full-vocabulary slow path. Either way the output
-//! distribution equals the full-vocabulary sampler's.
+//! *containment certificate* with conservative floating-point margins, that
+//! the globally filtered set equals the hot-filtered set. When the
+//! certificate holds, the hot draw (using `u_fallback`) is **bitwise
+//! identical** to [`slow_path_token`]'s output — same kept ids, same
+//! shift, same id-order weight sums — and when it fails the sampler runs
+//! that very slow path. Either way the token equals the full-vocabulary
+//! sampler's, so filtered decisions are also H-invariant.
 
-use super::categorical::{draw_index, draw_token};
+use super::categorical::draw_token;
 use super::filter::{apply_allow_list, truncate, Truncated};
 use super::hotvocab::HotVocab;
 use super::params::SamplingParams;
-use super::penalties::{penalized_logit_at, SeqHistory};
+use super::penalties::{penalized_logit_at, touched_ids_sorted, SeqHistory};
 use crate::tensor::ShardedLogits;
 use std::sync::Arc;
 
@@ -35,6 +45,9 @@ use std::sync::Arc;
 pub struct Precompute {
     /// max_v z_v over the full vocabulary (stable-softmax shift).
     pub z_max: f32,
+    /// Σ_v exp((z_v − z_max)/τ) over the *full* vocabulary, accumulated in
+    /// id order. H-invariant: the coupled draw scales its target by this.
+    pub total_sum: f64,
     /// Σ_{v∉H} exp((z_v − z_max)/τ).
     pub tail_sum: f64,
     /// max_{v∉H} exp((z_v − z_max)/τ) — the certificate bound.
@@ -48,18 +61,20 @@ impl Precompute {
         let mut z_max = f32::NEG_INFINITY;
         view.for_each_logit(b, |_, z| z_max = z_max.max(z));
         let inv = 1.0 / tau.max(1e-6) as f64;
+        let mut total_sum = 0.0f64;
         let mut tail_sum = 0.0f64;
         let mut tail_max_w = 0.0f64;
         view.for_each_logit(b, |v, z| {
+            let w = (((z - z_max) as f64) * inv).exp();
+            total_sum += w;
             if !hot.contains(v as u32) {
-                let w = (((z - z_max) as f64) * inv).exp();
                 tail_sum += w;
                 if w > tail_max_w {
                     tail_max_w = w;
                 }
             }
         });
-        Precompute { z_max, tail_sum, tail_max_w }
+        Precompute { z_max, total_sum, tail_sum, tail_max_w }
     }
 }
 
@@ -72,7 +87,7 @@ pub struct Decision {
     pub alpha: f64,
     /// True if the decision completed without an O(V) pass.
     pub fast_path: bool,
-    /// True if the rejection test accepted the hot candidate (unfiltered
+    /// True if the coupled draw landed inside the hot prefix (unfiltered
     /// path) or the containment certificate held (filtered path).
     pub accepted: bool,
 }
@@ -83,6 +98,7 @@ pub struct ShvsSampler {
     // scratch, reused across sequences to avoid hot-loop allocation
     hot_logits: Vec<f32>,
     hot_pairs: Vec<(u32, f32)>,
+    hot_w: Vec<f64>,
 }
 
 impl ShvsSampler {
@@ -92,6 +108,7 @@ impl ShvsSampler {
             hot,
             hot_logits: Vec::with_capacity(h),
             hot_pairs: Vec::with_capacity(h),
+            hot_w: Vec::with_capacity(h),
         }
     }
 
@@ -99,10 +116,22 @@ impl ShvsSampler {
         &self.hot
     }
 
+    /// Swap the hot set (online adaptive resizing). Decisions made after
+    /// the swap need `Precompute`s for the *new* H — the reference path
+    /// recomputes per call, so pipeline users passing `pre: None` are safe.
+    pub fn set_hot(&mut self, hot: Arc<HotVocab>) {
+        self.hot = hot;
+        self.hot_logits.clear();
+        self.hot_pairs.clear();
+        self.hot_w.clear();
+    }
+
     /// Decide the next token for sequence `b`.
     ///
     /// `uniforms = (u_select, u_accept, u_fallback)` — pre-generated per
     /// (sequence, iteration) so the outcome is sampler-assignment-invariant.
+    /// `u_accept` is reserved (the coupled draw folds the accept test into
+    /// `u_select`); it stays in the tuple so variate streams are stable.
     pub fn decide(
         &mut self,
         view: &ShardedLogits,
@@ -112,7 +141,7 @@ impl ShvsSampler {
         pre: &Precompute,
         uniforms: (f64, f64, f64),
     ) -> Decision {
-        let (u_select, u_accept, u_fallback) = uniforms;
+        let (u_select, _u_accept, u_fallback) = uniforms;
 
         // Greedy and allow-list requests skip speculation: greedy argmax
         // needs the global max (certificate rarely provable cheaply), and
@@ -128,60 +157,40 @@ impl ShvsSampler {
         // ---- O(H) hot scan: gather raw hot logits (zero-copy view reads).
         view.gather(b, self.hot.ids(), &mut self.hot_logits);
 
-        // Penalty-adjusted tail statistics, updated incrementally: only the
-        // penalty-touched tail ids change (the column-wise trick of §5.2
-        // applied to the SHVS sums).
+        // Unified sorted patch pass (§5.2 column-wise trick applied to the
+        // SHVS sums): every penalty/bias-touched id is visited once, in
+        // ascending id order, adjusting the total, the tail statistics, and
+        // the gathered hot logits. The sorted order is load-bearing — f64
+        // accumulation must not depend on HashMap iteration order.
+        let penalties_active = params.has_penalties() || !params.logit_bias.is_empty();
+        let mut total = pre.total_sum;
         let mut tail_sum = pre.tail_sum;
         let mut tail_max_w = pre.tail_max_w;
-        let penalties_active = params.has_penalties() || !params.logit_bias.is_empty();
+        let hot_ids = self.hot.ids();
+        // tail patches retained for the (rare) tail continuation walk
+        let mut tail_patches: Vec<(u32, f32)> = Vec::new();
         if penalties_active {
-            for (id, _) in hist.penalized_ids() {
-                if (id as usize) < view.vocab() && !self.hot.contains(id) {
-                    let raw = view.get(id as usize, b);
-                    let w_old = (((raw - pre.z_max) as f64) * inv_tau).exp();
-                    let adj = penalized_logit_at(raw, id, hist, params);
-                    let w_new = (((adj - pre.z_max) as f64) * inv_tau).exp();
+            for id in touched_ids_sorted(hist, params) {
+                if (id as usize) >= view.vocab() {
+                    continue;
+                }
+                let raw = view.get(id as usize, b);
+                let adj = penalized_logit_at(raw, id, hist, params);
+                let w_old = (((raw - pre.z_max) as f64) * inv_tau).exp();
+                let w_new = (((adj - pre.z_max) as f64) * inv_tau).exp();
+                total += w_new - w_old;
+                if let Ok(i) = hot_ids.binary_search(&id) {
+                    self.hot_logits[i] = adj;
+                } else {
                     tail_sum += w_new - w_old;
                     if w_new > tail_max_w {
                         tail_max_w = w_new; // may only grow stale-conservative
                     }
+                    tail_patches.push((id, adj));
                 }
             }
-            // logit-bias-only ids (not in history) also shift tail weights
-            for (&id, _) in &params.logit_bias {
-                if !hist.seen(id) && (id as usize) < view.vocab() && !self.hot.contains(id) {
-                    let raw = view.get(id as usize, b);
-                    let w_old = (((raw - pre.z_max) as f64) * inv_tau).exp();
-                    let adj = penalized_logit_at(raw, id, hist, params);
-                    let w_new = (((adj - pre.z_max) as f64) * inv_tau).exp();
-                    tail_sum += w_new - w_old;
-                    if w_new > tail_max_w {
-                        tail_max_w = w_new;
-                    }
-                }
-            }
+            total = total.max(0.0);
             tail_sum = tail_sum.max(0.0);
-        }
-
-        // Penalize hot candidates in place: patch only the touched ids by
-        // binary search into the sorted hot id list — O(H + P·log H)
-        // instead of O(H) hash probes. `hot_logits` is the working copy.
-        let hot_ids = self.hot.ids();
-        if penalties_active {
-            for (id, _) in hist.penalized_ids() {
-                if let Ok(i) = hot_ids.binary_search(&id) {
-                    let raw = self.hot_logits[i];
-                    self.hot_logits[i] = penalized_logit_at(raw, id, hist, params);
-                }
-            }
-            for (&id, _) in &params.logit_bias {
-                if !hist.seen(id) {
-                    if let Ok(i) = hot_ids.binary_search(&id) {
-                        let raw = self.hot_logits[i];
-                        self.hot_logits[i] = penalized_logit_at(raw, id, hist, params);
-                    }
-                }
-            }
         }
 
         if params.has_filter() {
@@ -190,45 +199,67 @@ impl ShvsSampler {
             for (&id, &z) in hot_ids.iter().zip(self.hot_logits.iter()) {
                 self.hot_pairs.push((id, z));
             }
+            let hot_len = self.hot_pairs.len();
             // ---- Filtered fast path with containment certificate.
             //
-            // Case 1 — top-k enabled: if the k-th largest *hot* logit
-            // outranks every tail token (bounded by tail_max_w), the global
-            // top-k is exactly the hot top-k; the rest of the chain (top-p,
-            // min-p) then operates on identical survivor sets globally and
-            // hot-locally, so the hot-filtered draw is exact.
-            if params.top_k > 0 && params.top_k < self.hot_pairs.len() {
+            // Case 1 — top-k selects within H: if the k-th largest *hot*
+            // weight strictly exceeds every tail weight, the global top-k
+            // set is exactly the hot top-k set (both use the total order
+            // logit desc / id asc, and no tail token can reach or tie the
+            // boundary). Both weights come from the identical monotone
+            // formula at the pre.z_max shift, so the strict f64 comparison
+            // implies strict logit domination — no margin needed.
+            if params.top_k > 0 && params.top_k < hot_len {
                 super::filter::select_top_k(&mut self.hot_pairs, params.top_k);
                 let kth_logit = self.hot_pairs[..params.top_k]
                     .iter()
                     .map(|&(_, z)| z)
                     .fold(f32::INFINITY, f32::min);
                 let kth_w = (((kth_logit - pre.z_max) as f64) * inv_tau).exp();
-                if kth_w >= tail_max_w {
-                    // select_top_k already partitioned the global top-k into
-                    // the prefix; truncate just that (top-k disabled) instead
-                    // of re-selecting over the whole hot set.
-                    let survivors = self.hot_pairs[..params.top_k].to_vec();
+                if kth_w > tail_max_w {
+                    // The survivors are the global top-k; restore canonical
+                    // id order and run the shared stage-2 continuation —
+                    // bitwise identical to the slow path's truncate.
+                    let mut survivors = self.hot_pairs[..params.top_k].to_vec();
+                    survivors.sort_unstable_by_key(|&(id, _)| id);
                     let rest = SamplingParams { top_k: 0, ..params.clone() };
                     let truncated = truncate(survivors, &rest);
-                    let token = draw_token(&truncated, u_select);
+                    let token = draw_token(&truncated, u_fallback);
                     self.hot_pairs.clear();
                     return Decision { token, alpha: 1.0, fast_path: true, accepted: true };
                 }
-            } else {
-                // Case 2 — no top-k: prove the nucleus/min-p set lies in H
-                // against the global masses.
+            } else if params.top_k == 0 || params.top_k >= view.vocab() {
+                // Case 2 — top-k is globally inert: prove the nucleus /
+                // min-p set lies in H against the global masses. (When
+                // hot_len ≤ top_k < V the global top-k would admit tail
+                // tokens that the hot-side chain never sees — no certificate
+                // is possible there, so that shape always falls back.)
+                let z_max_h = self
+                    .hot_pairs
+                    .iter()
+                    .map(|&(_, z)| z)
+                    .fold(f32::NEG_INFINITY, f32::max);
+                // Pre-top-p hot sum exactly as truncate's stage 2 computes
+                // it (same f32 formula, same id order) — the nucleus
+                // certificate compares against the global sum bound.
+                let inv_tau_f32 = 1.0 / tau;
+                let mut hot_full_sum = 0.0f64;
+                for &(_, z) in &self.hot_pairs {
+                    hot_full_sum += (((z - z_max_h) * inv_tau_f32) as f64).exp();
+                }
                 let truncated = truncate(self.hot_pairs.clone(), params);
                 let certificate = filtered_set_certificate(
                     &truncated,
                     pre.z_max,
+                    z_max_h,
                     inv_tau,
+                    hot_full_sum,
                     tail_max_w,
                     tail_sum,
                     params,
                 );
                 if certificate {
-                    let token = draw_token(&truncated, u_select);
+                    let token = draw_token(&truncated, u_fallback);
                     self.hot_pairs.clear();
                     return Decision { token, alpha: 1.0, fast_path: true, accepted: true };
                 }
@@ -239,83 +270,116 @@ impl ShvsSampler {
             return Decision { token, alpha: 0.0, fast_path: false, accepted: false };
         }
 
-        // ---- Unfiltered path: classic SHVS rejection sampling (Eq. 8–9).
-        // Hot weights + hot sum in one fused pass straight over the gathered
-        // logits (no (id, logit) tuple materialization).
+        // ---- Unfiltered path: rank-order coupled inverse-CDF draw.
+        // target = u_select · S_V; walk ranks 0.. accumulating patched
+        // weights. Neither the walk order nor S_V depends on H, so the
+        // token is invariant under resizing H along the same ranking.
         let z_max = pre.z_max;
-        let mut hot_w: Vec<f64> = Vec::with_capacity(self.hot_logits.len());
-        let mut hot_sum = 0.0f64;
+        self.hot_w.clear();
         for &z in &self.hot_logits {
+            self.hot_w.push((((z - z_max) as f64) * inv_tau).exp());
+        }
+        let h = hot_ids.len();
+        let target = u_select * total;
+        let mut acc = 0.0f64;
+        let mut token: Option<u32> = None;
+        for r in 0..h {
+            let i = self.hot.rank_index(r);
+            acc += self.hot_w[i];
+            if token.is_none() && target < acc {
+                token = Some(hot_ids[i]);
+            }
+        }
+        // The full O(H) prefix always accumulates, so α is observable on
+        // every decision (the sizing controller feeds on it) and
+        // P(fast path) = α exactly.
+        let s_hot = acc;
+        let alpha = if total > 0.0 { (s_hot / total).min(1.0) } else { 0.0 };
+        if let Some(tok) = token {
+            return Decision { token: tok, alpha, fast_path: true, accepted: true };
+        }
+
+        // Tail continuation: walk ranks h..V. Rank order is not id order,
+        // so penalty patches are looked up by binary search (the patch
+        // list is tiny and this path is the 1−α rare case).
+        let ranking = self.hot.ranking();
+        let vocab = view.vocab();
+        for &id in &ranking[h..] {
+            let mut z = view.get(id as usize, b);
+            if !tail_patches.is_empty() {
+                if let Ok(pi) = tail_patches.binary_search_by_key(&id, |p| p.0) {
+                    z = tail_patches[pi].1;
+                }
+            }
             let w = (((z - z_max) as f64) * inv_tau).exp();
-            hot_w.push(w);
-            hot_sum += w;
+            acc += w;
+            if target < acc {
+                token = Some(id);
+                break;
+            }
         }
-        let total = hot_sum + tail_sum;
-        let alpha = if total > 0.0 { hot_sum / total } else { 0.0 };
-
-        if u_accept <= alpha {
-            // Accept: draw ŷ ∼ q over the hot set.
-            let i = draw_index(&hot_w, hot_sum, u_select);
-            let token = hot_ids[i];
-            return Decision { token, alpha, fast_path: true, accepted: true };
-        }
-
-        // Reject: draw y′ ∼ r over the tail — one O(V−H) streaming pass.
-        let token = tail_draw(
-            view,
-            b,
-            &self.hot,
-            hist,
-            params,
-            pre.z_max,
-            inv_tau,
-            tail_sum,
-            u_fallback,
-            penalties_active,
-        );
-        Decision { token, alpha, fast_path: false, accepted: false }
+        // fp-rounding guard: if target ≥ the freshly accumulated total,
+        // land on the last rank.
+        let tok = token.unwrap_or(ranking[vocab - 1]);
+        Decision { token: tok, alpha, fast_path: false, accepted: false }
     }
 }
 
-/// Certificate that the filtered-on-hot set equals the filtered-on-V set.
+/// Certificate that the filtered-on-hot set equals the filtered-on-V set,
+/// *as computed* — when it returns true, the hot-side `truncate` output is
+/// bitwise identical to the slow path's, so drawing with the same uniform
+/// yields the same token.
 ///
-/// Every member of the truncated hot set has weight ≥ the max tail weight
-/// ⇒ in the global weight order, all members precede every tail token.
-/// - top-k: the global top-k is then exactly these k members.
-/// - top-p: the nucleus threshold must additionally be met against the
-///   *global* sum (hot members' mass ≥ p·(S_kept + S_tail)); since all kept
-///   members outrank all tail tokens, the global nucleus is the same prefix.
-/// - min-p: no tail token may pass the min-p cut: tail_max_w < min_p·w_max.
+/// All cross-shift comparisons convert hot-shift weights into the
+/// pre.z_max shift and apply a conservative relative `MARGIN` that absorbs
+/// the f32-formula rounding (≈2⁻²⁴ relative) plus f64 summation noise:
+/// - domination: every kept hot weight must *strictly* exceed the max tail
+///   weight (so no tail token enters or ties the global filtered set, and
+///   the global argmax — hence the stage-2 shift — lives in H);
+/// - top-p: the kept mass must reach p of the *global* pre-top-p sum
+///   (hot_full_sum + converted tail_sum), so the global nucleus walk stops
+///   at exactly the hot prefix (the minimality half is automatic because
+///   interleaving non-negative tail terms never decreases a rounded
+///   left-to-right sum);
+/// - min-p: no tail token may pass the cut: tail_max_w < min_p·w_max.
+#[allow(clippy::too_many_arguments)]
 fn filtered_set_certificate(
     truncated: &Truncated,
-    _z_max: f32,
-    _inv_tau: f64,
+    z_max_pre: f32,
+    z_max_hot: f32,
+    inv_tau: f64,
+    hot_full_sum: f64,
     tail_max_w: f64,
     tail_sum: f64,
     params: &SamplingParams,
 ) -> bool {
+    const MARGIN: f64 = 1e-6;
     if truncated.is_empty() {
         return false;
     }
+    // hot-shift → pre-shift weight conversion factor
+    let shift = ((z_max_hot as f64 - z_max_pre as f64) * inv_tau).exp();
+    if !shift.is_finite() || shift <= 0.0 {
+        return false;
+    }
     let min_kept_w = truncated.weights.iter().cloned().fold(f64::INFINITY, f64::min);
-    // All kept hot tokens must dominate every tail token.
-    if min_kept_w < tail_max_w {
+    // All kept hot tokens must strictly dominate every tail token.
+    if min_kept_w * shift <= tail_max_w * (1.0 + MARGIN) {
         return false;
     }
     // top-p: the kept mass must satisfy the nucleus condition globally.
     if params.top_p < 1.0 {
-        // Global candidate mass (pre-top-p, post-top-k) ≥ kept + tail; the
-        // kept prefix must reach p of the *global* total to be the true
-        // nucleus. (Conservative: uses kept+tail as the global total.)
-        let global_total = truncated.sum + tail_sum;
-        if truncated.sum < params.top_p as f64 * global_total {
+        let tail_sum_hot_shift = tail_sum / shift;
+        let global_total = (hot_full_sum + tail_sum_hot_shift) * (1.0 + MARGIN);
+        if truncated.sum * (1.0 - MARGIN) < params.top_p as f64 * global_total {
             return false;
         }
     }
     // min-p: no tail token may survive the cut.
     if params.min_p > 0.0 {
         let w_max = truncated.weights.iter().cloned().fold(0.0f64, f64::max);
-        if tail_max_w >= params.min_p as f64 * w_max {
+        let cut = params.min_p as f64 * w_max * shift * (1.0 - MARGIN);
+        if tail_max_w * (1.0 + MARGIN) >= cut {
             return false;
         }
     }
@@ -354,73 +418,6 @@ pub fn slow_path_token(
     }
     let truncated = truncate(pairs, params);
     draw_token(&truncated, u)
-}
-
-/// One streaming pass over the tail: inverse-CDF draw from r ∝ w|_{V\H}.
-/// Penalty-touched ids are merged in via a small sorted patch list, keeping
-/// the scan a pure stream (no per-element hash probes).
-#[allow(clippy::too_many_arguments)]
-fn tail_draw(
-    view: &ShardedLogits,
-    b: usize,
-    hot: &HotVocab,
-    hist: &SeqHistory,
-    params: &SamplingParams,
-    z_max: f32,
-    inv_tau: f64,
-    tail_sum: f64,
-    u: f64,
-    penalties_active: bool,
-) -> u32 {
-    // Small sorted (id, adjusted logit) patch list.
-    let mut patches: Vec<(u32, f32)> = Vec::new();
-    if penalties_active {
-        for (id, _) in hist.penalized_ids() {
-            if (id as usize) < view.vocab() && !hot.contains(id) {
-                let raw = view.get(id as usize, b);
-                patches.push((id, penalized_logit_at(raw, id, hist, params)));
-            }
-        }
-        for (&id, _) in &params.logit_bias {
-            if !hist.seen(id) && (id as usize) < view.vocab() && !hot.contains(id) {
-                let raw = view.get(id as usize, b);
-                patches.push((id, penalized_logit_at(raw, id, hist, params)));
-            }
-        }
-        patches.sort_unstable_by_key(|p| p.0);
-        patches.dedup_by_key(|p| p.0);
-    }
-    let target = u * tail_sum;
-    let mut acc = 0.0f64;
-    let mut chosen: Option<u32> = None;
-    let mut last_tail: u32 = 0;
-    let mut patch_i = 0usize;
-    view.for_each_logit(b, |v, z| {
-        if chosen.is_some() {
-            return;
-        }
-        let id = v as u32;
-        if hot.contains(id) {
-            return;
-        }
-        last_tail = id;
-        // merge-join against the ascending patch list
-        let mut z = z;
-        while patch_i < patches.len() && patches[patch_i].0 < id {
-            patch_i += 1;
-        }
-        if patch_i < patches.len() && patches[patch_i].0 == id {
-            z = patches[patch_i].1;
-        }
-        let w = (((z - z_max) as f64) * inv_tau).exp();
-        acc += w;
-        if target < acc {
-            chosen = Some(id);
-        }
-    });
-    // fp-rounding guard: if the adjusted tail_sum slightly exceeds the
-    // freshly accumulated sum, land on the last tail token.
-    chosen.unwrap_or(last_tail)
 }
 
 #[cfg(test)]
@@ -494,6 +491,12 @@ mod tests {
         assert!((pre.tail_sum - expect).abs() < 1e-9, "tail_sum {} expect {expect}", pre.tail_sum);
         let expect_max = ((logits[13] - z_max) as f64).exp();
         assert!((pre.tail_max_w - expect_max).abs() < 1e-9);
+        let expect_total: f64 = (0..v).map(|i| ((logits[i] - z_max) as f64).exp()).sum();
+        assert!(
+            (pre.total_sum - expect_total).abs() < 1e-9,
+            "total_sum {} expect {expect_total}",
+            pre.total_sum
+        );
     }
 
     #[test]
@@ -593,6 +596,93 @@ mod tests {
         assert!(tvd < 0.01, "TVD {tvd}");
         // the tail spike must dominate empirically
         assert!(counts[30] > counts[1]);
+    }
+
+    #[test]
+    fn filtered_fast_path_token_equals_slow_path() {
+        // When the certificate holds, the fast-path token must be BITWISE
+        // the slow path's token for the same u_fallback — the property that
+        // makes filtered decisions H-invariant.
+        let v = 40;
+        let mut logits: Vec<f32> = vec![0.0; v];
+        for (i, l) in logits.iter_mut().enumerate().take(8) {
+            *l = 10.0 - i as f32;
+        }
+        let view = make_view(logits, 1, v, 2);
+        let hot = HotVocab::new((0..10).collect(), v).into_arc();
+        let hist = SeqHistory::new(&[]);
+        for params in [
+            SamplingParams { top_k: 5, temperature: 0.8, ..Default::default() },
+            SamplingParams { top_p: 0.9, temperature: 0.8, ..Default::default() },
+            SamplingParams { min_p: 0.05, temperature: 0.8, ..Default::default() },
+            SamplingParams {
+                top_k: 5,
+                top_p: 0.95,
+                min_p: 0.02,
+                temperature: 0.8,
+                ..Default::default()
+            },
+        ] {
+            let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+            let mut sampler = ShvsSampler::new(hot.clone());
+            let mut rng = Philox::new(99);
+            for _ in 0..200 {
+                let u = (rng.next_f64(), rng.next_f64(), rng.next_f64());
+                let d = sampler.decide(&view, 0, &hist, &params, &pre, u);
+                assert!(d.fast_path, "certificate should hold ({params:?})");
+                let slow = slow_path_token(&view, 0, &hist, &params, u.2);
+                assert_eq!(d.token, slow, "fast/slow divergence ({params:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_between_hot_and_vocab_always_falls_back() {
+        // hot_len ≤ top_k < V: the global top-k admits tail tokens the hot
+        // chain never sees — no certificate may claim the fast path.
+        let v = 32;
+        let logits: Vec<f32> = (0..v).map(|i| 5.0 - i as f32 * 0.1).collect();
+        let view = make_view(logits, 1, v, 2);
+        let hot = HotVocab::new((0..8).collect(), v).into_arc();
+        let params = SamplingParams { top_k: 12, ..Default::default() };
+        let hist = SeqHistory::new(&[]);
+        let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+        let mut sampler = ShvsSampler::new(hot);
+        let d = sampler.decide(&view, 0, &hist, &params, &pre, (0.3, 0.5, 0.7));
+        assert!(!d.fast_path);
+        assert_eq!(d.token, slow_path_token(&view, 0, &hist, &params, 0.7));
+    }
+
+    #[test]
+    fn unfiltered_tokens_invariant_under_hot_resize() {
+        // The rank-order coupled draw: every H along the same ranking must
+        // produce the same token for the same uniforms.
+        let v = 64;
+        let counts: Vec<u64> = (0..v as u64).map(|i| (i * 31 + 7) % 101).collect();
+        let base = HotVocab::from_counts(&counts, 16);
+        let logits: Vec<f32> = (0..v).map(|i| ((i * 29 % 64) as f32) * 0.2 - 3.0).collect();
+        let view = make_view(logits, 1, v, 2);
+        let params = SamplingParams { temperature: 0.9, ..Default::default() };
+        let mut hist = SeqHistory::new(&[3, 40]);
+        hist.append(9);
+        let mut rng = Philox::new(1234);
+        let us: Vec<(f64, f64, f64)> = (0..300)
+            .map(|_| (rng.next_f64(), rng.next_f64(), rng.next_f64()))
+            .collect();
+        let mut streams: Vec<Vec<u32>> = Vec::new();
+        for h in [2usize, 8, 16, 40] {
+            let hot = base.resize(h).into_arc();
+            let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+            let mut sampler = ShvsSampler::new(hot);
+            streams.push(
+                us.iter()
+                    .map(|&u| sampler.decide(&view, 0, &hist, &params, &pre, u).token)
+                    .collect(),
+            );
+        }
+        for s in &streams[1..] {
+            assert_eq!(s, &streams[0], "token stream must be H-invariant");
+        }
     }
 
     #[test]

@@ -140,6 +140,81 @@ impl SizingModel {
     }
 }
 
+/// Online ᾱ(H) re-estimator: a multiplicative correction *curve* over the
+/// offline prior, learned from runtime acceptance counters (§5.4 made
+/// adaptive, §9 future-work item i).
+///
+/// The offline `SizingModel` fixes ᾱ(H) from a trace; live traffic drifts.
+/// Rather than one global scale factor — which wrongly extrapolates a
+/// shift observed at the current H to every other H — this keeps an EWMA
+/// of the observed/predicted ratio at geometric H knots and interpolates
+/// (piecewise-linear in log H) between them. Regions the controller has
+/// never visited retain the offline prior (correction 1.0), so re-solving
+/// `argmin F` trusts the trace exactly where no evidence contradicts it.
+#[derive(Debug, Clone)]
+pub struct OnlineAlphaEstimator {
+    /// Geometric knot positions in H (ascending).
+    knots: Vec<f64>,
+    /// EWMA of observed/predicted ᾱ ratio at each knot (1.0 = prior).
+    corr: Vec<f64>,
+    /// EWMA weight for one observation window.
+    gain: f64,
+}
+
+impl OnlineAlphaEstimator {
+    pub fn new(h_min: f64, h_max: f64, num_knots: usize, gain: f64) -> Self {
+        let num_knots = num_knots.max(2);
+        let lo = h_min.max(1.0);
+        let hi = h_max.max(lo * 1.0001);
+        let knots: Vec<f64> = (0..num_knots)
+            .map(|i| {
+                let t = i as f64 / (num_knots - 1) as f64;
+                (lo.ln() + (hi.ln() - lo.ln()) * t).exp()
+            })
+            .collect();
+        let corr = vec![1.0; knots.len()];
+        OnlineAlphaEstimator { knots, corr, gain: gain.clamp(0.0, 1.0) }
+    }
+
+    /// Fold one control-window observation at hot size `h` into the curve:
+    /// `ratio` = observed ᾱ / prior ᾱ(h). The update is split between the
+    /// two bracketing knots by their interpolation weights, so repeated
+    /// windows at a fixed H converge that neighborhood without touching
+    /// the rest of the curve.
+    pub fn observe(&mut self, h: f64, ratio: f64) {
+        let ratio = ratio.clamp(0.25, 2.0);
+        let (i, j, w) = self.bracket(h);
+        self.corr[i] += (1.0 - w) * self.gain * (ratio - self.corr[i]);
+        self.corr[j] += w * self.gain * (ratio - self.corr[j]);
+    }
+
+    /// Multiplicative correction to apply to the prior ᾱ at `h`.
+    pub fn correction(&self, h: f64) -> f64 {
+        let (i, j, w) = self.bracket(h);
+        (self.corr[i] * (1.0 - w) + self.corr[j] * w).clamp(0.25, 2.0)
+    }
+
+    /// Bracketing knots and the log-space interpolation weight of the
+    /// upper one. Clamps outside the knot domain.
+    fn bracket(&self, h: f64) -> (usize, usize, f64) {
+        let h = h.max(1.0);
+        if h <= self.knots[0] {
+            return (0, 0, 0.0);
+        }
+        let last = self.knots.len() - 1;
+        if h >= self.knots[last] {
+            return (last, last, 0.0);
+        }
+        let mut j = 1;
+        while self.knots[j] < h {
+            j += 1;
+        }
+        let i = j - 1;
+        let w = (h.ln() - self.knots[i].ln()) / (self.knots[j].ln() - self.knots[i].ln());
+        (i, j, w.clamp(0.0, 1.0))
+    }
+}
+
 /// Build the ᾱ(H) knots analytically from a Zipf-shaped token distribution
 /// (the offline-trace profiling substrate; model/policy-driven per §5.4).
 pub fn zipf_alpha_knots(vocab: usize, zipf_s: f64, num_knots: usize) -> Vec<(f64, f64)> {
@@ -235,6 +310,37 @@ mod tests {
         let m = model(50_000, 1.1);
         let h = 1000.0;
         assert!((m.predicted_throughput(h) * m.f(h) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_estimator_learns_locally() {
+        let mut est = OnlineAlphaEstimator::new(64.0, 32_768.0, 12, 0.5);
+        // no observations: prior everywhere
+        assert_eq!(est.correction(1000.0), 1.0);
+        // repeated shift observations at H=1000 converge that neighborhood
+        for _ in 0..32 {
+            est.observe(1000.0, 0.6);
+        }
+        assert!(
+            (est.correction(1000.0) - 0.6).abs() < 0.05,
+            "corr {}",
+            est.correction(1000.0)
+        );
+        // ...while far-away regions keep trusting the offline prior
+        assert!((est.correction(30_000.0) - 1.0).abs() < 1e-9);
+        assert!((est.correction(64.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_estimator_clamps_and_brackets_edges() {
+        let mut est = OnlineAlphaEstimator::new(64.0, 4096.0, 6, 1.0);
+        est.observe(1.0, 100.0); // below domain, absurd ratio
+        assert!(est.correction(1.0) <= 2.0);
+        est.observe(1e9, 0.0); // above domain, ratio floor
+        assert!(est.correction(1e9) >= 0.25);
+        // interior query between knots interpolates smoothly
+        let c = est.correction(500.0);
+        assert!((0.25..=2.0).contains(&c));
     }
 
     #[test]

@@ -45,7 +45,11 @@ pub fn stable_weights(logits: &[f32], tau: f32, out: &mut Vec<f64>) -> (f32, f64
     (z_max, sum)
 }
 
-/// Argmax with lowest-id tie-break (greedy decoding).
+/// Argmax for greedy decoding. Tie rule: **lowest index wins** — the strict
+/// `>` comparison never replaces an earlier equal maximum. This is a
+/// contract, not an accident: [`super::kernels`]' SIMD max-reduction and the
+/// greedy singleton in [`super::filter::truncate`] implement the same rule,
+/// and `rust/tests/simd_kernels.rs` pins all three against each other.
 pub fn argmax(logits: &[f32]) -> usize {
     let mut best = 0usize;
     let mut best_z = f32::NEG_INFINITY;
@@ -135,6 +139,17 @@ mod tests {
     fn argmax_ties_break_low() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 0.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[2.0; 17]), 0);
+    }
+
+    #[test]
+    fn argmax_tie_rule_matches_greedy_truncate() {
+        use crate::decision::{filter, params::SamplingParams};
+        let logits = [3.0f32, 7.0, 7.0, 1.0];
+        let c: Vec<(u32, f32)> =
+            logits.iter().enumerate().map(|(i, &z)| (i as u32, z)).collect();
+        let t = filter::truncate(c, &SamplingParams::greedy());
+        assert_eq!(t.ids, vec![argmax(&logits) as u32]);
     }
 
     #[test]

@@ -545,6 +545,9 @@ impl<D: DataPlane> Engine<D> {
                     .iter()
                     .map(|s| Precompute {
                         z_max: s[0],
+                        // composed from f32 partials (s_hot + s_tail) — an
+                        // approximate S_V; the CPU reference path is exact.
+                        total_sum: (s[1] + s[2]) as f64,
                         tail_sum: s[2] as f64,
                         tail_max_w: s[3] as f64,
                     })

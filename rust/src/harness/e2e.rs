@@ -8,7 +8,8 @@
 //!   fixed sampling overhead).
 //! - **SIMPLE** — sequence-parallel CPU decision plane, overlapped; its
 //!   per-sequence cost is *measured on this host* at the model's vocabulary
-//!   with the hot size chosen by the fitted §5.4 sizing model.
+//!   with the hot size chosen by the §5.4 sizing model and then refined
+//!   online by the runtime acceptance controller (§9 future-work i).
 
 use super::measure;
 use super::{Effort, Report};
@@ -57,10 +58,14 @@ pub fn measured_shvs_per_seq(vocab: usize, effort: Effort) -> f64 {
         }
     }
     let gen = measure::LogitsGen::new(vocab, 1.08, 42);
-    // Deploy at the sizing model's H* (§5.4), as the paper does.
-    let sizing = measure::fit_sizing_model(vocab, 1.08, iters.min(20));
-    let h = sizing.h_star().clamp(64, 32_768);
-    let hot = gen.hot_vocab(h).into_arc();
+    // Deploy at the ONLINE-adapted H*: fit the offline §5.4 model, then let
+    // the runtime controller refine H against the real decision plane (its
+    // acceptance counters re-estimate ᾱ(H) and re-pick H* live) before
+    // measuring at the converged size. The ranked hot vocab shares one
+    // ranking across sizes, so the adaptive resizes never perturb streams.
+    let adaptive = measure::adaptive_h_star(&gen, iters.min(20), 8);
+    let h = adaptive.h.clamp(64, 32_768);
+    let hot = gen.ranked_hot_vocab(h).into_arc();
     let params = crate::decision::SamplingParams::production_default();
     let (per_seq, _alpha) = measure::measure_variant(
         &gen,

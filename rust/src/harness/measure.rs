@@ -8,7 +8,10 @@
 use crate::config::DecisionVariant;
 use crate::decision::penalties::BatchHistory;
 use crate::decision::sizing::SizingModel;
-use crate::decision::{DecisionPipeline, HotVocab, Precompute, SamplingParams};
+use crate::decision::{
+    ControllerConfig, DecisionPipeline, HotVocab, HotVocabController, Precompute,
+    SamplingParams,
+};
 use crate::rng::Philox;
 use crate::tensor::{shard_row_major, ShardedLogits, Tensor2};
 use std::sync::Arc;
@@ -41,6 +44,20 @@ impl LogitsGen {
             .filter(|&id| (self.rank_of_id[id as usize] as usize) < h)
             .collect();
         HotVocab::new(ids, self.vocab)
+    }
+
+    /// The top-`h` hot vocabulary built over the generator's FULL rank
+    /// permutation ([`HotVocab::from_ranking`]), so every size derived from
+    /// one generator shares a single ranking and the hot sets nest under
+    /// [`HotVocab::resize`] — the property the adaptive-sizing
+    /// bit-identical-streams contract relies on. The hot *set* equals
+    /// [`Self::hot_vocab`]'s for the same `h`.
+    pub fn ranked_hot_vocab(&self, h: usize) -> HotVocab {
+        let mut ranking = vec![0u32; self.vocab];
+        for (id, &rank) in self.rank_of_id.iter().enumerate() {
+            ranking[rank as usize] = id as u32;
+        }
+        HotVocab::from_ranking(Arc::new(ranking), h, self.vocab)
     }
 
     /// Row-major [batch, V] logits for one iteration.
@@ -357,6 +374,70 @@ pub fn fit_sizing_model(vocab: usize, zipf_s: f64, iters: u64) -> SizingModel {
     let costs = measure_hot_path_costs(&gen, &h_points, iters);
     let alphas = measure_alpha_curve(&gen, &h_points, iters.min(16));
     SizingModel::fit(&costs, &alphas, vocab)
+}
+
+/// Result of the online-adaptive §5.4 sizing run ([`adaptive_h_star`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveSizing {
+    /// H the controller converged to.
+    pub h: usize,
+    /// The offline-fitted H* the controller started from.
+    pub offline_h_star: usize,
+    /// Multiplicative width of one sizing-grid bucket — adjacent H grid
+    /// points differ by at most this factor; the natural convergence
+    /// tolerance unit ("within one bucket of H*").
+    pub bucket: f64,
+}
+
+/// Online-adaptive H* (§9 future-work item i, replacing the static §5.4
+/// deployment rule): fit the offline sizing model from measurements on
+/// `gen`, then run the [`HotVocabController`] against the REAL decision
+/// plane — every decision's realized α feeds the acceptance counters, the
+/// controller re-estimates ᾱ(H) from them, re-picks H* online, and the hot
+/// vocabulary is resized live through the shared ranking
+/// ([`LogitsGen::ranked_hot_vocab`] + [`HotVocab::resize`], so hot sets
+/// nest and token streams stay bit-identical across sizes).
+pub fn adaptive_h_star(gen: &LogitsGen, iters: u64, periods: u64) -> AdaptiveSizing {
+    let h_points = geometric_points(gen.vocab, 10);
+    let costs = measure_hot_path_costs(gen, &h_points, iters);
+    let alphas = measure_alpha_curve(gen, &h_points, iters.min(16));
+    let sizing = SizingModel::fit(&costs, &alphas, gen.vocab);
+    let offline_h_star = sizing.h_star();
+    let bucket = h_points
+        .windows(2)
+        .map(|w| w[1] as f64 / w[0] as f64)
+        .fold(1.0f64, f64::max);
+
+    let window = 256u64;
+    let cfg = ControllerConfig { window, ..Default::default() };
+    let mut ctl = HotVocabController::new(cfg, sizing, offline_h_star);
+    // Unfiltered at τ = 1.0 so realized α matches the ᾱ(H) curve's unit.
+    let params = SamplingParams { temperature: 1.0, ..Default::default() };
+    let n_views = 8usize;
+    let views: Vec<_> = (0..n_views).map(|i| gen.view(1, i as u64, 1)).collect();
+    let mut hot = gen.ranked_hot_vocab(ctl.h()).into_arc();
+    let mut pres: Vec<_> = views
+        .iter()
+        .map(|v| Precompute::reference(v, 0, &hot, params.temperature))
+        .collect();
+    let mut pipe = DecisionPipeline::new(DecisionVariant::Shvs, Some(hot.clone()), 0xADA7);
+    let hist = BatchHistory::new(&[vec![]], 4);
+    let mut it = 0u64;
+    for _ in 0..periods {
+        for _ in 0..window {
+            let i = it as usize % n_views;
+            let d = pipe.decide(&views[i], 0, &hist, 0, &params, Some(&pres[i]), 0, it);
+            it += 1;
+            if let Some(new_h) = ctl.observe(d.alpha, d.accepted) {
+                hot = hot.resize(new_h).into_arc();
+                pipe.set_hot_vocab(hot.clone());
+                for (p, v) in pres.iter_mut().zip(&views) {
+                    *p = Precompute::reference(v, 0, &hot, params.temperature);
+                }
+            }
+        }
+    }
+    AdaptiveSizing { h: ctl.h(), offline_h_star, bucket }
 }
 
 /// Geometric grid of H values up to ~V/2.

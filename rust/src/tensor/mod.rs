@@ -230,6 +230,15 @@ impl ShardedLogits {
         self.for_each_logit(b, |_, z| out.push(z));
         out
     }
+
+    /// [`Self::materialize_row`] into a caller-owned scratch buffer — the
+    /// vectorized dense kernels re-decide many columns per sampler thread
+    /// and must not allocate per column.
+    pub fn materialize_row_into(&self, b: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.vocab);
+        self.for_each_logit(b, |_, z| out.push(z));
+    }
 }
 
 /// Split a row-major `[B × V]` logits tensor into `t` vocabulary-major rank

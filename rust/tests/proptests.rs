@@ -16,7 +16,9 @@ use simple_serve::decision::penalties::{apply_penalties_dense, BatchHistory, Seq
 use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
 use simple_serve::decision::shvs::{Precompute, ShvsSampler};
 use simple_serve::decision::verify::{verify_window, GrammarSlot};
-use simple_serve::decision::{DecisionPipeline, HotVocab, SamplingParams, SeqHandle};
+use simple_serve::decision::{
+    DecisionPipeline, DenseKernel, HotVocab, KernelBackend, SamplingParams, SeqHandle,
+};
 use simple_serve::engine::{Engine, KvAllocator, Request, SyntheticRuntime};
 use simple_serve::fault::{FaultKind, FaultPlan};
 use simple_serve::harness::measure::{chain_views, LogitsGen};
@@ -181,6 +183,42 @@ fn prop_penalties_only_lower_seen_token_probability() {
                 assert_eq!(a, b);
             }
         }
+    });
+}
+
+#[test]
+fn prop_simd_truncation_bitwise_equals_scalar() {
+    // The kernel differential property: for random logits × random filter
+    // combinations × a lived-in history, the SIMD path's truncation keeps
+    // IDENTICAL ids, bit-equal stable weights and weight sums, and samples
+    // the identical token for the same Philox draw.
+    props("simd truncate == scalar", 120, |rng| {
+        let vocab = 16 + rng.next_below(400) as usize;
+        let logits = random_logits(rng, vocab);
+        let view = shard_row_major(
+            &Tensor2::from_vec(1, vocab, logits),
+            1 + rng.next_below(3) as usize,
+        );
+        let params = random_params(rng, vocab);
+        let mut hist = SeqHistory::new(&[3]);
+        for _ in 0..rng.next_below(6) {
+            hist.append(rng.next_below(vocab as u64) as u32);
+        }
+        let mut scalar = DenseKernel::new(KernelBackend::Scalar);
+        let mut simd = DenseKernel::new(KernelBackend::Simd);
+        let a = scalar.truncated_column(&view, 0, &hist, &params);
+        let b = simd.truncated_column(&view, 0, &hist, &params);
+        assert_eq!(a.ids, b.ids, "kept ids (params {params:?})");
+        for (i, (x, y)) in a.weights.iter().zip(&b.weights).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "weight[{i}] (params {params:?})");
+        }
+        assert_eq!(a.sum.to_bits(), b.sum.to_bits(), "sum (params {params:?})");
+        let u = rng.next_f64();
+        assert_eq!(
+            simd.decide(&view, 0, &hist, &params, u),
+            scalar.decide(&view, 0, &hist, &params, u),
+            "token at u={u} (params {params:?})"
+        );
     });
 }
 

@@ -1,0 +1,303 @@
+//! Differential exactness suite for the lane-vectorized dense kernels
+//! (decision/kernels.rs) and the adaptive-SHVS digest contract.
+//!
+//! The bit-identical-streams bar: the SIMD path must produce the same
+//! `Truncated` sets (kept ids, per-id stable weights, f64 sums — compared
+//! via `to_bits`) and the same sampled tokens as the scalar reference, for
+//! every filter combination, on adversarial inputs: vocabularies straddling
+//! the 8-wide lane boundary (8k±7, 32k±1), ±inf-adjacent magnitudes,
+//! subnormals, signed zeros, and all-equal tie plateaus. Both backends are
+//! constructed directly (`DenseKernel::new`), so the suite passes under
+//! forced-scalar AND forced-SIMD dispatch regardless of `SIMPLE_KERNELS`;
+//! one test additionally pins whatever `detect()` chose against the scalar
+//! reference. The last tests pin the adaptive-sizing contract: SHVS token
+//! digests are invariant under live hot-vocab resizes.
+
+use simple_serve::decision::kernels::{DenseKernel, KernelBackend};
+use simple_serve::decision::penalties::SeqHistory;
+use simple_serve::decision::shvs::{Precompute, ShvsSampler};
+use simple_serve::decision::SamplingParams;
+use simple_serve::harness::measure::LogitsGen;
+use simple_serve::rng::Philox;
+use simple_serve::tensor::{shard_row_major, ShardedLogits, Tensor2};
+
+fn view_of(logits: Vec<f32>, shards: usize) -> ShardedLogits {
+    let v = logits.len();
+    shard_row_major(&Tensor2::from_vec(1, v, logits), shards)
+}
+
+/// Logit generators, from smooth to adversarial.
+fn flavored_logits(rng: &mut Philox, v: usize, flavor: usize) -> Vec<f32> {
+    match flavor {
+        // smooth Gaussian
+        0 => (0..v).map(|_| rng.next_normal() as f32 * 2.0).collect(),
+        // coarse quantization: dense ties at every level
+        1 => (0..v).map(|_| (rng.next_f32() * 6.0).floor() * 0.5 - 1.5).collect(),
+        // adversarial: ±inf-adjacent magnitudes, subnormals, signed zeros,
+        // and a tie plateau
+        2 => (0..v)
+            .map(|i| match rng.next_below(8) {
+                0 => f32::MAX,
+                1 => -f32::MAX,
+                2 => 1e-40,  // subnormal
+                3 => -1e-40, // negative subnormal
+                4 => 0.0,
+                5 => -0.0,
+                6 => 3.25, // plateau
+                _ => (i % 17) as f32 * 0.25,
+            })
+            .collect(),
+        // all-equal: every element ties
+        _ => vec![1.0f32; v],
+    }
+}
+
+/// The full filter-combination grid at vocabulary `v`: every top-k regime
+/// (off, singleton, small, half, V−1, ≥V) × top-p on/off × min-p on/off ×
+/// penalties+bias on/off.
+fn param_grid(v: usize) -> Vec<SamplingParams> {
+    let mut out = Vec::new();
+    for &top_k in &[0usize, 1, 2, 7, v / 2, v - 1, v, v + 3] {
+        for &top_p in &[1.0f32, 0.92] {
+            for &min_p in &[0.0f32, 0.02] {
+                for &pen in &[false, true] {
+                    let mut p = SamplingParams {
+                        temperature: 0.8,
+                        top_k,
+                        top_p,
+                        min_p,
+                        ..Default::default()
+                    };
+                    if pen {
+                        p.repetition_penalty = 1.2;
+                        p.presence_penalty = 0.1;
+                        p.frequency_penalty = 0.05;
+                        p.logit_bias.insert((v as u32) / 3, 0.75);
+                    }
+                    out.push(p);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn lived_in_history() -> SeqHistory {
+    let mut hist = SeqHistory::new(&[5, 17, 17]);
+    hist.append(100);
+    hist.append(100);
+    hist.append(3);
+    hist
+}
+
+/// Assert the two backends' `Truncated` sets are bitwise identical and
+/// their tokens agree across a uniform sweep.
+fn assert_column_identical(
+    scalar: &mut DenseKernel,
+    simd: &mut DenseKernel,
+    view: &ShardedLogits,
+    hist: &SeqHistory,
+    params: &SamplingParams,
+    ctx: &str,
+) {
+    let a = scalar.truncated_column(view, 0, hist, params);
+    let b = simd.truncated_column(view, 0, hist, params);
+    assert_eq!(a.ids, b.ids, "{ctx}: kept ids diverge (params {params:?})");
+    assert_eq!(a.weights.len(), b.weights.len(), "{ctx}");
+    for (i, (x, y)) in a.weights.iter().zip(&b.weights).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: weight[{i}] {x} vs {y} (params {params:?})"
+        );
+    }
+    assert_eq!(
+        a.sum.to_bits(),
+        b.sum.to_bits(),
+        "{ctx}: sums {} vs {} (params {params:?})",
+        a.sum,
+        b.sum
+    );
+    assert_eq!(a.z_max.to_bits(), b.z_max.to_bits(), "{ctx}: z_max diverges");
+    for i in 0..7 {
+        let u = (i as f64 + 0.5) / 7.0;
+        assert_eq!(
+            simd.decide(view, 0, hist, params, u),
+            scalar.decide(view, 0, hist, params, u),
+            "{ctx}: token diverges at u={u} (params {params:?})"
+        );
+    }
+}
+
+#[test]
+fn every_filter_combination_matches_scalar_bitwise() {
+    let v = 769; // off every lane boundary
+    let mut rng = Philox::new(41);
+    let hist = lived_in_history();
+    let mut scalar = DenseKernel::new(KernelBackend::Scalar);
+    let mut simd = DenseKernel::new(KernelBackend::Simd);
+    for flavor in 0..4 {
+        let view = view_of(flavored_logits(&mut rng, v, flavor), 3);
+        for params in param_grid(v) {
+            assert_column_identical(
+                &mut scalar,
+                &mut simd,
+                &view,
+                &hist,
+                &params,
+                &format!("flavor={flavor}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn off_boundary_vocabs_match_bitwise() {
+    // V straddling the lane width at scale: 8k±7 and 32k±1.
+    let mut rng = Philox::new(97);
+    let hist = lived_in_history();
+    let mut scalar = DenseKernel::new(KernelBackend::Scalar);
+    let mut simd = DenseKernel::new(KernelBackend::Simd);
+    for &v in &[8_192 - 7, 8_192 + 7, 32_768 - 1, 32_768 + 1] {
+        for flavor in 0..4 {
+            let view = view_of(flavored_logits(&mut rng, v, flavor), 1 + v % 3);
+            let combos = [
+                SamplingParams { temperature: 0.8, ..Default::default() },
+                SamplingParams { temperature: 0.8, top_k: 1, ..Default::default() },
+                SamplingParams::production_default(),
+                SamplingParams {
+                    temperature: 1.1,
+                    top_k: v, // k ≥ V: must be a no-op on both backends
+                    top_p: 0.9,
+                    ..Default::default()
+                },
+                SamplingParams::greedy(),
+            ];
+            for params in combos {
+                assert_column_identical(
+                    &mut scalar,
+                    &mut simd,
+                    &view,
+                    &hist,
+                    &params,
+                    &format!("v={v} flavor={flavor}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_and_allow_list_tokens_match() {
+    let v = 1031;
+    let mut rng = Philox::new(53);
+    let hist = lived_in_history();
+    let mut scalar = DenseKernel::new(KernelBackend::Scalar);
+    let mut simd = DenseKernel::new(KernelBackend::Simd);
+    for flavor in 0..4 {
+        let view = view_of(flavored_logits(&mut rng, v, flavor), 2);
+        // greedy: token = total-order argmax on both backends
+        let greedy = SamplingParams::greedy();
+        assert_eq!(
+            simd.decide(&view, 0, &hist, &greedy, 0.5),
+            scalar.decide(&view, 0, &hist, &greedy, 0.5),
+            "flavor={flavor} greedy"
+        );
+        // allow-list (grammar-mask shape): SIMD delegates to the audited
+        // scalar path — tokens must still agree for any mask
+        let allow = SamplingParams {
+            temperature: 0.8,
+            allowed_tokens: Some(vec![3, 99, 512, 700, (v - 1) as u32]),
+            ..Default::default()
+        };
+        for i in 0..5 {
+            let u = (i as f64 + 0.5) / 5.0;
+            assert_eq!(
+                simd.decide(&view, 0, &hist, &allow, u),
+                scalar.decide(&view, 0, &hist, &allow, u),
+                "flavor={flavor} allow-list u={u}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_backend_agrees_with_scalar() {
+    // Whatever SIMPLE_KERNELS selects (the CI matrix runs both values),
+    // the detected kernel must match the scalar reference bitwise.
+    let backend = KernelBackend::detect();
+    let v = 2053;
+    let mut rng = Philox::new(71);
+    let hist = lived_in_history();
+    let mut detected = DenseKernel::new(backend);
+    let mut scalar = DenseKernel::new(KernelBackend::Scalar);
+    let view = view_of(flavored_logits(&mut rng, v, 1), 2);
+    for params in param_grid(v).into_iter().step_by(5) {
+        for i in 0..5 {
+            let u = (i as f64 + 0.5) / 5.0;
+            assert_eq!(
+                detected.decide(&view, 0, &hist, &params, u),
+                scalar.decide(&view, 0, &hist, &params, u),
+                "backend={backend:?} u={u} params={params:?}"
+            );
+        }
+    }
+}
+
+/// FNV-1a over the token stream.
+fn fnv(mut h: u64, t: u32) -> u64 {
+    h ^= t as u64;
+    h.wrapping_mul(0x0000_0100_0000_01b3)
+}
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[test]
+fn adaptive_vs_static_shvs_digests_agree() {
+    // The adaptive-sizing half of the bit-identical-streams contract: with
+    // nested hot sets (one shared ranking) and the H-invariant coupled
+    // walk, the SHVS token digest is the same for every static H — and for
+    // a stream whose H is resized live mid-decode.
+    let v = 1024;
+    let gen = LogitsGen::new(v, 1.1, 33);
+    let params = SamplingParams { temperature: 0.9, ..Default::default() };
+    let hist = SeqHistory::new(&[]);
+    let steps = 300u64;
+    let uniforms = |it: u64| {
+        let mut r = Philox::substream(99, it);
+        (r.next_f64(), r.next_f64(), r.next_f64())
+    };
+
+    let digest_at = |h: usize| -> u64 {
+        let hot = gen.ranked_hot_vocab(h).into_arc();
+        let mut s = ShvsSampler::new(hot.clone());
+        let mut d = FNV_OFFSET;
+        for it in 0..steps {
+            let view = gen.view(1, it, 1);
+            let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+            let dec = s.decide(&view, 0, &hist, &params, &pre, uniforms(it));
+            d = fnv(d, dec.token);
+        }
+        d
+    };
+    let reference = digest_at(64);
+    for h in [16usize, 200, 512] {
+        assert_eq!(digest_at(h), reference, "static H={h} digest diverged");
+    }
+
+    // Live resizes on a schedule — grow, shrink, grow past the start.
+    let schedule: &[(u64, usize)] = &[(60, 96), (140, 48), (220, 300)];
+    let mut hot = gen.ranked_hot_vocab(32).into_arc();
+    let mut s = ShvsSampler::new(hot.clone());
+    let mut d = FNV_OFFSET;
+    for it in 0..steps {
+        if let Some(&(_, h)) = schedule.iter().find(|&&(at, _)| at == it) {
+            hot = hot.resize(h).into_arc();
+            s.set_hot(hot.clone());
+        }
+        let view = gen.view(1, it, 1);
+        let pre = Precompute::reference(&view, 0, &hot, params.temperature);
+        let dec = s.decide(&view, 0, &hist, &params, &pre, uniforms(it));
+        d = fnv(d, dec.token);
+    }
+    assert_eq!(d, reference, "adaptive resizing changed the stream digest");
+}
