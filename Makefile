@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke bench bench-check ci
+.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke cache-smoke bench bench-check ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -33,6 +33,14 @@ cluster-smoke: build
 chaos-smoke: build
 	cargo run --release -- figures --experiments chaos
 
+# The prefixcache experiment at smoke effort (DESIGN.md §13): radix KV
+# reuse over conversation trees, single engine and cluster, reuse on vs
+# off. The experiment asserts the hard bars itself — ≥30% prefill-token
+# reduction and bit-identical stream digests under caching, eviction,
+# preemption, and prefix-cache routing — so a reuse bug fails loudly.
+cache-smoke: build
+	cargo run --release -- figures --experiments prefixcache
+
 # Decision-plane microbenchmarks (quick profile), including the
 # chaos/recovery_pause group, with machine-readable output — CI uploads
 # BENCH_decision.json so throughput/P95 are tracked across PRs.
@@ -62,6 +70,7 @@ ci:
 	cargo test -q --release
 	$(MAKE) cluster-smoke
 	$(MAKE) chaos-smoke
+	$(MAKE) cache-smoke
 	$(MAKE) bench-check
 	$(MAKE) bench
 	python -m pytest python/tests -q

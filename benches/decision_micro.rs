@@ -430,6 +430,77 @@ fn main() {
         }
     }
 
+    // --- kvcache: radix prefix admission — hit vs miss vs COW fork ---
+    // One admission + release per iteration against a warm radix index
+    // (DESIGN.md §13), including a fixed per-token materialization cost
+    // for every token the admission must actually prefill — the work a
+    // prefix hit skips. prefix_hit shares a 15-block published stem and
+    // materializes only the 16-token private tail; prefix_miss matches
+    // nothing and materializes all 256 tokens; cow_fork's match covers the
+    // whole context, so the cap cuts mid-block and the tail block is
+    // forked copy-on-write. `make bench-check` gates hit ≥ 5× miss.
+    if want("kvcache") {
+        use simple_serve::engine::KvAllocator;
+        const BT: usize = 16;
+        const CTX_BLOCKS: usize = 16;
+        let materialize = |tokens: &[u32]| {
+            // Serial per-token KV materialization stand-in (128 dependent
+            // rounds/token ~ a head_dim-sized row compute); the dependency
+            // chain keeps the cost per token honest under optimization.
+            let mut h = 0x9e37_79b9_7f4a_7c15u64;
+            for &t in tokens {
+                for _ in 0..128 {
+                    h = h.wrapping_mul(0x100_0000_01b3).rotate_left(7) ^ t as u64;
+                }
+            }
+            black_box(h);
+        };
+        let ctx: Vec<u32> = (0..(CTX_BLOCKS * BT) as u32).map(|i| i * 7 + 3).collect();
+        let stem = &ctx[..(CTX_BLOCKS - 1) * BT];
+
+        if want("kvcache/prefix_hit") {
+            let mut alloc = KvAllocator::new(4096, BT);
+            alloc.admit(0, stem.len()).expect("publisher admission");
+            alloc.publish(0, stem).expect("publish stem");
+            let mut it = 0u64;
+            results.push(run_case("kvcache/prefix_hit", &cfg, Some(1.0), || {
+                let out = alloc.admit_shared(it + 1, &ctx, ctx.len() + 1).expect("hit");
+                materialize(&ctx[out.cached_tokens..]);
+                alloc.release(it + 1).expect("release");
+                it += 1;
+            }));
+        }
+
+        if want("kvcache/prefix_miss") {
+            let mut alloc = KvAllocator::new(4096, BT);
+            alloc.admit(0, stem.len()).expect("publisher admission");
+            alloc.publish(0, stem).expect("publish stem");
+            let miss_ctx: Vec<u32> = ctx.iter().map(|&t| t ^ 0x8000_0000).collect();
+            let mut it = 0u64;
+            results.push(run_case("kvcache/prefix_miss", &cfg, Some(1.0), || {
+                let out =
+                    alloc.admit_shared(it + 1, &miss_ctx, miss_ctx.len() + 1).expect("miss");
+                materialize(&miss_ctx[out.cached_tokens..]);
+                alloc.release(it + 1).expect("release");
+                it += 1;
+            }));
+        }
+
+        if want("kvcache/cow_fork") {
+            let mut alloc = KvAllocator::new(4096, BT);
+            alloc.admit(0, ctx.len()).expect("publisher admission");
+            alloc.publish(0, &ctx).expect("publish full context");
+            let mut it = 0u64;
+            results.push(run_case("kvcache/cow_fork", &cfg, Some(1.0), || {
+                let out = alloc.admit_shared(it + 1, &ctx, ctx.len() + 1).expect("fork");
+                debug_assert!(out.cow_fork);
+                materialize(&ctx[out.cached_tokens..]);
+                alloc.release(it + 1).expect("release");
+                it += 1;
+            }));
+        }
+    }
+
     // --- truncation-first vs sort-based filtering ---
     if want("filter") {
         let pairs: Vec<(u32, f32)> = {

@@ -9,7 +9,10 @@ so a regression that re-grows the shared-pool contention cliff is caught
 at PR time. The kernel pair additionally carries an absolute floor,
 measured on the *fresh* run alone: the SIMD single-pass column kernel
 must be at least 1.5x the scalar reference on the 32k-vocab group
-(DESIGN.md §12), or the vectorization has rotted.
+(DESIGN.md §12), or the vectorization has rotted. The kvcache group
+carries the same kind of floor: a prefix-cache hit admission must be at
+least 5x a miss (DESIGN.md §13), or sharing has stopped skipping the
+materialization work.
 
 The committed baseline may be *provisional* — synthesized on a machine
 that could not run the benches (marked by a ``_baseline/provisional``
@@ -33,7 +36,7 @@ import shutil
 import sys
 
 # Case-name prefixes the gate enforces. Everything else is informational.
-GATED_PREFIXES = ("cluster/shared_pool", "kernels/")
+GATED_PREFIXES = ("cluster/shared_pool", "kernels/", "kvcache/")
 PROVISIONAL_MARKER = "_baseline/provisional"
 DEFAULT_TOLERANCE = 0.15
 
@@ -44,6 +47,15 @@ DEFAULT_TOLERANCE = 0.15
 KERNEL_SCALAR = "kernels/scalar_penalty_filter_softmax"
 KERNEL_SIMD = "kernels/simd_penalty_filter_softmax"
 MIN_KERNEL_SPEEDUP = 1.5
+
+# Absolute floor on the radix prefix cache: a hit admission (share the
+# published stem, materialize only the private tail) must beat a miss
+# (materialize everything) by this factor on the fresh run (DESIGN.md
+# §13). Same-machine, same-run, baseline-independent — like the kernel
+# floor above.
+CACHE_HIT = "kvcache/prefix_hit"
+CACHE_MISS = "kvcache/prefix_miss"
+MIN_CACHE_SPEEDUP = 5.0
 
 
 def load_cases(path: str) -> dict[str, float | None]:
@@ -145,6 +157,25 @@ def main(argv: list[str]) -> int:
             )
     elif KERNEL_SCALAR in fresh or KERNEL_SIMD in fresh:
         rows.append("  kernels 32k speedup: pair not measured in fresh run (skipped)")
+
+    # Prefix-cache hit/miss floor, also measured within the fresh run.
+    hit_ips, miss_ips = fresh.get(CACHE_HIT), fresh.get(CACHE_MISS)
+    if isinstance(hit_ips, (int, float)) and isinstance(miss_ips, (int, float)) \
+            and miss_ips > 0:
+        speedup = hit_ips / miss_ips
+        verdict = "OK" if speedup >= MIN_CACHE_SPEEDUP else "TOO SLOW"
+        rows.append(
+            f"  kvcache hit/miss: {speedup:.2f}x "
+            f"(floor {MIN_CACHE_SPEEDUP:.1f}x) {verdict}"
+        )
+        if speedup < MIN_CACHE_SPEEDUP:
+            ratio_failures.append(
+                f"prefix-cache hit only {speedup:.2f}x miss "
+                f"(floor {MIN_CACHE_SPEEDUP:.1f}x): "
+                f"{hit_ips:.1f} vs {miss_ips:.1f} items/s"
+            )
+    elif CACHE_HIT in fresh or CACHE_MISS in fresh:
+        rows.append("  kvcache hit/miss: pair not measured in fresh run (skipped)")
 
     print(f"bench-check: {len(base_gated) or len(fresh_gated)} gated case(s), "
           f"tolerance {args.tolerance:.0%}")

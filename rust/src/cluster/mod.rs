@@ -6,7 +6,8 @@
 //! one CPU sampler pool can serve a whole fleet of `Engine<D>` replicas,
 //! pooling decision capacity instead of stranding `m` samplers per
 //! replica. On top of the replicas sit pluggable routing policies
-//! (round-robin, least-outstanding, KV-pressure, session affinity) and an
+//! (round-robin, least-outstanding, KV-pressure, session affinity,
+//! prefix-cache) and an
 //! optional DistServe-style prefill/decode split with a simulated
 //! KV-transfer cost, mirrored by `simulator::serving::simulate_cluster`
 //! so measured and simulated cluster throughput can be compared.
@@ -142,6 +143,38 @@ mod tests {
             );
             assert_eq!(report.recorder.finished_requests(), n);
         }
+    }
+
+    #[test]
+    fn session_affinity_colocates_shared_block_sessions() {
+        // Eight sessions whose prompts share the same full first KV block
+        // (kv_block_tokens = 16) but diverge after it: the block-aligned
+        // session key must land every one on the same replica.
+        let shared: Vec<u32> = (40..56).collect();
+        let reqs: Vec<Request> = (0..8u64)
+            .map(|id| {
+                let mut p = shared.clone();
+                p.extend([100 + id as u32, 200 + id as u32]);
+                Request::new(id, p, 4)
+            })
+            .collect();
+        let mut ccfg = ClusterConfig::default();
+        ccfg.replicas = 2;
+        ccfg.policy = RoutePolicy::SessionAffinity;
+        let cfg = engine_cfg(1);
+        let mut cluster = Cluster::start(&cfg, &ccfg, None, MAX_SEQ, |_id| {
+            Ok(SyntheticRuntime::new(BATCH, VOCAB, MAX_SEQ, PLANE_SEED))
+        });
+        cluster.run(reqs).expect("cluster run");
+        let report = cluster.shutdown().expect("cluster shutdown");
+        assert_eq!(report.finished.len(), 8);
+        let busy: Vec<usize> = report
+            .per_replica
+            .iter()
+            .filter(|r| r.summary.tokens > 0)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(busy.len(), 1, "shared-block sessions must co-locate: {busy:?}");
     }
 
     #[test]

@@ -98,6 +98,10 @@ pub struct ReplicaResult {
     pub spec_proposed: u64,
     pub spec_committed: u64,
     pub spec_windows: u64,
+    /// Prefill tokens actually computed vs skipped via prefix-cache hits
+    /// (DESIGN.md §13) — the fleet report sums them.
+    pub prefill_computed: u64,
+    pub prefill_skipped: u64,
 }
 
 /// Router-side handle to a running replica.
@@ -341,6 +345,8 @@ fn run_worker<D: DataPlane>(
         engine.spec_committed,
         engine.spec_windows,
     );
+    let (prefill_computed, prefill_skipped) =
+        (engine.prefill_computed_tokens(), engine.prefill_skipped_tokens());
     let (recorder, sampler_stats) = engine.shutdown();
     Ok(ReplicaResult {
         recorder,
@@ -350,5 +356,7 @@ fn run_worker<D: DataPlane>(
         spec_proposed,
         spec_committed,
         spec_windows,
+        prefill_computed,
+        prefill_skipped,
     })
 }

@@ -1,13 +1,15 @@
 //! The cluster front-end: a decision-plane-aware router admitting requests
 //! into data-parallel engine replicas (DESIGN.md §9).
 //!
-//! Four pluggable [`RoutePolicy`]s: `RoundRobin` (placement-blind),
+//! Five pluggable [`RoutePolicy`]s: `RoundRobin` (placement-blind),
 //! `LeastOutstanding` (queue depth from replica heartbeats),
 //! `KvPressure` (live KV-block occupancy — the llm-d-style load signal
 //! that diverts traffic from a cache-saturated replica *before* it starts
-//! preempting), and `SessionAffinity` (prompt-prefix hash, so
+//! preempting), `SessionAffinity` (block-aligned prompt-prefix hash, so
 //! shared-prefix traffic lands on the replica whose cache already holds
-//! the prefix's working set).
+//! the prefix's working set), and `PrefixCache` (longest-cached-prefix
+//! scoring against a router-side approximate index keyed by the same
+//! block digests the engines' radix indexes use — DESIGN.md §13).
 //!
 //! Routing moves work, never decisions: per-sequence token streams are
 //! bit-identical to a single-replica engine for every policy, replica
@@ -41,7 +43,8 @@ use crate::engine::{DataPlane, Request, Sequence};
 use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{Recorder, ServingSummary};
 use crate::util::argparse::Args;
-use std::collections::{HashMap, VecDeque};
+use crate::engine::kvcache;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -56,8 +59,13 @@ pub enum RoutePolicy {
     /// routed-but-unadmitted load (ties: fewest outstanding, then lowest
     /// id) — diverts from cache-saturated replicas before they preempt.
     KvPressure,
-    /// Prompt-prefix hash, so shared-prefix sessions co-locate.
+    /// Block-aligned prompt-prefix hash, so shared-prefix sessions
+    /// co-locate (prompts that can share a cached KV block hash alike).
     SessionAffinity,
+    /// Longest cached prefix wins: score each replica by how many leading
+    /// block digests of the prompt its approximate router-side index
+    /// holds, falling back to KV-pressure on ties (DESIGN.md §13).
+    PrefixCache,
 }
 
 impl RoutePolicy {
@@ -67,6 +75,7 @@ impl RoutePolicy {
             "lo" | "least" | "least-outstanding" => Self::LeastOutstanding,
             "kv" | "kv-pressure" | "kvpressure" => Self::KvPressure,
             "affinity" | "session" | "session-affinity" => Self::SessionAffinity,
+            "prefix" | "prefix-cache" | "prefixcache" => Self::PrefixCache,
             _ => return None,
         })
     }
@@ -77,14 +86,16 @@ impl RoutePolicy {
             Self::LeastOutstanding => "least-outstanding",
             Self::KvPressure => "kv-pressure",
             Self::SessionAffinity => "session-affinity",
+            Self::PrefixCache => "prefix-cache",
         }
     }
 
-    pub const ALL: [RoutePolicy; 4] = [
+    pub const ALL: [RoutePolicy; 5] = [
         Self::RoundRobin,
         Self::LeastOutstanding,
         Self::KvPressure,
         Self::SessionAffinity,
+        Self::PrefixCache,
     ];
 }
 
@@ -197,6 +208,11 @@ pub struct ClusterReport {
     pub spec_proposed: u64,
     pub spec_committed: u64,
     pub spec_windows: u64,
+    /// Fleet-summed prefill tokens computed vs skipped by prefix-cache
+    /// hits (DESIGN.md §13) — `skipped / (computed + skipped)` is the
+    /// fleet's prefill-reuse fraction.
+    pub prefill_computed: u64,
+    pub prefill_skipped: u64,
 }
 
 impl ClusterReport {
@@ -213,11 +229,18 @@ impl ClusterReport {
     }
 }
 
-/// FNV-1a over the first 8 prompt tokens — the session key for
-/// [`RoutePolicy::SessionAffinity`] (shared-prefix traffic hashes alike).
-fn prefix_hash(prompt: &[u32]) -> u64 {
+/// Block-aligned session key for [`RoutePolicy::SessionAffinity`]: the
+/// digest of the prompt's first full KV block — the same chained digest
+/// the engines' radix indexes are keyed by ([`kvcache::block_digests`]) —
+/// so two prompts hash alike exactly when they could share a cached
+/// block, and prompts diverging *inside* the first block hash apart.
+/// Prompts shorter than one block fall back to FNV-1a over every token.
+fn prefix_hash(prompt: &[u32], block_tokens: usize) -> u64 {
+    if let Some(&d) = kvcache::block_digests(prompt, block_tokens).first() {
+        return d;
+    }
     let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &t in prompt.iter().take(8) {
+    for &t in prompt {
         for b in t.to_le_bytes() {
             h ^= b as u64;
             h = h.wrapping_mul(0x100_0000_01b3);
@@ -225,6 +248,57 @@ fn prefix_hash(prompt: &[u32]) -> u64 {
     }
     h
 }
+
+/// Router-side *approximate* view of one replica's radix index
+/// ([`RoutePolicy::PrefixCache`], DESIGN.md §13): the block digests of
+/// every prompt dispatched there, FIFO-bounded so a long run cannot grow
+/// it without bound, and cleared outright when the replica dies. It can
+/// be stale — the replica may have evicted a block, or not have
+/// materialized it yet — which only ever costs placement quality, never
+/// correctness: hits and misses alike produce bit-identical streams.
+struct PrefixIndex {
+    set: HashSet<u64>,
+    order: VecDeque<u64>,
+    cap: usize,
+}
+
+impl PrefixIndex {
+    fn new(cap: usize) -> PrefixIndex {
+        PrefixIndex { set: HashSet::new(), order: VecDeque::new(), cap }
+    }
+
+    /// How many *leading* digests of `digests` this index holds — the
+    /// router's estimate of the replica's longest cached prefix, in
+    /// blocks. Prefix-consecutive by construction: a cached block is only
+    /// useful if every block before it is cached too.
+    fn match_len(&self, digests: &[u64]) -> usize {
+        digests.iter().take_while(|d| self.set.contains(d)).count()
+    }
+
+    /// Record a dispatched prompt's digests, evicting oldest-first past
+    /// the cap.
+    fn observe(&mut self, digests: &[u64]) {
+        for &d in digests {
+            if self.set.insert(d) {
+                self.order.push_back(d);
+                if self.order.len() > self.cap {
+                    if let Some(old) = self.order.pop_front() {
+                        self.set.remove(&old);
+                    }
+                }
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.set.clear();
+        self.order.clear();
+    }
+}
+
+/// Digests tracked per replica by the [`RoutePolicy::PrefixCache`] index
+/// (FIFO-evicted beyond this).
+const PREFIX_INDEX_CAP: usize = 4096;
 
 /// Work the router has routed and not yet collected: everything needed to
 /// replay the sequence on a survivor if its replica dies (`req` is the
@@ -250,6 +324,11 @@ pub struct Cluster {
     pending_handoff: HashMap<u64, Request>,
     /// In-flight work by request id — the failover sweep's replay source.
     routed: HashMap<u64, RoutedEntry>,
+    /// KV block granularity (`EngineConfig::kv_block_tokens`) — the
+    /// digest alignment shared with every replica's radix index.
+    block_tokens: usize,
+    /// Per-replica approximate prefix index for [`RoutePolicy::PrefixCache`].
+    prefix_index: Vec<PrefixIndex>,
     /// Router-level chaos schedule (replica kills).
     faults: FaultPlan,
     failovers: u64,
@@ -322,6 +401,10 @@ impl Cluster {
             rr: 0,
             pending_handoff: HashMap::new(),
             routed: HashMap::new(),
+            block_tokens: ecfg.kv_block_tokens,
+            prefix_index: (0..ccfg.replicas)
+                .map(|_| PrefixIndex::new(PREFIX_INDEX_CAP))
+                .collect(),
             faults: ccfg.faults.clone(),
             failovers: 0,
             requeued: 0,
@@ -377,7 +460,27 @@ impl Cluster {
                 })
                 .unwrap(),
             RoutePolicy::SessionAffinity => {
-                cands[(prefix_hash(&req.prompt) % cands.len() as u64) as usize]
+                let h = prefix_hash(&req.prompt, self.block_tokens);
+                cands[(h % cands.len() as u64) as usize]
+            }
+            RoutePolicy::PrefixCache => {
+                let digests = kvcache::block_digests(&req.prompt, self.block_tokens);
+                *cands
+                    .iter()
+                    .max_by_key(|&&i| {
+                        // Longest estimated cached prefix wins; ties fall
+                        // back to the KvPressure key so a cold fleet (or a
+                        // cold prompt) degrades to load-aware placement
+                        // instead of piling onto replica 0.
+                        let r = &self.replicas[i];
+                        (
+                            self.prefix_index[i].match_len(&digests),
+                            r.kv_free_blocks().saturating_sub(r.outstanding()),
+                            std::cmp::Reverse(r.outstanding()),
+                            std::cmp::Reverse(i),
+                        )
+                    })
+                    .unwrap()
             }
         })
     }
@@ -392,6 +495,12 @@ impl Cluster {
         output: Vec<u32>,
     ) -> crate::Result<()> {
         let i = self.pick(&req, role)?;
+        if self.cfg.policy == RoutePolicy::PrefixCache {
+            // The replica will materialize (or already holds) these blocks;
+            // future prompts sharing the prefix should land with them.
+            self.prefix_index[i]
+                .observe(&kvcache::block_digests(&req.prompt, self.block_tokens));
+        }
         self.routed.insert(
             req.id,
             RoutedEntry { replica: i, role, req: req.clone(), output: output.clone() },
@@ -497,6 +606,9 @@ impl Cluster {
         self.collect_finished()?;
         for (i, msg) in dead {
             eprintln!("[cluster] {msg}; requeueing its sequences onto survivors");
+            // A dead replica's cache died with it: stop steering prefix
+            // traffic at the corpse's ghost index.
+            self.prefix_index[i].clear();
             if let Some(pool) = &self.pool {
                 // Drop the dead replica's in-flight decision state: its
                 // pending partial collects and retained tasks, and any
@@ -615,6 +727,7 @@ impl Cluster {
         let mut sampler_stats = Vec::new();
         let mut preemptions = 0u64;
         let mut spec = [0u64; 4];
+        let mut prefill = [0u64; 2];
         for r in self.replicas.drain(..) {
             if r.is_dead() {
                 // reaped after a failure: its partial recorder died with
@@ -641,6 +754,8 @@ impl Cluster {
             spec[1] += res.spec_proposed;
             spec[2] += res.spec_committed;
             spec[3] += res.spec_windows;
+            prefill[0] += res.prefill_computed;
+            prefill[1] += res.prefill_skipped;
             sampler_stats.extend(res.sampler_stats);
             per_replica.push(ReplicaSummary {
                 id,
@@ -675,6 +790,8 @@ impl Cluster {
             spec_proposed: spec[1],
             spec_committed: spec[2],
             spec_windows: spec[3],
+            prefill_computed: prefill[0],
+            prefill_skipped: prefill[1],
         })
     }
 }
@@ -686,5 +803,64 @@ impl Drop for Cluster {
         for r in &self.replicas {
             r.request_stop();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BT: usize = 16;
+
+    #[test]
+    fn prefix_hash_is_block_aligned() {
+        let shared: Vec<u32> = (100..100 + BT as u32).collect();
+        // Same first block, different tails → same session key.
+        let mut a = shared.clone();
+        a.extend([1, 2, 3]);
+        let mut b = shared.clone();
+        b.extend([7, 8]);
+        assert_eq!(prefix_hash(&a, BT), prefix_hash(&b, BT));
+        // Divergence INSIDE the first block → different key, even though
+        // the first 8 tokens (the old hash's window) still agree.
+        let mut c = shared.clone();
+        c[BT - 4] ^= 1;
+        assert_ne!(prefix_hash(&a, BT), prefix_hash(&c, BT));
+        // The key is the radix index's own digest for that block.
+        assert_eq!(prefix_hash(&a, BT), kvcache::block_digests(&shared, BT)[0]);
+    }
+
+    #[test]
+    fn prefix_hash_short_prompt_falls_back_to_full_fnv() {
+        assert_eq!(prefix_hash(&[1, 2, 3], BT), prefix_hash(&[1, 2, 3], BT));
+        assert_ne!(prefix_hash(&[1, 2, 3], BT), prefix_hash(&[1, 2, 4], BT));
+    }
+
+    #[test]
+    fn prefix_index_scores_longest_leading_match() {
+        let prompt: Vec<u32> = (0..3 * BT as u32).collect();
+        let digests = kvcache::block_digests(&prompt, BT);
+        assert_eq!(digests.len(), 3);
+        let mut idx = PrefixIndex::new(64);
+        assert_eq!(idx.match_len(&digests), 0);
+        idx.observe(&digests[..2]);
+        assert_eq!(idx.match_len(&digests), 2);
+        // A hole at block 0 voids the deeper match: scoring is
+        // prefix-consecutive, not set-intersection.
+        let mut holes = PrefixIndex::new(64);
+        holes.observe(&digests[1..]);
+        assert_eq!(holes.match_len(&digests), 0);
+    }
+
+    #[test]
+    fn prefix_index_evicts_fifo_past_cap_and_clears() {
+        let mut idx = PrefixIndex::new(2);
+        idx.observe(&[10, 20, 30]); // 10 evicted by 30
+        assert!(!idx.set.contains(&10));
+        assert!(idx.set.contains(&20) && idx.set.contains(&30));
+        idx.observe(&[20]); // already present: no-op, no double entry
+        assert_eq!(idx.order.len(), 2);
+        idx.clear();
+        assert_eq!(idx.match_len(&[20, 30]), 0);
     }
 }

@@ -117,6 +117,13 @@ pub struct EngineConfig {
     /// exact-distribution rejection (DESIGN.md §7); token streams are
     /// bit-identical to `spec_k = 0` for any k and sampler count.
     pub spec_k: usize,
+    /// Radix prefix-cache reuse (DESIGN.md §13): publish finished prompt
+    /// blocks into a token-keyed index, share the longest cached prefix on
+    /// admission, and prefill only the uncached tail. On by default, but
+    /// only engaged when the data plane can restore cached KV rows
+    /// (`DataPlane::supports_prefix_restore`; the synthetic plane can, the
+    /// PJRT path cannot yet). Changes timing only, never tokens.
+    pub prefix_cache: bool,
     /// In-flight microbatches for the pipelined executor (DESIGN.md §8):
     /// the slot space is split into `n` interleaved microbatches so one
     /// microbatch's decisions can be sampled while another's forward runs.
@@ -152,6 +159,7 @@ impl Default for EngineConfig {
             prefill_token_budget: 0,
             kv_blocks: 0,
             spec_k: 0,
+            prefix_cache: true,
             n_microbatches: 1,
             overlap: false,
             idle_poll_us: 200,
@@ -210,6 +218,12 @@ impl EngineConfig {
         if let Some(k) = j.get("spec_k").as_usize() {
             self.spec_k = k;
         }
+        // accept both a JSON bool and the CLI's numeric 0/1
+        if let Some(p) = j.get("prefix_cache").as_bool() {
+            self.prefix_cache = p;
+        } else if let Some(p) = j.get("prefix_cache").as_f64() {
+            self.prefix_cache = p != 0.0;
+        }
         if let Some(n) = j.get("n_microbatches").as_usize() {
             self.n_microbatches = n.max(1);
         }
@@ -244,6 +258,7 @@ impl EngineConfig {
             "prefill_budget",
             "kv_blocks",
             "spec_k",
+            "prefix_cache",
             "n_microbatches",
             "idle_poll_us",
         ] {
@@ -303,6 +318,16 @@ mod tests {
         assert_eq!(cfg.spec_k, 0, "speculation is opt-in");
         cfg.apply_json(&Json::parse(r#"{"spec_k": 4}"#).unwrap()).unwrap();
         assert_eq!(cfg.spec_k, 4);
+    }
+
+    #[test]
+    fn prefix_cache_override_applies() {
+        let mut cfg = EngineConfig::default();
+        assert!(cfg.prefix_cache, "prefix reuse is on by default");
+        cfg.apply_json(&Json::parse(r#"{"prefix_cache": 0}"#).unwrap()).unwrap();
+        assert!(!cfg.prefix_cache, "CLI numeric form disables it");
+        cfg.apply_json(&Json::parse(r#"{"prefix_cache": true}"#).unwrap()).unwrap();
+        assert!(cfg.prefix_cache);
     }
 
     #[test]

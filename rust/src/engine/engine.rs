@@ -88,6 +88,21 @@ pub trait DataPlane {
     /// Install the hot-vocab mask for SHVS precompute (no-op where
     /// unsupported).
     fn install_hot_vocab(&mut self, _hot: &HotVocab) {}
+    /// Whether [`Self::restore_prefix`] is implemented. The engine enables
+    /// prefix-cache-aware admission (DESIGN.md §13) only when true: a
+    /// cache hit skips re-feeding the cached tokens, so the data plane must
+    /// be able to re-install their KV rows without a forward pass.
+    fn supports_prefix_restore(&self) -> bool {
+        false
+    }
+    /// Install a cached token prefix into a slot's KV (prefix-cache hit):
+    /// afterwards the slot's rows `0..tokens.len()` must be exactly what
+    /// feeding `tokens` through [`Self::step`] would have produced, so
+    /// logits — and therefore token streams — are bit-identical with the
+    /// cache on or off. Returns false where unsupported.
+    fn restore_prefix(&mut self, _slot: usize, _tokens: &[u32]) -> bool {
+        false
+    }
 }
 
 impl DataPlane for ModelRuntime {
@@ -252,6 +267,10 @@ impl<D: DataPlane> Engine<D> {
                 // the AOT decode-step data plane feeds one token per slot
                 // per step, so chunks realize as budgeted prefill concurrency
                 max_prefill_chunk: 1,
+                // radix prefix reuse (§13) needs the data plane to restore
+                // cached KV rows; planes that can't (the PJRT path today)
+                // keep the exact pre-cache behavior
+                prefix_cache: cfg.prefix_cache && runtime.supports_prefix_restore(),
                 ..SchedulerConfig::default()
             },
         );
@@ -364,9 +383,27 @@ impl<D: DataPlane> Engine<D> {
         self.scheduler.waiting_len() + self.scheduler.running_len()
     }
 
-    /// Free KV blocks right now — the router's KV-pressure heartbeat.
+    /// Allocatable KV blocks right now — the router's KV-pressure
+    /// heartbeat. Counts free blocks plus index-held blocks no live
+    /// sequence references (reclaimable on demand), so a warm prefix cache
+    /// doesn't read as pressure.
     pub fn kv_free_blocks(&self) -> usize {
-        self.scheduler.kv.free_blocks()
+        self.scheduler.kv.available_blocks()
+    }
+
+    /// Prefix-cache counters (lookups, hits, evictions, …; §13).
+    pub fn prefix_stats(&self) -> crate::engine::kvcache::PrefixStats {
+        self.scheduler.kv.stats
+    }
+
+    /// Prefill tokens fed through forward passes (decode steps excluded).
+    pub fn prefill_computed_tokens(&self) -> u64 {
+        self.scheduler.prefill_computed_tokens()
+    }
+
+    /// Known tokens skipped at admission via cached prefixes.
+    pub fn prefill_skipped_tokens(&self) -> u64 {
+        self.scheduler.prefill_skipped_tokens()
     }
 
     /// Run one executor turn: settle the cursor microbatch's previous
@@ -446,6 +483,19 @@ impl<D: DataPlane> Engine<D> {
             let output = seq.output.clone();
             let params = seq.request.params.clone();
             let grammar = seq.request.grammar.clone();
+            let (slot, start) = (seq.slot, seq.position);
+            if start > 0 {
+                // A prefix-cache hit admitted this sequence mid-context:
+                // install the cached tokens into the slot's KV before any
+                // forward (this microbatch's or a foreign re-feed) reads it.
+                let mut ctx: Vec<u32> =
+                    prompt.iter().chain(output.iter()).copied().collect();
+                ctx.truncate(start);
+                assert!(
+                    self.runtime.restore_prefix(slot, &ctx),
+                    "prefix-cache admission requires a restoring data plane"
+                );
+            }
             if let Some(svc) = &self.service {
                 let handle = svc.register_full(seq_id, &prompt, &output, &params, grammar);
                 self.seq_handles.insert(seq_id, handle);

@@ -1,4 +1,5 @@
-//! Paged KV-cache block allocator (vLLM-style substrate).
+//! Paged KV-cache block allocator with a radix prefix index (vLLM /
+//! SGLang-style substrate).
 //!
 //! The engine admits sequences only when blocks are available, extends a
 //! sequence's block list as it grows, and frees on retirement. This governs
@@ -6,6 +7,102 @@
 //! tiny PJRT model uses dense per-slot caches underneath, so here the pages
 //! are an *accounting* structure (host-memory figures in Table 3 come from
 //! it), with the same invariants as a real allocator.
+//!
+//! On top of the flat allocator sits a **token-keyed radix index** over
+//! full blocks (DESIGN.md §13): when a sequence's prompt (or its full
+//! history at retirement) is published, each full block becomes a node
+//! keyed by the chained digest of the tokens it covers. A later admission
+//! walks the index, *shares* the matched blocks (refcount bump, zero
+//! copies) and only allocates the uncached tail. Blocks are copy-on-write
+//! at block granularity: shared blocks are never written (the share is
+//! capped so at least one known token stays uncached), and when the cap
+//! cuts inside a matched block the allocator *forks* it — a private block
+//! is allocated for the partially-reused content instead of aliasing the
+//! shared one. Unreferenced index leaves are reclaimed LRU-first when the
+//! free list runs dry, so the prefix cache consumes only otherwise-idle
+//! blocks and can never cause an admission failure that a cache-less
+//! allocator would not also have.
+
+use std::collections::HashMap;
+
+/// FNV-1a offset/prime — the same chained digest is used by the router's
+/// approximate per-replica index, so engine and router agree on what "the
+/// first k blocks of this prompt" hashes to.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Chained block-aligned digests: entry `i` digests tokens
+/// `[0, (i+1)·block_tokens)` — i.e. each entry extends the previous one,
+/// so a shared prefix of `k` full blocks means the first `k` digests agree.
+pub fn block_digests(tokens: &[u32], block_tokens: usize) -> Vec<u64> {
+    assert!(block_tokens > 0);
+    let mut out = Vec::with_capacity(tokens.len() / block_tokens);
+    let mut h = FNV_OFFSET;
+    for chunk in tokens.chunks_exact(block_tokens) {
+        for &t in chunk {
+            h ^= t as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        out.push(h);
+    }
+    out
+}
+
+/// One full block in the radix index. `key` is the chained digest of the
+/// token prefix ending at this block (its slot in the parent's child map);
+/// `tokens` is the block's own content, kept to resolve digest collisions
+/// content-exactly.
+#[derive(Debug)]
+struct RadixNode {
+    key: u64,
+    tokens: Vec<u32>,
+    block: u32,
+    /// `None` = child of the (implicit) root.
+    parent: Option<usize>,
+    children: HashMap<u64, usize>,
+    last_use: u64,
+}
+
+/// Counters for the prefix cache (reported by the `prefixcache` harness).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    /// Admissions that consulted the index.
+    pub lookups: u64,
+    /// Admissions that shared at least one block.
+    pub hits: u64,
+    /// Known tokens whose prefill was skipped via sharing.
+    pub hit_tokens: u64,
+    /// Partially-reused blocks that were forked copy-on-write.
+    pub cow_forks: u64,
+    /// Index leaves reclaimed under pressure.
+    pub evictions: u64,
+    /// Full blocks published into the index.
+    pub published: u64,
+}
+
+/// Outcome of a prefix-aware admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmitOutcome {
+    /// Known tokens covered by shared (or forked) cached blocks — the
+    /// sequence's prefill may start at this position.
+    pub cached_tokens: usize,
+    /// Full blocks shared by refcount (no allocation, no copy).
+    pub shared_blocks: usize,
+    /// Whether the tail of the match was forked copy-on-write.
+    pub cow_fork: bool,
+}
+
+/// Feasibility probe for a prefix-aware admission (no mutation).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitProbe {
+    /// Known tokens a real admission would start prefill at.
+    pub cached_tokens: usize,
+    /// Blocks a real admission would newly allocate.
+    pub new_blocks: usize,
+    /// Whether those blocks are available (free + evictable, excluding the
+    /// matched path itself).
+    pub fits: bool,
+}
 
 /// Allocator over `num_blocks` fixed-size blocks of `block_tokens` tokens.
 #[derive(Debug)]
@@ -13,8 +110,21 @@ pub struct KvAllocator {
     block_tokens: usize,
     free: Vec<u32>,
     num_blocks: usize,
-    /// blocks[seq] = allocated block ids, in append order.
-    tables: std::collections::HashMap<u64, Vec<u32>>,
+    /// refs[b] = number of sequence tables containing block b, plus 1 if a
+    /// radix node holds it. Free blocks have refs[b] == 0.
+    refs: Vec<u32>,
+    /// blocks[seq] = allocated block ids, in append order. A (possibly
+    /// empty) strict prefix of the table is shared full blocks; everything
+    /// after is private to the sequence.
+    tables: HashMap<u64, Vec<u32>>,
+    /// Radix-node slab (`None` = free slot) + its free list.
+    nodes: Vec<Option<RadixNode>>,
+    node_free: Vec<usize>,
+    /// Children of the implicit root, keyed by first-block digest.
+    roots: HashMap<u64, usize>,
+    /// LRU clock, bumped on every index touch.
+    clock: u64,
+    pub stats: PrefixStats,
 }
 
 impl KvAllocator {
@@ -24,7 +134,13 @@ impl KvAllocator {
             block_tokens,
             free: (0..num_blocks as u32).rev().collect(),
             num_blocks,
-            tables: std::collections::HashMap::new(),
+            refs: vec![0; num_blocks],
+            tables: HashMap::new(),
+            nodes: Vec::new(),
+            node_free: Vec::new(),
+            roots: HashMap::new(),
+            clock: 0,
+            stats: PrefixStats::default(),
         }
     }
 
@@ -40,51 +156,361 @@ impl KvAllocator {
     pub fn used_blocks(&self) -> usize {
         self.num_blocks - self.free.len()
     }
+    /// Blocks resident in the radix index (shared or merely cached).
+    pub fn indexed_blocks(&self) -> usize {
+        self.nodes.iter().flatten().count()
+    }
 
     /// Blocks needed to hold `tokens` tokens.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
 
-    /// Can a new sequence of `tokens` tokens be admitted?
-    pub fn can_admit(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free.len()
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
     }
 
-    /// Reserve blocks for a new sequence covering `tokens` tokens.
-    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
-        if self.tables.contains_key(&seq) {
-            return Err(KvError::AlreadyAdmitted(seq));
-        }
-        let need = self.blocks_for(tokens).max(1);
-        if need > self.free.len() {
-            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
-        }
-        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.tables.insert(seq, blocks);
-        Ok(())
+    fn node(&self, id: usize) -> &RadixNode {
+        self.nodes[id].as_ref().expect("live radix node")
     }
 
-    /// Grow a sequence to cover `tokens` tokens (allocates on block-boundary
-    /// crossings only).
-    pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
-        let need = self.blocks_for(tokens).max(1);
-        let table = self.tables.get_mut(&seq).ok_or(KvError::Unknown(seq))?;
-        while table.len() < need {
-            match self.free.pop() {
-                Some(b) => table.push(b),
-                None => {
-                    return Err(KvError::OutOfBlocks { need, free: 0 });
+    /// Walk the index along `ctx`'s full blocks; returns matched node ids
+    /// in depth order (an ancestor chain from the root).
+    fn walk(&self, ctx: &[u32]) -> Vec<usize> {
+        let mut path = Vec::new();
+        let mut children = &self.roots;
+        let mut h = FNV_OFFSET;
+        for chunk in ctx.chunks_exact(self.block_tokens) {
+            for &t in chunk {
+                h ^= t as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            match children.get(&h) {
+                Some(&id) if self.node(id).tokens == chunk => {
+                    path.push(id);
+                    children = &self.node(id).children;
+                }
+                _ => break,
+            }
+        }
+        path
+    }
+
+    /// Longest indexed prefix of `ctx`, in tokens (full blocks only,
+    /// uncapped). Read-only; does not stamp LRU recency.
+    pub fn lookup_prefix(&self, ctx: &[u32]) -> usize {
+        self.walk(ctx).len() * self.block_tokens
+    }
+
+    /// Node ids whose subtree is fully reclaimable (every block referenced
+    /// only by the index), excluding `keep` and its ancestors.
+    fn reclaimable(&self, keep: &[usize]) -> Vec<usize> {
+        let live: Vec<usize> =
+            (0..self.nodes.len()).filter(|&i| self.nodes[i].is_some()).collect();
+        // Children-first order: sort by depth, deepest first.
+        let mut depth: HashMap<usize, usize> = HashMap::new();
+        for &id in &live {
+            let mut d = 0;
+            let mut cur = self.node(id).parent;
+            while let Some(p) = cur {
+                d += 1;
+                cur = self.node(p).parent;
+            }
+            depth.insert(id, d);
+        }
+        let mut order = live.clone();
+        order.sort_by_key(|id| std::cmp::Reverse(depth[id]));
+        let mut ok: HashMap<usize, bool> = HashMap::new();
+        for &id in &order {
+            let n = self.node(id);
+            let all_children = n.children.values().all(|c| ok[c]);
+            ok.insert(
+                id,
+                all_children && self.refs[n.block as usize] == 1 && !keep.contains(&id),
+            );
+        }
+        live.into_iter().filter(|id| ok[id]).collect()
+    }
+
+    /// Blocks that could be handed out right now: free + reclaimable.
+    pub fn available_blocks(&self) -> usize {
+        self.free.len() + self.reclaimable(&[]).len()
+    }
+
+    /// Evict the least-recently-used reclaimable leaf; returns its block
+    /// (now ref 0, *not* pushed to the free list — callers either reuse it
+    /// or push it themselves).
+    fn evict_lru_leaf(&mut self) -> Option<u32> {
+        let mut best: Option<(u64, usize)> = None;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            if let Some(n) = slot {
+                if n.children.is_empty() && self.refs[n.block as usize] == 1 {
+                    match best {
+                        Some((lu, _)) if lu <= n.last_use => {}
+                        _ => best = Some((n.last_use, id)),
+                    }
                 }
             }
         }
+        let (_, id) = best?;
+        self.stats.evictions += 1;
+        Some(self.remove_node(id))
+    }
+
+    /// Unlink a node from the trie and the slab; returns its block with the
+    /// index's reference dropped.
+    fn remove_node(&mut self, id: usize) -> u32 {
+        let n = self.nodes[id].take().expect("live radix node");
+        match n.parent {
+            Some(p) => {
+                self.nodes[p].as_mut().expect("live parent").children.remove(&n.key);
+            }
+            None => {
+                self.roots.remove(&n.key);
+            }
+        }
+        self.node_free.push(id);
+        let b = n.block as usize;
+        debug_assert!(self.refs[b] >= 1);
+        self.refs[b] -= 1;
+        n.block
+    }
+
+    /// Evict up to `n` LRU leaves back to the free list; returns how many
+    /// blocks were reclaimed. Test/chaos hook for cache-pressure scenarios.
+    pub fn evict(&mut self, n: usize) -> usize {
+        let mut got = 0;
+        for _ in 0..n {
+            match self.evict_lru_leaf() {
+                Some(b) => {
+                    self.free.push(b);
+                    got += 1;
+                }
+                None => break,
+            }
+        }
+        got
+    }
+
+    /// Drop the whole index (every reclaimable node). Unreclaimable nodes
+    /// (blocks still shared with live sequences) stay.
+    pub fn clear_index(&mut self) {
+        while let Some(b) = self.evict_lru_leaf() {
+            self.free.push(b);
+        }
+    }
+
+    /// Pop a free block, falling back to LRU eviction. Returned block has
+    /// ref 0; the caller installs it (and its refcount) or rolls back.
+    fn alloc_block(&mut self) -> Option<u32> {
+        self.free.pop().or_else(|| self.evict_lru_leaf())
+    }
+
+    /// Can a new sequence of `tokens` tokens be admitted (ignoring any
+    /// prefix sharing)?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens).max(1) <= self.available_blocks()
+    }
+
+    /// Feasibility + benefit of admitting `total` tokens whose known
+    /// context is `ctx`, with prefix sharing. Read-only.
+    pub fn probe(&self, ctx: &[u32], total: usize) -> AdmitProbe {
+        debug_assert!(total >= ctx.len());
+        let path = self.walk(ctx);
+        let cap = ctx.len().saturating_sub(1);
+        let cached = (path.len() * self.block_tokens).min(cap);
+        let shared = cached / self.block_tokens;
+        let new_blocks = self.blocks_for(total).max(1) - shared;
+        let avail = self.free.len() + self.reclaimable(&path).len();
+        AdmitProbe { cached_tokens: cached, new_blocks, fits: new_blocks <= avail }
+    }
+
+    /// Reserve blocks for a new sequence covering `tokens` tokens, without
+    /// consulting the prefix index.
+    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        self.admit_shared(seq, &[], tokens).map(|_| ())
+    }
+
+    /// Reserve blocks for a new sequence of `total` tokens whose known
+    /// context (prompt ⧺ replayed output) is `ctx`, sharing the longest
+    /// indexed prefix instead of reallocating it.
+    ///
+    /// The share is capped at `ctx.len() - 1`: at least one known token is
+    /// always left uncached so the forward still produces this sequence's
+    /// decision logits. When that cap lands mid-block, the partially-reused
+    /// block is **forked copy-on-write** — a private block is allocated for
+    /// it rather than aliasing the shared one, since positions inside it
+    /// will be written. On failure the call is a no-op.
+    pub fn admit_shared(
+        &mut self,
+        seq: u64,
+        ctx: &[u32],
+        total: usize,
+    ) -> Result<AdmitOutcome, KvError> {
+        assert!(total >= ctx.len(), "admitted capacity below known context");
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::AlreadyAdmitted(seq));
+        }
+        let path = self.walk(ctx);
+        let cap = ctx.len().saturating_sub(1);
+        let cached = (path.len() * self.block_tokens).min(cap);
+        let shared = cached / self.block_tokens;
+        let cow = cached > shared * self.block_tokens;
+        let need = self.blocks_for(total).max(1);
+        debug_assert!(need > shared, "shared prefix must leave a writable tail block");
+
+        // Pin the shared prefix first so eviction inside alloc_block can
+        // never reclaim the very nodes this admission depends on.
+        for &id in &path[..shared] {
+            let b = self.node(id).block as usize;
+            self.refs[b] += 1;
+        }
+        let now = self.tick();
+        for &id in &path {
+            self.nodes[id].as_mut().expect("live radix node").last_use = now;
+        }
+
+        let mut fresh: Vec<u32> = Vec::with_capacity(need - shared);
+        for _ in shared..need {
+            match self.alloc_block() {
+                Some(b) => fresh.push(b),
+                None => {
+                    // Roll back: this admission is a no-op.
+                    for &id in &path[..shared] {
+                        let b = self.node(id).block as usize;
+                        self.refs[b] -= 1;
+                    }
+                    self.free.extend(fresh);
+                    return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+                }
+            }
+        }
+
+        let mut table: Vec<u32> =
+            path[..shared].iter().map(|&id| self.node(id).block).collect();
+        for &b in &fresh {
+            self.refs[b as usize] += 1;
+        }
+        table.extend(fresh);
+        self.tables.insert(seq, table);
+
+        self.stats.lookups += !ctx.is_empty() as u64;
+        if cached > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += cached as u64;
+        }
+        self.stats.cow_forks += cow as u64;
+        Ok(AdmitOutcome { cached_tokens: cached, shared_blocks: shared, cow_fork: cow })
+    }
+
+    /// Grow a sequence to cover `tokens` tokens (allocates on block-boundary
+    /// crossings only). On `OutOfBlocks` the call is a **no-op**: blocks
+    /// allocated within the failing call are rolled back, so callers never
+    /// see a partially-grown table.
+    pub fn grow(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
+        let need = self.blocks_for(tokens).max(1);
+        let have = self.tables.get(&seq).ok_or(KvError::Unknown(seq))?.len();
+        if need <= have {
+            return Ok(());
+        }
+        let mut fresh: Vec<u32> = Vec::with_capacity(need - have);
+        for _ in have..need {
+            match self.alloc_block() {
+                Some(b) => fresh.push(b),
+                None => {
+                    self.free.extend(fresh);
+                    return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+                }
+            }
+        }
+        for &b in &fresh {
+            self.refs[b as usize] += 1;
+        }
+        self.tables.get_mut(&seq).expect("checked above").extend(fresh);
         Ok(())
     }
 
-    /// Release all blocks of a retired sequence.
+    /// Publish the full blocks of `seq` covering `ctx` (the sequence's
+    /// materialized token content, table-aligned) into the radix index, so
+    /// later admissions can share them. Idempotent: already-indexed prefixes
+    /// are descended, only new depths insert nodes. Safe to call once the
+    /// content is materialized (prefill committed past each block).
+    pub fn publish(&mut self, seq: u64, ctx: &[u32]) -> Result<usize, KvError> {
+        let table = self.tables.get(&seq).ok_or(KvError::Unknown(seq))?.clone();
+        let full = (ctx.len() / self.block_tokens).min(table.len());
+        let mut parent: Option<usize> = None;
+        let mut h = FNV_OFFSET;
+        let mut inserted = 0;
+        let now = self.tick();
+        for (d, chunk) in ctx.chunks_exact(self.block_tokens).take(full).enumerate() {
+            for &t in chunk {
+                h ^= t as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            let children = match parent {
+                Some(p) => &self.node(p).children,
+                None => &self.roots,
+            };
+            if let Some(&id) = children.get(&h) {
+                if self.node(id).tokens == chunk {
+                    // Already indexed (possibly under another sequence's
+                    // block with equal content) — descend, stamp recency.
+                    self.nodes[id].as_mut().expect("live radix node").last_use = now;
+                    parent = Some(id);
+                    continue;
+                }
+                // Digest collision with different content: stop extending.
+                break;
+            }
+            let block = table[d];
+            self.refs[block as usize] += 1;
+            let node = RadixNode {
+                key: h,
+                tokens: chunk.to_vec(),
+                block,
+                parent,
+                children: HashMap::new(),
+                last_use: now,
+            };
+            let id = match self.node_free.pop() {
+                Some(i) => {
+                    self.nodes[i] = Some(node);
+                    i
+                }
+                None => {
+                    self.nodes.push(Some(node));
+                    self.nodes.len() - 1
+                }
+            };
+            match parent {
+                Some(p) => {
+                    self.nodes[p].as_mut().expect("live parent").children.insert(h, id);
+                }
+                None => {
+                    self.roots.insert(h, id);
+                }
+            }
+            inserted += 1;
+            parent = Some(id);
+        }
+        self.stats.published += inserted as u64;
+        Ok(inserted)
+    }
+
+    /// Release all blocks of a retired sequence. Blocks still referenced by
+    /// the radix index (or other sequences) stay allocated; the rest return
+    /// to the free list.
     pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
         let blocks = self.tables.remove(&seq).ok_or(KvError::Unknown(seq))?;
-        self.free.extend(blocks);
+        for b in blocks {
+            let i = b as usize;
+            debug_assert!(self.refs[i] >= 1);
+            self.refs[i] -= 1;
+            if self.refs[i] == 0 {
+                self.free.push(b);
+            }
+        }
         Ok(())
     }
 
@@ -93,28 +519,62 @@ impl KvAllocator {
         self.tables.get(&seq).map(|v| v.as_slice())
     }
 
-    /// Invariant check: every block is either free or owned by exactly one
-    /// sequence. Used by property tests.
+    /// Invariant check: every block is either free (ref 0) or covered by
+    /// exactly `refs[b]` owners — one per sequence table containing it plus
+    /// one if a radix node holds it. No leaks, no double-frees, no aliasing
+    /// inside a single table, trie structure consistent. Used by property
+    /// tests.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = vec![false; self.num_blocks];
+        let mut count = vec![0u32; self.num_blocks];
+        for (seq, table) in &self.tables {
+            let mut in_table = std::collections::HashSet::new();
+            for &b in table {
+                if !in_table.insert(b) {
+                    return Err(format!("block {b} aliased within seq {seq}'s table"));
+                }
+                count[b as usize] += 1;
+            }
+        }
+        let mut node_blocks = std::collections::HashSet::new();
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if n.tokens.len() != self.block_tokens {
+                return Err(format!("node {id} holds a partial block"));
+            }
+            if !node_blocks.insert(n.block) {
+                return Err(format!("block {} indexed twice", n.block));
+            }
+            count[n.block as usize] += 1;
+            let children = match n.parent {
+                Some(p) => match self.nodes.get(p).and_then(|s| s.as_ref()) {
+                    Some(pn) => &pn.children,
+                    None => return Err(format!("node {id} has a dead parent")),
+                },
+                None => &self.roots,
+            };
+            if children.get(&n.key) != Some(&id) {
+                return Err(format!("node {id} unlinked from its parent"));
+            }
+        }
+        let mut in_free = std::collections::HashSet::new();
         for &b in &self.free {
-            let i = b as usize;
-            if seen[i] {
+            if !in_free.insert(b) {
                 return Err(format!("block {b} double-counted (free)"));
             }
-            seen[i] = true;
-        }
-        for (seq, table) in &self.tables {
-            for &b in table {
-                let i = b as usize;
-                if seen[i] {
-                    return Err(format!("block {b} double-counted (seq {seq})"));
-                }
-                seen[i] = true;
+            if count[b as usize] != 0 {
+                return Err(format!("block {b} both free and referenced"));
             }
         }
-        if !seen.iter().all(|&s| s) {
-            return Err("leaked blocks".into());
+        for b in 0..self.num_blocks {
+            if self.refs[b] != count[b] {
+                return Err(format!(
+                    "block {b} refcount {} != recount {}",
+                    self.refs[b], count[b]
+                ));
+            }
+            if count[b] == 0 && !in_free.contains(&(b as u32)) {
+                return Err(format!("block {b} leaked (unreferenced, not free)"));
+            }
         }
         Ok(())
     }
@@ -172,14 +632,18 @@ mod tests {
     }
 
     #[test]
-    fn grow_failure_keeps_partial_consistent() {
-        let mut a = KvAllocator::new(2, 4);
+    fn grow_failure_is_a_no_op() {
+        let mut a = KvAllocator::new(3, 4);
         a.admit(1, 4).unwrap();
-        // needs 3 blocks total, only 1 free -> error, but invariants hold
-        assert!(matches!(a.grow(1, 12), Err(KvError::OutOfBlocks { .. })));
+        let before = a.table(1).unwrap().to_vec();
+        // needs 4 blocks total, only 2 free -> error, and the table must be
+        // exactly as before the call (satellite: no partial growth)
+        assert!(matches!(a.grow(1, 16), Err(KvError::OutOfBlocks { .. })));
+        assert_eq!(a.table(1).unwrap(), &before[..]);
+        assert_eq!(a.free_blocks(), 2);
         a.check_invariants().unwrap();
         a.release(1).unwrap();
-        assert_eq!(a.free_blocks(), 2);
+        assert_eq!(a.free_blocks(), 3);
     }
 
     #[test]
@@ -191,5 +655,131 @@ mod tests {
         let t2: Vec<u32> = a.table(2).unwrap().to_vec();
         assert!(t1.iter().all(|b| !t2.contains(b)));
         a.check_invariants().unwrap();
+    }
+
+    fn ctx(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 7 + 3).collect()
+    }
+
+    #[test]
+    fn publish_then_share_skips_prefill() {
+        let mut a = KvAllocator::new(16, 4);
+        let c = ctx(10); // 2 full blocks + 2 tokens
+        a.admit_shared(1, &c, 11).unwrap();
+        a.publish(1, &c).unwrap();
+        assert_eq!(a.indexed_blocks(), 2);
+        assert_eq!(a.lookup_prefix(&c), 8);
+        // A second sequence with the same context shares both full blocks.
+        let out = a.admit_shared(2, &c, 11).unwrap();
+        assert_eq!(out, AdmitOutcome { cached_tokens: 8, shared_blocks: 2, cow_fork: false });
+        assert_eq!(&a.table(2).unwrap()[..2], &a.table(1).unwrap()[..2]);
+        a.check_invariants().unwrap();
+        // Release both: published blocks stay resident in the index.
+        a.release(1).unwrap();
+        a.release(2).unwrap();
+        assert_eq!(a.indexed_blocks(), 2);
+        assert_eq!(a.lookup_prefix(&c), 8);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn block_aligned_match_forks_cow() {
+        let mut a = KvAllocator::new(16, 4);
+        let c = ctx(8); // exactly 2 blocks
+        a.admit_shared(1, &c, 9).unwrap();
+        a.publish(1, &c).unwrap();
+        // Same 8-token context: the match covers the whole prompt, but one
+        // token must stay uncached -> the cap cuts inside block 1 -> fork.
+        let out = a.admit_shared(2, &c, 9).unwrap();
+        assert_eq!(out, AdmitOutcome { cached_tokens: 7, shared_blocks: 1, cow_fork: true });
+        // Block 0 shared, block 1 forked private.
+        assert_eq!(a.table(2).unwrap()[0], a.table(1).unwrap()[0]);
+        assert_ne!(a.table(2).unwrap()[1], a.table(1).unwrap()[1]);
+        assert_eq!(a.stats.cow_forks, 1);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_reclaims_lru_leaves_under_pressure() {
+        let mut a = KvAllocator::new(4, 4);
+        a.admit_shared(1, &ctx(8), 8).unwrap(); // 2 blocks
+        a.publish(1, &ctx(8)).unwrap();
+        a.release(1).unwrap();
+        assert_eq!(a.free_blocks(), 2);
+        assert_eq!(a.indexed_blocks(), 2);
+        assert_eq!(a.available_blocks(), 4);
+        // Admitting an unrelated 4-block sequence must evict the cached
+        // chain (leaf first, then its parent) rather than fail.
+        let other: Vec<u32> = (100..116).collect();
+        let out = a.admit_shared(2, &other, 16).unwrap();
+        assert_eq!(out.cached_tokens, 0);
+        assert_eq!(a.indexed_blocks(), 0);
+        assert_eq!(a.stats.evictions, 2);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_blocks_survive_pressure() {
+        let mut a = KvAllocator::new(4, 4);
+        a.admit_shared(1, &ctx(8), 8).unwrap();
+        a.publish(1, &ctx(8)).unwrap();
+        // Seq 1 still owns its blocks: nothing is evictable, so a 3-block
+        // admission must fail cleanly (and leave refcounts untouched).
+        let other: Vec<u32> = (100..112).collect();
+        assert!(matches!(
+            a.admit_shared(2, &other, 12),
+            Err(KvError::OutOfBlocks { .. })
+        ));
+        a.check_invariants().unwrap();
+        assert_eq!(a.lookup_prefix(&ctx(8)), 8, "shared prefix not evicted");
+    }
+
+    #[test]
+    fn partial_eviction_shortens_the_hit() {
+        let mut a = KvAllocator::new(8, 4);
+        let c = ctx(16); // 4 full blocks
+        a.admit_shared(1, &c, 16).unwrap();
+        a.publish(1, &c).unwrap();
+        a.release(1).unwrap();
+        assert_eq!(a.lookup_prefix(&c), 16);
+        // Evict two leaves: the chain shrinks from the tail, so the hit is
+        // now 2 blocks — a resume onto this prefix recomputes only the rest.
+        assert_eq!(a.evict(2), 2);
+        assert_eq!(a.lookup_prefix(&c), 8);
+        let out = a.admit_shared(2, &c, 17).unwrap();
+        assert_eq!(out.cached_tokens, 8);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn probe_matches_admit() {
+        let mut a = KvAllocator::new(6, 4);
+        let c = ctx(12);
+        a.admit_shared(1, &c, 13).unwrap();
+        a.publish(1, &c).unwrap();
+        let p = a.probe(&c, 13);
+        assert!(p.fits);
+        let out = a.admit_shared(2, &c, 13).unwrap();
+        assert_eq!(p.cached_tokens, out.cached_tokens);
+        // 6 blocks total: seq1 holds 4, seq2 shares 3 + allocates 1 -> 1
+        // free; a 2-block stranger does not fit and probe must agree.
+        let stranger: Vec<u32> = (900..908).collect();
+        assert!(!a.probe(&stranger, 8).fits);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn digests_are_chained_and_block_aligned() {
+        let c = ctx(12);
+        let d4 = block_digests(&c, 4);
+        assert_eq!(d4.len(), 3);
+        // Shared prefix -> shared digest chain, divergence flips the rest.
+        let mut c2 = c.clone();
+        c2[9] ^= 1;
+        let e4 = block_digests(&c2, 4);
+        assert_eq!(d4[..2], e4[..2]);
+        assert_ne!(d4[2], e4[2]);
+        // Trailing partial blocks contribute nothing.
+        assert_eq!(block_digests(&c[..11], 4).len(), 2);
     }
 }

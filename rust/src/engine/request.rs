@@ -73,8 +73,28 @@ impl Sequence {
     /// because decisions are keyed by (seed, seq, decode iteration), and the
     /// decode iteration continues from `output.len()`.
     pub fn resumed(request: Request, output: Vec<u32>, slot: usize, preemptions: u32) -> Sequence {
+        Self::resumed_at(request, output, slot, preemptions, 0)
+    }
+
+    /// Like [`Self::resumed`], but with the first `start` known tokens
+    /// already resident in the KV cache (a prefix-cache hit, DESIGN.md §13):
+    /// prefill begins at the first uncached token. `start` must leave at
+    /// least one known token to feed — the forward pass at the last known
+    /// token produces the logits the next decision samples from, so a hit
+    /// can skip *recompute* but never the decision-bearing step.
+    pub fn resumed_at(
+        request: Request,
+        output: Vec<u32>,
+        slot: usize,
+        preemptions: u32,
+        start: usize,
+    ) -> Sequence {
         assert!(!request.prompt.is_empty(), "empty prompt");
-        Sequence { request, output, position: 0, phase: Phase::Prefill, slot, preemptions }
+        assert!(
+            start < request.prompt.len() + output.len(),
+            "cached prefix must leave at least one known token to feed"
+        );
+        Sequence { request, output, position: start, phase: Phase::Prefill, slot, preemptions }
     }
 
     /// The token to feed at the current position.
@@ -219,6 +239,27 @@ mod tests {
         assert!(!s.commit_token(42));
         assert_eq!(s.output, vec![40, 41, 42]);
         assert_eq!(s.phase, Phase::Decode);
+    }
+
+    #[test]
+    fn resumed_at_starts_at_first_uncached_token() {
+        // 6-token prompt, first 4 cached (prefix-cache hit): feed positions
+        // 4 and 5 only, with the decision at the last known token as usual.
+        let mut s = Sequence::resumed_at(req(6, 4), Vec::new(), 0, 0, 4);
+        assert_eq!(s.position, 4);
+        assert_eq!(s.input_token(), 4);
+        assert_eq!(s.remaining_known(), 2);
+        assert!(!s.needs_decision());
+        s.advance();
+        assert!(s.needs_decision());
+        assert!(!s.commit_token(9));
+        assert_eq!(s.output, vec![9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one known token")]
+    fn resumed_at_rejects_fully_cached_context() {
+        let _ = Sequence::resumed_at(req(4, 4), Vec::new(), 0, 0, 4);
     }
 
     #[test]

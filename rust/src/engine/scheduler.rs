@@ -55,6 +55,14 @@ pub struct SchedulerConfig {
     /// Additive admission-priority bonus for preempted entries, so resumed
     /// work (which already holds tokens) goes first.
     pub resume_boost: f64,
+    /// Prefix-cache-aware admission (DESIGN.md §13): publish finished
+    /// prompt blocks into the allocator's radix index, share the longest
+    /// cached prefix on admission, and start chunked prefill at the first
+    /// uncached token. Preemption-resume takes the same path (recompute
+    /// only the tail). Requires a data plane that can restore cached
+    /// prefixes into a slot, so the engine gates this on the runtime's
+    /// capability; off by default.
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -65,6 +73,7 @@ impl Default for SchedulerConfig {
             preemption: true,
             slo_ttft_s: 1.0,
             resume_boost: 1e9,
+            prefix_cache: false,
         }
     }
 }
@@ -139,6 +148,14 @@ impl WaitingEntry {
     fn known_tokens(&self) -> usize {
         self.req.prompt.len() + self.resumed_output.len()
     }
+
+    /// The full known context (`prompt ⧺ resumed_output`) — the token
+    /// stream a prefix-cache lookup matches against on admission.
+    fn known_ctx(&self) -> Vec<u32> {
+        let mut ctx = self.req.prompt.clone();
+        ctx.extend_from_slice(&self.resumed_output);
+        ctx
+    }
 }
 
 /// Scheduler state.
@@ -153,6 +170,11 @@ pub struct Scheduler {
     /// Chunk planned per slot by the last `plan()` (consumed by `advance`).
     last_chunks: Vec<usize>,
     preemption_count: u64,
+    /// Prefill tokens actually planned for forward passes (chunk tokens of
+    /// prefilling slots; decode steps excluded).
+    prefill_computed: u64,
+    /// Known tokens skipped at admission via cached prefixes (§13).
+    prefill_skipped: u64,
 }
 
 impl Scheduler {
@@ -177,6 +199,8 @@ impl Scheduler {
             finished: Vec::new(),
             last_chunks: vec![0; num_slots],
             preemption_count: 0,
+            prefill_computed: 0,
+            prefill_skipped: 0,
         }
     }
 
@@ -216,6 +240,16 @@ impl Scheduler {
     /// Total KV-pressure evictions so far.
     pub fn preemption_count(&self) -> u64 {
         self.preemption_count
+    }
+
+    /// Prefill tokens planned for forward passes so far (decode excluded).
+    pub fn prefill_computed_tokens(&self) -> u64 {
+        self.prefill_computed
+    }
+
+    /// Known tokens skipped at admission via cached prefixes so far.
+    pub fn prefill_skipped_tokens(&self) -> u64 {
+        self.prefill_skipped
     }
 
     /// Admission priority: waiting-time boost against the TTFT SLO, plus a
@@ -265,7 +299,18 @@ impl Scheduler {
             // closed-loop case where every score is 0) keep queue order.
             let mut best: Option<(usize, f64)> = None;
             for (i, e) in self.waiting.iter().enumerate() {
-                if e.req.arrival > now || !self.kv.can_admit(e.known_tokens() + 1) {
+                if e.req.arrival > now {
+                    continue;
+                }
+                let fits = if self.cfg.prefix_cache {
+                    // Prefix-aware admission control: cached blocks are
+                    // shared, not reallocated, so a hit needs fewer fresh
+                    // blocks than `can_admit` would demand.
+                    self.kv.probe(&e.known_ctx(), e.known_tokens() + 1).fits
+                } else {
+                    self.kv.can_admit(e.known_tokens() + 1)
+                };
+                if !fits {
                     continue;
                 }
                 let score = self.admission_score(e, now);
@@ -276,12 +321,22 @@ impl Scheduler {
             let Some((i, _)) = best else { break };
             let e = self.waiting.remove(i).unwrap();
             debug_assert!(e.known_tokens() < self.max_seq_len, "sequence exceeds max_seq");
-            self.kv
-                .admit(e.req.id, e.known_tokens() + 1)
-                .expect("can_admit checked");
+            let start = if self.cfg.prefix_cache {
+                let outcome = self
+                    .kv
+                    .admit_shared(e.req.id, &e.known_ctx(), e.known_tokens() + 1)
+                    .expect("probe checked");
+                self.prefill_skipped += outcome.cached_tokens as u64;
+                outcome.cached_tokens
+            } else {
+                self.kv
+                    .admit(e.req.id, e.known_tokens() + 1)
+                    .expect("can_admit checked");
+                0
+            };
             admitted.push(e.req.id);
             self.slots[slot] =
-                Some(Sequence::resumed(e.req, e.resumed_output, slot, e.preemptions));
+                Some(Sequence::resumed_at(e.req, e.resumed_output, slot, e.preemptions, start));
         }
 
         // Chunk allocation: decode slots always advance one token; prefill
@@ -321,6 +376,7 @@ impl Scheduler {
                 .min(budget);
             chunks[s] = chunk;
             budget -= chunk;
+            self.prefill_computed += chunk as u64;
         }
 
         let mut plan = SchedulingOutput { iter: self.iter, slots: Vec::new(), admitted };
@@ -370,6 +426,18 @@ impl Scheduler {
             seq.advance_by(pending - 1);
             self.last_chunks[slot] = 1;
         }
+        // First decision of a residency: every known token (prompt plus any
+        // replayed output) is now materialized in the KV cache — publish its
+        // full blocks into the radix index before the phase flips to Decode,
+        // so concurrent admissions of shared-prefix requests hit.
+        if self.cfg.prefix_cache {
+            let seq = self.slots[slot].as_ref().unwrap();
+            if seq.phase == Phase::Prefill {
+                let id = seq.request.id;
+                let ctx = Self::ctx_prefix(seq, seq.kv_len());
+                self.kv.publish(id, &ctx).expect("publish admitted seq");
+            }
+        }
         let seq = self.slots[slot].as_mut().unwrap();
         let finished = seq.commit_token(token);
         // the sequence also hits the cache ceiling when the next position
@@ -380,6 +448,13 @@ impl Scheduler {
                 seq.phase = Phase::Finished;
             }
             let id = seq.request.id;
+            if self.cfg.prefix_cache {
+                // Publish the full materialized history before releasing, so
+                // the next conversation turn (whose prompt extends this one)
+                // reuses the whole residency instead of just the prompt.
+                let ctx = Self::ctx_prefix(seq, seq.kv_len());
+                self.kv.publish(id, &ctx).expect("publish admitted seq");
+            }
             self.kv.release(id).expect("release admitted seq");
             let seq = self.slots[slot].take().unwrap();
             self.finished.push(seq);
@@ -506,11 +581,28 @@ impl Scheduler {
             .map(|(s, _)| s)
     }
 
+    /// The first `len` known tokens of a sequence (`prompt ⧺ output`
+    /// prefix) — what prefix-cache publishes match against.
+    fn ctx_prefix(seq: &Sequence, len: usize) -> Vec<u32> {
+        let mut ctx = seq.request.prompt.clone();
+        ctx.extend_from_slice(&seq.output);
+        ctx.truncate(len);
+        ctx
+    }
+
     /// Evict a running sequence: release its KV blocks and re-queue it at
     /// the front of the waiting queue for recompute-on-resume.
     fn preempt(&mut self, slot: usize) -> u64 {
         let seq = self.slots[slot].take().expect("preempt empty slot");
         let id = seq.request.id;
+        if self.cfg.prefix_cache {
+            // Keep the victim's already-computed blocks discoverable: only
+            // tokens at positions `0..position` are certainly materialized
+            // (its planned chunk may still be in flight). On resume the
+            // admission lookup finds them and recomputes only the tail.
+            let ctx = Self::ctx_prefix(&seq, seq.position);
+            self.kv.publish(id, &ctx).expect("publish admitted seq");
+        }
         self.kv.release(id).expect("release admitted seq");
         self.preemption_count += 1;
         self.last_chunks[slot] = 0;
@@ -1175,6 +1267,57 @@ mod tests {
         assert_eq!(s.next_arrival(), Some(2.5));
         let _ = s.plan(3.0); // admits request 1
         assert_eq!(s.next_arrival(), Some(4.0));
+    }
+
+    // ---- prefix-cache-aware admission (§13) ----
+
+    #[test]
+    fn prefix_cache_shares_published_blocks_on_admission() {
+        let cfg = SchedulerConfig { prefix_cache: true, ..SchedulerConfig::default() };
+        let mut s = Scheduler::with_config(1, KvAllocator::new(100, 4), 64, cfg);
+        s.submit(req(0, 8, 1));
+        let (done, _) = drain(&mut s, 7, 50);
+        assert_eq!(done, 1);
+        assert!(s.kv.indexed_blocks() >= 2, "prompt blocks published");
+        // A follow-up whose prompt extends the first one (the conversation
+        // pattern) shares the cached head and prefills only the tail.
+        s.submit(req(1, 12, 1));
+        let plan = s.plan(0.0);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(
+            s.slot(0).unwrap().position,
+            8,
+            "prefill starts at the first uncached token"
+        );
+        assert_eq!(s.prefill_skipped_tokens(), 8);
+        let (done, iters) = drain(&mut s, 7, 50);
+        assert_eq!(done, 1);
+        assert_eq!(iters, 4, "only the uncached tail is fed");
+        s.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempted_sequence_resumes_onto_cached_prefix() {
+        // Same churn as `preempted_sequence_resumes_and_finishes`, but with
+        // the prefix cache on: victims publish their materialized blocks on
+        // eviction, so resumes recompute only the tail — and the token
+        // streams must come out identical either way.
+        let cfg = SchedulerConfig { prefix_cache: true, ..SchedulerConfig::default() };
+        let mut s = Scheduler::with_config(3, KvAllocator::new(6, 4), 64, cfg);
+        for i in 0..3 {
+            s.submit(req(i, 4, 12));
+        }
+        let (done, _) = drain(&mut s, 9, 2_000);
+        assert_eq!(done, 3);
+        assert!(s.preemption_count() > 0, "tight cache must preempt");
+        assert!(s.prefill_skipped_tokens() > 0, "resume must hit the cache");
+        s.kv.check_invariants().unwrap();
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 3);
+        for f in fin {
+            assert_eq!(f.output.len(), 12, "seq {}", f.request.id);
+            assert!(f.output.iter().all(|&t| t == 9));
+        }
     }
 
     #[test]

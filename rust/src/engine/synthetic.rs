@@ -115,6 +115,23 @@ impl DataPlane for SyntheticRuntime {
     fn reset_kv_slot(&mut self, slot: usize) {
         self.kv[slot].clear();
     }
+
+    fn supports_prefix_restore(&self) -> bool {
+        true
+    }
+
+    /// Prefix-cache restore (DESIGN.md §13): the synthetic KV state *is*
+    /// the fed-token stream, so installing the cached tokens at positions
+    /// `0..tokens.len()` reproduces bit-exactly the state `step` would
+    /// have built — every later logits row hashes the same prefix.
+    fn restore_prefix(&mut self, slot: usize, tokens: &[u32]) -> bool {
+        assert!(tokens.len() <= self.max_seq, "restored prefix past max_seq");
+        if self.kv[slot].len() < tokens.len() {
+            self.kv[slot].resize(tokens.len(), 0);
+        }
+        self.kv[slot][..tokens.len()].copy_from_slice(tokens);
+        true
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +166,21 @@ mod tests {
         rt.step(&[3], &[0], &[1.0]).unwrap();
         let replay = rt.step(&[9], &[1], &[1.0]).unwrap();
         assert_eq!(orig.logits, replay.logits);
+    }
+
+    #[test]
+    fn restore_prefix_matches_fed_state_bit_exactly() {
+        // Feeding [3, 9] then stepping at position 2 must equal restoring
+        // [3, 9] as a cached prefix and stepping at position 2 — the
+        // determinism contract a prefix-cache hit relies on.
+        let mut fed = SyntheticRuntime::new(1, 64, 32, 7);
+        fed.step(&[3], &[0], &[1.0]).unwrap();
+        fed.step(&[9], &[1], &[1.0]).unwrap();
+        let want = fed.step(&[5], &[2], &[1.0]).unwrap();
+        let mut restored = SyntheticRuntime::new(1, 64, 32, 7);
+        assert!(restored.restore_prefix(0, &[3, 9]));
+        let got = restored.step(&[5], &[2], &[1.0]).unwrap();
+        assert_eq!(want.logits, got.logits);
     }
 
     #[test]

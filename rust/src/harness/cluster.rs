@@ -285,8 +285,8 @@ mod tests {
             "routing must never change tokens"
         );
         let rows = r.json.get("measured").as_arr().unwrap();
-        // replicas {1,2,4} × 4 policies × 2 traffic shapes
-        assert_eq!(rows.len(), 3 * 4 * 2);
+        // replicas {1,2,4} × 5 policies × 2 traffic shapes
+        assert_eq!(rows.len(), 3 * 5 * 2);
         for row in rows {
             assert!(row.get("throughput").as_f64().unwrap() > 0.0);
             assert!(row.get("tpot_p99").as_f64().unwrap() >= 0.0);

@@ -10,6 +10,7 @@ pub mod holdout;
 pub mod measure;
 pub mod micro;
 pub mod overlap;
+pub mod prefixcache;
 
 use crate::util::json::Json;
 use std::path::Path;
@@ -61,11 +62,13 @@ impl Effort {
 /// executor; `cluster`: data-parallel replicas × routing policy × traffic
 /// behind the decision-plane-aware router; `chaos`: injected sampler /
 /// replica / lock faults vs the recovery hard bar — bit-identical streams
-/// under every fault plan).
+/// under every fault plan; `prefixcache`: radix KV reuse over conversation
+/// trees — prefill-token reduction and TTFT with reuse on vs off, digests
+/// bit-identical throughout).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "amdahl", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
     "fig9", "table3", "fig10", "fig11", "fig12", "fig13", "burst", "specdec",
-    "overlap", "cluster", "chaos",
+    "overlap", "cluster", "chaos", "prefixcache",
 ];
 
 /// Run one experiment by id.
@@ -91,6 +94,7 @@ pub fn run_experiment(id: &str, effort: Effort) -> crate::Result<Report> {
         "overlap" => overlap::overlap(effort),
         "cluster" => cluster::cluster(effort),
         "chaos" => chaos::chaos(effort),
+        "prefixcache" => prefixcache::prefixcache(effort),
         other => anyhow::bail!("unknown experiment {other}"),
     })
 }

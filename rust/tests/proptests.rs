@@ -514,7 +514,7 @@ fn prop_routed_streams_equal_single_replica() {
         let plane_seed = rng.next_u64();
         let baseline = synthetic_engine_streams(&reqs, vocab, plane_seed, 1, false, 1, 0);
         assert_eq!(baseline.len(), n_req, "all requests finish");
-        let policy = RoutePolicy::ALL[rng.next_below(4) as usize];
+        let policy = RoutePolicy::ALL[rng.next_below(RoutePolicy::ALL.len() as u64) as usize];
         let replicas = 1 + rng.next_below(4) as usize;
         let m = 1 + rng.next_below(3) as usize;
         let spec_k = rng.next_below(3) as usize;
@@ -592,7 +592,7 @@ fn prop_streams_identical_under_injected_faults() {
         }
         let mut ccfg = ClusterConfig::default();
         ccfg.replicas = replicas;
-        ccfg.policy = RoutePolicy::ALL[rng.next_below(4) as usize];
+        ccfg.policy = RoutePolicy::ALL[rng.next_below(RoutePolicy::ALL.len() as u64) as usize];
         if replicas >= 2 && rng.next_f64() < 0.6 {
             ccfg.faults.push(
                 1 + rng.next_below(n_req as u64),
@@ -709,6 +709,97 @@ fn prop_kv_allocator_conserves_blocks() {
             alloc.release(id).unwrap();
         }
         assert_eq!(alloc.free_blocks(), blocks);
+    });
+}
+
+#[test]
+fn prop_kv_prefix_sharing_interleavings_hold_invariants() {
+    // Random admit_shared / grow / publish / release / evict / clear_index
+    // interleavings over a pool of shared stems, so radix hits, COW forks,
+    // LRU eviction, and refcounted sharing all fire mid-sweep. After every
+    // op the allocator must account for each block exactly once (no leaks,
+    // no double-frees, no aliasing), and draining everything must return
+    // the pool to fully free.
+    props("kv prefix interleavings", 60, |rng| {
+        let bt = 1 + rng.next_below(8) as usize;
+        let blocks = 8 + rng.next_below(56) as usize;
+        let mut alloc = KvAllocator::new(blocks, bt);
+        let stems: Vec<Vec<u32>> = (0..3u32)
+            .map(|s| {
+                let len = bt * (1 + rng.next_below(4) as usize);
+                (0..len as u32).map(|i| i * 31 + s * 1000 + 7).collect()
+            })
+            .collect();
+        // (seq id, known context, admitted capacity)
+        let mut live: Vec<(u64, Vec<u32>, usize)> = Vec::new();
+        for op in 0..250u64 {
+            match rng.next_below(6) {
+                0 | 1 => {
+                    let stem = &stems[rng.next_below(stems.len() as u64) as usize];
+                    let tail = 1 + rng.next_below(2 * bt as u64 + 1) as usize;
+                    let mut ctx = stem.clone();
+                    ctx.extend((0..tail as u32).map(|i| op as u32 * 131 + i));
+                    let total = ctx.len() + rng.next_below(bt as u64 + 1) as usize;
+                    let probe = alloc.probe(&ctx, total);
+                    match alloc.admit_shared(op, &ctx, total) {
+                        Ok(out) => {
+                            // probe is read-only and ran just before, so
+                            // the walk (and thus the hit) must agree.
+                            assert_eq!(out.cached_tokens, probe.cached_tokens);
+                            assert!(out.cached_tokens < ctx.len());
+                            live.push((op, ctx, total));
+                        }
+                        Err(simple_serve::engine::kvcache::KvError::OutOfBlocks { .. }) => {
+                            // probe.fits is conservative (it never counts
+                            // the matched path as evictable), so a promised
+                            // fit must never be refused.
+                            assert!(!probe.fits, "probe promised a fit, admit refused");
+                        }
+                        Err(e) => panic!("unexpected admit error: {e}"),
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let extra = 1 + rng.next_below(3 * bt as u64) as usize;
+                        if alloc.grow(live[i].0, live[i].2 + extra).is_ok() {
+                            live[i].2 += extra;
+                        }
+                    }
+                }
+                3 => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let (id, ref ctx, _) = live[i];
+                        let upto = rng.next_below(ctx.len() as u64 + 1) as usize;
+                        alloc.publish(id, &ctx[..upto]).unwrap();
+                    }
+                }
+                4 => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let (id, _, _) = live.swap_remove(i);
+                        alloc.release(id).unwrap();
+                    }
+                }
+                _ => {
+                    if rng.next_f64() < 0.2 {
+                        alloc.clear_index();
+                    } else {
+                        alloc.evict(1 + rng.next_below(4) as usize);
+                    }
+                }
+            }
+            if let Err(e) = alloc.check_invariants() {
+                panic!("invariants broken after op {op}: {e}");
+            }
+        }
+        for (id, _, _) in live {
+            alloc.release(id).unwrap();
+        }
+        alloc.clear_index();
+        alloc.check_invariants().unwrap();
+        assert_eq!(alloc.free_blocks(), blocks, "drained pool must be fully free");
     });
 }
 

@@ -549,6 +549,71 @@ fn shared_pool_steals_across_replica_failover_requeue() {
     assert_eq!(streams, want, "shared-pool failover must not change tokens");
 }
 
+// ---- prefix cache under churn (DESIGN.md §13) ----
+
+/// Drive a conversation-tree trace (shared multi-block system prompts,
+/// each turn extending its parent's history) through the engine on the
+/// synthetic plane. Returns (streams, preemptions, prefix stats).
+fn conv_engine_run(
+    prefix_cache: bool,
+    kv_blocks: usize,
+) -> (HashMap<u64, Vec<u32>>, u64, simple_serve::engine::kvcache::PrefixStats) {
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    cfg.sampler.seed = 41;
+    cfg.kv_blocks = kv_blocks;
+    cfg.idle_poll_us = 10;
+    cfg.prefix_cache = prefix_cache;
+    let runtime = SyntheticRuntime::new(4, VOCAB, MAX_SEQ, 23);
+    let mut engine = Engine::new(runtime, &cfg, None);
+    let kv_free_at_start = engine.kv_free_blocks();
+    let mut ccfg = workload::ConvConfig::tiny(8, VOCAB);
+    ccfg.system_len = 32; // 2 full 16-token blocks shared across convs
+    ccfg.user_min = 4;
+    ccfg.user_max = 8;
+    ccfg.reply_min = 4;
+    ccfg.reply_max = 8;
+    ccfg.max_context = MAX_SEQ - 4;
+    for r in workload::conversations(&ccfg).requests {
+        engine.submit(r);
+    }
+    engine.run_until_idle().expect("engine run");
+    let streams: HashMap<u64, Vec<u32>> = engine
+        .take_finished()
+        .into_iter()
+        .map(|f| (f.request.id, f.output))
+        .collect();
+    let preemptions = engine.preemption_count();
+    let stats = engine.prefix_stats();
+    assert_eq!(engine.queue_depth(), 0, "no sequence left in a slot or queue");
+    assert_eq!(
+        engine.kv_free_blocks(),
+        kv_free_at_start,
+        "KV blocks leaked across the drain (a warm index must stay reclaimable)"
+    );
+    (streams, preemptions, stats)
+}
+
+#[test]
+fn preempted_sequence_resumes_onto_partially_evicted_prefix() {
+    // The satellite churn case: a KV pool tight enough that live sequences
+    // preempt AND cached radix leaves get reclaimed mid-run. A preempted
+    // sequence's resume admission then walks a chain whose tail has been
+    // evicted — it shares what survives and recomputes only the rest.
+    // Ground truth is the reuse-off ample-cache run: eviction depth is a
+    // performance fact, never a token fact.
+    let (want, _, _) = conv_engine_run(false, 0);
+    // 10 blocks for 4 slots × up to 6 blocks/seq: over-committed at full
+    // occupancy, while the largest single sequence (6 blocks) still fits —
+    // churn without livelock.
+    let (got, preemptions, stats) = conv_engine_run(true, 10);
+    assert!(preemptions > 0, "tight cache must preempt");
+    assert!(stats.evictions > 0, "pressure must reclaim cached leaves");
+    assert!(stats.hits > 0, "admissions must actually share cached prefixes");
+    assert_eq!(got, want, "evicted-prefix resume must not change tokens");
+}
+
 #[test]
 fn spec_decode_composes_with_chunked_prefill_and_sampler_churn() {
     // Everything at once: chunked prefill budgets + speculation + tight KV
