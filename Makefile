@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke cache-smoke bench bench-check ci
+.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke cache-smoke trace-smoke bench bench-check ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -41,17 +41,35 @@ chaos-smoke: build
 cache-smoke: build
 	cargo run --release -- figures --experiments prefixcache
 
+# Flight-recorder smoke (DESIGN.md §14): a 2-replica shared-pool chaos
+# serve over a conversation trace with the prefix cache squeezed, traced
+# end to end. The validator checks the capture's schema / timestamp
+# order / B-E balance and demands steal, respawn, COW-fork, evict, and
+# route events — the full decision-plane story in one timeline. The
+# capture loads directly in ui.perfetto.dev or chrome://tracing. Needs
+# artifacts (serve_e2e runs the AOT model).
+trace-smoke: build artifacts
+	cargo run --release --example serve_e2e -- --quick --conv --prefix_cache \
+		--kv_blocks 32 --replicas 2 --shared_samplers \
+		--chaos "sampler:0@4,replica:1@6" \
+		--trace results/trace_smoke.json \
+		--metrics_out results/metrics_smoke.prom
+	python python/trace_check.py results/trace_smoke.json \
+		--require svc.steal,svc.respawn,kv.cow_fork,kv.evict,route.decision
+
 # Decision-plane microbenchmarks (quick profile), including the
 # chaos/recovery_pause group, with machine-readable output — CI uploads
 # BENCH_decision.json so throughput/P95 are tracked across PRs.
 bench: build
 	cargo bench --bench decision_micro -- --quick --json BENCH_decision.json
 
-# Perf-regression gate (DESIGN.md §11–§12): re-run the microbenchmarks
-# into a scratch file and compare the gated groups (cluster shared-pool
-# AND the fused dense-kernel pair) against the committed
-# BENCH_decision.json — a >15% items/s drop fails, and the kernel pair
-# must hold simd ≥ 1.5× scalar on the 32k-vocab group. Must run BEFORE
+# Perf-regression gate (DESIGN.md §11–§12, §14): re-run the
+# microbenchmarks into a scratch file and compare the gated groups
+# (cluster shared-pool, the fused dense-kernel pair, the kvcache
+# hit/miss pair, and the trace on/off pair) against the committed
+# BENCH_decision.json — a >15% items/s drop fails, the kernel pair must
+# hold simd ≥ 1.5× scalar on the 32k-vocab group, and tracing-on must
+# stay within 10% of tracing-off. Must run BEFORE
 # `bench`, which overwrites the committed baseline in place. A
 # provisional (unmeasured) baseline warns and passes the baseline
 # comparison; promote real numbers with `python python/bench_check.py
@@ -61,8 +79,8 @@ bench-check: build
 	python python/bench_check.py BENCH_decision.json BENCH_decision.fresh.json
 
 # What .github/workflows/ci.yml runs: fmt + clippy gates, release build +
-# tests, the cluster and chaos smokes, the bench JSON, python kernel/model
-# tests (hypothesis optional — shim fallback).
+# tests, the cluster/chaos/cache/trace smokes, the bench JSON, python
+# kernel/model tests (hypothesis optional — shim fallback).
 ci:
 	cargo fmt --check
 	cargo clippy --release --all-targets -- -D warnings
@@ -71,6 +89,7 @@ ci:
 	$(MAKE) cluster-smoke
 	$(MAKE) chaos-smoke
 	$(MAKE) cache-smoke
+	$(MAKE) trace-smoke
 	$(MAKE) bench-check
 	$(MAKE) bench
 	python -m pytest python/tests -q

@@ -627,6 +627,51 @@ fn main() {
         }
     }
 
+    // --- trace: flight-recorder overhead on the shared-pool hot path ---
+    // The same submit/collect loop with the flight recorder gated off vs
+    // on (DESIGN.md §14). Off is one relaxed load per emit site and must
+    // be indistinguishable from the tracing-free baseline; `make
+    // bench-check` gates on ≥ 1/1.10 of off (≤ 10% overhead).
+    if want("trace") {
+        use simple_serve::config::SamplerConfig;
+        use simple_serve::decision::service::{ColumnMeta, IterationTask, SamplerService};
+        const B: usize = 8;
+        let svc_cfg = SamplerConfig {
+            num_samplers: 2,
+            variant: DecisionVariant::Offloading,
+            seed: 17,
+            ..Default::default()
+        };
+        let make_columns = |iter: u64| -> Vec<ColumnMeta> {
+            (0..B)
+                .map(|col| ColumnMeta { col, seq_id: col as u64, iteration: iter })
+                .collect()
+        };
+        for (on, name) in [(false, "trace/off"), (true, "trace/on")] {
+            if !want(name) {
+                continue;
+            }
+            simple_serve::trace::set_enabled(on);
+            let svc = SamplerService::start(&svc_cfg, None, 1 << 20);
+            let handles: Vec<_> =
+                (0..B as u64).map(|s| svc.register(s, &[1, 2, 3], &params)).collect();
+            let mut it = 0u64;
+            results.push(run_case(name, &cfg, Some(B as f64), || {
+                let view = gen.view(B, it, 1);
+                let recs = handles.iter().cloned().map(Some).collect();
+                svc.submit(IterationTask::single(it, view, make_columns(it), recs, Vec::new()));
+                let (d, _) = svc.collect(it, B);
+                black_box(d.len());
+                it += 1;
+            }));
+            svc.shutdown();
+            simple_serve::trace::set_enabled(false);
+        }
+        // the rings are bounded (overwrite-oldest), but clear them anyway
+        // so no bench events leak into a later export from this process
+        simple_serve::trace::clear();
+    }
+
     println!("{}", render_table("decision-plane microbenchmarks", &results));
     // Per-column latency of the fused dense kernels (the §12 headline
     // number; items/iter = 1 column, so mean IS the per-column time).

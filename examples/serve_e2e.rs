@@ -61,6 +61,8 @@ const SPECS: &[OptSpec] = &[
     OptSpec::value("idle_poll_us", "idle poll quantum in µs (0 = busy-poll)"),
     OptSpec::flag("overlap", "overlap the decision plane with forwards (DESIGN.md §8)"),
     OptSpec::flag("loopy", "motif-cycled prompts (speculation-friendly trace)"),
+    OptSpec::flag("prefix_cache", "radix KV prefix reuse (DESIGN.md §13)"),
+    OptSpec::flag("conv", "conversation-tree trace (Zipf-shared system prompts; prefix-cache-friendly)"),
     OptSpec::value("replicas", "data-parallel engine replicas (default 1)"),
     OptSpec::value("route", "routing policy: rr|least-outstanding|kv-pressure|session-affinity"),
     OptSpec::flag("shared_samplers", "one shared sampler pool for the whole fleet"),
@@ -71,6 +73,8 @@ const SPECS: &[OptSpec] = &[
         "fault plan: sampler:<id>@<iter>,replica:<id>@<n>,poison@<iter> (legacy; kills worker 0) (DESIGN.md §10)",
     ),
     OptSpec::flag("no_failover", "fail the run on replica death instead of requeueing"),
+    OptSpec::value("trace", "write a Chrome-trace/Perfetto capture here (or SIMPLE_TRACE=)"),
+    OptSpec::value("metrics_out", "write the Prometheus-style metrics exposition here"),
     OptSpec::flag("quick", "small run"),
 ];
 
@@ -85,6 +89,7 @@ fn stream_digest(finished: Vec<simple_serve::engine::Sequence>) -> u64 {
 
 fn main() -> simple_serve::Result<()> {
     let args = Args::parse_env(SPECS, false)?;
+    let trace_out = simple_serve::trace::init_capture(args.get("trace"));
     let quick = args.flag("quick");
     let model = args
         .get("model")
@@ -140,6 +145,7 @@ fn main() -> simple_serve::Result<()> {
         cfg.sampler.num_samplers = samplers;
         cfg.prefill_token_budget = prefill_budget;
         cfg.kv_blocks = kv_blocks;
+        cfg.prefix_cache = args.flag("prefix_cache");
         cfg.spec_k = spec_k;
         cfg.n_microbatches = n_microbatches;
         cfg.overlap = overlap;
@@ -155,12 +161,15 @@ fn main() -> simple_serve::Result<()> {
         let h = (vocab / 5).min(32_768) as u32;
         let hot = (variant == DecisionVariant::Shvs)
             .then(|| HotVocab::new((0..h).collect(), vocab).into_arc());
-        let trace_cfg = if loopy {
-            workload::TraceConfig::loopy(n, vocab, max_seq)
+        let mut trace = if args.flag("conv") {
+            // conversation trees: `n` conversations, each turn extending
+            // its history — the traffic shape prefix caching exists for
+            workload::conversations(&workload::ConvConfig::sharegpt_like(n, vocab, max_seq))
+        } else if loopy {
+            workload::generate(&workload::TraceConfig::loopy(n, vocab, max_seq))
         } else {
-            workload::TraceConfig::sharegpt_like(n, vocab, max_seq)
+            workload::generate(&workload::TraceConfig::sharegpt_like(n, vocab, max_seq))
         };
-        let mut trace = workload::generate(&trace_cfg);
         if let Some(pattern) = traffic {
             pattern.stamp(&mut trace, rate, 11);
         }
@@ -382,9 +391,21 @@ fn main() -> simple_serve::Result<()> {
         ),
         ("baseline", base.to_json()),
         ("simple", simple.to_json()),
+        // process-global decision-plane counters (steals, respawns, COW
+        // forks, evictions, requeues, …) — DESIGN.md §14
+        ("counters", simple_serve::trace::metrics::counters_json()),
     ]);
     let path = simple_serve::harness::default_results_dir().join("serve_e2e.json");
     simple_serve::util::json::write_json_file(&path, &out)?;
     println!("wrote {}", path.display());
+    if let Some(p) = &trace_out {
+        simple_serve::trace::export::write_chrome(p)?;
+        println!("wrote trace capture {}", p.display());
+    }
+    if let Some(p) = args.get("metrics_out") {
+        let path = std::path::PathBuf::from(p);
+        simple_serve::trace::metrics::write_exposition(&path)?;
+        println!("wrote metrics exposition {}", path.display());
+    }
     Ok(())
 }

@@ -1,0 +1,194 @@
+#!/usr/bin/env python3
+"""Validate a flight-recorder capture (DESIGN.md §14).
+
+``make trace-smoke`` runs a 2-replica shared-pool chaos serve through
+``serve_e2e --trace`` and feeds the capture here. Checks:
+
+1. **Schema** — the Chrome Trace Event Format object form: a top-level
+   ``traceEvents`` array whose entries carry ``name``/``ph``/``pid``/
+   ``tid`` (plus ``ts`` for real events, ``dur`` for ``X``), with event
+   names drawn from the declared taxonomy (``rust/src/trace/mod.rs``
+   ``Kind::name`` — keep ``KNOWN_EVENTS`` in sync).
+2. **Monotonic timestamps** — events are globally sorted by ``ts`` (the
+   exporter merges per-thread rings into one ordered stream), and no
+   timestamp is negative.
+3. **Balanced B/E** — per (pid, tid) lane, every ``E`` closes the most
+   recent open ``B`` of the same name (LIFO), and no span stays open at
+   the end. When the capture reports ring overwrites
+   (``otherData.dropped_events`` > 0) a span's ``B`` may have been
+   dropped while its ``E`` survived, so unmatched events are tolerated
+   *only* in that case.
+4. **Required events** — every event name in ``--require`` appears at
+   least once (e.g. the chaos smoke demands steal/respawn/COW-fork/
+   evict/route coverage).
+
+Exit 0 on a valid capture, 1 otherwise, printing every violation (capped
+per category). Stdlib only — no third-party imports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# The declared taxonomy — mirrors Kind::name in rust/src/trace/mod.rs.
+KNOWN_EVENTS = {
+    "sched.admit", "sched.resume", "sched.preempt", "sched.chunk",
+    "engine.plan", "engine.forward", "engine.commit", "engine.collect_wait",
+    "svc.submit", "svc.decide", "svc.collect", "svc.steal",
+    "svc.claim_release", "svc.respawn",
+    "slot.recover",
+    "kv.hit", "kv.miss", "kv.cow_fork", "kv.evict",
+    "route.decision", "route.requeue",
+    "log",
+}
+# Metadata records Perfetto uses for lane names, not timeline events.
+METADATA_EVENTS = {"process_name", "thread_name"}
+PHASES = {"B", "E", "X", "i", "M"}
+MAX_REPORTED = 10  # per category; the summary still counts everything
+
+
+def is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check(path: str, require: list[str]) -> int:
+    with open(path, encoding="utf-8") as f:
+        capture = json.load(f)
+
+    errors: dict[str, list[str]] = {}
+
+    def err(category: str, msg: str) -> None:
+        errors.setdefault(category, []).append(msg)
+
+    if not isinstance(capture, dict) or not isinstance(
+        capture.get("traceEvents"), list
+    ):
+        print(f"{path}: not a Chrome-trace object (missing traceEvents array)")
+        return 1
+    events = capture["traceEvents"]
+    dropped = 0
+    other = capture.get("otherData")
+    if isinstance(other, dict) and is_num(other.get("dropped_events")):
+        dropped = int(other["dropped_events"])
+
+    # --- schema ---
+    timeline = []  # non-metadata events, in file order
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            err("schema", f"{where}: not an object")
+            continue
+        name, ph = ev.get("name"), ev.get("ph")
+        if not isinstance(name, str) or ph not in PHASES:
+            err("schema", f"{where}: bad name/ph: {name!r}/{ph!r}")
+            continue
+        if not is_num(ev.get("pid")) or not is_num(ev.get("tid")):
+            err("schema", f"{where} ({name}): pid/tid must be numbers")
+            continue
+        if ph == "M":
+            if name not in METADATA_EVENTS:
+                err("schema", f"{where}: unknown metadata record {name!r}")
+            continue
+        if name not in KNOWN_EVENTS:
+            err("schema", f"{where}: undeclared event name {name!r}")
+            continue
+        if not is_num(ev.get("ts")) or ev["ts"] < 0:
+            err("schema", f"{where} ({name}): ts must be a non-negative number")
+            continue
+        if ph == "X" and (not is_num(ev.get("dur")) or ev["dur"] < 0):
+            err("schema", f"{where} ({name}): X event needs a non-negative dur")
+            continue
+        timeline.append(ev)
+
+    # --- monotonic timestamps (global: the exporter sorts the merge) ---
+    last_ts = 0.0
+    for ev in timeline:
+        if ev["ts"] < last_ts:
+            err(
+                "monotonic",
+                f"{ev['name']} at ts={ev['ts']} after ts={last_ts} "
+                f"(pid {ev['pid']}, tid {ev['tid']})",
+            )
+        last_ts = max(last_ts, ev["ts"])
+
+    # --- balanced B/E per lane, LIFO by name ---
+    stacks: dict[tuple, list[str]] = {}
+    unmatched = 0
+    for ev in timeline:
+        lane = (ev["pid"], ev["tid"])
+        stack = stacks.setdefault(lane, [])
+        if ev["ph"] == "B":
+            stack.append(ev["name"])
+        elif ev["ph"] == "E":
+            if stack and stack[-1] == ev["name"]:
+                stack.pop()
+            elif dropped > 0:
+                # the ring overwrote this E's B (or an ancestor's) — with
+                # overwrites on record, tolerate rather than flag
+                unmatched += 1
+            elif not stack:
+                err("balance", f"lane {lane}: E {ev['name']!r} with no open B")
+            else:
+                err(
+                    "balance",
+                    f"lane {lane}: E {ev['name']!r} closes open B {stack[-1]!r} "
+                    "(not LIFO)",
+                )
+    for lane, stack in stacks.items():
+        if stack and dropped == 0:
+            err("balance", f"lane {lane}: {len(stack)} span(s) left open: {stack}")
+
+    # --- required event coverage ---
+    seen = {ev["name"] for ev in timeline}
+    for name in require:
+        if name not in KNOWN_EVENTS:
+            err("require", f"--require {name!r} is not a declared event name")
+        elif name not in seen:
+            err("require", f"required event {name!r} absent from the capture")
+
+    counts = {}
+    for ev in timeline:
+        counts[ev["name"]] = counts.get(ev["name"], 0) + 1
+    print(
+        f"{path}: {len(timeline)} events across {len(stacks)} lane(s), "
+        f"{len(counts)} distinct kind(s), {dropped} dropped to ring overwrite"
+    )
+    for name in sorted(counts):
+        print(f"  {name}: {counts[name]}")
+    if unmatched and dropped > 0:
+        print(
+            f"  note: {unmatched} unmatched E event(s) tolerated "
+            "(ring overwrote their B)"
+        )
+
+    if errors:
+        total = sum(len(v) for v in errors.values())
+        print(f"trace-check FAILED: {total} violation(s)")
+        for category, msgs in errors.items():
+            for msg in msgs[:MAX_REPORTED]:
+                print(f"  [{category}] {msg}")
+            if len(msgs) > MAX_REPORTED:
+                print(f"  [{category}] ... and {len(msgs) - MAX_REPORTED} more")
+        return 1
+    print("trace-check passed")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("capture", help="Chrome-trace JSON written by --trace")
+    ap.add_argument(
+        "--require",
+        default="",
+        help="comma-separated event names that must appear (e.g. "
+        "svc.steal,svc.respawn,kv.cow_fork,kv.evict,route.decision)",
+    )
+    args = ap.parse_args(argv)
+    require = [n.strip() for n in args.require.split(",") if n.strip()]
+    return check(args.capture, require)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

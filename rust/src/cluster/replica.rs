@@ -167,6 +167,8 @@ impl Replica {
         let handle = std::thread::Builder::new()
             .name(format!("replica-{id}"))
             .spawn(move || {
+                // Trace lane: pid r+1 = replica r, engine-thread role.
+                crate::trace::register_thread(id as u32 + 1, crate::trace::TID_ENGINE);
                 let idle_poll_us = cfg.idle_poll_us;
                 let plane = make_plane()?;
                 let engine = match pool {

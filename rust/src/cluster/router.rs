@@ -42,6 +42,7 @@ use crate::decision::HotVocab;
 use crate::engine::{DataPlane, Request, Sequence};
 use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{Recorder, ServingSummary};
+use crate::trace;
 use crate::util::argparse::Args;
 use crate::engine::kvcache;
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -362,7 +363,10 @@ impl Cluster {
                 "the prefill/decode split needs at least one decode replica"
             );
         }
-        let t0 = Instant::now();
+        // The router thread is lane (pid 0, main), and the fleet-wide t0 IS
+        // the shared trace epoch — every replica and the pool adopt it.
+        trace::register_thread(0, trace::TID_MAIN);
+        let t0 = trace::epoch();
         let pool = ccfg.shared_samplers.then(|| {
             Arc::new(SamplerService::start_with_epoch(
                 &ecfg.sampler,
@@ -495,6 +499,25 @@ impl Cluster {
         output: Vec<u32>,
     ) -> crate::Result<()> {
         let i = self.pick(&req, role)?;
+        if trace::on() {
+            // The chosen replica's standing under the active policy's
+            // scoring signal (f64 bits in `b`; decoded by the exporter).
+            let score = match self.cfg.policy {
+                RoutePolicy::RoundRobin => 0.0,
+                RoutePolicy::LeastOutstanding => self.replicas[i].outstanding() as f64,
+                RoutePolicy::KvPressure => self.replicas[i]
+                    .kv_free_blocks()
+                    .saturating_sub(self.replicas[i].outstanding())
+                    as f64,
+                RoutePolicy::SessionAffinity => {
+                    prefix_hash(&req.prompt, self.block_tokens) as f64
+                }
+                RoutePolicy::PrefixCache => self.prefix_index[i]
+                    .match_len(&kvcache::block_digests(&req.prompt, self.block_tokens))
+                    as f64,
+            };
+            trace::instant(trace::Kind::RouteDecision, i as u64, score.to_bits());
+        }
         if self.cfg.policy == RoutePolicy::PrefixCache {
             // The replica will materialize (or already holds) these blocks;
             // future prompts sharing the prefix should land with them.
@@ -626,9 +649,12 @@ impl Cluster {
             for (id, e) in orphans {
                 self.routed.remove(&id);
                 self.requeued += 1;
+                trace::metrics::inc(&trace::metrics::counters().router_requeues);
+                trace::instant(trace::Kind::RouteRequeue, id, i as u64);
                 self.dispatch(e.role, e.req, e.output)?;
             }
             self.failovers += 1;
+            trace::metrics::inc(&trace::metrics::counters().failovers);
         }
         self.failover_s += t0.elapsed().as_secs_f64();
         Ok(())

@@ -56,6 +56,7 @@ use crate::config::DecisionVariant;
 use crate::config::SamplerConfig;
 use crate::ringbuf::mpmc;
 use crate::tensor::ShardedLogits;
+use crate::trace;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Mutex};
@@ -304,6 +305,9 @@ const STEAL_DESPERATION: u32 = 4096;
 
 impl SamplerWorker {
     fn run(mut self) -> SamplerStats {
+        // Sampler workers live on the pool lane (pid 0) — a shared pool's
+        // threads serve every replica, so they are not any replica's.
+        trace::register_thread(0, trace::tid_sampler(self.id));
         let mut stats = SamplerStats::default();
         let mut idle = 0u32;
         loop {
@@ -327,6 +331,8 @@ impl SamplerWorker {
                     if let Ok(msg) = self.rings[v].try_pop() {
                         idle = 0;
                         stole = true;
+                        trace::metrics::inc(&trace::metrics::counters().steals);
+                        trace::instant(trace::Kind::SvcSteal, self.id as u64, v as u64);
                         self.process(msg, &mut stats);
                         break;
                     }
@@ -420,6 +426,16 @@ impl SamplerWorker {
         let end_s = self.epoch.elapsed().as_secs_f64();
         let busy = end_s - start_s;
         stats.busy_s += busy;
+        trace::metrics::DECIDE_LATENCY.observe_ns((busy.max(0.0) * 1e9) as u64);
+        // a = microbatch: the trace-derived OverlapReport replays these X
+        // events through the same Recorder arithmetic the engine uses live.
+        trace::complete_s(
+            trace::Kind::SvcDecide,
+            start_s,
+            end_s,
+            task.mb as u64,
+            decisions.len() as u64,
+        );
         DecisionBatch {
             iter: task.iter,
             mb: task.mb,
@@ -468,10 +484,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 impl SamplerService {
-    /// Spawn `cfg.num_samplers` workers with a fresh time epoch. `hot` is
-    /// required for the SHVS variant.
+    /// Spawn `cfg.num_samplers` workers clocked against the shared trace
+    /// epoch ([`crate::trace::epoch`]), so busy intervals, trace spans, and
+    /// engine stage timestamps are directly comparable. `hot` is required
+    /// for the SHVS variant.
     pub fn start(cfg: &SamplerConfig, hot: Option<Arc<HotVocab>>, max_seq_len: usize) -> Self {
-        Self::start_with_epoch(cfg, hot, max_seq_len, Instant::now())
+        Self::start_with_epoch(cfg, hot, max_seq_len, trace::epoch())
     }
 
     /// Spawn workers that timestamp their busy intervals relative to
@@ -598,6 +616,7 @@ impl SamplerService {
             "task {}: recs must align with columns",
             task.iter
         );
+        trace::instant(trace::Kind::SvcSubmit, task.iter, task.columns.len() as u64);
         let task = Arc::new(task);
         let slot = self.slots.publish(task.clone());
         for shard in 0..self.m {
@@ -683,6 +702,8 @@ impl SamplerService {
             eprintln!("[sampler-service] {msg}; respawning worker {id}");
             // The dead thread's incarnation retires here; its claims are
             // released by exact CAS (a live claim can never match it).
+            trace::metrics::inc(&trace::metrics::counters().sampler_respawns);
+            trace::instant(trace::Kind::SvcRespawn, *id as u64, 0);
             let old_inc = self.incarnations[*id].fetch_add(1, Ordering::AcqRel);
             for r in self.slots.sweep_dead_claims(claim_pack(*id, old_inc)) {
                 self.rings[r.shard].push(ShardMsg {
@@ -745,6 +766,7 @@ impl SamplerService {
     /// their panics as errors instead of deadlocking when recovery is off
     /// or crash-looping).
     pub fn collect_checked(&self, iter: u64) -> crate::Result<Collected> {
+        let _span = trace::span(trace::Kind::SvcCollect, iter, 0);
         let mut spins = 0u32;
         loop {
             self.check_workers()?;

@@ -32,6 +32,7 @@
 //! reclamation never waits on user code.
 
 use super::service::{DecisionBatch, IterationTask};
+use crate::trace;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -313,16 +314,18 @@ impl TaskSlots {
                 if claim.load(Ordering::Acquire) == packed_dead {
                     // Release the dead claim; a live claim never matches a
                     // dead incarnation, so this cannot steal a live cell.
-                    let _ = claim.compare_exchange(
-                        packed_dead,
-                        0,
-                        Ordering::AcqRel,
-                        Ordering::Acquire,
-                    );
+                    if claim
+                        .compare_exchange(packed_dead, 0, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        trace::metrics::inc(&trace::metrics::counters().claim_releases);
+                        trace::instant(trace::Kind::SvcClaimRelease, task_id, shard as u64);
+                    }
                 }
                 if claim.load(Ordering::Acquire) == 0 {
                     // Pinned + PUBLISHED: the task field is stable.
                     let task = unsafe { (*slot.task.get()).as_ref().unwrap().clone() };
+                    trace::instant(trace::Kind::SlotRecover, task_id, shard as u64);
                     out.push(Resubmit { task_id, slot: idx, shard, task });
                 }
             }
@@ -468,7 +471,13 @@ mod tests {
         assert!(slots.try_claim(idx, 1, claim_pack(1, 1)));
         slots.publish_cell(idx, 1, mk_batch(7, 1));
         drop(pin);
+        let released_before =
+            trace::metrics::counters().get("claim_releases").unwrap();
         let resub = slots.sweep_dead_claims(claim_pack(0, 1));
+        assert!(
+            trace::metrics::counters().get("claim_releases").unwrap() > released_before,
+            "releasing a dead claim must bump the claim_releases counter"
+        );
         assert_eq!(resub.len(), 1);
         assert_eq!((resub[0].slot, resub[0].shard, resub[0].task_id), (idx, 0, 7));
         // The claim is free again: the respawned incarnation can take it.

@@ -55,6 +55,7 @@ use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{OverlapReport, Recorder};
 use crate::runtime::{ModelRuntime, StepOutput};
 use crate::tensor::{shard_row_major, ShardedLogits, Tensor2};
+use crate::trace;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -200,7 +201,9 @@ impl<D: DataPlane> Engine<D> {
     /// plane; `cfg.parallel.tp` controls the simulated logits sharding;
     /// `cfg.n_microbatches`/`cfg.overlap` configure the pipelined executor.
     pub fn new(runtime: D, cfg: &EngineConfig, hot: Option<Arc<HotVocab>>) -> Self {
-        Self::build(runtime, cfg, hot, Instant::now(), None, 0)
+        // Clock against the shared trace epoch so recorder intervals, trace
+        // spans, and log timestamps all live on one timeline (DESIGN.md §14).
+        Self::build(runtime, cfg, hot, trace::epoch(), None, 0)
     }
 
     /// Like [`Self::new`] but timestamping against a caller-provided epoch,
@@ -460,7 +463,10 @@ impl<D: DataPlane> Engine<D> {
             return Ok(false);
         }
         let now = self.now();
-        let plan = self.scheduler.plan_mb(now, mb, self.n_mb);
+        let plan = {
+            let _sp = trace::span(trace::Kind::EnginePlan, mb as u64, 0);
+            self.scheduler.plan_mb(now, mb, self.n_mb)
+        };
         if plan.slots.is_empty() {
             // Nothing runnable in this microbatch right now (future
             // arrivals, or all slots owned by other microbatches).
@@ -606,6 +612,15 @@ impl<D: DataPlane> Engine<D> {
         }
         let fwd_end = self.now();
         self.recorder.on_stage_gpu(mb, fwd_start, fwd_end);
+        // Same endpoints as the recorder call: the trace-derived overlap
+        // report replays these X events through identical arithmetic.
+        trace::complete_s(
+            trace::Kind::EngineForward,
+            fwd_start,
+            fwd_end,
+            mb as u64,
+            (kmax + 1) as u64,
+        );
 
         // ④⑤ decision plane: one task carries the whole chain. With the
         // service it is submitted asynchronously (reaped later); the
@@ -703,6 +718,7 @@ impl<D: DataPlane> Engine<D> {
             }
             let ep_end = self.now();
             self.recorder.on_stage_gpu(mb, ep_start, ep_end);
+            trace::complete_s(trace::Kind::EngineForward, ep_start, ep_end, mb as u64, 0);
             self.pending[mb].extend(decided);
         }
         Ok(true)
@@ -721,7 +737,17 @@ impl<D: DataPlane> Engine<D> {
         let collected = if block {
             let wait_start = self.now();
             let done = svc.collect_checked(task_id)?;
-            self.recorder.on_decision_exposed(self.now() - wait_start);
+            let wait_end = self.now();
+            self.recorder.on_decision_exposed(wait_end - wait_start);
+            trace::complete_s(
+                trace::Kind::EngineCollectWait,
+                wait_start,
+                wait_end,
+                mb as u64,
+                0,
+            );
+            trace::metrics::COLLECT_WAIT
+                .observe_ns(((wait_end - wait_start).max(0.0) * 1e9) as u64);
             Some(done)
         } else {
             svc.try_collect(task_id)?
@@ -749,6 +775,7 @@ impl<D: DataPlane> Engine<D> {
         if decided.is_empty() {
             return;
         }
+        let _sp = trace::span(trace::Kind::EngineCommit, mb as u64, decided.len() as u64);
         let t_commit = self.now();
         for (slot, seq_id, verdict) in decided {
             // a commit earlier in this loop — or another microbatch's

@@ -255,6 +255,8 @@ impl KvAllocator {
         }
         let (_, id) = best?;
         self.stats.evictions += 1;
+        crate::trace::metrics::inc(&crate::trace::metrics::counters().lru_evictions);
+        crate::trace::instant(crate::trace::Kind::KvEvict, id as u64, 0);
         Some(self.remove_node(id))
     }
 
@@ -399,8 +401,17 @@ impl KvAllocator {
         if cached > 0 {
             self.stats.hits += 1;
             self.stats.hit_tokens += cached as u64;
+            crate::trace::metrics::inc(&crate::trace::metrics::counters().prefix_hits);
+            crate::trace::instant(crate::trace::Kind::KvHit, seq, cached as u64);
+        } else if !ctx.is_empty() {
+            crate::trace::metrics::inc(&crate::trace::metrics::counters().prefix_misses);
+            crate::trace::instant(crate::trace::Kind::KvMiss, seq, 0);
         }
         self.stats.cow_forks += cow as u64;
+        if cow {
+            crate::trace::metrics::inc(&crate::trace::metrics::counters().cow_forks);
+            crate::trace::instant(crate::trace::Kind::KvCowFork, seq, 0);
+        }
         Ok(AdmitOutcome { cached_tokens: cached, shared_blocks: shared, cow_fork: cow })
     }
 

@@ -335,6 +335,12 @@ impl Scheduler {
                 0
             };
             admitted.push(e.req.id);
+            let kind = if e.preemptions > 0 {
+                crate::trace::Kind::SchedResume
+            } else {
+                crate::trace::Kind::SchedAdmit
+            };
+            crate::trace::instant(kind, e.req.id, slot as u64);
             self.slots[slot] =
                 Some(Sequence::resumed_at(e.req, e.resumed_output, slot, e.preemptions, start));
         }
@@ -377,6 +383,7 @@ impl Scheduler {
             chunks[s] = chunk;
             budget -= chunk;
             self.prefill_computed += chunk as u64;
+            crate::trace::instant(crate::trace::Kind::SchedChunk, s as u64, chunk as u64);
         }
 
         let mut plan = SchedulingOutput { iter: self.iter, slots: Vec::new(), admitted };
@@ -606,6 +613,7 @@ impl Scheduler {
         self.kv.release(id).expect("release admitted seq");
         self.preemption_count += 1;
         self.last_chunks[slot] = 0;
+        crate::trace::instant(crate::trace::Kind::SchedPreempt, id, slot as u64);
         self.waiting.push_front(WaitingEntry {
             req: seq.request,
             resumed_output: seq.output,

@@ -106,6 +106,12 @@ pub fn chaos(effort: Effort) -> Report {
     let n_req = effort.scale(12, 48) as usize;
     let want = baseline_digest(n_req);
 
+    // Snapshot the process-global decision-plane counters (DESIGN.md §14)
+    // around the sweep: the fault plans must drive the instrumented
+    // recovery paths — steals, sampler respawns, router requeues — not
+    // just produce matching digests.
+    let c0 = crate::trace::metrics::counters().snapshot();
+
     // The sweep: every engine-level and router-level fault domain, alone
     // and combined, across the executor shapes that complicate recovery
     // (speculation, microbatch overlap, shared pools, multiple replicas).
@@ -174,10 +180,24 @@ pub fn chaos(effort: Effort) -> Report {
             ("digest_ok", Json::Bool(ok)),
         ]));
     }
+    let c1 = crate::trace::metrics::counters().snapshot();
+    let counter_deltas: Vec<(&'static str, u64)> = c0
+        .iter()
+        .zip(&c1)
+        .map(|(&(name, before), &(_, after))| (name, after.saturating_sub(before)))
+        .collect();
+    let delta = |key: &str| {
+        counter_deltas.iter().find(|(n, _)| *n == key).map(|(_, v)| *v).unwrap_or(0)
+    };
     let _ = writeln!(
         md,
         "\nall digests equal the fault-free baseline: **{identical}** \
-         (recovery replays state; it never invents or loses tokens)\n"
+         (recovery replays state; it never invents or loses tokens)\n\n\
+         recovery machinery counters across the sweep: {} steals, {} sampler \
+         respawns, {} router requeues\n",
+        delta("steals"),
+        delta("sampler_respawns"),
+        delta("router_requeues"),
     );
 
     // Simulated fault model on a paper deployment.
@@ -239,6 +259,17 @@ pub fn chaos(effort: Effort) -> Report {
         "chaos digest mismatch: an injected fault changed the token \
          streams (recovery must replay, never improvise)"
     );
+    // The counters are the observable face of recovery: a sweep that kills
+    // samplers, workers, and replicas must steal orphaned work, respawn
+    // the dead, and requeue the stranded — zero means the instrumentation
+    // (or the recovery path) silently stopped firing.
+    for key in ["steals", "sampler_respawns", "router_requeues"] {
+        assert!(
+            delta(key) > 0,
+            "chaos sweep left the `{key}` counter at zero — the injected \
+             faults did not exercise the instrumented recovery path"
+        );
+    }
     Report {
         id: "chaos",
         title: "Fault injection: sampler crash-recovery and replica failover".into(),
@@ -246,6 +277,15 @@ pub fn chaos(effort: Effort) -> Report {
         json: Json::obj(vec![
             ("measured", Json::Arr(rows)),
             ("digests_identical", Json::Bool(identical)),
+            (
+                "counters",
+                Json::Obj(
+                    counter_deltas
+                        .iter()
+                        .map(|&(n, v)| (n.to_string(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
             ("simulated", Json::Arr(sim_rows)),
         ]),
     }
@@ -285,5 +325,13 @@ mod tests {
         let sim = r.json.get("simulated").as_arr().unwrap();
         assert_eq!(sim.len(), 2);
         assert!(sim[1].get("requeued").as_f64().unwrap() > 0.0);
+        // the decision-plane counters saw the recovery machinery fire
+        let counters = r.json.get("counters");
+        for key in ["steals", "sampler_respawns", "router_requeues"] {
+            assert!(
+                counters.get(key).as_f64().unwrap() > 0.0,
+                "{key} counter stayed zero across the chaos sweep"
+            );
+        }
     }
 }

@@ -135,6 +135,11 @@ pub fn prefixcache(effort: Effort) -> Report {
     let trace = conv_trace(conversations);
     let n_req = trace.len();
 
+    // Snapshot the process-global decision-plane counters (DESIGN.md §14)
+    // around the experiment: the conversation trace must drive the
+    // instrumented cache paths — hits, misses, COW forks, LRU evictions.
+    let c0 = crate::trace::metrics::counters().snapshot();
+
     // §1: single engine, reuse off (the ground-truth digest) vs on.
     let off = run_engine(&trace, false, 0);
     let on = run_engine(&trace, true, 0);
@@ -230,6 +235,25 @@ pub fn prefixcache(effort: Effort) -> Report {
     );
     identical &= tight_on.digest == off.digest && tight_off.digest == off.digest;
 
+    let c1 = crate::trace::metrics::counters().snapshot();
+    let counter_deltas: Vec<(&'static str, u64)> = c0
+        .iter()
+        .zip(&c1)
+        .map(|(&(name, before), &(_, after))| (name, after.saturating_sub(before)))
+        .collect();
+    let delta = |key: &str| {
+        counter_deltas.iter().find(|(n, _)| *n == key).map(|(_, v)| *v).unwrap_or(0)
+    };
+    let _ = writeln!(
+        md,
+        "cache-path counters across the experiment: {} prefix hits, {} \
+         misses, {} COW forks, {} LRU evictions\n",
+        delta("prefix_hits"),
+        delta("prefix_misses"),
+        delta("cow_forks"),
+        delta("lru_evictions"),
+    );
+
     // The acceptance bars, asserted loudly (`make cache-smoke` runs this).
     assert!(
         identical,
@@ -254,6 +278,16 @@ pub fn prefixcache(effort: Effort) -> Report {
         reuse_by_policy[1] * 100.0,
         reuse_by_policy[0] * 100.0,
     );
+    // The counters are the observable face of the cache: a conversation
+    // trace with reuse on must hit, miss (first turns), fork shared
+    // blocks on write, and — in the tight-pool section — evict.
+    for key in ["prefix_hits", "prefix_misses", "cow_forks", "lru_evictions"] {
+        assert!(
+            delta(key) > 0,
+            "prefixcache experiment left the `{key}` counter at zero — \
+             the trace did not exercise the instrumented cache path"
+        );
+    }
 
     Report {
         id: "prefixcache",
@@ -268,6 +302,15 @@ pub fn prefixcache(effort: Effort) -> Report {
             ("digests_identical", Json::Bool(identical)),
             ("tight_preemptions_on", Json::Num(tight_on.preemptions as f64)),
             ("tight_preemptions_off", Json::Num(tight_off.preemptions as f64)),
+            (
+                "counters",
+                Json::Obj(
+                    counter_deltas
+                        .iter()
+                        .map(|&(n, v)| (n.to_string(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
             ("cluster", Json::Arr(rows)),
         ]),
     }
@@ -287,5 +330,13 @@ mod tests {
         assert!(r.json.get("reduction").as_f64().unwrap() >= 0.30);
         assert_eq!(r.json.get("cluster").as_arr().unwrap().len(), 4);
         assert!(r.json.get("published").as_f64().unwrap() > 0.0);
+        // the decision-plane counters saw the cache machinery fire
+        let counters = r.json.get("counters");
+        for key in ["prefix_hits", "prefix_misses", "cow_forks", "lru_evictions"] {
+            assert!(
+                counters.get(key).as_f64().unwrap() > 0.0,
+                "{key} counter stayed zero across the prefixcache experiment"
+            );
+        }
     }
 }

@@ -59,6 +59,7 @@ pub mod rng;
 pub mod runtime;
 pub mod simulator;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

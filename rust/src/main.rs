@@ -19,6 +19,7 @@ use simple_serve::harness::{self, Effort};
 use simple_serve::runtime::{default_artifacts_dir, Manifest, ModelRuntime};
 use simple_serve::simulator::{simulate, DecisionMode, GpuModel, SimConfig};
 use simple_serve::util::argparse::{render_help, Args, OptSpec};
+use simple_serve::util::json::Json;
 use simple_serve::{config, workload};
 
 const SPECS: &[OptSpec] = &[
@@ -57,6 +58,8 @@ const SPECS: &[OptSpec] = &[
     ),
     OptSpec::value("rate", "mean arrival rate, req/s (serve --traffic; default 100)"),
     OptSpec::value("experiments", "comma-separated figure ids (figures)"),
+    OptSpec::value("trace", "write a Chrome-trace/Perfetto capture here (or SIMPLE_TRACE=)"),
+    OptSpec::value("metrics_out", "write the Prometheus-style metrics exposition here"),
     OptSpec::flag("full", "full effort (paper-scale sweeps)"),
     OptSpec::flag("help", "show help"),
 ];
@@ -92,6 +95,7 @@ fn run() -> simple_serve::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
+    let trace_out = simple_serve::trace::init_capture(args.get("trace"));
     let model = args.get("model").unwrap_or("micro-test").to_string();
     let n: usize = args.get_or("requests", 16)?;
     let mut cfg = EngineConfig::default();
@@ -111,7 +115,8 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
 
     let manifest = Manifest::load(&default_artifacts_dir())?;
     if ccfg.replicas > 1 || ccfg.prefill_replicas > 0 {
-        return serve_cluster(args, &model, n, &cfg, &ccfg, &manifest);
+        serve_cluster(args, &model, n, &cfg, &ccfg, &manifest)?;
+        return finish_observability(args, trace_out);
     }
     let rt = ModelRuntime::load(&manifest, &model)?;
     let vocab = rt.vocab();
@@ -126,7 +131,7 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
         engine.submit(r);
     }
     let summary = engine.run_until_idle()?;
-    println!("{}", summary.to_json().to_string_pretty());
+    println!("{}", with_counters(summary.to_json()).to_string_pretty());
     let ov = engine.overlap_report();
     if ov.decision_busy_s > 0.0 {
         println!(
@@ -160,6 +165,36 @@ fn cmd_serve(args: &Args) -> simple_serve::Result<()> {
             "decision plane: {decisions} decisions, {:.1}% fast path",
             fast as f64 / decisions as f64 * 100.0
         );
+    }
+    finish_observability(args, trace_out)
+}
+
+/// Append the decision-plane counters to a serve summary object.
+fn with_counters(mut j: Json) -> Json {
+    if let Json::Obj(fields) = &mut j {
+        fields.insert(
+            "counters".to_string(),
+            simple_serve::trace::metrics::counters_json(),
+        );
+    }
+    j
+}
+
+/// Flush observability outputs at the end of a serve run: the Perfetto
+/// capture (`--trace` / `SIMPLE_TRACE`) and the Prometheus-style text
+/// exposition (`--metrics_out`).
+fn finish_observability(
+    args: &Args,
+    trace_out: Option<std::path::PathBuf>,
+) -> simple_serve::Result<()> {
+    if let Some(path) = trace_out {
+        simple_serve::trace::export::write_chrome(&path)?;
+        println!("wrote trace capture {}", path.display());
+    }
+    if let Some(p) = args.get("metrics_out") {
+        let path = std::path::PathBuf::from(p);
+        simple_serve::trace::metrics::write_exposition(&path)?;
+        println!("wrote metrics exposition {}", path.display());
     }
     Ok(())
 }
@@ -260,7 +295,7 @@ fn serve_cluster(
     );
     cluster.run(serve_trace(args, n, vocab, max_seq.min(256))?)?;
     let report = cluster.shutdown()?;
-    println!("{}", report.recorder.summary().to_json().to_string_pretty());
+    println!("{}", with_counters(report.recorder.summary().to_json()).to_string_pretty());
     if report.prefill_skipped > 0 {
         println!(
             "prefix cache: {} prefill tokens skipped ({:.0}% reuse)",

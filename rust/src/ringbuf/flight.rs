@@ -1,0 +1,174 @@
+//! Flight-recorder ring: a bounded, overwrite-oldest, single-writer record
+//! ring over plain `u64` words (DESIGN.md §14).
+//!
+//! Unlike [`super::spsc`] and [`super::mpmc`] — which are *backpressuring*
+//! queues (a full ring rejects the push) — a flight recorder must never
+//! stall or grow: when the ring is full the oldest record is silently
+//! overwritten, so the buffer always holds the most recent `capacity`
+//! records. That is exactly the discipline a tracing subsystem wants on a
+//! hot path: writers pay a few relaxed stores and can never block, and a
+//! crash leaves the last-N events intact for post-mortem export.
+//!
+//! Records are fixed-width arrays of `W` words stored as [`AtomicU64`]s, so
+//! a reader racing a writer reads *defined* (if stale) values rather than
+//! UB; the snapshot protocol below then discards every record that could
+//! have been overwritten mid-copy:
+//!
+//! 1. load `head` (Acquire) → `h1`; the publishable range is
+//!    `[h1.saturating_sub(cap), h1)` (records below it are already gone);
+//! 2. copy that range oldest-first;
+//! 3. load `head` again → `h2`; any copied record with sequence number
+//!    `< h2.saturating_sub(cap)` may have been torn by a concurrent
+//!    overwrite — drop it from the front.
+//!
+//! Every record that survives was fully published (the writer's Release
+//! store on `head` happens-after its word stores) and never overwritten
+//! during the copy, so the snapshot is a consistent, gap-free suffix of
+//! the write sequence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bounded overwrite-oldest ring of `[u64; W]` records. Single writer
+/// (the owning thread); any number of concurrent snapshot readers.
+pub struct FlightRing<const W: usize> {
+    /// Monotonic count of records ever pushed (next sequence number).
+    head: AtomicU64,
+    /// `capacity * W` words; record `s` lives at `(s % capacity) * W`.
+    words: Box<[AtomicU64]>,
+    capacity: usize,
+}
+
+impl<const W: usize> FlightRing<W> {
+    /// A ring holding the most recent `capacity` records (capacity ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let words = (0..capacity * W).map(|_| AtomicU64::new(0)).collect();
+        FlightRing { head: AtomicU64::new(0), words, capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Records ever pushed (not the retained count; see [`Self::len`]).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Records currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        (self.pushed() as usize).min(self.capacity)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pushed() == 0
+    }
+
+    /// Append a record, overwriting the oldest if full. Caller contract:
+    /// single writer (one owning thread) — concurrent pushes would
+    /// interleave slots, not corrupt memory, but lose records.
+    #[inline]
+    pub fn push(&self, record: &[u64; W]) {
+        let h = self.head.load(Ordering::Relaxed);
+        let base = (h as usize % self.capacity) * W;
+        for (i, &w) in record.iter().enumerate() {
+            self.words[base + i].store(w, Ordering::Relaxed);
+        }
+        // Publish: readers that see head = h+1 see the stores above.
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out the retained records, oldest-first, dropping any record a
+    /// concurrent writer may have overwritten mid-copy (see module docs).
+    pub fn snapshot(&self) -> Vec<[u64; W]> {
+        let h1 = self.head.load(Ordering::Acquire);
+        let n = (h1 as usize).min(self.capacity);
+        let first = h1 - n as u64;
+        let mut out = Vec::with_capacity(n);
+        for s in first..h1 {
+            let base = (s as usize % self.capacity) * W;
+            let mut rec = [0u64; W];
+            for (i, r) in rec.iter_mut().enumerate() {
+                *r = self.words[base + i].load(Ordering::Relaxed);
+            }
+            out.push(rec);
+        }
+        let h2 = self.head.load(Ordering::Acquire);
+        let oldest_valid = h2.saturating_sub(self.capacity as u64);
+        if oldest_valid > first {
+            out.drain(..((oldest_valid - first) as usize).min(out.len()));
+        }
+        out
+    }
+
+    /// Reset to empty. Caller contract: no concurrent writer (used by
+    /// tests and between experiment cases).
+    pub fn clear(&self) {
+        self.head.store(0, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retains_last_capacity_records_oldest_first() {
+        let ring: FlightRing<2> = FlightRing::new(4);
+        for i in 0..10u64 {
+            ring.push(&[i, i * 100]);
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        // overflow drops oldest-first: survivors are 6..10 in order
+        assert_eq!(snap.iter().map(|r| r[0]).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert!(snap.iter().all(|r| r[1] == r[0] * 100), "records not torn");
+    }
+
+    #[test]
+    fn partial_fill_returns_everything() {
+        let ring: FlightRing<3> = FlightRing::new(8);
+        assert!(ring.is_empty());
+        ring.push(&[7, 8, 9]);
+        ring.push(&[1, 2, 3]);
+        let snap = ring.snapshot();
+        assert_eq!(snap, vec![[7, 8, 9], [1, 2, 3]]);
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.pushed(), 2);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let ring: FlightRing<1> = FlightRing::new(2);
+        ring.push(&[1]);
+        ring.clear();
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn concurrent_reader_never_sees_torn_records() {
+        use std::sync::Arc;
+        let ring: Arc<FlightRing<2>> = Arc::new(FlightRing::new(64));
+        let writer = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..100_000u64 {
+                    ring.push(&[i, !i]);
+                }
+            })
+        };
+        let mut checked = 0usize;
+        while !writer.is_finished() {
+            for rec in ring.snapshot() {
+                assert_eq!(rec[1], !rec[0], "torn record survived snapshot");
+                checked += 1;
+            }
+        }
+        writer.join().unwrap();
+        for rec in ring.snapshot() {
+            assert_eq!(rec[1], !rec[0]);
+            checked += 1;
+        }
+        assert!(checked > 0);
+    }
+}

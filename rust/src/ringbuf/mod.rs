@@ -16,7 +16,11 @@
 //! - [`LogitsPool`] — a pool of reusable, reference-counted logits slabs: the
 //!   "shared memory region" GPU workers write vocabulary-major slices into
 //!   and samplers read zero-copy.
+//! - [`flight::FlightRing`] — bounded overwrite-oldest record ring (never
+//!   blocks, never grows): the per-thread event buffer of the flight-recorder
+//!   tracing subsystem ([`crate::trace`], DESIGN.md §14).
 
+pub mod flight;
 pub mod mpmc;
 pub mod spsc;
 

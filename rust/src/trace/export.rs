@@ -1,0 +1,185 @@
+//! Trace exporters: Chrome-trace/Perfetto JSON, plus the trace-derived
+//! overlap accounting that cross-checks [`crate::metrics::Recorder`].
+//!
+//! The JSON shape is the Chrome Trace Event Format object form —
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}` — loadable in
+//! <https://ui.perfetto.dev> and `chrome://tracing`. Timestamps are
+//! microseconds since the shared [`super::epoch`]; `pid` is the replica
+//! lane (0 = pool/router), `tid` the thread role, and per-lane metadata
+//! (`ph: "M"`) names both. `python/trace_check.py` validates the schema,
+//! timestamp monotonicity, and B/E balance in CI (`make trace-smoke`).
+
+use super::{Kind, Phase, TraceEvent};
+use crate::metrics::{OverlapReport, Recorder};
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let ph = match ev.ph {
+        Phase::Begin => "B",
+        Phase::End => "E",
+        Phase::Complete => "X",
+        Phase::Instant => "i",
+    };
+    let mut args = vec![("a", Json::Num(ev.a as f64)), ("b", Json::Num(ev.b as f64))];
+    if ev.kind == Kind::Log {
+        if let Some(msg) = super::interned(ev.a) {
+            args.push(("msg", Json::Str(msg)));
+        }
+    }
+    if ev.kind == Kind::RouteDecision {
+        // b carries the policy score as f64 bits — decode for readability
+        args.push(("score", Json::Num(f64::from_bits(ev.b))));
+    }
+    let mut fields = vec![
+        ("name", Json::Str(ev.kind.name().to_string())),
+        ("cat", Json::Str(ev.kind.category().to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(ev.ts_ns as f64 / 1e3)),
+        ("pid", Json::Num(ev.pid as f64)),
+        ("tid", Json::Num(ev.tid as f64)),
+        ("args", Json::obj(args)),
+    ];
+    if ev.ph == Phase::Complete {
+        fields.push(("dur", Json::Num(ev.dur_ns as f64 / 1e3)));
+    }
+    if ev.ph == Phase::Instant {
+        // thread-scoped instants render as small arrows in Perfetto
+        fields.push(("s", Json::Str("t".to_string())));
+    }
+    Json::obj(fields)
+}
+
+fn metadata_json(events: &[TraceEvent]) -> Vec<Json> {
+    let mut lanes: BTreeSet<(u32, u32)> = BTreeSet::new();
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    for ev in events {
+        lanes.insert((ev.pid, ev.tid));
+        pids.insert(ev.pid);
+    }
+    let mut out = Vec::new();
+    for pid in pids {
+        let pname = if pid == 0 {
+            "pool/router".to_string()
+        } else {
+            format!("replica-{}", pid - 1)
+        };
+        out.push(Json::obj(vec![
+            ("name", Json::Str("process_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(pname))])),
+        ]));
+    }
+    for (pid, tid) in lanes {
+        out.push(Json::obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::Str(super::lane_name(tid)))])),
+        ]));
+    }
+    out
+}
+
+/// Render events as a Chrome-trace JSON object. Metadata first, then
+/// events sorted by timestamp (the collector already sorts).
+pub fn chrome_json(events: &[TraceEvent]) -> Json {
+    let mut all = metadata_json(events);
+    all.extend(events.iter().map(event_json));
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(all)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("producer", Json::Str("simple-serve flight recorder".to_string())),
+                ("dropped_events", Json::Num(super::dropped_events() as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Snapshot every thread's events and write the capture to `path`.
+pub fn write_chrome(path: &std::path::Path) -> crate::Result<()> {
+    let events = super::snapshot_events();
+    crate::util::json::write_json_file(path, &chrome_json(&events))?;
+    Ok(())
+}
+
+/// Derive an [`OverlapReport`] from trace spans: forward spans become GPU
+/// stage intervals, decide spans become decision intervals, collect-wait
+/// spans become exposed waits — fed through the *same* `Recorder`
+/// arithmetic, so the two accounting systems can be cross-checked
+/// event-for-event (they share the epoch and the measurement sites).
+pub fn overlap_report_from_trace(events: &[TraceEvent]) -> OverlapReport {
+    let mut rec = Recorder::new();
+    for ev in events {
+        if ev.ph != Phase::Complete {
+            continue;
+        }
+        match ev.kind {
+            Kind::EngineForward => rec.on_stage_gpu(ev.a as usize, ev.ts_s(), ev.end_s()),
+            Kind::SvcDecide => rec.on_stage_decision(ev.a as usize, ev.ts_s(), ev.end_s()),
+            Kind::EngineCollectWait => rec.on_decision_exposed(ev.dur_ns as f64 / 1e9),
+            _ => {}
+        }
+    }
+    rec.overlap_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: Kind, ph: Phase, ts_ns: u64, dur_ns: u64, a: u64) -> TraceEvent {
+        TraceEvent { kind, ph, pid: 1, tid: 1, ts_ns, dur_ns, a, b: 0 }
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let events = vec![
+            ev(Kind::EnginePlan, Phase::Begin, 1_000, 0, 0),
+            ev(Kind::EnginePlan, Phase::End, 2_000, 0, 0),
+            ev(Kind::EngineForward, Phase::Complete, 1_000, 500, 0),
+            ev(Kind::SvcSteal, Phase::Instant, 1_500, 0, 3),
+        ];
+        let j = chrome_json(&events);
+        let list = j.get("traceEvents").as_arr().unwrap();
+        // 1 process + 1 thread metadata + 4 events
+        assert_eq!(list.len(), 6);
+        let x = &list[list.len() - 2];
+        assert_eq!(x.get("ph").as_str(), Some("X"));
+        assert_eq!(x.get("dur").as_f64(), Some(0.5)); // µs
+        assert_eq!(x.get("ts").as_f64(), Some(1.0));
+        let i = &list[list.len() - 1];
+        assert_eq!(i.get("s").as_str(), Some("t"));
+        // parses back — the file the exporter writes is valid JSON
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn overlap_from_trace_matches_recorder_arithmetic() {
+        // decision [1,2] fully inside forward [0,3] → hidden; second
+        // decision [4,5] outside any forward → exposed
+        let events = vec![
+            ev(Kind::EngineForward, Phase::Complete, 0, 3_000_000_000, 0),
+            ev(Kind::SvcDecide, Phase::Complete, 1_000_000_000, 1_000_000_000, 0),
+            ev(Kind::SvcDecide, Phase::Complete, 4_000_000_000, 1_000_000_000, 0),
+            ev(Kind::EngineCollectWait, Phase::Complete, 4_000_000_000, 1_000_000_000, 0),
+        ];
+        let report = overlap_report_from_trace(&events);
+        let mut rec = Recorder::new();
+        rec.on_stage_gpu(0, 0.0, 3.0);
+        rec.on_stage_decision(0, 1.0, 2.0);
+        rec.on_stage_decision(0, 4.0, 5.0);
+        rec.on_decision_exposed(1.0);
+        let expect = rec.overlap_report();
+        assert!((report.decision_busy_s - expect.decision_busy_s).abs() < 1e-9);
+        assert!((report.hidden_s - expect.hidden_s).abs() < 1e-9);
+        assert!((report.exposed_wait_s - expect.exposed_wait_s).abs() < 1e-9);
+        assert!((report.gpu_busy_s - expect.gpu_busy_s).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,275 @@
+//! Always-on counters and histograms with a Prometheus-style text
+//! exposition (DESIGN.md §14).
+//!
+//! Unlike trace *events* (gated, ring-buffered, timestamped), these are
+//! plain relaxed atomics bumped at the same seams — cheap enough to leave
+//! on unconditionally, so `serve`/`serve_e2e` can surface them in their
+//! JSON summaries and experiments can assert the mechanisms they exercise
+//! actually fired (steals, claim releases, respawns, COW forks, LRU
+//! evictions, prefix hits/misses, router requeues). `--metrics-out <path>`
+//! renders the exposition; counters are process-global and monotonic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-global decision-plane counters. Monotonic; read with
+/// [`Counters::snapshot`].
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Tasks a sampler worker popped from a sibling's shard ring.
+    pub steals: AtomicU64,
+    /// Claim words released from cells owned by dead worker incarnations.
+    pub claim_releases: AtomicU64,
+    /// Sampler workers respawned after a death.
+    pub sampler_respawns: AtomicU64,
+    /// KV blocks forked copy-on-write at shared admission.
+    pub cow_forks: AtomicU64,
+    /// KV blocks reclaimed by LRU eviction.
+    pub lru_evictions: AtomicU64,
+    /// Prefix-cache lookups that shared at least one cached block.
+    pub prefix_hits: AtomicU64,
+    /// Prefix-cache lookups that shared nothing.
+    pub prefix_misses: AtomicU64,
+    /// Sequences requeued onto surviving replicas after a failover.
+    pub router_requeues: AtomicU64,
+    /// Replica failovers handled by the router's failure sweep.
+    pub failovers: AtomicU64,
+    /// WARN+ log records.
+    pub log_warnings: AtomicU64,
+}
+
+impl Counters {
+    /// `(metric name, value)` pairs, exposition order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("steals", self.steals.load(Ordering::Relaxed)),
+            ("claim_releases", self.claim_releases.load(Ordering::Relaxed)),
+            ("sampler_respawns", self.sampler_respawns.load(Ordering::Relaxed)),
+            ("cow_forks", self.cow_forks.load(Ordering::Relaxed)),
+            ("lru_evictions", self.lru_evictions.load(Ordering::Relaxed)),
+            ("prefix_hits", self.prefix_hits.load(Ordering::Relaxed)),
+            ("prefix_misses", self.prefix_misses.load(Ordering::Relaxed)),
+            ("router_requeues", self.router_requeues.load(Ordering::Relaxed)),
+            ("failovers", self.failovers.load(Ordering::Relaxed)),
+            ("log_warnings", self.log_warnings.load(Ordering::Relaxed)),
+        ]
+    }
+
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.snapshot().into_iter().find(|(n, _)| *n == name).map(|(_, v)| v)
+    }
+}
+
+static COUNTERS: Counters = Counters {
+    steals: AtomicU64::new(0),
+    claim_releases: AtomicU64::new(0),
+    sampler_respawns: AtomicU64::new(0),
+    cow_forks: AtomicU64::new(0),
+    lru_evictions: AtomicU64::new(0),
+    prefix_hits: AtomicU64::new(0),
+    prefix_misses: AtomicU64::new(0),
+    router_requeues: AtomicU64::new(0),
+    failovers: AtomicU64::new(0),
+    log_warnings: AtomicU64::new(0),
+};
+
+/// The process-global counter set.
+pub fn counters() -> &'static Counters {
+    &COUNTERS
+}
+
+/// Bump a counter by 1 (relaxed).
+#[inline]
+pub fn inc(counter: &AtomicU64) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Bump a counter by `n` (relaxed).
+#[inline]
+pub fn add(counter: &AtomicU64, n: u64) {
+    counter.fetch_add(n, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Histograms
+// ---------------------------------------------------------------------------
+
+/// Lock-free log2-bucketed latency histogram (microsecond buckets:
+/// `le 1µs, 2µs, 4µs, … , 2^(N-2) µs, +Inf`).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; Self::NUM_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    pub const NUM_BUCKETS: usize = 24;
+
+    pub const fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [Z; Self::NUM_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in nanoseconds.
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        let us = ns / 1_000;
+        // bucket i covers le 2^i µs; the last is +Inf
+        let idx = if us == 0 {
+            0
+        } else {
+            (64 - (us.leading_zeros() as usize)).min(Self::NUM_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_s(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Cumulative bucket counts with their `le` bounds in seconds
+    /// (`f64::INFINITY` for the last).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        (0..Self::NUM_BUCKETS)
+            .map(|i| {
+                acc += self.buckets[i].load(Ordering::Relaxed);
+                let le = if i == Self::NUM_BUCKETS - 1 {
+                    f64::INFINITY
+                } else {
+                    (1u64 << i) as f64 * 1e-6
+                };
+                (le, acc)
+            })
+            .collect()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Latency of one sampler `decide()` (per shard batch).
+pub static DECIDE_LATENCY: Histogram = Histogram::new();
+/// Engine wait exposed on the blocking collect path.
+pub static COLLECT_WAIT: Histogram = Histogram::new();
+
+// ---------------------------------------------------------------------------
+// Exposition
+// ---------------------------------------------------------------------------
+
+fn fmt_le(le: f64) -> String {
+    if le.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        format!("{le:.6}")
+    }
+}
+
+/// Render the Prometheus text exposition: every counter as
+/// `simple_<name>_total`, both histograms, and the trace subsystem's own
+/// drop counter.
+pub fn exposition() -> String {
+    let mut out = String::new();
+    for (name, value) in COUNTERS.snapshot() {
+        out.push_str(&format!(
+            "# TYPE simple_{name}_total counter\nsimple_{name}_total {value}\n"
+        ));
+    }
+    out.push_str(&format!(
+        "# TYPE simple_trace_dropped_events_total counter\n\
+         simple_trace_dropped_events_total {}\n",
+        super::dropped_events()
+    ));
+    for (hname, hist) in [
+        ("decide_latency_seconds", &DECIDE_LATENCY),
+        ("collect_wait_seconds", &COLLECT_WAIT),
+    ] {
+        out.push_str(&format!("# TYPE simple_{hname} histogram\n"));
+        for (le, cum) in hist.cumulative() {
+            out.push_str(&format!(
+                "simple_{hname}_bucket{{le=\"{}\"}} {cum}\n",
+                fmt_le(le)
+            ));
+        }
+        out.push_str(&format!("simple_{hname}_sum {}\n", hist.sum_s()));
+        out.push_str(&format!("simple_{hname}_count {}\n", hist.count()));
+    }
+    out
+}
+
+/// Write the exposition to a file (the `--metrics-out` plumbing).
+pub fn write_exposition(path: &std::path::Path) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, exposition())?;
+    Ok(())
+}
+
+/// Counters as a JSON object for the serve summaries.
+pub fn counters_json() -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Obj(
+        COUNTERS
+            .snapshot()
+            .into_iter()
+            .map(|(n, v)| (n.to_string(), Json::Num(v as f64)))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_bounded() {
+        let h = Histogram::new();
+        h.observe_ns(500); // <1µs → bucket 0
+        h.observe_ns(1_500); // ~1.5µs → le 2µs
+        h.observe_ns(3_000_000); // 3ms
+        h.observe_ns(u64::MAX / 2); // lands in +Inf
+        let cum = h.cumulative();
+        assert_eq!(cum.last().unwrap().1, 4, "last bucket holds everything");
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1), "cumulative monotone");
+        assert_eq!(cum[0].1, 1, "sub-µs observation in the first bucket");
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn exposition_is_well_formed() {
+        counters().steals.fetch_add(0, Ordering::Relaxed);
+        let text = exposition();
+        assert!(text.contains("simple_steals_total"));
+        assert!(text.contains("simple_cow_forks_total"));
+        assert!(text.contains("simple_decide_latency_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("simple_collect_wait_seconds_count"));
+        // every sample line is `name{labels}? value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad sample line: {line}");
+        }
+    }
+
+    #[test]
+    fn counter_get_by_name() {
+        inc(&counters().router_requeues);
+        assert!(counters().get("router_requeues").unwrap() >= 1);
+        assert_eq!(counters().get("nope"), None);
+    }
+}

@@ -1,12 +1,13 @@
 //! Tiny leveled logger (the `log`/`env_logger` pair is unavailable offline).
 //!
 //! Controlled by `SIMPLE_LOG` (error|warn|info|debug|trace, default info).
-//! Thread-safe; timestamps are relative to process start to keep runs
-//! deterministic to diff.
+//! Thread-safe; timestamps are seconds since the shared trace epoch
+//! ([`crate::trace::epoch`]) — the same clock the flight recorder and the
+//! `Recorder` use, so a log line's `t` can be lined up against spans in a
+//! capture. WARN and ERROR records are additionally emitted as trace
+//! instant events when tracing is on (DESIGN.md §14).
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
-use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -39,7 +40,6 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
-static START: OnceLock<Instant> = OnceLock::new();
 
 fn level() -> u8 {
     let v = LEVEL.load(Ordering::Relaxed);
@@ -63,11 +63,20 @@ pub fn enabled(lv: Level) -> bool {
 }
 
 pub fn log(lv: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if lv <= Level::Warn {
+        // WARN+ records count and trace regardless of the print gate — a
+        // suppressed warning should still be visible in a capture.
+        crate::trace::metrics::inc(&crate::trace::metrics::counters().log_warnings);
+        if crate::trace::on() {
+            let id = crate::trace::intern(&format!("{} [{module}] {msg}", lv.as_str().trim()));
+            crate::trace::instant(crate::trace::Kind::Log, id, lv as u64);
+        }
+    }
     if !enabled(lv) {
         return;
     }
-    let start = START.get_or_init(Instant::now);
-    let t = start.elapsed().as_secs_f64();
+    // Seconds since the shared trace epoch — comparable to span timestamps.
+    let t = crate::trace::epoch().elapsed().as_secs_f64();
     eprintln!("[{t:9.3}s {} {module}] {msg}", lv.as_str());
 }
 

@@ -1,0 +1,305 @@
+//! Flight-recorder tracing: the observation-only bars (DESIGN.md §14).
+//!
+//! Three properties and one cross-check:
+//! 1. Per-thread spans are well-nested (LIFO `B`/`E`, per-lane monotonic
+//!    timestamps) under randomized nesting across threads — the structure
+//!    Perfetto needs to render a lane.
+//! 2. Ring overflow drops oldest-first and the surviving window still
+//!    exports as valid, untorn Chrome-trace JSON.
+//! 3. **The tracing hard bar**: per-sequence token streams are
+//!    bit-identical with tracing on vs off, across spec_k × microbatches ×
+//!    replicas × a chaos fault plan — tracing is pure observation.
+//! 4. The trace-derived [`OverlapReport`] (forward/decide/collect-wait
+//!    spans replayed through the Recorder arithmetic) matches the live
+//!    Recorder of the same run: two accounting systems, one timeline.
+//!
+//! Tracing state (`trace::set_enabled`) and the event registry are
+//! process-global, so every test here serializes on one mutex and clears
+//! the rings before emitting.
+
+// Config structs are built by `default()` + field assignment (sweep-driver
+// idiom); see the identical crate-level allow in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
+use simple_serve::cluster::{Cluster, ClusterConfig, RoutePolicy};
+use simple_serve::config::{DecisionVariant, EngineConfig};
+use simple_serve::engine::{Engine, Request, SyntheticRuntime};
+use simple_serve::fault::FaultPlan;
+use simple_serve::rng::Philox;
+use simple_serve::trace::{self, export, Kind, Phase, TraceEvent, DEFAULT_RING_CAP};
+use simple_serve::workload::{self, TraceConfig};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+const VOCAB: usize = 2_048;
+const MAX_SEQ: usize = 96;
+const BATCH: usize = 4;
+const PLANE_SEED: u64 = 53;
+
+/// Serializes every test that flips the global trace gate or reads the
+/// global registry. Poisoning is irrelevant — the guard protects no data.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// 1. Well-nested per-thread spans (property)
+// ---------------------------------------------------------------------------
+
+/// Walk one lane's events in emission order: `B`/`E` must be LIFO with
+/// matching kind+args, timestamps per-lane monotonic, stack empty at the
+/// end. Well-nested implies same-lane spans either nest or are disjoint —
+/// never partially overlap.
+fn assert_well_nested(events: &[TraceEvent]) {
+    let mut lanes: HashMap<(u32, u32), Vec<&TraceEvent>> = HashMap::new();
+    for ev in events {
+        lanes.entry((ev.pid, ev.tid)).or_default().push(ev);
+    }
+    for ((pid, tid), evs) in lanes {
+        let mut stack: Vec<(Kind, u64)> = Vec::new();
+        let mut last_ts = 0u64;
+        for ev in evs {
+            assert!(
+                ev.ts_ns >= last_ts,
+                "lane {pid}/{tid}: timestamps went backwards"
+            );
+            last_ts = ev.ts_ns;
+            match ev.ph {
+                Phase::Begin => stack.push((ev.kind, ev.a)),
+                Phase::End => {
+                    let open = stack.pop().unwrap_or_else(|| {
+                        panic!("lane {pid}/{tid}: E without a matching B")
+                    });
+                    assert_eq!(
+                        open,
+                        (ev.kind, ev.a),
+                        "lane {pid}/{tid}: spans closed out of LIFO order"
+                    );
+                }
+                Phase::Complete | Phase::Instant => {}
+            }
+        }
+        assert!(stack.is_empty(), "lane {pid}/{tid}: unclosed spans");
+    }
+}
+
+const SPAN_KINDS: [Kind; 4] =
+    [Kind::EnginePlan, Kind::EngineCommit, Kind::SvcCollect, Kind::SchedChunk];
+
+/// Emit a random span tree: RAII guards give stack discipline for free;
+/// the property checks the *recorded* events still have it after the ring
+/// and the merge-sort in `snapshot_events`.
+fn random_spans(rng: &mut Philox, depth: usize) {
+    let n = 1 + rng.next_below(3) as usize;
+    for _ in 0..n {
+        let kind = SPAN_KINDS[rng.next_below(SPAN_KINDS.len() as u64) as usize];
+        let _g = trace::span(kind, rng.next_below(1000), 0);
+        if rng.next_f64() < 0.4 {
+            trace::instant(Kind::KvHit, rng.next_below(1000), 0);
+        }
+        if depth < 4 && rng.next_f64() < 0.6 {
+            random_spans(rng, depth + 1);
+        }
+    }
+}
+
+#[test]
+fn prop_per_thread_spans_are_well_nested() {
+    let _g = locked();
+    let mut next_tid = 500u32;
+    for case in 0..8u64 {
+        trace::clear();
+        trace::set_enabled(true);
+        std::thread::scope(|scope| {
+            for t in 0..3u64 {
+                // unique lane per thread: two writers on one (pid, tid)
+                // would interleave B/E and break the per-lane property
+                let tid = next_tid;
+                next_tid += 1;
+                scope.spawn(move || {
+                    trace::register_thread(0, tid);
+                    let mut rng = Philox::substream(0xA11CE ^ case, case * 31 + t);
+                    random_spans(&mut rng, 0);
+                });
+            }
+        });
+        trace::set_enabled(false);
+        let events = trace::snapshot_events();
+        assert!(!events.is_empty(), "case {case}: no events recorded");
+        assert_well_nested(&events);
+    }
+    trace::clear();
+}
+
+// ---------------------------------------------------------------------------
+// 2. Ring overflow: oldest-first, export stays valid
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_overflow_drops_oldest_first_and_export_survives() {
+    let _g = locked();
+    trace::clear();
+    trace::set_enabled(true);
+    const LANE: u32 = 7_777;
+    let extra = 777usize;
+    let total = DEFAULT_RING_CAP + extra;
+    std::thread::spawn(move || {
+        trace::register_thread(0, LANE);
+        for i in 0..total {
+            trace::instant(Kind::KvHit, i as u64, 0xFEED);
+        }
+    })
+    .join()
+    .unwrap();
+    trace::set_enabled(false);
+
+    let events: Vec<TraceEvent> = trace::snapshot_events()
+        .into_iter()
+        .filter(|e| e.tid == LANE)
+        .collect();
+    // the ring retains exactly the newest `capacity` records...
+    assert_eq!(events.len(), DEFAULT_RING_CAP);
+    // ...which are the LAST pushed, still in order and untorn
+    for (i, ev) in events.iter().enumerate() {
+        assert_eq!(ev.a, (extra + i) as u64, "overflow did not drop oldest-first");
+        assert_eq!(ev.b, 0xFEED, "record torn by overwrite");
+        assert_eq!(ev.kind, Kind::KvHit);
+    }
+    assert!(
+        trace::dropped_events() >= extra as u64,
+        "overwritten records must be accounted as dropped"
+    );
+
+    // the surviving window exports as valid JSON (schema + roundtrip)
+    let j = export::chrome_json(&events);
+    let list = j.get("traceEvents").as_arr().unwrap();
+    // 1 process-name + 1 thread-name metadata record + the events
+    assert_eq!(list.len(), DEFAULT_RING_CAP + 2);
+    let reparsed = simple_serve::util::json::Json::parse(&j.to_string_pretty())
+        .expect("export must stay parseable after overflow");
+    assert_eq!(reparsed, j);
+    trace::clear();
+}
+
+// ---------------------------------------------------------------------------
+// 3. The hard bar: tracing on/off never changes a token stream
+// ---------------------------------------------------------------------------
+
+fn digest_run(replicas: usize, m: usize, spec_k: usize, n_mb: usize, plan: &str) -> u64 {
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = m;
+    cfg.sampler.seed = 0xD1FF;
+    cfg.spec_k = spec_k;
+    cfg.n_microbatches = n_mb;
+    cfg.overlap = n_mb > 1;
+    cfg.idle_poll_us = 20;
+    let mut ccfg = ClusterConfig::default();
+    ccfg.replicas = replicas;
+    ccfg.policy = RoutePolicy::RoundRobin;
+    ccfg.shared_samplers = replicas > 1;
+    ccfg.idle_poll_us = 20;
+    if !plan.is_empty() {
+        let parsed = FaultPlan::parse(plan).expect("fault plan parses");
+        let (engine_faults, router_faults) = parsed.split();
+        cfg.faults = engine_faults;
+        ccfg.faults = router_faults;
+    }
+    let trace_reqs: Vec<Request> = workload::generate(&TraceConfig::tiny(8, VOCAB)).requests;
+    let mut cluster = Cluster::start(&cfg, &ccfg, None, MAX_SEQ, |_id| {
+        Ok(SyntheticRuntime::new(BATCH, VOCAB, MAX_SEQ, PLANE_SEED))
+    });
+    cluster.run(trace_reqs).expect("run");
+    cluster.shutdown().expect("shutdown").stream_digest()
+}
+
+#[test]
+fn differential_digests_identical_tracing_on_vs_off() {
+    let _g = locked();
+    for replicas in [1usize, 2] {
+        for spec_k in [0usize, 2] {
+            for n_mb in [1usize, 2] {
+                for fault in [false, true] {
+                    let plan = match (fault, replicas) {
+                        (false, _) => "",
+                        (true, 1) => "sampler:0@4",
+                        (true, _) => "sampler:0@3,replica:1@6",
+                    };
+                    trace::set_enabled(false);
+                    let off = digest_run(replicas, 2, spec_k, n_mb, plan);
+                    trace::clear();
+                    trace::set_enabled(true);
+                    let on = digest_run(replicas, 2, spec_k, n_mb, plan);
+                    trace::set_enabled(false);
+                    trace::clear();
+                    assert_eq!(
+                        off, on,
+                        "tracing changed tokens at r{replicas} k{spec_k} \
+                         mb{n_mb} plan `{plan}` — it must be pure observation"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Trace-derived overlap accounting matches the live Recorder
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overlap_report_from_trace_matches_live_recorder() {
+    let _g = locked();
+    trace::clear();
+    trace::set_enabled(true);
+
+    let mut cfg = EngineConfig::default();
+    cfg.sampler.variant = DecisionVariant::Offloading;
+    cfg.sampler.num_samplers = 2;
+    cfg.sampler.seed = 0x0B5;
+    cfg.spec_k = 2;
+    cfg.n_microbatches = 2;
+    cfg.overlap = true;
+    cfg.idle_poll_us = 20;
+    let runtime = SyntheticRuntime::new(BATCH, VOCAB, MAX_SEQ, PLANE_SEED);
+    let mut engine = Engine::new(runtime, &cfg, None);
+    for r in workload::generate(&TraceConfig::tiny(10, VOCAB)).requests {
+        engine.submit(r);
+    }
+    engine.run_until_idle().expect("engine run");
+    let _ = engine.take_finished();
+    let (recorder, _stats) = engine.shutdown();
+    trace::set_enabled(false);
+
+    let events = trace::snapshot_events();
+    assert!(
+        events.iter().any(|e| e.kind == Kind::EngineForward),
+        "no forward spans captured"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == Kind::SvcDecide),
+        "no decide spans captured"
+    );
+    let derived = export::overlap_report_from_trace(&events);
+    let live = recorder.overlap_report();
+    trace::clear();
+
+    // Both accountings saw the same endpoints (shared epoch, shared
+    // measurement sites); the only daylight is the ns truncation in
+    // `complete_s` — ≤ ±1 ns per interval, so even thousands of intervals
+    // stay orders of magnitude under this bound.
+    let close = |got: f64, want: f64, what: &str| {
+        assert!(
+            (got - want).abs() <= 5e-5,
+            "{what}: trace-derived {got} vs live {want}"
+        );
+    };
+    assert!(live.gpu_busy_s > 0.0, "run recorded no GPU stage time");
+    assert!(live.decision_busy_s > 0.0, "run recorded no decision time");
+    close(derived.gpu_busy_s, live.gpu_busy_s, "gpu_busy_s");
+    close(derived.decision_busy_s, live.decision_busy_s, "decision_busy_s");
+    close(derived.hidden_s, live.hidden_s, "hidden_s");
+    close(derived.exposed_wait_s, live.exposed_wait_s, "exposed_wait_s");
+}
