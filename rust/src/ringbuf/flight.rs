@@ -12,28 +12,42 @@
 //! Records are fixed-width arrays of `W` words stored as [`AtomicU64`]s, so
 //! a reader racing a writer reads *defined* (if stale) values rather than
 //! UB; the snapshot protocol below then discards every record that could
-//! have been overwritten mid-copy:
+//! have been overwritten mid-copy. The ring allocates one spare slot
+//! (`slots = capacity + 1`): the writer stores record `h`'s words *before*
+//! incrementing `head` to `h + 1`, so while `head` reads `h` the slot of
+//! record `h - slots` may already be mid-overwrite — the spare slot keeps
+//! that victim one step *below* the published `capacity`-record window
+//! instead of inside it.
 //!
-//! 1. load `head` (Acquire) → `h1`; the publishable range is
-//!    `[h1.saturating_sub(cap), h1)` (records below it are already gone);
-//! 2. copy that range oldest-first;
-//! 3. load `head` again → `h2`; any copied record with sequence number
-//!    `< h2.saturating_sub(cap)` may have been torn by a concurrent
-//!    overwrite — drop it from the front.
+//! 1. load `head` (Acquire) → `h1`; the publishable range is the last
+//!    `min(h1, capacity)` records;
+//! 2. copy that range oldest-first (relaxed word loads);
+//! 3. `fence(Acquire)`, then reload `head` → `h2`; drop any copied record
+//!    with sequence number `< h2 - capacity` — with the spare slot, the
+//!    writer observed at `head = h2` can only be tearing record
+//!    `h2 - capacity - 1`, so everything kept is intact.
 //!
-//! Every record that survives was fully published (the writer's Release
-//! store on `head` happens-after its word stores) and never overwritten
-//! during the copy, so the snapshot is a consistent, gap-free suffix of
-//! the write sequence.
+//! The fences make the validation sound: the writer's `fence(Release)`
+//! before each record's word stores orders the *previous* publish of
+//! `head` before them, and the reader's `fence(Acquire)` upgrades its
+//! relaxed word loads so the `h2` reload cannot be satisfied before them —
+//! if a word load observed an overwrite for record `h`, the reload sees
+//! `head ≥ h` and the torn record is filtered. Every record that survives
+//! was fully published (the writer's Release store on `head`
+//! happens-after its word stores) and never overwritten during the copy,
+//! so the snapshot is a consistent, gap-free suffix of the write sequence.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
 
 /// Bounded overwrite-oldest ring of `[u64; W]` records. Single writer
 /// (the owning thread); any number of concurrent snapshot readers.
 pub struct FlightRing<const W: usize> {
     /// Monotonic count of records ever pushed (next sequence number).
     head: AtomicU64,
-    /// `capacity * W` words; record `s` lives at `(s % capacity) * W`.
+    /// `(capacity + 1) * W` words; record `s` lives at
+    /// `(s % (capacity + 1)) * W`. The spare slot is seqlock headroom:
+    /// the slot a writer is tearing mid-push is never one the snapshot
+    /// publishes (module docs).
     words: Box<[AtomicU64]>,
     capacity: usize,
 }
@@ -42,7 +56,7 @@ impl<const W: usize> FlightRing<W> {
     /// A ring holding the most recent `capacity` records (capacity ≥ 1).
     pub fn new(capacity: usize) -> Self {
         let capacity = capacity.max(1);
-        let words = (0..capacity * W).map(|_| AtomicU64::new(0)).collect();
+        let words = (0..(capacity + 1) * W).map(|_| AtomicU64::new(0)).collect();
         FlightRing { head: AtomicU64::new(0), words, capacity }
     }
 
@@ -70,7 +84,12 @@ impl<const W: usize> FlightRing<W> {
     #[inline]
     pub fn push(&self, record: &[u64; W]) {
         let h = self.head.load(Ordering::Relaxed);
-        let base = (h as usize % self.capacity) * W;
+        let base = (h as usize % (self.capacity + 1)) * W;
+        // Order the previous publish (head = h, Release) before these
+        // word stores: a reader that observes one of them, fences
+        // (Acquire), and reloads head is then guaranteed to read
+        // head ≥ h and filter the record this push is overwriting.
+        fence(Ordering::Release);
         for (i, &w) in record.iter().enumerate() {
             self.words[base + i].store(w, Ordering::Relaxed);
         }
@@ -86,14 +105,20 @@ impl<const W: usize> FlightRing<W> {
         let first = h1 - n as u64;
         let mut out = Vec::with_capacity(n);
         for s in first..h1 {
-            let base = (s as usize % self.capacity) * W;
+            let base = (s as usize % (self.capacity + 1)) * W;
             let mut rec = [0u64; W];
             for (i, r) in rec.iter_mut().enumerate() {
                 *r = self.words[base + i].load(Ordering::Relaxed);
             }
             out.push(rec);
         }
+        // Upgrade the relaxed word loads above so the head reload below
+        // cannot be satisfied before them (seqlock validation).
+        fence(Ordering::Acquire);
         let h2 = self.head.load(Ordering::Acquire);
+        // A writer observed at head = h2 can be mid-overwrite of record
+        // h2 - (capacity + 1) only; with the spare slot, records with
+        // seq ≥ h2 - capacity are provably intact.
         let oldest_valid = h2.saturating_sub(self.capacity as u64);
         if oldest_valid > first {
             out.drain(..((oldest_valid - first) as usize).min(out.len()));
@@ -169,6 +194,38 @@ mod tests {
             assert_eq!(rec[1], !rec[0]);
             checked += 1;
         }
+        assert!(checked > 0);
+    }
+
+    /// A capacity-3 ring overwrites on almost every push, so every
+    /// snapshot races an in-flight overwrite — the seqlock filter must
+    /// still yield untorn, consecutive records. This is the regime where
+    /// keeping seq == h2 - capacity from a cap-slot ring was torn.
+    #[test]
+    fn tiny_ring_snapshots_stay_untorn_and_contiguous() {
+        use std::sync::Arc;
+        let ring: Arc<FlightRing<2>> = Arc::new(FlightRing::new(3));
+        let writer = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..200_000u64 {
+                    ring.push(&[i, !i]);
+                }
+            })
+        };
+        let mut checked = 0usize;
+        while !writer.is_finished() {
+            let snap = ring.snapshot();
+            for rec in &snap {
+                assert_eq!(rec[1], !rec[0], "torn record survived snapshot");
+            }
+            for w in snap.windows(2) {
+                assert_eq!(w[1][0], w[0][0] + 1, "snapshot not a contiguous suffix");
+            }
+            checked += snap.len();
+        }
+        writer.join().unwrap();
+        assert_eq!(ring.snapshot().len(), 3, "full ring retains `capacity` records");
         assert!(checked > 0);
     }
 }

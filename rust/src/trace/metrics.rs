@@ -118,12 +118,14 @@ impl Histogram {
     /// Record one observation in nanoseconds.
     #[inline]
     pub fn observe_ns(&self, ns: u64) {
-        let us = ns / 1_000;
-        // bucket i covers le 2^i µs; the last is +Inf
-        let idx = if us == 0 {
+        // bucket i covers le 2^i µs (inclusive, Prometheus semantics), so
+        // round the µs up and take ceil(log2): exactly 1µs lands in
+        // le=1µs, exactly 2^i µs in le=2^i µs, and 2^i+ε in the next.
+        let us = ns.div_ceil(1_000);
+        let idx = if us <= 1 {
             0
         } else {
-            (64 - (us.leading_zeros() as usize)).min(Self::NUM_BUCKETS - 1)
+            (64 - ((us - 1).leading_zeros() as usize)).min(Self::NUM_BUCKETS - 1)
         };
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -247,6 +249,20 @@ mod tests {
         assert_eq!(cum.last().unwrap().1, 4, "last bucket holds everything");
         assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1), "cumulative monotone");
         assert_eq!(cum[0].1, 1, "sub-µs observation in the first bucket");
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn histogram_power_of_two_boundaries_are_inclusive() {
+        let h = Histogram::new();
+        h.observe_ns(1_000); // exactly 1µs → le 1µs (bucket 0)
+        h.observe_ns(2_000); // exactly 2µs → le 2µs
+        h.observe_ns(2_001); // just over 2µs → le 4µs
+        h.observe_ns(4_000); // exactly 4µs → le 4µs
+        let cum = h.cumulative();
+        assert_eq!(cum[0].1, 1, "1µs must count in le=1µs");
+        assert_eq!(cum[1].1, 2, "2µs must count in le=2µs");
+        assert_eq!(cum[2].1, 4, "(2µs, 4µs] must count in le=4µs");
         assert_eq!(h.count(), 4);
     }
 

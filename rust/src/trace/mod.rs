@@ -43,7 +43,10 @@ use std::time::Instant;
 const WORDS: usize = 5;
 
 /// Default per-thread ring capacity (events). ~40 B/event → ~640 KiB per
-/// thread; override with `SIMPLE_TRACE_CAP`.
+/// traced thread; override with `SIMPLE_TRACE_CAP`. Rings are allocated
+/// lazily (first emit with tracing on) and recycled when a thread exits,
+/// so total memory is bounded by the peak number of concurrently tracing
+/// threads — not by how many threads a run ever spawned.
 pub const DEFAULT_RING_CAP: usize = 1 << 14;
 
 // ---------------------------------------------------------------------------
@@ -270,6 +273,12 @@ pub fn lane_name(tid: u32) -> String {
 struct ThreadBuf {
     pid: AtomicU32,
     tid: AtomicU32,
+    /// Claimed by a live thread? Released by the TLS destructor at thread
+    /// exit so the next spawned thread reuses the ring allocation instead
+    /// of growing the registry without bound (records carry their own
+    /// pid/tid, so a recycled ring keeps the dead lane's events in the
+    /// capture until they age out of the window).
+    in_use: AtomicBool,
     ring: FlightRing<WORDS>,
 }
 
@@ -283,8 +292,32 @@ static EPOCH: OnceLock<Instant> = OnceLock::new();
 static REGISTRY: OnceLock<Registry> = OnceLock::new();
 static STRINGS: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
+/// Sentinel tid meaning "lane not declared" — an anonymous tid is
+/// assigned the first time the thread actually emits.
+const ANON_TID: u32 = u32::MAX;
+
+/// Per-thread trace state. The ring is *not* allocated here: a thread gets
+/// a buffer only on its first emit — which is gated on [`on()`] — so
+/// spawning replica/sampler threads with tracing off allocates nothing.
+struct TlsSlot {
+    /// Lane declared by [`register_thread`] (pid, tid).
+    lane: Cell<(u32, u32)>,
+    buf: Cell<Option<&'static ThreadBuf>>,
+}
+
+impl Drop for TlsSlot {
+    fn drop(&mut self) {
+        // Return the buffer to the registry's free pool at thread exit.
+        if let Some(b) = self.buf.get() {
+            b.in_use.store(false, Ordering::Release);
+        }
+    }
+}
+
 thread_local! {
-    static TLS_BUF: Cell<Option<&'static ThreadBuf>> = const { Cell::new(None) };
+    static TLS: TlsSlot = const {
+        TlsSlot { lane: Cell::new((0, ANON_TID)), buf: Cell::new(None) }
+    };
 }
 
 fn registry() -> &'static Registry {
@@ -341,46 +374,69 @@ pub fn init_capture(cli: Option<&str>) -> Option<std::path::PathBuf> {
     Some(std::path::PathBuf::from(path))
 }
 
-/// Per-thread buffer, registering the thread on first use (anonymous lane
-/// unless [`register_thread`] ran first).
-fn buf() -> &'static ThreadBuf {
-    TLS_BUF.with(|tls| match tls.get() {
+/// Per-thread buffer, acquired on first emit: recycle a free buffer from
+/// an exited thread if one exists, else allocate. Only reached from
+/// [`emit`], i.e. only when tracing is on — threads that never emit never
+/// allocate a ring.
+fn buf() -> Option<&'static ThreadBuf> {
+    // try_with: a log/span emitted while TLS is being torn down at thread
+    // exit is dropped rather than panicking.
+    TLS.try_with(|tls| match tls.buf.get() {
         Some(b) => b,
         None => {
-            let reg = registry();
-            let tid = reg.next_anon_tid.fetch_add(1, Ordering::Relaxed);
-            let b = register_buf(0, tid);
-            tls.set(Some(b));
+            let (pid, mut tid) = tls.lane.get();
+            if tid == ANON_TID {
+                tid = registry().next_anon_tid.fetch_add(1, Ordering::Relaxed);
+                tls.lane.set((pid, tid));
+            }
+            let b = acquire_buf(pid, tid);
+            tls.buf.set(Some(b));
             b
         }
     })
+    .ok()
 }
 
-fn register_buf(pid: u32, tid: u32) -> &'static ThreadBuf {
+fn acquire_buf(pid: u32, tid: u32) -> &'static ThreadBuf {
+    let reg = registry();
+    let mut bufs = reg.bufs.lock().unwrap();
+    for b in bufs.iter() {
+        if b.in_use
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            b.pid.store(pid, Ordering::Relaxed);
+            b.tid.store(tid, Ordering::Relaxed);
+            // Sound: every buffer's allocation is immortal (one refcount
+            // was leaked when it was created below).
+            return unsafe { &*Arc::as_ptr(b) };
+        }
+    }
     let b = Arc::new(ThreadBuf {
         pid: AtomicU32::new(pid),
         tid: AtomicU32::new(tid),
+        in_use: AtomicBool::new(true),
         ring: FlightRing::new(ring_cap()),
     });
-    registry().bufs.lock().unwrap().push(b.clone());
-    // Buffers live for the process lifetime (the registry never drops
-    // them), so handing out a 'static reference to the owning thread is
-    // sound; leak one refcount to make it explicit.
+    bufs.push(b.clone());
+    // The registry keeps its Arc forever; leak one refcount so the
+    // 'static reference handed to the owning thread is explicit. Rings
+    // are recycled (in_use flag), so the registry's size is bounded by
+    // the peak number of *concurrently* tracing threads.
     unsafe { &*Arc::into_raw(b) }
 }
 
 /// Declare the calling thread's trace lane: `pid` 0 for the pool/router
 /// process, `r + 1` for replica `r`; `tid` from [`TID_ENGINE`] /
 /// [`tid_sampler`] / [`TID_MAIN`]. Call at thread start (idempotent:
-/// re-registering re-labels the existing buffer).
+/// re-registering re-labels). Cheap — no ring is allocated until the
+/// thread first emits with tracing on.
 pub fn register_thread(pid: u32, tid: u32) {
-    TLS_BUF.with(|tls| match tls.get() {
-        Some(b) => {
+    let _ = TLS.try_with(|tls| {
+        tls.lane.set((pid, tid));
+        if let Some(b) = tls.buf.get() {
             b.pid.store(pid, Ordering::Relaxed);
             b.tid.store(tid, Ordering::Relaxed);
-        }
-        None => {
-            tls.set(Some(register_buf(pid, tid)));
         }
     });
 }
@@ -391,7 +447,7 @@ pub fn register_thread(pid: u32, tid: u32) {
 
 #[inline]
 fn emit(kind: Kind, ph: Phase, ts_ns: u64, dur_ns: u64, a: u64, b: u64) {
-    let buf = buf();
+    let Some(buf) = buf() else { return };
     let w0 = pack0(
         kind,
         ph,
@@ -497,6 +553,13 @@ pub fn snapshot_events() -> Vec<TraceEvent> {
     }
     out.sort_by_key(|e| e.ts_ns);
     out
+}
+
+/// Number of ring buffers ever allocated (diagnostics). Recycling keeps
+/// this bounded by the peak number of *concurrently* tracing threads, not
+/// by how many threads the process ever spawned.
+pub fn allocated_rings() -> usize {
+    registry().bufs.lock().unwrap().len()
 }
 
 /// Total events dropped to ring overwrite across all threads (what the

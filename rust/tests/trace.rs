@@ -184,6 +184,55 @@ fn ring_overflow_drops_oldest_first_and_export_survives() {
 }
 
 // ---------------------------------------------------------------------------
+// 2b. Ring lifecycle: no allocation when off, recycled across spawns
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracing_off_threads_allocate_no_rings() {
+    let _g = locked();
+    trace::set_enabled(false);
+    let before = trace::allocated_rings();
+    std::thread::spawn(|| {
+        trace::register_thread(0, 8_888);
+        trace::instant(Kind::KvHit, 1, 2);
+        drop(trace::span(Kind::EnginePlan, 0, 0));
+    })
+    .join()
+    .unwrap();
+    assert_eq!(
+        trace::allocated_rings(),
+        before,
+        "a thread that never emits with tracing on must not allocate a ring"
+    );
+}
+
+#[test]
+fn rings_are_recycled_across_sequential_thread_spawns() {
+    let _g = locked();
+    trace::clear();
+    trace::set_enabled(true);
+    let before = trace::allocated_rings();
+    for i in 0..32u32 {
+        std::thread::spawn(move || {
+            trace::register_thread(0, 9_000 + i);
+            trace::instant(Kind::KvHit, i as u64, 0);
+        })
+        .join()
+        .unwrap();
+    }
+    trace::set_enabled(false);
+    let after = trace::allocated_rings();
+    // each thread exits (releasing its ring) before the next spawns, so at
+    // most one new ring is ever allocated — the rest reuse it
+    assert!(
+        after <= before + 1,
+        "sequential spawns must recycle rings, not grow the registry: \
+         {before} -> {after}"
+    );
+    trace::clear();
+}
+
+// ---------------------------------------------------------------------------
 // 3. The hard bar: tracing on/off never changes a token stream
 // ---------------------------------------------------------------------------
 
