@@ -2,7 +2,7 @@
 # cites: it lowers the L2 JAX model (with the L1 Pallas kernel inside) to
 # HLO text + npy weights + manifest under artifacts/, incrementally.
 
-.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke cache-smoke trace-smoke bench bench-check ci
+.PHONY: artifacts artifacts-force build test figures cluster-smoke chaos-smoke cache-smoke trace-smoke bench bench-check lint loom miri tsan ci
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -78,10 +78,49 @@ bench-check: build
 	cargo bench --bench decision_micro -- --quick --json BENCH_decision.fresh.json
 	python python/bench_check.py BENCH_decision.json BENCH_decision.fresh.json
 
-# What .github/workflows/ci.yml runs: fmt + clippy gates, release build +
-# tests, the cluster/chaos/cache/trace smokes, the bench JSON, python
-# kernel/model tests (hypothesis optional — shim fallback).
+# Concurrency lint (DESIGN.md §15): source-level, no Rust toolchain
+# needed. Every `unsafe` needs a `// SAFETY:`, every mutating Relaxed
+# atomic op needs an `// ordering:`, and hot-path files (decision
+# service/slots, ringbuf) may not take locks outside tests without a
+# documented `cold` waiver. Zero violations is a CI gate.
+lint:
+	python python/lint_concurrency.py rust/src --json results/lint_concurrency.json
+
+# Loom model checking of the lock-free decision plane (DESIGN.md §15):
+# exhaustively explores thread interleavings (bounded at 3 preemptions)
+# of the MPMC ring, slot table, SeqRec, and flight ring — including
+# regression models for the PR 6 dead-claim-release race and the PR 9
+# flight-ring torn-record race. Requires the cfg-gated dependency
+#   [target.'cfg(loom)'.dependencies] loom = "0.7"
+# in Cargo.toml; without --cfg loom the models compile to an empty test
+# crate and normal builds never see loom.
+loom:
+	RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+		cargo test --release --test loom_models
+
+# Miri (nightly): UB interpreter over the ringbuf + slot-table unit
+# tests — catches stacked-borrows/provenance bugs loom cannot see.
+# Tests scale themselves down under cfg(miri). Slow; nightly CI lane.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation" \
+		cargo +nightly miri test -q ringbuf:: decision::slots::
+
+# ThreadSanitizer (nightly): runs the lockfree_service integration
+# suite — real OS threads, real weak-memory reorderings on the actual
+# codegen. Complements loom (model) and Miri (single-interleaving UB).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" \
+		cargo +nightly test --release --test lockfree_service \
+		-Zbuild-std --target x86_64-unknown-linux-gnu
+
+# What .github/workflows/ci.yml runs: the concurrency lint, fmt +
+# clippy gates, release build + tests, the cluster/chaos/cache/trace
+# smokes, the bench JSON, python kernel/model tests (hypothesis
+# optional — shim fallback). Loom/Miri/TSan run as separate CI lanes
+# (`make loom|miri|tsan`), not here — loom explores interleavings for
+# minutes and the sanitizer lanes need nightly.
 ci:
+	$(MAKE) lint
 	cargo fmt --check
 	cargo clippy --release --all-targets -- -D warnings
 	cargo build --release

@@ -1,0 +1,395 @@
+#!/usr/bin/env python3
+"""Source-level concurrency lint for the lock-free decision plane.
+
+Runs in `make ci` without a Rust toolchain: the rules below are enforced
+by scanning the Rust sources directly (comment/string-aware, but purely
+lexical — no parser, no macro expansion). Three rules (DESIGN.md §15):
+
+R1  unsafe-needs-safety   Every `unsafe` keyword (block, impl, trait)
+                          must carry a `// SAFETY:` comment — on the same
+                          line, anywhere within the statement, or in the
+                          contiguous comment block immediately above the
+                          statement.
+
+R2  relaxed-needs-why     Every *mutating* atomic operation (store, swap,
+                          fetch_*, compare_exchange*) whose arguments
+                          mention `Ordering::Relaxed` — including a
+                          Relaxed CAS failure ordering — must carry an
+                          `// ordering:` comment explaining why relaxed
+                          is sound. Pure loads are exempt: a mutating
+                          relaxed op can silently unpublish data, a
+                          relaxed load is at worst stale.
+                          Files in ALLOWLIST_RELAXED (monotonic metrics
+                          counters) are exempt wholesale.
+
+R3  no-mutex-hot-path     Hot-path files (the submit/decide/collect path:
+                          `decision/service.rs`, `decision/slots.rs`,
+                          `ringbuf/*`) must not mention `Mutex`/`RwLock`
+                          outside `#[cfg(test)]` modules and `use` lines,
+                          unless the site carries a comment containing
+                          "cold" (a documented cold-path waiver).
+
+Usage:
+    python3 python/lint_concurrency.py rust/src [--json out.json]
+
+Exit status 1 when violations exist; diagnostics are `file:line:` lines.
+Importable: `lint_source(text, relpath)` / `lint_tree(root)`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# Files whose relaxed mutations are exempt wholesale (R2): monotonic
+# observability counters with no happens-before obligations.
+ALLOWLIST_RELAXED = ("trace/metrics.rs",)
+
+# Hot-path files for R3, matched as suffixes of the repo-relative path.
+HOT_PATH_SUFFIXES = ("decision/service.rs", "decision/slots.rs")
+HOT_PATH_DIRS = ("ringbuf/",)
+
+# Mutating atomic operations (R2). Loads are deliberately absent.
+MUTATING_OPS = (
+    "store|swap|fetch_add|fetch_sub|fetch_or|fetch_and|fetch_xor|fetch_nand|"
+    "fetch_max|fetch_min|fetch_update|compare_exchange_weak|compare_exchange"
+)
+MUTATING_RE = re.compile(r"\.(%s)\s*\(" % MUTATING_OPS)
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+LOCK_RE = re.compile(r"\b(Mutex|RwLock)\b")
+CHAR_LIT_RE = re.compile(r"'(\\.|[^\\'])'")
+
+
+def split_code_comments(text: str) -> tuple[list[str], list[str]]:
+    """Split source into per-line (code, comment-text) pairs.
+
+    Strings and char literals are blanked out of the code stream (so
+    tokens inside them never match a rule) and comment text is collected
+    separately per line (so annotations can be searched). Block comments
+    nest, as in Rust.
+    """
+    code_lines: list[str] = []
+    comment_lines: list[str] = []
+    code: list[str] = []
+    comment: list[str] = []
+    i = 0
+    n = len(text)
+    block_depth = 0  # /* */ nesting
+
+    def endline() -> None:
+        code_lines.append("".join(code))
+        comment_lines.append("".join(comment))
+        code.clear()
+        comment.clear()
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            endline()
+            i += 1
+            continue
+        if block_depth > 0:
+            if text.startswith("/*", i):
+                block_depth += 1
+                i += 2
+            elif text.startswith("*/", i):
+                block_depth -= 1
+                i += 2
+            else:
+                comment.append(c)
+                i += 1
+            continue
+        if text.startswith("//", i):
+            j = text.find("\n", i)
+            j = n if j < 0 else j
+            comment.append(text[i + 2 : j].strip("/! "))
+            i = j
+            continue
+        if text.startswith("/*", i):
+            block_depth = 1
+            i += 2
+            continue
+        if c == '"':
+            # String literal (a preceding r#..# raw prefix was consumed
+            # below); skip to the unescaped closing quote.
+            i += 1
+            while i < n:
+                if text[i] == "\\":
+                    i += 2
+                elif text[i] == '"':
+                    i += 1
+                    break
+                else:
+                    if text[i] == "\n":
+                        endline()
+                    i += 1
+            code.append('""')
+            continue
+        if c == "r" and i + 1 < n and text[i + 1] in "\"#":
+            # Raw string r"..." / r#"..."#: find the matching close.
+            j = i + 1
+            hashes = 0
+            while j < n and text[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and text[j] == '"':
+                close = '"' + "#" * hashes
+                k = text.find(close, j + 1)
+                k = n if k < 0 else k + len(close)
+                for ch in text[i:k]:
+                    if ch == "\n":
+                        endline()
+                code.append('""')
+                i = k
+                continue
+        if c == "'":
+            m = CHAR_LIT_RE.match(text, i)
+            if m:
+                code.append("''")
+                i = m.end()
+                continue
+            # lifetime tick: keep as-is
+        code.append(c)
+        i += 1
+    endline()
+    return code_lines, comment_lines
+
+
+def statement_start(code_lines: list[str], line: int) -> int:
+    """First line of the statement containing `line` (0-based).
+
+    Walks upward while the previous line is non-empty code that does not
+    end a statement/block (`;`, `{`, `}`) — i.e. while `line` is a
+    continuation of it.
+    """
+    s = line
+    while s > 0:
+        prev = code_lines[s - 1].strip()
+        if not prev or prev.endswith((";", "{", "}")):
+            break
+        # Attribute lines start their own construct; don't walk past them.
+        if prev.startswith("#["):
+            break
+        s -= 1
+    return s
+
+
+def has_annotation(
+    code_lines: list[str],
+    comment_lines: list[str],
+    first: int,
+    last: int,
+    token: str,
+) -> bool:
+    """Is `token` present in a comment attached to lines [first, last]?
+
+    Attached means: on any line of the statement/call itself, or in the
+    contiguous comment-only block immediately above `first`.
+    """
+    token = token.lower()
+    for ln in range(first, min(last + 1, len(comment_lines))):
+        if token in comment_lines[ln].lower():
+            return True
+    ln = first - 1
+    while ln >= 0 and not code_lines[ln].strip() and comment_lines[ln].strip():
+        if token in comment_lines[ln].lower():
+            return True
+        ln -= 1
+    return False
+
+
+def test_module_lines(code_lines: list[str]) -> set[int]:
+    """Lines (0-based) inside `#[cfg(test)] mod { ... }` blocks."""
+    out: set[int] = set()
+    n = len(code_lines)
+    for ln in range(n):
+        if "#[cfg(test)]" not in code_lines[ln]:
+            continue
+        # Find the `mod` item this attribute decorates and its brace span.
+        m = ln
+        while m < n and "mod " not in code_lines[m]:
+            m += 1
+            if m - ln > 4:  # attribute decorates something else
+                m = -1
+                break
+        if m < 0:
+            continue
+        depth = 0
+        opened = False
+        for k in range(m, n):
+            depth += code_lines[k].count("{") - code_lines[k].count("}")
+            if "{" in code_lines[k]:
+                opened = True
+            if opened:
+                out.add(k)
+            if opened and depth <= 0:
+                break
+    return out
+
+
+def call_span(code_lines: list[str], line: int, col: int) -> tuple[int, str]:
+    """(last line, argument text) of the call whose `(` is at line:col."""
+    depth = 0
+    args: list[str] = []
+    for ln in range(line, len(code_lines)):
+        seg = code_lines[ln][col:] if ln == line else code_lines[ln]
+        for ch in seg:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return ln, "".join(args)
+            if depth >= 1:
+                args.append(ch)
+        args.append("\n")
+    return len(code_lines) - 1, "".join(args)
+
+
+def is_hot_path(relpath: str) -> bool:
+    rp = relpath.replace("\\", "/")
+    if any(rp.endswith(sfx) for sfx in HOT_PATH_SUFFIXES):
+        return True
+    return any(("/" + d) in ("/" + rp) for d in HOT_PATH_DIRS)
+
+
+def is_relaxed_allowlisted(relpath: str) -> bool:
+    rp = relpath.replace("\\", "/")
+    return any(rp.endswith(sfx) for sfx in ALLOWLIST_RELAXED)
+
+
+def lint_source(text: str, relpath: str) -> dict:
+    """Lint one file's source. Returns {violations, waivers, allowlisted}."""
+    code_lines, comment_lines = split_code_comments(text)
+    violations: list[dict] = []
+    waivers: list[dict] = []
+    allowlisted: list[dict] = []
+    tests = test_module_lines(code_lines)
+
+    def report(rule: str, line: int, message: str) -> None:
+        violations.append(
+            {"rule": rule, "file": relpath, "line": line + 1, "message": message}
+        )
+
+    # --- R1: unsafe needs SAFETY -----------------------------------------
+    seen_stmts: set[int] = set()
+    for ln, code in enumerate(code_lines):
+        if not UNSAFE_RE.search(code):
+            continue
+        first = statement_start(code_lines, ln)
+        if first in seen_stmts:
+            continue
+        seen_stmts.add(first)
+        # The statement may span several lines; scan to its end (the next
+        # line whose code ends with ; or { or } at or after `ln`).
+        last = ln
+        while last + 1 < len(code_lines):
+            stripped = code_lines[last].strip()
+            if stripped.endswith((";", "{", "}")):
+                break
+            last += 1
+        if not has_annotation(code_lines, comment_lines, first, last, "safety:"):
+            report(
+                "unsafe-needs-safety",
+                ln,
+                "`unsafe` without a `// SAFETY:` comment",
+            )
+
+    # --- R2: mutating Relaxed needs an ordering comment -------------------
+    allow_relaxed = is_relaxed_allowlisted(relpath)
+    for ln, code in enumerate(code_lines):
+        for m in MUTATING_RE.finditer(code):
+            open_col = code.index("(", m.end() - 1)
+            last, args = call_span(code_lines, ln, open_col)
+            if "Relaxed" not in args:
+                continue
+            if allow_relaxed:
+                allowlisted.append(
+                    {"rule": "relaxed-needs-why", "file": relpath, "line": ln + 1}
+                )
+                continue
+            first = statement_start(code_lines, ln)
+            if has_annotation(code_lines, comment_lines, first, last, "ordering:"):
+                continue
+            report(
+                "relaxed-needs-why",
+                ln,
+                "mutating atomic op with Ordering::Relaxed lacks an "
+                "`// ordering:` comment",
+            )
+
+    # --- R3: no locks on hot-path files -----------------------------------
+    if is_hot_path(relpath):
+        for ln, code in enumerate(code_lines):
+            if ln in tests:
+                continue
+            m = LOCK_RE.search(code)
+            if not m:
+                continue
+            if code.lstrip().startswith("use ") or code.lstrip().startswith("pub use "):
+                continue
+            first = statement_start(code_lines, ln)
+            if has_annotation(code_lines, comment_lines, first, ln, "cold"):
+                waivers.append(
+                    {
+                        "rule": "no-mutex-hot-path",
+                        "file": relpath,
+                        "line": ln + 1,
+                        "token": m.group(1),
+                    }
+                )
+                continue
+            report(
+                "no-mutex-hot-path",
+                ln,
+                f"`{m.group(1)}` on a hot-path file without a cold-path "
+                "waiver comment",
+            )
+
+    return {"violations": violations, "waivers": waivers, "allowlisted": allowlisted}
+
+
+def lint_tree(root: str | Path) -> dict:
+    """Lint every `.rs` file under `root`. Returns the merged report."""
+    root = Path(root)
+    report = {"violations": [], "waivers": [], "allowlisted": [], "files": 0}
+    for path in sorted(root.rglob("*.rs")):
+        rel = path.relative_to(root).as_posix()
+        result = lint_source(path.read_text(encoding="utf-8"), rel)
+        report["files"] += 1
+        for key in ("violations", "waivers", "allowlisted"):
+            report[key].extend(result[key])
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("root", help="directory of Rust sources (e.g. rust/src)")
+    ap.add_argument("--json", help="write the full JSON report here")
+    args = ap.parse_args(argv)
+
+    report = lint_tree(args.root)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2) + "\n", encoding="utf-8")
+
+    for v in report["violations"]:
+        print(f"{v['file']}:{v['line']}: [{v['rule']}] {v['message']}")
+    nv = len(report["violations"])
+    print(
+        f"lint_concurrency: {report['files']} files, {nv} violations, "
+        f"{len(report['waivers'])} waivers, "
+        f"{len(report['allowlisted'])} allowlisted relaxed sites"
+    )
+    return 1 if nv else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,312 @@
+"""Unit tests for the concurrency lint (python/lint_concurrency.py).
+
+Each fixture is a minimal Rust snippet exercising one rule edge; the final
+test runs the lint over the real tree and requires zero violations — the
+gate `make lint` enforces in CI.
+"""
+
+import json
+import os
+import textwrap
+
+from lint_concurrency import lint_source, lint_tree, main
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def rs(snippet: str) -> str:
+    return textwrap.dedent(snippet)
+
+
+def violations(text: str, relpath: str = "foo.rs"):
+    return lint_source(rs(text), relpath)["violations"]
+
+
+def rules(text: str, relpath: str = "foo.rs"):
+    return [v["rule"] for v in violations(text, relpath)]
+
+
+# --- R1: unsafe-needs-safety -------------------------------------------------
+
+
+def test_unsafe_without_safety_flagged():
+    vs = violations(
+        """
+        fn f(p: *const u32) -> u32 {
+            unsafe { *p }
+        }
+        """
+    )
+    assert [v["rule"] for v in vs] == ["unsafe-needs-safety"]
+    assert vs[0]["line"] == 3
+
+
+def test_unsafe_with_safety_above_passes():
+    assert not violations(
+        """
+        fn f(p: *const u32) -> u32 {
+            // SAFETY: caller guarantees p is valid and aligned.
+            unsafe { *p }
+        }
+        """
+    )
+
+
+def test_unsafe_with_same_line_safety_passes():
+    assert not violations(
+        """
+        fn f(p: *const u32) -> u32 {
+            unsafe { *p } // SAFETY: caller contract.
+        }
+        """
+    )
+
+
+def test_unsafe_impl_needs_safety():
+    assert rules(
+        """
+        unsafe impl Send for Foo {}
+        """
+    ) == ["unsafe-needs-safety"]
+    assert not violations(
+        """
+        // SAFETY: all fields are atomics; cross-thread access is synchronized
+        // by the slot state machine.
+        unsafe impl Send for Foo {}
+        """
+    )
+
+
+def test_unsafe_in_string_or_comment_not_flagged():
+    assert not violations(
+        """
+        fn f() {
+            let s = "unsafe { nope }";
+            // this mentions unsafe but is a comment
+            let _ = s;
+        }
+        """
+    )
+
+
+def test_multiline_statement_annotation_reaches_unsafe_line():
+    # SAFETY on the comment block above a statement whose `unsafe` sits on
+    # a continuation line.
+    assert not violations(
+        """
+        fn f(c: &Cell) {
+            // SAFETY: exclusive by state machine.
+            let v = c
+                .with_mut(|p| unsafe { (*p).take() });
+            let _ = v;
+        }
+        """
+    )
+
+
+# --- R2: relaxed-needs-why ---------------------------------------------------
+
+
+def test_relaxed_store_without_comment_flagged():
+    assert rules(
+        """
+        fn f(a: &AtomicU64) {
+            a.store(1, Ordering::Relaxed);
+        }
+        """
+    ) == ["relaxed-needs-why"]
+
+
+def test_relaxed_store_with_ordering_comment_passes():
+    assert not violations(
+        """
+        fn f(a: &AtomicU64) {
+            // ordering: Relaxed — advisory counter, no reader depends on it.
+            a.store(1, Ordering::Relaxed);
+        }
+        """
+    )
+
+
+def test_relaxed_load_is_exempt():
+    assert not violations(
+        """
+        fn f(a: &AtomicU64) -> u64 {
+            a.load(Ordering::Relaxed)
+        }
+        """
+    )
+
+
+def test_multiline_cas_with_relaxed_failure_detected():
+    text = """
+        fn f(a: &AtomicBool) {
+            a.compare_exchange(
+                false,
+                true,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            )
+            .ok();
+        }
+        """
+    assert rules(text) == ["relaxed-needs-why"]
+    assert not violations(
+        """
+        fn f(a: &AtomicBool) {
+            // ordering: Acquire pairs with the release; Relaxed failure is
+            // fine — a lost race reads nothing through the flag.
+            a.compare_exchange(
+                false,
+                true,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            )
+            .ok();
+        }
+        """
+    )
+
+
+def test_non_relaxed_rmw_passes_without_comment():
+    assert not violations(
+        """
+        fn f(a: &AtomicU64) {
+            a.fetch_add(1, Ordering::AcqRel);
+        }
+        """
+    )
+
+
+def test_allowlisted_file_reports_but_passes():
+    res = lint_source(
+        rs(
+            """
+            fn f(a: &AtomicU64) {
+                a.fetch_add(1, Ordering::Relaxed);
+            }
+            """
+        ),
+        "trace/metrics.rs",
+    )
+    assert not res["violations"]
+    assert len(res["allowlisted"]) == 1
+
+
+# --- R3: no-mutex-hot-path ---------------------------------------------------
+
+
+def test_mutex_on_hot_path_flagged():
+    assert rules(
+        """
+        struct S {
+            m: Mutex<Vec<u32>>,
+        }
+        """,
+        "decision/slots.rs",
+    ) == ["no-mutex-hot-path"]
+
+
+def test_mutex_off_hot_path_passes():
+    assert not violations(
+        """
+        struct S {
+            m: Mutex<Vec<u32>>,
+        }
+        """,
+        "engine/core.rs",
+    )
+
+
+def test_use_line_exempt_on_hot_path():
+    assert not violations(
+        """
+        use std::sync::{Arc, Mutex};
+        """,
+        "ringbuf/mod.rs",
+    )
+
+
+def test_cold_waiver_on_hot_path():
+    res = lint_source(
+        rs(
+            """
+            struct S {
+                // cold: refill path only, never on submit/decide/collect.
+                m: Mutex<Vec<u32>>,
+            }
+            """
+        ),
+        "ringbuf/mod.rs",
+    )
+    assert not res["violations"]
+    assert len(res["waivers"]) == 1
+    assert res["waivers"][0]["token"] == "Mutex"
+
+
+def test_rwlock_also_flagged():
+    assert rules(
+        """
+        struct S {
+            m: RwLock<u32>,
+        }
+        """,
+        "decision/service.rs",
+    ) == ["no-mutex-hot-path"]
+
+
+def test_test_module_ignored_on_hot_path():
+    assert not violations(
+        """
+        struct S {
+            x: u32,
+        }
+
+        #[cfg(test)]
+        mod tests {
+            use std::sync::Mutex;
+
+            #[test]
+            fn t() {
+                let m = Mutex::new(1);
+                let _ = m.lock();
+            }
+        }
+        """,
+        "ringbuf/mpmc.rs",
+    )
+
+
+# --- tree / CLI ---------------------------------------------------------------
+
+
+def test_lint_tree_json_shape(tmp_path):
+    src = tmp_path / "decision"
+    src.mkdir()
+    (src / "slots.rs").write_text("fn f(p: *const u8) { unsafe { p.read() }; }\n")
+    report = lint_tree(tmp_path)
+    assert set(report) == {"violations", "waivers", "allowlisted", "files"}
+    assert report["files"] == 1
+    (v,) = report["violations"]
+    assert set(v) == {"rule", "file", "line", "message"}
+    assert v["file"] == "decision/slots.rs"
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "a.rs").write_text("fn f(a: &A) { a.store(1, Ordering::Relaxed); }\n")
+    out = tmp_path / "report.json"
+    assert main([str(bad), "--json", str(out)]) == 1
+    assert len(json.loads(out.read_text())["violations"]) == 1
+
+    good = tmp_path / "good"
+    good.mkdir()
+    (good / "a.rs").write_text("fn f() {}\n")
+    assert main([str(good)]) == 0
+
+
+def test_real_tree_has_zero_violations():
+    report = lint_tree(os.path.join(REPO, "rust", "src"))
+    assert report["files"] > 0
+    assert report["violations"] == [], report["violations"]

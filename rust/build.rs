@@ -1,0 +1,5 @@
+fn main() {
+    // `--cfg loom` is injected via RUSTFLAGS by `make loom`; declare it
+    // so rustc's cfg checking doesn't warn on the shim's cfg gates.
+    println!("cargo::rustc-check-cfg=cfg(loom)");
+}

@@ -36,7 +36,7 @@ use crate::decision::HotVocab;
 use crate::engine::{DataPlane, Engine, Request, Sequence};
 use crate::metrics::Recorder;
 use crate::ringbuf::mpmc;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -72,12 +72,21 @@ impl ReplicaRole {
 /// router reads it for the load-aware policies (`LeastOutstanding` reads
 /// `depth`, `KvPressure` reads `kv_free_blocks`). End-of-run quantities
 /// (preemptions, token counts) travel in [`ReplicaResult`] instead.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ReplicaStatus {
     /// Waiting + running sequences inside the engine.
     pub depth: AtomicUsize,
     /// Free KV blocks right now (live occupancy).
     pub kv_free_blocks: AtomicUsize,
+}
+
+// Manual impl: the loom-shimmed atomics (`--cfg loom`) don't implement
+// `Default`, so `#[derive(Default)]` would not compile under the model
+// checker.
+impl Default for ReplicaStatus {
+    fn default() -> Self {
+        ReplicaStatus { depth: AtomicUsize::new(0), kv_free_blocks: AtomicUsize::new(0) }
+    }
 }
 
 /// Inbound work: fresh requests, or resumes (prefill→decode handoffs and
@@ -305,6 +314,9 @@ fn run_worker<D: DataPlane>(
     kill: Arc<AtomicBool>,
     idle_poll_us: u64,
 ) -> crate::Result<ReplicaResult> {
+    // ordering: Relaxed — single-writer advisory freshness: the heartbeat
+    // is a routing hint the router may read one turn stale; no data hangs
+    // off it.
     status
         .kv_free_blocks
         .store(engine.kv_free_blocks(), Ordering::Relaxed);
@@ -319,7 +331,10 @@ fn run_worker<D: DataPlane>(
             }
         }
         let progressed = engine.step_once()?;
+        // ordering: Relaxed — single-writer advisory heartbeat (see above);
+        // load-aware routing tolerates a stale depth/occupancy by design.
         status.depth.store(engine.queue_depth(), Ordering::Relaxed);
+        // ordering: Relaxed — same advisory heartbeat store.
         status
             .kv_free_blocks
             .store(engine.kv_free_blocks(), Ordering::Relaxed);

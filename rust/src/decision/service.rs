@@ -57,9 +57,10 @@ use crate::config::SamplerConfig;
 use crate::ringbuf::mpmc;
 use crate::tensor::ShardedLogits;
 use crate::trace;
+use crate::util::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use crate::util::sync::Mutex;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -513,7 +514,9 @@ impl SamplerService {
             incarnations: (0..m).map(|_| AtomicU32::new(1)).collect(),
             respawns: (0..m).map(|_| AtomicU32::new(0)).collect(),
             stuck_respawns: AtomicU32::new(0),
+            // cold: join-handle bookkeeping — touched by recovery/shutdown only
             workers: Mutex::new((0..m).map(|_| None).collect()),
+            // cold: recovery stats — written on the respawn path only
             recovery_log: Mutex::new(RecoveryStats::default()),
             cfg: cfg.clone(),
             hot,
@@ -627,9 +630,13 @@ impl SamplerService {
     /// Assemble a completed task's cells and reset the crash-loop
     /// breakers (a completed collect is the pool's forward progress).
     fn assemble(&self, taken: TakenTask) -> Collected {
+        // ordering: Relaxed — the breakers are advisory counters compared
+        // against a threshold under the workers mutex; a stale read only
+        // delays a reset by one collect, never corrupts the protocol.
         self.stuck_respawns.store(0, Ordering::Relaxed);
         for &w in &taken.claimants {
             if let Some(r) = self.respawns.get(w) {
+                // ordering: Relaxed — same advisory breaker-reset as above.
                 r.store(0, Ordering::Relaxed);
             }
         }
@@ -686,10 +693,14 @@ impl SamplerService {
             anyhow::bail!("{}", dead[0].1);
         }
         for (id, msg) in &dead {
+            // ordering: Relaxed — incremented under the workers mutex (the
+            // only writer path); the lock serializes breaker arithmetic.
             let n = self.respawns[*id].fetch_add(1, Ordering::Relaxed) + 1;
             if n > MAX_CONSECUTIVE_RESPAWNS {
                 anyhow::bail!("sampler {id} crash-looping ({n} consecutive respawns): {msg}");
             }
+            // ordering: Relaxed — mutex-serialized like the per-worker
+            // counter; concurrent collect resets racing it are benign.
             let pool_wide = self.stuck_respawns.fetch_add(1, Ordering::Relaxed) + 1;
             if pool_wide > self.m as u32 * (MAX_CONSECUTIVE_RESPAWNS + 1) {
                 anyhow::bail!(

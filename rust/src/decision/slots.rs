@@ -30,11 +30,27 @@
 //! while any validated reader exists. Pins are held only across the
 //! atomic claim/write/read sections — never across a decision — so
 //! reclamation never waits on user code.
+//!
+//! The pin/reclaim pair is a store-buffering (Dekker) race: the reader
+//! stores `readers += 1` then loads `state`; the reclaimer stores
+//! `state = RESERVED` then loads `readers`. With only Acquire/Release
+//! both sides may read their stale counterpart — the reader validates
+//! against the *old* PUBLISHED while the reclaimer sees `readers == 0`
+//! and starts dropping contents under the pin. The four racing
+//! operations are therefore SeqCst (free on x86: the RMWs are already
+//! locked instructions, SeqCst loads are plain `mov`s): in the single
+//! total order, either the reclaimer's state CAS precedes the reader's
+//! state load (the reader sees RESERVED and backs out) or the reader's
+//! increment precedes the reclaimer's readers load (the reclaimer sees
+//! the pin and backs off). `rust/tests/loom_models.rs` model-checks this
+//! protocol — including the PR 6 regression (dead-claim release racing a
+//! live re-claim across incarnations) — under `make loom`.
 
 use super::service::{DecisionBatch, IterationTask};
 use crate::trace;
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::cell::UnsafeCell;
+use crate::util::sync::thread;
 use std::sync::Arc;
 
 const FREE: u64 = 0;
@@ -63,12 +79,18 @@ struct Slot {
     reported: AtomicU64,
     claims: Box<[AtomicU64]>,
     cells: Box<[UnsafeCell<Option<DecisionBatch>>]>,
+    /// The task `Arc`. Written only during init (RESERVED + quiesced);
+    /// read-only for the rest of the slot's life — `try_take` *clones*
+    /// it out rather than moving it, so a pinned reader (the dead-claim
+    /// sweep) can never race a collector's write. The slot's reference
+    /// drops at the next reclamation of this slot.
     task: UnsafeCell<Option<Arc<IterationTask>>>,
 }
 
-// Cell/task contents are only touched by the claim/pin/state protocol
-// above; every access path is argued at its unsafe block.
+// SAFETY: cell/task contents are only touched under the claim/pin/state
+// protocol above; every access path is argued at its unsafe block.
 unsafe impl Send for Slot {}
+// SAFETY: as above — the protocol serializes all cell/task access.
 unsafe impl Sync for Slot {}
 
 /// RAII pin on one slot (see module docs). Dropping it quiesces the read.
@@ -78,11 +100,14 @@ pub struct Pin<'a> {
 
 impl Drop for Pin<'_> {
     fn drop(&mut self) {
+        // Release orders this reader's content reads before the unpin, so
+        // a reclaimer that observes the decrement cannot drop contents
+        // under a read that is still in flight.
         self.slot.readers.fetch_sub(1, Ordering::Release);
     }
 }
 
-/// A completed task moved out of its slot by the collector.
+/// A completed task collected from its slot.
 pub struct TakenTask {
     pub task: Arc<IterationTask>,
     /// One batch per cell, in cell (shard) order.
@@ -147,6 +172,8 @@ impl TaskSlots {
         task: Arc<IterationTask>,
     ) -> Result<usize, Arc<IterationTask>> {
         let n = self.slots.len();
+        // ordering: the cursor only spreads allocation scans across slots
+        // for load balance; any value is correct.
         let start = self.cursor.fetch_add(1, Ordering::Relaxed);
         for off in 0..n {
             let idx = (start + off) % n;
@@ -155,33 +182,44 @@ impl TaskSlots {
             if st != FREE && st != RETIRED {
                 continue;
             }
+            // ordering: SeqCst on success — one half of the Dekker pair
+            // with `pin` (module docs): this store must be totally
+            // ordered against the readers load below and the reader's
+            // increment/validate pair. Acquire on failure only observes
+            // the newer state.
             if slot
                 .state
-                .compare_exchange(st, RESERVED, Ordering::AcqRel, Ordering::Acquire)
+                .compare_exchange(st, RESERVED, Ordering::SeqCst, Ordering::Acquire)
                 .is_err()
             {
                 continue;
             }
             // Reclamation gate: contents may only be dropped once no
-            // pinned reader remains. A racing pin that lands after the
-            // CAS sees RESERVED at validation and backs out, so a zero
-            // here is stable for the duration of the init.
-            if slot.readers.load(Ordering::Acquire) != 0 {
+            // pinned reader remains. A racing pin either lands its
+            // increment before this load (we see it and back off) or
+            // validates after our CAS, sees RESERVED, and backs out —
+            // the SeqCst total order rules out the both-stale outcome.
+            if slot.readers.load(Ordering::SeqCst) != 0 {
                 slot.state.store(st, Ordering::Release);
                 continue;
             }
-            // Exclusive: state is RESERVED (no new pins validate) and
-            // readers == 0 (no old pin outstanding).
-            unsafe {
-                *slot.task.get() = Some(task);
-                for cell in slot.cells.iter() {
-                    *cell.get() = None;
-                }
+            let id = task.iter;
+            // SAFETY: state is RESERVED (no new pin validates) and
+            // readers == 0 was observed after the SeqCst CAS (no old pin
+            // outstanding), so this thread has exclusive access to the
+            // task and cell contents until the PUBLISHED store below.
+            slot.task.with_mut(|t| unsafe { *t = Some(task) });
+            for cell in slot.cells.iter() {
+                // SAFETY: as above — RESERVED + quiesced readers.
+                cell.with_mut(|c| unsafe { *c = None });
             }
-            let id = unsafe { (*slot.task.get()).as_ref().unwrap().iter };
+            // ordering: Relaxed init stores are published by the Release
+            // store of PUBLISHED below; no reader validates before it.
             slot.task_id.store(id, Ordering::Relaxed);
+            // ordering: as above — published by the Release below.
             slot.reported.store(0, Ordering::Relaxed);
             for c in slot.claims.iter() {
+                // ordering: as above — published by the Release below.
                 c.store(0, Ordering::Relaxed);
             }
             slot.state.store(PUBLISHED, Ordering::Release);
@@ -198,7 +236,7 @@ impl TaskSlots {
                 Ok(idx) => return idx,
                 Err(back) => {
                     task = back;
-                    std::thread::yield_now();
+                    thread::yield_now();
                 }
             }
         }
@@ -207,8 +245,13 @@ impl TaskSlots {
     /// Pin slot `idx` if it still carries `task_id` in a readable state.
     pub fn pin(&self, idx: usize, task_id: u64) -> Option<Pin<'_>> {
         let slot = &self.slots[idx];
-        slot.readers.fetch_add(1, Ordering::AcqRel);
-        let st = slot.state.load(Ordering::Acquire);
+        // ordering: SeqCst increment + SeqCst validate are the reader
+        // half of the Dekker pair with `try_publish` (module docs).
+        slot.readers.fetch_add(1, Ordering::SeqCst);
+        let st = slot.state.load(Ordering::SeqCst);
+        // ordering: task_id Relaxed is sound — it was stored before the
+        // PUBLISHED Release store, and the validate above reads PUBLISHED
+        // with at least Acquire strength, so the id is the fresh one.
         if st == PUBLISHED && slot.task_id.load(Ordering::Relaxed) == task_id {
             Some(Pin { slot })
         } else {
@@ -231,15 +274,21 @@ impl TaskSlots {
     /// writer, the pin keeps the contents alive across the write.
     pub fn publish_cell(&self, idx: usize, shard: usize, batch: DecisionBatch) {
         let slot = &self.slots[idx];
-        unsafe { *slot.cells[shard].get() = Some(batch) };
+        // SAFETY: the caller won cell `shard`'s claim CAS, making this
+        // the cell's unique writer; the pin keeps reclamation away, and
+        // the collector only reads the cell after the reported bit below.
+        slot.cells[shard].with_mut(|c| unsafe { *c = Some(batch) });
         slot.reported.fetch_or(1u64 << shard, Ordering::AcqRel);
     }
 
     /// Collect task `task_id` if every cell reported: moves the batches
-    /// (and the task `Arc`, releasing its logits) out and retires the
-    /// slot. `None` while incomplete or unknown.
+    /// out (cloning the task `Arc`; the slot's reference is reclaimed at
+    /// the next allocation) and retires the slot. `None` while incomplete
+    /// or unknown.
     pub fn try_take(&self, task_id: u64) -> Option<TakenTask> {
         for slot in self.slots.iter() {
+            // ordering: task_id Relaxed after the Acquire state load —
+            // fresh for the same reason as in `pin`.
             if slot.state.load(Ordering::Acquire) != PUBLISHED
                 || slot.task_id.load(Ordering::Relaxed) != task_id
             {
@@ -255,9 +304,11 @@ impl TaskSlots {
             {
                 return None; // another collector of the same id won
             }
-            // Exclusive: COLLECTING blocks writers (pin validation) and
-            // allocation (needs RETIRED); all cell writes happened-before
-            // the reported mask read above.
+            // Cell access is exclusive: COLLECTING blocks writers (claim
+            // holders re-validate their pin) and allocation (needs
+            // RETIRED); all cell writes happened-before the reported mask
+            // read above. The task cell is NOT exclusive — a pinned
+            // sweep may be reading it — so it is cloned, never moved.
             let claimants: Vec<usize> = slot
                 .claims
                 .iter()
@@ -266,9 +317,17 @@ impl TaskSlots {
             let batches: Vec<DecisionBatch> = slot
                 .cells
                 .iter()
-                .filter_map(|c| unsafe { (*c.get()).take() })
+                // SAFETY: exclusive per the COLLECTING argument above.
+                .filter_map(|c| c.with_mut(|p| unsafe { (*p).take() }))
                 .collect();
-            let task = unsafe { (*slot.task.get()).take() }.expect("published slot has task");
+            // SAFETY: shared read — the task cell is written only during
+            // init (RESERVED + quiesced, happens-before PUBLISHED which
+            // this thread observed); concurrent pinned readers also only
+            // read it.
+            let task = slot
+                .task
+                .with(|t| unsafe { (*t).clone() })
+                .expect("published slot has task");
             slot.state.store(RETIRED, Ordering::Release);
             return Some(TakenTask { task, batches, claimants });
         }
@@ -283,6 +342,8 @@ impl TaskSlots {
     /// namespaces are fine.
     pub fn purge_namespace(&self, task_base: u64, ns_mask: u64) {
         for slot in self.slots.iter() {
+            // ordering: task_id Relaxed after the Acquire state load —
+            // fresh for the same reason as in `pin`.
             if slot.state.load(Ordering::Acquire) == PUBLISHED
                 && slot.task_id.load(Ordering::Relaxed) & ns_mask == task_base
             {
@@ -303,6 +364,8 @@ impl TaskSlots {
     pub fn sweep_dead_claims(&self, packed_dead: u64) -> Vec<Resubmit> {
         let mut out = Vec::new();
         for (idx, slot) in self.slots.iter().enumerate() {
+            // ordering: an unvalidated probe — `pin` below re-validates
+            // (state, task_id) with the full protocol before any use.
             let task_id = slot.task_id.load(Ordering::Relaxed);
             let Some(pin) = self.pin(idx, task_id) else { continue };
             let reported = slot.reported.load(Ordering::Acquire);
@@ -323,8 +386,13 @@ impl TaskSlots {
                     }
                 }
                 if claim.load(Ordering::Acquire) == 0 {
-                    // Pinned + PUBLISHED: the task field is stable.
-                    let task = unsafe { (*slot.task.get()).as_ref().unwrap().clone() };
+                    // SAFETY: shared read under the pin — the task cell is
+                    // only written during init, which cannot start while
+                    // this pin is held; `try_take` also only reads it.
+                    let task = slot
+                        .task
+                        .with(|t| unsafe { (*t).clone() })
+                        .expect("pinned slot has task");
                     trace::instant(trace::Kind::SlotRecover, task_id, shard as u64);
                     out.push(Resubmit { task_id, slot: idx, shard, task });
                 }
@@ -435,6 +503,34 @@ mod tests {
         );
         drop(pin);
         assert!(slots.try_publish(mk_task(6)).is_ok(), "quiesced: reusable");
+    }
+
+    /// `try_take` clones the task rather than moving it, so a collect
+    /// racing a pinned sweep reader can never invalidate the sweep's
+    /// reference — and the slot's own reference lives until reuse.
+    #[test]
+    fn collect_under_pin_keeps_sweep_reference_valid() {
+        let slots = TaskSlots::new(1, 2);
+        let idx = slots.try_publish(mk_task(11)).ok().unwrap();
+        // Cell 0 reports; cell 1's claimant (worker 0, incarnation 1)
+        // "dies" before reporting, so a sweep will list cell 1.
+        let pin = slots.pin(idx, 11).unwrap();
+        assert!(slots.try_claim(idx, 0, claim_pack(1, 1)));
+        slots.publish_cell(idx, 0, mk_batch(11, 1));
+        assert!(slots.try_claim(idx, 1, claim_pack(0, 1)));
+        drop(pin);
+        let resub = slots.sweep_dead_claims(claim_pack(0, 1));
+        assert_eq!(resub.len(), 1);
+        assert_eq!(resub[0].task.iter, 11, "sweep holds a live task clone");
+        // Respawned incarnation finishes the cell; collect succeeds while
+        // the sweep's clone is still alive.
+        let pin = slots.pin(idx, 11).unwrap();
+        assert!(slots.try_claim(idx, 1, claim_pack(0, 2)));
+        slots.publish_cell(idx, 1, mk_batch(11, 0));
+        drop(pin);
+        let taken = slots.try_take(11).expect("complete");
+        assert_eq!(taken.task.iter, resub[0].task.iter);
+        assert!(Arc::ptr_eq(&taken.task, &resub[0].task), "same task, cloned");
     }
 
     #[test]

@@ -45,6 +45,14 @@
 // that tweak one knob per run. Keep that style rather than fighting the
 // lint; everything else in clippy's default set is enforced (`make ci`).
 #![allow(clippy::field_reassign_with_default)]
+// `--cfg loom` is injected via RUSTFLAGS by `make loom` (and declared by
+// build.rs); tolerate toolchains that compile without the build script.
+#![allow(unexpected_cfgs)]
+// Concurrency hygiene for the lock-free decision plane (DESIGN.md §15):
+// every unsafe operation needs its own block (and, by `make lint`, its
+// own `// SAFETY:` argument).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_unsafe)]
 
 pub mod bench;
 pub mod cluster;

@@ -36,8 +36,12 @@
 //! was fully published (the writer's Release store on `head`
 //! happens-after its word stores) and never overwritten during the copy,
 //! so the snapshot is a consistent, gap-free suffix of the write sequence.
+//!
+//! Model-checked: `rust/tests/loom_models.rs` replays the writer-overwrite
+//! vs. snapshot race on a spare-slot ring — the regression model for the
+//! `seq == h2 - capacity` torn-record fix (`make loom`).
 
-use std::sync::atomic::{fence, AtomicU64, Ordering};
+use crate::util::sync::atomic::{fence, AtomicU64, Ordering};
 
 /// Bounded overwrite-oldest ring of `[u64; W]` records. Single writer
 /// (the owning thread); any number of concurrent snapshot readers.
@@ -91,6 +95,10 @@ impl<const W: usize> FlightRing<W> {
         // head ≥ h and filter the record this push is overwriting.
         fence(Ordering::Release);
         for (i, &w) in record.iter().enumerate() {
+            // ordering: Relaxed word stores are the seqlock fast path —
+            // the Release fence above and the Release head store below
+            // bracket them; readers discard any record these stores
+            // could have torn (snapshot validation).
             self.words[base + i].store(w, Ordering::Relaxed);
         }
         // Publish: readers that see head = h+1 see the stores above.
@@ -174,10 +182,11 @@ mod tests {
     fn concurrent_reader_never_sees_torn_records() {
         use std::sync::Arc;
         let ring: Arc<FlightRing<2>> = Arc::new(FlightRing::new(64));
+        const N: u64 = if cfg!(miri) { 2_000 } else { 100_000 };
         let writer = {
             let ring = ring.clone();
             std::thread::spawn(move || {
-                for i in 0..100_000u64 {
+                for i in 0..N {
                     ring.push(&[i, !i]);
                 }
             })
@@ -205,10 +214,11 @@ mod tests {
     fn tiny_ring_snapshots_stay_untorn_and_contiguous() {
         use std::sync::Arc;
         let ring: Arc<FlightRing<2>> = Arc::new(FlightRing::new(3));
+        const N: u64 = if cfg!(miri) { 3_000 } else { 200_000 };
         let writer = {
             let ring = ring.clone();
             std::thread::spawn(move || {
-                for i in 0..200_000u64 {
+                for i in 0..N {
                     ring.push(&[i, !i]);
                 }
             })

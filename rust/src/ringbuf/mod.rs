@@ -65,6 +65,8 @@ impl Drop for LogitsSlab {
 }
 
 struct PoolInner {
+    // cold: the free-slab stack is touched only on slab recycle/refill —
+    // samplers read acquired slabs zero-copy, never through this lock.
     free: Mutex<Vec<Box<[f32]>>>,
     max_retained: usize,
     slab_len: usize,
@@ -82,6 +84,7 @@ impl LogitsPool {
     pub fn new(slab_len: usize, max_retained: usize) -> Self {
         LogitsPool {
             inner: Arc::new(PoolInner {
+                // cold: pool refill path (see the field's note above)
                 free: Mutex::new(Vec::new()),
                 max_retained,
                 slab_len,

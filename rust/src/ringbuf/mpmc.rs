@@ -14,11 +14,14 @@
 //! consumer, used for the logits data path), this ring trades two CAS
 //! loops for full MPMC freedom — which is exactly what work stealing and
 //! multi-replica submission need.
+//!
+//! Model-checked: `rust/tests/loom_models.rs` runs producer races, steal
+//! races, wraparound, and close/drain on this exact type (`make loom`).
 
-use std::cell::UnsafeCell;
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::cell::UnsafeCell;
+use crate::util::sync::{hint, thread, Arc};
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
 
 /// Pad to a cache line to avoid false sharing between the head and tail
 /// counters (crossbeam's CachePadded, hand-rolled).
@@ -43,7 +46,12 @@ struct Inner<T> {
     closed: AtomicBool,
 }
 
+// SAFETY: the per-slot `seq` protocol hands each `val` cell to exactly one
+// thread at a time (a push owns it between its head-CAS and its seq
+// release store; a pop between its tail-CAS and its retire store), so the
+// ring is Sync whenever the payload can be sent between threads.
 unsafe impl<T: Send> Send for Inner<T> {}
+// SAFETY: as above — cell access is serialized by the seq protocol.
 unsafe impl<T: Send> Sync for Inner<T> {}
 
 /// Cloneable handle; every clone may both push and pop.
@@ -108,6 +116,9 @@ impl<T> Ring<T> {
             let diff = seq as isize - pos as isize;
             if diff == 0 {
                 // Slot empty for this lap: claim it by advancing head.
+                // ordering: Relaxed on the head CAS is sound — head is
+                // only a ticket counter; the slot's seq (Acquire above,
+                // Release below) carries all data synchronization.
                 match inner.head.0.compare_exchange_weak(
                     pos,
                     pos + 1,
@@ -115,7 +126,11 @@ impl<T> Ring<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
-                        unsafe { (*slot.val.get()).write(item) };
+                        // SAFETY: the head CAS made this thread the sole
+                        // owner of slot `pos` until the seq store below
+                        // publishes it; no reader touches the cell while
+                        // seq == pos.
+                        slot.val.with_mut(|p| unsafe { (*p).write(item) });
                         slot.seq.store(pos + 1, Ordering::Release);
                         return Ok(());
                     }
@@ -143,9 +158,9 @@ impl<T> Ring<T> {
                     item = back;
                     spins += 1;
                     if spins < 64 {
-                        std::hint::spin_loop();
+                        hint::spin_loop();
                     } else {
-                        std::thread::yield_now();
+                        thread::yield_now();
                     }
                 }
             }
@@ -162,6 +177,9 @@ impl<T> Ring<T> {
             let diff = seq as isize - (pos + 1) as isize;
             if diff == 0 {
                 // Slot full for this lap: claim it by advancing tail.
+                // ordering: Relaxed on the tail CAS is sound — tail is
+                // only a ticket counter; the slot's seq (Acquire above,
+                // Release below) carries all data synchronization.
                 match inner.tail.0.compare_exchange_weak(
                     pos,
                     pos + 1,
@@ -169,7 +187,13 @@ impl<T> Ring<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
-                        let item = unsafe { (*slot.val.get()).assume_init_read() };
+                        // SAFETY: the tail CAS made this thread the sole
+                        // owner of slot `pos`; the Acquire seq load saw
+                        // the producer's publication, so the value is
+                        // fully written, and no other thread touches the
+                        // cell until the retire store below.
+                        let item =
+                            slot.val.with_mut(|p| unsafe { (*p).assume_init_read() });
                         // Retire the slot for the push one lap ahead.
                         slot.seq.store(pos + inner.mask + 1, Ordering::Release);
                         return Ok(item);
@@ -204,9 +228,9 @@ impl<T> Ring<T> {
                 Err(PopError::Empty) => {
                     spins += 1;
                     if spins < 64 {
-                        std::hint::spin_loop();
+                        hint::spin_loop();
                     } else {
-                        std::thread::yield_now();
+                        thread::yield_now();
                     }
                 }
             }
@@ -242,14 +266,18 @@ impl<T> Ring<T> {
 impl<T> Drop for Inner<T> {
     fn drop(&mut self) {
         // Sole owner at this point: drain still-published slots so T's
-        // Drop runs (leak check covered in tests).
+        // Drop runs (leak check covered in tests). Plain loads suffice —
+        // `&mut self` proves every other handle is gone, and the final
+        // refcount decrement that got us here is an acquire edge.
         let mask = self.mask;
-        let mut pos = *self.tail.0.get_mut();
-        let head = *self.head.0.get_mut();
+        let mut pos = self.tail.0.load(Ordering::Relaxed);
+        let head = self.head.0.load(Ordering::Relaxed);
         while pos != head {
-            let slot = &mut self.slots[pos & mask];
-            if *slot.seq.get_mut() == pos + 1 {
-                unsafe { slot.val.get_mut().assume_init_drop() };
+            let slot = &self.slots[pos & mask];
+            if slot.seq.load(Ordering::Relaxed) == pos + 1 {
+                // SAFETY: slot `pos` was published and never popped, and
+                // `&mut self` makes this access exclusive.
+                slot.val.with_mut(|p| unsafe { (*p).assume_init_drop() });
             }
             pos += 1;
         }
@@ -332,7 +360,8 @@ mod tests {
     fn concurrent_steal_vs_pop_conserves_items() {
         // One "owner" and two "stealers" race pops on a shared ring while
         // three producers push: every item must surface exactly once.
-        const PER: u64 = 20_000;
+        // (Scaled down under Miri, whose interpreter runs ~1000x slower.)
+        const PER: u64 = if cfg!(miri) { 300 } else { 20_000 };
         const P: usize = 3;
         const C: usize = 3;
         let r = Ring::<u64>::new(64);
@@ -437,6 +466,7 @@ mod tests {
     fn many_producers_many_consumers_under_close() {
         // Producers race the close; consumers must still see exactly the
         // successfully-pushed prefix of each producer's stream.
+        const PER: u64 = if cfg!(miri) { 200 } else { 5_000 };
         let r = Ring::<u64>::new(16);
         let pushed = Arc::new(AtomicUsize::new(0));
         let producers: Vec<_> = (0..4)
@@ -444,8 +474,8 @@ mod tests {
                 let r = r.clone();
                 let pushed = pushed.clone();
                 thread::spawn(move || {
-                    for i in 0..5_000u64 {
-                        if r.push(pid * 5_000 + i) {
+                    for i in 0..PER {
+                        if r.push(pid * PER + i) {
                             pushed.fetch_add(1, Ordering::SeqCst);
                         } else {
                             break;

@@ -2,11 +2,14 @@
 //! the in-process analog of the paper's shared-memory rings (§4.2): one
 //! producer (a final-stage GPU worker) and one consumer (a CPU sampler)
 //! advance independently, giving the overlap SIMPLE relies on.
+//!
+//! Model-checked: `rust/tests/loom_models.rs` drives a concurrent
+//! transfer with close on this exact type (`make loom`).
 
-use std::cell::UnsafeCell;
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::cell::UnsafeCell;
+use crate::util::sync::{arc_strong_count, hint, thread, Arc};
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
 
 /// Pad to a cache line to avoid false sharing between producer and consumer
 /// indices (crossbeam's CachePadded, hand-rolled).
@@ -23,7 +26,12 @@ struct Inner<T> {
     closed: AtomicBool,
 }
 
+// SAFETY: exactly one producer writes cells in [tail, head) order and
+// exactly one consumer reads them; the Release/Acquire handoff on head
+// and tail serializes every cell access, so the ring is Sync whenever
+// the payload is Send.
 unsafe impl<T: Send> Send for Inner<T> {}
+// SAFETY: as above — single producer, single consumer, index handoff.
 unsafe impl<T: Send> Sync for Inner<T> {}
 
 /// Producer handle.
@@ -73,7 +81,10 @@ impl<T> Producer<T> {
             return Err(Full(item));
         }
         let slot = &inner.buf[head & (inner.cap - 1)];
-        unsafe { (*slot.get()).write(item) };
+        // SAFETY: single producer — only this thread writes cells — and
+        // the Acquire tail load proved the consumer has vacated slot
+        // `head - cap`, so the cell is ours until the head store below.
+        slot.with_mut(|p| unsafe { (*p).write(item) });
         inner.head.0.store(head + 1, Ordering::Release);
         Ok(())
     }
@@ -86,15 +97,15 @@ impl<T> Producer<T> {
             match self.try_push(item) {
                 Ok(()) => return true,
                 Err(Full(back)) => {
-                    if Arc::strong_count(&self.inner) == 1 {
+                    if arc_strong_count(&self.inner) == 1 {
                         return false; // consumer dropped
                     }
                     item = back;
                     spins += 1;
                     if spins < 64 {
-                        std::hint::spin_loop();
+                        hint::spin_loop();
                     } else {
-                        std::thread::yield_now();
+                        thread::yield_now();
                     }
                 }
             }
@@ -145,7 +156,10 @@ impl<T> Consumer<T> {
             };
         }
         let slot = &inner.buf[tail & (inner.cap - 1)];
-        let item = unsafe { (*slot.get()).assume_init_read() };
+        // SAFETY: single consumer — only this thread reads cells — and
+        // the Acquire head load saw the producer publish slot `tail`, so
+        // the value is fully written and ours until the tail store below.
+        let item = slot.with_mut(|p| unsafe { (*p).assume_init_read() });
         inner.tail.0.store(tail + 1, Ordering::Release);
         Ok(item)
     }
@@ -160,9 +174,9 @@ impl<T> Consumer<T> {
                 Err(PopError::Empty) => {
                     spins += 1;
                     if spins < 64 {
-                        std::hint::spin_loop();
+                        hint::spin_loop();
                     } else {
-                        std::thread::yield_now();
+                        thread::yield_now();
                     }
                 }
             }
@@ -234,7 +248,7 @@ mod tests {
     #[test]
     fn concurrent_producer_consumer_no_loss_no_dup() {
         let (p, c) = ring::<u64>(64);
-        const N: u64 = 200_000;
+        const N: u64 = if cfg!(miri) { 2_000 } else { 200_000 };
         let producer = std::thread::spawn(move || {
             for i in 0..N {
                 assert!(p.push(i));

@@ -9,7 +9,11 @@
 //! evictions, prefix hits/misses, router requeues). `--metrics-out <path>`
 //! renders the exposition; counters are process-global and monotonic.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// host atomics: these counters are const-initialized process globals,
+// deliberately outside the loom-modeled surface (util::sync docs). The
+// whole file is allowlisted by the concurrency lint — monotonic relaxed
+// counters carry no happens-before edges.
+use crate::util::sync::host::{AtomicU64, Ordering};
 
 /// Process-global decision-plane counters. Monotonic; read with
 /// [`Counters::snapshot`].

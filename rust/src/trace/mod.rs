@@ -34,8 +34,10 @@ pub mod export;
 pub mod metrics;
 
 use crate::ringbuf::flight::FlightRing;
+// host atomics: the const-initialized statics below (ENABLED, the
+// registry) live outside the loom-modeled surface — see util::sync docs.
+use crate::util::sync::host::{AtomicBool, AtomicU32, Ordering};
 use std::cell::Cell;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
@@ -386,6 +388,8 @@ fn buf() -> Option<&'static ThreadBuf> {
         None => {
             let (pid, mut tid) = tls.lane.get();
             if tid == ANON_TID {
+                // ordering: Relaxed — a pure id allocator; uniqueness
+                // comes from the RMW itself, no data is published.
                 tid = registry().next_anon_tid.fetch_add(1, Ordering::Relaxed);
                 tls.lane.set((pid, tid));
             }
@@ -401,14 +405,22 @@ fn acquire_buf(pid: u32, tid: u32) -> &'static ThreadBuf {
     let reg = registry();
     let mut bufs = reg.bufs.lock().unwrap();
     for b in bufs.iter() {
+        // ordering: Acquire on success pairs with the TLS destructor's
+        // Release of in_use; Relaxed on failure — a taken buffer is just
+        // skipped, nothing is read through it.
         if b.in_use
             .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
             .is_ok()
         {
+            // ordering: Relaxed — lane labels are advisory metadata read
+            // by the exporter; records carry their own pid/tid words.
             b.pid.store(pid, Ordering::Relaxed);
+            // ordering: as above — advisory lane label.
             b.tid.store(tid, Ordering::Relaxed);
-            // Sound: every buffer's allocation is immortal (one refcount
-            // was leaked when it was created below).
+            // SAFETY: every buffer's allocation is immortal — one
+            // refcount was leaked at creation (Arc::into_raw below) and
+            // the registry holds another forever, so the 'static
+            // reference can never dangle.
             return unsafe { &*Arc::as_ptr(b) };
         }
     }
@@ -419,10 +431,11 @@ fn acquire_buf(pid: u32, tid: u32) -> &'static ThreadBuf {
         ring: FlightRing::new(ring_cap()),
     });
     bufs.push(b.clone());
-    // The registry keeps its Arc forever; leak one refcount so the
-    // 'static reference handed to the owning thread is explicit. Rings
-    // are recycled (in_use flag), so the registry's size is bounded by
-    // the peak number of *concurrently* tracing threads.
+    // SAFETY: the registry keeps its Arc forever; leaking one refcount
+    // here makes the 'static reference handed to the owning thread
+    // sound (the allocation is immortal). Rings are recycled (in_use
+    // flag), so the registry's size is bounded by the peak number of
+    // *concurrently* tracing threads.
     unsafe { &*Arc::into_raw(b) }
 }
 
@@ -435,7 +448,11 @@ pub fn register_thread(pid: u32, tid: u32) {
     let _ = TLS.try_with(|tls| {
         tls.lane.set((pid, tid));
         if let Some(b) = tls.buf.get() {
+            // ordering: Relaxed — advisory lane re-label (see
+            // acquire_buf); only this thread writes its own buffer's
+            // labels.
             b.pid.store(pid, Ordering::Relaxed);
+            // ordering: as above — advisory lane re-label.
             b.tid.store(tid, Ordering::Relaxed);
         }
     });

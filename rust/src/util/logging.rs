@@ -7,7 +7,9 @@
 //! capture. WARN and ERROR records are additionally emitted as trace
 //! instant events when tracing is on (DESIGN.md §14).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+// host atomics: LEVEL is a const-initialized global cache, outside the
+// loom-modeled surface (see crate::util::sync docs).
+use crate::util::sync::host::{AtomicU8, Ordering};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -49,12 +51,16 @@ fn level() -> u8 {
     let lv = std::env::var("SIMPLE_LOG")
         .map(|s| Level::from_env(&s))
         .unwrap_or(Level::Info) as u8;
+    // ordering: Relaxed — an idempotent cache fill; racing initializers
+    // compute and store the same value.
     LEVEL.store(lv, Ordering::Relaxed);
     lv
 }
 
 /// Override the log level programmatically (tests, CLI flags).
 pub fn set_level(lv: Level) {
+    // ordering: Relaxed — the level is an advisory print gate; a stale
+    // read misprints at most one line's verbosity.
     LEVEL.store(lv as u8, Ordering::Relaxed);
 }
 

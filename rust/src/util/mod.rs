@@ -4,6 +4,7 @@
 pub mod argparse;
 pub mod json;
 pub mod logging;
+pub mod sync;
 
 use std::time::{Duration, Instant};
 

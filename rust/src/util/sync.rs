@@ -1,0 +1,168 @@
+//! Synchronization shim: `std::sync` in production, `loom` under
+//! `--cfg loom` (DESIGN.md §15).
+//!
+//! Every lock-free module (`ringbuf/{mpmc,spsc,flight}`,
+//! `decision/{slots,seqrec,service}`, the `trace` fast path,
+//! `util/logging`, `cluster/replica` heartbeats) imports its atomics,
+//! cells, and internal `Arc`s from here instead of `std::sync`, so
+//! `make loom` model-checks the *real* production types — not parallel
+//! reimplementations. Without `--cfg loom` everything re-exports `std`
+//! and compiles to exactly the code we shipped before the shim existed.
+//!
+//! What deliberately stays host-side (`std`), even under loom:
+//!
+//! - **Const-initialized process globals** (`trace::ENABLED`, the
+//!   metrics counters/histograms, `logging::LEVEL`): loom atomics are
+//!   not const-constructible and may only be created inside
+//!   `loom::model`. Those statics import from [`host`] and are outside
+//!   the modeled surface — they are monotonic or advisory and never
+//!   carry a happens-before edge the decision plane relies on.
+//! - **OS thread spawning** (`std::thread::Builder` in
+//!   `decision/service.rs` and `cluster/replica.rs`): loom schedules
+//!   its own coroutine threads; real spawns are exercised by the TSan
+//!   lane (`make tsan`) instead.
+//! - **Payload reference counts** (`Arc<IterationTask>`, `SeqHandle`,
+//!   the trace registry): plain data handed across the boundary to
+//!   non-modeled layers (engine, scheduler, router). Inside a loom
+//!   model a `std::sync::Arc` clone/drop is an ordinary correct
+//!   operation; the protocol state the models verify lives entirely in
+//!   shimmed atomics and cells.
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        fence, AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{
+        fence, AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex};
+
+/// Always-`std` atomics for const-initialized process globals (metrics
+/// counters, the tracing enable flag, the log-level cache). Loom
+/// atomics cannot live in a `static`, and these globals are outside
+/// the modeled surface by design — see the module docs.
+pub mod host {
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+/// `UnsafeCell` with loom's closure-based access API on both sides.
+///
+/// Loom's cell hands out raw pointers through `with`/`with_mut` so it
+/// can dynamically verify that no two threads touch the contents
+/// concurrently (unless both use `with`). The production arm is a
+/// zero-cost wrapper over `std::cell::UnsafeCell` with the same shape,
+/// so call sites are identical in both builds. Dereferencing the
+/// pointer inside the closure still requires `unsafe` — the caller
+/// owns the exclusivity argument and states it in a `// SAFETY:`
+/// comment, which the concurrency lint enforces.
+pub mod cell {
+    #[cfg(loom)]
+    pub use loom::cell::UnsafeCell;
+
+    #[cfg(not(loom))]
+    #[derive(Debug)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    #[cfg(not(loom))]
+    impl<T> UnsafeCell<T> {
+        pub const fn new(value: T) -> UnsafeCell<T> {
+            UnsafeCell(std::cell::UnsafeCell::new(value))
+        }
+
+        #[inline(always)]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        #[inline(always)]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+
+/// Spin-loop hint; loom turns it into a scheduling point.
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(loom)]
+    pub fn spin_loop() {
+        loom::thread::yield_now();
+    }
+}
+
+/// Cooperative yield for bounded retry loops.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::yield_now;
+
+    #[cfg(loom)]
+    pub use loom::thread::yield_now;
+}
+
+/// `fetch_max` on an [`atomic::AtomicUsize`]. Loom's atomics do not
+/// provide the native RMW, so the loom arm emulates it with a CAS loop
+/// (same linearizable effect, and loom explores the retries); the
+/// production arm is the single hardware RMW.
+#[inline]
+pub fn fetch_max_usize(
+    a: &atomic::AtomicUsize,
+    val: usize,
+    order: atomic::Ordering,
+) -> usize {
+    #[cfg(not(loom))]
+    {
+        a.fetch_max(val, order)
+    }
+    #[cfg(loom)]
+    {
+        // ordering: the Relaxed probe only seeds the CAS; the CAS
+        // itself carries `order` on success, matching fetch_max.
+        let mut cur = a.load(atomic::Ordering::Relaxed);
+        loop {
+            if cur >= val {
+                return cur;
+            }
+            // ordering: failure is Relaxed — a lost race just reloads
+            // the observed value and retries; `order` on success is the
+            // caller's publication edge, as with the native RMW.
+            match a.compare_exchange(cur, val, order, atomic::Ordering::Relaxed) {
+                Ok(prev) => return prev,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// `Arc::strong_count`, pessimistic under loom.
+///
+/// The SPSC producer uses the count only as a liveness hint ("has the
+/// consumer dropped?"). Loom's `Arc` does not expose `strong_count`,
+/// so the loom arm reports the consumer alive forever — models drive
+/// the non-blocking `try_push` path, where the hint is never consulted.
+#[inline]
+pub fn arc_strong_count<T>(a: &Arc<T>) -> usize {
+    #[cfg(not(loom))]
+    {
+        Arc::strong_count(a)
+    }
+    #[cfg(loom)]
+    {
+        let _ = a;
+        2
+    }
+}

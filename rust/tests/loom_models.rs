@@ -1,0 +1,433 @@
+//! Loom model checking for the lock-free decision plane (DESIGN.md §15).
+//!
+//! Compiled and run only under `RUSTFLAGS="--cfg loom"` (`make loom`):
+//! without the cfg this file is an empty test crate, and the loom
+//! dependency is only resolved for the loom configuration. Each model
+//! wraps a *bounded* scenario in `loom::model`, which exhaustively
+//! explores thread interleavings (bounded by `LOOM_MAX_PREEMPTIONS`)
+//! over the production types — the `util::sync` shim swaps
+//! `std::sync::atomic` for loom's instrumented atomics, so these checks
+//! run the exact code the release build ships, not a reimplementation.
+//!
+//! Two models are pinned regressions:
+//! - [`slots_dead_claim_release_races_live_reclaim`] — the PR 6 bug
+//!   class: crash recovery releasing a dead incarnation's cell claim
+//!   while the respawned incarnation concurrently re-claims and
+//!   publishes the same cell.
+//! - [`flight_snapshot_never_torn`] — the PR 9 bug: a snapshot keeping
+//!   record `seq == h2 - capacity` from a ring without the spare slot,
+//!   which a concurrent writer could tear mid-copy.
+//!
+//! The pin/reclaim model ([`slots_pin_blocks_reclamation_and_collect`])
+//! additionally verifies the store-buffering (Dekker) fix in
+//! `decision/slots.rs`: loom's `UnsafeCell` access tracking fails the
+//! run if `try_publish`'s init write ever overlaps a pinned reader's
+//! task read — exactly the interleaving plain Acquire/Release admits.
+
+#![allow(unexpected_cfgs)]
+#![cfg(loom)]
+
+use loom::thread;
+use simple_serve::decision::seqrec::SeqRec;
+use simple_serve::decision::service::{DecisionBatch, IterationTask};
+use simple_serve::decision::slots::{claim_pack, TaskSlots};
+use simple_serve::decision::SamplingParams;
+use simple_serve::ringbuf::flight::FlightRing;
+use simple_serve::ringbuf::{mpmc, spsc};
+use std::sync::Arc;
+
+fn empty_task(id: u64) -> Arc<IterationTask> {
+    Arc::new(IterationTask {
+        iter: id,
+        mb: 0,
+        views: Vec::new(),
+        columns: Arc::new(Vec::new()),
+        recs: Arc::new(Vec::new()),
+        pre: Arc::new(Vec::new()),
+        drafts: Arc::new(Vec::new()),
+    })
+}
+
+fn empty_batch(iter: u64, sampler: usize) -> DecisionBatch {
+    DecisionBatch {
+        iter,
+        mb: 0,
+        sampler_id: sampler,
+        decisions: Vec::new(),
+        busy_s: 0.0,
+        start_s: 0.0,
+        end_s: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MPMC ring (Vyukov): producer races, steal races, wraparound, close
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mpmc_two_producers_one_consumer_no_loss() {
+    loom::model(|| {
+        let r = mpmc::Ring::<u64>::new(2);
+        let handles: Vec<_> = [1u64, 2]
+            .into_iter()
+            .map(|v| {
+                let r = r.clone();
+                thread::spawn(move || {
+                    while r.try_push(v).is_err() {
+                        thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            match r.try_pop() {
+                Ok(v) => got.push(v),
+                Err(_) => thread::yield_now(),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "every push surfaces exactly once");
+    });
+}
+
+#[test]
+fn mpmc_steal_vs_pop_exactly_once() {
+    loom::model(|| {
+        // Two items pre-published; the owner and a stealer race pops.
+        let r = mpmc::Ring::<u64>::new(2);
+        r.try_push(10).unwrap();
+        r.try_push(20).unwrap();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let r = r.clone();
+                thread::spawn(move || loop {
+                    match r.try_pop() {
+                        Ok(v) => return v,
+                        Err(_) => thread::yield_now(),
+                    }
+                })
+            })
+            .collect();
+        let mut got: Vec<u64> =
+            consumers.into_iter().map(|h| h.join().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![10, 20], "each item popped by exactly one thread");
+        assert!(r.try_pop().is_err(), "nothing left behind");
+    });
+}
+
+#[test]
+fn mpmc_wraparound_lap_reuse() {
+    loom::model(|| {
+        // 4 items through a capacity-2 ring: every slot serves two laps,
+        // exercising the `seq = pos + mask + 1` retire arithmetic under a
+        // concurrent producer.
+        let r = mpmc::Ring::<u64>::new(2);
+        let producer = {
+            let r = r.clone();
+            thread::spawn(move || {
+                for i in 0..4u64 {
+                    while r.try_push(i).is_err() {
+                        thread::yield_now();
+                    }
+                }
+            })
+        };
+        for expect in 0..4u64 {
+            loop {
+                match r.try_pop() {
+                    Ok(v) => {
+                        assert_eq!(v, expect, "FIFO across the wrap seam");
+                        break;
+                    }
+                    Err(_) => thread::yield_now(),
+                }
+            }
+        }
+        producer.join().unwrap();
+    });
+}
+
+#[test]
+fn mpmc_close_drains_inflight_push() {
+    loom::model(|| {
+        // A push that claimed its slot before the close must still be
+        // delivered; pops report Closed only once drained.
+        let r = mpmc::Ring::<u64>::new(2);
+        let producer = {
+            let r = r.clone();
+            thread::spawn(move || {
+                r.try_push(1).unwrap();
+                r.close();
+            })
+        };
+        let mut got = Vec::new();
+        loop {
+            match r.try_pop() {
+                Ok(v) => got.push(v),
+                Err(mpmc::PopError::Closed) => break,
+                Err(mpmc::PopError::Empty) => thread::yield_now(),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, vec![1], "close never swallows a delivered push");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SPSC ring: concurrent transfer with close
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spsc_transfer_no_loss() {
+    loom::model(|| {
+        let (p, c) = spsc::ring::<u64>(2);
+        let producer = thread::spawn(move || {
+            for i in 0..3u64 {
+                let mut item = i;
+                while let Err(spsc::Full(back)) = p.try_push(item) {
+                    item = back;
+                    thread::yield_now();
+                }
+            }
+            p.close();
+        });
+        let mut got = Vec::new();
+        loop {
+            match c.try_pop() {
+                Ok(v) => got.push(v),
+                Err(spsc::PopError::Closed) => break,
+                Err(spsc::PopError::Empty) => thread::yield_now(),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, vec![0, 1, 2], "in order, no loss, no duplication");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Task slot table: claims, pins vs. reclamation, recovery sweeps
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slots_claim_exactly_one_winner() {
+    loom::model(|| {
+        let slots = Arc::new(TaskSlots::new(1, 1));
+        let idx = slots.try_publish(empty_task(1)).ok().expect("empty table");
+        let racers: Vec<_> = (0..2)
+            .map(|worker| {
+                let slots = slots.clone();
+                thread::spawn(move || {
+                    let Some(pin) = slots.pin(idx, 1) else { return false };
+                    let won = slots.try_claim(idx, 0, claim_pack(worker, 1));
+                    if won {
+                        slots.publish_cell(idx, 0, empty_batch(1, worker));
+                    }
+                    drop(pin);
+                    won
+                })
+            })
+            .collect();
+        let wins: usize =
+            racers.into_iter().map(|h| usize::from(h.join().unwrap())).sum();
+        assert_eq!(wins, 1, "the claim CAS admits exactly one decider");
+        let taken = slots.try_take(1).expect("the winner reported the cell");
+        assert_eq!(taken.batches.len(), 1);
+    });
+}
+
+/// PR 6 regression: recovery releasing a dead incarnation's claim while
+/// the respawned incarnation concurrently re-claims and publishes the
+/// same cell. The live claim (and the sibling's completed cell) must
+/// survive the sweep, and the task must still collect exactly once.
+#[test]
+fn slots_dead_claim_release_races_live_reclaim() {
+    loom::model(|| {
+        let slots = Arc::new(TaskSlots::new(1, 2));
+        let idx = slots.try_publish(empty_task(1)).ok().expect("empty table");
+        {
+            let pin = slots.pin(idx, 1).expect("published slot pins");
+            // Worker 0 (incarnation 1) claims cell 0 and "dies" before
+            // reporting; worker 1 completes cell 1 normally.
+            assert!(slots.try_claim(idx, 0, claim_pack(0, 1)));
+            assert!(slots.try_claim(idx, 1, claim_pack(1, 1)));
+            slots.publish_cell(idx, 1, empty_batch(1, 1));
+            drop(pin);
+        }
+        let sweeper = {
+            let slots = slots.clone();
+            thread::spawn(move || slots.sweep_dead_claims(claim_pack(0, 1)))
+        };
+        let respawn = {
+            let slots = slots.clone();
+            thread::spawn(move || loop {
+                // The respawned incarnation can claim only after the
+                // sweep released the dead claim word.
+                if let Some(pin) = slots.pin(idx, 1) {
+                    if slots.try_claim(idx, 0, claim_pack(0, 2)) {
+                        slots.publish_cell(idx, 0, empty_batch(1, 0));
+                        drop(pin);
+                        return;
+                    }
+                    drop(pin);
+                }
+                thread::yield_now();
+            })
+        };
+        let resub = sweeper.join().unwrap();
+        respawn.join().unwrap();
+        // The sweep lists cell 0 unless the respawn re-claimed it first —
+        // either way it must list nothing else and hold a live task clone.
+        assert!(resub.len() <= 1, "cell 1's live claim must survive the sweep");
+        if let Some(r) = resub.first() {
+            assert_eq!((r.shard, r.task.iter), (0, 1));
+        }
+        let taken = slots.try_take(1).expect("both cells reported");
+        assert_eq!(taken.batches.len(), 2, "collected exactly once, both cells");
+    });
+}
+
+/// The pin/reclaim Dekker pair plus collect-under-pin. Thread A sweeps
+/// (pins the slot and clones the task through the cell); thread B
+/// re-claims, publishes, collects, and then republishes the slot for a
+/// new task. Loom verifies two things no unit test can: the SeqCst
+/// protocol never lets B's `try_publish` init write overlap A's pinned
+/// read (cell access tracking), and `try_take`'s clone-not-move keeps
+/// A's task reference valid across B's collect.
+#[test]
+fn slots_pin_blocks_reclamation_and_collect() {
+    loom::model(|| {
+        let slots = Arc::new(TaskSlots::new(1, 1));
+        let idx = slots.try_publish(empty_task(1)).ok().expect("empty table");
+        {
+            let pin = slots.pin(idx, 1).expect("published slot pins");
+            // Worker 0 (incarnation 1) claims, then "dies" unreported.
+            assert!(slots.try_claim(idx, 0, claim_pack(0, 1)));
+            drop(pin);
+        }
+        let sweeper = {
+            let slots = slots.clone();
+            thread::spawn(move || {
+                let resub = slots.sweep_dead_claims(claim_pack(0, 1));
+                // The clone stays readable regardless of what the
+                // collector on the other thread is doing to the slot.
+                // A sweep scheduled after the collector's republish may
+                // legitimately list task 2's still-unclaimed cell (the
+                // claim CAS absorbs such duplicates); either way the
+                // cloned task must be coherent.
+                for r in &resub {
+                    assert!(r.task.iter == 1 || r.task.iter == 2);
+                }
+                resub.len()
+            })
+        };
+        let collector = {
+            let slots = slots.clone();
+            thread::spawn(move || {
+                loop {
+                    if let Some(pin) = slots.pin(idx, 1) {
+                        if slots.try_claim(idx, 0, claim_pack(0, 2)) {
+                            slots.publish_cell(idx, 0, empty_batch(1, 0));
+                            drop(pin);
+                            break;
+                        }
+                        drop(pin);
+                    }
+                    thread::yield_now();
+                }
+                let taken = slots.try_take(1).expect("cell reported");
+                assert_eq!(taken.task.iter, 1);
+                // Reuse the slot for a fresh task: must wait out the
+                // sweeper's pin (quiescent-state reclamation), and its
+                // init writes must never race the sweeper's reads.
+                let mut task = empty_task(2);
+                loop {
+                    match slots.try_publish(task) {
+                        Ok(i) => {
+                            assert_eq!(i, idx);
+                            break;
+                        }
+                        Err(back) => {
+                            task = back;
+                            thread::yield_now();
+                        }
+                    }
+                }
+            })
+        };
+        let listed = sweeper.join().unwrap();
+        collector.join().unwrap();
+        assert!(listed <= 1);
+        assert!(slots.pin(idx, 2).is_some(), "fresh task published");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-sequence replay records: positional writes vs. high-water reads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seqrec_write_vs_read_high_water() {
+    loom::model(|| {
+        let rec = SeqRec::new(7, &[1], &[], &SamplingParams::default(), None, 4);
+        let writer = {
+            let rec = rec.clone();
+            thread::spawn(move || {
+                rec.log_decided(0, &[10, 11]);
+                rec.log_decided(2, &[12]);
+            })
+        };
+        let expect = [10u32, 11, 12];
+        loop {
+            let n = rec.decided_len();
+            let snap = rec.read_upto(n as u64);
+            // Every token below the acquired high-water mark is published.
+            for (i, &t) in snap.iter().enumerate() {
+                assert_eq!(t, expect[i], "read below decided_len saw a torn write");
+            }
+            if n == 3 {
+                break;
+            }
+            thread::yield_now();
+        }
+        writer.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Flight ring: the PR 9 torn-record regression
+// ---------------------------------------------------------------------------
+
+/// A capacity-1 ring overwrites on every push, so every snapshot races an
+/// in-flight overwrite. The seqlock validation must drop any record with
+/// `seq < h2 - capacity` — the PR 9 bug kept `seq == h2 - capacity` from
+/// a ring without the spare slot, and this model finds that tear.
+#[test]
+fn flight_snapshot_never_torn() {
+    loom::model(|| {
+        let ring: Arc<FlightRing<2>> = Arc::new(FlightRing::new(1));
+        let writer = {
+            let ring = ring.clone();
+            thread::spawn(move || {
+                for i in 0..3u64 {
+                    ring.push(&[i, !i]);
+                }
+            })
+        };
+        for _ in 0..2 {
+            let snap = ring.snapshot();
+            assert!(snap.len() <= 1, "capacity-1 ring retains one record");
+            for rec in &snap {
+                assert_eq!(rec[1], !rec[0], "torn record survived snapshot");
+            }
+            thread::yield_now();
+        }
+        writer.join().unwrap();
+        let final_snap = ring.snapshot();
+        assert_eq!(final_snap, vec![[2, !2u64]], "quiescent: last record intact");
+    });
+}
